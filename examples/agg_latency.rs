@@ -1,0 +1,115 @@
+//! AllReduce latency through the three aggregation servers — the
+//! functional companion to paper Fig. 8.
+//!
+//!     cargo run --release --example agg_latency
+//!
+//! Runs the *real* protocol state machines (P4SGD Algorithm 2/3,
+//! SwitchML shadow-copy pools, host parameter server) over the
+//! in-process fabric and reports wall-clock whiskers. Injected latency
+//! is zero, so what you see is each protocol's overhead floor on this
+//! software substrate; the paper-testbed shapes come from
+//! `p4sgd repro fig8`.
+
+use p4sgd::config::NetConfig;
+use p4sgd::metrics::LatencyHist;
+use p4sgd::net::sim::SimNet;
+use p4sgd::net::{switch_node, Transport};
+use p4sgd::protocol::Packet;
+use p4sgd::switch::host_ps::HostPs;
+use p4sgd::switch::p4::P4Switch;
+use p4sgd::switch::runner;
+use p4sgd::switch::switchml::SwitchMlSwitch;
+use p4sgd::worker::AggClient;
+use std::time::{Duration, Instant};
+
+const WORKERS: usize = 4;
+const OPS: usize = 1_000;
+
+fn main() {
+    let net = NetConfig { latency_ns: 0, jitter_ns: 0, timeout_us: 5000, ..NetConfig::default() };
+
+    // --- P4SGD (Algorithm 2/3, explicit ACK round) ---
+    let hist = run_p4(&net);
+    println!("P4SGD    (alg. 2/3) : {}", hist.whiskers());
+
+    // --- SwitchML (shadow pools, implicit delayed ACK) ---
+    let hist = run_pooled(&net, "switchml");
+    println!("SwitchML (shadow)   : {}", hist.whiskers());
+
+    // --- Host parameter server ---
+    let hist = run_pooled(&net, "hostps");
+    println!("Host PS  (unicast)  : {}", hist.whiskers());
+}
+
+fn run_p4(net: &NetConfig) -> LatencyHist {
+    let mut eps = SimNet::build(WORKERS + 1, net);
+    let server = runner::spawn(
+        P4Switch::new(p4sgd::worker::agg_client::SEQ_SPACE, WORKERS, 8),
+        eps.pop().unwrap(),
+    );
+    let mut hist = LatencyHist::new();
+    std::thread::scope(|scope| {
+        let mut it = eps.into_iter().enumerate();
+        let (_, ep0) = it.next().unwrap();
+        for (w, ep) in it {
+            scope.spawn(move || {
+                let mut agg = AggClient::new(ep, switch_node(WORKERS), w, 64, Duration::from_millis(5));
+                for _ in 0..OPS {
+                    let _ = agg.allreduce(&[1i32; 8]);
+                }
+            });
+        }
+        let mut agg = AggClient::new(ep0, switch_node(WORKERS), 0, 64, Duration::from_millis(5));
+        for _ in 0..OPS {
+            let t = Instant::now();
+            let _ = agg.allreduce(&[1i32; 8]);
+            hist.push_ns(t.elapsed().as_nanos() as f64);
+        }
+    });
+    server.shutdown();
+    hist
+}
+
+/// SwitchML and the host PS share a client shape: seq carries a parity
+/// bit, the completed broadcast is the implicit ACK.
+fn run_pooled(net: &NetConfig, which: &str) -> LatencyHist {
+    let mut eps = SimNet::build(WORKERS + 1, net);
+    let server: runner::ServerHandle = match which {
+        "switchml" => runner::spawn(SwitchMlSwitch::new(64, WORKERS, 8), eps.pop().unwrap()),
+        _ => runner::spawn(HostPs::new(64, WORKERS, 8), eps.pop().unwrap()),
+    };
+    let mut hist = LatencyHist::new();
+    std::thread::scope(|scope| {
+        let mut it = eps.into_iter().enumerate();
+        let (_, ep0) = it.next().unwrap();
+        for (w, ep) in it {
+            scope.spawn(move || pooled_worker(ep, w, None));
+        }
+        pooled_worker(ep0, 0, Some(&mut hist));
+    });
+    server.shutdown();
+    hist
+}
+
+fn pooled_worker(mut ep: p4sgd::net::sim::SimEndpoint, w: usize, mut hist: Option<&mut LatencyHist>) {
+    let server = switch_node(WORKERS);
+    for op in 0..OPS {
+        let slot = (op % 64) as u16;
+        let parity = ((op / 64) % 2) as u16;
+        let seq = slot | (parity << 15);
+        let pkt = Packet::pa(seq, w, vec![1i32; 8]);
+        let t = Instant::now();
+        ep.send(server, &pkt);
+        // wait for this op's broadcast (retransmit on 5ms timeouts)
+        loop {
+            match ep.recv_timeout(Duration::from_millis(5)) {
+                Some((_, got)) if got.seq == seq && got.acked => break,
+                Some(_) => continue,
+                None => ep.send(server, &pkt),
+            }
+        }
+        if let Some(h) = hist.as_deref_mut() {
+            h.push_ns(t.elapsed().as_nanos() as f64);
+        }
+    }
+}

@@ -1,0 +1,58 @@
+//! Data-parallel vs model-parallel, functionally and in packets — the
+//! executable version of the paper's core argument (Figs. 1 & 9).
+//!
+//!     cargo run --release --example dp_vs_mp
+//!
+//! Trains the same dataset both ways over the same P4 switch substrate
+//! and compares (a) convergence, (b) network traffic. MP ships B
+//! activations per iteration; DP ships D gradients — the packet counters
+//! make the asymmetry concrete.
+
+use p4sgd::config::SystemConfig;
+use p4sgd::coordinator::{dp, mp};
+use p4sgd::data::synth;
+use p4sgd::engine::{Compute, NativeCompute};
+use p4sgd::glm::Loss;
+use p4sgd::protocol::HEADER_BYTES;
+
+fn main() {
+    let mut cfg = SystemConfig::default();
+    cfg.cluster.workers = 4;
+    cfg.cluster.engines = 2;
+    cfg.cluster.slots = 16;
+    cfg.train.loss = Loss::LogReg;
+    cfg.train.lr = 1.0;
+    cfg.train.batch = 64;
+    cfg.train.micro_batch = 8;
+    cfg.train.epochs = 6;
+    cfg.net.latency_ns = 0;
+    cfg.net.timeout_us = 3000;
+    cfg.validate().expect("config");
+
+    let ds = synth::table2_like("real_sim", 512, 4096, cfg.train.loss, 11);
+    println!("dataset: {} | {} workers, B={}", ds.name, cfg.cluster.workers, cfg.train.batch);
+
+    let make = |_w: usize| -> Box<dyn Compute> { Box::new(NativeCompute) };
+    let mp_rep = mp::train_mp(&cfg, &ds, &make);
+    let dp_rep = dp::train_dp(&cfg, &ds, &make);
+
+    println!("\n{:<8}{:>14}{:>14}", "epoch", "MP loss", "DP loss");
+    for e in 0..cfg.train.epochs {
+        println!(
+            "{:<8}{:>14.5}{:>14.5}",
+            e,
+            mp_rep.loss_per_epoch[e] / ds.n as f32,
+            dp_rep.loss_per_epoch[e] / ds.n as f32
+        );
+    }
+
+    let mp_bytes = mp_rep.agg.pa_sent * (HEADER_BYTES as u64 + 4 * cfg.train.micro_batch as u64);
+    let dp_bytes = dp_rep.agg.pa_sent * (HEADER_BYTES as u64 + 4 * 64);
+    println!("\nnetwork traffic (worker->switch):");
+    println!("  MP: {:>10} packets {:>12} bytes  (payload = MB activations)", mp_rep.agg.pa_sent, mp_bytes);
+    println!("  DP: {:>10} packets {:>12} bytes  (payload = D-gradient chunks)", dp_rep.agg.pa_sent, dp_bytes);
+    println!(
+        "  DP/MP traffic ratio: {:.1}x — the paper's Table 1 network column, live",
+        dp_bytes as f64 / mp_bytes as f64
+    );
+}

@@ -1,0 +1,45 @@
+//! Quickstart: train a logistic-regression GLM on one simulated worker
+//! using the AOT-compiled JAX/Pallas artifacts (the accelerator path).
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! This is the smallest end-to-end slice of the stack: quantize ->
+//! bit-plane pack -> PJRT `step` artifact (forward kernel + backward
+//! kernel + update fused) -> loss curve. No network is involved
+//! (M = 1, so the full activation equals the partial activation).
+
+use p4sgd::data::quantize::{dequantized_rows, pack_rows, LANE};
+use p4sgd::data::synth;
+use p4sgd::glm::Loss;
+use p4sgd::runtime::Runtime;
+use p4sgd::util::round_up;
+
+fn main() -> anyhow::Result<()> {
+    let (n, d, mb, epochs) = (512usize, 256usize, 8usize, 10usize);
+    let lr = 0.5f32;
+    let ds = synth::separable(n, d, Loss::LogReg, 0.1, 42);
+    println!("dataset: {} samples x {} features (synthetic separable)", ds.n, ds.d);
+
+    let mut rt = Runtime::load_default()?;
+    println!("runtime: {} artifacts loaded", rt.manifest().entries.len());
+
+    let d_pad = round_up(d, LANE);
+    let mut x = vec![0.0f32; d_pad];
+    let inv_b = 1.0 / mb as f32;
+
+    for epoch in 0..epochs {
+        let mut loss_sum = 0.0f32;
+        for m in 0..n / mb {
+            let rows = ds.rows(m * mb, (m + 1) * mb);
+            let planes = pack_rows(rows, mb, d, d_pad, 4);
+            let a_dq = dequantized_rows(rows, mb, d, d_pad, 4);
+            let y = &ds.labels[m * mb..(m + 1) * mb];
+            let (x_new, l) = rt.step(Loss::LogReg, &planes, &a_dq, &x, y, lr, inv_b)?;
+            x = x_new;
+            loss_sum += l;
+        }
+        println!("epoch {epoch:>2}: loss/sample {:.5}", loss_sum / n as f32);
+    }
+    println!("done — the L1 Pallas kernels ran via PJRT; python was never on this path");
+    Ok(())
+}

@@ -1,0 +1,117 @@
+"""AOT lowering: JAX/Pallas -> HLO *text* -> artifacts/ for the Rust runtime.
+
+HLO text (not `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the crate's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  python -m compile.aot --out-dir ../artifacts
+
+Emits one artifact per (kind, D, MB, loss) variant plus `manifest.txt`
+(`kind d mb loss path` per line) which `rust/src/runtime/artifacts.rs`
+parses. All entry points are lowered with donatable running state where
+applicable and return_tuple=True (unwrap with `to_tuple1()` etc. on the
+Rust side).
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.ref import LANE, PRECISION
+
+# Feature-partition sizes the Rust side can pick from (it pads up).
+D_VARIANTS = (256, 1024, 4096)
+# Micro-batch size: 8 banks per engine in the paper's worker.
+MB_VARIANTS = (8,)
+LOSSES = ("linreg", "logreg", "svm")
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_variants():
+    """Yield (name, lowered) for every artifact we ship."""
+    for d in D_VARIANTS:
+        for mb in MB_VARIANTS:
+            planes = _spec((PRECISION, mb, d // LANE), jnp.uint32)
+            x = _spec((d,))
+            a = _spec((mb, d))
+            fa = _spec((mb,))
+            y = _spec((mb,))
+            g = _spec((d,))
+            scalar = _spec((1,))
+
+            yield (
+                f"fwd_d{d}_mb{mb}",
+                ("fwd", d, mb, "-"),
+                jax.jit(model.forward_partial).lower(planes, x),
+            )
+            for loss in LOSSES:
+                yield (
+                    f"bwd_{loss}_d{d}_mb{mb}",
+                    ("bwd", d, mb, loss),
+                    jax.jit(
+                        functools.partial(model.backward_partial, loss=loss)
+                    ).lower(a, fa, y, g, scalar),
+                )
+                yield (
+                    f"step_{loss}_d{d}_mb{mb}",
+                    ("step", d, mb, loss),
+                    jax.jit(functools.partial(model.local_step, loss=loss)).lower(
+                        planes, a, x, y, scalar, scalar
+                    ),
+                )
+        yield (
+            f"update_d{d}",
+            ("update", d, 0, "-"),
+            jax.jit(model.apply_update).lower(_spec((d,)), _spec((d,)), _spec((1,))),
+        )
+    for mb in MB_VARIANTS:
+        fa = _spec((mb,))
+        y = _spec((mb,))
+        for loss in LOSSES:
+            yield (
+                f"loss_{loss}_mb{mb}",
+                ("loss", 0, mb, loss),
+                jax.jit(functools.partial(model.loss_sum, loss=loss)).lower(fa, y),
+            )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = []
+    for name, (kind, d, mb, loss), lowered in build_variants():
+        path = f"{name}.hlo.txt"
+        text = to_hlo_text(lowered)
+        with open(os.path.join(args.out_dir, path), "w") as f:
+            f.write(text)
+        manifest.append(f"{kind} {d} {mb} {loss} {path}")
+        print(f"  wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"manifest: {len(manifest)} artifacts -> {args.out_dir}/manifest.txt")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""L1 Pallas kernel: bit-serial (bit-weaving) forward pass.
+
+This is the TPU re-thinking of the paper's FPGA hot spot (§Hardware-
+Adaptation in DESIGN.md). The FPGA consumes one bit of 64 features per
+cycle through 64 bit-serial multipliers + an adder tree (MLWeaving). The
+transferable insight is the algebraic identity
+
+    PA = sum_p 2^{-(p+1)} * (bits_p . x)
+
+i.e. a P-bit quantized matvec is P *binary* matvecs. On TPU:
+
+* samples stay **bit-plane packed** in HBM (uint32, 32 features/lane) —
+  the dominant memory traffic is D*P/8 bytes instead of 4*D bytes, the
+  same 8x (P=4) traffic reduction the FPGA gets from its HBM channels;
+* the BlockSpec grid streams D in VMEM-sized blocks (the analogue of the
+  per-engine HBM channel schedule of paper Fig. 6);
+* inside the kernel the planes are unpacked with shifts/masks (VPU work)
+  and reduced with a (P*MB, Db) x (Db,) matmul (MXU work), accumulating
+  across grid steps in the output ref.
+
+The per-plane 2^{-(p+1)} scaling is fused by the caller (model.py) — it is
+a (P,)x(P,MB) contraction, negligible.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; correctness is validated on CPU, TPU-viability is argued by
+VMEM/MXU accounting in EXPERIMENTS.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import LANE
+
+# Default feature-block width. 512 features = 16 packed lanes per plane.
+# VMEM accounting at the default (P=4, MB=8, DB=512):
+#   planes block  4*8*16  u32  =  2 KiB
+#   x block       512     f32  =  2 KiB
+#   unpacked bits 4*8*512 f32  = 64 KiB   (the big intermediate)
+#   acc           4*8     f32  = 128 B
+# comfortably < 16 MiB/core even at DB=8192.
+DEFAULT_BLOCK_D = 512
+
+
+def _fwd_kernel(planes_ref, x_ref, acc_ref):
+    """One grid step: accumulate per-plane partial dot products.
+
+    planes_ref: u32[P, MB, DB/32] packed bit-planes for this feature block
+    x_ref:      f32[DB]           model block
+    acc_ref:    f32[P, MB]        per-plane accumulator (carried across grid)
+    """
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    planes = planes_ref[...]                     # (P, MB, W)
+    p, mb, w = planes.shape
+    shifts = jnp.arange(LANE, dtype=jnp.uint32)
+    # VPU: unpack 32 features per lane -> (P, MB, DB) in {0.0, 1.0}.
+    bits = ((planes[..., None] >> shifts) & jnp.uint32(1)).astype(jnp.float32)
+    bits = bits.reshape(p * mb, w * LANE)
+    # MXU: binary matvec for all planes at once.
+    contrib = jnp.dot(bits, x_ref[...], preferred_element_type=jnp.float32)
+    acc_ref[...] += contrib.reshape(p, mb)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d",))
+def forward_planes(planes, x, block_d: int = DEFAULT_BLOCK_D):
+    """Per-plane partial activations: u32[P,MB,D/32], f32[D] -> f32[P,MB].
+
+    The caller applies the plane scaling (see model.forward_partial).
+    """
+    p, mb, w = planes.shape
+    d = w * LANE
+    assert x.shape == (d,), (x.shape, d)
+    bd = min(block_d, d)
+    assert d % bd == 0, f"D={d} not a multiple of block {bd}"
+    grid = (d // bd,)
+    return pl.pallas_call(
+        _fwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((p, mb, bd // LANE), lambda i: (0, 0, i)),
+            pl.BlockSpec((bd,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((p, mb), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, mb), jnp.float32),
+        interpret=True,
+    )(planes, x)

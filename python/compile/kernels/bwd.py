@@ -1,0 +1,53 @@
+"""L1 Pallas kernel: backward pass (gradient accumulation).
+
+Paper Alg. 1 lines 25-29: the worker turns the full activations FA into
+per-sample scales and accumulates rank-1 updates into its partial gradient:
+
+    g' = g + sum_k scale[k] * A[k, :]
+
+On the FPGA this reuses the 64 bit-serial multipliers with the sample bits
+replayed from a FIFO. On TPU the natural shape is a dense (MB,) x (MB, D)
+matvec: one MXU contraction per feature block, fused with the += so the
+gradient makes a single HBM round trip. Feature blocks are independent, so
+the grid carries no accumulator.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_D = 512
+
+
+def _bwd_kernel(a_ref, scale_ref, g_ref, out_ref):
+    """out[blk] = g[blk] + scale . A[:, blk] for one feature block."""
+    out_ref[...] = g_ref[...] + jnp.dot(
+        scale_ref[...], a_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_d",))
+def accumulate_grad(a, scale, g, block_d: int = DEFAULT_BLOCK_D):
+    """g' = g + scale @ a.
+
+    a: f32[MB, D] dequantized micro-batch, scale: f32[MB], g: f32[D].
+    """
+    mb, d = a.shape
+    assert scale.shape == (mb,) and g.shape == (d,)
+    bd = min(block_d, d)
+    assert d % bd == 0
+    grid = (d // bd,)
+    return pl.pallas_call(
+        _bwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((mb, bd), lambda i: (0, i)),
+            pl.BlockSpec((mb,), lambda i: (0,)),
+            pl.BlockSpec((bd,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bd,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        interpret=True,
+    )(a, scale, g)

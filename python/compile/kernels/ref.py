@@ -1,0 +1,150 @@
+"""Pure-jnp reference oracles for the P4SGD kernels.
+
+Everything in this file is the *specification*: the Pallas kernels
+(`bitserial.py`, `bwd.py`), the Rust native bit-serial engine
+(`rust/src/engine/bitserial.rs`), and the AOT artifacts are all tested
+against these functions.
+
+Quantization follows MLWeaving (paper §4.1.2): features are normalized to
+[0, 1) and quantized to ``P`` bits, so a feature value is reconstructed as
+
+    a  =  sum_p  bit_p * 2^{-(p+1)}          (bit_0 = MSB)
+
+which makes the P-bit dot product a sum of P binary dot products:
+
+    PA = a . x = sum_p 2^{-(p+1)} * (bits_p . x)
+
+That identity is what the FPGA exploits with bit-serial multipliers and
+what the Pallas kernel exploits with per-plane MXU matmuls.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+# Fixed-point precision of the bit-weaving path (paper uses 4 bits).
+PRECISION = 4
+# Features per packed 32-bit lane.
+LANE = 32
+
+
+def quantize(a, precision: int = PRECISION):
+    """Quantize features in [0, 1) to ``precision``-bit integer levels."""
+    levels = (1 << precision) - 1
+    q = jnp.floor(jnp.clip(a, 0.0, 1.0 - 1e-7) * (1 << precision))
+    return jnp.clip(q, 0, levels).astype(jnp.uint32)
+
+
+def dequantize(q, precision: int = PRECISION):
+    """Reconstruct the fixed-point value encoded by ``quantize``."""
+    return q.astype(jnp.float32) / jnp.float32(1 << precision)
+
+
+def pack_bitplanes(q, precision: int = PRECISION):
+    """Pack quantized samples into bit-planes.
+
+    q: uint32[MB, D] quantization levels, D a multiple of 32.
+    Returns uint32[P, MB, D // 32]; plane p holds bit (P-1-p) of every
+    feature (plane 0 = MSB); feature j lives in word j//32, bit j%32.
+    """
+    mb, d = q.shape
+    assert d % LANE == 0, f"D={d} must be a multiple of {LANE}"
+    planes = []
+    for p in range(precision):
+        bit = (q >> (precision - 1 - p)) & 1  # (MB, D)
+        lanes = bit.reshape(mb, d // LANE, LANE).astype(jnp.uint32)
+        shifts = jnp.arange(LANE, dtype=jnp.uint32)
+        planes.append(jnp.sum(lanes << shifts, axis=-1, dtype=jnp.uint32))
+    return jnp.stack(planes)  # (P, MB, D//32)
+
+
+def unpack_bitplanes(planes):
+    """Inverse of ``pack_bitplanes``: uint32[P, MB, W] -> f32[P, MB, 32*W]."""
+    p, mb, w = planes.shape
+    shifts = jnp.arange(LANE, dtype=jnp.uint32)
+    bits = (planes[..., None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(p, mb, w * LANE).astype(jnp.float32)
+
+
+def plane_scales(precision: int = PRECISION):
+    """Per-plane weights 2^{-(p+1)}, plane 0 = MSB."""
+    return jnp.float32(2.0) ** (-(jnp.arange(precision, dtype=jnp.float32) + 1))
+
+
+def forward_ref(planes, x):
+    """Reference forward pass: partial activations from bit-planes.
+
+    planes: uint32[P, MB, D//32], x: f32[D] -> PA f32[MB].
+    Mathematically identical to ``dequantize(q) @ x``.
+    """
+    bits = unpack_bitplanes(planes)            # (P, MB, D)
+    per_plane = jnp.einsum("pmd,d->pm", bits, x)
+    return jnp.einsum("p,pm->m", plane_scales(planes.shape[0]), per_plane)
+
+
+def forward_dense_ref(a, x):
+    """Dense-f32 forward used for cross-checking: a f32[MB, D] @ x f32[D]."""
+    return a @ x
+
+
+def stable_sigmoid(z):
+    """Numerically-stable sigmoid (matches the Rust implementation)."""
+    zc = jnp.clip(z, -60.0, 60.0)
+    return jnp.where(
+        zc >= 0,
+        1.0 / (1.0 + jnp.exp(-zc)),
+        jnp.exp(zc) / (1.0 + jnp.exp(zc)),
+    )
+
+
+def grad_scale(fa, y, lr, loss: str):
+    """scale[k] = lr * df(FA[k], y[k]) — paper Alg. 1 line 27.
+
+    linreg:  df = fa - y
+    logreg:  df = sigmoid(fa) - y          (y in {0, 1})
+    svm:     df = -y if y*fa < 1 else 0    (y in {-1, +1}, hinge)
+    """
+    if loss == "linreg":
+        df = fa - y
+    elif loss == "logreg":
+        df = stable_sigmoid(fa) - y
+    elif loss == "svm":
+        df = jnp.where(y * fa < 1.0, -y, jnp.zeros_like(y))
+    else:
+        raise ValueError(f"unknown loss {loss!r}")
+    return lr * df
+
+
+def backward_ref(a, fa, y, g, lr, loss: str):
+    """Reference backward: g' = g + sum_k scale[k] * a[k] (Alg. 1 line 28)."""
+    scale = grad_scale(fa, y, lr, loss)
+    return g + scale @ a
+
+
+def update_ref(x, g, inv_b):
+    """Model update x' = x - g * (1/B) (Alg. 1 line 31)."""
+    return x - g * inv_b
+
+
+def loss_ref(fa, y, loss: str):
+    """Per-sample training loss summed over the micro-batch."""
+    if loss == "linreg":
+        r = fa - y
+        return 0.5 * jnp.sum(r * r)
+    if loss == "logreg":
+        # Stable binary cross-entropy from logits, y in {0, 1}.
+        return jnp.sum(jnp.maximum(fa, 0.0) - fa * y + jnp.log1p(jnp.exp(-jnp.abs(fa))))
+    if loss == "svm":
+        return jnp.sum(jnp.maximum(0.0, 1.0 - y * fa))
+    raise ValueError(f"unknown loss {loss!r}")
+
+
+def numpy_pack_bitplanes(q: np.ndarray, precision: int = PRECISION) -> np.ndarray:
+    """Numpy twin of ``pack_bitplanes`` for test-data generation."""
+    mb, d = q.shape
+    assert d % LANE == 0
+    out = np.zeros((precision, mb, d // LANE), dtype=np.uint32)
+    for p in range(precision):
+        bit = (q >> (precision - 1 - p)) & 1
+        for j in range(d):
+            out[p, :, j // LANE] |= (bit[:, j].astype(np.uint32)) << np.uint32(j % LANE)
+    return out

@@ -1,0 +1,64 @@
+"""L2: the GLM model — JAX forward/backward step functions calling the
+Pallas kernels.
+
+These are the functions `aot.py` lowers to HLO text for the Rust runtime.
+Each maps 1:1 onto a stage of paper Algorithm 1:
+
+  forward_partial   Alg. 1 lines 18-21  (stage 1, per worker, per micro-batch)
+  backward_partial  Alg. 1 lines 25-29  (stage 3)
+  apply_update      Alg. 1 line 31
+  loss_sum          convergence metric for Figs. 14/15
+  local_step        fused single-worker iteration (quickstart path)
+
+The communication stage (Alg. 1 lines 22-23) lives entirely in Rust — the
+switch aggregates the `PA` these functions produce.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import bitserial, bwd
+from .kernels.ref import grad_scale, loss_ref, plane_scales
+
+
+def forward_partial(planes, x):
+    """Partial activations PA_m = A_m . x_m from bit-planes.
+
+    planes: u32[P, MB, D/32], x: f32[D] -> f32[MB]
+    """
+    per_plane = bitserial.forward_planes(planes, x)       # (P, MB)
+    return plane_scales(planes.shape[0]) @ per_plane      # (MB,)
+
+
+def backward_partial(a, fa, y, g, lr, loss: str):
+    """Accumulate this micro-batch's gradient contribution.
+
+    a: f32[MB, D] dequantized partition, fa: f32[MB] full activations
+    (switch output), y: f32[MB] labels, g: f32[D] running gradient,
+    lr: f32[1] learning rate -> g' f32[D].
+    """
+    scale = grad_scale(fa, y, lr[0], loss)                # (MB,)
+    return bwd.accumulate_grad(a, scale, g)
+
+
+def apply_update(x, g, inv_b):
+    """x' = x - g * (1/B): the end-of-mini-batch model update."""
+    return x - g * inv_b[0]
+
+
+def loss_sum(fa, y, loss: str):
+    """Summed training loss of one micro-batch (for loss-vs-epoch curves)."""
+    return loss_ref(fa, y, loss)
+
+
+def local_step(planes, a, x, y, lr, inv_b, loss: str):
+    """Fused single-worker iteration over ONE micro-batch mini-batch.
+
+    With M = 1 worker the full activation equals the partial activation, so
+    forward -> scale -> gradient -> update runs in one artifact. Returns
+    (x', loss_sum). Used by examples/quickstart.rs.
+    """
+    fa = forward_partial(planes, x)
+    g0 = jnp.zeros_like(x)
+    g = backward_partial(a, fa, y, g0, lr, loss)
+    x_new = apply_update(x, g, inv_b)
+    return x_new, loss_sum(fa, y, loss)

@@ -1,0 +1,1 @@
+"""Ensure `compile` package imports when pytest runs from the repo root."""

@@ -1,0 +1,148 @@
+"""L1 forward kernel vs pure-jnp oracle — the core correctness signal.
+
+Hypothesis sweeps shapes (D multiples of the lane/block sizes, MB, P) and
+data distributions; every case asserts the Pallas kernel, the jnp bit-plane
+reference, and the dense-f32 ground truth agree.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bitserial
+from compile.kernels.ref import (
+    LANE,
+    PRECISION,
+    dequantize,
+    forward_dense_ref,
+    forward_ref,
+    numpy_pack_bitplanes,
+    pack_bitplanes,
+    plane_scales,
+    quantize,
+    unpack_bitplanes,
+)
+
+
+def make_case(rng, mb, d, precision=PRECISION):
+    a = rng.random((mb, d), dtype=np.float32)
+    q = np.asarray(quantize(a, precision))
+    planes = pack_bitplanes(jnp.asarray(q), precision)
+    x = rng.standard_normal(d).astype(np.float32)
+    return q, planes, x
+
+
+def kernel_pa(planes, x, block_d=bitserial.DEFAULT_BLOCK_D):
+    per_plane = bitserial.forward_planes(jnp.asarray(planes), jnp.asarray(x), block_d)
+    return np.asarray(plane_scales(planes.shape[0]) @ per_plane)
+
+
+class TestPackRoundTrip:
+    def test_pack_unpack_inverse(self):
+        rng = np.random.default_rng(0)
+        q, planes, _ = make_case(rng, 8, 256)
+        bits = np.asarray(unpack_bitplanes(planes))
+        for p in range(PRECISION):
+            expect = (q >> (PRECISION - 1 - p)) & 1
+            np.testing.assert_array_equal(bits[p], expect.astype(np.float32))
+
+    def test_numpy_pack_matches_jnp_pack(self):
+        rng = np.random.default_rng(1)
+        q, planes, _ = make_case(rng, 4, 128)
+        np.testing.assert_array_equal(numpy_pack_bitplanes(q), np.asarray(planes))
+
+    def test_quantization_error_bound(self):
+        rng = np.random.default_rng(2)
+        a = rng.random((16, 64), dtype=np.float32)
+        err = np.abs(np.asarray(dequantize(quantize(a))) - a)
+        assert err.max() <= 2.0 ** (-PRECISION) + 1e-6
+
+    def test_plane_scales_sum(self):
+        # all-ones bits reconstruct the max level (2^P - 1) / 2^P
+        s = float(np.sum(np.asarray(plane_scales())))
+        assert abs(s - (2**PRECISION - 1) / 2**PRECISION) < 1e-7
+
+
+class TestForwardKernel:
+    def test_matches_bitplane_ref(self):
+        rng = np.random.default_rng(3)
+        q, planes, x = make_case(rng, 8, 1024)
+        got = kernel_pa(planes, x)
+        want = np.asarray(forward_ref(planes, jnp.asarray(x)))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_matches_dense_ground_truth(self):
+        rng = np.random.default_rng(4)
+        q, planes, x = make_case(rng, 8, 512)
+        got = kernel_pa(planes, x)
+        dense = np.asarray(forward_dense_ref(dequantize(jnp.asarray(q)), jnp.asarray(x)))
+        np.testing.assert_allclose(got, dense, rtol=1e-4, atol=1e-4)
+
+    def test_single_grid_step(self):
+        rng = np.random.default_rng(5)
+        q, planes, x = make_case(rng, 8, 256)
+        got = kernel_pa(planes, x, block_d=256)
+        want = np.asarray(forward_ref(planes, jnp.asarray(x)))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_many_grid_steps(self):
+        rng = np.random.default_rng(6)
+        q, planes, x = make_case(rng, 8, 2048)
+        got = kernel_pa(planes, x, block_d=128)
+        want = np.asarray(forward_ref(planes, jnp.asarray(x)))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_zero_model_gives_zero(self):
+        rng = np.random.default_rng(7)
+        _, planes, _ = make_case(rng, 8, 256)
+        got = kernel_pa(planes, np.zeros(256, np.float32))
+        np.testing.assert_array_equal(got, np.zeros(8, np.float32))
+
+    def test_zero_features_inert_padding(self):
+        """Zero-padded features must not change PA (Rust pads partitions)."""
+        rng = np.random.default_rng(8)
+        mb, d, dpad = 8, 512, 1024
+        a = np.zeros((mb, dpad), dtype=np.float32)
+        a[:, :d] = rng.random((mb, d), dtype=np.float32)
+        planes = pack_bitplanes(quantize(jnp.asarray(a)))
+        x = np.zeros(dpad, np.float32)
+        x[:d] = rng.standard_normal(d).astype(np.float32)
+        x[d:] = rng.standard_normal(dpad - d).astype(np.float32)  # garbage weights
+        got = kernel_pa(np.asarray(planes), x)
+        want = kernel_pa(
+            np.asarray(pack_bitplanes(quantize(jnp.asarray(a[:, :d])))), x[:d]
+        )
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    mb=st.sampled_from([1, 2, 4, 8, 16]),
+    d_blocks=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_forward_kernel_property(mb, d_blocks, seed):
+    """Kernel == bit-plane ref == dense ref for random shapes/data."""
+    rng = np.random.default_rng(seed)
+    d = d_blocks * 128
+    q, planes, x = make_case(rng, mb, d)
+    got = kernel_pa(planes, x, block_d=128)
+    want = np.asarray(forward_ref(planes, jnp.asarray(x)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    dense = np.asarray(forward_dense_ref(dequantize(jnp.asarray(q)), jnp.asarray(x)))
+    np.testing.assert_allclose(got, dense, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), precision=st.sampled_from([1, 2, 4, 8]))
+def test_forward_kernel_any_precision(seed, precision):
+    """MLWeaving is any-precision: the kernel works for P in {1,2,4,8}."""
+    rng = np.random.default_rng(seed)
+    a = rng.random((8, 256), dtype=np.float32)
+    q = quantize(jnp.asarray(a), precision)
+    planes = pack_bitplanes(q, precision)
+    x = rng.standard_normal(256).astype(np.float32)
+    got = kernel_pa(np.asarray(planes), x)
+    dense = np.asarray(forward_dense_ref(dequantize(q, precision), jnp.asarray(x)))
+    np.testing.assert_allclose(got, dense, rtol=1e-4, atol=1e-4)

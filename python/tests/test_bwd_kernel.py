@@ -1,0 +1,86 @@
+"""L1 backward kernel vs oracle: gradient accumulation + update."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bwd
+from compile.kernels.ref import backward_ref, grad_scale, update_ref
+
+
+def run_kernel(a, scale, g, block_d=bwd.DEFAULT_BLOCK_D):
+    return np.asarray(
+        bwd.accumulate_grad(jnp.asarray(a), jnp.asarray(scale), jnp.asarray(g), block_d)
+    )
+
+
+class TestBackwardKernel:
+    def test_matches_ref_linreg(self):
+        rng = np.random.default_rng(0)
+        mb, d = 8, 1024
+        a = rng.random((mb, d), dtype=np.float32)
+        fa = rng.standard_normal(mb).astype(np.float32)
+        y = rng.standard_normal(mb).astype(np.float32)
+        g = rng.standard_normal(d).astype(np.float32)
+        scale = np.asarray(grad_scale(jnp.asarray(fa), jnp.asarray(y), 0.1, "linreg"))
+        got = run_kernel(a, scale, g)
+        want = np.asarray(
+            backward_ref(jnp.asarray(a), jnp.asarray(fa), jnp.asarray(y),
+                         jnp.asarray(g), 0.1, "linreg")
+        )
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_zero_scale_is_identity(self):
+        rng = np.random.default_rng(1)
+        a = rng.random((8, 256), dtype=np.float32)
+        g = rng.standard_normal(256).astype(np.float32)
+        got = run_kernel(a, np.zeros(8, np.float32), g)
+        np.testing.assert_array_equal(got, g)
+
+    def test_accumulation_is_additive(self):
+        """bwd(bwd(g, mb1), mb2) == g + contributions of both micro-batches."""
+        rng = np.random.default_rng(2)
+        a1 = rng.random((8, 256), dtype=np.float32)
+        a2 = rng.random((8, 256), dtype=np.float32)
+        s1 = rng.standard_normal(8).astype(np.float32)
+        s2 = rng.standard_normal(8).astype(np.float32)
+        g = np.zeros(256, np.float32)
+        seq = run_kernel(a2, s2, run_kernel(a1, s1, g))
+        direct = s1 @ a1 + s2 @ a2
+        np.testing.assert_allclose(seq, direct, rtol=1e-4, atol=1e-5)
+
+    def test_update(self):
+        rng = np.random.default_rng(3)
+        x = rng.standard_normal(512).astype(np.float32)
+        g = rng.standard_normal(512).astype(np.float32)
+        got = np.asarray(update_ref(jnp.asarray(x), jnp.asarray(g), 1.0 / 64))
+        np.testing.assert_allclose(got, x - g / 64, rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    mb=st.sampled_from([1, 2, 4, 8, 16]),
+    d_blocks=st.integers(1, 6),
+    loss=st.sampled_from(["linreg", "logreg", "svm"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_backward_property(mb, d_blocks, loss, seed):
+    rng = np.random.default_rng(seed)
+    d = d_blocks * 128
+    a = rng.random((mb, d), dtype=np.float32)
+    fa = rng.standard_normal(mb).astype(np.float32)
+    if loss == "svm":
+        y = rng.choice([-1.0, 1.0], mb).astype(np.float32)
+    elif loss == "logreg":
+        y = rng.choice([0.0, 1.0], mb).astype(np.float32)
+    else:
+        y = rng.standard_normal(mb).astype(np.float32)
+    g = rng.standard_normal(d).astype(np.float32)
+    lr = float(rng.uniform(1e-4, 1.0))
+    scale = np.asarray(grad_scale(jnp.asarray(fa), jnp.asarray(y), lr, loss))
+    got = run_kernel(a, scale, g, block_d=128)
+    want = np.asarray(
+        backward_ref(jnp.asarray(a), jnp.asarray(fa), jnp.asarray(y),
+                     jnp.asarray(g), lr, loss)
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,125 @@
+"""L2 model semantics: fused step trains, losses behave, shapes hold."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels.ref import (
+    dequantize,
+    loss_ref,
+    pack_bitplanes,
+    quantize,
+    stable_sigmoid,
+)
+
+
+def make_dataset(rng, n, d, loss="logreg"):
+    """Linearly-separable-ish synthetic task in [0,1) feature space.
+
+    The last feature is a constant bias column so the affine target is
+    representable by the bias-free GLM (mirrors data/synth.rs in Rust).
+    """
+    a = rng.random((n, d), dtype=np.float32)
+    a[:, -1] = 0.999
+    w_true = (rng.standard_normal(d) / np.sqrt(d)).astype(np.float32)
+    w_true[-1] = 0.0
+    logits = 4.0 * ((a - 0.5) @ w_true)
+    if loss == "logreg":
+        y = (logits > 0).astype(np.float32)
+    elif loss == "svm":
+        y = np.where(logits > 0, 1.0, -1.0).astype(np.float32)
+    else:
+        y = logits.astype(np.float32)
+    return a, y
+
+
+class TestForwardPartial:
+    def test_shapes(self):
+        rng = np.random.default_rng(0)
+        a, _ = make_dataset(rng, 8, 256)
+        planes = pack_bitplanes(quantize(jnp.asarray(a)))
+        x = jnp.zeros(256)
+        pa = model.forward_partial(planes, x)
+        assert pa.shape == (8,)
+
+    def test_model_parallel_decomposition(self):
+        """sum of per-partition PA == whole-model PA (the C1 invariant)."""
+        rng = np.random.default_rng(1)
+        a, _ = make_dataset(rng, 8, 512)
+        x = rng.standard_normal(512).astype(np.float32)
+        whole = model.forward_partial(
+            pack_bitplanes(quantize(jnp.asarray(a))), jnp.asarray(x)
+        )
+        parts = []
+        for m in range(4):
+            sl = slice(m * 128, (m + 1) * 128)
+            parts.append(
+                model.forward_partial(
+                    pack_bitplanes(quantize(jnp.asarray(a[:, sl]))),
+                    jnp.asarray(x[sl]),
+                )
+            )
+        np.testing.assert_allclose(
+            np.asarray(whole), np.asarray(sum(parts)), rtol=1e-4, atol=1e-5
+        )
+
+
+class TestLocalStep:
+    @pytest.mark.parametrize("loss", ["linreg", "logreg", "svm"])
+    def test_loss_decreases(self, loss):
+        rng = np.random.default_rng(2)
+        mb, d, steps = 8, 256, 60
+        a, y = make_dataset(rng, mb * steps, d, loss)
+        x = jnp.zeros(d)
+        lr = jnp.asarray([{"linreg": 0.01, "logreg": 0.5, "svm": 0.1}[loss]], jnp.float32)
+        inv_b = jnp.asarray([1.0 / mb], jnp.float32)
+        losses = []
+        for epoch in range(4):
+            for s in range(steps):
+                chunk = a[s * mb : (s + 1) * mb]
+                q = quantize(jnp.asarray(chunk))
+                planes = pack_bitplanes(q)
+                aq = dequantize(q)
+                x, lsum = model.local_step(
+                    planes, aq, x, jnp.asarray(y[s * mb : (s + 1) * mb]), lr, inv_b, loss
+                )
+                losses.append(float(lsum))
+        head = np.mean(losses[:steps])
+        tail = np.mean(losses[-steps:])
+        assert tail < 0.7 * head, f"{loss}: loss {head} -> {tail} did not decrease"
+
+    def test_step_matches_manual_composition(self):
+        rng = np.random.default_rng(3)
+        mb, d = 8, 256
+        a, y = make_dataset(rng, mb, d, "logreg")
+        q = quantize(jnp.asarray(a))
+        planes, aq = pack_bitplanes(q), dequantize(q)
+        x = jnp.asarray(rng.standard_normal(d).astype(np.float32))
+        lr = jnp.asarray([0.1], jnp.float32)
+        inv_b = jnp.asarray([1.0 / mb], jnp.float32)
+        x2, _ = model.local_step(planes, aq, x, jnp.asarray(y), lr, inv_b, "logreg")
+        fa = model.forward_partial(planes, x)
+        g = model.backward_partial(aq, fa, jnp.asarray(y), jnp.zeros(d), lr, "logreg")
+        x_manual = model.apply_update(x, g, inv_b)
+        np.testing.assert_allclose(np.asarray(x2), np.asarray(x_manual), rtol=1e-5, atol=1e-6)
+
+
+class TestLosses:
+    def test_logreg_loss_at_zero_logits(self):
+        fa = jnp.zeros(8)
+        y = jnp.asarray([0.0, 1.0] * 4)
+        # -log(0.5) per sample
+        np.testing.assert_allclose(float(loss_ref(fa, y, "logreg")), 8 * np.log(2), rtol=1e-5)
+
+    def test_svm_margin_satisfied_is_zero(self):
+        fa = jnp.asarray([2.0, -3.0])
+        y = jnp.asarray([1.0, -1.0])
+        assert float(loss_ref(fa, y, "svm")) == 0.0
+
+    def test_sigmoid_stability(self):
+        z = jnp.asarray([-1e4, -60.0, 0.0, 60.0, 1e4])
+        s = np.asarray(stable_sigmoid(z))
+        assert np.all(np.isfinite(s))
+        np.testing.assert_allclose(s[2], 0.5)
+        assert s[0] < 1e-20 and s[-1] > 1 - 1e-7

@@ -1,0 +1,50 @@
+//! Bench: AllReduce latency through the real protocol stack (paper
+//! Fig. 8's operation). `cargo bench --bench agg_latency`.
+
+use p4sgd::bench::{run, Config};
+use p4sgd::config::NetConfig;
+use p4sgd::net::sim::SimNet;
+use p4sgd::net::switch_node;
+use p4sgd::switch::p4::P4Switch;
+use p4sgd::switch::runner;
+use p4sgd::worker::AggClient;
+use std::time::Duration;
+
+fn allreduce_round(workers: usize, ops_per_iter: usize) {
+    let net = NetConfig { latency_ns: 0, jitter_ns: 0, timeout_us: 5000, ..NetConfig::default() };
+    let mut eps = SimNet::build(workers + 1, &net);
+    let server = runner::spawn(
+        P4Switch::new(p4sgd::worker::agg_client::SEQ_SPACE, workers, 8),
+        eps.pop().unwrap(),
+    );
+    std::thread::scope(|scope| {
+        let mut it = eps.into_iter().enumerate();
+        let (_, ep0) = it.next().unwrap();
+        for (w, ep) in it {
+            scope.spawn(move || {
+                let mut agg =
+                    AggClient::new(ep, switch_node(workers), w, 64, Duration::from_millis(5));
+                for _ in 0..ops_per_iter {
+                    let _ = agg.allreduce(&[1i32; 8]);
+                }
+            });
+        }
+        let mut agg = AggClient::new(ep0, switch_node(workers), 0, 64, Duration::from_millis(5));
+        for _ in 0..ops_per_iter {
+            let _ = agg.allreduce(&[1i32; 8]);
+        }
+    });
+    server.shutdown();
+}
+
+fn main() {
+    println!("# fig8 hot path: in-process AllReduce (100 ops per sample iter)");
+    let cfg = Config { warmup_iters: 2, samples: 10, iters_per_sample: 1 };
+    for workers in [2usize, 4, 8] {
+        let r = run(&format!("allreduce_100ops_w{workers}"), cfg, || {
+            allreduce_round(workers, 100)
+        });
+        let per_op = r.summary.mean / 100.0;
+        println!("  -> {:.2}us per AllReduce at {} workers", per_op * 1e6, workers);
+    }
+}

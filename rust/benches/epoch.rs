@@ -1,0 +1,58 @@
+//! Bench: end-to-end training epochs — the functional system (threads,
+//! switch, pipeline, compute) and the DES that regenerates Figs. 9-13.
+//! `cargo bench --bench epoch`.
+
+use p4sgd::bench::{run, Config};
+use p4sgd::config::SystemConfig;
+use p4sgd::coordinator::mp;
+use p4sgd::data::synth;
+use p4sgd::engine::{Compute, NativeCompute};
+use p4sgd::glm::Loss;
+use p4sgd::timing::des::P4sgdSim;
+use p4sgd::timing::models::{FpgaModel, AGG_P4SGD};
+
+fn main() {
+    println!("# end-to-end epoch hot paths");
+
+    // functional: one epoch of distributed MP training, 4 workers
+    let mut cfg = SystemConfig::default();
+    cfg.cluster.workers = 4;
+    cfg.cluster.engines = 2;
+    cfg.cluster.slots = 16;
+    cfg.train.epochs = 1;
+    cfg.train.batch = 64;
+    cfg.train.lr = 1.0;
+    cfg.train.loss = Loss::LogReg;
+    cfg.net.latency_ns = 0;
+    cfg.net.timeout_us = 3000;
+    let ds = synth::table2_like("rcv1", 512, 2048, Loss::LogReg, 3);
+    let make = |_w: usize| -> Box<dyn Compute> { Box::new(NativeCompute) };
+    let bcfg = Config { warmup_iters: 1, samples: 8, iters_per_sample: 1 };
+    let r = run("functional_mp_epoch_512x2048_w4", bcfg, || mp::train_mp(&cfg, &ds, &make));
+    println!(
+        "  -> {:.1} samples/s end-to-end",
+        ds.n as f64 / r.summary.mean
+    );
+
+    // DES: how fast the simulator regenerates a full figure's series
+    let des_cfg = Config { warmup_iters: 5, samples: 30, iters_per_sample: 10 };
+    run("des_fig13_full_series", des_cfg, || {
+        let mut acc = 0.0f64;
+        for d in [47_236usize, 332_710] {
+            for b in [16usize, 64] {
+                for m in [1usize, 2, 4, 8] {
+                    let sim = P4sgdSim {
+                        fpga: FpgaModel::default(),
+                        agg: AGG_P4SGD,
+                        d,
+                        m,
+                        b,
+                        mb: 8,
+                    };
+                    acc += sim.epoch_time(100_000 / b * b, None);
+                }
+            }
+        }
+        acc
+    });
+}

@@ -1,0 +1,55 @@
+//! Bench: the L1 compute hot paths — native bit-serial datapath vs the
+//! AOT Pallas artifacts via PJRT. `cargo bench --bench kernels`.
+//!
+//! These are the forward/backward micro-batch operations that every
+//! timing figure's compute term rests on (Figs. 10-13).
+
+use p4sgd::bench::{run, Config};
+use p4sgd::data::quantize::{dequantized_rows, pack_rows};
+use p4sgd::engine::bitserial;
+use p4sgd::glm::Loss;
+use p4sgd::runtime::Runtime;
+use p4sgd::util::rng::Pcg32;
+
+fn main() {
+    let cfg = Config { warmup_iters: 5, samples: 30, iters_per_sample: 5 };
+    let mut rng = Pcg32::seeded(0);
+    println!("# L1 hot paths (MB=8, P=4)");
+
+    for d in [256usize, 1024, 4096] {
+        let rows: Vec<f32> = (0..8 * d).map(|_| rng.f32()).collect();
+        let pb = pack_rows(&rows, 8, d, d, 4);
+        let x: Vec<f32> = (0..d).map(|_| rng.gauss() as f32).collect();
+        let r = run(&format!("native_fwd_d{d}"), cfg, || bitserial::forward(&pb, &x));
+        // elements processed: 8 samples x d features
+        let gops = (8 * d) as f64 / r.summary.mean / 1e9;
+        println!("  -> {gops:.2} Geff-MAC/s");
+    }
+
+    for d in [256usize, 1024, 4096] {
+        let rows: Vec<f32> = (0..8 * d).map(|_| rng.f32()).collect();
+        let dq = dequantized_rows(&rows, 8, d, d, 4);
+        let fa: Vec<f32> = (0..8).map(|_| rng.gauss() as f32).collect();
+        let y = vec![1.0f32; 8];
+        let mut g = vec![0.0f32; d];
+        run(&format!("native_bwd_d{d}"), cfg, || {
+            bitserial::backward_acc(&dq, 8, &fa, &y, &mut g, 0.1, Loss::LogReg)
+        });
+    }
+
+    match Runtime::load_default() {
+        Ok(mut rt) => {
+            for d in [256usize, 1024, 4096] {
+                let rows: Vec<f32> = (0..8 * d).map(|_| rng.f32()).collect();
+                let pb = pack_rows(&rows, 8, d, d, 4);
+                let x: Vec<f32> = (0..d).map(|_| rng.gauss() as f32).collect();
+                // prime the executable cache (compile outside the timing)
+                let _ = rt.fwd(&pb.planes, 4, 8, pb.lanes(), &x).unwrap();
+                run(&format!("pjrt_fwd_d{d}"), cfg, || {
+                    rt.fwd(&pb.planes, 4, 8, pb.lanes(), &x).unwrap()
+                });
+            }
+        }
+        Err(e) => println!("(pjrt benches skipped: {e})"),
+    }
+}

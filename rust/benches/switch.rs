@@ -1,0 +1,56 @@
+//! Bench: switch data-plane throughput — packets/second through the
+//! Algorithm 2 state machine and its two baselines. This is the L3
+//! bottleneck candidate for every aggregation-bound figure.
+//! `cargo bench --bench switch`.
+
+use p4sgd::bench::{run, Config};
+use p4sgd::protocol::Packet;
+use p4sgd::switch::host_ps::HostPs;
+use p4sgd::switch::p4::P4Switch;
+use p4sgd::switch::switchml::SwitchMlSwitch;
+use p4sgd::switch::AggServer;
+
+const WORKERS: usize = 8;
+const ROUNDS: usize = 64;
+
+fn drive_p4(sw: &mut P4Switch) {
+    for r in 0..ROUNDS {
+        let seq = (r % 64) as u16;
+        for w in 0..WORKERS {
+            let _ = sw.handle(w, &Packet::pa(seq, w, vec![w as i32; 8]));
+        }
+        for w in 0..WORKERS {
+            let _ = sw.handle(w, &Packet::ack(seq, w));
+        }
+    }
+}
+
+fn main() {
+    let cfg = Config { warmup_iters: 10, samples: 40, iters_per_sample: 5 };
+    println!("# switch data plane (8 workers, 64 rounds per iter)");
+
+    let mut p4 = P4Switch::new(64, WORKERS, 8);
+    let r = run("p4_switch_64rounds", cfg, || drive_p4(&mut p4));
+    let pkts = (ROUNDS * WORKERS * 2) as f64;
+    println!("  -> {:.1} Mpkt/s", pkts / r.summary.mean / 1e6);
+
+    let mut sml = SwitchMlSwitch::new(64, WORKERS, 8);
+    run("switchml_64rounds", cfg, || {
+        for r in 0..ROUNDS {
+            let seq = SwitchMlSwitch::seq_of((r % 64) as u16, ((r / 64) % 2) as u8);
+            for w in 0..WORKERS {
+                let _ = sml.handle(w, &Packet::pa(seq, w, vec![w as i32; 8]));
+            }
+        }
+    });
+
+    let mut ps = HostPs::new(64, WORKERS, 8);
+    run("host_ps_64rounds", cfg, || {
+        for r in 0..ROUNDS {
+            let seq = HostPs::seq_of((r % 64) as u16, ((r / 64) % 2) as u8);
+            for w in 0..WORKERS {
+                let _ = ps.handle(w, &Packet::pa(seq, w, vec![w as i32; 8]));
+            }
+        }
+    });
+}

@@ -1,0 +1,92 @@
+//! Mini benchmark harness (criterion is not vendored in the offline
+//! image). Provides warmup + sampled timing with mean/p50/p95 reporting;
+//! the `rust/benches/*.rs` targets (`harness = false`) use this.
+
+use crate::util::stats::{Samples, Summary};
+use std::time::Instant;
+
+/// Benchmark configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    pub warmup_iters: usize,
+    pub samples: usize,
+    /// Iterations batched per sample (amortizes clock overhead for
+    /// nanosecond-scale bodies).
+    pub iters_per_sample: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { warmup_iters: 20, samples: 50, iters_per_sample: 10 }
+    }
+}
+
+/// A timed result, per-iteration seconds.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let s = &self.summary;
+        format!(
+            "{:<40} mean {:>12} p50 {:>12} p95 {:>12} ({} samples)",
+            self.name,
+            crate::metrics::fmt_secs(s.mean),
+            crate::metrics::fmt_secs(s.p50),
+            crate::metrics::fmt_secs(s.p95),
+            s.n,
+        )
+    }
+}
+
+/// Time `body` under `cfg`; the closure's return value is black-boxed.
+pub fn bench<T, F: FnMut() -> T>(name: &str, cfg: Config, mut body: F) -> BenchResult {
+    for _ in 0..cfg.warmup_iters {
+        std::hint::black_box(body());
+    }
+    let mut samples = Samples::new();
+    for _ in 0..cfg.samples {
+        let t = Instant::now();
+        for _ in 0..cfg.iters_per_sample {
+            std::hint::black_box(body());
+        }
+        samples.push(t.elapsed().as_secs_f64() / cfg.iters_per_sample as f64);
+    }
+    BenchResult { name: name.to_string(), summary: samples.summary() }
+}
+
+/// Convenience: run + print.
+pub fn run<T, F: FnMut() -> T>(name: &str, cfg: Config, body: F) -> BenchResult {
+    let r = bench(name, cfg, body);
+    println!("{}", r.report());
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something_positive() {
+        let cfg = Config { warmup_iters: 2, samples: 5, iters_per_sample: 3 };
+        let r = bench("spin", cfg, || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(r.summary.mean > 0.0);
+        assert_eq!(r.summary.n, 5);
+    }
+
+    #[test]
+    fn report_contains_name() {
+        let cfg = Config { warmup_iters: 0, samples: 2, iters_per_sample: 1 };
+        let r = bench("myname", cfg, || 1 + 1);
+        assert!(r.report().contains("myname"));
+    }
+}

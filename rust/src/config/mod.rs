@@ -1,0 +1,281 @@
+//! Configuration system: one [`SystemConfig`] describes a whole run —
+//! cluster topology, training hyper-parameters, network behaviour, and
+//! compute backend. Loadable from a TOML-subset file ([`toml::Doc`]) and
+//! overridable from CLI options.
+
+pub mod toml;
+
+use crate::glm::Loss;
+use anyhow::{bail, Context, Result};
+
+/// Which compute path executes forward/backward.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-Rust bit-serial engine emulation (exact MLWeaving datapath).
+    Native,
+    /// AOT-compiled JAX/Pallas artifacts via the PJRT CPU client.
+    Pjrt,
+}
+
+impl std::str::FromStr for Backend {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "native" => Ok(Backend::Native),
+            "pjrt" => Ok(Backend::Pjrt),
+            other => Err(format!("unknown backend {other:?} (native|pjrt)")),
+        }
+    }
+}
+
+/// Cluster topology: M workers, each with N engines (paper Fig. 3).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    /// Number of FPGA workers (paper: 1..=8).
+    pub workers: usize,
+    /// Engines per worker (paper: 1..=8; resource-bound on the U280).
+    pub engines: usize,
+    /// Per-worker in-flight window (max outstanding aggregation
+    /// operations). The switch itself always provisions the paper's
+    /// full 64K-slot seq space.
+    pub slots: usize,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self { workers: 4, engines: 8, slots: 64 }
+    }
+}
+
+/// Training hyper-parameters (paper Alg. 1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainConfig {
+    pub loss: Loss,
+    pub lr: f32,
+    /// Mini-batch size B.
+    pub batch: usize,
+    /// Micro-batch size MB (8 = one sample per engine bank).
+    pub micro_batch: usize,
+    pub epochs: usize,
+    /// Bit-weaving precision P (paper uses 4).
+    pub precision: u32,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self { loss: Loss::LogReg, lr: 0.5, batch: 64, micro_batch: 8, epochs: 10, precision: 4 }
+    }
+}
+
+/// Simulated-network behaviour (per direction, per hop).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetConfig {
+    /// Mean one-way latency in ns (wire + switch pipeline).
+    pub latency_ns: u64,
+    /// Exponential jitter mean added on top, ns.
+    pub jitter_ns: u64,
+    pub drop_prob: f64,
+    pub dup_prob: f64,
+    pub reorder_prob: f64,
+    /// Worker retransmission timeout, microseconds (paper Alg. 3 timer).
+    pub timeout_us: u64,
+    pub seed: u64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        Self {
+            // Calibrated so an 8-worker AllReduce averages ~1.2us like
+            // paper Fig. 8: one-way FPGA->switch ~500ns + aggregation.
+            latency_ns: 500,
+            jitter_ns: 60,
+            drop_prob: 0.0,
+            dup_prob: 0.0,
+            reorder_prob: 0.0,
+            timeout_us: 50,
+            seed: 1,
+        }
+    }
+}
+
+/// The complete run description.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SystemConfig {
+    pub cluster: ClusterConfig,
+    pub train: TrainConfig,
+    pub net: NetConfig,
+    pub backend: Option<Backend>,
+}
+
+impl SystemConfig {
+    /// Parse from TOML text. Unknown keys are rejected so typos fail
+    /// loudly rather than silently running defaults.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = toml::Doc::parse(text).context("parsing config")?;
+        const KNOWN: &[&str] = &[
+            "cluster.workers",
+            "cluster.engines",
+            "cluster.slots",
+            "train.loss",
+            "train.lr",
+            "train.batch",
+            "train.micro_batch",
+            "train.epochs",
+            "train.precision",
+            "net.latency_ns",
+            "net.jitter_ns",
+            "net.drop_prob",
+            "net.dup_prob",
+            "net.reorder_prob",
+            "net.timeout_us",
+            "net.seed",
+            "backend",
+        ];
+        for k in doc.keys() {
+            if !KNOWN.contains(&k) {
+                bail!("unknown config key {k:?}");
+            }
+        }
+        let d = SystemConfig::default();
+        let cfg = SystemConfig {
+            cluster: ClusterConfig {
+                workers: doc.int_or("cluster.workers", d.cluster.workers as i64) as usize,
+                engines: doc.int_or("cluster.engines", d.cluster.engines as i64) as usize,
+                slots: doc.int_or("cluster.slots", d.cluster.slots as i64) as usize,
+            },
+            train: TrainConfig {
+                loss: doc
+                    .str_or("train.loss", d.train.loss.tag())
+                    .parse()
+                    .map_err(|e: String| anyhow::anyhow!(e))?,
+                lr: doc.float_or("train.lr", d.train.lr as f64) as f32,
+                batch: doc.int_or("train.batch", d.train.batch as i64) as usize,
+                micro_batch: doc.int_or("train.micro_batch", d.train.micro_batch as i64) as usize,
+                epochs: doc.int_or("train.epochs", d.train.epochs as i64) as usize,
+                precision: doc.int_or("train.precision", d.train.precision as i64) as u32,
+            },
+            net: NetConfig {
+                latency_ns: doc.int_or("net.latency_ns", d.net.latency_ns as i64) as u64,
+                jitter_ns: doc.int_or("net.jitter_ns", d.net.jitter_ns as i64) as u64,
+                drop_prob: doc.float_or("net.drop_prob", d.net.drop_prob),
+                dup_prob: doc.float_or("net.dup_prob", d.net.dup_prob),
+                reorder_prob: doc.float_or("net.reorder_prob", d.net.reorder_prob),
+                timeout_us: doc.int_or("net.timeout_us", d.net.timeout_us as i64) as u64,
+                seed: doc.int_or("net.seed", d.net.seed as i64) as u64,
+            },
+            backend: match doc.get("backend") {
+                None => None,
+                Some(v) => Some(
+                    v.as_str()
+                        .unwrap_or("?")
+                        .parse()
+                        .map_err(|e: String| anyhow::anyhow!(e))?,
+                ),
+            },
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Structural sanity checks shared by file and builder construction.
+    pub fn validate(&self) -> Result<()> {
+        let c = &self.cluster;
+        let t = &self.train;
+        if c.workers == 0 || c.workers > 32 {
+            bail!("workers must be in 1..=32, got {}", c.workers);
+        }
+        if c.engines == 0 || c.engines > 8 {
+            bail!("engines must be in 1..=8 (paper: U280 resource limit), got {}", c.engines);
+        }
+        if c.slots < 2 {
+            bail!("need at least 2 aggregation slots, got {}", c.slots);
+        }
+        if c.slots > 1 << 14 {
+            bail!("slots (in-flight window) must be << the 64K seq space, got {}", c.slots);
+        }
+        if t.micro_batch == 0 || t.batch == 0 || t.batch % t.micro_batch != 0 {
+            bail!("batch ({}) must be a positive multiple of micro_batch ({})", t.batch, t.micro_batch);
+        }
+        if !(1..=8).contains(&t.precision) {
+            bail!("precision must be in 1..=8 bits, got {}", t.precision);
+        }
+        if !(self.net.drop_prob < 1.0 && self.net.drop_prob >= 0.0) {
+            bail!("drop_prob must be in [0, 1), got {}", self.net.drop_prob);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        SystemConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parse_full_file() {
+        let cfg = SystemConfig::from_toml(
+            r#"
+            backend = "native"
+            [cluster]
+            workers = 8
+            engines = 4
+            slots = 128
+            [train]
+            loss = "svm"
+            lr = 0.1
+            batch = 128
+            micro_batch = 8
+            epochs = 3
+            precision = 4
+            [net]
+            latency_ns = 700
+            drop_prob = 0.01
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.cluster.workers, 8);
+        assert_eq!(cfg.train.loss, Loss::Svm);
+        assert_eq!(cfg.backend, Some(Backend::Native));
+        assert_eq!(cfg.net.latency_ns, 700);
+        // unspecified keys keep defaults
+        assert_eq!(cfg.net.timeout_us, NetConfig::default().timeout_us);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(SystemConfig::from_toml("[cluster]\nworkrs = 8").is_err());
+    }
+
+    #[test]
+    fn batch_must_divide() {
+        let mut cfg = SystemConfig::default();
+        cfg.train.batch = 20;
+        cfg.train.micro_batch = 8;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn engine_limit_enforced() {
+        let mut cfg = SystemConfig::default();
+        cfg.cluster.engines = 9;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn window_bounded_by_seq_space() {
+        let mut cfg = SystemConfig::default();
+        cfg.cluster.slots = 1 << 15;
+        assert!(cfg.validate().is_err());
+        cfg.cluster.slots = 1 << 14;
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn bad_loss_string() {
+        assert!(SystemConfig::from_toml("[train]\nloss = \"ridge\"").is_err());
+    }
+}

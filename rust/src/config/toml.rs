@@ -1,0 +1,218 @@
+//! Minimal TOML-subset parser (replaces the `toml`+`serde` crates, not
+//! vendored offline). Supports exactly what `p4sgd.toml` files need:
+//! `[section]` headers, `key = value` with string / integer / float /
+//! boolean values, `#` comments, and blank lines. No arrays, no nesting.
+
+use std::collections::BTreeMap;
+
+/// A parsed value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: `doc["section.key"] -> Value`; top-level keys have no
+/// section prefix.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Doc {
+    map: BTreeMap<String, Value>,
+}
+
+/// Parse error with 1-based line number.
+#[derive(Debug, thiserror::Error, PartialEq)]
+#[error("toml parse error at line {line}: {msg}")]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Doc, ParseError> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let line_no = idx + 1;
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name.strip_suffix(']').ok_or(ParseError {
+                    line: line_no,
+                    msg: "unterminated section header".into(),
+                })?;
+                section = name.trim().to_string();
+                if section.is_empty() {
+                    return Err(ParseError { line: line_no, msg: "empty section name".into() });
+                }
+                continue;
+            }
+            let (key, val) = line.split_once('=').ok_or(ParseError {
+                line: line_no,
+                msg: format!("expected `key = value`, got {line:?}"),
+            })?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(ParseError { line: line_no, msg: "empty key".into() });
+            }
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            let value = parse_value(val.trim())
+                .ok_or(ParseError { line: line_no, msg: format!("bad value {:?}", val.trim()) })?;
+            map.insert(full, value);
+        }
+        Ok(Doc { map })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.map.get(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).and_then(Value::as_str).unwrap_or(default).to_string()
+    }
+
+    pub fn int_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(Value::as_int).unwrap_or(default)
+    }
+
+    pub fn float_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_float).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Option<Value> {
+    if let Some(body) = s.strip_prefix('"') {
+        return body.strip_suffix('"').map(|b| Value::Str(b.to_string()));
+    }
+    match s {
+        "true" => return Some(Value::Bool(true)),
+        "false" => return Some(Value::Bool(false)),
+        _ => {}
+    }
+    let clean = s.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Some(Value::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Some(Value::Float(f));
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = Doc::parse(
+            r#"
+            # cluster setup
+            workers = 8
+            [net]
+            latency_ns = 600        # per hop
+            drop_prob = 0.001
+            transport = "sim"
+            trace = false
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.int_or("workers", 0), 8);
+        assert_eq!(doc.int_or("net.latency_ns", 0), 600);
+        assert!((doc.float_or("net.drop_prob", 0.0) - 0.001).abs() < 1e-12);
+        assert_eq!(doc.str_or("net.transport", ""), "sim");
+        assert!(!doc.bool_or("net.trace", true));
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let doc = Doc::parse("n = 1_000_000").unwrap();
+        assert_eq!(doc.int_or("n", 0), 1_000_000);
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let doc = Doc::parse("x = 3").unwrap();
+        assert_eq!(doc.float_or("x", 0.0), 3.0);
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let doc = Doc::parse(r##"tag = "a#b""##).unwrap();
+        assert_eq!(doc.str_or("tag", ""), "a#b");
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = Doc::parse("ok = 1\nbroken line").unwrap_err();
+        assert_eq!(err.line, 2);
+        let err = Doc::parse("[unterminated").unwrap_err();
+        assert_eq!(err.line, 1);
+    }
+
+    #[test]
+    fn missing_keys_fall_back() {
+        let doc = Doc::parse("").unwrap();
+        assert_eq!(doc.int_or("absent", 7), 7);
+        assert_eq!(doc.str_or("absent", "d"), "d");
+    }
+}

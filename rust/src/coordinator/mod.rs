@@ -1,0 +1,52 @@
+//! The training coordinator: spawns the switch and the workers, runs
+//! lock-step epochs, and collects metrics.
+//!
+//! * [`mp`] — the paper's system: model-parallel training over the
+//!   in-switch aggregation protocol with the FCB pipeline (C1+C2+C3).
+//! * [`dp`] — the data-parallel comparator (paper Fig. 9): same switch,
+//!   but aggregating length-D gradients instead of length-MB activations.
+//! * [`reference`] — exact single-threaded oracle (no network, f32
+//!   aggregation) used by the equivalence tests and the convergence
+//!   curves of Figs. 14/15 (all methods are synchronous, so they share
+//!   one statistical trajectory).
+
+pub mod dp;
+pub mod mp;
+pub mod reference;
+
+use crate::pipeline::PipelineStats;
+use crate::worker::AggStats;
+use std::time::Duration;
+
+/// Result of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    /// Summed training loss per epoch (from the activations seen during
+    /// the epoch, i.e. pre-update losses — the standard online metric).
+    pub loss_per_epoch: Vec<f32>,
+    /// Wall-clock duration of the run.
+    pub wall: Duration,
+    /// The stitched full model after training.
+    pub model: Vec<f32>,
+    /// Pipeline overlap counters summed over workers.
+    pub pipeline: PipelineStats,
+    /// Aggregation-protocol counters summed over workers.
+    pub agg: AggStats,
+}
+
+impl TrainReport {
+    /// Mean per-sample loss in epoch `e` for a dataset of `n` samples.
+    pub fn mean_loss(&self, e: usize, n: usize) -> f32 {
+        self.loss_per_epoch[e] / n as f32
+    }
+}
+
+pub(crate) fn merge_agg(total: &mut AggStats, s: &AggStats) {
+    total.pa_sent += s.pa_sent;
+    total.acks_sent += s.acks_sent;
+    total.retransmits += s.retransmits;
+    total.fa_received += s.fa_received;
+    total.dup_fa += s.dup_fa;
+    total.confirms += s.confirms;
+    total.stale += s.stale;
+}

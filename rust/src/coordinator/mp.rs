@@ -1,0 +1,216 @@
+//! Model-parallel distributed trainer — the paper's system (C1).
+//!
+//! Topology: `M` worker threads + one switch thread over a [`SimNet`]
+//! fabric. The model and dataset are vertically partitioned; each
+//! iteration every worker pushes its micro-batch partial activations to
+//! the P4 switch, which aggregates and multicasts full activations. The
+//! workers proceed in lock step *implicitly*: slot `seq` only completes
+//! when all `M` PAs arrived, so no extra barrier is needed — exactly the
+//! paper's design.
+
+use super::{merge_agg, TrainReport};
+use crate::config::SystemConfig;
+use crate::data::partition::shard_vertical;
+use crate::data::quantize::LANE;
+use crate::data::Dataset;
+use crate::engine::Compute;
+use crate::net::sim::SimNet;
+use crate::net::switch_node;
+use crate::pipeline::{run_minibatch, PipelineStats, PreparedShard, WorkerState};
+use crate::switch::p4::P4Switch;
+use crate::switch::runner;
+use crate::worker::{AggClient, AggStats};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Per-worker results sent back to the coordinator.
+struct WorkerResult {
+    worker: usize,
+    model: Vec<f32>,
+    loss_curve: Vec<f32>,
+    pipeline: PipelineStats,
+    agg: AggStats,
+}
+
+/// Factory giving each worker its compute backend (e.g. one PJRT client
+/// per worker, or the shared-nothing native engine).
+pub type ComputeFactory<'a> = dyn Fn(usize) -> Box<dyn Compute> + Sync + 'a;
+
+/// Train `ds` under model parallelism per `cfg`. Panics on invalid
+/// configuration (validate first) or if the cluster wedges (drain
+/// timeout in the pipeline).
+pub fn train_mp(cfg: &SystemConfig, ds: &Dataset, make_compute: &ComputeFactory) -> TrainReport {
+    cfg.validate().expect("invalid config");
+    let m = cfg.cluster.workers;
+    let t = &cfg.train;
+    assert!(ds.d >= m, "need at least one feature per worker");
+    let start = Instant::now();
+
+    let mut endpoints = SimNet::build(m + 1, &cfg.net);
+    let switch_ep = endpoints.pop().unwrap();
+    // Paper §4.2: the switch provisions the full 16-bit slot space;
+    // cfg.cluster.slots is the per-worker in-flight *window*.
+    let server =
+        runner::spawn(P4Switch::new(crate::worker::agg_client::SEQ_SPACE, m, t.micro_batch), switch_ep);
+
+    let (res_tx, res_rx) = mpsc::channel::<WorkerResult>();
+    std::thread::scope(|scope| {
+        for (w, ep) in endpoints.into_iter().enumerate() {
+            let res_tx = res_tx.clone();
+            let cfg = cfg.clone();
+            scope.spawn(move || {
+                let t = &cfg.train;
+                let shard = shard_vertical(ds, m, w, LANE);
+                let prep =
+                    PreparedShard::prepare(&shard, cfg.cluster.engines, t.micro_batch, t.precision);
+                let mut state = WorkerState::zeros(&prep);
+                let mut compute = make_compute(w);
+                let mut agg = AggClient::new(
+                    ep,
+                    switch_node(m),
+                    w,
+                    cfg.cluster.slots,
+                    Duration::from_micros(cfg.net.timeout_us),
+                );
+                let per_batch = t.batch / t.micro_batch;
+                let batches = prep.micro_batches() / per_batch;
+                let mut pstats = PipelineStats::default();
+                let mut loss_curve = Vec::with_capacity(t.epochs);
+                for _ in 0..t.epochs {
+                    let mut epoch_loss = 0.0f32;
+                    for b in 0..batches {
+                        epoch_loss += run_minibatch(
+                            &prep,
+                            &mut state,
+                            compute.as_mut(),
+                            &mut agg,
+                            b * per_batch,
+                            per_batch,
+                            t.loss,
+                            t.lr,
+                            &mut pstats,
+                        );
+                    }
+                    loss_curve.push(epoch_loss);
+                }
+                let _ = res_tx.send(WorkerResult {
+                    worker: w,
+                    model: state.model(&prep),
+                    loss_curve,
+                    pipeline: pstats,
+                    agg: agg.stats,
+                });
+            });
+        }
+        drop(res_tx);
+    });
+    server.shutdown();
+
+    // Assemble results.
+    let mut results: Vec<WorkerResult> = res_rx.into_iter().collect();
+    assert_eq!(results.len(), m, "all workers must report");
+    results.sort_by_key(|r| r.worker);
+    let mut model = Vec::with_capacity(ds.d);
+    let mut pipeline = PipelineStats::default();
+    let mut agg = AggStats::default();
+    for r in &results {
+        model.extend_from_slice(&r.model);
+        pipeline.drained += r.pipeline.drained;
+        pipeline.overlapped += r.pipeline.overlapped;
+        merge_agg(&mut agg, &r.agg);
+    }
+    TrainReport {
+        loss_per_epoch: results[0].loss_curve.clone(),
+        wall: start.elapsed(),
+        model,
+        pipeline,
+        agg,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::reference;
+    use crate::data::synth;
+    use crate::engine::NativeCompute;
+    use crate::glm::Loss;
+
+    fn cfg(workers: usize) -> SystemConfig {
+        let mut c = SystemConfig::default();
+        c.cluster.workers = workers;
+        c.cluster.engines = 2;
+        c.cluster.slots = 8;
+        c.train.epochs = 4;
+        c.train.batch = 32;
+        c.train.micro_batch = 8;
+        c.train.lr = 0.5;
+        c.train.loss = Loss::LogReg;
+        c.net.latency_ns = 0;
+        c.net.jitter_ns = 0;
+        c.net.timeout_us = 3000;
+        c
+    }
+
+    fn native(_w: usize) -> Box<dyn Compute> {
+        Box::new(NativeCompute)
+    }
+
+    #[test]
+    fn distributed_matches_reference_oracle() {
+        let ds = synth::separable(256, 96, Loss::LogReg, 0.0, 9);
+        let dist = train_mp(&cfg(3), &ds, &native);
+        let oracle = reference::train(&cfg(3), &ds);
+        assert_eq!(dist.loss_per_epoch.len(), oracle.loss_per_epoch.len());
+        for (e, (a, b)) in dist.loss_per_epoch.iter().zip(&oracle.loss_per_epoch).enumerate() {
+            // only fixed-point wire rounding (2^-16 per PA term) differs
+            let tol = 2e-3 * a.abs().max(1.0);
+            assert!((a - b).abs() < tol, "epoch {e}: {a} vs {b}");
+        }
+        assert_eq!(dist.model.len(), ds.d);
+        // final models close too
+        for (a, b) in dist.model.iter().zip(&oracle.model) {
+            assert!((a - b).abs() < 5e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn worker_count_does_not_change_convergence() {
+        let ds = synth::separable(256, 64, Loss::LogReg, 0.0, 10);
+        let r1 = train_mp(&cfg(1), &ds, &native);
+        let r4 = train_mp(&cfg(4), &ds, &native);
+        for (a, b) in r1.loss_per_epoch.iter().zip(&r4.loss_per_epoch) {
+            assert!((a - b).abs() < 5e-3 * a.abs().max(1.0), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn converges_under_packet_loss() {
+        let ds = synth::separable(128, 64, Loss::LogReg, 0.0, 11);
+        let mut c = cfg(2);
+        c.net.drop_prob = 0.05;
+        c.net.timeout_us = 500;
+        c.train.epochs = 3;
+        let lossy = train_mp(&c, &ds, &native);
+        assert!(lossy.agg.retransmits > 0, "loss must trigger retransmissions");
+        // identical numbers as the lossless run: reliability is exact
+        c.net.drop_prob = 0.0;
+        let clean = train_mp(&c, &ds, &native);
+        for (a, b) in lossy.loss_per_epoch.iter().zip(&clean.loss_per_epoch) {
+            assert!((a - b).abs() < 1e-4 * a.abs().max(1.0), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn pipeline_overlaps_under_latency() {
+        let ds = synth::separable(256, 64, Loss::LogReg, 0.0, 12);
+        let mut c = cfg(2);
+        c.train.batch = 64; // 8 micro-batches in flight
+        c.net.latency_ns = 20_000;
+        let rep = train_mp(&c, &ds, &native);
+        assert!(
+            rep.pipeline.overlapped > 0,
+            "with 20us latency and 8 micro-batches, some FAs must overlap forwards"
+        );
+    }
+}

@@ -1,0 +1,131 @@
+//! Exact single-threaded reference trainer.
+//!
+//! Runs paper Algorithm 1 with M = 1 and no network: quantized data,
+//! f32 activations (no fixed-point wire rounding). This is the oracle
+//! the distributed trainer is validated against, and the shared
+//! statistical trajectory of Figs. 14/15 (synchronous methods all follow
+//! it modulo arithmetic noise).
+
+use super::TrainReport;
+use crate::config::SystemConfig;
+use crate::data::partition::shard_vertical;
+use crate::data::quantize::LANE;
+use crate::data::Dataset;
+use crate::engine::{Compute, NativeCompute};
+use crate::pipeline::{PipelineStats, PreparedShard, WorkerState};
+use crate::worker::AggStats;
+use std::time::Instant;
+
+/// Train with exact (f32) aggregation, single worker, no network.
+pub fn train(cfg: &SystemConfig, ds: &Dataset) -> TrainReport {
+    let t = &cfg.train;
+    let start = Instant::now();
+    let shard = shard_vertical(ds, 1, 0, LANE);
+    let prep = PreparedShard::prepare(&shard, cfg.cluster.engines, t.micro_batch, t.precision);
+    let mut state = WorkerState::zeros(&prep);
+    let mut compute = NativeCompute;
+
+    let per_batch = t.batch / t.micro_batch;
+    let batches = prep.micro_batches() / per_batch;
+    let mut loss_curve = Vec::with_capacity(t.epochs);
+
+    for _ in 0..t.epochs {
+        let mut epoch_loss = 0.0f32;
+        for b in 0..batches {
+            for ge in &mut state.g {
+                ge.iter_mut().for_each(|v| *v = 0.0);
+            }
+            for j in 0..per_batch {
+                let m = &prep.micro[b * per_batch + j];
+                // forward: engine-sum = full activation (single worker)
+                let mut fa = vec![0.0f32; t.micro_batch];
+                for (ed, xe) in m.per_engine.iter().zip(&state.x) {
+                    for (p, v) in fa.iter_mut().zip(compute.forward(&ed.packed, xe)) {
+                        *p += v;
+                    }
+                }
+                epoch_loss += compute.loss_sum(&fa, &m.y, t.loss);
+                for (ed, ge) in m.per_engine.iter().zip(&mut state.g) {
+                    compute.backward_acc(&ed.dq, t.micro_batch, &fa, &m.y, ge, t.lr, t.loss);
+                }
+            }
+            let inv_b = 1.0 / t.batch as f32;
+            for (xe, ge) in state.x.iter_mut().zip(&state.g) {
+                compute.update(xe, ge, inv_b);
+            }
+        }
+        loss_curve.push(epoch_loss);
+    }
+
+    TrainReport {
+        loss_per_epoch: loss_curve,
+        wall: start.elapsed(),
+        model: state.model(&prep),
+        pipeline: PipelineStats::default(),
+        agg: AggStats::default(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::glm::Loss;
+
+    fn cfg(loss: Loss, lr: f32, epochs: usize) -> SystemConfig {
+        let mut c = SystemConfig::default();
+        c.train.loss = loss;
+        c.train.lr = lr;
+        c.train.epochs = epochs;
+        c.train.batch = 32;
+        c.train.micro_batch = 8;
+        c.cluster.engines = 2;
+        c
+    }
+
+    #[test]
+    fn logreg_converges_on_separable_data() {
+        let ds = synth::separable(512, 64, Loss::LogReg, 0.0, 3);
+        let rep = train(&cfg(Loss::LogReg, 0.5, 8), &ds);
+        let first = rep.loss_per_epoch[0];
+        let last = *rep.loss_per_epoch.last().unwrap();
+        assert!(last < 0.6 * first, "loss {first} -> {last}");
+        assert_eq!(rep.model.len(), 64);
+    }
+
+    #[test]
+    fn svm_converges() {
+        let ds = synth::separable(512, 64, Loss::Svm, 0.0, 4);
+        let rep = train(&cfg(Loss::Svm, 0.1, 8), &ds);
+        assert!(
+            *rep.loss_per_epoch.last().unwrap() < 0.6 * rep.loss_per_epoch[0],
+            "{:?}",
+            rep.loss_per_epoch
+        );
+    }
+
+    #[test]
+    fn linreg_converges() {
+        let ds = synth::separable(512, 64, Loss::LinReg, 0.05, 5);
+        let rep = train(&cfg(Loss::LinReg, 0.02, 10), &ds);
+        assert!(
+            *rep.loss_per_epoch.last().unwrap() < 0.7 * rep.loss_per_epoch[0],
+            "{:?}",
+            rep.loss_per_epoch
+        );
+    }
+
+    #[test]
+    fn engine_count_does_not_change_numerics() {
+        let ds = synth::separable(256, 96, Loss::LogReg, 0.0, 5);
+        let mut c1 = cfg(Loss::LogReg, 0.5, 3);
+        c1.cluster.engines = 1;
+        let mut c4 = cfg(Loss::LogReg, 0.5, 3);
+        c4.cluster.engines = 4;
+        let r1 = train(&c1, &ds);
+        let r4 = train(&c4, &ds);
+        for (a, b) in r1.loss_per_epoch.iter().zip(&r4.loss_per_epoch) {
+            assert!((a - b).abs() < 1e-2 * a.abs().max(1.0), "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,138 @@
+//! LibSVM text-format parser.
+//!
+//! The paper's datasets (Table 2) ship in LibSVM format
+//! (`label idx:val idx:val ...`, 1-based indices). This parser lets real
+//! files drop into the harness when present; the offline image has none,
+//! so the test suite feeds synthetic strings.
+
+use super::Dataset;
+use anyhow::{bail, Context, Result};
+use std::io::BufRead;
+
+/// Parse LibSVM text. `d_hint` fixes the feature count (0 = infer from
+/// the max index seen). Features are densified and min-max normalized to
+/// `[0, 1)`; labels are kept verbatim.
+pub fn parse<R: BufRead>(reader: R, d_hint: usize, name: &str) -> Result<Dataset> {
+    let mut labels = Vec::new();
+    let mut rows: Vec<Vec<(usize, f32)>> = Vec::new();
+    let mut max_idx = 0usize;
+
+    for (line_no, line) in reader.lines().enumerate() {
+        let line = line.context("reading libsvm input")?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_ascii_whitespace();
+        let label: f32 = parts
+            .next()
+            .unwrap()
+            .parse()
+            .with_context(|| format!("line {}: bad label", line_no + 1))?;
+        let mut row = Vec::new();
+        for tok in parts {
+            let (idx, val) = tok
+                .split_once(':')
+                .with_context(|| format!("line {}: expected idx:val, got {tok:?}", line_no + 1))?;
+            let idx: usize = idx
+                .parse()
+                .with_context(|| format!("line {}: bad index", line_no + 1))?;
+            if idx == 0 {
+                bail!("line {}: libsvm indices are 1-based", line_no + 1);
+            }
+            let val: f32 = val
+                .parse()
+                .with_context(|| format!("line {}: bad value", line_no + 1))?;
+            max_idx = max_idx.max(idx);
+            row.push((idx - 1, val));
+        }
+        labels.push(label);
+        rows.push(row);
+    }
+
+    let d = if d_hint > 0 { d_hint } else { max_idx };
+    if d == 0 {
+        bail!("empty libsvm input");
+    }
+    if max_idx > d {
+        bail!("feature index {max_idx} exceeds declared dimension {d}");
+    }
+    let n = rows.len();
+    let mut features = vec![0.0f32; n * d];
+    for (i, row) in rows.iter().enumerate() {
+        for &(j, v) in row {
+            features[i * d + j] = v;
+        }
+    }
+    let mut ds = Dataset::new(n, d, features, labels, name);
+    ds.normalize_unit();
+    Ok(ds)
+}
+
+/// Parse a file from disk.
+pub fn load(path: &std::path::Path, d_hint: usize) -> Result<Dataset> {
+    let f = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+    parse(
+        std::io::BufReader::new(f),
+        d_hint,
+        path.file_name().and_then(|s| s.to_str()).unwrap_or("libsvm"),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    const SAMPLE: &str = "\
++1 1:0.5 3:1.0\n\
+-1 2:0.25\n\
+\n\
+# comment line\n\
++1 4:0.75\n";
+
+    #[test]
+    fn parses_sparse_rows_densely() {
+        let ds = parse(Cursor::new(SAMPLE), 0, "t").unwrap();
+        assert_eq!(ds.n, 3);
+        assert_eq!(ds.d, 4);
+        assert_eq!(ds.labels, vec![1.0, -1.0, 1.0]);
+        // row 0 had features at 1 and 3 (1-based) -> dense 0 and 2
+        assert!(ds.row(0)[0] > 0.0);
+        assert_eq!(ds.row(0)[1], 0.0);
+        assert!(ds.row(0)[2] > 0.0);
+    }
+
+    #[test]
+    fn d_hint_fixes_dimension() {
+        let ds = parse(Cursor::new(SAMPLE), 10, "t").unwrap();
+        assert_eq!(ds.d, 10);
+    }
+
+    #[test]
+    fn rejects_index_beyond_hint() {
+        assert!(parse(Cursor::new(SAMPLE), 2, "t").is_err());
+    }
+
+    #[test]
+    fn rejects_zero_index() {
+        assert!(parse(Cursor::new("+1 0:1.0\n"), 0, "t").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_pair() {
+        assert!(parse(Cursor::new("+1 3=0.5\n"), 0, "t").is_err());
+        assert!(parse(Cursor::new("abc 1:0.5\n"), 0, "t").is_err());
+    }
+
+    #[test]
+    fn normalizes_to_unit_interval() {
+        let ds = parse(Cursor::new("0 1:-10 2:10\n1 1:0 2:5\n"), 0, "t").unwrap();
+        assert!(ds.features.iter().all(|&v| (0.0..1.0).contains(&v)));
+    }
+
+    #[test]
+    fn empty_input_is_error() {
+        assert!(parse(Cursor::new(""), 0, "t").is_err());
+    }
+}

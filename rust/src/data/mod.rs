@@ -1,0 +1,103 @@
+//! Datasets and their transformations: synthetic generators with the
+//! paper's Table 2 signatures, a LibSVM parser for real files, the
+//! MLWeaving bit-weaving quantizer, and the vertical/horizontal
+//! partitioners that implement model vs data parallelism.
+
+pub mod libsvm;
+pub mod partition;
+pub mod quantize;
+pub mod synth;
+
+/// A dense dataset with features normalized to `[0, 1)` (the bit-weaving
+//  fixed-point domain) — row-major `n x d`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Dataset {
+    pub n: usize,
+    pub d: usize,
+    /// Row-major features, `features[i*d + j]` in `[0, 1)`.
+    pub features: Vec<f32>,
+    /// One label per sample; domain depends on the loss.
+    pub labels: Vec<f32>,
+    /// Provenance tag for reports ("rcv1-like", "gisette", path, ...).
+    pub name: String,
+}
+
+impl Dataset {
+    pub fn new(n: usize, d: usize, features: Vec<f32>, labels: Vec<f32>, name: &str) -> Self {
+        assert_eq!(features.len(), n * d, "feature buffer shape");
+        assert_eq!(labels.len(), n, "label count");
+        Self { n, d, features, labels, name: name.to_string() }
+    }
+
+    /// Row `i` as a slice.
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.features[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Rows `[lo, hi)` as a contiguous slice.
+    pub fn rows(&self, lo: usize, hi: usize) -> &[f32] {
+        &self.features[lo * self.d..hi * self.d]
+    }
+
+    /// Number of whole mini-batches per epoch at batch size `b`
+    /// (the paper scans `S` in steps of `B`; a ragged tail is skipped,
+    /// matching hardware that processes full micro-batches only).
+    pub fn batches(&self, b: usize) -> usize {
+        self.n / b
+    }
+
+    /// Re-normalize features into `[0, 1)` via min-max (LibSVM inputs
+    /// arrive in arbitrary ranges).
+    pub fn normalize_unit(&mut self) {
+        let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+        for &v in &self.features {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        if !lo.is_finite() || !hi.is_finite() || hi <= lo {
+            return;
+        }
+        let scale = (1.0 - 1e-6) / (hi - lo);
+        for v in &mut self.features {
+            *v = (*v - lo) * scale;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset::new(2, 3, vec![0.1, 0.2, 0.3, 0.4, 0.5, 0.6], vec![1.0, -1.0], "tiny")
+    }
+
+    #[test]
+    fn row_access() {
+        let ds = tiny();
+        assert_eq!(ds.row(0), &[0.1, 0.2, 0.3]);
+        assert_eq!(ds.row(1), &[0.4, 0.5, 0.6]);
+        assert_eq!(ds.rows(0, 2).len(), 6);
+    }
+
+    #[test]
+    fn batch_count_drops_ragged_tail() {
+        let ds = Dataset::new(10, 1, vec![0.0; 10], vec![0.0; 10], "t");
+        assert_eq!(ds.batches(4), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "feature buffer shape")]
+    fn shape_mismatch_panics() {
+        Dataset::new(2, 3, vec![0.0; 5], vec![0.0; 2], "bad");
+    }
+
+    #[test]
+    fn normalize_unit_maps_to_unit_interval() {
+        let mut ds = Dataset::new(2, 2, vec![-5.0, 0.0, 5.0, 10.0], vec![0.0, 1.0], "t");
+        ds.normalize_unit();
+        assert!(ds.features.iter().all(|&v| (0.0..1.0).contains(&v)));
+        assert_eq!(ds.features[0], 0.0);
+        assert!((ds.features[3] - (1.0 - 1e-6)).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,175 @@
+//! Dataset/model partitioners.
+//!
+//! Model parallelism (paper Fig. 1b) **vertically** splits the feature
+//! dimension across M workers and then across each worker's N engines;
+//! data parallelism (Fig. 1a) **horizontally** splits samples. Vertical
+//! partitions are padded to a 32-feature lane multiple so every engine's
+//! slice packs cleanly into bit-planes.
+
+use super::Dataset;
+use crate::util::round_up;
+
+/// A contiguous feature range owned by one worker (or engine).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FeatureSlice {
+    /// First feature index (inclusive).
+    pub lo: usize,
+    /// Last feature index (exclusive).
+    pub hi: usize,
+    /// Lane-aligned width the slice is padded to for packing.
+    pub padded: usize,
+}
+
+impl FeatureSlice {
+    pub fn width(&self) -> usize {
+        self.hi - self.lo
+    }
+}
+
+/// Split `d` features into `m` near-equal contiguous slices, each padded
+/// to a multiple of `lane`.
+pub fn vertical(d: usize, m: usize, lane: usize) -> Vec<FeatureSlice> {
+    assert!(m > 0 && d >= m, "cannot split {d} features over {m} workers");
+    let base = d / m;
+    let extra = d % m;
+    let mut out = Vec::with_capacity(m);
+    let mut lo = 0;
+    for i in 0..m {
+        let w = base + usize::from(i < extra);
+        let slice = FeatureSlice { lo, hi: lo + w, padded: round_up(w.max(1), lane) };
+        lo += w;
+        out.push(slice);
+    }
+    debug_assert_eq!(lo, d);
+    out
+}
+
+/// Horizontal (sample) ranges for data parallelism: worker `i` of `m`
+/// gets samples `[out[i].0, out[i].1)`.
+pub fn horizontal(n: usize, m: usize) -> Vec<(usize, usize)> {
+    assert!(m > 0);
+    let base = n / m;
+    let extra = n % m;
+    let mut out = Vec::with_capacity(m);
+    let mut lo = 0;
+    for i in 0..m {
+        let w = base + usize::from(i < extra);
+        out.push((lo, lo + w));
+        lo += w;
+    }
+    out
+}
+
+/// A worker's vertical shard: its feature slice of every sample,
+/// materialized contiguously (the per-worker HBM image).
+#[derive(Debug, Clone)]
+pub struct VerticalShard {
+    pub slice: FeatureSlice,
+    /// Row-major `n x slice.width()`.
+    pub features: Vec<f32>,
+    /// Labels are replicated to every worker (needed for backward).
+    pub labels: Vec<f32>,
+    pub n: usize,
+}
+
+impl VerticalShard {
+    pub fn row(&self, i: usize) -> &[f32] {
+        let w = self.slice.width();
+        &self.features[i * w..(i + 1) * w]
+    }
+
+    pub fn rows(&self, lo: usize, hi: usize) -> &[f32] {
+        let w = self.slice.width();
+        &self.features[lo * w..hi * w]
+    }
+}
+
+/// Materialize worker `m_idx`'s vertical shard of `ds` under an `m`-way
+/// split.
+pub fn shard_vertical(ds: &Dataset, m: usize, m_idx: usize, lane: usize) -> VerticalShard {
+    let slices = vertical(ds.d, m, lane);
+    let slice = slices[m_idx];
+    let w = slice.width();
+    let mut features = Vec::with_capacity(ds.n * w);
+    for i in 0..ds.n {
+        features.extend_from_slice(&ds.row(i)[slice.lo..slice.hi]);
+    }
+    VerticalShard { slice, features, labels: ds.labels.clone(), n: ds.n }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+    use crate::glm::Loss;
+    use crate::util::prop;
+
+    #[test]
+    fn vertical_covers_exactly() {
+        let slices = vertical(100, 3, 32);
+        assert_eq!(slices.len(), 3);
+        assert_eq!(slices[0].lo, 0);
+        assert_eq!(slices.last().unwrap().hi, 100);
+        let total: usize = slices.iter().map(FeatureSlice::width).sum();
+        assert_eq!(total, 100);
+        // contiguous, non-overlapping
+        for w in slices.windows(2) {
+            assert_eq!(w[0].hi, w[1].lo);
+        }
+    }
+
+    #[test]
+    fn vertical_padding_is_lane_aligned() {
+        for s in vertical(100, 3, 32) {
+            assert_eq!(s.padded % 32, 0);
+            assert!(s.padded >= s.width());
+        }
+    }
+
+    #[test]
+    fn horizontal_covers_exactly() {
+        let parts = horizontal(10, 4);
+        assert_eq!(parts, vec![(0, 3), (3, 6), (6, 8), (8, 10)]);
+    }
+
+    #[test]
+    fn shard_rows_match_dataset_slices() {
+        let ds = synth::separable(16, 50, Loss::LogReg, 0.0, 3);
+        let shard = shard_vertical(&ds, 4, 1, 32);
+        for i in 0..ds.n {
+            assert_eq!(shard.row(i), &ds.row(i)[shard.slice.lo..shard.slice.hi]);
+        }
+        assert_eq!(shard.labels, ds.labels);
+    }
+
+    #[test]
+    fn partition_property_all_features_assigned_once() {
+        prop::check("vertical partition is exact cover", 100, |rng| {
+            let m = prop::small_size(rng, 1, 9);
+            let d = prop::small_size(rng, m.max(2), 500);
+            let slices = vertical(d, m, 32);
+            let mut covered = vec![false; d];
+            for s in &slices {
+                for item in covered.iter_mut().take(s.hi).skip(s.lo) {
+                    if *item {
+                        return Err(format!("feature covered twice in {slices:?}"));
+                    }
+                    *item = true;
+                }
+            }
+            if covered.iter().all(|&c| c) {
+                Ok(())
+            } else {
+                Err(format!("gap in cover {slices:?}"))
+            }
+        });
+    }
+
+    #[test]
+    fn widths_are_balanced() {
+        let slices = vertical(47_236, 8, 32); // rcv1 over 8 workers
+        let ws: Vec<usize> = slices.iter().map(FeatureSlice::width).collect();
+        let (min, max) = (ws.iter().min().unwrap(), ws.iter().max().unwrap());
+        assert!(max - min <= 1);
+    }
+}

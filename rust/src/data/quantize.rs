@@ -1,0 +1,198 @@
+//! MLWeaving quantization and bit-plane packing — the Rust twin of
+//! `python/compile/kernels/ref.py` (identical layout, tested equal).
+//!
+//! A feature in `[0, 1)` is quantized to `P` bits; samples are stored as
+//! `P` bit-planes of packed `u32` lanes (32 features each, LSB-first
+//! within a lane, plane 0 = MSB of the quantization level). This is both
+//! what the Pallas kernel consumes and what the paper's HBM layout
+//! provides the FPGA engines.
+
+pub const LANE: usize = 32;
+
+/// Quantize one feature to a `precision`-bit level.
+#[inline]
+pub fn quantize(v: f32, precision: u32) -> u32 {
+    let levels = (1u32 << precision) - 1;
+    let q = (v.clamp(0.0, 1.0 - 1e-7) * (1u32 << precision) as f32).floor() as u32;
+    q.min(levels)
+}
+
+/// Reconstruct the fixed-point value of a level.
+#[inline]
+pub fn dequantize(q: u32, precision: u32) -> f32 {
+    q as f32 / (1u64 << precision) as f32
+}
+
+/// Bit-plane packed micro-batch: the unit the engines and kernels consume.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedBatch {
+    /// Planes, `planes[((p * mb) + i) * w + k]`: plane p, sample i, lane k.
+    pub planes: Vec<u32>,
+    pub precision: u32,
+    pub mb: usize,
+    /// Padded feature count (multiple of 32).
+    pub d: usize,
+}
+
+impl PackedBatch {
+    pub fn lanes(&self) -> usize {
+        self.d / LANE
+    }
+
+    /// Word for (plane, sample, lane).
+    #[inline]
+    pub fn word(&self, p: usize, i: usize, k: usize) -> u32 {
+        self.planes[(p * self.mb + i) * self.lanes() + k]
+    }
+
+    /// Extract a single feature bit (testing / native engine).
+    #[inline]
+    pub fn bit(&self, p: usize, i: usize, j: usize) -> u32 {
+        (self.word(p, i, j / LANE) >> (j % LANE)) & 1
+    }
+}
+
+/// Quantize and pack `mb` rows (each `d_in` features, row-major slice) to
+/// bit-planes, zero-padding features up to `d_pad` (multiple of 32).
+/// Zero features quantize to level 0 — all-zero bits — so padding is
+/// inert for every kernel (tested in python and here).
+pub fn pack_rows(rows: &[f32], mb: usize, d_in: usize, d_pad: usize, precision: u32) -> PackedBatch {
+    assert_eq!(rows.len(), mb * d_in, "row buffer shape");
+    assert!(d_pad >= d_in && d_pad % LANE == 0, "d_pad {d_pad} (d_in {d_in})");
+    let w = d_pad / LANE;
+    let mut planes = vec![0u32; precision as usize * mb * w];
+    for i in 0..mb {
+        let row = &rows[i * d_in..(i + 1) * d_in];
+        for (j, &v) in row.iter().enumerate() {
+            let q = quantize(v, precision);
+            if q == 0 {
+                continue;
+            }
+            let (lane, bit) = (j / LANE, j % LANE);
+            for p in 0..precision as usize {
+                if (q >> (precision as usize - 1 - p)) & 1 == 1 {
+                    planes[(p * mb + i) * w + lane] |= 1 << bit;
+                }
+            }
+        }
+    }
+    PackedBatch { planes, precision, mb, d: d_pad }
+}
+
+/// Dequantized dense rows (what the backward kernel consumes), padded to
+/// `d_pad` with zeros.
+pub fn dequantized_rows(rows: &[f32], mb: usize, d_in: usize, d_pad: usize, precision: u32) -> Vec<f32> {
+    assert_eq!(rows.len(), mb * d_in);
+    assert!(d_pad >= d_in);
+    let mut out = vec![0.0f32; mb * d_pad];
+    for i in 0..mb {
+        for j in 0..d_in {
+            out[i * d_pad + j] = dequantize(quantize(rows[i * d_in + j], precision), precision);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn quantize_error_bound() {
+        let mut rng = Pcg32::seeded(0);
+        for _ in 0..10_000 {
+            let v = rng.f32();
+            let err = (dequantize(quantize(v, 4), 4) - v).abs();
+            assert!(err <= 1.0 / 16.0 + 1e-6, "v={v} err={err}");
+        }
+    }
+
+    #[test]
+    fn quantize_edges() {
+        assert_eq!(quantize(0.0, 4), 0);
+        assert_eq!(quantize(0.999999, 4), 15);
+        assert_eq!(quantize(1.5, 4), 15); // clamped
+        assert_eq!(quantize(-0.5, 4), 0);
+        assert_eq!(quantize(0.5, 1), 1);
+    }
+
+    #[test]
+    fn pack_bit_extraction_matches_levels() {
+        let rows = vec![0.9375, 0.5, 0.0625, 0.0]; // levels 15, 8, 1, 0
+        let pb = pack_rows(&rows, 1, 4, 32, 4);
+        let levels = [15u32, 8, 1, 0];
+        for (j, &q) in levels.iter().enumerate() {
+            for p in 0..4 {
+                assert_eq!(pb.bit(p, 0, j), (q >> (3 - p)) & 1, "j={j} p={p}");
+            }
+        }
+        // padded features are all-zero bits
+        for j in 4..32 {
+            for p in 0..4 {
+                assert_eq!(pb.bit(p, 0, j), 0);
+            }
+        }
+    }
+
+    #[test]
+    fn packed_layout_matches_python_convention() {
+        // feature j lives in word j/32, bit j%32 — mirror ref.py's shifts
+        let mut rows = vec![0.0f32; 64];
+        rows[37] = 0.9375; // level 15: bit set in every plane
+        let pb = pack_rows(&rows, 1, 64, 64, 4);
+        for p in 0..4 {
+            assert_eq!(pb.word(p, 0, 1), 1 << 5, "plane {p}"); // 37 = 32+5
+            assert_eq!(pb.word(p, 0, 0), 0);
+        }
+    }
+
+    #[test]
+    fn reconstruction_through_planes_property() {
+        prop::check("plane reconstruction == dequantize", 50, |rng| {
+            let mb = prop::small_size(rng, 1, 8);
+            let d = prop::small_size(rng, 1, 40);
+            let d_pad = d.div_ceil(LANE) * LANE;
+            let rows: Vec<f32> = (0..mb * d).map(|_| rng.f32()).collect();
+            let pb = pack_rows(&rows, mb, d, d_pad, 4);
+            for i in 0..mb {
+                for j in 0..d {
+                    let mut v = 0.0f32;
+                    for p in 0..4 {
+                        v += pb.bit(p, i, j) as f32 * 0.5f32.powi(p as i32 + 1);
+                    }
+                    let want = dequantize(quantize(rows[i * d + j], 4), 4);
+                    if (v - want).abs() > 1e-6 {
+                        return Err(format!("i={i} j={j}: {v} != {want}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dequantized_rows_pads_with_zeros() {
+        let rows = vec![0.5f32, 0.25];
+        let dq = dequantized_rows(&rows, 1, 2, 8, 4);
+        assert_eq!(dq.len(), 8);
+        assert_eq!(dq[0], 0.5);
+        assert_eq!(dq[1], 0.25);
+        assert!(dq[2..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn any_precision_pack() {
+        for precision in [1u32, 2, 4, 8] {
+            let rows: Vec<f32> = (0..32).map(|i| i as f32 / 32.0).collect();
+            let pb = pack_rows(&rows, 1, 32, 32, precision);
+            assert_eq!(pb.planes.len(), precision as usize);
+            // max level has all planes set for the largest feature
+            let q = quantize(rows[31], precision);
+            for p in 0..precision as usize {
+                assert_eq!(pb.bit(p, 0, 31), (q >> (precision as usize - 1 - p)) & 1);
+            }
+        }
+    }
+}

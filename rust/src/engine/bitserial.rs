@@ -1,0 +1,199 @@
+//! Native bit-serial datapath — the arithmetic of paper Fig. 5 / §4.1.3.
+//!
+//! Forward: each bank holds one sample; 64 bit-serial multipliers consume
+//! one bit of 64 features per cycle. Arithmetically that is
+//!
+//! ```text
+//! PA = sum_p 2^{-(p+1)} * sum_{j: bit_p[j]=1} x[j]
+//! ```
+//!
+//! which we evaluate lane-by-lane with set-bit iteration — the software
+//! twin of the FPGA's masked adder tree, and the same specification the
+//! Pallas kernel satisfies (`python/compile/kernels/bitserial.py`).
+//!
+//! Backward: the banks replay sample bits from the FIFO against the
+//! per-sample `scale`, accumulating 64 gradient lanes per cycle; the
+//! dequantized form is numerically identical, so we use it directly.
+
+use crate::data::quantize::{PackedBatch, LANE};
+use crate::glm::Loss;
+
+/// Forward pass over a packed micro-batch: PA[k] = A[k] . x.
+///
+/// Two strategies, picked per lane by population count (§Perf L1):
+/// dense words use a branchless unconditional multiply-accumulate that
+/// the compiler auto-vectorizes (the software analogue of the FPGA's
+/// always-running 64 multipliers); sparse words fall back to set-bit
+/// iteration, which wins when most multipliers would be fed zeros.
+pub fn forward(pb: &PackedBatch, x: &[f32]) -> Vec<f32> {
+    assert_eq!(x.len(), pb.d, "model slice width");
+    let w = pb.lanes();
+    let mut pa = vec![0.0f32; pb.mb];
+    for (i, pa_i) in pa.iter_mut().enumerate() {
+        let mut acc = 0.0f32;
+        for p in 0..pb.precision as usize {
+            let mut plane_sum = 0.0f32;
+            let base = (p * pb.mb + i) * w;
+            // Row-major streaming over the plane words (the HBM access
+            // pattern of the FPGA), set-bit iteration per word. The perf
+            // pass tried branchless 32-lane MACs and lane-major loop
+            // orders; on this (single-core, SSE-baseline) substrate both
+            // regressed — set-bit iteration is the practical roofline
+            // here (see EXPERIMENTS.md §Perf).
+            for k in 0..w {
+                let mut word = pb.planes[base + k];
+                let xoff = k * LANE;
+                while word != 0 {
+                    let j = word.trailing_zeros() as usize;
+                    plane_sum += x[xoff + j];
+                    word &= word - 1;
+                }
+            }
+            acc += plane_sum * 0.5f32.powi(p as i32 + 1);
+        }
+        *pa_i = acc;
+    }
+    pa
+}
+
+/// Backward pass: g += sum_k scale_k * A[k, :], scale_k = lr*df(FA_k, y_k).
+pub fn backward_acc(a_dq: &[f32], mb: usize, fa: &[f32], y: &[f32], g: &mut [f32], lr: f32, loss: Loss) {
+    let d = g.len();
+    assert_eq!(a_dq.len(), mb * d, "dequantized rows shape");
+    assert!(fa.len() >= mb && y.len() >= mb);
+    for k in 0..mb {
+        let scale = lr * loss.df(fa[k], y[k]);
+        if scale == 0.0 {
+            continue; // hinge loss outside margin: zero row contribution
+        }
+        let row = &a_dq[k * d..(k + 1) * d];
+        for (gj, &aj) in g.iter_mut().zip(row) {
+            *gj += scale * aj;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::quantize::{dequantize, dequantized_rows, pack_rows, quantize};
+    use crate::util::prop;
+
+    /// Dense ground truth on the *quantized* values.
+    fn dense_forward(rows: &[f32], mb: usize, d: usize, x: &[f32], precision: u32) -> Vec<f32> {
+        (0..mb)
+            .map(|i| {
+                (0..d)
+                    .map(|j| dequantize(quantize(rows[i * d + j], precision), precision) * x[j])
+                    .sum()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn forward_matches_dense_ground_truth() {
+        let mut rng = crate::util::rng::Pcg32::seeded(0);
+        let (mb, d) = (8, 256);
+        let rows: Vec<f32> = (0..mb * d).map(|_| rng.f32()).collect();
+        let x: Vec<f32> = (0..d).map(|_| rng.gauss() as f32).collect();
+        let pb = pack_rows(&rows, mb, d, d, 4);
+        let got = forward(&pb, &x);
+        let want = dense_forward(&rows, mb, d, &x, 4);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-3, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn forward_zero_model_is_zero() {
+        let rows = vec![0.7f32; 4 * 64];
+        let pb = pack_rows(&rows, 4, 64, 64, 4);
+        assert_eq!(forward(&pb, &vec![0.0; 64]), vec![0.0; 4]);
+    }
+
+    #[test]
+    fn forward_padding_is_inert() {
+        let mut rng = crate::util::rng::Pcg32::seeded(1);
+        let (mb, d, d_pad) = (4, 40, 64);
+        let rows: Vec<f32> = (0..mb * d).map(|_| rng.f32()).collect();
+        let mut x = vec![0.0f32; d_pad];
+        for v in x.iter_mut() {
+            *v = rng.gauss() as f32; // garbage beyond d too
+        }
+        let pb = pack_rows(&rows, mb, d, d_pad, 4);
+        let got = forward(&pb, &x);
+        let want = dense_forward(&rows, mb, d, &x[..d], 4);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn backward_accumulates_rank_one_updates() {
+        let (mb, d) = (2, 4);
+        let a = vec![
+            1.0, 0.0, 0.5, 0.25, // sample 0
+            0.0, 1.0, 0.5, 0.75, // sample 1
+        ];
+        let mut g = vec![0.0f32; d];
+        // linreg: scale_k = lr * (fa - y)
+        backward_acc(&a, mb, &[2.0, 3.0], &[1.0, 1.0], &mut g, 0.5, Loss::LinReg);
+        // scale = [0.5, 1.0]
+        let want = [0.5 * 1.0, 1.0 * 1.0, 0.5 * 0.5 + 1.0 * 0.5, 0.5 * 0.25 + 1.0 * 0.75];
+        for (gj, wj) in g.iter().zip(&want) {
+            assert!((gj - wj).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn backward_svm_outside_margin_is_noop() {
+        let mut g = vec![0.0f32; 3];
+        backward_acc(&[1.0, 1.0, 1.0], 1, &[5.0], &[1.0], &mut g, 0.1, Loss::Svm);
+        assert_eq!(g, vec![0.0; 3]);
+    }
+
+    #[test]
+    fn forward_property_vs_dense() {
+        prop::check("bit-serial forward == dense quantized dot", 60, |rng| {
+            let mb = prop::small_size(rng, 1, 8);
+            let d = prop::small_size(rng, 1, 200);
+            let d_pad = d.div_ceil(LANE) * LANE;
+            let precision = [1u32, 2, 4, 8][rng.below_usize(4)];
+            let rows: Vec<f32> = (0..mb * d).map(|_| rng.f32()).collect();
+            let x: Vec<f32> = (0..d_pad).map(|_| rng.gauss() as f32).collect();
+            let pb = pack_rows(&rows, mb, d, d_pad, precision);
+            let got = forward(&pb, &x);
+            let want = dense_forward(&rows, mb, d, &x[..d], precision);
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                if (g - w).abs() > 2e-3 * (1.0 + w.abs()) {
+                    return Err(format!("sample {i}: {g} vs {w} (P={precision}, d={d})"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn backward_matches_explicit_loop_property() {
+        prop::check("backward == explicit rank-1 sum", 40, |rng| {
+            let mb = prop::small_size(rng, 1, 8);
+            let d = prop::small_size(rng, 1, 100);
+            let rows: Vec<f32> = (0..mb * d).map(|_| rng.f32()).collect();
+            let dq = dequantized_rows(&rows, mb, d, d, 4);
+            let fa: Vec<f32> = (0..mb).map(|_| rng.gauss() as f32).collect();
+            let y: Vec<f32> = (0..mb).map(|_| if rng.chance(0.5) { 1.0 } else { 0.0 }).collect();
+            let mut g = vec![0.1f32; d];
+            backward_acc(&dq, mb, &fa, &y, &mut g, 0.3, Loss::LogReg);
+            for j in 0..d {
+                let mut want = 0.1f32;
+                for k in 0..mb {
+                    want += 0.3 * Loss::LogReg.df(fa[k], y[k]) * dq[k * d + j];
+                }
+                if (g[j] - want).abs() > 1e-4 {
+                    return Err(format!("j={j}: {} vs {want}", g[j]));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,107 @@
+//! The FPGA worker's compute fabric, emulated natively.
+//!
+//! A worker instantiates `N` engines; each engine owns a contiguous
+//! slice of the worker's model partition and processes a micro-batch of
+//! `MB = 8` samples through 8 banks (paper Fig. 5). [`bitserial`]
+//! implements the arithmetic of that datapath exactly — the same
+//! plane-scaled binary dot products as the Pallas kernel, so the two
+//! backends cross-validate.
+//!
+//! The [`Compute`] trait abstracts the backend: [`NativeCompute`] here,
+//! `runtime::PjrtCompute` for the AOT artifacts.
+
+pub mod bitserial;
+
+use crate::data::quantize::PackedBatch;
+use crate::glm::Loss;
+
+/// A compute backend executing the L1/L2 math for one worker.
+///
+/// `forward` consumes a *bit-plane packed* micro-batch (what the FPGA
+/// reads from HBM / the TPU kernel reads from HBM); `backward_acc`
+/// consumes the dequantized rows (the FPGA replays bits from its FIFO —
+/// numerically identical).
+pub trait Compute {
+    /// PA[k] = A[k, :] . x for the micro-batch (paper Alg. 1 lines 18-21).
+    fn forward(&mut self, planes: &PackedBatch, x: &[f32]) -> Vec<f32>;
+
+    /// g += sum_k lr * df(FA[k], y[k]) * A[k, :] (Alg. 1 lines 25-29).
+    #[allow(clippy::too_many_arguments)]
+    fn backward_acc(
+        &mut self,
+        a_dq: &[f32],
+        mb: usize,
+        fa: &[f32],
+        y: &[f32],
+        g: &mut [f32],
+        lr: f32,
+        loss: Loss,
+    );
+
+    /// x -= g / B (Alg. 1 line 31).
+    fn update(&mut self, x: &mut [f32], g: &[f32], inv_b: f32) {
+        for (xi, gi) in x.iter_mut().zip(g) {
+            *xi -= gi * inv_b;
+        }
+    }
+
+    /// Summed micro-batch loss from full activations.
+    fn loss_sum(&mut self, fa: &[f32], y: &[f32], loss: Loss) -> f32 {
+        fa.iter().zip(y).map(|(&f, &yy)| loss.loss(f, yy)).sum()
+    }
+}
+
+/// Pure-Rust backend: the bit-serial datapath emulation.
+#[derive(Debug, Default, Clone)]
+pub struct NativeCompute;
+
+impl Compute for NativeCompute {
+    fn forward(&mut self, planes: &PackedBatch, x: &[f32]) -> Vec<f32> {
+        bitserial::forward(planes, x)
+    }
+
+    fn backward_acc(
+        &mut self,
+        a_dq: &[f32],
+        mb: usize,
+        fa: &[f32],
+        y: &[f32],
+        g: &mut [f32],
+        lr: f32,
+        loss: Loss,
+    ) {
+        bitserial::backward_acc(a_dq, mb, fa, y, g, lr, loss);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::quantize::pack_rows;
+
+    #[test]
+    fn default_update_applies_scaled_gradient() {
+        let mut c = NativeCompute;
+        let mut x = vec![1.0f32, 2.0];
+        c.update(&mut x, &[4.0, 8.0], 0.25);
+        assert_eq!(x, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn default_loss_sum_matches_glm() {
+        let mut c = NativeCompute;
+        let s = c.loss_sum(&[0.0, 0.0], &[1.0, 0.0], Loss::LogReg);
+        assert!((s - 2.0 * std::f32::consts::LN_2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn forward_trait_delegates_to_bitserial() {
+        let mut c = NativeCompute;
+        let rows = vec![0.5f32; 32];
+        let pb = pack_rows(&rows, 1, 32, 32, 4);
+        let x = vec![1.0f32; 32];
+        let pa = c.forward(&pb, &x);
+        assert_eq!(pa.len(), 1);
+        assert!((pa[0] - 16.0).abs() < 1e-4); // 32 * 0.5
+    }
+}

@@ -1,0 +1,153 @@
+//! Generalized linear models: the three losses the paper trains
+//! (linear regression, logistic regression, SVM/hinge) with their
+//! gradients — the Rust twins of `python/compile/kernels/ref.py`.
+//!
+//! These run on the *native* compute path (the bit-serial engine
+//! emulation) and for convergence metrics; the accelerator path executes
+//! the same math from the AOT artifacts.
+
+use std::fmt;
+use std::str::FromStr;
+
+/// The GLM family member being trained.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Loss {
+    /// Squared loss; labels are real-valued.
+    LinReg,
+    /// Logistic loss; labels in {0, 1}.
+    LogReg,
+    /// Hinge loss; labels in {-1, +1}.
+    Svm,
+}
+
+impl Loss {
+    pub const ALL: [Loss; 3] = [Loss::LinReg, Loss::LogReg, Loss::Svm];
+
+    /// Artifact-name fragment (matches `python/compile/aot.py`).
+    pub fn tag(self) -> &'static str {
+        match self {
+            Loss::LinReg => "linreg",
+            Loss::LogReg => "logreg",
+            Loss::Svm => "svm",
+        }
+    }
+
+    /// dL/d(activation) — paper Alg. 1 line 27's `df`.
+    pub fn df(self, fa: f32, y: f32) -> f32 {
+        match self {
+            Loss::LinReg => fa - y,
+            Loss::LogReg => sigmoid(fa) - y,
+            Loss::Svm => {
+                if y * fa < 1.0 {
+                    -y
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+
+    /// Per-sample training loss (convergence metric for Figs. 14/15).
+    pub fn loss(self, fa: f32, y: f32) -> f32 {
+        match self {
+            Loss::LinReg => 0.5 * (fa - y) * (fa - y),
+            Loss::LogReg => {
+                // Stable BCE-with-logits, matches ref.py.
+                fa.max(0.0) - fa * y + (-fa.abs()).exp().ln_1p()
+            }
+            Loss::Svm => (1.0 - y * fa).max(0.0),
+        }
+    }
+}
+
+impl fmt::Display for Loss {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.tag())
+    }
+}
+
+impl FromStr for Loss {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "linreg" | "linear" => Ok(Loss::LinReg),
+            "logreg" | "logistic" => Ok(Loss::LogReg),
+            "svm" | "hinge" => Ok(Loss::Svm),
+            other => Err(format!("unknown loss {other:?} (linreg|logreg|svm)")),
+        }
+    }
+}
+
+/// Numerically-stable sigmoid, matching `ref.stable_sigmoid` (clamped to
+/// ±60 where the result saturates in f32 anyway).
+pub fn sigmoid(z: f32) -> f32 {
+    let zc = z.clamp(-60.0, 60.0);
+    if zc >= 0.0 {
+        1.0 / (1.0 + (-zc).exp())
+    } else {
+        let e = zc.exp();
+        e / (1.0 + e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn df_linreg_is_residual() {
+        assert_eq!(Loss::LinReg.df(3.0, 1.0), 2.0);
+    }
+
+    #[test]
+    fn df_logreg_at_zero() {
+        assert!((Loss::LogReg.df(0.0, 0.0) - 0.5).abs() < 1e-6);
+        assert!((Loss::LogReg.df(0.0, 1.0) + 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn df_svm_margin() {
+        assert_eq!(Loss::Svm.df(0.5, 1.0), -1.0); // inside margin
+        assert_eq!(Loss::Svm.df(2.0, 1.0), 0.0); // satisfied
+        assert_eq!(Loss::Svm.df(-2.0, -1.0), 0.0);
+        assert_eq!(Loss::Svm.df(0.9, -1.0), 1.0);
+    }
+
+    #[test]
+    fn loss_logreg_at_zero_is_ln2() {
+        assert!((Loss::LogReg.loss(0.0, 1.0) - std::f32::consts::LN_2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn loss_svm_satisfied_is_zero() {
+        assert_eq!(Loss::Svm.loss(2.0, 1.0), 0.0);
+        assert!((Loss::Svm.loss(0.0, 1.0) - 1.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn sigmoid_stability_extremes() {
+        assert!(sigmoid(-1e6).is_finite());
+        assert!(sigmoid(1e6).is_finite());
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-7);
+        assert!(sigmoid(60.0) > 0.999_999);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for l in Loss::ALL {
+            assert_eq!(l.tag().parse::<Loss>().unwrap(), l);
+        }
+        assert!("bogus".parse::<Loss>().is_err());
+    }
+
+    #[test]
+    fn logreg_loss_gradient_consistency() {
+        // numeric gradient of loss() matches df()
+        for &(fa, y) in &[(0.3f32, 1.0f32), (-1.2, 0.0), (2.5, 1.0)] {
+            let eps = 1e-3;
+            let num = (Loss::LogReg.loss(fa + eps, y) - Loss::LogReg.loss(fa - eps, y)) / (2.0 * eps);
+            assert!((num - Loss::LogReg.df(fa, y)).abs() < 1e-3, "fa={fa} y={y}");
+        }
+    }
+}

@@ -1,0 +1,43 @@
+//! # P4SGD — programmable-switch-enhanced model-parallel GLM training
+//!
+//! A full-system reproduction of *"P4SGD: Programmable Switch Enhanced
+//! Model-Parallel Training on Generalized Linear Models on Distributed
+//! FPGAs"* (Huang et al., 2023) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordination contribution: the in-switch
+//!   aggregation protocol (paper Algorithms 2 & 3), the FCB micro-batch
+//!   pipeline, the lock-step model-parallel trainer, and every substrate
+//!   the paper's evaluation depends on (unreliable transport, baselines,
+//!   timing/energy/resource models).
+//! * **L2 (python/compile/model.py)** — the GLM forward/backward graph in
+//!   JAX, AOT-lowered once to HLO text artifacts.
+//! * **L1 (python/compile/kernels/)** — the bit-serial (bit-weaving)
+//!   Pallas kernels, the TPU re-thinking of the paper's FPGA hot spot.
+//!
+//! Python never runs on the training path: [`runtime`] loads the HLO
+//! artifacts via the PJRT C API and executes them from Rust.
+//!
+//! See `DESIGN.md` for the substitution table (FPGA/Tofino hardware →
+//! simulated substrates) and the per-experiment index.
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod energy;
+pub mod engine;
+pub mod fpga;
+pub mod glm;
+pub mod metrics;
+pub mod net;
+pub mod pipeline;
+pub mod protocol;
+pub mod repro;
+pub mod runtime;
+pub mod switch;
+pub mod timing;
+pub mod util;
+pub mod worker;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

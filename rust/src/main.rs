@@ -1,0 +1,177 @@
+//! `p4sgd` — the P4SGD reproduction CLI.
+//!
+//! Subcommands:
+//!
+//! * `repro <exp|all>` — regenerate a paper table/figure (see DESIGN.md).
+//! * `train` — run the distributed trainer on a synthetic dataset.
+//! * `agg-bench` — measure AllReduce through the real protocol stack.
+//! * `info` — artifact/runtime diagnostics.
+
+use anyhow::{bail, Result};
+use p4sgd::config::{Backend, SystemConfig};
+use p4sgd::coordinator::{dp, mp};
+use p4sgd::data::synth;
+use p4sgd::engine::{Compute, NativeCompute};
+use p4sgd::glm::Loss;
+use p4sgd::metrics::fmt_secs;
+use p4sgd::runtime::PjrtCompute;
+use p4sgd::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("repro") => {
+            let which = args.positional.first().map(String::as_str).unwrap_or("all");
+            p4sgd::repro::run(which)
+        }
+        Some("train") => train(args),
+        Some("agg-bench") => agg_bench(args),
+        Some("info") => info(),
+        Some(other) => bail!("unknown subcommand {other:?}"),
+        None => {
+            println!("usage: p4sgd <repro|train|agg-bench|info> [options]");
+            println!("  repro <table1..table4|fig8..fig15|all>");
+            println!("  train [--mode mp|dp] [--backend native|pjrt] [--workers M] [--engines N]");
+            println!("        [--loss linreg|logreg|svm] [--batch B] [--epochs E] [--dataset NAME]");
+            println!("        [--samples N] [--features D] [--drop P]");
+            println!("  agg-bench [--workers M] [--ops N] [--payload K]");
+            Ok(())
+        }
+    }
+}
+
+fn train(args: &Args) -> Result<()> {
+    let mut cfg = SystemConfig::default();
+    cfg.cluster.workers = args.get_or("workers", 4usize);
+    cfg.cluster.engines = args.get_or("engines", 4usize);
+    cfg.cluster.slots = args.get_or("slots", 16usize);
+    cfg.train.loss = args.get_or("loss", Loss::LogReg);
+    cfg.train.lr = args.get_or("lr", 0.5f32);
+    cfg.train.batch = args.get_or("batch", 64usize);
+    cfg.train.micro_batch = args.get_or("micro-batch", 8usize);
+    cfg.train.epochs = args.get_or("epochs", 8usize);
+    cfg.net.drop_prob = args.get_or("drop", 0.0f64);
+    cfg.net.latency_ns = args.get_or("latency-ns", 0u64);
+    cfg.net.timeout_us = args.get_or("timeout-us", 3000u64);
+    cfg.validate()?;
+
+    let backend: Backend = args.get_or("backend", Backend::Native);
+    let n = args.get_or("samples", 1024usize);
+    let d = args.get_or("features", 2048usize);
+    let ds = match args.get("dataset") {
+        Some(name) => synth::table2_like(name, n, d, cfg.train.loss, 7),
+        None => synth::separable(n, d, cfg.train.loss, 0.1, 7),
+    };
+    println!(
+        "training {} ({} samples x {} features), loss={}, {} workers x {} engines, backend={backend:?}",
+        ds.name, ds.n, ds.d, cfg.train.loss, cfg.cluster.workers, cfg.cluster.engines
+    );
+
+    let make: Box<dyn Fn(usize) -> Box<dyn Compute> + Sync> = match backend {
+        Backend::Native => Box::new(|_| Box::new(NativeCompute)),
+        Backend::Pjrt => {
+            Box::new(|_| Box::new(PjrtCompute::load_default().expect("pjrt backend")))
+        }
+    };
+    let mode = args.get_or("mode", "mp".to_string());
+    let report = match mode.as_str() {
+        "mp" => mp::train_mp(&cfg, &ds, make.as_ref()),
+        "dp" => dp::train_dp(&cfg, &ds, make.as_ref()),
+        other => bail!("unknown mode {other:?} (mp|dp)"),
+    };
+    for (e, l) in report.loss_per_epoch.iter().enumerate() {
+        println!("epoch {e:>3}: loss/sample {:.5}", l / ds.n as f32);
+    }
+    println!(
+        "wall {} | pa_sent {} retransmits {} | pipeline overlapped {} drained {}",
+        fmt_secs(report.wall.as_secs_f64()),
+        report.agg.pa_sent,
+        report.agg.retransmits,
+        report.pipeline.overlapped,
+        report.pipeline.drained,
+    );
+    Ok(())
+}
+
+fn agg_bench(args: &Args) -> Result<()> {
+    use p4sgd::config::NetConfig;
+    use p4sgd::net::sim::SimNet;
+    use p4sgd::net::switch_node;
+    use p4sgd::switch::p4::P4Switch;
+    use p4sgd::switch::runner;
+    use p4sgd::worker::AggClient;
+    use std::time::{Duration, Instant};
+
+    let workers = args.get_or("workers", 8usize);
+    let ops = args.get_or("ops", 5_000usize);
+    let payload = args.get_or("payload", 8usize);
+    let net = NetConfig { latency_ns: 0, jitter_ns: 0, timeout_us: 5000, ..NetConfig::default() };
+    let mut eps = SimNet::build(workers + 1, &net);
+    let server = runner::spawn(
+        P4Switch::new(p4sgd::worker::agg_client::SEQ_SPACE, workers, payload),
+        eps.pop().unwrap(),
+    );
+    let mut hist = p4sgd::metrics::LatencyHist::new();
+    std::thread::scope(|scope| {
+        let mut eps_iter = eps.into_iter().enumerate();
+        let (_, ep0) = eps_iter.next().expect("worker 0 endpoint");
+        // spawn peers first, then drive worker 0 on this thread
+        for (w, ep) in eps_iter {
+            scope.spawn(move || {
+                let mut agg =
+                    AggClient::new(ep, switch_node(workers), w, 64, Duration::from_millis(5));
+                let pa = vec![1i32; payload];
+                for _ in 0..ops {
+                    let _ = agg.allreduce(&pa);
+                }
+            });
+        }
+        let mut agg = AggClient::new(ep0, switch_node(workers), 0, 64, Duration::from_millis(5));
+        let pa = vec![1i32; payload];
+        for _ in 0..ops {
+            let t = Instant::now();
+            let _ = agg.allreduce(&pa);
+            hist.push_ns(t.elapsed().as_nanos() as f64);
+        }
+    });
+    server.shutdown();
+    println!(
+        "in-process AllReduce, {workers} workers, {payload}x32-bit payload, {ops} ops: {}",
+        hist.whiskers()
+    );
+    Ok(())
+}
+
+fn info() -> Result<()> {
+    println!("p4sgd reproduction of Huang et al., 'P4SGD' (2023)");
+    let dir = p4sgd::runtime::default_dir();
+    match p4sgd::runtime::artifacts::Manifest::load(&dir) {
+        Ok(m) => {
+            println!("artifacts: {} entries under {dir:?}", m.entries.len());
+            for kind in [
+                p4sgd::runtime::artifacts::Kind::Fwd,
+                p4sgd::runtime::artifacts::Kind::Bwd,
+                p4sgd::runtime::artifacts::Kind::Step,
+            ] {
+                println!("  {kind:?} widths: {:?}", m.widths(kind));
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    match xla::PjRtClient::cpu() {
+        Ok(c) => println!("pjrt: {} ({} devices)", c.platform_name(), c.device_count()),
+        Err(e) => println!("pjrt: unavailable ({e})"),
+    }
+    Ok(())
+}

@@ -1,0 +1,190 @@
+//! Report plumbing: latency collections with paper-style whiskers,
+//! loss curves, and aligned-table / CSV rendering shared by the repro
+//! harness and the benches.
+
+use crate::util::stats::{Samples, Summary};
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Latency samples in nanoseconds with Fig. 8-style reporting.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyHist {
+    samples: Samples,
+}
+
+impl LatencyHist {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push_ns(&mut self, ns: f64) {
+        self.samples.push(ns);
+    }
+
+    pub fn push_secs(&mut self, s: f64) {
+        self.samples.push(s * 1e9);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn summary(&self) -> Summary {
+        self.samples.summary()
+    }
+
+    /// "mean 1.20us [p1 1.05us, p99 1.80us]" — the Fig. 8 whisker line.
+    pub fn whiskers(&self) -> String {
+        let s = self.summary();
+        format!(
+            "mean {} [p1 {}, p50 {}, p99 {}]",
+            crate::util::fmt_ns(s.mean as u64),
+            crate::util::fmt_ns(s.p1 as u64),
+            crate::util::fmt_ns(s.p50 as u64),
+            crate::util::fmt_ns(s.p99 as u64),
+        )
+    }
+}
+
+/// An aligned plain-text table (markdown-flavoured) for harness output.
+#[derive(Debug, Clone)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        Self { header: header.into_iter().map(Into::into).collect(), rows: Vec::new() }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.header.len(), "column count");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let cols = self.header.len();
+        let mut width = vec![0usize; cols];
+        for c in 0..cols {
+            width[c] = self.header[c].len();
+            for r in &self.rows {
+                width[c] = width[c].max(r[c].len());
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], out: &mut String| {
+            out.push('|');
+            for (c, cell) in cells.iter().enumerate() {
+                let _ = write!(out, " {:<w$} |", cell, w = width[c]);
+            }
+            out.push('\n');
+        };
+        line(&self.header, &mut out);
+        out.push('|');
+        for w in &width {
+            let _ = write!(out, "{:-<w$}|", "", w = w + 2);
+        }
+        out.push('\n');
+        for r in &self.rows {
+            line(r, &mut out);
+        }
+        out
+    }
+
+    /// CSV form for results/ files.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        out.push_str(&self.header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write the CSV under `results/` (created on demand).
+    pub fn save_csv(&self, name: &str) -> std::io::Result<std::path::PathBuf> {
+        let dir = Path::new("results");
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{name}.csv"));
+        std::fs::write(&path, self.to_csv())?;
+        Ok(path)
+    }
+}
+
+/// Pretty seconds for report cells.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.2}us", s * 1e6)
+    } else {
+        format!("{:.0}ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn whiskers_format() {
+        let mut h = LatencyHist::new();
+        for i in 0..100 {
+            h.push_ns(1000.0 + i as f64);
+        }
+        let w = h.whiskers();
+        assert!(w.contains("mean"), "{w}");
+        assert!(w.contains("p99"), "{w}");
+    }
+
+    #[test]
+    fn table_render_aligns() {
+        let mut t = Table::new(vec!["a", "bcd"]);
+        t.row(vec!["xx", "1"]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[0].len(), lines[2].len());
+    }
+
+    #[test]
+    #[should_panic(expected = "column count")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(vec!["a"]);
+        t.row(vec!["1", "2"]);
+    }
+
+    #[test]
+    fn csv_escapes_commas() {
+        let mut t = Table::new(vec!["name", "v"]);
+        t.row(vec!["a,b", "1"]);
+        assert!(t.to_csv().contains("\"a,b\""));
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert_eq!(fmt_secs(2.5), "2.50s");
+        assert_eq!(fmt_secs(0.0025), "2.50ms");
+        assert_eq!(fmt_secs(2.5e-6), "2.50us");
+        assert_eq!(fmt_secs(2.5e-8), "25ns");
+    }
+}

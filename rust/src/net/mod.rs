@@ -1,0 +1,44 @@
+//! Transports: how workers, the switch, and baseline servers exchange
+//! [`Packet`]s.
+//!
+//! Two implementations share one [`Transport`] trait:
+//!
+//! * [`sim::SimNet`] — an in-process fabric with configurable loss,
+//!   duplication, reordering, and latency. This is the default substrate:
+//!   it makes every retransmission path in Algorithms 2/3 actually
+//!   execute, deterministically per seed.
+//! * [`udp::UdpNet`] — real localhost UDP datagrams (one socket per
+//!   node) for end-to-end realism; loss comes from the kernel (rare), so
+//!   protocol fault paths are exercised via `SimNet`.
+
+pub mod sim;
+pub mod udp;
+
+use crate::protocol::Packet;
+use std::time::Duration;
+
+/// Node address. Workers are `0..M`; the switch/server is `M` by
+/// convention (see [`switch_node`]).
+pub type NodeId = usize;
+
+/// Conventional switch node id for an `m`-worker cluster.
+pub fn switch_node(workers: usize) -> NodeId {
+    workers
+}
+
+/// A bidirectional packet endpoint bound to one node.
+pub trait Transport: Send {
+    /// Fire-and-forget send (unreliable by design).
+    fn send(&mut self, dst: NodeId, pkt: &Packet);
+
+    /// Receive the next packet, waiting up to `timeout`.
+    fn recv_timeout(&mut self, timeout: Duration) -> Option<(NodeId, Packet)>;
+
+    /// Non-blocking receive.
+    fn try_recv(&mut self) -> Option<(NodeId, Packet)> {
+        self.recv_timeout(Duration::ZERO)
+    }
+
+    /// This endpoint's node id.
+    fn node(&self) -> NodeId;
+}

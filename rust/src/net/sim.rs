@@ -1,0 +1,306 @@
+//! In-process simulated network fabric.
+//!
+//! All endpoints feed one fabric thread over an mpsc channel; the fabric
+//! applies per-frame fault sampling (drop, duplicate, reorder) and a
+//! latency model (fixed + exponential jitter), then forwards to the
+//! destination endpoint's queue. Determinism: all randomness comes from
+//! one [`Pcg32`] seeded from [`NetConfig::seed`]; with a fixed seed the
+//! same frames are dropped regardless of thread timing *in the common
+//! single-sender-per-step lock-step pattern* (packet arrival order at the
+//! fabric is the only nondeterminism, and P4SGD's lock-step rounds keep
+//! it narrow).
+//!
+//! Latency is modelled logically (delivery ordering via a virtual-time
+//! heap) rather than by sleeping: sleeping per 500ns frame would be
+//! slower *and* less precise than the OS timer. Wall-clock nanosecond
+//! aggregation latencies for paper Fig. 8 come from the DES
+//! ([`crate::timing`]), which shares the same protocol state machines.
+
+use super::{NodeId, Transport};
+use crate::config::NetConfig;
+use crate::protocol::Packet;
+use crate::util::rng::Pcg32;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// A frame in flight.
+struct Frame {
+    src: NodeId,
+    dst: NodeId,
+    pkt: Packet,
+}
+
+/// How an endpoint reaches its peers.
+enum Path {
+    /// All frames go through the fabric thread (fault/latency injection).
+    Fabric(mpsc::Sender<Frame>),
+    /// Fault-free, zero-latency config: deliver straight to the
+    /// destination queue — one thread hop instead of two (§Perf L3).
+    Direct(Vec<mpsc::Sender<(NodeId, Packet)>>),
+}
+
+/// One node's endpoint on the fabric.
+pub struct SimEndpoint {
+    node: NodeId,
+    path: Path,
+    rx: mpsc::Receiver<(NodeId, Packet)>,
+}
+
+impl Transport for SimEndpoint {
+    fn send(&mut self, dst: NodeId, pkt: &Packet) {
+        // Peer gone (shutdown) => packets fall on the floor, which is
+        // exactly what an unreliable network is allowed to do.
+        match &self.path {
+            Path::Fabric(tx) => {
+                let _ = tx.send(Frame { src: self.node, dst, pkt: pkt.clone() });
+            }
+            Path::Direct(txs) => {
+                if let Some(tx) = txs.get(dst) {
+                    let _ = tx.send((self.node, pkt.clone()));
+                }
+            }
+        }
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Option<(NodeId, Packet)> {
+        if timeout.is_zero() {
+            self.rx.try_recv().ok()
+        } else {
+            self.rx.recv_timeout(timeout).ok()
+        }
+    }
+
+    fn node(&self) -> NodeId {
+        self.node
+    }
+}
+
+/// Counters the fabric reports at shutdown (fault-injection visibility).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct FabricStats {
+    pub frames: u64,
+    pub dropped: u64,
+    pub duplicated: u64,
+    pub reordered: u64,
+}
+
+/// Build a simulated network with `nodes` endpoints. The fabric thread
+/// runs until every endpoint has been dropped.
+pub struct SimNet;
+
+impl SimNet {
+    pub fn build(nodes: usize, cfg: &NetConfig) -> Vec<SimEndpoint> {
+        let mut egress_txs = Vec::with_capacity(nodes);
+        let mut egress_rxs = Vec::with_capacity(nodes);
+        for _ in 0..nodes {
+            let (tx, rx) = mpsc::channel();
+            egress_txs.push(tx);
+            egress_rxs.push(rx);
+        }
+        let passthrough = cfg.latency_ns == 0
+            && cfg.jitter_ns == 0
+            && cfg.drop_prob == 0.0
+            && cfg.dup_prob == 0.0
+            && cfg.reorder_prob == 0.0;
+        if passthrough {
+            // No behaviour to inject: skip the fabric thread entirely.
+            return egress_rxs
+                .into_iter()
+                .enumerate()
+                .map(|(node, rx)| SimEndpoint {
+                    node,
+                    path: Path::Direct(egress_txs.clone()),
+                    rx,
+                })
+                .collect();
+        }
+        let (ingress_tx, ingress_rx) = mpsc::channel::<Frame>();
+        let endpoints = egress_rxs
+            .into_iter()
+            .enumerate()
+            .map(|(node, rx)| SimEndpoint { node, path: Path::Fabric(ingress_tx.clone()), rx })
+            .collect();
+        let cfg = cfg.clone();
+        std::thread::Builder::new()
+            .name("simnet-fabric".into())
+            .spawn(move || fabric_loop(ingress_rx, egress_txs, cfg))
+            .expect("spawn fabric thread");
+        endpoints
+    }
+}
+
+fn fabric_loop(
+    ingress: mpsc::Receiver<Frame>,
+    egress: Vec<mpsc::Sender<(NodeId, Packet)>>,
+    cfg: NetConfig,
+) -> FabricStats {
+    let mut rng = Pcg32::new(cfg.seed, 0xFAB);
+    let mut stats = FabricStats::default();
+    // (virtual deliver time ns, tiebreak counter) -> frame
+    let mut heap: BinaryHeap<Reverse<(u64, u64, usize)>> = BinaryHeap::new();
+    let mut stash: Vec<Option<Frame>> = Vec::new();
+    let mut free: Vec<usize> = Vec::new();
+    let mut counter = 0u64;
+    let t0 = Instant::now();
+
+    let push = |heap: &mut BinaryHeap<Reverse<(u64, u64, usize)>>,
+                    stash: &mut Vec<Option<Frame>>,
+                    free: &mut Vec<usize>,
+                    counter: &mut u64,
+                    at: u64,
+                    frame: Frame| {
+        let idx = if let Some(i) = free.pop() {
+            stash[i] = Some(frame);
+            i
+        } else {
+            stash.push(Some(frame));
+            stash.len() - 1
+        };
+        *counter += 1;
+        heap.push(Reverse((at, *counter, idx)));
+    };
+
+    loop {
+        let now_ns = t0.elapsed().as_nanos() as u64;
+        // Flush everything due.
+        while let Some(&Reverse((at, _, idx))) = heap.peek() {
+            if at > now_ns {
+                break;
+            }
+            heap.pop();
+            let frame = stash[idx].take().expect("stashed frame");
+            free.push(idx);
+            if let Some(tx) = egress.get(frame.dst) {
+                let _ = tx.send((frame.src, frame.pkt));
+            }
+        }
+        // Wait for the next ingress frame or the next deadline.
+        let wait = match heap.peek() {
+            Some(&Reverse((at, _, _))) => Duration::from_nanos(at.saturating_sub(now_ns).min(50_000)),
+            // Nothing in flight: block generously for ingress.
+            None => Duration::from_millis(50),
+        };
+        match ingress.recv_timeout(wait) {
+            Ok(frame) => {
+                stats.frames += 1;
+                if rng.chance(cfg.drop_prob) {
+                    stats.dropped += 1;
+                    continue;
+                }
+                let now_ns = t0.elapsed().as_nanos() as u64;
+                let mut lat = cfg.latency_ns;
+                if cfg.jitter_ns > 0 {
+                    lat += rng.exp(cfg.jitter_ns as f64) as u64;
+                }
+                if rng.chance(cfg.reorder_prob) {
+                    // Hold the frame back past a few peers.
+                    lat += 4 * (cfg.latency_ns + cfg.jitter_ns).max(1);
+                    stats.reordered += 1;
+                }
+                if rng.chance(cfg.dup_prob) {
+                    stats.duplicated += 1;
+                    let dup = Frame { src: frame.src, dst: frame.dst, pkt: frame.pkt.clone() };
+                    push(&mut heap, &mut stash, &mut free, &mut counter, now_ns + lat + 1, dup);
+                }
+                push(&mut heap, &mut stash, &mut free, &mut counter, now_ns + lat, frame);
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                // Drain remaining deliveries, then exit.
+                let mut remaining: Vec<_> = heap.into_sorted_vec();
+                remaining.reverse();
+                for Reverse((_, _, idx)) in remaining {
+                    if let Some(frame) = stash[idx].take() {
+                        if let Some(tx) = egress.get(frame.dst) {
+                            let _ = tx.send((frame.src, frame.pkt));
+                        }
+                    }
+                }
+                return stats;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NetConfig;
+
+    fn fast_cfg() -> NetConfig {
+        NetConfig { latency_ns: 0, jitter_ns: 0, ..NetConfig::default() }
+    }
+
+    #[test]
+    fn delivers_point_to_point() {
+        let mut eps = SimNet::build(2, &fast_cfg());
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.send(1, &Packet::pa(7, 0, vec![1, 2, 3]));
+        let (src, pkt) = b.recv_timeout(Duration::from_secs(1)).expect("delivery");
+        assert_eq!(src, 0);
+        assert_eq!(pkt.seq, 7);
+        assert_eq!(pkt.payload, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn preserves_order_without_faults() {
+        let mut eps = SimNet::build(2, &fast_cfg());
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        for i in 0..100u16 {
+            a.send(1, &Packet::pa(i, 0, vec![]));
+        }
+        for i in 0..100u16 {
+            let (_, pkt) = b.recv_timeout(Duration::from_secs(1)).expect("delivery");
+            assert_eq!(pkt.seq, i);
+        }
+    }
+
+    #[test]
+    fn drop_all_delivers_nothing() {
+        let cfg = NetConfig { drop_prob: 0.999999999, ..fast_cfg() };
+        let mut eps = SimNet::build(2, &cfg);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        for i in 0..50u16 {
+            a.send(1, &Packet::pa(i, 0, vec![]));
+        }
+        assert!(b.recv_timeout(Duration::from_millis(100)).is_none());
+    }
+
+    #[test]
+    fn duplication_delivers_extra_copies() {
+        let cfg = NetConfig { dup_prob: 0.999999999, ..fast_cfg() };
+        let mut eps = SimNet::build(2, &cfg);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.send(1, &Packet::pa(3, 0, vec![]));
+        assert!(b.recv_timeout(Duration::from_secs(1)).is_some());
+        assert!(b.recv_timeout(Duration::from_secs(1)).is_some(), "expected duplicate");
+    }
+
+    #[test]
+    fn unknown_destination_is_dropped_silently() {
+        let mut eps = SimNet::build(1, &fast_cfg());
+        let mut a = eps.pop().unwrap();
+        a.send(99, &Packet::pa(0, 0, vec![]));
+        assert!(a.recv_timeout(Duration::from_millis(50)).is_none());
+    }
+
+    #[test]
+    fn latency_defers_delivery_logically() {
+        // 2ms latency: the packet must not be deliverable immediately.
+        let cfg = NetConfig { latency_ns: 2_000_000, jitter_ns: 0, ..NetConfig::default() };
+        let mut eps = SimNet::build(2, &cfg);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        let t = Instant::now();
+        a.send(1, &Packet::pa(0, 0, vec![]));
+        let got = b.recv_timeout(Duration::from_secs(1));
+        assert!(got.is_some());
+        assert!(t.elapsed() >= Duration::from_millis(1), "delivered too early: {:?}", t.elapsed());
+    }
+}

@@ -1,0 +1,134 @@
+//! Real UDP transport on localhost — one socket per node.
+//!
+//! Gives the protocol stack a true datagram substrate (kernel buffers,
+//! real truncation, genuine unreliability under pressure). Node `i` binds
+//! `127.0.0.1:(base_port + i)`.
+
+use super::{NodeId, Transport};
+use crate::protocol::Packet;
+use std::net::{SocketAddr, UdpSocket};
+use std::time::Duration;
+
+/// Max datagram we ever send: header + 4KiB payload headroom.
+const MAX_DGRAM: usize = 16 * 1024;
+
+/// A UDP endpoint implementing [`Transport`].
+pub struct UdpEndpoint {
+    node: NodeId,
+    base_port: u16,
+    socket: UdpSocket,
+    scratch: Vec<u8>,
+    rxbuf: [u8; MAX_DGRAM],
+}
+
+/// Build `nodes` endpoints on consecutive localhost ports starting at
+/// `base_port`. Fails if any port is taken.
+pub fn build(nodes: usize, base_port: u16) -> std::io::Result<Vec<UdpEndpoint>> {
+    (0..nodes)
+        .map(|node| {
+            let socket = UdpSocket::bind(("127.0.0.1", base_port + node as u16))?;
+            socket.set_nonblocking(false)?;
+            Ok(UdpEndpoint { node, base_port, socket, scratch: Vec::new(), rxbuf: [0; MAX_DGRAM] })
+        })
+        .collect()
+}
+
+impl UdpEndpoint {
+    fn addr_of(&self, node: NodeId) -> SocketAddr {
+        SocketAddr::from(([127, 0, 0, 1], self.base_port + node as u16))
+    }
+
+    fn node_of(&self, addr: SocketAddr) -> Option<NodeId> {
+        let port = addr.port();
+        port.checked_sub(self.base_port).map(|p| p as NodeId)
+    }
+}
+
+impl Transport for UdpEndpoint {
+    fn send(&mut self, dst: NodeId, pkt: &Packet) {
+        let mut scratch = std::mem::take(&mut self.scratch);
+        pkt.encode(&mut scratch);
+        // Unreliable by contract: ignore send errors.
+        let _ = self.socket.send_to(&scratch, self.addr_of(dst));
+        self.scratch = scratch;
+    }
+
+    fn recv_timeout(&mut self, timeout: Duration) -> Option<(NodeId, Packet)> {
+        if timeout.is_zero() {
+            self.socket.set_nonblocking(true).ok()?;
+            let r = self.socket.recv_from(&mut self.rxbuf);
+            self.socket.set_nonblocking(false).ok()?;
+            let (n, from) = r.ok()?;
+            let pkt = Packet::decode(&self.rxbuf[..n]).ok()?;
+            return Some((self.node_of(from)?, pkt));
+        }
+        self.socket.set_read_timeout(Some(timeout)).ok()?;
+        let (n, from) = self.socket.recv_from(&mut self.rxbuf).ok()?;
+        let pkt = Packet::decode(&self.rxbuf[..n]).ok()?;
+        Some((self.node_of(from)?, pkt))
+    }
+
+    fn node(&self) -> NodeId {
+        self.node
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Port ranges spaced out so parallel test binaries don't collide.
+    const BASE: u16 = 47800;
+
+    #[test]
+    fn roundtrip_between_two_nodes() {
+        let mut eps = build(2, BASE).expect("bind");
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.send(1, &Packet::pa(42, 0, vec![7, -9]));
+        let (src, pkt) = b.recv_timeout(Duration::from_secs(2)).expect("delivery");
+        assert_eq!(src, 0);
+        assert_eq!(pkt.seq, 42);
+        assert_eq!(pkt.payload, vec![7, -9]);
+    }
+
+    #[test]
+    fn timeout_returns_none() {
+        let mut eps = build(1, BASE + 16).expect("bind");
+        let mut a = eps.pop().unwrap();
+        assert!(a.recv_timeout(Duration::from_millis(50)).is_none());
+    }
+
+    #[test]
+    fn try_recv_nonblocking() {
+        let mut eps = build(2, BASE + 32).expect("bind");
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        assert!(b.try_recv().is_none());
+        a.send(1, &Packet::ack(5, 0));
+        // allow the kernel a moment
+        let mut got = None;
+        for _ in 0..100 {
+            got = b.try_recv();
+            if got.is_some() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let (_, pkt) = got.expect("delivery");
+        assert!(!pkt.is_agg);
+        assert_eq!(pkt.seq, 5);
+    }
+
+    #[test]
+    fn garbage_datagram_is_skipped() {
+        let mut eps = build(2, BASE + 48).expect("bind");
+        let mut b = eps.pop().unwrap();
+        let a = eps.pop().unwrap();
+        // raw junk straight to b's socket
+        let junk = UdpSocket::bind("127.0.0.1:0").unwrap();
+        junk.send_to(&[1, 2, 3], ("127.0.0.1", BASE + 48 + 1)).unwrap();
+        drop(a);
+        assert!(b.recv_timeout(Duration::from_millis(100)).is_none());
+    }
+}

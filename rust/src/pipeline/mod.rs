@@ -1,0 +1,341 @@
+//! Forward–Communication–Backward micro-batch pipeline (paper C2,
+//! Fig. 2c) plus the data preparation it runs over.
+//!
+//! A mini-batch of `B` samples is split into `B/MB` micro-batches. The
+//! worker issues forward passes back-to-back; each finished micro-batch's
+//! PA is sent to the switch immediately (non-blocking slot claim), and
+//! full activations are drained opportunistically between forwards, so
+//! communication of micro-batch *j* overlaps the forward of *j+1..* and
+//! the backward of earlier micro-batches — while gradient accumulation
+//! keeps synchronous-SGD semantics (the model updates only at the
+//! mini-batch boundary, after every FA arrived).
+
+use crate::data::partition::{vertical, VerticalShard};
+use crate::data::quantize::{dequantized_rows, pack_rows, PackedBatch, LANE};
+use crate::engine::Compute;
+use crate::glm::Loss;
+use crate::net::Transport;
+use crate::protocol::{decode_activations, encode_activations};
+use crate::worker::{AggClient, Event};
+use std::collections::HashMap;
+use std::time::Duration;
+
+/// Hard cap on waiting for stragglers before declaring the cluster dead.
+const DRAIN_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// One engine's slice of the worker's model partition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EngineSlice {
+    /// Offsets within the worker partition.
+    pub lo: usize,
+    pub hi: usize,
+    /// Lane-padded width (engine datapath / artifact width).
+    pub d_pad: usize,
+}
+
+/// Per-engine data of one micro-batch: bit-planes for forward, the
+/// dequantized rows (FIFO replay) for backward.
+#[derive(Debug, Clone)]
+pub struct EngineData {
+    pub packed: PackedBatch,
+    pub dq: Vec<f32>,
+}
+
+/// One prepared micro-batch.
+#[derive(Debug, Clone)]
+pub struct PreparedMicro {
+    pub per_engine: Vec<EngineData>,
+    pub y: Vec<f32>,
+}
+
+/// A worker's shard, quantized and packed once up front — the software
+/// twin of the FPGA's bit-weaved HBM image.
+#[derive(Debug, Clone)]
+pub struct PreparedShard {
+    pub engines: Vec<EngineSlice>,
+    pub micro: Vec<PreparedMicro>,
+    pub mb: usize,
+    pub n: usize,
+}
+
+impl PreparedShard {
+    /// Quantize + pack `shard` for `n_engines` engines at micro-batch
+    /// size `mb` and the given bit-weaving precision.
+    ///
+    /// Engine slices are padded straight to the AOT artifact widths
+    /// (256/1024/4096) when they fit: padding is inert for both
+    /// backends (zero words), and it makes the PJRT path zero-copy
+    /// (§Perf L1 — no per-call re-padding).
+    pub fn prepare(shard: &VerticalShard, n_engines: usize, mb: usize, precision: u32) -> Self {
+        let width = shard.slice.width();
+        let n_engines = n_engines.min(width); // degenerate tiny shards
+        let artifact_pad = |lane_pad: usize| -> usize {
+            for v in [256usize, 1024, 4096] {
+                if lane_pad <= v {
+                    return v;
+                }
+            }
+            lane_pad
+        };
+        let slices: Vec<EngineSlice> = vertical(width, n_engines, LANE)
+            .into_iter()
+            .map(|s| EngineSlice { lo: s.lo, hi: s.hi, d_pad: artifact_pad(s.padded) })
+            .collect();
+        let n_micro = shard.n / mb;
+        let mut micro = Vec::with_capacity(n_micro);
+        let mut scratch = Vec::new();
+        for m in 0..n_micro {
+            let rows = shard.rows(m * mb, (m + 1) * mb);
+            let mut per_engine = Vec::with_capacity(slices.len());
+            for s in &slices {
+                let ew = s.hi - s.lo;
+                scratch.clear();
+                for i in 0..mb {
+                    scratch.extend_from_slice(&rows[i * width + s.lo..i * width + s.hi]);
+                }
+                per_engine.push(EngineData {
+                    packed: pack_rows(&scratch, mb, ew, s.d_pad, precision),
+                    dq: dequantized_rows(&scratch, mb, ew, s.d_pad, precision),
+                });
+            }
+            micro.push(PreparedMicro {
+                per_engine,
+                y: shard.labels[m * mb..(m + 1) * mb].to_vec(),
+            });
+        }
+        PreparedShard { engines: slices, micro, mb, n: shard.n }
+    }
+
+    pub fn micro_batches(&self) -> usize {
+        self.micro.len()
+    }
+}
+
+/// Mutable training state of one worker: per-engine model and gradient.
+#[derive(Debug, Clone)]
+pub struct WorkerState {
+    pub x: Vec<Vec<f32>>,
+    pub g: Vec<Vec<f32>>,
+}
+
+impl WorkerState {
+    pub fn zeros(prep: &PreparedShard) -> Self {
+        let x = prep.engines.iter().map(|s| vec![0.0f32; s.d_pad]).collect::<Vec<_>>();
+        let g = x.clone();
+        Self { x, g }
+    }
+
+    /// Stitch the (unpadded) model partition back together.
+    pub fn model(&self, prep: &PreparedShard) -> Vec<f32> {
+        let mut out = Vec::new();
+        for (s, xe) in prep.engines.iter().zip(&self.x) {
+            out.extend_from_slice(&xe[..s.hi - s.lo]);
+        }
+        out
+    }
+}
+
+/// Counters from one mini-batch run.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct PipelineStats {
+    /// Micro-batches whose FA arrived only in the final drain (no
+    /// overlap left to exploit).
+    pub drained: u64,
+    /// Micro-batches overlapped with later forwards.
+    pub overlapped: u64,
+}
+
+/// Run one mini-batch (micro-batches `[first, first + count)`) through
+/// the FCB pipeline. Returns the summed training loss of the mini-batch.
+#[allow(clippy::too_many_arguments)]
+pub fn run_minibatch<T: Transport>(
+    prep: &PreparedShard,
+    state: &mut WorkerState,
+    compute: &mut dyn Compute,
+    agg: &mut AggClient<T>,
+    first: usize,
+    count: usize,
+    loss: Loss,
+    lr: f32,
+    stats: &mut PipelineStats,
+) -> f32 {
+    let mb = prep.mb;
+    for ge in &mut state.g {
+        ge.iter_mut().for_each(|v| *v = 0.0);
+    }
+    let mut pending: HashMap<u16, usize> = HashMap::with_capacity(count);
+    let mut loss_sum = 0.0f32;
+    let mut done = 0usize;
+
+    let handle_event = |ev: Event,
+                            pending: &mut HashMap<u16, usize>,
+                            state: &mut WorkerState,
+                            compute: &mut dyn Compute,
+                            loss_sum: &mut f32,
+                            done: &mut usize| {
+        if let Event::Fa { seq, payload } = ev {
+            if let Some(idx) = pending.remove(&seq) {
+                let fa = decode_activations(&payload);
+                let m = &prep.micro[idx];
+                *loss_sum += compute.loss_sum(&fa, &m.y, loss);
+                for (ed, ge) in m.per_engine.iter().zip(&mut state.g) {
+                    compute.backward_acc(&ed.dq, mb, &fa, &m.y, ge, lr, loss);
+                }
+                *done += 1;
+            }
+        }
+    };
+
+    // Stage 1+2 interleaved: forward each micro-batch, ship PA, drain FAs.
+    for j in 0..count {
+        let idx = first + j;
+        let m = &prep.micro[idx];
+        // Forward across engines; PA is the engine-sum (paper §4.1.3).
+        let mut pa = vec![0.0f32; mb];
+        for (ed, xe) in m.per_engine.iter().zip(&state.x) {
+            let pa_e = compute.forward(&ed.packed, xe);
+            for (p, pe) in pa.iter_mut().zip(&pa_e) {
+                *p += pe;
+            }
+        }
+        let payload = encode_activations(&pa);
+        // Claim a slot; pump the network while backpressured.
+        let seq = loop {
+            if let Some(seq) = agg.try_send_pa(&payload) {
+                break seq;
+            }
+            if let Some(ev) = agg.poll(Duration::from_micros(200)) {
+                handle_event(ev, &mut pending, state, compute, &mut loss_sum, &mut done);
+            }
+        };
+        pending.insert(seq, idx);
+        // Opportunistic drain: overlap communication with later forwards.
+        while let Some(ev) = agg.poll(Duration::ZERO) {
+            let before = done;
+            handle_event(ev, &mut pending, state, compute, &mut loss_sum, &mut done);
+            if done > before && j + 1 < count {
+                stats.overlapped += 1;
+            }
+        }
+    }
+
+    // Stage 3 tail: block for the remaining FAs.
+    let deadline = std::time::Instant::now() + DRAIN_TIMEOUT;
+    while done < count {
+        let Some(ev) = agg.poll(Duration::from_millis(20)) else {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "drain timeout: worker {} missing {} of {count} micro-batches; \
+                 pending seqs {:?}; in_flight {}; stats {:?}",
+                agg.worker(),
+                count - done,
+                pending.keys().collect::<Vec<_>>(),
+                agg.in_flight(),
+                agg.stats,
+            );
+            continue;
+        };
+        let before = done;
+        handle_event(ev, &mut pending, state, compute, &mut loss_sum, &mut done);
+        if done > before {
+            stats.drained += 1;
+        }
+    }
+
+    // Model update at the mini-batch boundary (synchronous SGD preserved).
+    let inv_b = 1.0 / (count * mb) as f32;
+    for (xe, ge) in state.x.iter_mut().zip(&state.g) {
+        compute.update(xe, ge, inv_b);
+    }
+    loss_sum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::partition::shard_vertical;
+    use crate::data::synth;
+    use crate::engine::NativeCompute;
+
+    fn shard(d: usize, n: usize) -> VerticalShard {
+        let ds = synth::separable(n, d, Loss::LogReg, 0.0, 11);
+        shard_vertical(&ds, 1, 0, LANE)
+    }
+
+    #[test]
+    fn prepare_shapes() {
+        let prep = PreparedShard::prepare(&shard(100, 64), 4, 8, 4);
+        assert_eq!(prep.engines.len(), 4);
+        assert_eq!(prep.micro_batches(), 8);
+        let total: usize = prep.engines.iter().map(|s| s.hi - s.lo).sum();
+        assert_eq!(total, 100);
+        for m in &prep.micro {
+            assert_eq!(m.per_engine.len(), 4);
+            assert_eq!(m.y.len(), 8);
+        }
+    }
+
+    #[test]
+    fn engine_sum_equals_whole_forward() {
+        // splitting a worker over engines must not change PA
+        let sh = shard(96, 16);
+        let prep1 = PreparedShard::prepare(&sh, 1, 8, 4);
+        let prep4 = PreparedShard::prepare(&sh, 3, 8, 4);
+        let mut c = NativeCompute;
+        let x_full: Vec<f32> = (0..96).map(|j| (j as f32 * 0.37).sin()).collect();
+
+        // state with x = slices of x_full
+        let mk_state = |prep: &PreparedShard| WorkerState {
+            x: prep
+                .engines
+                .iter()
+                .map(|s| {
+                    let mut xe = vec![0.0f32; s.d_pad];
+                    xe[..s.hi - s.lo].copy_from_slice(&x_full[s.lo..s.hi]);
+                    xe
+                })
+                .collect(),
+            g: prep.engines.iter().map(|s| vec![0.0f32; s.d_pad]).collect(),
+        };
+        let s1 = mk_state(&prep1);
+        let s4 = mk_state(&prep4);
+        for idx in 0..prep1.micro_batches() {
+            let pa1: Vec<f32> = {
+                let m = &prep1.micro[idx];
+                let mut pa = vec![0.0f32; 8];
+                for (ed, xe) in m.per_engine.iter().zip(&s1.x) {
+                    for (p, v) in pa.iter_mut().zip(c.forward(&ed.packed, xe)) {
+                        *p += v;
+                    }
+                }
+                pa
+            };
+            let pa4: Vec<f32> = {
+                let m = &prep4.micro[idx];
+                let mut pa = vec![0.0f32; 8];
+                for (ed, xe) in m.per_engine.iter().zip(&s4.x) {
+                    for (p, v) in pa.iter_mut().zip(c.forward(&ed.packed, xe)) {
+                        *p += v;
+                    }
+                }
+                pa
+            };
+            for (a, b) in pa1.iter().zip(&pa4) {
+                assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn model_stitches_without_padding() {
+        let prep = PreparedShard::prepare(&shard(100, 16), 4, 8, 4);
+        let state = WorkerState::zeros(&prep);
+        assert_eq!(state.model(&prep).len(), 100);
+    }
+
+    #[test]
+    fn tiny_shard_fewer_engines_than_requested() {
+        let prep = PreparedShard::prepare(&shard(3, 8), 8, 8, 4);
+        assert!(prep.engines.len() <= 3);
+    }
+}

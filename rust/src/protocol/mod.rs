@@ -1,0 +1,219 @@
+//! The P4SGD wire protocol — paper Fig. 4.
+//!
+//! A packet carries: `bm` (a bitmap with the source worker's index set),
+//! `seq` (the aggregation slot index on the switch), `is_agg` (aggregation
+//! vs acknowledgement round), `acked` (set by the switch on the
+//! ACK-confirm broadcast), and a payload of `MB` 32-bit integers — the
+//! partial (or full) activations in fixed-point.
+//!
+//! Activations travel as **i32 fixed-point** because the Tofino data
+//! plane has integer ALUs only; [`FIXED_SHIFT`] gives 16 fractional bits,
+//! plenty for activations that are O(1)–O(100) in our GLMs.
+
+use anyhow::{bail, Result};
+
+/// Fixed-point fractional bits for activation payloads.
+pub const FIXED_SHIFT: u32 = 16;
+
+/// Wire magic, catches stray datagrams on the UDP transport.
+pub const MAGIC: u16 = 0x5034; // "P4"
+
+/// Fixed header size on the wire (see [`Packet::encode`]).
+pub const HEADER_BYTES: usize = 12;
+
+/// f32 -> fixed-point i32 (saturating).
+#[inline]
+pub fn to_fixed(v: f32) -> i32 {
+    let scaled = (v as f64) * (1i64 << FIXED_SHIFT) as f64;
+    scaled.clamp(i32::MIN as f64, i32::MAX as f64) as i32
+}
+
+/// fixed-point i32 -> f32.
+#[inline]
+pub fn from_fixed(v: i32) -> f32 {
+    v as f32 / (1i64 << FIXED_SHIFT) as f32
+}
+
+/// A protocol packet (paper Fig. 4). One packet per micro-batch per
+/// round; the switch rewrites `payload` in place when broadcasting FA.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Packet {
+    /// Aggregation round (true) or acknowledgement round (false).
+    pub is_agg: bool,
+    /// Switch replaces PA with FA and sets this on agg broadcast; set on
+    /// the ack-confirm broadcast too.
+    pub acked: bool,
+    /// Aggregation slot index.
+    pub seq: u16,
+    /// Source-worker bitmap (bit m = worker m). Max 32 workers.
+    pub bm: u32,
+    /// MB fixed-point activations (PA upstream, FA downstream); empty on
+    /// the ack round.
+    pub payload: Vec<i32>,
+}
+
+impl Packet {
+    /// A worker's partial-activation packet (Alg. 3 lines 4-5).
+    pub fn pa(seq: u16, worker: usize, payload: Vec<i32>) -> Self {
+        Packet { is_agg: true, acked: false, seq, bm: 1 << worker, payload }
+    }
+
+    /// A worker's acknowledgement packet (Alg. 3 lines 22-23).
+    pub fn ack(seq: u16, worker: usize) -> Self {
+        Packet { is_agg: false, acked: false, seq, bm: 1 << worker, payload: Vec::new() }
+    }
+
+    /// Wire encoding:
+    /// `magic u16 | flags u8 | rsvd u8 | seq u16 | bm u32 | len u16 | payload i32*len`
+    /// (little-endian).
+    pub fn encode(&self, buf: &mut Vec<u8>) {
+        buf.clear();
+        buf.extend_from_slice(&MAGIC.to_le_bytes());
+        let flags = (self.is_agg as u8) | ((self.acked as u8) << 1);
+        buf.push(flags);
+        buf.push(0);
+        buf.extend_from_slice(&self.seq.to_le_bytes());
+        buf.extend_from_slice(&self.bm.to_le_bytes());
+        buf.extend_from_slice(&(self.payload.len() as u16).to_le_bytes());
+        for v in &self.payload {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    /// Decode from wire bytes; rejects bad magic / truncated frames.
+    pub fn decode(buf: &[u8]) -> Result<Packet> {
+        if buf.len() < HEADER_BYTES {
+            bail!("short packet: {} bytes", buf.len());
+        }
+        let magic = u16::from_le_bytes([buf[0], buf[1]]);
+        if magic != MAGIC {
+            bail!("bad magic {magic:#x}");
+        }
+        let flags = buf[2];
+        let seq = u16::from_le_bytes([buf[4], buf[5]]);
+        let bm = u32::from_le_bytes([buf[6], buf[7], buf[8], buf[9]]);
+        let len = u16::from_le_bytes([buf[10], buf[11]]) as usize;
+        if buf.len() != HEADER_BYTES + 4 * len {
+            bail!("length mismatch: header says {len} words, frame has {} bytes", buf.len());
+        }
+        let mut payload = Vec::with_capacity(len);
+        for k in 0..len {
+            let o = HEADER_BYTES + 4 * k;
+            payload.push(i32::from_le_bytes([buf[o], buf[o + 1], buf[o + 2], buf[o + 3]]));
+        }
+        Ok(Packet { is_agg: flags & 1 != 0, acked: flags & 2 != 0, seq, bm, payload })
+    }
+
+    /// Total wire size in bytes.
+    pub fn wire_bytes(&self) -> usize {
+        HEADER_BYTES + 4 * self.payload.len()
+    }
+}
+
+/// Convert an f32 activation slice to the fixed-point wire form.
+pub fn encode_activations(pa: &[f32]) -> Vec<i32> {
+    pa.iter().map(|&v| to_fixed(v)).collect()
+}
+
+/// Convert a fixed-point payload back to f32.
+pub fn decode_activations(payload: &[i32]) -> Vec<f32> {
+    payload.iter().map(|&v| from_fixed(v)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn fixed_point_roundtrip_precision() {
+        for v in [-100.0f32, -1.5, 0.0, 0.37, 1.0, 99.99] {
+            let err = (from_fixed(to_fixed(v)) - v).abs();
+            assert!(err < 1.0 / (1 << 15) as f32, "v={v} err={err}");
+        }
+    }
+
+    #[test]
+    fn fixed_point_saturates() {
+        assert_eq!(to_fixed(1e9), i32::MAX);
+        assert_eq!(to_fixed(-1e9), i32::MIN);
+    }
+
+    #[test]
+    fn fixed_point_addition_homomorphic() {
+        // switch adds in fixed-point: to_fixed(a)+to_fixed(b) ~ to_fixed(a+b)
+        let (a, b) = (3.25f32, -1.125f32);
+        let sum = from_fixed(to_fixed(a) + to_fixed(b));
+        assert!((sum - (a + b)).abs() < 1.0 / (1 << 14) as f32);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let pkt = Packet::pa(1234, 5, vec![1, -2, 3, i32::MAX, i32::MIN, 0, 7, -7]);
+        let mut buf = Vec::new();
+        pkt.encode(&mut buf);
+        assert_eq!(buf.len(), pkt.wire_bytes());
+        assert_eq!(Packet::decode(&buf).unwrap(), pkt);
+    }
+
+    #[test]
+    fn ack_packet_is_payloadless() {
+        let pkt = Packet::ack(9, 3);
+        assert!(!pkt.is_agg);
+        assert_eq!(pkt.bm, 1 << 3);
+        assert_eq!(pkt.wire_bytes(), HEADER_BYTES);
+        let mut buf = Vec::new();
+        pkt.encode(&mut buf);
+        assert_eq!(Packet::decode(&buf).unwrap(), pkt);
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(Packet::decode(&[]).is_err());
+        assert!(Packet::decode(&[0u8; 12]).is_err()); // bad magic
+        let mut buf = Vec::new();
+        Packet::pa(0, 0, vec![1, 2]).encode(&mut buf);
+        buf.truncate(buf.len() - 1);
+        assert!(Packet::decode(&buf).is_err()); // truncated payload
+    }
+
+    #[test]
+    fn flags_encode_both_bits() {
+        let mut pkt = Packet::pa(1, 0, vec![]);
+        pkt.acked = true;
+        let mut buf = Vec::new();
+        pkt.encode(&mut buf);
+        let back = Packet::decode(&buf).unwrap();
+        assert!(back.is_agg && back.acked);
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        prop::check("packet encode/decode roundtrip", 200, |rng| {
+            let len = prop::small_size(rng, 0, 64);
+            let pkt = Packet {
+                is_agg: rng.chance(0.5),
+                acked: rng.chance(0.5),
+                seq: rng.next_u32() as u16,
+                bm: rng.next_u32(),
+                payload: (0..len).map(|_| rng.next_u32() as i32).collect(),
+            };
+            let mut buf = Vec::new();
+            pkt.encode(&mut buf);
+            match Packet::decode(&buf) {
+                Ok(back) if back == pkt => Ok(()),
+                Ok(back) => Err(format!("{back:?} != {pkt:?}")),
+                Err(e) => Err(e.to_string()),
+            }
+        });
+    }
+
+    #[test]
+    fn paper_packet_is_64_bytes_class() {
+        // Fig. 8 discussion: P4SGD uses 64B packets (vs SwitchML's 256B).
+        // MB=8 payload: 12B header + 32B payload = 44B on our wire, which
+        // with Ethernet+IP+UDP framing lands in the 64-100B class.
+        let pkt = Packet::pa(0, 0, vec![0; 8]);
+        assert!(pkt.wire_bytes() <= 64);
+    }
+}

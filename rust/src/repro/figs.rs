@@ -1,0 +1,360 @@
+//! Paper figures 8–15.
+
+use super::banner;
+use crate::config::{NetConfig, SystemConfig};
+use crate::coordinator::{mp, reference};
+use crate::data::synth;
+use crate::engine::{Compute, NativeCompute};
+use crate::glm::Loss;
+use crate::metrics::{fmt_secs, LatencyHist, Table};
+use crate::net::sim::SimNet;
+use crate::net::switch_node;
+use crate::switch::p4::P4Switch;
+use crate::switch::runner;
+use crate::timing::des::P4sgdSim;
+use crate::timing::models::{
+    CpuModel, FpgaModel, GpuModel, SwitchMlModel, AGG_CPUSYNC, AGG_GPUSYNC, AGG_P4SGD,
+    AGG_SWITCHML,
+};
+use crate::util::rng::Pcg32;
+use crate::worker::agg_client::SEQ_SPACE;
+use crate::worker::AggClient;
+use anyhow::Result;
+use std::time::Duration;
+
+fn native(_w: usize) -> Box<dyn Compute> {
+    Box::new(NativeCompute)
+}
+
+/// Fig. 8: AllReduce latency of an 8x32-bit payload across 8 workers.
+///
+/// Two complementary measurements:
+/// 1. the calibrated latency models (what the paper's testbed would
+///    show — the figure's shape), sampled 10k times per method;
+/// 2. our *actual protocol implementation* over the in-process fabric
+///    with zero injected latency — the protocol+scheduling overhead
+///    floor this software substrate adds.
+pub fn fig8() -> Result<()> {
+    banner("Fig. 8", "aggregation latency comparison (8 workers, 8x32-bit payload)");
+    let mut t = Table::new(vec!["Method", "mean", "p1", "p50", "p99"]);
+    let mut rng = Pcg32::seeded(8);
+    for m in [AGG_P4SGD, AGG_CPUSYNC, AGG_GPUSYNC, AGG_SWITCHML] {
+        let mut h = LatencyHist::new();
+        for _ in 0..10_000 {
+            h.push_secs(m.sample(8, &mut rng));
+        }
+        let s = h.summary();
+        t.row(vec![
+            m.name.to_string(),
+            fmt_secs(s.mean / 1e9),
+            fmt_secs(s.p1 / 1e9),
+            fmt_secs(s.p50 / 1e9),
+            fmt_secs(s.p99 / 1e9),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("(paper: P4SGD mean 1.2us, an order of magnitude under CPU/GPU sync; SwitchML slowest)");
+    t.save_csv("fig8_model")?;
+
+    // Measured protocol floor through the real Algorithm 2/3 machines.
+    let measured = measure_p4_allreduce(8, 2_000)?;
+    println!(
+        "measured in-process P4SGD protocol floor (zero injected latency): {}",
+        measured.whiskers()
+    );
+    let mut t2 = Table::new(vec!["Metric", "value"]);
+    let s = measured.summary();
+    t2.row(vec!["ops".to_string(), s.n.to_string()]);
+    t2.row(vec!["mean_ns".to_string(), format!("{:.0}", s.mean)]);
+    t2.row(vec!["p99_ns".to_string(), format!("{:.0}", s.p99)]);
+    t2.save_csv("fig8_measured")?;
+    Ok(())
+}
+
+/// Blocking AllReduce wall-clock at worker 0 through the real protocol.
+fn measure_p4_allreduce(workers: usize, ops: usize) -> Result<LatencyHist> {
+    let net = NetConfig { latency_ns: 0, jitter_ns: 0, timeout_us: 5_000, ..NetConfig::default() };
+    let mut eps = SimNet::build(workers + 1, &net);
+    let server = runner::spawn(
+        P4Switch::new(SEQ_SPACE, workers, 8),
+        eps.pop().unwrap(),
+    );
+    let mut hist = LatencyHist::new();
+    std::thread::scope(|scope| {
+        let mut eps_iter = eps.into_iter().enumerate();
+        let first = eps_iter.next().expect("worker 0 endpoint");
+        // spawn peers first, then drive worker 0 on this thread
+        for (w, ep) in eps_iter {
+            scope.spawn(move || {
+                let mut agg =
+                    AggClient::new(ep, switch_node(workers), w, 64, Duration::from_millis(5));
+                let pa = vec![1i32; 8];
+                for _ in 0..ops {
+                    let _ = agg.allreduce(&pa);
+                }
+            });
+        }
+        let (_, ep0) = first;
+        let mut agg = AggClient::new(ep0, switch_node(workers), 0, 64, Duration::from_millis(5));
+        let pa = vec![1i32; 8];
+        for _ in 0..ops {
+            let t = std::time::Instant::now();
+            let _ = agg.allreduce(&pa);
+            hist.push_ns(t.elapsed().as_nanos() as f64);
+        }
+    });
+    server.shutdown();
+    Ok(hist)
+}
+
+/// Datasets used by the timing figures, with full-size feature counts.
+fn fig_datasets() -> Vec<(&'static str, usize, usize)> {
+    // (name, features, samples)
+    synth::TABLE2.iter().map(|s| (s.name, s.features, s.samples)).collect()
+}
+
+fn p4(d: usize, m: usize, b: usize, engines: usize) -> P4sgdSim {
+    P4sgdSim {
+        fpga: FpgaModel { engines, ..FpgaModel::default() },
+        agg: AGG_P4SGD,
+        d,
+        m,
+        b,
+        mb: 8,
+    }
+}
+
+/// Samples per "epoch" used by the timing figures: full S is simulated
+/// as S/B iterations; cap keeps runtimes printable while preserving
+/// ratios (time scales linearly in iterations).
+fn epoch_samples(s: usize, b: usize) -> usize {
+    s.min(100_000) / b * b
+}
+
+/// Fig. 9: DP vs MP epoch time over mini-batch size (4 workers).
+pub fn fig9() -> Result<()> {
+    banner("Fig. 9", "data- vs model-parallel epoch time, 4 FPGA workers, 8 engines");
+    let mut t = Table::new(vec!["Dataset", "B", "MP epoch", "DP epoch", "MP speedup"]);
+    for (name, d, s) in fig_datasets() {
+        if name != "rcv1" && name != "amazon_fashion" {
+            continue;
+        }
+        for b in [16usize, 64, 256, 1024] {
+            let sim = p4(d, 4, b, 8);
+            let n = epoch_samples(s, b);
+            let mp_t = sim.epoch_time(n, None);
+            let dp_t = sim.epoch_time_dp(n);
+            t.row(vec![
+                name.to_string(),
+                b.to_string(),
+                fmt_secs(mp_t),
+                fmt_secs(dp_t),
+                format!("{:.1}x", dp_t / mp_t),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+    println!("(paper: MP ~4.8x faster at B=16 on amazon; parity near B=1024)");
+    t.save_csv("fig9")?;
+    Ok(())
+}
+
+/// Fig. 10: effect of mini-batch size (8 workers, 8 engines), speedup
+/// in epoch time over the B=16 case.
+pub fn fig10() -> Result<()> {
+    banner("Fig. 10", "effect of mini-batch size (speedup over B=16), 8 workers x 8 engines");
+    let mut t = Table::new(vec!["Dataset", "B=16", "B=64", "B=256", "B=1024"]);
+    for (name, d, s) in fig_datasets() {
+        if name == "avazu" {
+            continue; // paper plots the four smaller sets here
+        }
+        let base = p4(d, 8, 16, 8).epoch_time(epoch_samples(s, 16), None);
+        let mut cells = vec![name.to_string()];
+        // keep per-row iteration count equal across B for a fair epoch
+        for b in [16usize, 64, 256, 1024] {
+            let e = p4(d, 8, b, 8).epoch_time(epoch_samples(s, b), None);
+            cells.push(format!("{:.2}x", base / e));
+        }
+        t.row(cells);
+    }
+    print!("{}", t.render());
+    println!("(paper: larger B -> higher speedup; more features -> flatter curve)");
+    t.save_csv("fig10")?;
+    Ok(())
+}
+
+/// Fig. 11: scale-up (1 worker, engines 1..8, B=64).
+pub fn fig11() -> Result<()> {
+    banner("Fig. 11", "scale-up: throughput ratio vs one engine (1 worker, B=64)");
+    let mut t = Table::new(vec!["Dataset", "E=1", "E=2", "E=4", "E=8"]);
+    for (name, d, s) in fig_datasets() {
+        if !matches!(name, "gisette" | "real_sim" | "rcv1") {
+            continue;
+        }
+        let n = epoch_samples(s, 64);
+        let base = p4(d, 1, 64, 1).epoch_time(n, None);
+        let mut cells = vec![name.to_string()];
+        for e in [1usize, 2, 4, 8] {
+            let t_e = p4(d, 1, 64, e).epoch_time(n, None);
+            cells.push(format!("{:.2}x", base / t_e));
+        }
+        t.row(cells);
+    }
+    print!("{}", t.render());
+    println!("(paper: more engines -> higher throughput; larger feature count -> closer to linear)");
+    t.save_csv("fig11")?;
+    Ok(())
+}
+
+/// Fig. 12: scale-out (8 engines, workers 1..8, B=16).
+pub fn fig12() -> Result<()> {
+    banner("Fig. 12", "scale-out: throughput ratio vs one worker (8 engines, B=16)");
+    let mut t = Table::new(vec!["Dataset", "W=1", "W=2", "W=4", "W=8"]);
+    for (name, d, s) in fig_datasets() {
+        if !matches!(name, "rcv1" | "amazon_fashion" | "avazu") {
+            continue;
+        }
+        let n = epoch_samples(s, 16);
+        let base = p4(d, 1, 16, 8).epoch_time(n, None);
+        let mut cells = vec![name.to_string()];
+        for m in [1usize, 2, 4, 8] {
+            let t_m = p4(d, m, 16, 8).epoch_time(n, None);
+            cells.push(format!("{:.2}x", base / t_m));
+        }
+        t.row(cells);
+    }
+    print!("{}", t.render());
+    println!("(paper: near-linear at 1M features — strong scale-out)");
+    t.save_csv("fig12")?;
+    Ok(())
+}
+
+/// Fig. 13: epoch time vs workers for P4SGD / SwitchML / CPUSync /
+/// GPUSync (rcv1 and amazon, B in {16, 64}).
+pub fn fig13() -> Result<()> {
+    banner("Fig. 13", "scalability comparison with CPU/GPU baselines");
+    let mut t =
+        Table::new(vec!["Dataset", "B", "W", "P4SGD", "GPUSync", "CPUSync", "SwitchML"]);
+    for (name, d, s) in fig_datasets() {
+        if name != "rcv1" && name != "amazon_fashion" {
+            continue;
+        }
+        for b in [16usize, 64] {
+            let n = epoch_samples(s, b);
+            let iters = (n / b) as f64;
+            for m in [1usize, 2, 4, 8] {
+                let p4_t = p4(d, m, b, 8).epoch_time(n, None);
+                let gpu_t = GpuModel::default().iter_mp(d, m, b) * iters;
+                let cpu_t = CpuModel::default().iter_mp(d, m, b) * iters;
+                let sml_t = SwitchMlModel::default().iter_mp(d, m, b) * iters;
+                t.row(vec![
+                    name.to_string(),
+                    b.to_string(),
+                    m.to_string(),
+                    fmt_secs(p4_t),
+                    fmt_secs(gpu_t),
+                    fmt_secs(cpu_t),
+                    fmt_secs(sml_t),
+                ]);
+            }
+        }
+    }
+    print!("{}", t.render());
+    println!("(paper: P4SGD fastest and scales; GPUSync flattens at small B; SwitchML < CPUSync)");
+    t.save_csv("fig13")?;
+    Ok(())
+}
+
+/// Functional training configuration for the convergence figures.
+fn conv_cfg(workers: usize, epochs: usize) -> SystemConfig {
+    let mut c = SystemConfig::default();
+    c.cluster.workers = workers;
+    c.cluster.engines = 4;
+    c.cluster.slots = 16;
+    c.train.loss = Loss::LogReg;
+    c.train.lr = 2.0;
+    c.train.batch = 64;
+    c.train.micro_batch = 8;
+    c.train.epochs = epochs;
+    c.net.latency_ns = 0;
+    c.net.jitter_ns = 0;
+    c.net.timeout_us = 3000;
+    c
+}
+
+/// Fig. 14: statistical efficiency — training loss vs epochs. All
+/// methods are synchronous SGD, so the curves coincide (the paper's
+/// point); we run the real distributed system and the exact oracle.
+pub fn fig14() -> Result<()> {
+    banner("Fig. 14", "statistical efficiency: loss vs epochs (B=64, logreg, 4-bit)");
+    let epochs = 12;
+    let mut t = Table::new(vec!["Dataset", "epoch", "P4SGD (distributed)", "CPU/GPU sync (oracle)"]);
+    for name in ["rcv1", "avazu"] {
+        let ds = synth::table2_like(name, 1024, 4096, Loss::LogReg, 14);
+        let cfg = conv_cfg(4, epochs);
+        let dist = mp::train_mp(&cfg, &ds, &native);
+        let oracle = reference::train(&cfg, &ds);
+        for e in (0..epochs).step_by(2) {
+            t.row(vec![
+                ds.name.clone(),
+                e.to_string(),
+                format!("{:.4}", dist.mean_loss(e, ds.n)),
+                format!("{:.4}", oracle.loss_per_epoch[e] / ds.n as f32),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+    println!("(paper: all synchronous methods need the same epochs to the same loss)");
+    t.save_csv("fig14")?;
+    Ok(())
+}
+
+/// Fig. 15: end-to-end — training loss vs *platform time*. Loss curves
+/// from the real runs; per-epoch times from the calibrated models at
+/// full dataset scale.
+pub fn fig15() -> Result<()> {
+    banner("Fig. 15", "end-to-end convergence: loss vs time (B=64)");
+    let epochs = 12;
+    let mut t = Table::new(vec![
+        "Dataset",
+        "epoch",
+        "loss",
+        "P4SGD t",
+        "GPUSync t",
+        "CPUSync t",
+    ]);
+    let mut speedups = Vec::new();
+    for name in ["rcv1", "avazu"] {
+        let sig = synth::signature(name).unwrap();
+        let ds = synth::table2_like(name, 1024, 4096, Loss::LogReg, 15);
+        let cfg = conv_cfg(4, epochs);
+        let dist = mp::train_mp(&cfg, &ds, &native);
+        let b = 64;
+        let n = epoch_samples(sig.samples, b);
+        let iters = (n / b) as f64;
+        let t_p4 = p4(sig.features, 8, b, 8).epoch_time(n, None);
+        let t_gpu = GpuModel::default().iter_mp(sig.features, 8, b) * iters;
+        let t_cpu = CpuModel::default().iter_mp(sig.features, 8, b) * iters;
+        for e in (0..epochs).step_by(2) {
+            t.row(vec![
+                ds.name.clone(),
+                e.to_string(),
+                format!("{:.4}", dist.mean_loss(e, ds.n)),
+                fmt_secs(t_p4 * (e + 1) as f64),
+                fmt_secs(t_gpu * (e + 1) as f64),
+                fmt_secs(t_cpu * (e + 1) as f64),
+            ]);
+        }
+        speedups.push((name, t_gpu / t_p4, t_cpu / t_p4));
+    }
+    print!("{}", t.render());
+    for (name, gpu, cpu) in speedups {
+        println!(
+            "{name}: P4SGD converges {gpu:.1}x faster than GPUSync, {cpu:.1}x faster than CPUSync \
+             (same epochs, per-epoch time ratio)"
+        );
+    }
+    println!("(paper: up to 6.5x vs GPUSync, up to 67x vs CPUSync)");
+    t.save_csv("fig15")?;
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! The reproduction harness: one entry point per paper table/figure.
+//!
+//! `p4sgd repro <table1|table2|table3|table4|fig8|...|fig15|all>` prints
+//! the same rows/series the paper reports and drops a CSV per experiment
+//! under `results/`. Absolute values come from our simulated substrate;
+//! the *shape* (orderings, crossovers, scaling slopes) is the claim —
+//! see DESIGN.md's per-experiment index and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod figs;
+pub mod tables;
+
+use anyhow::{bail, Result};
+
+/// Everything in paper order.
+pub const ALL: [&str; 12] = [
+    "table1", "table2", "table3", "table4", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13",
+    "fig14", "fig15",
+];
+
+/// Dispatch one experiment (or "all").
+pub fn run(which: &str) -> Result<()> {
+    match which {
+        "all" => {
+            for name in ALL {
+                run(name)?;
+                println!();
+            }
+            Ok(())
+        }
+        "table1" => tables::table1(),
+        "table2" => tables::table2(),
+        "table3" => tables::table3(),
+        "table4" => tables::table4(),
+        "fig8" => figs::fig8(),
+        "fig9" => figs::fig9(),
+        "fig10" => figs::fig10(),
+        "fig11" => figs::fig11(),
+        "fig12" => figs::fig12(),
+        "fig13" => figs::fig13(),
+        "fig14" => figs::fig14(),
+        "fig15" => figs::fig15(),
+        other => bail!("unknown experiment {other:?}; one of {ALL:?} or `all`"),
+    }
+}
+
+/// Shared banner.
+pub(crate) fn banner(tag: &str, caption: &str) {
+    println!("=== {tag} — {caption} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_experiment_is_an_error() {
+        assert!(run("fig99").is_err());
+    }
+
+    #[test]
+    fn all_list_covers_every_paper_artifact() {
+        // 4 tables + figures 8..=15
+        assert_eq!(ALL.len(), 12);
+    }
+}

@@ -1,0 +1,144 @@
+//! Paper tables 1–4.
+
+use super::banner;
+use crate::data::synth;
+use crate::energy::{row as energy_row, POWER_CPUSYNC, POWER_GPUSYNC, POWER_P4SGD};
+use crate::metrics::{fmt_secs, Table};
+use crate::timing::models::{CpuModel, FpgaModel, GpuModel, AGG_P4SGD};
+use crate::timing::{analytical, des::P4sgdSim};
+use anyhow::Result;
+
+/// Table 1: DP vs MP memory and iteration-time forms, instantiated at a
+/// representative point (avazu-scale model, 8 workers).
+pub fn table1() -> Result<()> {
+    banner("Table 1", "data parallelism vs model parallelism (analytical)");
+    let p = analytical::Params {
+        d: 1_000_000,
+        m: 8,
+        s: 404_290, // avazu/100 — S only enters memory rows
+        b: 64,
+        mb: 8,
+        bw: crate::timing::models::LINK_BYTES_PER_S / 4.0,
+        t_l: AGG_P4SGD.mean(8),
+        t_f: FpgaModel::default().t_micro(1_000_000 / 8) * 8.0,
+        t_b: FpgaModel::default().t_micro(1_000_000 / 8) * 8.0,
+    };
+    let dpm = analytical::dp_memory(&p);
+    let mpm = analytical::mp_memory(&p);
+    let mut t = Table::new(vec!["", "Model mem", "Dataset mem", "Network", "Iteration time"]);
+    t.row(vec![
+        "DP".to_string(),
+        format!("{:.0}", dpm.model),
+        format!("{:.2e}", dpm.dataset),
+        format!("{:.0}", dpm.network),
+        fmt_secs(analytical::dp_iter(&p)),
+    ]);
+    t.row(vec![
+        "Vanilla MP".to_string(),
+        format!("{:.0}", mpm.model),
+        format!("{:.2e}", mpm.dataset),
+        format!("{:.0}", mpm.network),
+        fmt_secs(analytical::vanilla_mp_iter(&p)),
+    ]);
+    t.row(vec![
+        "P4SGD MP".to_string(),
+        format!("{:.0}", mpm.model),
+        format!("{:.2e}", mpm.dataset),
+        format!("{:.0}", mpm.network),
+        fmt_secs(analytical::p4sgd_iter(&p)),
+    ]);
+    print!("{}", t.render());
+    println!("(D=1M, M=8, B=64, MB=8, 100Gb links — paper Table 1 forms instantiated)");
+    t.save_csv("table1")?;
+    Ok(())
+}
+
+/// Table 2: the evaluated datasets (full signatures + the scaled shapes
+/// the functional runs use).
+pub fn table2() -> Result<()> {
+    banner("Table 2", "evaluated datasets");
+    let mut t = Table::new(vec!["Dataset", "Samples", "Features", "Classes", "Functional shape"]);
+    for sig in synth::TABLE2 {
+        let ds = synth::table2_like(sig.name, 2048, 8192, crate::glm::Loss::LogReg, 1);
+        t.row(vec![
+            sig.name.to_string(),
+            sig.samples.to_string(),
+            sig.features.to_string(),
+            sig.classes.to_string(),
+            ds.name,
+        ]);
+    }
+    print!("{}", t.render());
+    println!("(full signatures drive the timing models; functional runs use the scaled synthetic shapes)");
+    t.save_csv("table2")?;
+    Ok(())
+}
+
+/// Table 3: worker resource consumption by engine count.
+pub fn table3() -> Result<()> {
+    banner("Table 3", "resource consumption of a worker with 8 engines");
+    let mut t = Table::new(vec!["Hardware module", "LUTs", "REGs", "RAMs", "DSPs"]);
+    for (name, r) in crate::fpga::table3(8) {
+        t.row(vec![
+            name,
+            format!("{:.0}K", r.luts / 1e3),
+            format!("{:.0}K", r.regs / 1e3),
+            format!("{:.1}Mb", r.ram_mb),
+            format!("{:.0}", r.dsps),
+        ]);
+    }
+    let u = crate::fpga::utilization(&crate::fpga::worker(8));
+    t.row(vec![
+        "Utilization".to_string(),
+        format!("{:.0}%", u.luts * 100.0),
+        format!("{:.0}%", u.regs * 100.0),
+        format!("{:.1}%", u.ram_mb * 100.0),
+        format!("{:.0}%", u.dsps * 100.0),
+    ]);
+    print!("{}", t.render());
+    t.save_csv("table3")?;
+    Ok(())
+}
+
+/// Table 4: energy consumption on rcv1 and avazu (8 workers), times from
+/// the convergence model (epochs-to-converge x modeled epoch time).
+pub fn table4() -> Result<()> {
+    banner("Table 4", "energy consumption, 8 workers");
+    let mut t = Table::new(vec!["Method", "Dataset", "Time(s)", "Total Power(W)", "Energy(J)"]);
+    for (name, epochs) in [("rcv1", 20usize), ("avazu", 12usize)] {
+        let sig = synth::signature(name).unwrap();
+        // avazu's 40M samples are modelled at the paper's own subsample
+        // rate implied by its 4.12s runtime; use S/10 epochs-equivalent.
+        let s_eff = if name == "avazu" { sig.samples / 10 } else { sig.samples };
+        let b = 64;
+        let p4 = P4sgdSim {
+            fpga: FpgaModel::default(),
+            agg: AGG_P4SGD,
+            d: sig.features,
+            m: 8,
+            b,
+            mb: 8,
+        };
+        let t_p4 = p4.epoch_time(s_eff, None) * epochs as f64;
+        let iters = (s_eff / b) as f64;
+        let t_gpu = GpuModel::default().iter_mp(sig.features, 8, b) * iters * epochs as f64;
+        let t_cpu = CpuModel::default().iter_mp(sig.features, 8, b) * iters * epochs as f64;
+        for r in [
+            energy_row(&POWER_P4SGD, name, 8, t_p4),
+            energy_row(&POWER_GPUSYNC, name, 8, t_gpu),
+            energy_row(&POWER_CPUSYNC, name, 8, t_cpu),
+        ] {
+            t.row(vec![
+                r.method.to_string(),
+                r.dataset.clone(),
+                format!("{:.2}", r.time_s),
+                format!("{:.0}", r.power_w),
+                format!("{:.0}", r.energy_j),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+    println!("(paper: P4SGD 143J/2175J, GPUSync 1619J/10028J, CPUSync 7142J/63612J)");
+    t.save_csv("table4")?;
+    Ok(())
+}

@@ -1,0 +1,157 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime. One line per artifact: `kind d mb loss path`.
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Artifact kinds (matching aot.py).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Kind {
+    Fwd,
+    Bwd,
+    Step,
+    Update,
+    Loss,
+}
+
+impl std::str::FromStr for Kind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "fwd" => Kind::Fwd,
+            "bwd" => Kind::Bwd,
+            "step" => Kind::Step,
+            "update" => Kind::Update,
+            "loss" => Kind::Loss,
+            other => bail!("unknown artifact kind {other:?}"),
+        })
+    }
+}
+
+/// One manifest row.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Entry {
+    pub kind: Kind,
+    /// Feature width (0 where not applicable, e.g. loss).
+    pub d: usize,
+    /// Micro-batch size (0 where not applicable, e.g. update).
+    pub mb: usize,
+    /// Loss tag or "-" for loss-independent artifacts.
+    pub loss: String,
+    pub path: PathBuf,
+}
+
+/// Parsed manifest with variant lookup.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub entries: Vec<Entry>,
+}
+
+impl Manifest {
+    /// Parse `<dir>/manifest.txt`; paths become absolute under `dir`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let mut entries = Vec::new();
+        for (no, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_ascii_whitespace().collect();
+            if parts.len() != 5 {
+                bail!("manifest line {}: expected 5 fields, got {}", no + 1, parts.len());
+            }
+            entries.push(Entry {
+                kind: parts[0].parse()?,
+                d: parts[1].parse().with_context(|| format!("line {}: d", no + 1))?,
+                mb: parts[2].parse().with_context(|| format!("line {}: mb", no + 1))?,
+                loss: parts[3].to_string(),
+                path: dir.join(parts[4]),
+            });
+        }
+        if entries.is_empty() {
+            bail!("empty manifest");
+        }
+        Ok(Manifest { entries })
+    }
+
+    /// The smallest feature-width variant of `kind`/`loss` that fits
+    /// `d_min` features at micro-batch `mb` (0 = don't care).
+    pub fn pick(&self, kind: Kind, d_min: usize, mb: usize, loss: &str) -> Option<&Entry> {
+        self.entries
+            .iter()
+            .filter(|e| {
+                e.kind == kind
+                    && e.d >= d_min
+                    && (mb == 0 || e.mb == mb)
+                    && (e.loss == loss || e.loss == "-")
+            })
+            .min_by_key(|e| e.d)
+    }
+
+    /// All feature-width variants available for a kind.
+    pub fn widths(&self, kind: Kind) -> Vec<usize> {
+        let mut ds: Vec<usize> = self.entries.iter().filter(|e| e.kind == kind).map(|e| e.d).collect();
+        ds.sort_unstable();
+        ds.dedup();
+        ds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+fwd 256 8 - fwd_d256_mb8.hlo.txt
+fwd 1024 8 - fwd_d1024_mb8.hlo.txt
+bwd 256 8 logreg bwd_logreg_d256_mb8.hlo.txt
+update 256 0 - update_d256.hlo.txt
+loss 0 8 logreg loss_logreg_mb8.hlo.txt
+";
+
+    #[test]
+    fn parses_all_rows() {
+        let m = Manifest::parse(SAMPLE, Path::new("/a")).unwrap();
+        assert_eq!(m.entries.len(), 5);
+        assert_eq!(m.entries[0].kind, Kind::Fwd);
+        assert_eq!(m.entries[0].path, Path::new("/a/fwd_d256_mb8.hlo.txt"));
+    }
+
+    #[test]
+    fn pick_chooses_smallest_fitting_width() {
+        let m = Manifest::parse(SAMPLE, Path::new("/a")).unwrap();
+        assert_eq!(m.pick(Kind::Fwd, 100, 8, "-").unwrap().d, 256);
+        assert_eq!(m.pick(Kind::Fwd, 257, 8, "-").unwrap().d, 1024);
+        assert_eq!(m.pick(Kind::Fwd, 256, 8, "-").unwrap().d, 256);
+        assert!(m.pick(Kind::Fwd, 5000, 8, "-").is_none());
+    }
+
+    #[test]
+    fn pick_respects_loss_and_mb() {
+        let m = Manifest::parse(SAMPLE, Path::new("/a")).unwrap();
+        assert!(m.pick(Kind::Bwd, 100, 8, "logreg").is_some());
+        assert!(m.pick(Kind::Bwd, 100, 8, "svm").is_none());
+        assert!(m.pick(Kind::Fwd, 100, 16, "-").is_none());
+        assert!(m.pick(Kind::Loss, 0, 8, "logreg").is_some());
+    }
+
+    #[test]
+    fn widths_sorted_unique() {
+        let m = Manifest::parse(SAMPLE, Path::new("/a")).unwrap();
+        assert_eq!(m.widths(Kind::Fwd), vec![256, 1024]);
+    }
+
+    #[test]
+    fn malformed_rows_rejected() {
+        assert!(Manifest::parse("fwd 256 8", Path::new("/")).is_err());
+        assert!(Manifest::parse("nope 1 2 - x", Path::new("/")).is_err());
+        assert!(Manifest::parse("", Path::new("/")).is_err());
+    }
+}

@@ -1,0 +1,218 @@
+//! End-host parameter-server aggregation — the "CPUSync"/"GPUSync"
+//! communication path (paper Fig. 8's software baselines).
+//!
+//! Semantically the same AllReduce as the P4 switch, but running on an
+//! end host: every operation crosses switch -> host NIC -> software stack
+//! and back, so latency picks up the extra hops and software jitter.
+//! Those costs live in the DES device model; the state machine here
+//! provides the same dedup/retransmission correctness so the functional
+//! harness can run against it too.
+//!
+//! Like real software PS protocols (and unlike paper Alg. 2, which has an
+//! explicit ACK round), slot reuse is disambiguated with a **round-parity
+//! bit** carried in the top bit of `seq`: a retransmission keeps the
+//! parity of its round, the next use of the slot flips it. The PS retains
+//! the last completed result per (slot, parity) and answers
+//! retransmissions from it point-to-point.
+
+use super::{Action, AggServer};
+use crate::net::NodeId;
+use crate::protocol::Packet;
+
+#[derive(Debug, Clone, Default)]
+struct Round {
+    agg: Vec<i32>,
+    bm: u32,
+    count: u32,
+    done: bool,
+}
+
+/// Host-based parameter server with parity-disambiguated slots.
+pub struct HostPs {
+    /// `rounds[parity][slot]`.
+    rounds: [Vec<Round>; 2],
+    workers: usize,
+    pub completed_ops: u64,
+}
+
+impl HostPs {
+    pub fn new(slots: usize, workers: usize, payload_len: usize) -> Self {
+        let mk = || {
+            (0..slots)
+                .map(|_| Round { agg: vec![0; payload_len], ..Round::default() })
+                .collect::<Vec<_>>()
+        };
+        Self { rounds: [mk(), mk()], workers, completed_ops: 0 }
+    }
+
+    /// Compose a wire `seq` from slot index + round parity.
+    pub fn seq_of(slot: u16, parity: u8) -> u16 {
+        debug_assert!(slot < 1 << 15);
+        slot | ((parity as u16) << 15)
+    }
+
+    fn split_seq(seq: u16) -> (usize, usize) {
+        ((seq & 0x7FFF) as usize, (seq >> 15) as usize)
+    }
+}
+
+impl AggServer for HostPs {
+    fn handle(&mut self, src: NodeId, pkt: &Packet) -> Vec<Action> {
+        if !pkt.is_agg {
+            // PS protocol has no ACK round.
+            return Vec::new();
+        }
+        let (slot, parity) = Self::split_seq(pkt.seq);
+        let w = self.workers as u32;
+
+        // First touch of this (slot, parity) round resets stale state
+        // left from its previous occupancy (two uses back).
+        let round = &mut self.rounds[parity][slot];
+        if round.done && round.bm & pkt.bm == 0 {
+            // A *new* worker bit on a finished round cannot happen within
+            // one round (every worker contributed); it means the slot
+            // wrapped all the way around. Reset.
+            round.agg.iter_mut().for_each(|a| *a = 0);
+            round.bm = 0;
+            round.count = 0;
+            round.done = false;
+        }
+
+        if round.done {
+            // Retransmission after completion: unicast the kept result.
+            let mut out = pkt.clone();
+            out.payload.copy_from_slice(&round.agg);
+            out.acked = true;
+            return vec![Action::Unicast(src, out)];
+        }
+
+        if round.bm & pkt.bm == 0 {
+            round.count += 1;
+            round.bm |= pkt.bm;
+            for (a, &p) in round.agg.iter_mut().zip(&pkt.payload) {
+                *a = a.wrapping_add(p);
+            }
+            if round.count == w {
+                round.done = true;
+                self.completed_ops += 1;
+                // Completion also implicitly retires the opposite parity
+                // round of this slot (its result can no longer be asked
+                // for by a correct client).
+                let old = &mut self.rounds[1 - parity][slot];
+                old.agg.iter_mut().for_each(|a| *a = 0);
+                old.bm = 0;
+                old.count = 0;
+                old.done = false;
+
+                let round = &self.rounds[parity][slot];
+                let mut out = pkt.clone();
+                out.payload.copy_from_slice(&round.agg);
+                out.acked = true;
+                // Software PS unicasts to each worker (no replication
+                // engine); the transport cost model charges per send.
+                return (0..self.workers).map(|wk| Action::Unicast(wk, out.clone())).collect();
+            }
+        }
+        Vec::new()
+    }
+
+    fn workers(&self) -> usize {
+        self.workers
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pa(slot: u16, parity: u8, worker: usize, vals: &[i32]) -> Packet {
+        Packet::pa(HostPs::seq_of(slot, parity), worker, vals.to_vec())
+    }
+
+    #[test]
+    fn completes_with_unicasts_to_all() {
+        let mut ps = HostPs::new(2, 3, 2);
+        assert!(ps.handle(0, &pa(0, 0, 0, &[1, 1])).is_empty());
+        assert!(ps.handle(1, &pa(0, 0, 1, &[2, 2])).is_empty());
+        let acts = ps.handle(2, &pa(0, 0, 2, &[3, 3]));
+        assert_eq!(acts.len(), 3);
+        for (i, act) in acts.iter().enumerate() {
+            match act {
+                Action::Unicast(dst, out) => {
+                    assert_eq!(*dst, i);
+                    assert_eq!(out.payload, vec![6, 6]);
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+        assert_eq!(ps.completed_ops, 1);
+    }
+
+    #[test]
+    fn retransmission_after_done_served_unicast() {
+        let mut ps = HostPs::new(1, 2, 1);
+        ps.handle(0, &pa(0, 0, 0, &[4]));
+        ps.handle(1, &pa(0, 0, 1, &[5]));
+        let acts = ps.handle(1, &pa(0, 0, 1, &[5]));
+        assert_eq!(acts.len(), 1);
+        match &acts[0] {
+            Action::Unicast(dst, out) => {
+                assert_eq!(*dst, 1);
+                assert_eq!(out.payload, vec![9]);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn slot_reuse_with_flipped_parity() {
+        let mut ps = HostPs::new(1, 2, 1);
+        ps.handle(0, &pa(0, 0, 0, &[1]));
+        ps.handle(1, &pa(0, 0, 1, &[2]));
+        // next round on the same slot, parity 1
+        ps.handle(0, &pa(0, 1, 0, &[10]));
+        let acts = ps.handle(1, &pa(0, 1, 1, &[20]));
+        match &acts[0] {
+            Action::Unicast(_, out) => assert_eq!(out.payload, vec![30]),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(ps.completed_ops, 2);
+        // and back to parity 0 for round 3
+        ps.handle(0, &pa(0, 0, 0, &[100]));
+        let acts = ps.handle(1, &pa(0, 0, 1, &[200]));
+        match &acts[0] {
+            Action::Unicast(_, out) => assert_eq!(out.payload, vec![300]),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn late_retransmission_of_previous_round_parity_is_served() {
+        let mut ps = HostPs::new(1, 2, 1);
+        ps.handle(0, &pa(0, 0, 0, &[1]));
+        ps.handle(1, &pa(0, 0, 1, &[2]));
+        // worker 1 lost the result, retransmits parity 0 while worker 0
+        // has already moved to parity 1
+        ps.handle(0, &pa(0, 1, 0, &[10]));
+        let acts = ps.handle(1, &pa(0, 0, 1, &[2]));
+        assert_eq!(acts.len(), 1, "must be answered from retained parity-0 result");
+        match &acts[0] {
+            Action::Unicast(_, out) => assert_eq!(out.payload, vec![3]),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn duplicate_before_completion_ignored() {
+        let mut ps = HostPs::new(1, 2, 1);
+        ps.handle(0, &pa(0, 0, 0, &[1]));
+        assert!(ps.handle(0, &pa(0, 0, 0, &[1])).is_empty());
+        assert_eq!(ps.rounds[0][0].count, 1);
+    }
+
+    #[test]
+    fn stray_ack_is_noop() {
+        let mut ps = HostPs::new(1, 2, 1);
+        assert!(ps.handle(0, &Packet::ack(0, 0)).is_empty());
+    }
+}

@@ -1,0 +1,41 @@
+//! Aggregation servers: the P4SGD in-switch protocol and the baselines
+//! it is evaluated against.
+//!
+//! * [`p4::P4Switch`] — paper Algorithm 2, the latency-centric protocol
+//!   (contribution C3): single aggregation copy, dedup bitmaps,
+//!   second-round ACKs that let slots recycle without shadow copies.
+//! * [`switchml::SwitchMlSwitch`] — the SwitchML comparator: shadow-copy
+//!   pool pairs, implicit ACK via next-use, 256 B minimum payloads.
+//! * [`host_ps::HostPs`] — end-host parameter server ("CPUSync"/
+//!   "GPUSync" aggregation path): same semantics, but every operation
+//!   crosses the extra hop and the host software stack.
+//!
+//! All three are **pure state machines** (`handle(packet) -> actions`) so
+//! the same logic runs under the threaded `SimNet`, the UDP transport,
+//! and the virtual-time DES used for Fig. 8.
+
+pub mod host_ps;
+pub mod p4;
+pub mod runner;
+pub mod switchml;
+
+use crate::net::NodeId;
+use crate::protocol::Packet;
+
+/// What a server wants the transport to do with a packet.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Action {
+    /// Send to one node.
+    Unicast(NodeId, Packet),
+    /// Send to every worker (the Tofino packet-replication engine).
+    Multicast(Packet),
+}
+
+/// A transport-agnostic aggregation server.
+pub trait AggServer: Send {
+    /// Process one ingress packet, returning the egress actions.
+    fn handle(&mut self, src: NodeId, pkt: &Packet) -> Vec<Action>;
+
+    /// Number of workers this server aggregates over.
+    fn workers(&self) -> usize;
+}

@@ -1,0 +1,312 @@
+//! Paper Algorithm 2: the P4SGD switch data plane.
+//!
+//! The Tofino register arrays map to plain vectors here, one element per
+//! aggregation slot:
+//!
+//! * `agg`        — the single aggregation copy (no shadow copy)
+//! * `agg_count`, `agg_bm` — how many / which workers contributed
+//! * `ack_count`, `ack_bm` — how many / which workers acknowledged FA
+//!
+//! Both bitmaps exist to dedup worker retransmissions; the ACK round is
+//! what lets the switch clear a slot *knowing* every worker holds FA,
+//! which is the latency-centric alternative to SwitchML's shadow copy
+//! (paper §3.3). Aggregation is wrapping i32 addition — exactly what the
+//! Tofino ALUs do.
+
+use super::{Action, AggServer};
+use crate::net::NodeId;
+use crate::protocol::Packet;
+
+/// Per-slot register state.
+#[derive(Debug, Clone, Default)]
+struct Slot {
+    agg: Vec<i32>,
+    agg_count: u32,
+    agg_bm: u32,
+    ack_count: u32,
+    ack_bm: u32,
+}
+
+/// Observability counters (tests + reports).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SwitchStats {
+    pub agg_packets: u64,
+    pub ack_packets: u64,
+    pub dup_agg: u64,
+    pub dup_ack: u64,
+    pub fa_multicasts: u64,
+    pub confirm_multicasts: u64,
+}
+
+/// The P4 switch state machine (Algorithm 2).
+pub struct P4Switch {
+    slots: Vec<Slot>,
+    workers: usize,
+    payload_len: usize,
+    pub stats: SwitchStats,
+}
+
+impl P4Switch {
+    /// `slots` aggregation slots for `workers` workers, payloads of
+    /// `payload_len` elements (MB).
+    pub fn new(slots: usize, workers: usize, payload_len: usize) -> Self {
+        assert!(workers >= 1 && workers <= 32, "bm is a 32-bit bitmap");
+        Self {
+            slots: (0..slots)
+                .map(|_| Slot { agg: vec![0; payload_len], ..Slot::default() })
+                .collect(),
+            workers,
+            payload_len,
+            stats: SwitchStats::default(),
+        }
+    }
+
+    /// All-workers bitmap.
+    #[allow(dead_code)]
+    fn full_bm(&self) -> u32 {
+        if self.workers == 32 {
+            u32::MAX
+        } else {
+            (1u32 << self.workers) - 1
+        }
+    }
+
+    /// Test/diagnostic view of a slot's registers:
+    /// `(agg_count, agg_bm, ack_count, ack_bm)`.
+    pub fn registers(&self, seq: u16) -> (u32, u32, u32, u32) {
+        let s = &self.slots[seq as usize];
+        (s.agg_count, s.agg_bm, s.ack_count, s.ack_bm)
+    }
+
+    pub fn num_slots(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+impl AggServer for P4Switch {
+    fn handle(&mut self, _src: NodeId, pkt: &Packet) -> Vec<Action> {
+        let w = self.workers as u32;
+        let seq = pkt.seq as usize;
+        assert!(seq < self.slots.len(), "seq {seq} out of range");
+        let slot = &mut self.slots[seq];
+
+        if pkt.is_agg {
+            self.stats.agg_packets += 1;
+            debug_assert_eq!(pkt.payload.len(), self.payload_len, "payload length");
+            // Alg. 2 lines 3-11: first contribution from this worker?
+            if slot.agg_bm & pkt.bm == 0 {
+                slot.agg_count += 1;
+                slot.agg_bm |= pkt.bm;
+                for (a, &p) in slot.agg.iter_mut().zip(&pkt.payload) {
+                    *a = a.wrapping_add(p);
+                }
+                if slot.agg_count == w {
+                    // Aggregation complete: open the ACK round.
+                    slot.ack_count = 0;
+                    slot.ack_bm = 0;
+                }
+            } else {
+                self.stats.dup_agg += 1;
+            }
+            // Alg. 2 lines 12-15: complete (incl. on retransmissions) =>
+            // multicast FA to every worker.
+            if slot.agg_count == w {
+                let mut out = pkt.clone();
+                out.payload.copy_from_slice(&slot.agg);
+                out.acked = true;
+                self.stats.fa_multicasts += 1;
+                return vec![Action::Multicast(out)];
+            }
+            Vec::new()
+        } else {
+            self.stats.ack_packets += 1;
+            // Alg. 2 lines 18-26.
+            if slot.ack_bm & pkt.bm == 0 {
+                slot.ack_count += 1;
+                slot.ack_bm |= pkt.bm;
+                if slot.ack_count == w {
+                    // Every worker holds FA: the single copy can go.
+                    slot.agg_count = 0;
+                    slot.agg_bm = 0;
+                    slot.agg.iter_mut().for_each(|a| *a = 0);
+                }
+            } else {
+                self.stats.dup_ack += 1;
+            }
+            // Alg. 2 lines 27-29: confirm to all workers.
+            if slot.ack_count == w {
+                let mut out = pkt.clone();
+                out.acked = true;
+                self.stats.confirm_multicasts += 1;
+                return vec![Action::Multicast(out)];
+            }
+            Vec::new()
+        }
+    }
+
+    fn workers(&self) -> usize {
+        self.workers
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pa(seq: u16, worker: usize, vals: &[i32]) -> Packet {
+        Packet::pa(seq, worker, vals.to_vec())
+    }
+
+    fn drive(sw: &mut P4Switch, pkt: Packet) -> Vec<Action> {
+        sw.handle(0, &pkt)
+    }
+
+    #[test]
+    fn aggregates_and_multicasts_on_last_contribution() {
+        let mut sw = P4Switch::new(4, 3, 2);
+        assert!(drive(&mut sw, pa(0, 0, &[1, 10])).is_empty());
+        assert!(drive(&mut sw, pa(0, 1, &[2, 20])).is_empty());
+        let acts = drive(&mut sw, pa(0, 2, &[3, 30]));
+        assert_eq!(acts.len(), 1);
+        match &acts[0] {
+            Action::Multicast(out) => {
+                assert_eq!(out.payload, vec![6, 60]);
+                assert!(out.is_agg && out.acked);
+            }
+            other => panic!("expected multicast, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn duplicate_pa_does_not_double_count() {
+        let mut sw = P4Switch::new(2, 2, 1);
+        drive(&mut sw, pa(0, 0, &[5]));
+        drive(&mut sw, pa(0, 0, &[5])); // retransmission
+        assert_eq!(sw.registers(0).0, 1, "agg_count");
+        assert_eq!(sw.stats.dup_agg, 1);
+        let acts = drive(&mut sw, pa(0, 1, &[7]));
+        match &acts[0] {
+            Action::Multicast(out) => assert_eq!(out.payload, vec![12]),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn retransmitted_pa_after_complete_remulticasts_fa() {
+        // A worker that lost the FA broadcast retransmits PA and must be
+        // answered (Alg. 2 line 12 sits outside the dedup branch).
+        let mut sw = P4Switch::new(2, 2, 1);
+        drive(&mut sw, pa(0, 0, &[5]));
+        drive(&mut sw, pa(0, 1, &[7]));
+        let acts = drive(&mut sw, pa(0, 1, &[7]));
+        assert_eq!(acts.len(), 1);
+        match &acts[0] {
+            Action::Multicast(out) => assert_eq!(out.payload, vec![12]),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(sw.stats.fa_multicasts, 2);
+    }
+
+    #[test]
+    fn ack_round_clears_slot_for_reuse() {
+        let mut sw = P4Switch::new(2, 2, 1);
+        drive(&mut sw, pa(0, 0, &[5]));
+        drive(&mut sw, pa(0, 1, &[7]));
+        drive(&mut sw, Packet::ack(0, 0));
+        assert_eq!(sw.registers(0), (2, 0b11, 1, 0b01));
+        let acts = drive(&mut sw, Packet::ack(0, 1));
+        // slot cleared...
+        assert_eq!(sw.registers(0), (0, 0, 2, 0b11));
+        // ...and confirm multicast emitted
+        match &acts[0] {
+            Action::Multicast(out) => {
+                assert!(!out.is_agg && out.acked);
+            }
+            other => panic!("{other:?}"),
+        }
+        // slot is reusable: a fresh round aggregates from zero
+        drive(&mut sw, pa(0, 0, &[100]));
+        let acts = drive(&mut sw, pa(0, 1, &[200]));
+        match &acts[0] {
+            Action::Multicast(out) => assert_eq!(out.payload, vec![300]),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn duplicate_ack_does_not_double_count() {
+        let mut sw = P4Switch::new(2, 3, 1);
+        for wkr in 0..3 {
+            drive(&mut sw, pa(0, wkr, &[1]));
+        }
+        drive(&mut sw, Packet::ack(0, 0));
+        drive(&mut sw, Packet::ack(0, 0));
+        assert_eq!(sw.registers(0).2, 1, "ack_count");
+        assert_eq!(sw.stats.dup_ack, 1);
+    }
+
+    #[test]
+    fn late_ack_retransmission_is_reconfirmed() {
+        // After the slot cleared, a worker that missed the confirm
+        // retransmits its ACK; ack_count is still W, so the switch
+        // re-multicasts the confirm (liveness).
+        let mut sw = P4Switch::new(2, 2, 1);
+        drive(&mut sw, pa(0, 0, &[5]));
+        drive(&mut sw, pa(0, 1, &[7]));
+        drive(&mut sw, Packet::ack(0, 0));
+        drive(&mut sw, Packet::ack(0, 1));
+        let acts = drive(&mut sw, Packet::ack(0, 1));
+        assert_eq!(acts.len(), 1, "late ACK must be answered");
+        assert_eq!(sw.stats.confirm_multicasts, 2);
+    }
+
+    #[test]
+    fn ack_state_resets_when_next_round_completes() {
+        // Round r: complete + fully ACKed. Round r+1 on the same slot:
+        // completion must reset ack registers (Alg. 2 lines 7-9).
+        let mut sw = P4Switch::new(1, 2, 1);
+        drive(&mut sw, pa(0, 0, &[1]));
+        drive(&mut sw, pa(0, 1, &[1]));
+        drive(&mut sw, Packet::ack(0, 0));
+        drive(&mut sw, Packet::ack(0, 1));
+        // round r+1
+        drive(&mut sw, pa(0, 0, &[2]));
+        drive(&mut sw, pa(0, 1, &[2]));
+        let (_, _, ack_count, ack_bm) = sw.registers(0);
+        assert_eq!((ack_count, ack_bm), (0, 0), "ack regs must reset at completion");
+    }
+
+    #[test]
+    fn slots_are_independent() {
+        let mut sw = P4Switch::new(4, 2, 1);
+        drive(&mut sw, pa(0, 0, &[1]));
+        drive(&mut sw, pa(1, 0, &[10]));
+        assert!(drive(&mut sw, pa(1, 1, &[20])).len() == 1);
+        // slot 0 still waiting
+        assert_eq!(sw.registers(0).0, 1);
+    }
+
+    #[test]
+    fn wrapping_addition_like_tofino() {
+        let mut sw = P4Switch::new(1, 2, 1);
+        drive(&mut sw, pa(0, 0, &[i32::MAX]));
+        let acts = drive(&mut sw, pa(0, 1, &[1]));
+        match &acts[0] {
+            Action::Multicast(out) => assert_eq!(out.payload, vec![i32::MIN]),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn thirty_two_workers_supported() {
+        let mut sw = P4Switch::new(1, 32, 1);
+        for wkr in 0..31 {
+            assert!(drive(&mut sw, pa(0, wkr, &[1])).is_empty());
+        }
+        let acts = drive(&mut sw, pa(0, 31, &[1]));
+        match &acts[0] {
+            Action::Multicast(out) => assert_eq!(out.payload, vec![32]),
+            other => panic!("{other:?}"),
+        }
+    }
+}

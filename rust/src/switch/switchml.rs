@@ -1,0 +1,196 @@
+//! SwitchML baseline (Sapio et al., NSDI'21) — the throughput-centric
+//! in-switch aggregation P4SGD is contrasted against (paper §3.3, Fig. 8).
+//!
+//! Key differences from Algorithm 2, faithfully modelled:
+//!
+//! * **Shadow copies**: each logical slot is a *pair* of pool entries.
+//!   Chunk `k` uses slot `k % s` in pool `(k / s) % 2`. The result for
+//!   pool `p` is retained until the first packet of the slot's next use
+//!   (other pool) arrives — that packet is the *implicit, delayed ACK*.
+//!   Consequence: the switch needs 2x the register space for the same
+//!   number of outstanding operations ("SwitchML can support half as
+//!   many outstanding aggregation operations ... under the same resource
+//!   budget").
+//! * **256 B minimum payload**: SwitchML's wire format carries 64 x i32
+//!   per packet; an MB=8 aggregation still pays for 64 (PAD_TO).
+//! * No explicit ACK round: a lost broadcast is recovered by worker
+//!   retransmission of the *request*, answered from the retained result.
+//!
+//! The latency consequence measured in Fig. 8 — SwitchML slower than
+//! even host aggregation for tiny payloads — comes from the bigger
+//! packets plus the end-host packet preparation its design assumes; the
+//! DES models those costs (`timing::models`).
+
+use super::{Action, AggServer};
+use crate::net::NodeId;
+use crate::protocol::Packet;
+
+/// SwitchML payload granularity: 64 x 4 B = 256 B.
+pub const PAD_TO: usize = 64;
+
+#[derive(Debug, Clone, Default)]
+struct PoolEntry {
+    agg: Vec<i32>,
+    count: u32,
+    bm: u32,
+    /// Completed result retained for retransmissions (shadow copy).
+    done: bool,
+}
+
+/// Stats for tests/reports.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SwitchMlStats {
+    pub packets: u64,
+    pub dup: u64,
+    pub broadcasts: u64,
+    pub recycles: u64,
+}
+
+/// The SwitchML-style aggregation switch.
+pub struct SwitchMlSwitch {
+    /// `pools[p][slot]`, p in {0, 1}.
+    pools: [Vec<PoolEntry>; 2],
+    workers: usize,
+    payload_len: usize,
+    pub stats: SwitchMlStats,
+}
+
+impl SwitchMlSwitch {
+    pub fn new(slots: usize, workers: usize, payload_len: usize) -> Self {
+        assert!(payload_len <= PAD_TO, "SwitchML chunks are {PAD_TO} elements");
+        let mk = || {
+            (0..slots)
+                .map(|_| PoolEntry { agg: vec![0; PAD_TO], ..PoolEntry::default() })
+                .collect::<Vec<_>>()
+        };
+        Self { pools: [mk(), mk()], workers, payload_len, stats: SwitchMlStats::default() }
+    }
+
+    fn full_count(&self) -> u32 {
+        self.workers as u32
+    }
+
+    /// Pool parity is carried in the top bit of `seq` on our wire.
+    pub fn seq_of(slot: u16, pool: u8) -> u16 {
+        debug_assert!(slot < 1 << 15);
+        slot | ((pool as u16) << 15)
+    }
+
+    fn split_seq(seq: u16) -> (usize, usize) {
+        ((seq & 0x7FFF) as usize, (seq >> 15) as usize)
+    }
+}
+
+impl AggServer for SwitchMlSwitch {
+    fn handle(&mut self, _src: NodeId, pkt: &Packet) -> Vec<Action> {
+        self.stats.packets += 1;
+        let (slot, pool) = Self::split_seq(pkt.seq);
+        let w = self.full_count();
+
+        // Implicit delayed ACK: first touch of (slot, pool) recycles the
+        // *other* pool's retained result for this slot.
+        let fresh_use =
+            self.pools[pool][slot].bm & pkt.bm == 0 && self.pools[pool][slot].count == 0;
+        let other = &mut self.pools[1 - pool][slot];
+        if other.done && fresh_use {
+            other.count = 0;
+            other.bm = 0;
+            other.done = false;
+            other.agg.iter_mut().for_each(|a| *a = 0);
+            self.stats.recycles += 1;
+        }
+
+        let entry = &mut self.pools[pool][slot];
+        if entry.bm & pkt.bm == 0 {
+            entry.count += 1;
+            entry.bm |= pkt.bm;
+            for (a, &p) in entry.agg.iter_mut().zip(&pkt.payload) {
+                *a = a.wrapping_add(p);
+            }
+            if entry.count == w {
+                entry.done = true;
+            }
+        } else {
+            self.stats.dup += 1;
+        }
+        if entry.done {
+            // Broadcast (or re-broadcast to answer a retransmission).
+            let mut out = pkt.clone();
+            out.payload = entry.agg[..self.payload_len.max(pkt.payload.len())].to_vec();
+            out.acked = true;
+            self.stats.broadcasts += 1;
+            return vec![Action::Multicast(out)];
+        }
+        Vec::new()
+    }
+
+    fn workers(&self) -> usize {
+        self.workers
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pa(slot: u16, pool: u8, worker: usize, vals: &[i32]) -> Packet {
+        Packet::pa(SwitchMlSwitch::seq_of(slot, pool), worker, vals.to_vec())
+    }
+
+    #[test]
+    fn aggregates_like_p4_for_one_round() {
+        let mut sw = SwitchMlSwitch::new(4, 2, 8);
+        assert!(sw.handle(0, &pa(0, 0, 0, &[1; 8])).is_empty());
+        let acts = sw.handle(0, &pa(0, 0, 1, &[2; 8]));
+        match &acts[0] {
+            Action::Multicast(out) => assert_eq!(&out.payload[..8], &[3; 8]),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn retransmission_answered_from_shadow_copy() {
+        let mut sw = SwitchMlSwitch::new(4, 2, 8);
+        sw.handle(0, &pa(0, 0, 0, &[1; 8]));
+        sw.handle(0, &pa(0, 0, 1, &[2; 8]));
+        // worker 1 lost the broadcast; retransmits
+        let acts = sw.handle(0, &pa(0, 0, 1, &[2; 8]));
+        assert_eq!(acts.len(), 1, "served from retained result");
+        assert_eq!(sw.stats.dup, 1);
+    }
+
+    #[test]
+    fn next_pool_use_recycles_other_pool() {
+        let mut sw = SwitchMlSwitch::new(1, 2, 8);
+        // round 0 on pool 0
+        sw.handle(0, &pa(0, 0, 0, &[1; 8]));
+        sw.handle(0, &pa(0, 0, 1, &[1; 8]));
+        // round 1 on pool 1: first packet implicitly ACKs pool 0
+        sw.handle(0, &pa(0, 1, 0, &[5; 8]));
+        assert_eq!(sw.stats.recycles, 1);
+        sw.handle(0, &pa(0, 1, 1, &[5; 8]));
+        // round 2 back on pool 0: must aggregate fresh
+        sw.handle(0, &pa(0, 0, 0, &[7; 8]));
+        let acts = sw.handle(0, &pa(0, 0, 1, &[7; 8]));
+        match &acts[0] {
+            Action::Multicast(out) => assert_eq!(&out.payload[..8], &[14; 8]),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn double_register_cost_vs_p4() {
+        // Structural claim from the paper: same outstanding ops => 2x
+        // register entries. 4 logical slots => 8 pool entries.
+        let sw = SwitchMlSwitch::new(4, 2, 8);
+        assert_eq!(sw.pools[0].len() + sw.pools[1].len(), 8);
+    }
+
+    #[test]
+    fn duplicate_within_round_not_double_counted() {
+        let mut sw = SwitchMlSwitch::new(2, 3, 4);
+        sw.handle(0, &pa(1, 0, 2, &[3; 4]));
+        sw.handle(0, &pa(1, 0, 2, &[3; 4]));
+        assert_eq!(sw.pools[0][1].count, 1);
+    }
+}

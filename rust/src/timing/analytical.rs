@@ -1,0 +1,153 @@
+//! Paper Table 1 and Equations 1–3: the closed-form iteration-time and
+//! memory models for data parallelism, vanilla model parallelism, and
+//! P4SGD's micro-batch pipeline.
+
+use super::Sim;
+
+/// Symbolic parameters shared by the three forms (paper Table 1 caption).
+#[derive(Debug, Clone, Copy)]
+pub struct Params {
+    /// Model dimension D.
+    pub d: usize,
+    /// Workers M.
+    pub m: usize,
+    /// Samples S (memory rows only).
+    pub s: usize,
+    /// Mini-batch size B.
+    pub b: usize,
+    /// Micro-batch size MB.
+    pub mb: usize,
+    /// Aggregation bandwidth between workers, elements/second.
+    pub bw: f64,
+    /// Aggregation base latency T_l, seconds.
+    pub t_l: Sim,
+    /// Forward propagation time of the platform for a full mini-batch
+    /// under DP (T_f_D) / MP (T_f_M), seconds.
+    pub t_f: Sim,
+    /// Backward propagation time (T_b_D / T_b_M), seconds.
+    pub t_b: Sim,
+}
+
+/// Memory footprint rows of Table 1 (in elements).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemoryRow {
+    pub model: f64,
+    pub dataset: f64,
+    pub network: f64,
+}
+
+/// Table 1, row "DP": model D, dataset S*D/M, network D.
+pub fn dp_memory(p: &Params) -> MemoryRow {
+    MemoryRow {
+        model: p.d as f64,
+        dataset: (p.s as f64 * p.d as f64) / p.m as f64,
+        network: p.d as f64,
+    }
+}
+
+/// Table 1, rows "Vanilla MP" / "P4SGD MP": model D/M, dataset S*D/M,
+/// network B.
+pub fn mp_memory(p: &Params) -> MemoryRow {
+    MemoryRow {
+        model: p.d as f64 / p.m as f64,
+        dataset: (p.s as f64 * p.d as f64) / p.m as f64,
+        network: p.b as f64,
+    }
+}
+
+/// Equation 1: DP iteration time
+/// `T_f_D + T_b_D/B + D/BW + T_l`
+/// (forward/backward overlap within the mini-batch; the whole gradient
+/// crosses the network).
+pub fn dp_iter(p: &Params) -> Sim {
+    p.t_f + p.t_b / p.b as f64 + p.d as f64 / p.bw + p.t_l
+}
+
+/// Equation 2: vanilla MP iteration time
+/// `T_f_M + T_b_M + B/BW + T_l`
+/// (stages fully serialized by the activation dependency).
+pub fn vanilla_mp_iter(p: &Params) -> Sim {
+    p.t_f + p.t_b + p.b as f64 / p.bw + p.t_l
+}
+
+/// Equation 3: P4SGD iteration time
+/// `MB/B * T_f_M + T_b_M + MB/BW + T_l`
+/// (micro-batch pipelining hides all but the first forward and the
+/// per-micro-batch wire time).
+pub fn p4sgd_iter(p: &Params) -> Sim {
+    let frac = p.mb as f64 / p.b as f64;
+    frac * p.t_f + p.t_b + p.mb as f64 / p.bw + p.t_l
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> Params {
+        Params {
+            d: 1_000_000,
+            m: 8,
+            s: 100_000,
+            b: 64,
+            mb: 8,
+            bw: 1.5e9,  // ~100 Gb/s of 8-byte elements, order of magnitude
+            t_l: 1.2e-6,
+            t_f: 100e-6,
+            t_b: 100e-6,
+        }
+    }
+
+    #[test]
+    fn memory_rows_match_table1() {
+        let p = base();
+        let dp = dp_memory(&p);
+        let mp = mp_memory(&p);
+        assert_eq!(dp.model, 1e6);
+        assert_eq!(mp.model, 1e6 / 8.0);
+        assert_eq!(dp.dataset, mp.dataset);
+        assert_eq!(dp.network, 1e6);
+        assert_eq!(mp.network, 64.0);
+    }
+
+    #[test]
+    fn p4sgd_beats_vanilla_mp() {
+        let p = base();
+        assert!(p4sgd_iter(&p) < vanilla_mp_iter(&p));
+    }
+
+    #[test]
+    fn p4sgd_beats_dp_on_large_models() {
+        // D/BW dominates DP for large D — the paper's core argument.
+        let p = base();
+        assert!(p4sgd_iter(&p) < dp_iter(&p));
+    }
+
+    #[test]
+    fn dp_wins_when_model_tiny_and_batch_huge() {
+        // At tiny D and huge B, MP's B/BW term and serialized stages can
+        // lose — the crossover Fig. 9 shows near B=1024.
+        let mut p = base();
+        p.d = 1_000;
+        p.b = 4096;
+        p.t_f = 1e-6;
+        p.t_b = 1e-6;
+        assert!(dp_iter(&p) < vanilla_mp_iter(&p));
+    }
+
+    #[test]
+    fn equations_reduce_correctly_at_mb_equals_b() {
+        // With MB = B (one micro-batch), Eq. 3 degenerates to Eq. 2.
+        let mut p = base();
+        p.mb = p.b;
+        let diff = (p4sgd_iter(&p) - vanilla_mp_iter(&p)).abs();
+        assert!(diff < 1e-12);
+    }
+
+    #[test]
+    fn latency_term_additive() {
+        let mut p = base();
+        let t0 = p4sgd_iter(&p);
+        p.t_l += 5e-6;
+        assert!((p4sgd_iter(&p) - t0 - 5e-6).abs() < 1e-12);
+    }
+}

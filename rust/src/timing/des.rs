@@ -1,0 +1,216 @@
+//! Discrete-event simulation of the P4SGD worker pipeline and the
+//! baselines' iteration loops — simulated time only.
+//!
+//! Workers are symmetric and lock-step, so one worker's pipeline plus
+//! the aggregation path is the whole system's critical path. The FCB
+//! schedule (paper Fig. 2c) is three unit-resources — forward datapath,
+//! wire+switch, backward datapath — with micro-batches flowing through;
+//! its makespan follows the classic pipeline recurrence:
+//!
+//!   fwd_done[j] = fwd_done[j-1] + t_f
+//!   fa[j]       = fwd_done[j] + t_agg(j)
+//!   bwd_done[j] = max(bwd_done[j-1], fa[j]) + t_b
+//!
+//! with a serialization barrier at the mini-batch boundary (the model
+//! update), which is what preserves synchronous SGD. With deterministic
+//! t_agg this reproduces Eq. 3 exactly (tested); with jittered t_agg it
+//! shows the straggler effects closed forms cannot.
+
+use super::models::{AggModel, FpgaModel, LINK_BYTES_PER_S};
+use super::Sim;
+use crate::util::rng::Pcg32;
+
+/// Configuration of one simulated P4SGD run.
+#[derive(Debug, Clone, Copy)]
+pub struct P4sgdSim {
+    pub fpga: FpgaModel,
+    pub agg: AggModel,
+    /// Total model dimension D.
+    pub d: usize,
+    /// Workers M (vertical split of D).
+    pub m: usize,
+    /// Mini-batch B and micro-batch MB.
+    pub b: usize,
+    pub mb: usize,
+}
+
+impl P4sgdSim {
+    fn d_local(&self) -> usize {
+        self.d.div_ceil(self.m)
+    }
+
+    /// Simulated time of one iteration (one mini-batch), expected value
+    /// (no jitter). Matches analytical Eq. 3 up to the bwd-pipeline
+    /// drain term.
+    pub fn iter_time(&self) -> Sim {
+        self.epoch_time_n(1, None) // one iteration, deterministic
+    }
+
+    /// Simulated time of `iters` iterations; `rng` adds aggregation
+    /// jitter (straggler modelling) when provided.
+    pub fn epoch_time_n(&self, iters: usize, mut rng: Option<&mut Pcg32>) -> Sim {
+        let t_stage = self.fpga.t_micro(self.d_local());
+        let micro = self.b / self.mb;
+        assert!(micro >= 1);
+        let wire = self.mb as f64 * 4.0 / LINK_BYTES_PER_S;
+        let mut now = 0.0f64;
+        for _ in 0..iters {
+            let mut fwd_done = now;
+            let mut bwd_done = now;
+            for j in 0..micro {
+                fwd_done += t_stage; // forward unit is serial
+                let t_agg = match rng.as_deref_mut() {
+                    Some(r) => self.agg.sample(self.mb, r),
+                    None => self.agg.base + self.agg.jitter + self.agg.per_elem * self.mb as f64,
+                };
+                let fa = fwd_done + wire + t_agg;
+                bwd_done = if j == 0 { fa } else { bwd_done.max(fa) };
+                bwd_done += t_stage; // backward unit is serial
+            }
+            // model update: one pass over the engine's weights, fully
+            // pipelined with the datapath width
+            now = bwd_done + t_stage * 0.05;
+        }
+        now
+    }
+
+    /// Epoch time for `samples` samples.
+    pub fn epoch_time(&self, samples: usize, rng: Option<&mut Pcg32>) -> Sim {
+        self.epoch_time_n(samples / self.b, rng)
+    }
+
+    /// Vanilla (non-pipelined) MP on the same hardware: whole-mini-batch
+    /// forward, one aggregation of B elements, whole-mini-batch backward
+    /// (paper Eq. 2; the Fig. 2b schedule).
+    pub fn epoch_time_vanilla(&self, samples: usize) -> Sim {
+        let t_stage = self.fpga.t_micro(self.d_local());
+        let micro = (self.b / self.mb) as f64;
+        let wire = self.b as f64 * 4.0 / LINK_BYTES_PER_S;
+        let t_agg = self.agg.mean(self.b);
+        let iter = micro * t_stage + wire + t_agg + micro * t_stage + t_stage * 0.05;
+        (samples / self.b) as f64 * iter
+    }
+
+    /// Data-parallel FPGA on the same switch (the Fig. 9 comparator):
+    /// full model per worker, B/M samples locally, gradient of D
+    /// elements aggregated per iteration (paper Eq. 1's communication
+    /// term D/BW + T_l; fwd/bwd overlap within the mini-batch). The
+    /// paper's DP system ships gradients at the same 4-bit precision as
+    /// the datapath, so the wire term is D * P/8 bytes.
+    pub fn epoch_time_dp(&self, samples: usize) -> Sim {
+        let local_b = (self.b / self.m).max(1);
+        let micro = (local_b as f64 / self.mb as f64).max(1.0);
+        // full-D datapath per worker
+        let t_stage = self.fpga.t_micro(self.d);
+        let compute = micro * t_stage + t_stage; // fwd pipeline + bwd drain (Eq. 1 shape)
+        let wire = self.d as f64 * (self.fpga.precision as f64 / 8.0) / LINK_BYTES_PER_S;
+        // chunked gradient aggregation: the switch pipelines chunks, so
+        // latency is paid once and bandwidth dominates
+        let comm = wire + self.agg.mean(64);
+        (samples / self.b) as f64 * (compute + comm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::timing::analytical;
+    use crate::timing::models::AGG_P4SGD;
+
+    fn sim(d: usize, m: usize, b: usize) -> P4sgdSim {
+        P4sgdSim { fpga: FpgaModel::default(), agg: AGG_P4SGD, d, m, b, mb: 8 }
+    }
+
+    #[test]
+    fn matches_eq3_for_deep_pipelines() {
+        // With B >> MB the recurrence should approach Eq. 3's
+        // MB/B*T_f + T_b + MB/BW + T_l per iteration.
+        let s = sim(1_000_000, 8, 512);
+        let t_stage = s.fpga.t_micro(s.d_local());
+        let micro = (s.b / s.mb) as f64;
+        let p = analytical::Params {
+            d: s.d,
+            m: s.m,
+            s: 0,
+            b: s.b,
+            mb: s.mb,
+            bw: LINK_BYTES_PER_S / 4.0,
+            t_l: s.agg.mean(s.mb),
+            t_f: micro * t_stage,
+            t_b: micro * t_stage,
+        };
+        let des = s.iter_time();
+        let eq3 = analytical::p4sgd_iter(&p);
+        let rel = (des - eq3).abs() / eq3;
+        assert!(rel < 0.10, "DES {des} vs Eq.3 {eq3} (rel {rel})");
+    }
+
+    #[test]
+    fn pipelining_beats_vanilla() {
+        let s = sim(1_000_000, 8, 256);
+        let pipe = s.epoch_time(256 * 16, None);
+        let vanilla = s.epoch_time_vanilla(256 * 16);
+        assert!(pipe < vanilla, "pipe {pipe} vanilla {vanilla}");
+    }
+
+    #[test]
+    fn pipelining_gain_approaches_two_when_compute_bound() {
+        // The pipeline hides the forward pass behind backward+comm, so
+        // in the compute-bound regime the gain tends to 2x; in the
+        // latency-bound regime (tiny D) only T_l remains on both sides
+        // and the gain shrinks toward 1x.
+        let mut s = sim(5_000_000, 8, 256);
+        let gain_large_d = s.epoch_time_vanilla(2560) / s.epoch_time(2560, None);
+        s.d = 50_000;
+        let gain_small_d = s.epoch_time_vanilla(2560) / s.epoch_time(2560, None);
+        assert!(gain_large_d > gain_small_d, "{gain_large_d} vs {gain_small_d}");
+        assert!((1.0..=2.1).contains(&gain_small_d), "{gain_small_d}");
+        assert!(gain_large_d > 1.8, "{gain_large_d}");
+    }
+
+    #[test]
+    fn mp_beats_dp_at_small_batch_large_d() {
+        // Fig. 9's headline: B=16, large feature count -> MP much faster.
+        let s = sim(332_710, 4, 16); // amazon-like, 4 workers
+        let mp = s.epoch_time(16 * 100, None);
+        let dp = s.epoch_time_dp(16 * 100);
+        assert!(dp > 2.0 * mp, "dp {dp} mp {mp}");
+    }
+
+    #[test]
+    fn dp_catches_up_at_large_batch() {
+        // Fig. 9: at B=1024 the two roughly meet.
+        let s = sim(47_236, 4, 1024); // rcv1-like
+        let mp = s.epoch_time(1024 * 10, None);
+        let dp = s.epoch_time_dp(1024 * 10);
+        let ratio = dp / mp;
+        assert!((0.3..3.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn scale_out_near_linear_at_avazu_size(){
+        // Fig. 12: 1M features -> close-to-linear worker scaling.
+        let t1 = sim(1_000_000, 1, 16).epoch_time(1600, None);
+        let t8 = sim(1_000_000, 8, 16).epoch_time(1600, None);
+        let speedup = t1 / t8;
+        assert!(speedup > 6.0, "speedup {speedup}");
+    }
+
+    #[test]
+    fn scale_out_sublinear_on_small_datasets() {
+        // gisette (5k features): communication floor caps scaling.
+        let t1 = sim(5_000, 1, 16).epoch_time(1600, None);
+        let t8 = sim(5_000, 8, 16).epoch_time(1600, None);
+        let speedup = t1 / t8;
+        assert!(speedup < 4.0, "speedup {speedup}");
+    }
+
+    #[test]
+    fn jitter_only_increases_makespan() {
+        let s = sim(100_000, 8, 64);
+        let det = s.epoch_time(6400, None);
+        let mut rng = Pcg32::seeded(1);
+        let jit = s.epoch_time(6400, Some(&mut rng));
+        assert!(jit >= det * 0.99, "jit {jit} det {det}");
+    }
+}

@@ -1,0 +1,24 @@
+//! Timing models: how long training takes on hardware we don't have.
+//!
+//! The paper's performance figures (9–13) were measured on 8 U280 FPGAs,
+//! 8 A100s and 8 Xeon hosts. This module reproduces their *shape* from
+//! first principles:
+//!
+//! * [`analytical`] — the closed forms of paper Table 1 / Eqs. 1–3.
+//! * [`models`] — per-platform cost models (FPGA datapath cycles, CUDA
+//!   launch overhead, AVX throughput, aggregation latency constants)
+//!   calibrated to the constants the paper states (250 MHz engines,
+//!   64 features/cycle/bank, 1.2 us in-switch AllReduce, ...).
+//! * [`des`] — a discrete-event pipeline simulator that plays the FCB
+//!   micro-batch schedule (Fig. 2c) against those models, capturing the
+//!   overlap behaviour Eq. 3 summarizes, plus a latency *sampler* for
+//!   the Fig. 8 distributions.
+//!
+//! Nothing here touches wall-clock: all outputs are simulated seconds.
+
+pub mod analytical;
+pub mod des;
+pub mod models;
+
+/// Simulated seconds.
+pub type Sim = f64;

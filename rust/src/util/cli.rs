@@ -1,0 +1,110 @@
+//! Minimal command-line parser (replaces `clap`, not vendored offline).
+//!
+//! Grammar: `p4sgd <subcommand> [positional...] [--key value | --flag]`.
+
+use std::collections::HashMap;
+
+/// Parsed arguments: one subcommand, positionals, and `--key [value]` opts.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Self {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                // `--key=value`, `--key value`, or bare `--flag`.
+                if let Some((k, v)) = key.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
+                    out.opts.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    /// Typed option with default; panics with a clear message on a
+    /// malformed value (CLI surface, not library code).
+    pub fn get_or<T: std::str::FromStr>(&self, name: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opts.get(name) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|e| panic!("--{name} {v}: {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse("repro fig8 extra");
+        assert_eq!(a.subcommand.as_deref(), Some("repro"));
+        assert_eq!(a.positional, vec!["fig8", "extra"]);
+    }
+
+    #[test]
+    fn options_and_flags() {
+        let a = parse("train --workers 8 --loss logreg --verbose");
+        assert_eq!(a.get_or("workers", 1usize), 8);
+        assert_eq!(a.get("loss"), Some("logreg"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn key_equals_value() {
+        let a = parse("train --epochs=10");
+        assert_eq!(a.get_or("epochs", 0u32), 10);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("train");
+        assert_eq!(a.get_or("workers", 4usize), 4);
+    }
+
+    #[test]
+    fn flag_before_option() {
+        let a = parse("x --dry-run --n 3");
+        assert!(a.flag("dry-run"));
+        assert_eq!(a.get_or("n", 0u32), 3);
+    }
+}

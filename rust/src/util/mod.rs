@@ -1,0 +1,52 @@
+//! Small self-contained utilities the rest of the crate builds on.
+//!
+//! The offline build image only vendors the `xla` crate's dependency
+//! closure, so the usual ecosystem crates are re-implemented here at the
+//! size we actually need: [`rng`] replaces `rand`, [`stats`] the summary
+//! side of `criterion`, [`cli`] replaces `clap`, and [`prop`] is a seeded
+//! randomized-case runner standing in for `proptest` (see DESIGN.md).
+
+pub mod cli;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+/// Round `n` up to the next multiple of `m` (m > 0).
+pub fn round_up(n: usize, m: usize) -> usize {
+    debug_assert!(m > 0);
+    n.div_ceil(m) * m
+}
+
+/// Human-readable duration from nanoseconds (for report tables).
+pub fn fmt_ns(ns: u64) -> String {
+    if ns >= 1_000_000_000 {
+        format!("{:.2}s", ns as f64 / 1e9)
+    } else if ns >= 1_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.2}us", ns as f64 / 1e3)
+    } else {
+        format!("{ns}ns")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(0, 32), 0);
+        assert_eq!(round_up(1, 32), 32);
+        assert_eq!(round_up(32, 32), 32);
+        assert_eq!(round_up(33, 32), 64);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(17), "17ns");
+        assert_eq!(fmt_ns(1_200), "1.20us");
+        assert_eq!(fmt_ns(2_500_000), "2.50ms");
+        assert_eq!(fmt_ns(3_000_000_000), "3.00s");
+    }
+}

@@ -1,0 +1,120 @@
+//! Seeded property-test runner (stands in for `proptest`, which is not
+//! vendored in the offline image).
+//!
+//! Usage pattern, mirroring proptest's closure style:
+//!
+//! ```no_run
+//! use p4sgd::util::prop::check;
+//! check("addition commutes", 200, |rng| {
+//!     let (a, b) = (rng.next_u32() as u64, rng.next_u32() as u64);
+//!     if a + b == b + a { Ok(()) } else { Err(format!("{a} {b}")) }
+//! });
+//! ```
+//!
+//! On failure the panic message carries the per-case seed, so a failing
+//! case replays with [`replay`]. No shrinking — generators are expected
+//! to draw their sizes small-biased (see [`small_size`]).
+
+use super::rng::Pcg32;
+
+/// Base seed; override with env `P4SGD_PROP_SEED` for exploration.
+fn base_seed() -> u64 {
+    std::env::var("P4SGD_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xB0BA_CAFE)
+}
+
+/// Run `cases` randomized cases of `prop`. Each case gets a fresh RNG
+/// derived from (base seed, case index); failures panic with that index.
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Pcg32) -> Result<(), String>,
+{
+    let seed = base_seed();
+    for case in 0..cases {
+        let mut rng = Pcg32::new(seed ^ case.wrapping_mul(0x9E3779B97F4A7C15), case);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property `{name}` failed at case {case} (seed {seed:#x}): {msg}\n\
+                 replay with P4SGD_PROP_SEED={seed} and case index {case}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by index.
+pub fn replay<F>(case: u64, mut prop: F) -> Result<(), String>
+where
+    F: FnMut(&mut Pcg32) -> Result<(), String>,
+{
+    let seed = base_seed();
+    let mut rng = Pcg32::new(seed ^ case.wrapping_mul(0x9E3779B97F4A7C15), case);
+    prop(&mut rng)
+}
+
+/// Small-biased size draw in `[lo, hi]`: half the mass near `lo`,
+/// occasionally large — cheap stand-in for proptest's sized generators.
+pub fn small_size(rng: &mut Pcg32, lo: usize, hi: usize) -> usize {
+    debug_assert!(lo <= hi);
+    if hi == lo {
+        return lo;
+    }
+    let span = hi - lo;
+    if rng.chance(0.5) {
+        lo + rng.below_usize(span.min(4) + 1)
+    } else {
+        lo + rng.below_usize(span + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("u32 roundtrip", 100, |rng| {
+            let x = rng.next_u32();
+            if x as u64 as u32 == x {
+                Ok(())
+            } else {
+                Err("cast".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always fails`")]
+    fn failing_property_panics_with_case() {
+        check("always fails", 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn replay_reproduces_case_values() {
+        let mut seen = Vec::new();
+        check("record", 3, |rng| {
+            seen.push(rng.next_u64());
+            Ok(())
+        });
+        let mut replayed = 0;
+        for (i, want) in seen.iter().enumerate() {
+            replay(i as u64, |rng| {
+                assert_eq!(rng.next_u64(), *want);
+                replayed += 1;
+                Ok(())
+            })
+            .unwrap();
+        }
+        assert_eq!(replayed, 3);
+    }
+
+    #[test]
+    fn small_size_in_bounds() {
+        let mut rng = Pcg32::seeded(0);
+        for _ in 0..1000 {
+            let s = small_size(&mut rng, 2, 37);
+            assert!((2..=37).contains(&s));
+        }
+    }
+}

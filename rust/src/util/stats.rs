@@ -1,0 +1,172 @@
+//! Summary statistics: latency histograms with percentile whiskers
+//! (paper Fig. 8 reports mean + p1/p99) and Welford online moments.
+
+/// A sample collection with percentile queries. Stores raw samples;
+/// sorting is deferred until a summary is requested.
+#[derive(Debug, Clone, Default)]
+pub struct Samples {
+    xs: Vec<f64>,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.xs.push(x);
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    /// Linear-interpolated percentile, `q` in [0, 100].
+    pub fn percentile(&self, q: f64) -> f64 {
+        assert!(!self.xs.is_empty(), "percentile of empty sample set");
+        let mut s = self.xs.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        percentile_sorted(&s, q)
+    }
+
+    pub fn summary(&self) -> Summary {
+        assert!(!self.xs.is_empty(), "summary of empty sample set");
+        let mut s = self.xs.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        let mean = s.iter().sum::<f64>() / n as f64;
+        let var = s.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: s[0],
+            max: s[n - 1],
+            p1: percentile_sorted(&s, 1.0),
+            p50: percentile_sorted(&s, 50.0),
+            p95: percentile_sorted(&s, 95.0),
+            p99: percentile_sorted(&s, 99.0),
+        }
+    }
+}
+
+fn percentile_sorted(s: &[f64], q: f64) -> f64 {
+    let n = s.len();
+    if n == 1 {
+        return s[0];
+    }
+    let rank = (q / 100.0) * (n - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    s[lo] * (1.0 - frac) + s[hi.min(n - 1)] * frac
+}
+
+/// Full summary of a sample set.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p1: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+/// Welford's online mean/variance — used where sample counts are large
+/// (e.g. per-packet switch occupancy) and storing raw samples would
+/// bloat memory.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Online {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Online {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_of_known_set() {
+        let mut s = Samples::new();
+        for i in 1..=100 {
+            s.push(i as f64);
+        }
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-9);
+        assert!((s.percentile(100.0) - 100.0).abs() < 1e-9);
+        assert!((s.percentile(50.0) - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_fields() {
+        let mut s = Samples::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.push(x);
+        }
+        let sum = s.summary();
+        assert_eq!(sum.n, 8);
+        assert!((sum.mean - 5.0).abs() < 1e-9);
+        assert!((sum.std - 2.0).abs() < 1e-9);
+        assert_eq!(sum.min, 2.0);
+        assert_eq!(sum.max, 9.0);
+    }
+
+    #[test]
+    fn online_matches_batch() {
+        let xs: Vec<f64> = (0..1000).map(|i| ((i * 37) % 101) as f64).collect();
+        let mut o = Online::default();
+        for &x in &xs {
+            o.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+        assert!((o.mean() - mean).abs() < 1e-9);
+        assert!((o.variance() - var).abs() < 1e-6);
+    }
+
+    #[test]
+    fn single_sample() {
+        let mut s = Samples::new();
+        s.push(3.0);
+        let sum = s.summary();
+        assert_eq!(sum.p1, 3.0);
+        assert_eq!(sum.p99, 3.0);
+    }
+}

@@ -1,0 +1,449 @@
+//! The Algorithm 3 state machine.
+//!
+//! `seq` is a monotonically increasing 16-bit round counter, exactly the
+//! paper's design: the switch provisions 64K aggregation slots ("the
+//! size of the register arrays is set to 64K, permitting a maximum of
+//! 64K outstanding aggregation operations"), so a slot index is only
+//! reused after 65536 rounds — far beyond any packet lifetime, which is
+//! what makes stale retransmissions unambiguous. A *window* (far smaller
+//! than the seq space) bounds how many operations this worker keeps in
+//! flight; that is the backpressure the FCB pipeline leans on.
+//!
+//! Had we shrunk the seq space to the window size (an early version did),
+//! a delayed duplicate ACK could alias into the slot's next round, letting
+//! the switch clear an aggregation some worker never received — a real
+//! protocol hazard; `end_to_end.rs::hostile_network_does_not_change_numerics`
+//! would catch it.
+
+use crate::net::{NodeId, Transport};
+use crate::protocol::Packet;
+use std::time::{Duration, Instant};
+
+/// Switch-side slot count (paper §4.2: 16-bit indices).
+pub const SEQ_SPACE: usize = 1 << 16;
+
+/// Per-operation protocol phase. `attempt` drives exponential backoff:
+/// without it, a transient queueing delay at the switch makes every
+/// in-flight timer fire, each retransmission fans out into an 8-way
+/// multicast, and the resulting storm keeps the queues saturated — a
+/// livelock a fixed-interval timer cannot escape.
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum Phase {
+    /// PA sent; waiting for FA. Holds the retransmission copy.
+    AwaitFa { pkt: Packet, deadline: Instant, attempt: u32 },
+    /// FA received + ACK sent; waiting for the switch's confirm.
+    AwaitConfirm { pkt: Packet, deadline: Instant, attempt: u32 },
+}
+
+/// Backoff cap: deadline grows as `timeout * 2^attempt` up to this.
+const MAX_BACKOFF_EXP: u32 = 7;
+
+/// Client-side counters (retransmission visibility for tests/reports).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct AggStats {
+    pub pa_sent: u64,
+    pub acks_sent: u64,
+    pub retransmits: u64,
+    pub fa_received: u64,
+    pub dup_fa: u64,
+    pub confirms: u64,
+    pub stale: u64,
+}
+
+/// Events surfaced to the training pipeline.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Event {
+    /// Full activations for the given round (fixed-point payload).
+    Fa { seq: u16, payload: Vec<i32> },
+    /// The switch confirmed all ACKs; the operation fully retired.
+    SlotFreed { seq: u16 },
+}
+
+/// Worker-side aggregation client (paper Algorithm 3).
+pub struct AggClient<T: Transport> {
+    transport: T,
+    server: NodeId,
+    worker: usize,
+    /// In-flight operations, keyed by seq (small: <= window).
+    inflight: Vec<(u16, Phase)>,
+    /// Max outstanding operations.
+    window: usize,
+    /// Next round's sequence number (wraps through the 64K space).
+    next_seq: u16,
+    timeout: Duration,
+    pub stats: AggStats,
+}
+
+impl<T: Transport> AggClient<T> {
+    /// `window` = max in-flight operations; `timeout` is the Alg. 3 timer.
+    pub fn new(transport: T, server: NodeId, worker: usize, window: usize, timeout: Duration) -> Self {
+        assert!(window >= 1 && window <= SEQ_SPACE / 4, "window must be << seq space");
+        Self {
+            transport,
+            server,
+            worker,
+            inflight: Vec::with_capacity(window),
+            window,
+            next_seq: 0,
+            timeout,
+            stats: AggStats::default(),
+        }
+    }
+
+    /// Worker index (bit position in `bm`).
+    pub fn worker(&self) -> usize {
+        self.worker
+    }
+
+    /// Number of operations currently in flight.
+    pub fn in_flight(&self) -> usize {
+        self.inflight.len()
+    }
+
+    fn find(&mut self, seq: u16) -> Option<usize> {
+        self.inflight.iter().position(|(s, _)| *s == seq)
+    }
+
+    /// Alg. 3 `send pa_pkt`: claim the next round and send. Returns the
+    /// seq, or `None` when the window is full (backpressure: the
+    /// pipeline must pump before issuing more).
+    pub fn try_send_pa(&mut self, payload: &[i32]) -> Option<u16> {
+        if self.inflight.len() >= self.window {
+            return None;
+        }
+        let seq = self.next_seq;
+        self.next_seq = self.next_seq.wrapping_add(1);
+        let pkt = Packet::pa(seq, self.worker, payload.to_vec());
+        self.transport.send(self.server, &pkt);
+        self.stats.pa_sent += 1;
+        self.inflight
+            .push((seq, Phase::AwaitFa { pkt, deadline: Instant::now() + self.timeout, attempt: 0 }));
+        Some(seq)
+    }
+
+    /// Pump the network and timers once; returns at the first event, or
+    /// `None` after `budget` elapses with no event.
+    pub fn poll(&mut self, budget: Duration) -> Option<Event> {
+        let deadline = Instant::now() + budget;
+        loop {
+            self.fire_expired_timers();
+            let now = Instant::now();
+            if now >= deadline {
+                // Final non-blocking drain.
+                if let Some((src, pkt)) = self.transport.try_recv() {
+                    if let Some(ev) = self.dispatch(src, pkt) {
+                        return Some(ev);
+                    }
+                }
+                return None;
+            }
+            // No spinning: this substrate commonly runs on few (or one)
+            // cores, where burning cycles starves the very peer being
+            // waited on. Drain without blocking, then park on the timer.
+            let got = self
+                .transport
+                .try_recv()
+                .or_else(|| {
+                    let wait = self.next_wakeup(Instant::now(), deadline);
+                    self.transport.recv_timeout(wait)
+                });
+            match got {
+                Some((src, pkt)) => {
+                    if let Some(ev) = self.dispatch(src, pkt) {
+                        return Some(ev);
+                    }
+                }
+                None => continue,
+            }
+        }
+    }
+
+    /// Blocking AllReduce convenience (non-pipelined callers):
+    /// sends PA, pumps until the FA for that round arrives.
+    pub fn allreduce(&mut self, payload: &[i32]) -> Vec<i32> {
+        let seq = loop {
+            if let Some(seq) = self.try_send_pa(payload) {
+                break seq;
+            }
+            // Window full: pump until something retires.
+            self.poll(Duration::from_micros(100));
+        };
+        loop {
+            match self.poll(Duration::from_millis(100)) {
+                Some(Event::Fa { seq: s, payload }) if s == seq => return payload,
+                Some(_) => continue,
+                None => continue,
+            }
+        }
+    }
+
+    /// Earliest timer deadline, clamped to the poll budget.
+    fn next_wakeup(&self, now: Instant, budget_deadline: Instant) -> Duration {
+        let mut t = budget_deadline;
+        for (_, p) in &self.inflight {
+            match p {
+                Phase::AwaitFa { deadline, .. } | Phase::AwaitConfirm { deadline, .. } => {
+                    t = t.min(*deadline);
+                }
+            }
+        }
+        t.saturating_duration_since(now).max(Duration::from_micros(1))
+    }
+
+    /// Alg. 3 `upon timeout`: retransmit and re-arm with backoff.
+    fn fire_expired_timers(&mut self) {
+        let now = Instant::now();
+        for (_, p) in self.inflight.iter_mut() {
+            match p {
+                Phase::AwaitFa { pkt, deadline, attempt }
+                | Phase::AwaitConfirm { pkt, deadline, attempt }
+                    if *deadline <= now =>
+                {
+                    self.transport.send(self.server, pkt);
+                    self.stats.retransmits += 1;
+                    *attempt = (*attempt + 1).min(MAX_BACKOFF_EXP);
+                    *deadline = now + self.timeout * (1u32 << *attempt);
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// Alg. 3 `receive pkt`.
+    fn dispatch(&mut self, _src: NodeId, pkt: Packet) -> Option<Event> {
+        let Some(idx) = self.find(pkt.seq) else {
+            // FA/confirm for a round we already retired (duplicate) or
+            // never issued (stale): ignore.
+            self.stats.stale += 1;
+            return None;
+        };
+        if pkt.is_agg {
+            // FA broadcast from the switch.
+            match &self.inflight[idx].1 {
+                Phase::AwaitFa { .. } => {
+                    // cancel_timer implicit; send ACK, arm ACK timer
+                    // (Alg. 3 lines 20-24).
+                    let ack = Packet::ack(pkt.seq, self.worker);
+                    self.transport.send(self.server, &ack);
+                    self.stats.acks_sent += 1;
+                    self.stats.fa_received += 1;
+                    self.inflight[idx].1 = Phase::AwaitConfirm {
+                        pkt: ack,
+                        deadline: Instant::now() + self.timeout,
+                        attempt: 0,
+                    };
+                    Some(Event::Fa { seq: pkt.seq, payload: pkt.payload })
+                }
+                Phase::AwaitConfirm { .. } => {
+                    // Duplicate FA (switch re-multicast for a lagging
+                    // peer). Our ACK retransmission is timer-driven —
+                    // answering every duplicate immediately would couple
+                    // into a multicast amplification storm.
+                    self.stats.dup_fa += 1;
+                    None
+                }
+            }
+        } else {
+            // ACK-confirm broadcast (Alg. 3 lines 26-29).
+            match &self.inflight[idx].1 {
+                Phase::AwaitConfirm { .. } => {
+                    self.inflight.swap_remove(idx);
+                    self.stats.confirms += 1;
+                    Some(Event::SlotFreed { seq: pkt.seq })
+                }
+                Phase::AwaitFa { .. } => {
+                    // Confirm while we still lack FA would mean the switch
+                    // counted an ACK we never sent — impossible in the
+                    // 64K-seq design; treat as stale for robustness.
+                    self.stats.stale += 1;
+                    None
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NetConfig;
+    use crate::net::sim::SimNet;
+    use crate::net::switch_node;
+    use crate::switch::p4::P4Switch;
+    use crate::switch::runner;
+
+    fn cluster(
+        workers: usize,
+        window: usize,
+        mb: usize,
+        net: &NetConfig,
+    ) -> (Vec<AggClient<crate::net::sim::SimEndpoint>>, runner::ServerHandle) {
+        let mut eps = SimNet::build(workers + 1, net);
+        let sw_ep = eps.pop().unwrap();
+        let handle = runner::spawn(P4Switch::new(SEQ_SPACE, workers, mb), sw_ep);
+        let timeout = Duration::from_micros(net.timeout_us * 1000); // generous in tests
+        let clients = eps
+            .into_iter()
+            .enumerate()
+            .map(|(w, ep)| AggClient::new(ep, switch_node(workers), w, window, timeout))
+            .collect();
+        (clients, handle)
+    }
+
+    #[test]
+    fn blocking_allreduce_sums_across_workers() {
+        let net = NetConfig { latency_ns: 0, jitter_ns: 0, ..NetConfig::default() };
+        let (clients, _h) = cluster(4, 8, 2, &net);
+        let results: Vec<_> = clients
+            .into_iter()
+            .enumerate()
+            .map(|(w, mut c)| {
+                std::thread::spawn(move || c.allreduce(&[w as i32 + 1, 10 * (w as i32 + 1)]))
+            })
+            .collect();
+        for j in results {
+            assert_eq!(j.join().unwrap(), vec![10, 100]);
+        }
+    }
+
+    #[test]
+    fn seq_space_cycles_through_many_rounds() {
+        let net = NetConfig { latency_ns: 0, jitter_ns: 0, ..NetConfig::default() };
+        let (clients, _h) = cluster(2, 4, 1, &net);
+        let handles: Vec<_> = clients
+            .into_iter()
+            .map(|mut c| {
+                std::thread::spawn(move || {
+                    let mut out = Vec::new();
+                    for round in 0..64 {
+                        out.push(c.allreduce(&[round as i32])[0]);
+                    }
+                    (out, c.stats)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (sums, _stats) = h.join().unwrap();
+            let want: Vec<i32> = (0..64).map(|r| 2 * r).collect();
+            assert_eq!(sums, want);
+        }
+    }
+
+    #[test]
+    fn survives_heavy_packet_loss() {
+        let net = NetConfig {
+            latency_ns: 0,
+            jitter_ns: 0,
+            drop_prob: 0.3,
+            timeout_us: 200,
+            seed: 42,
+            ..NetConfig::default()
+        };
+        let (clients, _h) = cluster(3, 4, 1, &net);
+        let handles: Vec<_> = clients
+            .into_iter()
+            .map(|mut c| {
+                std::thread::spawn(move || {
+                    let mut out = Vec::new();
+                    for round in 0..16 {
+                        out.push(c.allreduce(&[round as i32 + 1])[0]);
+                    }
+                    (out, c.stats)
+                })
+            })
+            .collect();
+        let mut total_retrans = 0;
+        for h in handles {
+            let (sums, stats) = h.join().unwrap();
+            let want: Vec<i32> = (0..16).map(|r| 3 * (r + 1)).collect();
+            assert_eq!(sums, want, "loss must not corrupt aggregation");
+            total_retrans += stats.retransmits;
+        }
+        assert!(total_retrans > 0, "30% loss must trigger retransmissions");
+    }
+
+    #[test]
+    fn survives_duplication_and_reordering() {
+        let net = NetConfig {
+            latency_ns: 0,
+            jitter_ns: 0,
+            dup_prob: 0.3,
+            reorder_prob: 0.2,
+            timeout_us: 200,
+            seed: 7,
+            ..NetConfig::default()
+        };
+        let (clients, _h) = cluster(2, 4, 2, &net);
+        let handles: Vec<_> = clients
+            .into_iter()
+            .map(|mut c| {
+                std::thread::spawn(move || {
+                    (0..16).map(|r| c.allreduce(&[r, -r])).collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        for h in handles {
+            let rounds = h.join().unwrap();
+            for (r, fa) in rounds.into_iter().enumerate() {
+                assert_eq!(fa, vec![2 * r as i32, -2 * (r as i32)]);
+            }
+        }
+    }
+
+    #[test]
+    fn backpressure_when_window_full() {
+        // 1 worker of 2 sends; peers silent -> operations never complete.
+        let net = NetConfig { latency_ns: 0, jitter_ns: 0, ..NetConfig::default() };
+        let mut eps = SimNet::build(3, &net);
+        let _sw = runner::spawn(P4Switch::new(SEQ_SPACE, 2, 1), eps.pop().unwrap());
+        let _other = eps.pop().unwrap();
+        let mut c = AggClient::new(
+            eps.pop().unwrap(),
+            switch_node(2),
+            0,
+            2,
+            Duration::from_secs(10),
+        );
+        assert!(c.try_send_pa(&[1]).is_some());
+        assert!(c.try_send_pa(&[1]).is_some());
+        assert!(c.try_send_pa(&[1]).is_none(), "window full");
+        assert_eq!(c.in_flight(), 2);
+    }
+
+    #[test]
+    fn stale_packets_do_not_corrupt_state() {
+        let net = NetConfig { latency_ns: 0, jitter_ns: 0, ..NetConfig::default() };
+        let mut eps = SimNet::build(2, &net);
+        let mut fake_switch = eps.pop().unwrap();
+        let mut c = AggClient::new(eps.pop().unwrap(), 1, 0, 4, Duration::from_secs(10));
+        // unsolicited FA for a round never issued
+        fake_switch.send(0, &Packet { is_agg: true, acked: true, seq: 2, bm: 0, payload: vec![9] });
+        // confirm for a round never issued
+        fake_switch.send(0, &Packet { is_agg: false, acked: true, seq: 3, bm: 0, payload: vec![] });
+        // far-future seq
+        fake_switch.send(0, &Packet { is_agg: true, acked: true, seq: 999, bm: 0, payload: vec![] });
+        for _ in 0..3 {
+            assert!(c.poll(Duration::from_millis(20)).is_none());
+        }
+        assert_eq!(c.stats.stale, 3);
+        assert_eq!(c.in_flight(), 0);
+    }
+
+    #[test]
+    fn window_never_exceeded_under_pipelined_use() {
+        let net = NetConfig { latency_ns: 0, jitter_ns: 0, ..NetConfig::default() };
+        let (mut clients, _h) = cluster(1, 3, 1, &net);
+        let mut c = clients.pop().unwrap();
+        let mut sent = 0;
+        let mut done = 0;
+        while done < 10 {
+            while sent < 10 && c.try_send_pa(&[1]).is_some() {
+                sent += 1;
+                assert!(c.in_flight() <= 3);
+            }
+            if let Some(Event::Fa { .. }) = c.poll(Duration::from_millis(50)) {
+                done += 1;
+            }
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! Worker-side aggregation client — paper Algorithm 3.
+//!
+//! Each worker keeps `N` aggregation slots. Sending a partial-activation
+//! packet claims the next slot (if free), starts a retransmission timer,
+//! and returns the slot id. Receiving the full activation (FA) for a
+//! slot cancels its PA timer, hands FA to the caller, sends the ACK and
+//! starts the ACK timer; the slot only becomes reusable once the switch's
+//! ACK-confirm arrives (`unused[seq] = true`). Timers that expire
+//! retransmit the stored packet verbatim.
+//!
+//! The client is deliberately *poll-driven* (no background thread): the
+//! FCB pipeline interleaves compute and network pumping on the worker's
+//! own thread, mirroring the paper's hardware where the communication
+//! stage is its own pipeline stage, not an OS abstraction.
+
+pub mod agg_client;
+
+pub use agg_client::{AggClient, AggStats, Event};

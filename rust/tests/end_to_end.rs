@@ -1,0 +1,145 @@
+//! End-to-end system tests: the whole stack (data -> pipeline ->
+//! protocol -> switch -> backward -> update) against the reference
+//! oracle, under clean and hostile networks, for every loss.
+
+use p4sgd::config::SystemConfig;
+use p4sgd::coordinator::{dp, mp, reference};
+use p4sgd::data::synth;
+use p4sgd::engine::{Compute, NativeCompute};
+use p4sgd::glm::Loss;
+
+fn native(_w: usize) -> Box<dyn Compute> {
+    Box::new(NativeCompute)
+}
+
+fn base_cfg(workers: usize, loss: Loss, lr: f32) -> SystemConfig {
+    let mut c = SystemConfig::default();
+    c.cluster.workers = workers;
+    c.cluster.engines = 2;
+    c.cluster.slots = 8;
+    c.train.loss = loss;
+    c.train.lr = lr;
+    c.train.batch = 32;
+    c.train.micro_batch = 8;
+    c.train.epochs = 5;
+    c.net.latency_ns = 0;
+    c.net.jitter_ns = 0;
+    c.net.timeout_us = 3000;
+    c
+}
+
+#[test]
+fn every_loss_converges_distributed() {
+    for (loss, lr) in [(Loss::LogReg, 1.0f32), (Loss::Svm, 0.3), (Loss::LinReg, 0.05)] {
+        let ds = synth::separable_sparse(256, 512, loss, 0.05, 0.1, 31);
+        let cfg = base_cfg(4, loss, lr);
+        let rep = mp::train_mp(&cfg, &ds, &native);
+        let first = rep.loss_per_epoch[0];
+        let last = *rep.loss_per_epoch.last().unwrap();
+        assert!(last < 0.85 * first, "{loss}: {:?}", rep.loss_per_epoch);
+    }
+}
+
+#[test]
+fn distributed_equals_oracle_across_worker_counts() {
+    let ds = synth::separable_sparse(192, 384, Loss::LogReg, 0.0, 0.15, 37);
+    let oracle = reference::train(&base_cfg(1, Loss::LogReg, 1.0), &ds);
+    for m in [1usize, 2, 3, 4, 6] {
+        let rep = mp::train_mp(&base_cfg(m, Loss::LogReg, 1.0), &ds, &native);
+        for (e, (a, b)) in rep.loss_per_epoch.iter().zip(&oracle.loss_per_epoch).enumerate() {
+            assert!(
+                (a - b).abs() < 5e-3 * a.abs().max(1.0),
+                "m={m} epoch {e}: {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn hostile_network_does_not_change_numerics() {
+    let ds = synth::separable_sparse(128, 256, Loss::LogReg, 0.0, 0.2, 41);
+    let clean = mp::train_mp(&base_cfg(3, Loss::LogReg, 1.0), &ds, &native);
+    let mut cfg = base_cfg(3, Loss::LogReg, 1.0);
+    cfg.net.drop_prob = 0.08;
+    cfg.net.dup_prob = 0.05;
+    cfg.net.reorder_prob = 0.05;
+    cfg.net.timeout_us = 300;
+    let hostile = mp::train_mp(&cfg, &ds, &native);
+    assert!(hostile.agg.retransmits > 0);
+    for (a, b) in clean.loss_per_epoch.iter().zip(&hostile.loss_per_epoch) {
+        assert!((a - b).abs() < 1e-4 * a.abs().max(1.0), "{a} vs {b}");
+    }
+}
+
+#[test]
+fn dp_and_mp_share_the_statistical_trajectory() {
+    let ds = synth::separable_sparse(128, 256, Loss::LogReg, 0.0, 0.2, 43);
+    let mut cfg = base_cfg(2, Loss::LogReg, 1.0);
+    cfg.cluster.slots = 16;
+    cfg.train.epochs = 6;
+    let a = mp::train_mp(&cfg, &ds, &native);
+    let b = dp::train_dp(&cfg, &ds, &native);
+    let fa = *a.loss_per_epoch.last().unwrap();
+    let fb = *b.loss_per_epoch.last().unwrap();
+    assert!((fa - fb).abs() < 0.3 * fa.abs().max(1.0), "{fa} vs {fb}");
+}
+
+#[test]
+fn pjrt_backend_trains_end_to_end() {
+    if p4sgd::runtime::Runtime::load_default().is_err() {
+        eprintln!("SKIP: artifacts unavailable");
+        return;
+    }
+    let ds = synth::separable_sparse(64, 128, Loss::LogReg, 0.0, 0.3, 47);
+    let mut cfg = base_cfg(2, Loss::LogReg, 1.0);
+    cfg.train.epochs = 2;
+    let make = |_w: usize| -> Box<dyn Compute> {
+        Box::new(p4sgd::runtime::PjrtCompute::load_default().expect("pjrt"))
+    };
+    let pjrt_rep = mp::train_mp(&cfg, &ds, &make);
+    let native_rep = mp::train_mp(&cfg, &ds, &native);
+    for (a, b) in pjrt_rep.loss_per_epoch.iter().zip(&native_rep.loss_per_epoch) {
+        assert!((a - b).abs() < 1e-2 * a.abs().max(1.0), "pjrt {a} vs native {b}");
+    }
+}
+
+#[test]
+fn micro_batch_pipelining_preserves_sync_sgd() {
+    // B=64 (8 micro-batches in flight) must equal B=64 with a single
+    // micro-batch... not the same schedule: instead check pipelined run
+    // equals the oracle, which executes strictly sequentially.
+    let ds = synth::separable_sparse(256, 256, Loss::LogReg, 0.0, 0.2, 53);
+    let mut cfg = base_cfg(2, Loss::LogReg, 1.0);
+    cfg.train.batch = 64;
+    cfg.cluster.slots = 4; // fewer slots than in-flight micro-batches: forces recycling
+    let rep = mp::train_mp(&cfg, &ds, &native);
+    let oracle = reference::train(&cfg, &ds);
+    for (e, (a, b)) in rep.loss_per_epoch.iter().zip(&oracle.loss_per_epoch).enumerate() {
+        assert!((a - b).abs() < 5e-3 * a.abs().max(1.0), "epoch {e}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn single_sample_microbatch_edge() {
+    let ds = synth::separable_sparse(64, 64, Loss::LogReg, 0.0, 0.3, 59);
+    let mut cfg = base_cfg(2, Loss::LogReg, 0.5);
+    cfg.train.micro_batch = 1;
+    cfg.train.batch = 4;
+    cfg.train.epochs = 2;
+    let rep = mp::train_mp(&cfg, &ds, &native);
+    assert_eq!(rep.loss_per_epoch.len(), 2);
+    assert!(rep.loss_per_epoch.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn report_counters_are_consistent() {
+    let ds = synth::separable_sparse(128, 128, Loss::LogReg, 0.0, 0.2, 61);
+    let cfg = base_cfg(2, Loss::LogReg, 1.0);
+    let rep = mp::train_mp(&cfg, &ds, &native);
+    // every PA produced exactly one FA at each worker under a clean net
+    assert_eq!(rep.agg.pa_sent, rep.agg.fa_received);
+    assert_eq!(rep.agg.retransmits, 0);
+    // iterations: epochs * batches * micro-batches * workers
+    let expect = (cfg.train.epochs * (ds.n / cfg.train.batch) * (cfg.train.batch / 8) * 2) as u64;
+    assert_eq!(rep.agg.pa_sent, expect);
+}

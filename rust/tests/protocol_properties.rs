@@ -1,0 +1,225 @@
+//! Property tests on the aggregation protocol invariants (DESIGN.md
+//! "Invariants the test suite enforces").
+//!
+//! These drive the *pure* switch state machine directly with adversarial
+//! packet schedules — arbitrary interleavings, duplications, and
+//! replays — checking exactly-once aggregation and slot-lifecycle
+//! safety without any threads in the loop.
+
+use p4sgd::protocol::Packet;
+use p4sgd::switch::p4::P4Switch;
+use p4sgd::switch::{Action, AggServer};
+use p4sgd::util::prop::{check, small_size};
+use p4sgd::util::rng::Pcg32;
+
+/// One worker's outstanding operation for the scheduler below.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum WState {
+    NeedPa,
+    WaitFa,
+    WaitConfirm,
+    Done,
+}
+
+/// Drive W workers through one aggregation round on one slot with a
+/// random schedule: the scheduler picks a worker and either delivers its
+/// next protocol step or *replays* its last packet (simulating
+/// retransmission after loss). Returns the FA every worker observed.
+fn adversarial_round(
+    sw: &mut P4Switch,
+    workers: usize,
+    seq: u16,
+    contributions: &[i32],
+    rng: &mut Pcg32,
+) -> Result<Vec<i32>, String> {
+    let mut state = vec![WState::NeedPa; workers];
+    let mut last_pkt: Vec<Option<Packet>> = vec![None; workers];
+    let mut observed_fa: Vec<Option<Vec<i32>>> = vec![None; workers];
+    let mut steps = 0;
+    while state.iter().any(|s| *s != WState::Done) {
+        steps += 1;
+        if steps > 10_000 {
+            return Err("liveness: round did not complete".into());
+        }
+        let w = rng.below_usize(workers);
+        // 30%: replay the last packet (retransmission); else next step.
+        let pkt = if rng.chance(0.3) && last_pkt[w].is_some() {
+            last_pkt[w].clone().unwrap()
+        } else {
+            match state[w] {
+                WState::NeedPa => {
+                    let p = Packet::pa(seq, w, vec![contributions[w]]);
+                    state[w] = WState::WaitFa;
+                    p
+                }
+                WState::WaitFa | WState::WaitConfirm | WState::Done => {
+                    match &last_pkt[w] {
+                        Some(p) => p.clone(),
+                        None => continue,
+                    }
+                }
+            }
+        };
+        last_pkt[w] = Some(pkt.clone());
+        for action in sw.handle(w, &pkt) {
+            match action {
+                Action::Multicast(out) if out.is_agg => {
+                    // FA broadcast: deliver to a random subset (loss!)
+                    for (wi, st) in state.iter_mut().enumerate() {
+                        if rng.chance(0.7) && *st == WState::WaitFa {
+                            match &observed_fa[wi] {
+                                Some(prev) if *prev != out.payload => {
+                                    return Err(format!(
+                                        "worker {wi} saw two different FAs: {prev:?} vs {:?}",
+                                        out.payload
+                                    ));
+                                }
+                                _ => observed_fa[wi] = Some(out.payload.clone()),
+                            }
+                            *st = WState::WaitConfirm;
+                            last_pkt[wi] = Some(Packet::ack(seq, wi));
+                        }
+                    }
+                }
+                Action::Multicast(_confirm) => {
+                    // confirm broadcast, again lossy
+                    for st in state.iter_mut() {
+                        if rng.chance(0.7) && *st == WState::WaitConfirm {
+                            *st = WState::Done;
+                        }
+                    }
+                }
+                Action::Unicast(_, _) => {}
+            }
+        }
+    }
+    let mut fas = Vec::new();
+    for (wi, fa) in observed_fa.into_iter().enumerate() {
+        fas.push(
+            fa.ok_or_else(|| format!("worker {wi} finished without an FA"))?
+                .first()
+                .copied()
+                .ok_or("empty FA")?,
+        );
+    }
+    Ok(fas)
+}
+
+#[test]
+fn exactly_once_aggregation_under_adversarial_schedules() {
+    check("exactly-once aggregation", 300, |rng| {
+        let workers = small_size(rng, 2, 8);
+        let mut sw = P4Switch::new(4, workers, 1);
+        let rounds = small_size(rng, 1, 6);
+        for round in 0..rounds {
+            let seq = (round % 4) as u16;
+            let contributions: Vec<i32> =
+                (0..workers).map(|_| rng.next_u32() as i32 >> 8).collect();
+            let want: i32 = contributions.iter().fold(0i32, |a, &b| a.wrapping_add(b));
+            let fas = adversarial_round(&mut sw, workers, seq, &contributions, rng)?;
+            for (w, fa) in fas.iter().enumerate() {
+                if *fa != want {
+                    return Err(format!(
+                        "round {round} worker {w}: FA {fa} != sum {want} (contribs {contributions:?})"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn slot_never_cleared_before_all_acks() {
+    check("slot lifecycle safety", 200, |rng| {
+        let workers = small_size(rng, 2, 6);
+        let mut sw = P4Switch::new(2, workers, 1);
+        // everyone contributes; then ACK from a strict subset
+        for w in 0..workers {
+            let _ = sw.handle(w, &Packet::pa(0, w, vec![1]));
+        }
+        let acks = small_size(rng, 0, workers - 1);
+        for w in 0..acks {
+            let _ = sw.handle(w, &Packet::ack(0, w));
+        }
+        let (agg_count, _, ack_count, _) = sw.registers(0);
+        if agg_count != workers as u32 {
+            return Err(format!("agg state cleared early: {agg_count} (acks={acks})"));
+        }
+        if ack_count != acks as u32 {
+            return Err(format!("ack miscount {ack_count} != {acks}"));
+        }
+        // a late PA retransmission must still be answered with the sum
+        let acts = sw.handle(0, &Packet::pa(0, 0, vec![1]));
+        match acts.first() {
+            Some(Action::Multicast(out)) if out.payload == vec![workers as i32] => Ok(()),
+            other => Err(format!("late PA not answered correctly: {other:?}")),
+        }
+    });
+}
+
+#[test]
+fn duplicate_storms_never_change_the_sum() {
+    check("duplicate storm", 200, |rng| {
+        let workers = small_size(rng, 2, 8);
+        let mut sw = P4Switch::new(2, workers, 4);
+        let payloads: Vec<Vec<i32>> = (0..workers)
+            .map(|w| (0..4).map(|k| (w * 10 + k) as i32).collect())
+            .collect();
+        // deliver each worker's PA 1..5 times in random global order
+        let mut deliveries: Vec<usize> = Vec::new();
+        for w in 0..workers {
+            for _ in 0..small_size(rng, 1, 5) {
+                deliveries.push(w);
+            }
+        }
+        rng.shuffle(&mut deliveries);
+        let mut last_fa: Option<Vec<i32>> = None;
+        for w in deliveries {
+            for a in sw.handle(w, &Packet::pa(0, w, payloads[w].clone())) {
+                if let Action::Multicast(out) = a {
+                    last_fa = Some(out.payload);
+                }
+            }
+        }
+        let fa = last_fa.ok_or("aggregation never completed")?;
+        for k in 0..4 {
+            let want: i32 = (0..workers).map(|w| payloads[w][k]).sum();
+            if fa[k] != want {
+                return Err(format!("element {k}: {} != {want}", fa[k]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn switchml_and_p4_agree_on_lossless_sums() {
+    use p4sgd::switch::switchml::SwitchMlSwitch;
+    check("switchml == p4 on clean rounds", 100, |rng| {
+        let workers = small_size(rng, 2, 8);
+        let mut p4 = P4Switch::new(2, workers, 8);
+        let mut sml = SwitchMlSwitch::new(2, workers, 8);
+        let payloads: Vec<Vec<i32>> =
+            (0..workers).map(|_| (0..8).map(|_| rng.next_u32() as i32 >> 4).collect()).collect();
+        let mut fa_p4 = None;
+        let mut fa_sml = None;
+        for w in 0..workers {
+            for a in p4.handle(w, &Packet::pa(0, w, payloads[w].clone())) {
+                if let Action::Multicast(out) = a {
+                    fa_p4 = Some(out.payload);
+                }
+            }
+            let seq = SwitchMlSwitch::seq_of(0, 0);
+            for a in sml.handle(w, &Packet::pa(seq, w, payloads[w].clone())) {
+                if let Action::Multicast(out) = a {
+                    fa_sml = Some(out.payload[..8].to_vec());
+                }
+            }
+        }
+        match (fa_p4, fa_sml) {
+            (Some(a), Some(b)) if a == b => Ok(()),
+            (a, b) => Err(format!("{a:?} vs {b:?}")),
+        }
+    });
+}
