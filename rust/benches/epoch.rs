@@ -1,8 +1,8 @@
 //! Bench: end-to-end training epochs — the functional system (threads,
 //! switch, pipeline, compute) and the DES that regenerates Figs. 9-13.
-//! `cargo bench --bench epoch`.
+//! `cargo bench --bench epoch`. Results also land in `BENCH_epoch.json`.
 
-use p4sgd::bench::{run, Config};
+use p4sgd::bench::{run, Config, JsonReport};
 use p4sgd::config::SystemConfig;
 use p4sgd::coordinator::mp;
 use p4sgd::data::synth;
@@ -13,6 +13,7 @@ use p4sgd::timing::models::{FpgaModel, AGG_P4SGD};
 
 fn main() {
     println!("# end-to-end epoch hot paths");
+    let mut json = JsonReport::new("epoch");
 
     // functional: one epoch of distributed MP training, 4 workers
     let mut cfg = SystemConfig::default();
@@ -29,14 +30,13 @@ fn main() {
     let make = |_w: usize| -> Box<dyn Compute> { Box::new(NativeCompute) };
     let bcfg = Config { warmup_iters: 1, samples: 8, iters_per_sample: 1 };
     let r = run("functional_mp_epoch_512x2048_w4", bcfg, || mp::train_mp(&cfg, &ds, &make));
-    println!(
-        "  -> {:.1} samples/s end-to-end",
-        ds.n as f64 / r.summary.mean
-    );
+    let samples_per_s = ds.n as f64 / r.summary.mean;
+    println!("  -> {samples_per_s:.1} samples/s end-to-end");
+    json.push(&r, &[("samples_per_s", samples_per_s)]);
 
     // DES: how fast the simulator regenerates a full figure's series
     let des_cfg = Config { warmup_iters: 5, samples: 30, iters_per_sample: 10 };
-    run("des_fig13_full_series", des_cfg, || {
+    let r = run("des_fig13_full_series", des_cfg, || {
         let mut acc = 0.0f64;
         for d in [47_236usize, 332_710] {
             for b in [16usize, 64] {
@@ -55,4 +55,10 @@ fn main() {
         }
         acc
     });
+    json.push(&r, &[]);
+
+    match json.write(std::path::Path::new(".")) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_epoch.json: {e}"),
+    }
 }

@@ -2,9 +2,16 @@
 //! AOT Pallas artifacts via PJRT. `cargo bench --bench kernels`.
 //!
 //! These are the forward/backward micro-batch operations that every
-//! timing figure's compute term rests on (Figs. 10-13).
+//! timing figure's compute term rests on (Figs. 10-13). Results are also
+//! written to `BENCH_kernels.json` (schema in `p4sgd::bench::JsonReport`)
+//! so the perf trajectory is machine-comparable across commits.
+//!
+//! Forward is measured on uniform-random data (planes ~50% dense: the
+//! hybrid kernel's branchless MAC path) and on 1-in-16 sparse data (the
+//! set-bit iteration path); backward measures the plane-replay kernel
+//! against the dense dequantized reference it replaced.
 
-use p4sgd::bench::{run, Config};
+use p4sgd::bench::{run, Config, JsonReport};
 use p4sgd::data::quantize::{dequantized_rows, pack_rows};
 use p4sgd::engine::bitserial;
 use p4sgd::glm::Loss;
@@ -14,27 +21,61 @@ use p4sgd::util::rng::Pcg32;
 fn main() {
     let cfg = Config { warmup_iters: 5, samples: 30, iters_per_sample: 5 };
     let mut rng = Pcg32::seeded(0);
+    let mut json = JsonReport::new("kernels");
     println!("# L1 hot paths (MB=8, P=4)");
 
     for d in [256usize, 1024, 4096] {
         let rows: Vec<f32> = (0..8 * d).map(|_| rng.f32()).collect();
         let pb = pack_rows(&rows, 8, d, d, 4);
         let x: Vec<f32> = (0..d).map(|_| rng.gauss() as f32).collect();
-        let r = run(&format!("native_fwd_d{d}"), cfg, || bitserial::forward(&pb, &x));
+        let mut pa = vec![0.0f32; 8];
+        let r = run(&format!("native_fwd_d{d}"), cfg, || {
+            bitserial::forward_into(&pb, &x, &mut pa);
+            // keep the written buffer observably live (forward_into
+            // returns (), so black-boxing the return alone would let
+            // the whole kernel be dead-code-eliminated)
+            std::hint::black_box(&mut pa);
+        });
         // elements processed: 8 samples x d features
         let gops = (8 * d) as f64 / r.summary.mean / 1e9;
         println!("  -> {gops:.2} Geff-MAC/s");
+        json.push(&r, &[("eff_mac_per_s", gops * 1e9)]);
+    }
+
+    for d in [256usize, 1024, 4096] {
+        // 1-in-16 sparse: exercises the set-bit iteration strategy
+        let rows: Vec<f32> =
+            (0..8 * d).map(|j| if j % 16 == 0 { rng.f32() } else { 0.0 }).collect();
+        let pb = pack_rows(&rows, 8, d, d, 4);
+        let x: Vec<f32> = (0..d).map(|_| rng.gauss() as f32).collect();
+        let mut pa = vec![0.0f32; 8];
+        let r = run(&format!("native_fwd_sparse16_d{d}"), cfg, || {
+            bitserial::forward_into(&pb, &x, &mut pa);
+            std::hint::black_box(&mut pa);
+        });
+        json.push(&r, &[("eff_mac_per_s", (8 * d) as f64 / r.summary.mean)]);
     }
 
     for d in [256usize, 1024, 4096] {
         let rows: Vec<f32> = (0..8 * d).map(|_| rng.f32()).collect();
-        let dq = dequantized_rows(&rows, 8, d, d, 4);
+        let pb = pack_rows(&rows, 8, d, d, 4);
         let fa: Vec<f32> = (0..8).map(|_| rng.gauss() as f32).collect();
         let y = vec![1.0f32; 8];
         let mut g = vec![0.0f32; d];
-        run(&format!("native_bwd_d{d}"), cfg, || {
-            bitserial::backward_acc(&dq, 8, &fa, &y, &mut g, 0.1, Loss::LogReg)
+        let r = run(&format!("native_bwd_planes_d{d}"), cfg, || {
+            bitserial::backward_acc_planes(&pb, &fa, &y, &mut g, 0.1, Loss::LogReg);
+            std::hint::black_box(&mut g);
         });
+        json.push(&r, &[("eff_mac_per_s", (8 * d) as f64 / r.summary.mean)]);
+
+        // the dense reference it replaced, for the memory-traffic story
+        let dq = dequantized_rows(&rows, 8, d, d, 4);
+        let mut g2 = vec![0.0f32; d];
+        let r = run(&format!("native_bwd_dense_d{d}"), cfg, || {
+            bitserial::backward_acc(&dq, 8, &fa, &y, &mut g2, 0.1, Loss::LogReg);
+            std::hint::black_box(&mut g2);
+        });
+        json.push(&r, &[("eff_mac_per_s", (8 * d) as f64 / r.summary.mean)]);
     }
 
     match Runtime::load_default() {
@@ -45,11 +86,17 @@ fn main() {
                 let x: Vec<f32> = (0..d).map(|_| rng.gauss() as f32).collect();
                 // prime the executable cache (compile outside the timing)
                 let _ = rt.fwd(&pb.planes, 4, 8, pb.lanes(), &x).unwrap();
-                run(&format!("pjrt_fwd_d{d}"), cfg, || {
+                let r = run(&format!("pjrt_fwd_d{d}"), cfg, || {
                     rt.fwd(&pb.planes, 4, 8, pb.lanes(), &x).unwrap()
                 });
+                json.push(&r, &[("eff_mac_per_s", (8 * d) as f64 / r.summary.mean)]);
             }
         }
         Err(e) => println!("(pjrt benches skipped: {e})"),
+    }
+
+    match json.write(std::path::Path::new(".")) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_kernels.json: {e}"),
     }
 }

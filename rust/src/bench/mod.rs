@@ -65,6 +65,70 @@ pub fn run<T, F: FnMut() -> T>(name: &str, cfg: Config, body: F) -> BenchResult 
     r
 }
 
+/// Machine-readable bench output: collects results and writes a
+/// `BENCH_<name>.json` file so runs are comparable across commits (the
+/// perf trajectory the zero-alloc hot-path work starts). Schema v1:
+///
+/// ```json
+/// {"bench": "...", "schema": 1, "results": [
+///   {"name": "...", "mean_s": 1.0e-6, "p50_s": ..., "p95_s": ...,
+///    "samples": 30, "<extra metric>": ...}, ...]}
+/// ```
+///
+/// Hand-rolled writer — no serde in the offline image; the values are
+/// all finite floats and bare identifiers, so escaping `"` and `\` is
+/// sufficient.
+#[derive(Debug, Default)]
+pub struct JsonReport {
+    bench: String,
+    entries: Vec<String>,
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+impl JsonReport {
+    pub fn new(bench: &str) -> Self {
+        Self { bench: bench.to_string(), entries: Vec::new() }
+    }
+
+    /// Record a result, with optional extra named metrics (e.g.
+    /// throughput in effective MAC/s).
+    pub fn push(&mut self, r: &BenchResult, extra: &[(&str, f64)]) {
+        let s = &r.summary;
+        let mut line = format!(
+            "{{\"name\": \"{}\", \"mean_s\": {:e}, \"p50_s\": {:e}, \"p95_s\": {:e}, \"samples\": {}",
+            json_escape(&r.name),
+            s.mean,
+            s.p50,
+            s.p95,
+            s.n,
+        );
+        for (k, v) in extra {
+            line.push_str(&format!(", \"{}\": {:e}", json_escape(k), v));
+        }
+        line.push('}');
+        self.entries.push(line);
+    }
+
+    /// The full document as a JSON string.
+    pub fn render(&self) -> String {
+        let mut out = format!("{{\"bench\": \"{}\", \"schema\": 1, \"results\": [", json_escape(&self.bench));
+        out.push_str(&self.entries.join(", "));
+        out.push_str("]}\n");
+        out
+    }
+
+    /// Write `BENCH_<bench>.json` into `dir` (the package root when run
+    /// via `cargo bench`). Returns the path written.
+    pub fn write(&self, dir: &std::path::Path) -> std::io::Result<std::path::PathBuf> {
+        let path = dir.join(format!("BENCH_{}.json", self.bench));
+        std::fs::write(&path, self.render())?;
+        Ok(path)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -88,5 +152,25 @@ mod tests {
         let cfg = Config { warmup_iters: 0, samples: 2, iters_per_sample: 1 };
         let r = bench("myname", cfg, || 1 + 1);
         assert!(r.report().contains("myname"));
+    }
+
+    #[test]
+    fn json_report_renders_schema() {
+        let cfg = Config { warmup_iters: 0, samples: 2, iters_per_sample: 1 };
+        let r = bench("fwd_d256", cfg, || 1 + 1);
+        let mut j = JsonReport::new("kernels");
+        j.push(&r, &[("eff_mac_per_s", 1.5e9)]);
+        let doc = j.render();
+        assert!(doc.starts_with("{\"bench\": \"kernels\", \"schema\": 1"), "{doc}");
+        assert!(doc.contains("\"name\": \"fwd_d256\""), "{doc}");
+        assert!(doc.contains("\"mean_s\": "), "{doc}");
+        assert!(doc.contains("\"eff_mac_per_s\": "), "{doc}");
+        assert!(doc.trim_end().ends_with("]}"), "{doc}");
+    }
+
+    #[test]
+    fn json_report_escapes_quotes() {
+        let j = JsonReport::new("a\"b");
+        assert!(j.render().contains("a\\\"b"));
     }
 }

@@ -11,7 +11,7 @@
 use super::TrainReport;
 use crate::config::SystemConfig;
 use crate::data::partition::horizontal;
-use crate::data::quantize::{dequantized_rows, pack_rows, LANE};
+use crate::data::quantize::{pack_rows, LANE};
 use crate::data::Dataset;
 use crate::engine::Compute;
 use crate::net::sim::SimNet;
@@ -81,29 +81,30 @@ pub fn train_dp(
                 let mut x = vec![0.0f32; d_pad];
                 let mut g = vec![0.0f32; d_pad];
                 let mut loss_curve = Vec::with_capacity(t.epochs);
-                // pre-pack local micro-batches
+                // pre-pack local micro-batches (bit-planes only: the
+                // backward replays planes, so no dequantized copy)
                 let n_micro = n_local / mb;
                 let mut packed = Vec::with_capacity(n_micro);
                 for j in 0..n_micro {
                     let rows = ds.rows(lo + j * mb, lo + (j + 1) * mb);
                     packed.push((
                         pack_rows(rows, mb, ds.d, d_pad, t.precision),
-                        dequantized_rows(rows, mb, ds.d, d_pad, t.precision),
                         ds.labels[lo + j * mb..lo + (j + 1) * mb].to_vec(),
                     ));
                 }
                 let micro_per_batch = local_b / mb;
                 let batches = n_micro / micro_per_batch;
+                let mut fa = vec![0.0f32; mb];
                 for _ in 0..t.epochs {
                     let mut epoch_loss = 0.0f32;
                     for b in 0..batches {
                         g.iter_mut().for_each(|v| *v = 0.0);
                         // local forward+backward (no inter-worker dependency)
                         for j in 0..micro_per_batch {
-                            let (pb, dq, y) = &packed[b * micro_per_batch + j];
-                            let fa = compute.forward(pb, &x);
+                            let (pb, y) = &packed[b * micro_per_batch + j];
+                            compute.forward_into(pb, &x, &mut fa);
                             epoch_loss += compute.loss_sum(&fa, y, t.loss);
-                            compute.backward_acc(dq, mb, &fa, y, &mut g, t.lr, t.loss);
+                            compute.backward_acc_planes(pb, &fa, y, &mut g, t.lr, t.loss);
                         }
                         // AllReduce the gradient in chunks through the switch.
                         allreduce_grad(&mut agg, &mut g);
@@ -173,7 +174,7 @@ fn allreduce_grad<T: crate::net::Transport>(agg: &mut AggClient<T>, buf: &mut [f
             if let Some(c) = inflight.remove(&seq) {
                 let lo = c * GRAD_CHUNK;
                 let hi = (lo + GRAD_CHUNK).min(buf.len());
-                for (o, &v) in buf[lo..hi].iter_mut().zip(&payload) {
+                for (o, &v) in buf[lo..hi].iter_mut().zip(payload.iter()) {
                     *o = from_fixed(v);
                 }
                 done += 1;

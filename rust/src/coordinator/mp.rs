@@ -16,7 +16,7 @@ use crate::data::Dataset;
 use crate::engine::Compute;
 use crate::net::sim::SimNet;
 use crate::net::switch_node;
-use crate::pipeline::{run_minibatch, PipelineStats, PreparedShard, WorkerState};
+use crate::pipeline::{run_minibatch, PipelineScratch, PipelineStats, PreparedShard, WorkerState};
 use crate::switch::p4::P4Switch;
 use crate::switch::runner;
 use crate::worker::{AggClient, AggStats};
@@ -75,6 +75,9 @@ pub fn train_mp(cfg: &SystemConfig, ds: &Dataset, make_compute: &ComputeFactory)
                 let per_batch = t.batch / t.micro_batch;
                 let batches = prep.micro_batches() / per_batch;
                 let mut pstats = PipelineStats::default();
+                // One scratch per worker: after the first mini-batch the
+                // steady-state loop never allocates.
+                let mut scratch = PipelineScratch::new();
                 let mut loss_curve = Vec::with_capacity(t.epochs);
                 for _ in 0..t.epochs {
                     let mut epoch_loss = 0.0f32;
@@ -89,6 +92,7 @@ pub fn train_mp(cfg: &SystemConfig, ds: &Dataset, make_compute: &ComputeFactory)
                             t.loss,
                             t.lr,
                             &mut pstats,
+                            &mut scratch,
                         );
                     }
                     loss_curve.push(epoch_loss);

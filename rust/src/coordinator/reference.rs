@@ -28,6 +28,10 @@ pub fn train(cfg: &SystemConfig, ds: &Dataset) -> TrainReport {
     let per_batch = t.batch / t.micro_batch;
     let batches = prep.micro_batches() / per_batch;
     let mut loss_curve = Vec::with_capacity(t.epochs);
+    // Reused across every micro-batch (the oracle shares the pipeline's
+    // zero-allocation discipline).
+    let mut fa = vec![0.0f32; t.micro_batch];
+    let mut fa_e = vec![0.0f32; t.micro_batch];
 
     for _ in 0..t.epochs {
         let mut epoch_loss = 0.0f32;
@@ -38,15 +42,16 @@ pub fn train(cfg: &SystemConfig, ds: &Dataset) -> TrainReport {
             for j in 0..per_batch {
                 let m = &prep.micro[b * per_batch + j];
                 // forward: engine-sum = full activation (single worker)
-                let mut fa = vec![0.0f32; t.micro_batch];
+                fa.fill(0.0);
                 for (ed, xe) in m.per_engine.iter().zip(&state.x) {
-                    for (p, v) in fa.iter_mut().zip(compute.forward(&ed.packed, xe)) {
-                        *p += v;
+                    compute.forward_into(ed, xe, &mut fa_e);
+                    for (p, v) in fa.iter_mut().zip(fa_e.iter()) {
+                        *p += *v;
                     }
                 }
                 epoch_loss += compute.loss_sum(&fa, &m.y, t.loss);
                 for (ed, ge) in m.per_engine.iter().zip(&mut state.g) {
-                    compute.backward_acc(&ed.dq, t.micro_batch, &fa, &m.y, ge, t.lr, t.loss);
+                    compute.backward_acc_planes(ed, &fa, &m.y, ge, t.lr, t.loss);
                 }
             }
             let inv_b = 1.0 / t.batch as f32;

@@ -28,6 +28,10 @@ pub fn dequantize(q: u32, precision: u32) -> f32 {
 pub struct PackedBatch {
     /// Planes, `planes[((p * mb) + i) * w + k]`: plane p, sample i, lane k.
     pub planes: Vec<u32>,
+    /// Set-bit count of each plane-row, `plane_pop[p * mb + i]` —
+    /// computed once at pack time so the forward kernel can pick a
+    /// density-matched strategy per row without rescanning the words.
+    pub plane_pop: Vec<u32>,
     pub precision: u32,
     pub mb: usize,
     /// Padded feature count (multiple of 32).
@@ -37,6 +41,11 @@ pub struct PackedBatch {
 impl PackedBatch {
     pub fn lanes(&self) -> usize {
         self.d / LANE
+    }
+
+    /// Fraction of set bits in plane `p`, sample `i` (diagnostics).
+    pub fn density(&self, p: usize, i: usize) -> f32 {
+        self.plane_pop[p * self.mb + i] as f32 / self.d as f32
     }
 
     /// Word for (plane, sample, lane).
@@ -76,7 +85,36 @@ pub fn pack_rows(rows: &[f32], mb: usize, d_in: usize, d_pad: usize, precision: 
             }
         }
     }
-    PackedBatch { planes, precision, mb, d: d_pad }
+    let plane_pop = (0..precision as usize * mb)
+        .map(|r| planes[r * w..(r + 1) * w].iter().map(|wd| wd.count_ones()).sum())
+        .collect();
+    PackedBatch { planes, plane_pop, precision, mb, d: d_pad }
+}
+
+/// Reconstruct the dequantized rows from bit-planes into `out`
+/// (`mb * d` values, row-major): `out[i*d+j] = sum_p bit_p(i,j) * 2^-(p+1)`.
+/// Bit-exact with [`dequantized_rows`] — the per-plane terms are distinct
+/// powers of two, so the f32 sum is exact for any `precision <= 8`.
+pub fn unpack_rows_into(pb: &PackedBatch, out: &mut [f32]) {
+    assert_eq!(out.len(), pb.mb * pb.d, "unpack buffer shape");
+    out.fill(0.0);
+    let w = pb.lanes();
+    for p in 0..pb.precision as usize {
+        let weight = 0.5f32.powi(p as i32 + 1);
+        for i in 0..pb.mb {
+            let base = (p * pb.mb + i) * w;
+            let row = &mut out[i * pb.d..(i + 1) * pb.d];
+            for k in 0..w {
+                let mut word = pb.planes[base + k];
+                let off = k * LANE;
+                while word != 0 {
+                    let j = word.trailing_zeros() as usize;
+                    row[off + j] += weight;
+                    word &= word - 1;
+                }
+            }
+        }
+    }
 }
 
 /// Dequantized dense rows (what the backward kernel consumes), padded to
@@ -180,6 +218,37 @@ mod tests {
         assert_eq!(dq[0], 0.5);
         assert_eq!(dq[1], 0.25);
         assert!(dq[2..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn plane_popcounts_match_bit_extraction() {
+        let mut rng = Pcg32::seeded(9);
+        let (mb, d) = (4usize, 70usize);
+        let d_pad = d.div_ceil(LANE) * LANE;
+        let rows: Vec<f32> = (0..mb * d).map(|_| rng.f32()).collect();
+        let pb = pack_rows(&rows, mb, d, d_pad, 4);
+        assert_eq!(pb.plane_pop.len(), 4 * mb);
+        for p in 0..4 {
+            for i in 0..mb {
+                let want: u32 = (0..d_pad).map(|j| pb.bit(p, i, j)).sum();
+                assert_eq!(pb.plane_pop[p * mb + i], want, "p={p} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn unpack_rows_matches_dequantized_rows_exactly() {
+        let mut rng = Pcg32::seeded(10);
+        for precision in [1u32, 2, 4, 8] {
+            let (mb, d) = (3usize, 41usize);
+            let d_pad = d.div_ceil(LANE) * LANE;
+            let rows: Vec<f32> = (0..mb * d).map(|_| rng.f32()).collect();
+            let pb = pack_rows(&rows, mb, d, d_pad, precision);
+            let want = dequantized_rows(&rows, mb, d, d_pad, precision);
+            let mut got = vec![9.9f32; mb * d_pad];
+            unpack_rows_into(&pb, &mut got);
+            assert_eq!(got, want, "P={precision}");
+        }
     }
 
     #[test]

@@ -7,56 +7,148 @@
 //! PA = sum_p 2^{-(p+1)} * sum_{j: bit_p[j]=1} x[j]
 //! ```
 //!
-//! which we evaluate lane-by-lane with set-bit iteration — the software
-//! twin of the FPGA's masked adder tree, and the same specification the
-//! Pallas kernel satisfies (`python/compile/kernels/bitserial.py`).
+//! evaluated per plane-row with a **density-matched strategy** (§Perf
+//! L1): rows whose pack-time popcount clears [`DENSE_THRESHOLD_FRAC`]
+//! run a branchless mask-multiply-accumulate over 32 independent
+//! accumulator lanes — the software analogue of the FPGA's always-on
+//! adder tree, and a shape LLVM auto-vectorizes — while sparse rows keep
+//! set-bit iteration, which wins when most multipliers would be fed
+//! zeros. The popcounts come free from `pack_rows`, so the choice costs
+//! one compare per plane-row.
 //!
-//! Backward: the banks replay sample bits from the FIFO against the
-//! per-sample `scale`, accumulating 64 gradient lanes per cycle; the
-//! dequantized form is numerically identical, so we use it directly.
+//! Backward: the banks replay sample bits from the FIFO — so does the
+//! software twin. [`backward_acc_planes`] accumulates the gradient
+//! directly from the bit-planes with per-plane `2^-(p+1)` scaling,
+//! which is numerically identical to the dequantized form (the plane
+//! terms are distinct powers of two) while reading the ~P/32-per-feature
+//! packed image instead of a 4-byte-per-feature dense copy — at P=4
+//! that is 8x less backward memory traffic, and it lets `PreparedShard`
+//! drop the dense copy entirely. [`backward_acc`] keeps the dense form
+//! as the cross-validation reference.
 
 use crate::data::quantize::{PackedBatch, LANE};
 use crate::glm::Loss;
 
-/// Forward pass over a packed micro-batch: PA[k] = A[k] . x.
+/// A plane-row at or above this set-bit fraction takes the branchless
+/// MAC; below it, set-bit iteration. Crossover sits where the ~d/8
+/// vectorized MAC lanes beat `pop` dependent-branch adds.
 ///
-/// Two strategies, picked per lane by population count (§Perf L1):
-/// dense words use a branchless unconditional multiply-accumulate that
-/// the compiler auto-vectorizes (the software analogue of the FPGA's
-/// always-running 64 multipliers); sparse words fall back to set-bit
-/// iteration, which wins when most multipliers would be fed zeros.
-pub fn forward(pb: &PackedBatch, x: &[f32]) -> Vec<f32> {
+/// History: an earlier perf pass found an unconditional 32-lane MAC
+/// regressed on the SSE-baseline substrate *when applied to every row*.
+/// This hybrid differs in both respects that mattered: sparse rows never
+/// pay the MAC (pack-time popcount gating costs one compare), and the
+/// 32 independent accumulators let LLVM vectorize without reassociating
+/// a serial f32 chain. If a measured run still shows the MAC losing,
+/// raising this threshold toward 1.0 degrades gracefully back to pure
+/// set-bit iteration.
+pub const DENSE_THRESHOLD_FRAC: f32 = 0.25;
+
+#[inline]
+fn is_dense(pop: u32, d: usize) -> bool {
+    pop as f32 >= DENSE_THRESHOLD_FRAC * d as f32
+}
+
+/// Branchless plane-row sum: every lane multiplies its 0/1 mask bit into
+/// the model value, accumulating in 32 independent lanes so the compiler
+/// can vectorize without reassociating a serial f32 chain.
+#[inline]
+fn dense_plane_sum(words: &[u32], x: &[f32]) -> f32 {
+    let mut acc = [0.0f32; LANE];
+    for (k, &word) in words.iter().enumerate() {
+        let lanes = &x[k * LANE..(k + 1) * LANE];
+        for (b, a) in acc.iter_mut().enumerate() {
+            *a += ((word >> b) & 1) as f32 * lanes[b];
+        }
+    }
+    acc.iter().sum()
+}
+
+/// Sparse plane-row sum: iterate set bits only.
+#[inline]
+fn sparse_plane_sum(words: &[u32], x: &[f32]) -> f32 {
+    let mut sum = 0.0f32;
+    for (k, &w) in words.iter().enumerate() {
+        let mut word = w;
+        let xoff = k * LANE;
+        while word != 0 {
+            let j = word.trailing_zeros() as usize;
+            sum += x[xoff + j];
+            word &= word - 1;
+        }
+    }
+    sum
+}
+
+/// Forward pass over a packed micro-batch, written into `out`
+/// (`out.len() == pb.mb`): `out[k] = A[k] . x`. Allocation-free; the
+/// strategy is picked per plane-row from the pack-time popcount.
+pub fn forward_into(pb: &PackedBatch, x: &[f32], out: &mut [f32]) {
     assert_eq!(x.len(), pb.d, "model slice width");
+    assert_eq!(out.len(), pb.mb, "PA buffer width");
     let w = pb.lanes();
-    let mut pa = vec![0.0f32; pb.mb];
-    for (i, pa_i) in pa.iter_mut().enumerate() {
+    for (i, pa_i) in out.iter_mut().enumerate() {
         let mut acc = 0.0f32;
         for p in 0..pb.precision as usize {
-            let mut plane_sum = 0.0f32;
             let base = (p * pb.mb + i) * w;
-            // Row-major streaming over the plane words (the HBM access
-            // pattern of the FPGA), set-bit iteration per word. The perf
-            // pass tried branchless 32-lane MACs and lane-major loop
-            // orders; on this (single-core, SSE-baseline) substrate both
-            // regressed — set-bit iteration is the practical roofline
-            // here (see EXPERIMENTS.md §Perf).
-            for k in 0..w {
-                let mut word = pb.planes[base + k];
-                let xoff = k * LANE;
-                while word != 0 {
-                    let j = word.trailing_zeros() as usize;
-                    plane_sum += x[xoff + j];
-                    word &= word - 1;
-                }
-            }
+            let words = &pb.planes[base..base + w];
+            let plane_sum = if is_dense(pb.plane_pop[p * pb.mb + i], pb.d) {
+                dense_plane_sum(words, x)
+            } else {
+                sparse_plane_sum(words, x)
+            };
             acc += plane_sum * 0.5f32.powi(p as i32 + 1);
         }
         *pa_i = acc;
     }
+}
+
+/// Allocating convenience wrapper over [`forward_into`] (tests, tools —
+/// not the training hot path).
+pub fn forward(pb: &PackedBatch, x: &[f32]) -> Vec<f32> {
+    let mut pa = vec![0.0f32; pb.mb];
+    forward_into(pb, x, &mut pa);
     pa
 }
 
-/// Backward pass: g += sum_k scale_k * A[k, :], scale_k = lr*df(FA_k, y_k).
+/// Plane-replay backward pass: `g += sum_k scale_k * A[k, :]` with
+/// `scale_k = lr*df(FA_k, y_k)`, accumulated straight from the
+/// bit-planes — each set bit of plane `p` contributes
+/// `scale_k * 2^-(p+1)` to its gradient lane (the FPGA's FIFO replay).
+pub fn backward_acc_planes(
+    pb: &PackedBatch,
+    fa: &[f32],
+    y: &[f32],
+    g: &mut [f32],
+    lr: f32,
+    loss: Loss,
+) {
+    assert_eq!(g.len(), pb.d, "gradient slice width");
+    assert!(fa.len() >= pb.mb && y.len() >= pb.mb);
+    let w = pb.lanes();
+    for k in 0..pb.mb {
+        let scale = lr * loss.df(fa[k], y[k]);
+        if scale == 0.0 {
+            continue; // hinge loss outside margin: zero row contribution
+        }
+        for p in 0..pb.precision as usize {
+            let contrib = scale * 0.5f32.powi(p as i32 + 1);
+            let base = (p * pb.mb + k) * w;
+            for kw in 0..w {
+                let mut word = pb.planes[base + kw];
+                let goff = kw * LANE;
+                while word != 0 {
+                    let j = word.trailing_zeros() as usize;
+                    g[goff + j] += contrib;
+                    word &= word - 1;
+                }
+            }
+        }
+    }
+}
+
+/// Dense-reference backward pass over dequantized rows — retained as the
+/// oracle [`backward_acc_planes`] is validated against (and the form the
+/// AOT `bwd` artifact consumes).
 pub fn backward_acc(a_dq: &[f32], mb: usize, fa: &[f32], y: &[f32], g: &mut [f32], lr: f32, loss: Loss) {
     let d = g.len();
     assert_eq!(a_dq.len(), mb * d, "dequantized rows shape");
@@ -129,6 +221,42 @@ mod tests {
     }
 
     #[test]
+    fn dense_and_sparse_strategies_agree() {
+        // Force both paths over the same data: uniform rows are ~50%
+        // dense per plane (MAC path); a 1/16-sparse copy stays on set-bit
+        // iteration. Both must match the dense ground truth.
+        let mut rng = crate::util::rng::Pcg32::seeded(2);
+        let (mb, d) = (8, 512);
+        let dense_rows: Vec<f32> = (0..mb * d).map(|_| rng.f32()).collect();
+        let sparse_rows: Vec<f32> = dense_rows
+            .iter()
+            .enumerate()
+            .map(|(j, &v)| if j % 16 == 0 { v } else { 0.0 })
+            .collect();
+        let x: Vec<f32> = (0..d).map(|_| rng.gauss() as f32).collect();
+        for rows in [&dense_rows, &sparse_rows] {
+            let pb = pack_rows(rows, mb, d, d, 4);
+            let got = forward(&pb, &x);
+            let want = dense_forward(rows, mb, d, &x, 4);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 2e-3 * (1.0 + w.abs()), "{g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn forward_into_writes_without_reading_stale_out() {
+        let rows = vec![0.5f32; 2 * 32];
+        let pb = pack_rows(&rows, 2, 32, 32, 4);
+        let x = vec![1.0f32; 32];
+        let mut out = vec![123.0f32; 2]; // stale garbage must be overwritten
+        forward_into(&pb, &x, &mut out);
+        for v in &out {
+            assert!((v - 16.0).abs() < 1e-4, "{v}");
+        }
+    }
+
+    #[test]
     fn backward_accumulates_rank_one_updates() {
         let (mb, d) = (2, 4);
         let a = vec![
@@ -150,6 +278,11 @@ mod tests {
         let mut g = vec![0.0f32; 3];
         backward_acc(&[1.0, 1.0, 1.0], 1, &[5.0], &[1.0], &mut g, 0.1, Loss::Svm);
         assert_eq!(g, vec![0.0; 3]);
+        let rows = vec![0.9f32; 32];
+        let pb = pack_rows(&rows, 1, 32, 32, 4);
+        let mut g = vec![0.0f32; 32];
+        backward_acc_planes(&pb, &[5.0], &[1.0], &mut g, 0.1, Loss::Svm);
+        assert_eq!(g, vec![0.0; 32]);
     }
 
     #[test]
@@ -167,6 +300,41 @@ mod tests {
             for (i, (g, w)) in got.iter().zip(&want).enumerate() {
                 if (g - w).abs() > 2e-3 * (1.0 + w.abs()) {
                     return Err(format!("sample {i}: {g} vs {w} (P={precision}, d={d})"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn plane_replay_matches_dequantized_backward_property() {
+        // The tentpole parity claim: backward from the bit-planes equals
+        // backward from the dequantized rows across precisions, odd
+        // (non-lane-aligned) widths, and all three losses.
+        prop::check("plane-replay backward == dequantized backward", 80, |rng| {
+            let mb = prop::small_size(rng, 1, 8);
+            let d = prop::small_size(rng, 1, 150); // odd widths included
+            let d_pad = d.div_ceil(LANE) * LANE;
+            let precision = [1u32, 2, 4, 8][rng.below_usize(4)];
+            let loss = [Loss::LinReg, Loss::LogReg, Loss::Svm][rng.below_usize(3)];
+            let rows: Vec<f32> = (0..mb * d).map(|_| rng.f32()).collect();
+            let fa: Vec<f32> = (0..mb).map(|_| rng.gauss() as f32).collect();
+            let y: Vec<f32> = (0..mb)
+                .map(|_| if rng.chance(0.5) { 1.0 } else { 0.0 })
+                .collect();
+            let pb = pack_rows(&rows, mb, d, d_pad, precision);
+            let dq = dequantized_rows(&rows, mb, d, d_pad, precision);
+            let mut g_planes = vec![0.05f32; d_pad];
+            let mut g_dense = vec![0.05f32; d_pad];
+            backward_acc_planes(&pb, &fa, &y, &mut g_planes, 0.3, loss);
+            backward_acc(&dq, mb, &fa, &y, &mut g_dense, 0.3, loss);
+            for j in 0..d_pad {
+                let tol = 1e-5 * (1.0 + g_dense[j].abs());
+                if (g_planes[j] - g_dense[j]).abs() > tol {
+                    return Err(format!(
+                        "j={j}: planes {} vs dense {} (P={precision}, d={d}, loss={loss})",
+                        g_planes[j], g_dense[j]
+                    ));
                 }
             }
             Ok(())

@@ -9,6 +9,15 @@
 //!
 //! The [`Compute`] trait abstracts the backend: [`NativeCompute`] here,
 //! `runtime::PjrtCompute` for the AOT artifacts.
+//!
+//! **Zero-allocation contract (§Perf L1):** both hot-path methods are
+//! *write-into* — `forward_into` fills a caller-owned PA buffer and
+//! `backward_acc_planes` accumulates into the caller's gradient — and
+//! both read only the bit-plane packed image. The steady-state training
+//! loop (`pipeline::run_minibatch`) therefore makes no heap allocation
+//! per micro-batch on the native backend; `PreparedShard` keeps no
+//! dequantized copy of the data (the backward replays planes, like the
+//! FPGA replays its FIFO).
 
 pub mod bitserial;
 
@@ -17,26 +26,35 @@ use crate::glm::Loss;
 
 /// A compute backend executing the L1/L2 math for one worker.
 ///
-/// `forward` consumes a *bit-plane packed* micro-batch (what the FPGA
-/// reads from HBM / the TPU kernel reads from HBM); `backward_acc`
-/// consumes the dequantized rows (the FPGA replays bits from its FIFO —
-/// numerically identical).
+/// Both directions consume the *bit-plane packed* micro-batch (what the
+/// FPGA reads from HBM / the TPU kernel reads from HBM). The backward
+/// replays the planes with per-plane `2^-(p+1)` scaling — numerically
+/// identical to a dequantized multiply, without materializing the dense
+/// rows.
 pub trait Compute {
-    /// PA[k] = A[k, :] . x for the micro-batch (paper Alg. 1 lines 18-21).
-    fn forward(&mut self, planes: &PackedBatch, x: &[f32]) -> Vec<f32>;
+    /// PA[k] = A[k, :] . x for the micro-batch, written into `out`
+    /// (`out.len() == planes.mb`; paper Alg. 1 lines 18-21).
+    fn forward_into(&mut self, planes: &PackedBatch, x: &[f32], out: &mut [f32]);
 
-    /// g += sum_k lr * df(FA[k], y[k]) * A[k, :] (Alg. 1 lines 25-29).
-    #[allow(clippy::too_many_arguments)]
-    fn backward_acc(
+    /// g += sum_k lr * df(FA[k], y[k]) * A[k, :], replayed from the
+    /// bit-planes (Alg. 1 lines 25-29). `g.len() == planes.d`.
+    fn backward_acc_planes(
         &mut self,
-        a_dq: &[f32],
-        mb: usize,
+        planes: &PackedBatch,
         fa: &[f32],
         y: &[f32],
         g: &mut [f32],
         lr: f32,
         loss: Loss,
     );
+
+    /// Allocating convenience wrapper over [`Compute::forward_into`]
+    /// (tests and tools — the pipeline uses the write-into form).
+    fn forward(&mut self, planes: &PackedBatch, x: &[f32]) -> Vec<f32> {
+        let mut pa = vec![0.0f32; planes.mb];
+        self.forward_into(planes, x, &mut pa);
+        pa
+    }
 
     /// x -= g / B (Alg. 1 line 31).
     fn update(&mut self, x: &mut [f32], g: &[f32], inv_b: f32) {
@@ -56,28 +74,27 @@ pub trait Compute {
 pub struct NativeCompute;
 
 impl Compute for NativeCompute {
-    fn forward(&mut self, planes: &PackedBatch, x: &[f32]) -> Vec<f32> {
-        bitserial::forward(planes, x)
+    fn forward_into(&mut self, planes: &PackedBatch, x: &[f32], out: &mut [f32]) {
+        bitserial::forward_into(planes, x, out);
     }
 
-    fn backward_acc(
+    fn backward_acc_planes(
         &mut self,
-        a_dq: &[f32],
-        mb: usize,
+        planes: &PackedBatch,
         fa: &[f32],
         y: &[f32],
         g: &mut [f32],
         lr: f32,
         loss: Loss,
     ) {
-        bitserial::backward_acc(a_dq, mb, fa, y, g, lr, loss);
+        bitserial::backward_acc_planes(planes, fa, y, g, lr, loss);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::quantize::pack_rows;
+    use crate::data::quantize::{dequantized_rows, pack_rows};
 
     #[test]
     fn default_update_applies_scaled_gradient() {
@@ -103,5 +120,24 @@ mod tests {
         let pa = c.forward(&pb, &x);
         assert_eq!(pa.len(), 1);
         assert!((pa[0] - 16.0).abs() < 1e-4); // 32 * 0.5
+    }
+
+    #[test]
+    fn trait_backward_matches_dense_reference() {
+        let mut c = NativeCompute;
+        let mut rng = crate::util::rng::Pcg32::seeded(8);
+        let (mb, d) = (4usize, 64usize);
+        let rows: Vec<f32> = (0..mb * d).map(|_| rng.f32()).collect();
+        let pb = pack_rows(&rows, mb, d, d, 4);
+        let dq = dequantized_rows(&rows, mb, d, d, 4);
+        let fa = vec![0.4f32; mb];
+        let y = vec![1.0f32; mb];
+        let mut g_planes = vec![0.0f32; d];
+        let mut g_dense = vec![0.0f32; d];
+        c.backward_acc_planes(&pb, &fa, &y, &mut g_planes, 0.5, Loss::LogReg);
+        bitserial::backward_acc(&dq, mb, &fa, &y, &mut g_dense, 0.5, Loss::LogReg);
+        for (a, b) in g_planes.iter().zip(&g_dense) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
     }
 }

@@ -169,9 +169,6 @@ fn info() -> Result<()> {
         }
         Err(e) => println!("artifacts: unavailable ({e})"),
     }
-    match xla::PjRtClient::cpu() {
-        Ok(c) => println!("pjrt: {} ({} devices)", c.platform_name(), c.device_count()),
-        Err(e) => println!("pjrt: unavailable ({e})"),
-    }
+    println!("{}", p4sgd::runtime::pjrt_banner());
     Ok(())
 }

@@ -25,7 +25,9 @@ use std::collections::BinaryHeap;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-/// A frame in flight.
+/// A frame in flight. Cloning a [`Packet`] (fan-out, duplication) copies
+/// the header and bumps the shared payload's refcount — the fabric never
+/// deep-copies activation buffers.
 struct Frame {
     src: NodeId,
     dst: NodeId,
@@ -242,7 +244,7 @@ mod tests {
         let (src, pkt) = b.recv_timeout(Duration::from_secs(1)).expect("delivery");
         assert_eq!(src, 0);
         assert_eq!(pkt.seq, 7);
-        assert_eq!(pkt.payload, vec![1, 2, 3]);
+        assert_eq!(pkt.payload[..], [1, 2, 3]);
     }
 
     #[test]

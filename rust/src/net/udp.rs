@@ -89,7 +89,7 @@ mod tests {
         let (src, pkt) = b.recv_timeout(Duration::from_secs(2)).expect("delivery");
         assert_eq!(src, 0);
         assert_eq!(pkt.seq, 42);
-        assert_eq!(pkt.payload, vec![7, -9]);
+        assert_eq!(pkt.payload[..], [7, -9]);
     }
 
     #[test]

@@ -9,15 +9,25 @@
 //! the backward of earlier micro-batches — while gradient accumulation
 //! keeps synchronous-SGD semantics (the model updates only at the
 //! mini-batch boundary, after every FA arrived).
+//!
+//! **Zero-allocation steady state (§Perf L1):** everything the loop
+//! touches per micro-batch is preallocated. [`PreparedShard`] holds the
+//! bit-plane image only (the backward replays planes — no dequantized
+//! copy, an ~8x memory cut at P=4); [`PipelineScratch`] carries the PA
+//! accumulator, per-engine forward buffer, wire encode/decode buffers,
+//! and the seq→micro-batch map; `AggClient` recycles payload buffers
+//! through an `Arc` pool. After one warm-up mini-batch,
+//! [`run_minibatch`] performs **zero heap allocations** per micro-batch
+//! on the native backend (enforced by `tests/alloc_steady_state.rs`
+//! with a counting allocator).
 
 use crate::data::partition::{vertical, VerticalShard};
-use crate::data::quantize::{dequantized_rows, pack_rows, PackedBatch, LANE};
+use crate::data::quantize::{pack_rows, PackedBatch, LANE};
 use crate::engine::Compute;
 use crate::glm::Loss;
 use crate::net::Transport;
-use crate::protocol::{decode_activations, encode_activations};
+use crate::protocol::{decode_activations_into, encode_activations_into};
 use crate::worker::{AggClient, Event};
-use std::collections::HashMap;
 use std::time::Duration;
 
 /// Hard cap on waiting for stragglers before declaring the cluster dead.
@@ -33,18 +43,11 @@ pub struct EngineSlice {
     pub d_pad: usize,
 }
 
-/// Per-engine data of one micro-batch: bit-planes for forward, the
-/// dequantized rows (FIFO replay) for backward.
-#[derive(Debug, Clone)]
-pub struct EngineData {
-    pub packed: PackedBatch,
-    pub dq: Vec<f32>,
-}
-
-/// One prepared micro-batch.
+/// One prepared micro-batch: per-engine bit-planes (forward *and*
+/// plane-replay backward) plus labels.
 #[derive(Debug, Clone)]
 pub struct PreparedMicro {
-    pub per_engine: Vec<EngineData>,
+    pub per_engine: Vec<PackedBatch>,
     pub y: Vec<f32>,
 }
 
@@ -93,10 +96,7 @@ impl PreparedShard {
                 for i in 0..mb {
                     scratch.extend_from_slice(&rows[i * width + s.lo..i * width + s.hi]);
                 }
-                per_engine.push(EngineData {
-                    packed: pack_rows(&scratch, mb, ew, s.d_pad, precision),
-                    dq: dequantized_rows(&scratch, mb, ew, s.d_pad, precision),
-                });
+                per_engine.push(pack_rows(&scratch, mb, ew, s.d_pad, precision));
             }
             micro.push(PreparedMicro {
                 per_engine,
@@ -145,6 +145,56 @@ pub struct PipelineStats {
     pub overlapped: u64,
 }
 
+/// Reusable buffers for [`run_minibatch`]. Construct once per worker;
+/// every capacity is established during the first mini-batch, after
+/// which the steady-state loop never allocates.
+#[derive(Debug, Default)]
+pub struct PipelineScratch {
+    /// Engine-summed partial activations (MB wide).
+    pa: Vec<f32>,
+    /// Single engine's forward output (MB wide).
+    pa_e: Vec<f32>,
+    /// Fixed-point wire payload (MB wide).
+    payload: Vec<i32>,
+    /// Decoded full activations (MB wide).
+    fa: Vec<f32>,
+    /// In-flight seq -> micro-batch index (≤ window entries; linear scan
+    /// beats hashing at this size and never rehashes/allocates).
+    pending: Vec<(u16, usize)>,
+}
+
+impl PipelineScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Apply one FA event: decode, loss, plane-replay backward.
+#[allow(clippy::too_many_arguments)]
+fn on_event(
+    ev: Event,
+    prep: &PreparedShard,
+    state: &mut WorkerState,
+    compute: &mut dyn Compute,
+    pending: &mut Vec<(u16, usize)>,
+    fa_buf: &mut Vec<f32>,
+    loss: Loss,
+    lr: f32,
+    loss_sum: &mut f32,
+    done: &mut usize,
+) {
+    let Event::Fa { seq, payload } = ev else { return };
+    let Some(pos) = pending.iter().position(|(s, _)| *s == seq) else { return };
+    let (_, idx) = pending.swap_remove(pos);
+    decode_activations_into(&payload, fa_buf);
+    let m = &prep.micro[idx];
+    *loss_sum += compute.loss_sum(fa_buf, &m.y, loss);
+    for (ed, ge) in m.per_engine.iter().zip(&mut state.g) {
+        compute.backward_acc_planes(ed, fa_buf, &m.y, ge, lr, loss);
+    }
+    *done += 1;
+}
+
 /// Run one mini-batch (micro-batches `[first, first + count)`) through
 /// the FCB pipeline. Returns the summed training loss of the mini-batch.
 #[allow(clippy::too_many_arguments)]
@@ -158,61 +208,49 @@ pub fn run_minibatch<T: Transport>(
     loss: Loss,
     lr: f32,
     stats: &mut PipelineStats,
+    scratch: &mut PipelineScratch,
 ) -> f32 {
     let mb = prep.mb;
+    let PipelineScratch { pa, pa_e, payload, fa, pending } = scratch;
+    pa.resize(mb, 0.0);
+    pa_e.resize(mb, 0.0);
+    // `fa` and `payload` size themselves inside the into-codecs (clear +
+    // extend), so their capacity is warm after the first micro-batch.
+    pending.clear();
+    pending.reserve(count);
     for ge in &mut state.g {
         ge.iter_mut().for_each(|v| *v = 0.0);
     }
-    let mut pending: HashMap<u16, usize> = HashMap::with_capacity(count);
     let mut loss_sum = 0.0f32;
     let mut done = 0usize;
-
-    let handle_event = |ev: Event,
-                            pending: &mut HashMap<u16, usize>,
-                            state: &mut WorkerState,
-                            compute: &mut dyn Compute,
-                            loss_sum: &mut f32,
-                            done: &mut usize| {
-        if let Event::Fa { seq, payload } = ev {
-            if let Some(idx) = pending.remove(&seq) {
-                let fa = decode_activations(&payload);
-                let m = &prep.micro[idx];
-                *loss_sum += compute.loss_sum(&fa, &m.y, loss);
-                for (ed, ge) in m.per_engine.iter().zip(&mut state.g) {
-                    compute.backward_acc(&ed.dq, mb, &fa, &m.y, ge, lr, loss);
-                }
-                *done += 1;
-            }
-        }
-    };
 
     // Stage 1+2 interleaved: forward each micro-batch, ship PA, drain FAs.
     for j in 0..count {
         let idx = first + j;
         let m = &prep.micro[idx];
         // Forward across engines; PA is the engine-sum (paper §4.1.3).
-        let mut pa = vec![0.0f32; mb];
+        pa.fill(0.0);
         for (ed, xe) in m.per_engine.iter().zip(&state.x) {
-            let pa_e = compute.forward(&ed.packed, xe);
-            for (p, pe) in pa.iter_mut().zip(&pa_e) {
-                *p += pe;
+            compute.forward_into(ed, xe, pa_e);
+            for (p, pe) in pa.iter_mut().zip(pa_e.iter()) {
+                *p += *pe;
             }
         }
-        let payload = encode_activations(&pa);
+        encode_activations_into(pa, payload);
         // Claim a slot; pump the network while backpressured.
         let seq = loop {
-            if let Some(seq) = agg.try_send_pa(&payload) {
+            if let Some(seq) = agg.try_send_pa(payload) {
                 break seq;
             }
             if let Some(ev) = agg.poll(Duration::from_micros(200)) {
-                handle_event(ev, &mut pending, state, compute, &mut loss_sum, &mut done);
+                on_event(ev, prep, state, compute, pending, fa, loss, lr, &mut loss_sum, &mut done);
             }
         };
-        pending.insert(seq, idx);
+        pending.push((seq, idx));
         // Opportunistic drain: overlap communication with later forwards.
         while let Some(ev) = agg.poll(Duration::ZERO) {
             let before = done;
-            handle_event(ev, &mut pending, state, compute, &mut loss_sum, &mut done);
+            on_event(ev, prep, state, compute, pending, fa, loss, lr, &mut loss_sum, &mut done);
             if done > before && j + 1 < count {
                 stats.overlapped += 1;
             }
@@ -229,14 +267,14 @@ pub fn run_minibatch<T: Transport>(
                  pending seqs {:?}; in_flight {}; stats {:?}",
                 agg.worker(),
                 count - done,
-                pending.keys().collect::<Vec<_>>(),
+                pending.iter().map(|(s, _)| *s).collect::<Vec<_>>(),
                 agg.in_flight(),
                 agg.stats,
             );
             continue;
         };
         let before = done;
-        handle_event(ev, &mut pending, state, compute, &mut loss_sum, &mut done);
+        on_event(ev, prep, state, compute, pending, fa, loss, lr, &mut loss_sum, &mut done);
         if done > before {
             stats.drained += 1;
         }
@@ -304,7 +342,7 @@ mod tests {
                 let m = &prep1.micro[idx];
                 let mut pa = vec![0.0f32; 8];
                 for (ed, xe) in m.per_engine.iter().zip(&s1.x) {
-                    for (p, v) in pa.iter_mut().zip(c.forward(&ed.packed, xe)) {
+                    for (p, v) in pa.iter_mut().zip(c.forward(ed, xe)) {
                         *p += v;
                     }
                 }
@@ -314,7 +352,7 @@ mod tests {
                 let m = &prep4.micro[idx];
                 let mut pa = vec![0.0f32; 8];
                 for (ed, xe) in m.per_engine.iter().zip(&s4.x) {
-                    for (p, v) in pa.iter_mut().zip(c.forward(&ed.packed, xe)) {
+                    for (p, v) in pa.iter_mut().zip(c.forward(ed, xe)) {
                         *p += v;
                     }
                 }

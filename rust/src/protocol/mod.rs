@@ -9,8 +9,15 @@
 //! Activations travel as **i32 fixed-point** because the Tofino data
 //! plane has integer ALUs only; [`FIXED_SHIFT`] gives 16 fractional bits,
 //! plenty for activations that are O(1)–O(100) in our GLMs.
+//!
+//! Payloads are reference-counted (`Arc<[i32]>`): a `Packet::clone` is a
+//! header copy plus a refcount bump, so SimNet fan-out, the switch's FA
+//! multicast, and `AggClient` retransmission copies all share one buffer
+//! instead of deep-cloning the activation vector per hop (§Perf L1 —
+//! the wire hot path moves no payload bytes it doesn't have to).
 
 use anyhow::{bail, Result};
+use std::sync::Arc;
 
 /// Fixed-point fractional bits for activation payloads.
 pub const FIXED_SHIFT: u32 = 16;
@@ -34,8 +41,16 @@ pub fn from_fixed(v: i32) -> f32 {
     v as f32 / (1i64 << FIXED_SHIFT) as f32
 }
 
+/// The shared zero-length payload (ACK rounds). One allocation for the
+/// process lifetime, so building an ACK packet never touches the heap.
+pub fn empty_payload() -> Arc<[i32]> {
+    static EMPTY: std::sync::OnceLock<Arc<[i32]>> = std::sync::OnceLock::new();
+    EMPTY.get_or_init(|| Vec::new().into()).clone()
+}
+
 /// A protocol packet (paper Fig. 4). One packet per micro-batch per
-/// round; the switch rewrites `payload` in place when broadcasting FA.
+/// round; the switch swaps in a fresh payload when broadcasting FA (the
+/// PA buffer may still be shared with the sender).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Packet {
     /// Aggregation round (true) or acknowledgement round (false).
@@ -48,19 +63,20 @@ pub struct Packet {
     /// Source-worker bitmap (bit m = worker m). Max 32 workers.
     pub bm: u32,
     /// MB fixed-point activations (PA upstream, FA downstream); empty on
-    /// the ack round.
-    pub payload: Vec<i32>,
+    /// the ack round. Shared — never mutate through this without
+    /// exclusive ownership (`Arc::get_mut`).
+    pub payload: Arc<[i32]>,
 }
 
 impl Packet {
     /// A worker's partial-activation packet (Alg. 3 lines 4-5).
-    pub fn pa(seq: u16, worker: usize, payload: Vec<i32>) -> Self {
-        Packet { is_agg: true, acked: false, seq, bm: 1 << worker, payload }
+    pub fn pa(seq: u16, worker: usize, payload: impl Into<Arc<[i32]>>) -> Self {
+        Packet { is_agg: true, acked: false, seq, bm: 1 << worker, payload: payload.into() }
     }
 
     /// A worker's acknowledgement packet (Alg. 3 lines 22-23).
     pub fn ack(seq: u16, worker: usize) -> Self {
-        Packet { is_agg: false, acked: false, seq, bm: 1 << worker, payload: Vec::new() }
+        Packet { is_agg: false, acked: false, seq, bm: 1 << worker, payload: empty_payload() }
     }
 
     /// Wire encoding:
@@ -75,7 +91,7 @@ impl Packet {
         buf.extend_from_slice(&self.seq.to_le_bytes());
         buf.extend_from_slice(&self.bm.to_le_bytes());
         buf.extend_from_slice(&(self.payload.len() as u16).to_le_bytes());
-        for v in &self.payload {
+        for v in self.payload.iter() {
             buf.extend_from_slice(&v.to_le_bytes());
         }
     }
@@ -96,11 +112,12 @@ impl Packet {
         if buf.len() != HEADER_BYTES + 4 * len {
             bail!("length mismatch: header says {len} words, frame has {} bytes", buf.len());
         }
-        let mut payload = Vec::with_capacity(len);
-        for k in 0..len {
-            let o = HEADER_BYTES + 4 * k;
-            payload.push(i32::from_le_bytes([buf[o], buf[o + 1], buf[o + 2], buf[o + 3]]));
-        }
+        let payload: Arc<[i32]> = (0..len)
+            .map(|k| {
+                let o = HEADER_BYTES + 4 * k;
+                i32::from_le_bytes([buf[o], buf[o + 1], buf[o + 2], buf[o + 3]])
+            })
+            .collect();
         Ok(Packet { is_agg: flags & 1 != 0, acked: flags & 2 != 0, seq, bm, payload })
     }
 
@@ -110,12 +127,25 @@ impl Packet {
     }
 }
 
-/// Convert an f32 activation slice to the fixed-point wire form.
+/// Convert an f32 activation slice to the fixed-point wire form,
+/// reusing `out`'s capacity (the pipeline's zero-allocation path).
+pub fn encode_activations_into(pa: &[f32], out: &mut Vec<i32>) {
+    out.clear();
+    out.extend(pa.iter().map(|&v| to_fixed(v)));
+}
+
+/// Convert a fixed-point payload back to f32, reusing `out`'s capacity.
+pub fn decode_activations_into(payload: &[i32], out: &mut Vec<f32>) {
+    out.clear();
+    out.extend(payload.iter().map(|&v| from_fixed(v)));
+}
+
+/// Allocating convenience form of [`encode_activations_into`].
 pub fn encode_activations(pa: &[f32]) -> Vec<i32> {
     pa.iter().map(|&v| to_fixed(v)).collect()
 }
 
-/// Convert a fixed-point payload back to f32.
+/// Allocating convenience form of [`decode_activations_into`].
 pub fn decode_activations(payload: &[i32]) -> Vec<f32> {
     payload.iter().map(|&v| from_fixed(v)).collect()
 }
@@ -168,6 +198,13 @@ mod tests {
     }
 
     #[test]
+    fn clones_share_one_payload_buffer() {
+        let pkt = Packet::pa(1, 0, vec![1, 2, 3]);
+        let dup = pkt.clone();
+        assert!(Arc::ptr_eq(&pkt.payload, &dup.payload), "clone must not deep-copy");
+    }
+
+    #[test]
     fn decode_rejects_garbage() {
         assert!(Packet::decode(&[]).is_err());
         assert!(Packet::decode(&[0u8; 12]).is_err()); // bad magic
@@ -185,6 +222,19 @@ mod tests {
         pkt.encode(&mut buf);
         let back = Packet::decode(&buf).unwrap();
         assert!(back.is_agg && back.acked);
+    }
+
+    #[test]
+    fn into_codec_reuses_capacity() {
+        let mut wire = Vec::new();
+        let mut back = Vec::new();
+        encode_activations_into(&[1.5, -2.25], &mut wire);
+        assert_eq!(wire, encode_activations(&[1.5, -2.25]));
+        let cap = wire.capacity();
+        encode_activations_into(&[0.5, 0.75], &mut wire);
+        assert_eq!(wire.capacity(), cap);
+        decode_activations_into(&wire, &mut back);
+        assert_eq!(back, vec![0.5, 0.75]);
     }
 
     #[test]

@@ -1,0 +1,129 @@
+//! Stub runtime for builds without the `pjrt` feature (the default in
+//! the offline image, which lacks the `xla` crate).
+//!
+//! Mirrors the real [`super::pjrt`] API exactly so callers compile
+//! unchanged; `load`/`load_default` return an error, and because that is
+//! the only way to obtain a `Runtime`/`PjrtCompute`, every other method
+//! is statically unreachable (the `Infallible` field cannot be
+//! constructed).
+
+use super::artifacts::Manifest;
+use crate::data::quantize::PackedBatch;
+use crate::engine::Compute;
+use crate::glm::Loss;
+use anyhow::{bail, Result};
+use std::convert::Infallible;
+use std::path::Path;
+
+/// Unconstructable placeholder for the PJRT runtime.
+pub struct Runtime {
+    never: Infallible,
+}
+
+impl Runtime {
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        bail!(
+            "PJRT runtime unavailable: built without the `pjrt` feature \
+             (artifacts dir {dir:?}); see Cargo.toml to enable it"
+        )
+    }
+
+    pub fn load_default() -> Result<Runtime> {
+        Self::load(&super::default_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        match self.never {}
+    }
+
+    pub fn fwd(&mut self, _planes: &[u32], _p: usize, _mb: usize, _w_in: usize, _x: &[f32]) -> Result<Vec<f32>> {
+        match self.never {}
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn bwd(
+        &mut self,
+        _loss: Loss,
+        _a_dq: &[f32],
+        _mb: usize,
+        _d_in: usize,
+        _fa: &[f32],
+        _y: &[f32],
+        _g: &[f32],
+        _lr: f32,
+    ) -> Result<Vec<f32>> {
+        match self.never {}
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn step(
+        &mut self,
+        _loss: Loss,
+        _planes: &PackedBatch,
+        _a_dq: &[f32],
+        _x: &[f32],
+        _y: &[f32],
+        _lr: f32,
+        _inv_b: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        match self.never {}
+    }
+
+    pub fn loss_sum(&mut self, _loss: Loss, _fa: &[f32], _y: &[f32]) -> Result<f32> {
+        match self.never {}
+    }
+}
+
+/// One-line runtime status for the CLI `info` subcommand.
+pub fn pjrt_banner() -> String {
+    "pjrt: unavailable (built without the `pjrt` feature)".to_string()
+}
+
+/// Unconstructable placeholder for the PJRT [`Compute`] backend.
+pub struct PjrtCompute {
+    never: Infallible,
+}
+
+impl PjrtCompute {
+    pub fn new(rt: Runtime) -> Self {
+        match rt.never {}
+    }
+
+    pub fn load_default() -> Result<Self> {
+        Runtime::load_default().map(Self::new)
+    }
+
+    pub fn runtime_mut(&mut self) -> &mut Runtime {
+        match self.never {}
+    }
+}
+
+impl Compute for PjrtCompute {
+    fn forward_into(&mut self, _planes: &PackedBatch, _x: &[f32], _out: &mut [f32]) {
+        match self.never {}
+    }
+
+    fn backward_acc_planes(
+        &mut self,
+        _planes: &PackedBatch,
+        _fa: &[f32],
+        _y: &[f32],
+        _g: &mut [f32],
+        _lr: f32,
+        _loss: Loss,
+    ) {
+        match self.never {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_load_reports_missing_feature() {
+        let err = Runtime::load_default().err().expect("stub must not load");
+        assert!(err.to_string().contains("pjrt"), "{err}");
+        assert!(PjrtCompute::load_default().is_err());
+    }
+}

@@ -18,6 +18,7 @@
 use super::{Action, AggServer};
 use crate::net::NodeId;
 use crate::protocol::Packet;
+use std::sync::Arc;
 
 #[derive(Debug, Clone, Default)]
 struct Round {
@@ -79,9 +80,10 @@ impl AggServer for HostPs {
         }
 
         if round.done {
-            // Retransmission after completion: unicast the kept result.
+            // Retransmission after completion: unicast the kept result
+            // (fresh shared buffer; the request's buffer stays intact).
             let mut out = pkt.clone();
-            out.payload.copy_from_slice(&round.agg);
+            out.payload = Arc::from(round.agg.as_slice());
             out.acked = true;
             return vec![Action::Unicast(src, out)];
         }
@@ -89,7 +91,7 @@ impl AggServer for HostPs {
         if round.bm & pkt.bm == 0 {
             round.count += 1;
             round.bm |= pkt.bm;
-            for (a, &p) in round.agg.iter_mut().zip(&pkt.payload) {
+            for (a, &p) in round.agg.iter_mut().zip(pkt.payload.iter()) {
                 *a = a.wrapping_add(p);
             }
             if round.count == w {
@@ -106,7 +108,8 @@ impl AggServer for HostPs {
 
                 let round = &self.rounds[parity][slot];
                 let mut out = pkt.clone();
-                out.payload.copy_from_slice(&round.agg);
+                // One shared result buffer across all M unicasts.
+                out.payload = Arc::from(round.agg.as_slice());
                 out.acked = true;
                 // Software PS unicasts to each worker (no replication
                 // engine); the transport cost model charges per send.
@@ -140,7 +143,7 @@ mod tests {
             match act {
                 Action::Unicast(dst, out) => {
                     assert_eq!(*dst, i);
-                    assert_eq!(out.payload, vec![6, 6]);
+                    assert_eq!(out.payload[..], [6, 6]);
                 }
                 other => panic!("{other:?}"),
             }
@@ -158,7 +161,7 @@ mod tests {
         match &acts[0] {
             Action::Unicast(dst, out) => {
                 assert_eq!(*dst, 1);
-                assert_eq!(out.payload, vec![9]);
+                assert_eq!(out.payload[..], [9]);
             }
             other => panic!("{other:?}"),
         }
@@ -173,7 +176,7 @@ mod tests {
         ps.handle(0, &pa(0, 1, 0, &[10]));
         let acts = ps.handle(1, &pa(0, 1, 1, &[20]));
         match &acts[0] {
-            Action::Unicast(_, out) => assert_eq!(out.payload, vec![30]),
+            Action::Unicast(_, out) => assert_eq!(out.payload[..], [30]),
             other => panic!("{other:?}"),
         }
         assert_eq!(ps.completed_ops, 2);
@@ -181,7 +184,7 @@ mod tests {
         ps.handle(0, &pa(0, 0, 0, &[100]));
         let acts = ps.handle(1, &pa(0, 0, 1, &[200]));
         match &acts[0] {
-            Action::Unicast(_, out) => assert_eq!(out.payload, vec![300]),
+            Action::Unicast(_, out) => assert_eq!(out.payload[..], [300]),
             other => panic!("{other:?}"),
         }
     }
@@ -197,7 +200,7 @@ mod tests {
         let acts = ps.handle(1, &pa(0, 0, 1, &[2]));
         assert_eq!(acts.len(), 1, "must be answered from retained parity-0 result");
         match &acts[0] {
-            Action::Unicast(_, out) => assert_eq!(out.payload, vec![3]),
+            Action::Unicast(_, out) => assert_eq!(out.payload[..], [3]),
             other => panic!("{other:?}"),
         }
     }

@@ -4,18 +4,28 @@
 //! aggregation slot:
 //!
 //! * `agg`        — the single aggregation copy (no shadow copy)
-//! * `agg_count`, `agg_bm` — how many / which workers contributed
-//! * `ack_count`, `ack_bm` — how many / which workers acknowledged FA
+//! * `agg_bm`, `ack_bm` — which workers contributed / acknowledged FA
+//! * `agg_count`, `ack_count` — derived tallies (diagnostics only)
 //!
-//! Both bitmaps exist to dedup worker retransmissions; the ACK round is
-//! what lets the switch clear a slot *knowing* every worker holds FA,
-//! which is the latency-centric alternative to SwitchML's shadow copy
-//! (paper §3.3). Aggregation is wrapping i32 addition — exactly what the
-//! Tofino ALUs do.
+//! The **bitmaps are the authoritative dedup and completion state**: a
+//! round is complete exactly when its bitmap equals the all-workers
+//! mask, which cannot be confused by any duplicate (a dup never sets a
+//! new bit). The counts are kept purely for observability (`registers`)
+//! and never gate a transition. The ACK round is what lets the switch
+//! clear a slot *knowing* every worker holds FA, which is the
+//! latency-centric alternative to SwitchML's shadow copy (paper §3.3).
+//! Aggregation is wrapping i32 addition — exactly what the Tofino ALUs
+//! do.
+//!
+//! The FA multicast allocates one fresh payload buffer per completion
+//! and shares it (`Arc`) across all `M` worker sends — the PA packet's
+//! buffer may still be referenced by its sender, so it is never written
+//! through.
 
 use super::{Action, AggServer};
 use crate::net::NodeId;
 use crate::protocol::Packet;
+use std::sync::Arc;
 
 /// Per-slot register state.
 #[derive(Debug, Clone, Default)]
@@ -61,8 +71,7 @@ impl P4Switch {
         }
     }
 
-    /// All-workers bitmap.
-    #[allow(dead_code)]
+    /// All-workers bitmap — the completion condition for both rounds.
     fn full_bm(&self) -> u32 {
         if self.workers == 32 {
             u32::MAX
@@ -85,7 +94,7 @@ impl P4Switch {
 
 impl AggServer for P4Switch {
     fn handle(&mut self, _src: NodeId, pkt: &Packet) -> Vec<Action> {
-        let w = self.workers as u32;
+        let full = self.full_bm();
         let seq = pkt.seq as usize;
         assert!(seq < self.slots.len(), "seq {seq} out of range");
         let slot = &mut self.slots[seq];
@@ -95,12 +104,12 @@ impl AggServer for P4Switch {
             debug_assert_eq!(pkt.payload.len(), self.payload_len, "payload length");
             // Alg. 2 lines 3-11: first contribution from this worker?
             if slot.agg_bm & pkt.bm == 0 {
-                slot.agg_count += 1;
+                slot.agg_count += 1; // derived, diagnostics only
                 slot.agg_bm |= pkt.bm;
-                for (a, &p) in slot.agg.iter_mut().zip(&pkt.payload) {
+                for (a, &p) in slot.agg.iter_mut().zip(pkt.payload.iter()) {
                     *a = a.wrapping_add(p);
                 }
-                if slot.agg_count == w {
+                if slot.agg_bm == full {
                     // Aggregation complete: open the ACK round.
                     slot.ack_count = 0;
                     slot.ack_bm = 0;
@@ -110,9 +119,9 @@ impl AggServer for P4Switch {
             }
             // Alg. 2 lines 12-15: complete (incl. on retransmissions) =>
             // multicast FA to every worker.
-            if slot.agg_count == w {
+            if slot.agg_bm == full {
                 let mut out = pkt.clone();
-                out.payload.copy_from_slice(&slot.agg);
+                out.payload = Arc::from(slot.agg.as_slice());
                 out.acked = true;
                 self.stats.fa_multicasts += 1;
                 return vec![Action::Multicast(out)];
@@ -122,9 +131,9 @@ impl AggServer for P4Switch {
             self.stats.ack_packets += 1;
             // Alg. 2 lines 18-26.
             if slot.ack_bm & pkt.bm == 0 {
-                slot.ack_count += 1;
+                slot.ack_count += 1; // derived, diagnostics only
                 slot.ack_bm |= pkt.bm;
-                if slot.ack_count == w {
+                if slot.ack_bm == full {
                     // Every worker holds FA: the single copy can go.
                     slot.agg_count = 0;
                     slot.agg_bm = 0;
@@ -134,7 +143,7 @@ impl AggServer for P4Switch {
                 self.stats.dup_ack += 1;
             }
             // Alg. 2 lines 27-29: confirm to all workers.
-            if slot.ack_count == w {
+            if slot.ack_bm == full {
                 let mut out = pkt.clone();
                 out.acked = true;
                 self.stats.confirm_multicasts += 1;
@@ -170,7 +179,7 @@ mod tests {
         assert_eq!(acts.len(), 1);
         match &acts[0] {
             Action::Multicast(out) => {
-                assert_eq!(out.payload, vec![6, 60]);
+                assert_eq!(out.payload[..], [6, 60]);
                 assert!(out.is_agg && out.acked);
             }
             other => panic!("expected multicast, got {other:?}"),
@@ -182,11 +191,11 @@ mod tests {
         let mut sw = P4Switch::new(2, 2, 1);
         drive(&mut sw, pa(0, 0, &[5]));
         drive(&mut sw, pa(0, 0, &[5])); // retransmission
-        assert_eq!(sw.registers(0).0, 1, "agg_count");
+        assert_eq!(sw.registers(0).1, 0b01, "agg_bm");
         assert_eq!(sw.stats.dup_agg, 1);
         let acts = drive(&mut sw, pa(0, 1, &[7]));
         match &acts[0] {
-            Action::Multicast(out) => assert_eq!(out.payload, vec![12]),
+            Action::Multicast(out) => assert_eq!(out.payload[..], [12]),
             other => panic!("{other:?}"),
         }
     }
@@ -201,10 +210,27 @@ mod tests {
         let acts = drive(&mut sw, pa(0, 1, &[7]));
         assert_eq!(acts.len(), 1);
         match &acts[0] {
-            Action::Multicast(out) => assert_eq!(out.payload, vec![12]),
+            Action::Multicast(out) => assert_eq!(out.payload[..], [12]),
             other => panic!("{other:?}"),
         }
         assert_eq!(sw.stats.fa_multicasts, 2);
+    }
+
+    #[test]
+    fn fa_multicast_does_not_write_through_the_pa_buffer() {
+        // The PA payload buffer is shared with the sender; the FA must be
+        // a fresh buffer, not an in-place rewrite.
+        let mut sw = P4Switch::new(2, 2, 1);
+        let first = pa(0, 0, &[5]);
+        drive(&mut sw, first.clone());
+        let acts = sw.handle(0, &pa(0, 1, &[7]));
+        match &acts[0] {
+            Action::Multicast(out) => {
+                assert_eq!(out.payload[..], [12]);
+                assert_eq!(first.payload[..], [5], "sender's buffer untouched");
+            }
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]
@@ -228,7 +254,7 @@ mod tests {
         drive(&mut sw, pa(0, 0, &[100]));
         let acts = drive(&mut sw, pa(0, 1, &[200]));
         match &acts[0] {
-            Action::Multicast(out) => assert_eq!(out.payload, vec![300]),
+            Action::Multicast(out) => assert_eq!(out.payload[..], [300]),
             other => panic!("{other:?}"),
         }
     }
@@ -241,14 +267,14 @@ mod tests {
         }
         drive(&mut sw, Packet::ack(0, 0));
         drive(&mut sw, Packet::ack(0, 0));
-        assert_eq!(sw.registers(0).2, 1, "ack_count");
+        assert_eq!(sw.registers(0).3, 0b001, "ack_bm");
         assert_eq!(sw.stats.dup_ack, 1);
     }
 
     #[test]
     fn late_ack_retransmission_is_reconfirmed() {
         // After the slot cleared, a worker that missed the confirm
-        // retransmits its ACK; ack_count is still W, so the switch
+        // retransmits its ACK; ack_bm is still full, so the switch
         // re-multicasts the confirm (liveness).
         let mut sw = P4Switch::new(2, 2, 1);
         drive(&mut sw, pa(0, 0, &[5]));
@@ -283,7 +309,7 @@ mod tests {
         drive(&mut sw, pa(1, 0, &[10]));
         assert!(drive(&mut sw, pa(1, 1, &[20])).len() == 1);
         // slot 0 still waiting
-        assert_eq!(sw.registers(0).0, 1);
+        assert_eq!(sw.registers(0).1, 0b01);
     }
 
     #[test]
@@ -292,7 +318,7 @@ mod tests {
         drive(&mut sw, pa(0, 0, &[i32::MAX]));
         let acts = drive(&mut sw, pa(0, 1, &[1]));
         match &acts[0] {
-            Action::Multicast(out) => assert_eq!(out.payload, vec![i32::MIN]),
+            Action::Multicast(out) => assert_eq!(out.payload[..], [i32::MIN]),
             other => panic!("{other:?}"),
         }
     }
@@ -305,7 +331,7 @@ mod tests {
         }
         let acts = drive(&mut sw, pa(0, 31, &[1]));
         match &acts[0] {
-            Action::Multicast(out) => assert_eq!(out.payload, vec![32]),
+            Action::Multicast(out) => assert_eq!(out.payload[..], [32]),
             other => panic!("{other:?}"),
         }
     }

@@ -96,7 +96,7 @@ mod tests {
         for ep in eps.iter_mut() {
             let (_, pkt) = ep.recv_timeout(Duration::from_secs(2)).expect("FA");
             assert!(pkt.is_agg && pkt.acked);
-            assert_eq!(pkt.payload, vec![3, 30]);
+            assert_eq!(pkt.payload[..], [3, 30]);
         }
     }
 

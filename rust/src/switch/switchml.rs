@@ -104,7 +104,7 @@ impl AggServer for SwitchMlSwitch {
         if entry.bm & pkt.bm == 0 {
             entry.count += 1;
             entry.bm |= pkt.bm;
-            for (a, &p) in entry.agg.iter_mut().zip(&pkt.payload) {
+            for (a, &p) in entry.agg.iter_mut().zip(pkt.payload.iter()) {
                 *a = a.wrapping_add(p);
             }
             if entry.count == w {
@@ -114,9 +114,11 @@ impl AggServer for SwitchMlSwitch {
             self.stats.dup += 1;
         }
         if entry.done {
-            // Broadcast (or re-broadcast to answer a retransmission).
+            // Broadcast (or re-broadcast to answer a retransmission):
+            // one shared result buffer for the whole fan-out.
+            let take = self.payload_len.max(pkt.payload.len());
             let mut out = pkt.clone();
-            out.payload = entry.agg[..self.payload_len.max(pkt.payload.len())].to_vec();
+            out.payload = std::sync::Arc::from(&entry.agg[..take]);
             out.acked = true;
             self.stats.broadcasts += 1;
             return vec![Action::Multicast(out)];

@@ -14,9 +14,18 @@
 //! the switch clear an aggregation some worker never received — a real
 //! protocol hazard; `end_to_end.rs::hostile_network_does_not_change_numerics`
 //! would catch it.
+//!
+//! **Payload pooling (§Perf L1):** PA payloads are `Arc<[i32]>` buffers
+//! drawn from a small per-client free list. When an operation's FA
+//! arrives, the PA buffer returns to the pool; the next `try_send_pa`
+//! reuses it if no other holder (a late fabric duplicate, say) still
+//! references it — checked via `Arc::get_mut`. In steady state the
+//! client therefore sends without allocating, and retransmissions clone
+//! refcounts, not vectors.
 
 use crate::net::{NodeId, Transport};
 use crate::protocol::Packet;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Switch-side slot count (paper §4.2: 16-bit indices).
@@ -53,8 +62,9 @@ pub struct AggStats {
 /// Events surfaced to the training pipeline.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Event {
-    /// Full activations for the given round (fixed-point payload).
-    Fa { seq: u16, payload: Vec<i32> },
+    /// Full activations for the given round (fixed-point payload, shared
+    /// with the wire packet — no copy).
+    Fa { seq: u16, payload: Arc<[i32]> },
     /// The switch confirmed all ACKs; the operation fully retired.
     SlotFreed { seq: u16 },
 }
@@ -68,6 +78,8 @@ pub struct AggClient<T: Transport> {
     inflight: Vec<(u16, Phase)>,
     /// Max outstanding operations.
     window: usize,
+    /// Retired PA payload buffers awaiting reuse (<= window).
+    pool: Vec<Arc<[i32]>>,
     /// Next round's sequence number (wraps through the 64K space).
     next_seq: u16,
     timeout: Duration,
@@ -84,6 +96,7 @@ impl<T: Transport> AggClient<T> {
             worker,
             inflight: Vec::with_capacity(window),
             window,
+            pool: Vec::with_capacity(window),
             next_seq: 0,
             timeout,
             stats: AggStats::default(),
@@ -104,6 +117,35 @@ impl<T: Transport> AggClient<T> {
         self.inflight.iter().position(|(s, _)| *s == seq)
     }
 
+    /// Fetch a payload buffer holding `payload`'s contents: a pooled
+    /// buffer when one of the right length is exclusively ours again,
+    /// else a fresh allocation (warm-up / a duplicate still in flight).
+    fn pooled_payload(&mut self, payload: &[i32]) -> Arc<[i32]> {
+        let mut found = None;
+        for (i, buf) in self.pool.iter_mut().enumerate() {
+            if buf.len() != payload.len() {
+                continue;
+            }
+            if let Some(dst) = Arc::get_mut(buf) {
+                dst.copy_from_slice(payload);
+                found = Some(i);
+                break;
+            }
+            // else: still shared by a lagging holder — leave it pooled
+        }
+        match found {
+            Some(i) => self.pool.swap_remove(i),
+            None => Arc::from(payload),
+        }
+    }
+
+    /// Return a PA buffer to the pool once its operation saw FA.
+    fn recycle(&mut self, buf: Arc<[i32]>) {
+        if !buf.is_empty() && self.pool.len() < self.window {
+            self.pool.push(buf);
+        }
+    }
+
     /// Alg. 3 `send pa_pkt`: claim the next round and send. Returns the
     /// seq, or `None` when the window is full (backpressure: the
     /// pipeline must pump before issuing more).
@@ -113,7 +155,7 @@ impl<T: Transport> AggClient<T> {
         }
         let seq = self.next_seq;
         self.next_seq = self.next_seq.wrapping_add(1);
-        let pkt = Packet::pa(seq, self.worker, payload.to_vec());
+        let pkt = Packet::pa(seq, self.worker, self.pooled_payload(payload));
         self.transport.send(self.server, &pkt);
         self.stats.pa_sent += 1;
         self.inflight
@@ -159,7 +201,8 @@ impl<T: Transport> AggClient<T> {
     }
 
     /// Blocking AllReduce convenience (non-pipelined callers):
-    /// sends PA, pumps until the FA for that round arrives.
+    /// sends PA, pumps until the FA for that round arrives. Copies the
+    /// result out — the pipeline's zero-copy path is `poll`.
     pub fn allreduce(&mut self, payload: &[i32]) -> Vec<i32> {
         let seq = loop {
             if let Some(seq) = self.try_send_pa(payload) {
@@ -170,7 +213,7 @@ impl<T: Transport> AggClient<T> {
         };
         loop {
             match self.poll(Duration::from_millis(100)) {
-                Some(Event::Fa { seq: s, payload }) if s == seq => return payload,
+                Some(Event::Fa { seq: s, payload }) if s == seq => return payload.to_vec(),
                 Some(_) => continue,
                 None => continue,
             }
@@ -227,11 +270,17 @@ impl<T: Transport> AggClient<T> {
                     self.transport.send(self.server, &ack);
                     self.stats.acks_sent += 1;
                     self.stats.fa_received += 1;
-                    self.inflight[idx].1 = Phase::AwaitConfirm {
-                        pkt: ack,
-                        deadline: Instant::now() + self.timeout,
-                        attempt: 0,
-                    };
+                    let prev = std::mem::replace(
+                        &mut self.inflight[idx].1,
+                        Phase::AwaitConfirm {
+                            pkt: ack,
+                            deadline: Instant::now() + self.timeout,
+                            attempt: 0,
+                        },
+                    );
+                    if let Phase::AwaitFa { pkt: pa_pkt, .. } = prev {
+                        self.recycle(pa_pkt.payload);
+                    }
                     Some(Event::Fa { seq: pkt.seq, payload: pkt.payload })
                 }
                 Phase::AwaitConfirm { .. } => {
@@ -417,11 +466,11 @@ mod tests {
         let mut fake_switch = eps.pop().unwrap();
         let mut c = AggClient::new(eps.pop().unwrap(), 1, 0, 4, Duration::from_secs(10));
         // unsolicited FA for a round never issued
-        fake_switch.send(0, &Packet { is_agg: true, acked: true, seq: 2, bm: 0, payload: vec![9] });
+        fake_switch.send(0, &Packet { is_agg: true, acked: true, seq: 2, bm: 0, payload: vec![9].into() });
         // confirm for a round never issued
-        fake_switch.send(0, &Packet { is_agg: false, acked: true, seq: 3, bm: 0, payload: vec![] });
+        fake_switch.send(0, &Packet { is_agg: false, acked: true, seq: 3, bm: 0, payload: Vec::new().into() });
         // far-future seq
-        fake_switch.send(0, &Packet { is_agg: true, acked: true, seq: 999, bm: 0, payload: vec![] });
+        fake_switch.send(0, &Packet { is_agg: true, acked: true, seq: 999, bm: 0, payload: Vec::new().into() });
         for _ in 0..3 {
             assert!(c.poll(Duration::from_millis(20)).is_none());
         }
@@ -445,5 +494,22 @@ mod tests {
                 done += 1;
             }
         }
+    }
+
+    #[test]
+    fn payload_pool_recycles_buffers_in_steady_state() {
+        let net = NetConfig { latency_ns: 0, jitter_ns: 0, ..NetConfig::default() };
+        let (mut clients, _h) = cluster(1, 2, 4, &net);
+        let mut c = clients.pop().unwrap();
+        for round in 0..8 {
+            let fa = c.allreduce(&[round, round, round, round]);
+            assert_eq!(fa, vec![round; 4]);
+            // pump until the confirm retires the slot and recycles
+            while c.in_flight() > 0 {
+                c.poll(Duration::from_millis(20));
+            }
+        }
+        assert!(!c.pool.is_empty(), "retired PA buffers must return to the pool");
+        assert!(c.pool.len() <= 2, "pool bounded by the window");
     }
 }

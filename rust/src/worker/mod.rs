@@ -12,6 +12,10 @@
 //! FCB pipeline interleaves compute and network pumping on the worker's
 //! own thread, mirroring the paper's hardware where the communication
 //! stage is its own pipeline stage, not an OS abstraction.
+//!
+//! Payload buffers are pooled `Arc<[i32]>`s (see [`agg_client`]), so
+//! steady-state sends, retransmissions, and FA delivery move refcounts
+//! rather than copies — part of the pipeline's zero-allocation contract.
 
 pub mod agg_client;
 

@@ -1,0 +1,193 @@
+//! The zero-allocation contract of the training hot path, enforced with
+//! a counting global allocator: after one warm-up mini-batch (which
+//! establishes every buffer capacity, the `AggClient` payload pool, and
+//! the shared empty-payload Arc), `pipeline::run_minibatch` must perform
+//! **zero heap allocations** on its thread.
+//!
+//! The transport here is a same-thread loopback implementing the switch
+//! side of Algorithms 2/3 for a single worker (FA == PA; ACK is answered
+//! with the confirm) over a pre-sized ring — i.e. a transport that is
+//! itself allocation-free, so the assertion isolates the pipeline +
+//! client + compute path. The allocation counter is thread-local: the
+//! threaded `SimNet` fabric and switch are exercised elsewhere
+//! (`end_to_end.rs`); their channel internals are not part of this
+//! contract.
+
+use p4sgd::data::partition::shard_vertical;
+use p4sgd::data::quantize::LANE;
+use p4sgd::data::synth;
+use p4sgd::engine::NativeCompute;
+use p4sgd::glm::Loss;
+use p4sgd::net::{NodeId, Transport};
+use p4sgd::pipeline::{run_minibatch, PipelineScratch, PipelineStats, PreparedShard, WorkerState};
+use p4sgd::protocol::Packet;
+use p4sgd::worker::AggClient;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::time::Duration;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// System allocator wrapper counting allocations per thread. Only
+/// allocation-side events count (frees of warm-up garbage are fine);
+/// `realloc` counts because growth is an allocation in disguise.
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn allocs_on_this_thread() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+/// Single-worker switch loopback: every PA is answered with the FA
+/// (sum over one worker = identity), every ACK with the confirm. The
+/// queue is pre-sized; steady state pushes within capacity.
+struct Loopback {
+    queue: VecDeque<(NodeId, Packet)>,
+}
+
+impl Loopback {
+    fn new() -> Self {
+        Self { queue: VecDeque::with_capacity(64) }
+    }
+}
+
+impl Transport for Loopback {
+    fn send(&mut self, _dst: NodeId, pkt: &Packet) {
+        let mut echo = pkt.clone(); // header copy + payload refcount bump
+        echo.acked = true;
+        self.queue.push_back((1, echo));
+    }
+
+    fn recv_timeout(&mut self, _timeout: Duration) -> Option<(NodeId, Packet)> {
+        self.queue.pop_front()
+    }
+
+    fn node(&self) -> NodeId {
+        0
+    }
+}
+
+#[test]
+fn run_minibatch_steady_state_is_allocation_free() {
+    let ds = synth::separable(128, 96, Loss::LogReg, 0.0, 7);
+    let shard = shard_vertical(&ds, 1, 0, LANE);
+    let prep = PreparedShard::prepare(&shard, 2, 8, 4);
+    let mut state = WorkerState::zeros(&prep);
+    let mut compute = NativeCompute;
+    let mut agg = AggClient::new(Loopback::new(), 1, 0, 8, Duration::from_secs(5));
+    let mut stats = PipelineStats::default();
+    let mut scratch = PipelineScratch::new();
+    let per_batch = 4; // 32-sample mini-batch of MB=8 micro-batches
+    let batches = prep.micro_batches() / per_batch;
+    assert!(batches >= 3, "need warm-up and measured batches");
+
+    // Warm-up: two mini-batches fill every capacity (scratch, client
+    // pool, loopback ring, the process-wide empty-payload Arc).
+    let mut loss_warm = 0.0;
+    for b in 0..2 {
+        loss_warm += run_minibatch(
+            &prep,
+            &mut state,
+            &mut compute,
+            &mut agg,
+            b * per_batch,
+            per_batch,
+            Loss::LogReg,
+            0.5,
+            &mut stats,
+            &mut scratch,
+        );
+    }
+    assert!(loss_warm.is_finite());
+
+    // Steady state: not a single heap allocation on this thread.
+    let before = allocs_on_this_thread();
+    let loss = run_minibatch(
+        &prep,
+        &mut state,
+        &mut compute,
+        &mut agg,
+        2 * per_batch,
+        per_batch,
+        Loss::LogReg,
+        0.5,
+        &mut stats,
+        &mut scratch,
+    );
+    let after = allocs_on_this_thread();
+    assert!(loss.is_finite());
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state run_minibatch allocated {} time(s)",
+        after - before
+    );
+}
+
+#[test]
+fn steady_state_training_still_learns() {
+    // The zero-alloc loop must still be a correct trainer: loss falls.
+    let ds = synth::separable(256, 64, Loss::LogReg, 0.0, 13);
+    let shard = shard_vertical(&ds, 1, 0, LANE);
+    let prep = PreparedShard::prepare(&shard, 2, 8, 4);
+    let mut state = WorkerState::zeros(&prep);
+    let mut compute = NativeCompute;
+    let mut agg = AggClient::new(Loopback::new(), 1, 0, 8, Duration::from_secs(5));
+    let mut stats = PipelineStats::default();
+    let mut scratch = PipelineScratch::new();
+    let per_batch = 4;
+    let batches = prep.micro_batches() / per_batch;
+    let mut first_epoch = 0.0f32;
+    let mut last_epoch = 0.0f32;
+    for epoch in 0..6 {
+        let mut epoch_loss = 0.0f32;
+        for b in 0..batches {
+            epoch_loss += run_minibatch(
+                &prep,
+                &mut state,
+                &mut compute,
+                &mut agg,
+                b * per_batch,
+                per_batch,
+                Loss::LogReg,
+                0.5,
+                &mut stats,
+                &mut scratch,
+            );
+        }
+        if epoch == 0 {
+            first_epoch = epoch_loss;
+        }
+        last_epoch = epoch_loss;
+    }
+    assert!(
+        last_epoch < 0.7 * first_epoch,
+        "loss must fall: {first_epoch} -> {last_epoch}"
+    );
+}

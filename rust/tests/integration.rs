@@ -93,8 +93,8 @@ fn pjrt_and_native_backends_interchangeable() {
     for m in prep.micro.iter().take(4) {
         for (ed, slice) in m.per_engine.iter().zip(&prep.engines) {
             let x: Vec<f32> = (0..slice.d_pad).map(|_| rng.gauss() as f32).collect();
-            let a = pjrt.forward(&ed.packed, &x);
-            let b = native.forward(&ed.packed, &x);
+            let a = pjrt.forward(ed, &x);
+            let b = native.forward(ed, &x);
             for (u, v) in a.iter().zip(&b) {
                 assert!((u - v).abs() < 1e-3, "pjrt {u} vs native {v}");
             }

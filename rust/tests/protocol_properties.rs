@@ -34,7 +34,7 @@ fn adversarial_round(
 ) -> Result<Vec<i32>, String> {
     let mut state = vec![WState::NeedPa; workers];
     let mut last_pkt: Vec<Option<Packet>> = vec![None; workers];
-    let mut observed_fa: Vec<Option<Vec<i32>>> = vec![None; workers];
+    let mut observed_fa: Vec<Option<std::sync::Arc<[i32]>>> = vec![None; workers];
     let mut steps = 0;
     while state.iter().any(|s| *s != WState::Done) {
         steps += 1;
@@ -152,7 +152,7 @@ fn slot_never_cleared_before_all_acks() {
         // a late PA retransmission must still be answered with the sum
         let acts = sw.handle(0, &Packet::pa(0, 0, vec![1]));
         match acts.first() {
-            Some(Action::Multicast(out)) if out.payload == vec![workers as i32] => Ok(()),
+            Some(Action::Multicast(out)) if out.payload[..] == [workers as i32] => Ok(()),
             other => Err(format!("late PA not answered correctly: {other:?}")),
         }
     });
@@ -174,7 +174,7 @@ fn duplicate_storms_never_change_the_sum() {
             }
         }
         rng.shuffle(&mut deliveries);
-        let mut last_fa: Option<Vec<i32>> = None;
+        let mut last_fa: Option<std::sync::Arc<[i32]>> = None;
         for w in deliveries {
             for a in sw.handle(w, &Packet::pa(0, w, payloads[w].clone())) {
                 if let Action::Multicast(out) = a {
@@ -207,7 +207,7 @@ fn switchml_and_p4_agree_on_lossless_sums() {
         for w in 0..workers {
             for a in p4.handle(w, &Packet::pa(0, w, payloads[w].clone())) {
                 if let Action::Multicast(out) = a {
-                    fa_p4 = Some(out.payload);
+                    fa_p4 = Some(out.payload.to_vec());
                 }
             }
             let seq = SwitchMlSwitch::seq_of(0, 0);
