@@ -1,0 +1,68 @@
+#!/usr/bin/env python3
+"""Regression gate over BENCH_*.json files.
+
+Usage: bench_compare.py <previous.json> <current.json> <tolerance>
+
+Compares per-benchmark mean_s between the previous commit's JSON and the
+freshly produced one. Fails (exit 1) if any benchmark present in both
+got slower than `tolerance` times its previous mean. Skips cleanly when
+the baseline is empty or unparsable (the committed files start as schema
+templates until a toolchain-equipped run commits real numbers).
+"""
+import json
+import sys
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None
+
+
+def main():
+    if len(sys.argv) != 4:
+        print(__doc__)
+        return 2
+    prev_path, cur_path, tol = sys.argv[1], sys.argv[2], float(sys.argv[3])
+    prev, cur = load(prev_path), load(cur_path)
+    if not prev or not prev.get("results"):
+        print(f"no baseline results in {prev_path}; skipping regression gate")
+        return 0
+    if not cur or not cur.get("results"):
+        print(f"error: no current results in {cur_path}")
+        return 1
+    prev_by = {r["name"]: r for r in prev["results"]}
+    failures = []
+    for r in cur["results"]:
+        p = prev_by.get(r["name"])
+        if p is None:
+            print(f"        new: {r['name']} mean {r['mean_s']:.3e}s")
+            continue
+        ratio = r["mean_s"] / p["mean_s"] if p["mean_s"] > 0 else 1.0
+        verdict = "REGRESSED" if ratio > tol else "ok"
+        print(
+            f"  {verdict:>9}: {r['name']} "
+            f"{p['mean_s']:.3e}s -> {r['mean_s']:.3e}s ({ratio:.2f}x)"
+        )
+        if ratio > tol:
+            failures.append(r["name"])
+    # A benchmark that vanishes from the current run is a gate failure
+    # too: a rename or a bench that died mid-run would otherwise let a
+    # regression escape unmeasured. (An intentional rename fails once,
+    # then the new baseline carries the new name.)
+    cur_names = {r["name"] for r in cur["results"]}
+    for name in prev_by:
+        if name not in cur_names:
+            print(f"    DROPPED: {name} (in baseline, missing from current run)")
+            failures.append(name)
+    if failures:
+        print(f"regression gate FAILED at {tol:.2f}x tolerance: {failures}")
+        return 1
+    print(f"regression gate passed ({len(cur['results'])} benchmarks, {tol:.2f}x tolerance)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

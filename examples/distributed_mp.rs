@@ -39,7 +39,7 @@ fn main() {
         ds.name, cfg.cluster.workers, cfg.cluster.engines, cfg.net.drop_prob, cfg.net.dup_prob
     );
 
-    let make = |_w: usize| -> Box<dyn Compute> { Box::new(NativeCompute) };
+    let make = |_w: usize, _e: usize| -> Box<dyn Compute> { Box::new(NativeCompute) };
     let report = mp::train_mp(&cfg, &ds, &make);
 
     for (e, l) in report.loss_per_epoch.iter().enumerate() {

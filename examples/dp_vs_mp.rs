@@ -32,7 +32,7 @@ fn main() {
     let ds = synth::table2_like("real_sim", 512, 4096, cfg.train.loss, 11);
     println!("dataset: {} | {} workers, B={}", ds.name, cfg.cluster.workers, cfg.train.batch);
 
-    let make = |_w: usize| -> Box<dyn Compute> { Box::new(NativeCompute) };
+    let make = |_w: usize, _e: usize| -> Box<dyn Compute> { Box::new(NativeCompute) };
     let mp_rep = mp::train_mp(&cfg, &ds, &make);
     let dp_rep = dp::train_dp(&cfg, &ds, &make);
 

@@ -27,12 +27,38 @@ fn main() {
     cfg.net.latency_ns = 0;
     cfg.net.timeout_us = 3000;
     let ds = synth::table2_like("rcv1", 512, 2048, Loss::LogReg, 3);
-    let make = |_w: usize| -> Box<dyn Compute> { Box::new(NativeCompute) };
+    let make = |_w: usize, _e: usize| -> Box<dyn Compute> { Box::new(NativeCompute) };
     let bcfg = Config { warmup_iters: 1, samples: 8, iters_per_sample: 1 };
     let r = run("functional_mp_epoch_512x2048_w4", bcfg, || mp::train_mp(&cfg, &ds, &make));
     let samples_per_s = ds.n as f64 / r.summary.mean;
     println!("  -> {samples_per_s:.1} samples/s end-to-end");
     json.push(&r, &[("samples_per_s", samples_per_s)]);
+
+    // engine-thread scaling axis: one worker with a wide shard so the
+    // per-engine forward/backward dominates dispatch overhead. The
+    // regression gate tracks each thread count as its own entry; t4/t1
+    // samples_per_s is the pool's intra-node scaling factor.
+    let wide = synth::table2_like("news20", 256, 16_384, Loss::LogReg, 5);
+    for threads in [1usize, 2, 4] {
+        let mut cfg = SystemConfig::default();
+        cfg.cluster.workers = 1;
+        cfg.cluster.engines = 4;
+        cfg.cluster.engine_threads = threads;
+        cfg.cluster.slots = 16;
+        cfg.train.epochs = 1;
+        cfg.train.batch = 64;
+        cfg.train.lr = 1.0;
+        cfg.train.loss = Loss::LogReg;
+        cfg.net.latency_ns = 0;
+        cfg.net.timeout_us = 3000;
+        let bcfg = Config { warmup_iters: 1, samples: 5, iters_per_sample: 1 };
+        let r = run(&format!("functional_mp_epoch_256x16384_w1_t{threads}"), bcfg, || {
+            mp::train_mp(&cfg, &wide, &make)
+        });
+        let sps = wide.n as f64 / r.summary.mean;
+        println!("  -> {sps:.1} samples/s at engine_threads={threads}");
+        json.push(&r, &[("samples_per_s", sps), ("engine_threads", threads as f64)]);
+    }
 
     // DES: how fast the simulator regenerates a full figure's series
     let des_cfg = Config { warmup_iters: 5, samples: 30, iters_per_sample: 10 };

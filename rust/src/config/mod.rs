@@ -35,6 +35,12 @@ pub struct ClusterConfig {
     pub workers: usize,
     /// Engines per worker (paper: 1..=8; resource-bound on the U280).
     pub engines: usize,
+    /// Worker-owned engine threads: 1 (default) runs engines serially
+    /// on the worker's thread — bit-compatible with the pre-pool
+    /// pipeline — while values > 1 spread the engines over a persistent
+    /// thread pool (clamped to the engine count). A pure throughput
+    /// knob: numerics are invariant (see `engine::runner`).
+    pub engine_threads: usize,
     /// Per-worker in-flight window (max outstanding aggregation
     /// operations). The switch itself always provisions the paper's
     /// full 64K-slot seq space.
@@ -43,7 +49,7 @@ pub struct ClusterConfig {
 
 impl Default for ClusterConfig {
     fn default() -> Self {
-        Self { workers: 4, engines: 8, slots: 64 }
+        Self { workers: 4, engines: 8, engine_threads: 1, slots: 64 }
     }
 }
 
@@ -115,6 +121,7 @@ impl SystemConfig {
         const KNOWN: &[&str] = &[
             "cluster.workers",
             "cluster.engines",
+            "cluster.engine_threads",
             "cluster.slots",
             "train.loss",
             "train.lr",
@@ -141,6 +148,9 @@ impl SystemConfig {
             cluster: ClusterConfig {
                 workers: doc.int_or("cluster.workers", d.cluster.workers as i64) as usize,
                 engines: doc.int_or("cluster.engines", d.cluster.engines as i64) as usize,
+                engine_threads: doc
+                    .int_or("cluster.engine_threads", d.cluster.engine_threads as i64)
+                    as usize,
                 slots: doc.int_or("cluster.slots", d.cluster.slots as i64) as usize,
             },
             train: TrainConfig {
@@ -186,6 +196,9 @@ impl SystemConfig {
         }
         if c.engines == 0 || c.engines > 8 {
             bail!("engines must be in 1..=8 (paper: U280 resource limit), got {}", c.engines);
+        }
+        if c.engine_threads == 0 || c.engine_threads > 8 {
+            bail!("engine_threads must be in 1..=8 (one thread per engine max), got {}", c.engine_threads);
         }
         if c.slots < 2 {
             bail!("need at least 2 aggregation slots, got {}", c.slots);
@@ -263,6 +276,19 @@ mod tests {
         let mut cfg = SystemConfig::default();
         cfg.cluster.engines = 9;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn engine_threads_parsed_and_bounded() {
+        let cfg = SystemConfig::from_toml("[cluster]\nengine_threads = 4").unwrap();
+        assert_eq!(cfg.cluster.engine_threads, 4);
+        // unspecified -> serial default
+        assert_eq!(SystemConfig::default().cluster.engine_threads, 1);
+        let mut bad = SystemConfig::default();
+        bad.cluster.engine_threads = 0;
+        assert!(bad.validate().is_err());
+        bad.cluster.engine_threads = 9;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -41,7 +41,7 @@ struct WorkerResult {
 pub fn train_dp(
     cfg: &SystemConfig,
     ds: &Dataset,
-    make_compute: &(dyn Fn(usize) -> Box<dyn Compute> + Sync),
+    make_compute: &super::mp::ComputeFactory,
 ) -> TrainReport {
     cfg.validate().expect("invalid config");
     let m = cfg.cluster.workers;
@@ -70,7 +70,8 @@ pub fn train_dp(
                 let local_b = t.batch / m;
                 let mb = t.micro_batch;
                 let n_local = ((hi - lo) / local_b) * local_b; // whole batches
-                let mut compute = make_compute(w);
+                // DP keeps the full-width model on one engine per worker.
+                let mut compute = make_compute(w, 0);
                 let mut agg = AggClient::new(
                     ep,
                     switch_node(m),
@@ -205,7 +206,7 @@ mod tests {
         c
     }
 
-    fn native(_w: usize) -> Box<dyn Compute> {
+    fn native(_w: usize, _e: usize) -> Box<dyn Compute> {
         Box::new(NativeCompute)
     }
 

@@ -13,14 +13,14 @@ use crate::config::SystemConfig;
 use crate::data::partition::shard_vertical;
 use crate::data::quantize::LANE;
 use crate::data::Dataset;
-use crate::engine::Compute;
+use crate::engine::{Compute, EngineRunner};
 use crate::net::sim::SimNet;
 use crate::net::switch_node;
-use crate::pipeline::{run_minibatch, PipelineScratch, PipelineStats, PreparedShard, WorkerState};
+use crate::pipeline::{run_minibatch, PipelineScratch, PipelineStats, PreparedShard};
 use crate::switch::p4::P4Switch;
 use crate::switch::runner;
 use crate::worker::{AggClient, AggStats};
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 /// Per-worker results sent back to the coordinator.
@@ -32,9 +32,12 @@ struct WorkerResult {
     agg: AggStats,
 }
 
-/// Factory giving each worker its compute backend (e.g. one PJRT client
-/// per worker, or the shared-nothing native engine).
-pub type ComputeFactory<'a> = dyn Fn(usize) -> Box<dyn Compute> + Sync + 'a;
+/// Factory giving each (worker, engine) its compute backend (e.g. one
+/// PJRT client per engine, or the shared-nothing native engine). With
+/// `engine_threads > 1` the instance is moved onto that engine's
+/// thread — which is why [`Compute`] is `Send`; the serial runner
+/// calls the factory once per worker (engine 0) and shares it.
+pub type ComputeFactory<'a> = dyn Fn(usize, usize) -> Box<dyn Compute> + Sync + 'a;
 
 /// Train `ds` under model parallelism per `cfg`. Panics on invalid
 /// configuration (validate first) or if the cluster wedges (drain
@@ -61,10 +64,20 @@ pub fn train_mp(cfg: &SystemConfig, ds: &Dataset, make_compute: &ComputeFactory)
             scope.spawn(move || {
                 let t = &cfg.train;
                 let shard = shard_vertical(ds, m, w, LANE);
-                let prep =
-                    PreparedShard::prepare(&shard, cfg.cluster.engines, t.micro_batch, t.precision);
-                let mut state = WorkerState::zeros(&prep);
-                let mut compute = make_compute(w);
+                let prep = Arc::new(PreparedShard::prepare(
+                    &shard,
+                    cfg.cluster.engines,
+                    t.micro_batch,
+                    t.precision,
+                ));
+                // Per-engine state + compute live in the runner: serial
+                // on this thread, or a persistent per-engine pool when
+                // engine_threads > 1.
+                let mut runner = EngineRunner::new(
+                    prep.clone(),
+                    &|e| make_compute(w, e),
+                    cfg.cluster.engine_threads,
+                );
                 let mut agg = AggClient::new(
                     ep,
                     switch_node(m),
@@ -83,9 +96,7 @@ pub fn train_mp(cfg: &SystemConfig, ds: &Dataset, make_compute: &ComputeFactory)
                     let mut epoch_loss = 0.0f32;
                     for b in 0..batches {
                         epoch_loss += run_minibatch(
-                            &prep,
-                            &mut state,
-                            compute.as_mut(),
+                            &mut runner,
                             &mut agg,
                             b * per_batch,
                             per_batch,
@@ -99,7 +110,7 @@ pub fn train_mp(cfg: &SystemConfig, ds: &Dataset, make_compute: &ComputeFactory)
                 }
                 let _ = res_tx.send(WorkerResult {
                     worker: w,
-                    model: state.model(&prep),
+                    model: runner.model(),
                     loss_curve,
                     pipeline: pstats,
                     agg: agg.stats,
@@ -156,7 +167,7 @@ mod tests {
         c
     }
 
-    fn native(_w: usize) -> Box<dyn Compute> {
+    fn native(_w: usize, _e: usize) -> Box<dyn Compute> {
         Box::new(NativeCompute)
     }
 
@@ -177,6 +188,10 @@ mod tests {
             assert!((a - b).abs() < 5e-3, "{a} vs {b}");
         }
     }
+
+    // engine_threads invariance (pool vs serial runner) is covered at
+    // the integration level by
+    // `end_to_end.rs::engine_thread_pool_matches_serial_runner`.
 
     #[test]
     fn worker_count_does_not_change_convergence() {

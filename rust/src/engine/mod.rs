@@ -18,8 +18,22 @@
 //! per micro-batch on the native backend; `PreparedShard` keeps no
 //! dequantized copy of the data (the backward replays planes, like the
 //! FPGA replays its FIFO).
+//!
+//! **Threading model (§Perf L2):** engines execute through an
+//! [`EngineRunner`] — serially on the worker's thread, or concurrently
+//! on a persistent per-engine thread pool (`engine_threads > 1`), the
+//! software analogue of the FPGA's N engines running in lockstep. Each
+//! pool thread exclusively owns its engines' [`Compute`] instances and
+//! model/gradient slices (hence the `Send` bound on the trait: a
+//! backend is *moved into* its engine thread at construction, never
+//! shared), and jobs hand off through preallocated Condvar/epoch slots
+//! so the pool preserves the zero-allocation steady state. See
+//! [`runner`] for the ownership/handoff protocol.
 
 pub mod bitserial;
+pub mod runner;
+
+pub use runner::{EngineComputeFactory, EngineRunner};
 
 use crate::data::quantize::PackedBatch;
 use crate::glm::Loss;
@@ -31,7 +45,12 @@ use crate::glm::Loss;
 /// replays the planes with per-plane `2^-(p+1)` scaling — numerically
 /// identical to a dequantized multiply, without materializing the dense
 /// rows.
-pub trait Compute {
+///
+/// `Send` because each instance is owned by exactly one engine, and
+/// that engine may live on a pool thread ([`runner::EngineRunner`]);
+/// instances are constructed per (worker, engine) and moved, never
+/// shared, so no `Sync` bound is needed.
+pub trait Compute: Send {
     /// PA[k] = A[k, :] . x for the micro-batch, written into `out`
     /// (`out.len() == planes.mb`; paper Alg. 1 lines 18-21).
     fn forward_into(&mut self, planes: &PackedBatch, x: &[f32], out: &mut [f32]);

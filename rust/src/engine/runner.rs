@@ -1,0 +1,616 @@
+//! `EngineRunner` — per-engine execution behind one dispatch API, the
+//! software twin of the FPGA worker running its N engines concurrently.
+//!
+//! The paper's worker instantiates `N` engines that process every
+//! micro-batch in lockstep, each over its own vertical slice of the
+//! model. This module gives the software worker the same shape: the
+//! runner owns all per-engine state (model slice `x`, gradient slice
+//! `g`, one [`Compute`] backend per engine, forward scratch) and
+//! executes forward / backward / update either
+//!
+//! * **serially** on the caller's thread (`engine_threads = 1`, the
+//!   default — bit-compatible with the pre-runner pipeline), or
+//! * **on a persistent pool** of worker-owned engine threads
+//!   (`engine_threads > 1`), one thread per engine chunk, alive for the
+//!   whole training run.
+//!
+//! # Ownership and handoff protocol (pool mode)
+//!
+//! Each pool thread owns its engines outright — their `Box<dyn
+//! Compute>`, model/gradient slices, and the `Arc<PreparedShard>` it
+//! reads micro-batches from. Nothing engine-local is ever shared or
+//! locked; the only shared state is one preallocated job slot per
+//! thread:
+//!
+//! ```text
+//! dispatcher                       engine thread t
+//! ----------                      ----------------
+//! lock slot.m                      wait on slot.cv while
+//!   write job (Copy enum)            completed == epoch
+//!   copy fa into slot.fa (≤ MB)
+//!   epoch += 1
+//! notify slot.cv        ───────▶  run job against owned engines,
+//! ...                              writing PA rows into slot.out
+//! lock slot.m                      completed = epoch
+//! wait slot.done_cv     ◀───────  notify slot.done_cv
+//!   while completed != epoch
+//! fan-in slot.out (engine order)
+//! ```
+//!
+//! The handoff is a Mutex/Condvar epoch pair over preallocated buffers:
+//! no channel, no queue node, no payload allocation per dispatch — the
+//! steady-state training loop stays **zero-allocation** with the pool
+//! active (enforced by `tests/alloc_steady_state.rs`).
+//!
+//! # Bit-compatibility
+//!
+//! Thread count never changes the numbers. The forward fan-in adds
+//! per-engine PA rows **in engine order** (each engine writes its own
+//! `MB`-row of `slot.out`; the dispatcher sums rows `e = 0, 1, ...`
+//! exactly like the serial loop's `pa += pa_e`), the backward touches
+//! only engine-local gradients, and the loss sum is computed once on
+//! the engine-0 thread. `engine_threads ∈ {1, 2, N}` therefore produce
+//! identical f32 results — tested bitwise in this module and through
+//! the full trainer in `tests/end_to_end.rs`.
+
+use super::Compute;
+use crate::glm::Loss;
+use crate::pipeline::{PreparedShard, WorkerState};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Per-engine compute factory: engine index -> backend instance. The
+/// coordinator curries its per-(worker, engine) factory down to this.
+pub type EngineComputeFactory<'a> = dyn Fn(usize) -> Box<dyn Compute> + 'a;
+
+/// One job published to a pool thread. `Copy` on purpose: publishing a
+/// job writes a small fixed-size value into the slot, never a heap
+/// object.
+#[derive(Debug, Clone, Copy)]
+enum Job {
+    Idle,
+    /// Forward micro-batch `idx` on every owned engine into `slot.out`.
+    Forward { idx: usize },
+    /// Replay micro-batch `idx` planes against `slot.fa`, accumulating
+    /// owned gradients; the engine-0 thread also writes `slot.loss_out`.
+    Backward { idx: usize, lr: f32, loss: Loss },
+    /// `x -= g * inv_b` then zero `g` on every owned engine.
+    Update { inv_b: f32 },
+    /// Copy owned (padded) model slices into `slot.xfer`.
+    Export,
+    /// Load owned (padded) model slices from `slot.xfer`.
+    SetModel,
+    Shutdown,
+}
+
+/// Shared job slot between the dispatcher and one pool thread.
+struct Slot {
+    m: Mutex<SlotState>,
+    /// Dispatcher -> engine thread: a new epoch was published.
+    cv: Condvar,
+    /// Engine thread -> dispatcher: the published epoch completed.
+    done_cv: Condvar,
+}
+
+struct SlotState {
+    /// Bumped by the dispatcher when a job is published.
+    epoch: u64,
+    /// Epoch of the last job the engine thread finished.
+    completed: u64,
+    job: Job,
+    /// Full activations input for `Backward` (MB wide, capacity warm
+    /// after the first backward).
+    fa: Vec<f32>,
+    /// Per-engine forward outputs, `out[i * mb..(i + 1) * mb]` for the
+    /// thread's i-th owned engine. Preallocated at construction.
+    out: Vec<f32>,
+    /// Micro-batch loss sum (engine-0 thread, `Backward` jobs).
+    loss_out: f32,
+    /// Model import/export staging (cold path only).
+    xfer: Vec<f32>,
+}
+
+/// Engine state owned by exactly one thread (or by the serial runner).
+struct EngineLocal {
+    engine: usize,
+    x: Vec<f32>,
+    g: Vec<f32>,
+    compute: Box<dyn Compute>,
+}
+
+/// Serial execution on the dispatcher thread — the 1-thread special
+/// case, bit-compatible with the pre-runner pipeline loop. One shared
+/// backend per worker, exactly like that loop: per-engine instances
+/// are only needed in pool mode, where each is moved onto its thread
+/// (and a PJRT backend would otherwise open one client per engine).
+struct Serial {
+    prep: Arc<PreparedShard>,
+    compute: Box<dyn Compute>,
+    state: WorkerState,
+    /// Single engine's forward output (MB wide).
+    pa_e: Vec<f32>,
+}
+
+/// The persistent per-engine thread pool.
+struct Pool {
+    prep: Arc<PreparedShard>,
+    slots: Vec<Arc<Slot>>,
+    handles: Vec<JoinHandle<()>>,
+    /// Engine ranges `[lo, hi)` owned by each thread, in engine order.
+    chunks: Vec<(usize, usize)>,
+    mb: usize,
+}
+
+enum Inner {
+    Serial(Serial),
+    Pool(Pool),
+}
+
+/// Executes per-engine forward/backward/update for one worker. See the
+/// module docs for the ownership and handoff protocol.
+pub struct EngineRunner {
+    inner: Inner,
+}
+
+impl EngineRunner {
+    /// Build a runner over `prep` with `threads` engine threads
+    /// (clamped to `[1, engines]`; 1 = serial execution on the caller's
+    /// thread). In pool mode `mk` constructs one compute backend per
+    /// engine (each moved onto its thread); serial mode calls `mk(0)`
+    /// once and shares it across engines, like the pre-runner loop.
+    pub fn new(prep: Arc<PreparedShard>, mk: &EngineComputeFactory, threads: usize) -> Self {
+        let n = prep.engines.len();
+        let threads = threads.clamp(1, n.max(1));
+        let state = WorkerState::zeros(&prep);
+        if threads <= 1 {
+            let compute = mk(0);
+            let pa_e = vec![0.0f32; prep.mb];
+            return Self { inner: Inner::Serial(Serial { prep, compute, state, pa_e }) };
+        }
+
+        // Contiguous near-even engine chunks keep the fan-in in global
+        // engine order (bit-compatibility) and the slices cache-local.
+        let (base, rem) = (n / threads, n % threads);
+        let mut chunks = Vec::with_capacity(threads);
+        let mut lo = 0;
+        for t in 0..threads {
+            let hi = lo + base + usize::from(t < rem);
+            chunks.push((lo, hi));
+            lo = hi;
+        }
+
+        let mut state = state;
+        let mut slots = Vec::with_capacity(threads);
+        let mut handles = Vec::with_capacity(threads);
+        for (t, &(e_lo, e_hi)) in chunks.iter().enumerate() {
+            let locals: Vec<EngineLocal> = (e_lo..e_hi)
+                .map(|e| EngineLocal {
+                    engine: e,
+                    x: std::mem::take(&mut state.x[e]),
+                    g: std::mem::take(&mut state.g[e]),
+                    compute: mk(e),
+                })
+                .collect();
+            let slot = Arc::new(Slot {
+                m: Mutex::new(SlotState {
+                    epoch: 0,
+                    completed: 0,
+                    job: Job::Idle,
+                    fa: Vec::new(),
+                    out: vec![0.0f32; (e_hi - e_lo) * prep.mb],
+                    loss_out: 0.0,
+                    xfer: Vec::new(),
+                }),
+                cv: Condvar::new(),
+                done_cv: Condvar::new(),
+            });
+            let thread_prep = prep.clone();
+            let thread_slot = slot.clone();
+            let mb = prep.mb;
+            let handle = std::thread::Builder::new()
+                .name(format!("p4sgd-engines-{t}"))
+                .spawn(move || engine_thread(thread_prep, thread_slot, locals, mb))
+                .expect("spawn engine thread");
+            slots.push(slot);
+            handles.push(handle);
+        }
+        let mb = prep.mb;
+        Self { inner: Inner::Pool(Pool { prep, slots, handles, chunks, mb }) }
+    }
+
+    /// The shard this runner executes over.
+    pub fn prep(&self) -> &Arc<PreparedShard> {
+        match &self.inner {
+            Inner::Serial(s) => &s.prep,
+            Inner::Pool(p) => &p.prep,
+        }
+    }
+
+    /// Number of engines (== model slices).
+    pub fn engines(&self) -> usize {
+        self.prep().engines.len()
+    }
+
+    /// Number of engine threads (1 = serial on the caller's thread).
+    pub fn threads(&self) -> usize {
+        match &self.inner {
+            Inner::Serial(_) => 1,
+            Inner::Pool(p) => p.slots.len(),
+        }
+    }
+
+    /// Engine-summed PA for micro-batch `idx`, written into `pa`
+    /// (`pa.len() == mb`). Fan-in is in engine order on every path.
+    pub fn forward(&mut self, idx: usize, pa: &mut [f32]) {
+        pa.fill(0.0);
+        match &mut self.inner {
+            Inner::Serial(s) => {
+                let m = &s.prep.micro[idx];
+                for (ed, xe) in m.per_engine.iter().zip(&s.state.x) {
+                    s.compute.forward_into(ed, xe, &mut s.pa_e);
+                    for (p, v) in pa.iter_mut().zip(s.pa_e.iter()) {
+                        *p += *v;
+                    }
+                }
+            }
+            Inner::Pool(p) => {
+                for t in 0..p.slots.len() {
+                    p.publish(t, Job::Forward { idx }, |_| {});
+                }
+                for t in 0..p.slots.len() {
+                    let st = p.wait(t);
+                    for row in st.out.chunks_exact(p.mb) {
+                        for (acc, v) in pa.iter_mut().zip(row) {
+                            *acc += *v;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Plane-replay backward for micro-batch `idx` against full
+    /// activations `fa`: every engine accumulates its gradient slice.
+    /// Returns the micro-batch loss sum (computed once, on engine 0's
+    /// backend).
+    pub fn backward(&mut self, idx: usize, fa: &[f32], lr: f32, loss: Loss) -> f32 {
+        match &mut self.inner {
+            Inner::Serial(s) => {
+                let m = &s.prep.micro[idx];
+                let loss_sum = s.compute.loss_sum(fa, &m.y, loss);
+                for (ed, ge) in m.per_engine.iter().zip(&mut s.state.g) {
+                    s.compute.backward_acc_planes(ed, fa, &m.y, ge, lr, loss);
+                }
+                loss_sum
+            }
+            Inner::Pool(p) => {
+                for t in 0..p.slots.len() {
+                    p.publish(t, Job::Backward { idx, lr, loss }, |st| {
+                        st.fa.clear();
+                        st.fa.extend_from_slice(fa);
+                    });
+                }
+                let mut loss_sum = 0.0;
+                for t in 0..p.slots.len() {
+                    let st = p.wait(t);
+                    if t == 0 {
+                        loss_sum = st.loss_out;
+                    }
+                }
+                loss_sum
+            }
+        }
+    }
+
+    /// Mini-batch boundary: `x -= g * inv_b`, then zero the gradients
+    /// for the next accumulation window (synchronous SGD preserved).
+    pub fn update(&mut self, inv_b: f32) {
+        match &mut self.inner {
+            Inner::Serial(s) => {
+                for (xe, ge) in s.state.x.iter_mut().zip(s.state.g.iter_mut()) {
+                    s.compute.update(xe, ge, inv_b);
+                    ge.iter_mut().for_each(|v| *v = 0.0);
+                }
+            }
+            Inner::Pool(p) => {
+                for t in 0..p.slots.len() {
+                    p.publish(t, Job::Update { inv_b }, |_| {});
+                }
+                for t in 0..p.slots.len() {
+                    let _ = p.wait(t);
+                }
+            }
+        }
+    }
+
+    /// Stitch the (unpadded) model partition back together — cold path,
+    /// allocates.
+    pub fn model(&mut self) -> Vec<f32> {
+        match &mut self.inner {
+            Inner::Serial(s) => s.state.model(&s.prep),
+            Inner::Pool(p) => {
+                for t in 0..p.slots.len() {
+                    p.publish(t, Job::Export, |_| {});
+                }
+                let mut out = Vec::new();
+                for (t, &(e_lo, e_hi)) in p.chunks.iter().enumerate() {
+                    let st = p.wait(t);
+                    let mut off = 0;
+                    for s in &p.prep.engines[e_lo..e_hi] {
+                        out.extend_from_slice(&st.xfer[off..off + (s.hi - s.lo)]);
+                        off += s.d_pad;
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// Load a full (unpadded) worker partition into the per-engine
+    /// slices — cold path, for tests and checkpoint restore.
+    pub fn set_model(&mut self, x_full: &[f32]) {
+        match &mut self.inner {
+            Inner::Serial(s) => {
+                for (sl, xe) in s.prep.engines.iter().zip(&mut s.state.x) {
+                    let w = sl.hi - sl.lo;
+                    xe[..w].copy_from_slice(&x_full[sl.lo..sl.hi]);
+                    xe[w..].fill(0.0);
+                }
+            }
+            Inner::Pool(p) => {
+                for (t, &(e_lo, e_hi)) in p.chunks.iter().enumerate() {
+                    let engines = &p.prep.engines;
+                    p.publish(t, Job::SetModel, |st| {
+                        st.xfer.clear();
+                        for s in &engines[e_lo..e_hi] {
+                            st.xfer.extend_from_slice(&x_full[s.lo..s.hi]);
+                            st.xfer.resize(st.xfer.len() + (s.d_pad - (s.hi - s.lo)), 0.0);
+                        }
+                    });
+                }
+                for t in 0..p.slots.len() {
+                    let _ = p.wait(t);
+                }
+            }
+        }
+    }
+}
+
+impl Pool {
+    /// Publish a job to thread `t`: stage inputs under the slot lock,
+    /// bump the epoch, wake the thread. Allocation-free in steady state.
+    fn publish<F: FnOnce(&mut SlotState)>(&self, t: usize, job: Job, stage: F) {
+        let slot = &self.slots[t];
+        let mut st = slot.m.lock().unwrap();
+        stage(&mut st);
+        st.job = job;
+        st.epoch += 1;
+        slot.cv.notify_one();
+    }
+
+    /// Block until thread `t` completed its published epoch; returns
+    /// the guard so the caller can read outputs in place.
+    fn wait(&self, t: usize) -> std::sync::MutexGuard<'_, SlotState> {
+        let slot = &self.slots[t];
+        let mut st = slot.m.lock().unwrap();
+        while st.completed != st.epoch {
+            st = slot.done_cv.wait(st).unwrap();
+        }
+        st
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        for slot in &self.slots {
+            // A poisoned slot means the engine thread already died
+            // (panic under the lock); skip it and just join.
+            if let Ok(mut st) = slot.m.lock() {
+                st.job = Job::Shutdown;
+                st.epoch += 1;
+                slot.cv.notify_one();
+            }
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The pool thread body. Jobs execute while holding the slot lock: the
+/// dispatcher is barrier-waiting anyway, the lock is shared by exactly
+/// two threads, and a panic inside a compute poisons the mutex — which
+/// surfaces the failure at the dispatcher instead of deadlocking it.
+fn engine_thread(prep: Arc<PreparedShard>, slot: Arc<Slot>, mut locals: Vec<EngineLocal>, mb: usize) {
+    let mut guard = slot.m.lock().unwrap();
+    loop {
+        while guard.completed == guard.epoch {
+            guard = slot.cv.wait(guard).unwrap();
+        }
+        match guard.job {
+            Job::Idle => {}
+            Job::Forward { idx } => {
+                let m = &prep.micro[idx];
+                let st = &mut *guard;
+                for (i, l) in locals.iter_mut().enumerate() {
+                    l.compute.forward_into(
+                        &m.per_engine[l.engine],
+                        &l.x,
+                        &mut st.out[i * mb..(i + 1) * mb],
+                    );
+                }
+            }
+            Job::Backward { idx, lr, loss } => {
+                let m = &prep.micro[idx];
+                let st = &mut *guard;
+                for l in locals.iter_mut() {
+                    l.compute.backward_acc_planes(
+                        &m.per_engine[l.engine],
+                        &st.fa,
+                        &m.y,
+                        &mut l.g,
+                        lr,
+                        loss,
+                    );
+                }
+                // Loss is a whole-micro-batch quantity; exactly one
+                // thread (the engine-0 owner) reports it.
+                if locals.first().is_some_and(|l| l.engine == 0) {
+                    st.loss_out = locals[0].compute.loss_sum(&st.fa, &m.y, loss);
+                }
+            }
+            Job::Update { inv_b } => {
+                for l in locals.iter_mut() {
+                    l.compute.update(&mut l.x, &l.g, inv_b);
+                    l.g.iter_mut().for_each(|v| *v = 0.0);
+                }
+            }
+            Job::Export => {
+                let st = &mut *guard;
+                st.xfer.clear();
+                for l in &locals {
+                    st.xfer.extend_from_slice(&l.x);
+                }
+            }
+            Job::SetModel => {
+                let st = &mut *guard;
+                let mut off = 0;
+                for l in locals.iter_mut() {
+                    l.x.copy_from_slice(&st.xfer[off..off + l.x.len()]);
+                    off += l.x.len();
+                }
+            }
+            Job::Shutdown => {
+                guard.completed = guard.epoch;
+                slot.done_cv.notify_one();
+                return;
+            }
+        }
+        guard.completed = guard.epoch;
+        slot.done_cv.notify_one();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::partition::shard_vertical;
+    use crate::data::quantize::LANE;
+    use crate::data::synth;
+    use crate::engine::NativeCompute;
+
+    fn mk(_e: usize) -> Box<dyn Compute> {
+        Box::new(NativeCompute)
+    }
+
+    fn prep(d: usize, n: usize, engines: usize) -> Arc<PreparedShard> {
+        let ds = synth::separable(n, d, Loss::LogReg, 0.0, 19);
+        let shard = shard_vertical(&ds, 1, 0, LANE);
+        Arc::new(PreparedShard::prepare(&shard, engines, 8, 4))
+    }
+
+    fn x_full(d: usize) -> Vec<f32> {
+        (0..d).map(|j| (j as f32 * 0.61).sin()).collect()
+    }
+
+    #[test]
+    fn thread_count_is_clamped_to_engines() {
+        let p = prep(96, 16, 3);
+        let r = EngineRunner::new(p, &mk, 8);
+        assert_eq!(r.engines(), 3);
+        assert_eq!(r.threads(), 3);
+        let r = EngineRunner::new(prep(96, 16, 3), &mk, 0);
+        assert_eq!(r.threads(), 1);
+    }
+
+    #[test]
+    fn pool_forward_is_bitwise_equal_to_serial() {
+        let p = prep(100, 16, 4);
+        let x = x_full(100);
+        let mut serial = EngineRunner::new(p.clone(), &mk, 1);
+        serial.set_model(&x);
+        for threads in [2usize, 3, 4] {
+            let mut pool = EngineRunner::new(p.clone(), &mk, threads);
+            pool.set_model(&x);
+            for idx in 0..p.micro_batches() {
+                let mut pa_s = vec![0.0f32; p.mb];
+                let mut pa_p = vec![0.0f32; p.mb];
+                serial.forward(idx, &mut pa_s);
+                pool.forward(idx, &mut pa_p);
+                assert_eq!(pa_s, pa_p, "threads={threads} idx={idx}");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_training_cycle_is_bitwise_equal_to_serial() {
+        // Full fwd -> bwd -> update cycles: losses and final models must
+        // be identical f32 bit patterns (ordered fan-in, engine-local
+        // gradients).
+        let p = prep(96, 32, 4);
+        let mut serial = EngineRunner::new(p.clone(), &mk, 1);
+        let mut pool = EngineRunner::new(p.clone(), &mk, 2);
+        let mut pa = vec![0.0f32; p.mb];
+        for step in 0..3 {
+            for (idx, _) in p.micro.iter().enumerate() {
+                let mut losses = [0.0f32; 2];
+                for (k, runner) in [&mut serial, &mut pool].into_iter().enumerate() {
+                    runner.forward(idx, &mut pa);
+                    // single worker: FA == PA
+                    let fa = pa.clone();
+                    losses[k] = runner.backward(idx, &fa, 0.5, Loss::LogReg);
+                }
+                assert_eq!(losses[0].to_bits(), losses[1].to_bits(), "step {step} idx {idx}");
+            }
+            serial.update(1.0 / 32.0);
+            pool.update(1.0 / 32.0);
+        }
+        let ms = serial.model();
+        let mp = pool.model();
+        assert_eq!(ms.len(), mp.len());
+        for (a, b) in ms.iter().zip(&mp) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn set_model_then_export_roundtrips() {
+        for threads in [1usize, 2, 4] {
+            let p = prep(100, 16, 4);
+            let x = x_full(100);
+            let mut r = EngineRunner::new(p, &mk, threads);
+            r.set_model(&x);
+            assert_eq!(r.model(), x, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn update_zeroes_gradients_between_minibatches() {
+        // Two identical minibatches from the same zero model must yield
+        // the same update step — stale gradients would break this.
+        let p = prep(64, 16, 2);
+        let mut r = EngineRunner::new(p.clone(), &mk, 2);
+        let mut pa = vec![0.0f32; p.mb];
+        r.forward(0, &mut pa);
+        let fa = pa.clone();
+        r.backward(0, &fa, 0.5, Loss::LogReg);
+        r.update(1.0);
+        let m1 = r.model();
+
+        let mut r2 = EngineRunner::new(p.clone(), &mk, 2);
+        r2.set_model(&m1);
+        let mut pa2 = vec![0.0f32; p.mb];
+        r2.forward(0, &mut pa2);
+        let fa2 = pa2.clone();
+        r2.backward(0, &fa2, 0.5, Loss::LogReg);
+        r2.update(1.0);
+        let fresh = r2.model();
+
+        r.forward(0, &mut pa);
+        assert_eq!(pa, pa2, "same model must give same PA");
+        let fa = pa.clone();
+        r.backward(0, &fa, 0.5, Loss::LogReg);
+        r.update(1.0);
+        assert_eq!(r.model(), fresh, "gradient must start from zero each mini-batch");
+    }
+}

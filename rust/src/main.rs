@@ -43,7 +43,8 @@ fn dispatch(args: &Args) -> Result<()> {
             println!("usage: p4sgd <repro|train|agg-bench|info> [options]");
             println!("  repro <table1..table4|fig8..fig15|all>");
             println!("  train [--mode mp|dp] [--backend native|pjrt] [--workers M] [--engines N]");
-            println!("        [--loss linreg|logreg|svm] [--batch B] [--epochs E] [--dataset NAME]");
+            println!("        [--engine-threads T] [--loss linreg|logreg|svm] [--batch B]");
+            println!("        [--epochs E] [--dataset NAME]");
             println!("        [--samples N] [--features D] [--drop P]");
             println!("  agg-bench [--workers M] [--ops N] [--payload K]");
             Ok(())
@@ -55,6 +56,7 @@ fn train(args: &Args) -> Result<()> {
     let mut cfg = SystemConfig::default();
     cfg.cluster.workers = args.get_or("workers", 4usize);
     cfg.cluster.engines = args.get_or("engines", 4usize);
+    cfg.cluster.engine_threads = args.get_or("engine-threads", 1usize);
     cfg.cluster.slots = args.get_or("slots", 16usize);
     cfg.train.loss = args.get_or("loss", Loss::LogReg);
     cfg.train.lr = args.get_or("lr", 0.5f32);
@@ -74,14 +76,15 @@ fn train(args: &Args) -> Result<()> {
         None => synth::separable(n, d, cfg.train.loss, 0.1, 7),
     };
     println!(
-        "training {} ({} samples x {} features), loss={}, {} workers x {} engines, backend={backend:?}",
-        ds.name, ds.n, ds.d, cfg.train.loss, cfg.cluster.workers, cfg.cluster.engines
+        "training {} ({} samples x {} features), loss={}, {} workers x {} engines ({} engine threads), backend={backend:?}",
+        ds.name, ds.n, ds.d, cfg.train.loss, cfg.cluster.workers, cfg.cluster.engines,
+        cfg.cluster.engine_threads
     );
 
-    let make: Box<dyn Fn(usize) -> Box<dyn Compute> + Sync> = match backend {
-        Backend::Native => Box::new(|_| Box::new(NativeCompute)),
+    let make: Box<dyn Fn(usize, usize) -> Box<dyn Compute> + Sync> = match backend {
+        Backend::Native => Box::new(|_, _| Box::new(NativeCompute)),
         Backend::Pjrt => {
-            Box::new(|_| Box::new(PjrtCompute::load_default().expect("pjrt backend")))
+            Box::new(|_, _| Box::new(PjrtCompute::load_default().expect("pjrt backend")))
         }
     };
     let mode = args.get_or("mode", "mp".to_string());

@@ -3,9 +3,17 @@
 //! Gives the protocol stack a true datagram substrate (kernel buffers,
 //! real truncation, genuine unreliability under pressure). Node `i` binds
 //! `127.0.0.1:(base_port + i)`.
+//!
+//! **Steady-state parity with `SimNet` (§Perf L1):** the in-process
+//! fabric moves payloads as shared `Arc<[i32]>` refcounts; the datagram
+//! path must serialize, but it reuses its buffers — one encode scratch
+//! per endpoint, a fixed rx buffer, and a [`PayloadPool`] for decoded
+//! payloads — so localhost UDP runs are also allocation-free once warm
+//! (provided the consumer drops each payload before the next receive,
+//! which the pipeline does).
 
 use super::{NodeId, Transport};
-use crate::protocol::Packet;
+use crate::protocol::{Packet, PayloadPool};
 use std::net::{SocketAddr, UdpSocket};
 use std::time::Duration;
 
@@ -19,6 +27,7 @@ pub struct UdpEndpoint {
     socket: UdpSocket,
     scratch: Vec<u8>,
     rxbuf: [u8; MAX_DGRAM],
+    pool: PayloadPool,
 }
 
 /// Build `nodes` endpoints on consecutive localhost ports starting at
@@ -28,7 +37,14 @@ pub fn build(nodes: usize, base_port: u16) -> std::io::Result<Vec<UdpEndpoint>> 
         .map(|node| {
             let socket = UdpSocket::bind(("127.0.0.1", base_port + node as u16))?;
             socket.set_nonblocking(false)?;
-            Ok(UdpEndpoint { node, base_port, socket, scratch: Vec::new(), rxbuf: [0; MAX_DGRAM] })
+            Ok(UdpEndpoint {
+                node,
+                base_port,
+                socket,
+                scratch: Vec::new(),
+                rxbuf: [0; MAX_DGRAM],
+                pool: PayloadPool::new(),
+            })
         })
         .collect()
 }
@@ -59,12 +75,12 @@ impl Transport for UdpEndpoint {
             let r = self.socket.recv_from(&mut self.rxbuf);
             self.socket.set_nonblocking(false).ok()?;
             let (n, from) = r.ok()?;
-            let pkt = Packet::decode(&self.rxbuf[..n]).ok()?;
+            let pkt = Packet::decode_with(&self.rxbuf[..n], &mut self.pool).ok()?;
             return Some((self.node_of(from)?, pkt));
         }
         self.socket.set_read_timeout(Some(timeout)).ok()?;
         let (n, from) = self.socket.recv_from(&mut self.rxbuf).ok()?;
-        let pkt = Packet::decode(&self.rxbuf[..n]).ok()?;
+        let pkt = Packet::decode_with(&self.rxbuf[..n], &mut self.pool).ok()?;
         Some((self.node_of(from)?, pkt))
     }
 
@@ -118,6 +134,25 @@ mod tests {
         let (_, pkt) = got.expect("delivery");
         assert!(!pkt.is_agg);
         assert_eq!(pkt.seq, 5);
+    }
+
+    #[test]
+    fn steady_state_receive_reuses_the_decode_buffer() {
+        // Drop each payload before the next receive (the pipeline's
+        // pattern): the second decode must land in the same pooled
+        // allocation — the UDP path's SimNet-parity contract.
+        let mut eps = build(2, BASE + 64).expect("bind");
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.send(1, &Packet::pa(1, 0, vec![1, 2, 3, 4]));
+        let (_, p1) = b.recv_timeout(Duration::from_secs(2)).expect("delivery");
+        assert_eq!(p1.payload[..], [1, 2, 3, 4]);
+        let ptr = p1.payload.as_ptr();
+        drop(p1);
+        a.send(1, &Packet::pa(2, 0, vec![5, 6, 7, 8]));
+        let (_, p2) = b.recv_timeout(Duration::from_secs(2)).expect("delivery");
+        assert_eq!(p2.payload[..], [5, 6, 7, 8]);
+        assert_eq!(p2.payload.as_ptr(), ptr, "decode must reuse the pooled buffer");
     }
 
     #[test]

@@ -14,16 +14,27 @@
 //! touches per micro-batch is preallocated. [`PreparedShard`] holds the
 //! bit-plane image only (the backward replays planes — no dequantized
 //! copy, an ~8x memory cut at P=4); [`PipelineScratch`] carries the PA
-//! accumulator, per-engine forward buffer, wire encode/decode buffers,
-//! and the seq→micro-batch map; `AggClient` recycles payload buffers
-//! through an `Arc` pool. After one warm-up mini-batch,
-//! [`run_minibatch`] performs **zero heap allocations** per micro-batch
-//! on the native backend (enforced by `tests/alloc_steady_state.rs`
-//! with a counting allocator).
+//! accumulator, wire encode/decode buffers, and the seq→micro-batch
+//! map; `AggClient` recycles payload buffers through an `Arc` pool.
+//! After one warm-up mini-batch, [`run_minibatch`] performs **zero heap
+//! allocations** per micro-batch on the native backend (enforced by
+//! `tests/alloc_steady_state.rs` with a counting allocator).
+//!
+//! **Engine execution (§Perf L2):** per-engine compute state — model
+//! and gradient slices, one `Compute` per engine, the per-engine
+//! forward buffer — lives in the [`EngineRunner`], not here. The
+//! pipeline drives it through three calls per micro-batch lifecycle:
+//! `forward` (PA = ordered engine fan-in), `backward` (plane replay
+//! against the decoded FA, gradients accumulated engine-locally), and
+//! `update` at the mini-batch boundary. With `engine_threads > 1` those
+//! calls dispatch to the runner's persistent thread pool over
+//! preallocated Condvar/epoch job slots (see `engine::runner`), so
+//! engine parallelism costs no steady-state allocation and changes no
+//! numerics (ordered fan-in keeps f32 sums bit-identical).
 
 use crate::data::partition::{vertical, VerticalShard};
 use crate::data::quantize::{pack_rows, PackedBatch, LANE};
-use crate::engine::Compute;
+use crate::engine::EngineRunner;
 use crate::glm::Loss;
 use crate::net::Transport;
 use crate::protocol::{decode_activations_into, encode_activations_into};
@@ -112,6 +123,9 @@ impl PreparedShard {
 }
 
 /// Mutable training state of one worker: per-engine model and gradient.
+/// Owned by the [`EngineRunner`] during training (serial mode keeps it
+/// whole; pool mode moves each engine's slices onto that engine's
+/// thread); used directly only by the reference oracle and tests.
 #[derive(Debug, Clone)]
 pub struct WorkerState {
     pub x: Vec<Vec<f32>>,
@@ -152,8 +166,6 @@ pub struct PipelineStats {
 pub struct PipelineScratch {
     /// Engine-summed partial activations (MB wide).
     pa: Vec<f32>,
-    /// Single engine's forward output (MB wide).
-    pa_e: Vec<f32>,
     /// Fixed-point wire payload (MB wide).
     payload: Vec<i32>,
     /// Decoded full activations (MB wide).
@@ -169,13 +181,12 @@ impl PipelineScratch {
     }
 }
 
-/// Apply one FA event: decode, loss, plane-replay backward.
+/// Apply one FA event: decode, then loss + plane-replay backward on the
+/// runner (fanned out across engine threads when the pool is active).
 #[allow(clippy::too_many_arguments)]
 fn on_event(
     ev: Event,
-    prep: &PreparedShard,
-    state: &mut WorkerState,
-    compute: &mut dyn Compute,
+    runner: &mut EngineRunner,
     pending: &mut Vec<(u16, usize)>,
     fa_buf: &mut Vec<f32>,
     loss: Loss,
@@ -187,21 +198,19 @@ fn on_event(
     let Some(pos) = pending.iter().position(|(s, _)| *s == seq) else { return };
     let (_, idx) = pending.swap_remove(pos);
     decode_activations_into(&payload, fa_buf);
-    let m = &prep.micro[idx];
-    *loss_sum += compute.loss_sum(fa_buf, &m.y, loss);
-    for (ed, ge) in m.per_engine.iter().zip(&mut state.g) {
-        compute.backward_acc_planes(ed, fa_buf, &m.y, ge, lr, loss);
-    }
+    *loss_sum += runner.backward(idx, fa_buf, lr, loss);
     *done += 1;
 }
 
 /// Run one mini-batch (micro-batches `[first, first + count)`) through
 /// the FCB pipeline. Returns the summed training loss of the mini-batch.
+///
+/// The runner enters with zeroed gradients (fresh from construction or
+/// from the previous `update`, which clears them) and leaves the same
+/// way — gradient state never leaks across mini-batches.
 #[allow(clippy::too_many_arguments)]
 pub fn run_minibatch<T: Transport>(
-    prep: &PreparedShard,
-    state: &mut WorkerState,
-    compute: &mut dyn Compute,
+    runner: &mut EngineRunner,
     agg: &mut AggClient<T>,
     first: usize,
     count: usize,
@@ -210,32 +219,22 @@ pub fn run_minibatch<T: Transport>(
     stats: &mut PipelineStats,
     scratch: &mut PipelineScratch,
 ) -> f32 {
-    let mb = prep.mb;
-    let PipelineScratch { pa, pa_e, payload, fa, pending } = scratch;
+    let mb = runner.prep().mb;
+    let PipelineScratch { pa, payload, fa, pending } = scratch;
     pa.resize(mb, 0.0);
-    pa_e.resize(mb, 0.0);
     // `fa` and `payload` size themselves inside the into-codecs (clear +
     // extend), so their capacity is warm after the first micro-batch.
     pending.clear();
     pending.reserve(count);
-    for ge in &mut state.g {
-        ge.iter_mut().for_each(|v| *v = 0.0);
-    }
     let mut loss_sum = 0.0f32;
     let mut done = 0usize;
 
     // Stage 1+2 interleaved: forward each micro-batch, ship PA, drain FAs.
     for j in 0..count {
         let idx = first + j;
-        let m = &prep.micro[idx];
-        // Forward across engines; PA is the engine-sum (paper §4.1.3).
-        pa.fill(0.0);
-        for (ed, xe) in m.per_engine.iter().zip(&state.x) {
-            compute.forward_into(ed, xe, pa_e);
-            for (p, pe) in pa.iter_mut().zip(pa_e.iter()) {
-                *p += *pe;
-            }
-        }
+        // Forward across engines; PA is the engine-sum (paper §4.1.3),
+        // fanned in over engine outputs in engine order.
+        runner.forward(idx, pa);
         encode_activations_into(pa, payload);
         // Claim a slot; pump the network while backpressured.
         let seq = loop {
@@ -243,14 +242,14 @@ pub fn run_minibatch<T: Transport>(
                 break seq;
             }
             if let Some(ev) = agg.poll(Duration::from_micros(200)) {
-                on_event(ev, prep, state, compute, pending, fa, loss, lr, &mut loss_sum, &mut done);
+                on_event(ev, runner, pending, fa, loss, lr, &mut loss_sum, &mut done);
             }
         };
         pending.push((seq, idx));
         // Opportunistic drain: overlap communication with later forwards.
         while let Some(ev) = agg.poll(Duration::ZERO) {
             let before = done;
-            on_event(ev, prep, state, compute, pending, fa, loss, lr, &mut loss_sum, &mut done);
+            on_event(ev, runner, pending, fa, loss, lr, &mut loss_sum, &mut done);
             if done > before && j + 1 < count {
                 stats.overlapped += 1;
             }
@@ -274,17 +273,16 @@ pub fn run_minibatch<T: Transport>(
             continue;
         };
         let before = done;
-        on_event(ev, prep, state, compute, pending, fa, loss, lr, &mut loss_sum, &mut done);
+        on_event(ev, runner, pending, fa, loss, lr, &mut loss_sum, &mut done);
         if done > before {
             stats.drained += 1;
         }
     }
 
-    // Model update at the mini-batch boundary (synchronous SGD preserved).
+    // Model update at the mini-batch boundary (synchronous SGD
+    // preserved); the runner zeroes its gradients for the next window.
     let inv_b = 1.0 / (count * mb) as f32;
-    for (xe, ge) in state.x.iter_mut().zip(&state.g) {
-        compute.update(xe, ge, inv_b);
-    }
+    runner.update(inv_b);
     loss_sum
 }
 
@@ -293,7 +291,7 @@ mod tests {
     use super::*;
     use crate::data::partition::shard_vertical;
     use crate::data::synth;
-    use crate::engine::NativeCompute;
+    use crate::engine::{Compute, NativeCompute};
 
     fn shard(d: usize, n: usize) -> VerticalShard {
         let ds = synth::separable(n, d, Loss::LogReg, 0.0, 11);

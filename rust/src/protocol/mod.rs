@@ -96,8 +96,8 @@ impl Packet {
         }
     }
 
-    /// Decode from wire bytes; rejects bad magic / truncated frames.
-    pub fn decode(buf: &[u8]) -> Result<Packet> {
+    /// Validate the fixed header; returns `(flags, seq, bm, len)`.
+    fn parse_header(buf: &[u8]) -> Result<(u8, u16, u32, usize)> {
         if buf.len() < HEADER_BYTES {
             bail!("short packet: {} bytes", buf.len());
         }
@@ -112,18 +112,102 @@ impl Packet {
         if buf.len() != HEADER_BYTES + 4 * len {
             bail!("length mismatch: header says {len} words, frame has {} bytes", buf.len());
         }
-        let payload: Arc<[i32]> = (0..len)
-            .map(|k| {
-                let o = HEADER_BYTES + 4 * k;
-                i32::from_le_bytes([buf[o], buf[o + 1], buf[o + 2], buf[o + 3]])
-            })
-            .collect();
+        Ok((flags, seq, bm, len))
+    }
+
+    /// Payload word `k` of a validated frame.
+    #[inline]
+    fn wire_word(buf: &[u8], k: usize) -> i32 {
+        let o = HEADER_BYTES + 4 * k;
+        i32::from_le_bytes([buf[o], buf[o + 1], buf[o + 2], buf[o + 3]])
+    }
+
+    /// Decode from wire bytes; rejects bad magic / truncated frames.
+    /// Allocates a fresh payload — steady-state receivers should prefer
+    /// [`Packet::decode_with`] and a [`PayloadPool`].
+    pub fn decode(buf: &[u8]) -> Result<Packet> {
+        let (flags, seq, bm, len) = Self::parse_header(buf)?;
+        let payload: Arc<[i32]> = if len == 0 {
+            empty_payload()
+        } else {
+            (0..len).map(|k| Self::wire_word(buf, k)).collect()
+        };
+        Ok(Packet { is_agg: flags & 1 != 0, acked: flags & 2 != 0, seq, bm, payload })
+    }
+
+    /// [`Packet::decode`] drawing the payload buffer from `pool`: once
+    /// the pool is warm and earlier payloads have been dropped by their
+    /// consumers, decoding is allocation-free (the UDP transport's
+    /// mirror of the `SimNet` shared-`Arc` payload discipline).
+    pub fn decode_with(buf: &[u8], pool: &mut PayloadPool) -> Result<Packet> {
+        let (flags, seq, bm, len) = Self::parse_header(buf)?;
+        let payload = pool.take(len, |k| Self::wire_word(buf, k));
         Ok(Packet { is_agg: flags & 1 != 0, acked: flags & 2 != 0, seq, bm, payload })
     }
 
     /// Total wire size in bytes.
     pub fn wire_bytes(&self) -> usize {
         HEADER_BYTES + 4 * self.payload.len()
+    }
+}
+
+/// A small pool of decode payload buffers. The pool *retains* one
+/// reference to every buffer it has handed out; a buffer becomes
+/// rewritable again as soon as the consumer drops its clone (checked
+/// via `Arc::get_mut`, the same discipline as `AggClient`'s send-side
+/// pool). Receivers that drop payloads before the next receive — the
+/// pipeline does — therefore decode with zero steady-state allocations.
+#[derive(Debug, Default)]
+pub struct PayloadPool {
+    bufs: Vec<Arc<[i32]>>,
+}
+
+impl PayloadPool {
+    /// Retained buffers cap; beyond it, misses simply allocate (a pool
+    /// this size covers every in-flight payload of a worker's window).
+    pub const MAX_BUFS: usize = 32;
+
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of retained buffers (diagnostics).
+    pub fn len(&self) -> usize {
+        self.bufs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bufs.is_empty()
+    }
+
+    /// An `Arc` of `len` words filled from `word(k)`: a pooled buffer
+    /// of the right length when one is exclusively ours, else a fresh
+    /// allocation (retained for next time while under the cap).
+    fn take<F: Fn(usize) -> i32>(&mut self, len: usize, word: F) -> Arc<[i32]> {
+        if len == 0 {
+            return empty_payload();
+        }
+        for buf in self.bufs.iter_mut() {
+            if buf.len() != len {
+                continue;
+            }
+            if let Some(dst) = Arc::get_mut(buf) {
+                for (k, d) in dst.iter_mut().enumerate() {
+                    *d = word(k);
+                }
+                return buf.clone();
+            }
+            // still shared by a lagging consumer — leave it pooled
+        }
+        let fresh: Arc<[i32]> = (0..len).map(word).collect();
+        if self.bufs.len() < Self::MAX_BUFS {
+            self.bufs.push(fresh.clone());
+        } else if let Some(stale) = self.bufs.iter_mut().find(|b| b.len() != len) {
+            // Full of other-length buffers (payload size changed):
+            // evict one so the pool adapts instead of missing forever.
+            *stale = fresh.clone();
+        }
+        fresh
     }
 }
 
@@ -235,6 +319,72 @@ mod tests {
         assert_eq!(wire.capacity(), cap);
         decode_activations_into(&wire, &mut back);
         assert_eq!(back, vec![0.5, 0.75]);
+    }
+
+    #[test]
+    fn pooled_decode_reuses_buffer_after_consumer_drops() {
+        let mut wire = Vec::new();
+        Packet::pa(1, 0, vec![10, 20, 30]).encode(&mut wire);
+        let mut pool = PayloadPool::new();
+        let first = Packet::decode_with(&wire, &mut pool).unwrap();
+        assert_eq!(first.payload[..], [10, 20, 30]);
+        let ptr = first.payload.as_ptr();
+        drop(first);
+        let mut wire2 = Vec::new();
+        Packet::pa(2, 1, vec![-1, -2, -3]).encode(&mut wire2);
+        let second = Packet::decode_with(&wire2, &mut pool).unwrap();
+        assert_eq!(second.payload[..], [-1, -2, -3]);
+        assert_eq!(second.payload.as_ptr(), ptr, "pool must reuse the dropped buffer");
+        assert_eq!(pool.len(), 1);
+    }
+
+    #[test]
+    fn pooled_decode_never_overwrites_a_held_payload() {
+        let mut wire = Vec::new();
+        Packet::pa(1, 0, vec![10, 20]).encode(&mut wire);
+        let mut pool = PayloadPool::new();
+        let held = Packet::decode_with(&wire, &mut pool).unwrap();
+        let mut wire2 = Vec::new();
+        Packet::pa(2, 1, vec![7, 8]).encode(&mut wire2);
+        let second = Packet::decode_with(&wire2, &mut pool).unwrap();
+        assert_eq!(held.payload[..], [10, 20], "held payload untouched");
+        assert_eq!(second.payload[..], [7, 8]);
+        assert!(!Arc::ptr_eq(&held.payload, &second.payload));
+    }
+
+    #[test]
+    fn pooled_decode_adapts_when_full_of_other_lengths() {
+        // A pool saturated with one payload length must not miss
+        // forever when the wire switches lengths: a miss at capacity
+        // evicts a stale-length slot (held clones stay alive).
+        let mut pool = PayloadPool::new();
+        let mut wire = Vec::new();
+        let mut held = Vec::new();
+        for i in 0..PayloadPool::MAX_BUFS as u16 {
+            Packet::pa(i, 0, vec![1, 2]).encode(&mut wire);
+            held.push(Packet::decode_with(&wire, &mut pool).unwrap());
+        }
+        assert_eq!(pool.len(), PayloadPool::MAX_BUFS);
+        Packet::pa(99, 0, vec![7, 8, 9]).encode(&mut wire);
+        let first = Packet::decode_with(&wire, &mut pool).unwrap();
+        let ptr = first.payload.as_ptr();
+        drop(first);
+        let second = Packet::decode_with(&wire, &mut pool).unwrap();
+        assert_eq!(second.payload[..], [7, 8, 9]);
+        assert_eq!(second.payload.as_ptr(), ptr, "pool must evict a stale-length slot");
+        for (i, p) in held.iter().enumerate() {
+            assert_eq!(p.payload[..], [1, 2], "held payload {i} untouched");
+        }
+    }
+
+    #[test]
+    fn pooled_decode_of_empty_payload_uses_shared_empty() {
+        let mut wire = Vec::new();
+        Packet::ack(3, 1).encode(&mut wire);
+        let mut pool = PayloadPool::new();
+        let pkt = Packet::decode_with(&wire, &mut pool).unwrap();
+        assert!(Arc::ptr_eq(&pkt.payload, &empty_payload()));
+        assert!(pool.is_empty(), "ACKs must not occupy pool slots");
     }
 
     #[test]

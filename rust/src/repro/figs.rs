@@ -22,7 +22,7 @@ use crate::worker::AggClient;
 use anyhow::Result;
 use std::time::Duration;
 
-fn native(_w: usize) -> Box<dyn Compute> {
+fn native(_w: usize, _e: usize) -> Box<dyn Compute> {
     Box::new(NativeCompute)
 }
 

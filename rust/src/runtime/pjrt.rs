@@ -23,6 +23,17 @@ pub struct Runtime {
     cache: HashMap<(Kind, usize, usize, String), xla::PjRtLoadedExecutable>,
 }
 
+// SAFETY: `Compute` (and therefore `PjrtCompute`, which owns a
+// `Runtime`) carries a `Send` bound so engine instances can be *moved*
+// onto their pool thread at construction (`engine::runner`). The xla
+// bindings wrap C++ shared_ptrs behind raw pointers and so don't derive
+// `Send`, but the PJRT C API client and loaded executables are
+// documented thread-safe, and this crate never shares a `Runtime`
+// across threads — each instance is owned and driven by exactly one
+// engine thread for its whole life. If a future xla upgrade makes these
+// types `Send` natively, delete this impl.
+unsafe impl Send for Runtime {}
+
 impl Runtime {
     /// Load the manifest under `dir` and connect the CPU PJRT client.
     pub fn load(dir: &Path) -> Result<Runtime> {

@@ -17,24 +17,50 @@
 //! Aggregation is wrapping i32 addition — exactly what the Tofino ALUs
 //! do.
 //!
-//! The FA multicast allocates one fresh payload buffer per completion
-//! and shares it (`Arc`) across all `M` worker sends — the PA packet's
-//! buffer may still be referenced by its sender, so it is never written
-//! through.
+//! The FA multicast is shared (`Arc`) across all `M` worker sends — the
+//! PA packet's buffer may still be referenced by its sender, so it is
+//! never written through. Each slot keeps a **pair** of FA buffers and
+//! alternates between them per round (§Perf L1): the off buffer from
+//! two rounds ago is normally exclusively the switch's again
+//! (`Arc::get_mut`) and is rewritten in place, so the switch thread
+//! stops allocating one fresh buffer per completed round; a fresh
+//! allocation happens only on each slot's first two rounds, or when a
+//! lagging holder (a not-yet-delivered multicast copy) still pins the
+//! buffer. The pair also guarantees a still-in-flight FA from round
+//! `r-1` is never overwritten by round `r`'s completion.
 
 use super::{Action, AggServer};
 use crate::net::NodeId;
-use crate::protocol::Packet;
+use crate::protocol::{empty_payload, Packet};
 use std::sync::Arc;
 
 /// Per-slot register state.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 struct Slot {
     agg: Vec<i32>,
     agg_count: u32,
     agg_bm: u32,
     ack_count: u32,
     ack_bm: u32,
+    /// Alternating FA multicast buffers (see module docs); start as the
+    /// shared empty payload and are sized lazily on first completion.
+    fa: [Arc<[i32]>; 2],
+    /// Which of `fa` holds the current round's FA.
+    fa_cur: u8,
+}
+
+impl Default for Slot {
+    fn default() -> Self {
+        Self {
+            agg: Vec::new(),
+            agg_count: 0,
+            agg_bm: 0,
+            ack_count: 0,
+            ack_bm: 0,
+            fa: [empty_payload(), empty_payload()],
+            fa_cur: 0,
+        }
+    }
 }
 
 /// Observability counters (tests + reports).
@@ -46,6 +72,9 @@ pub struct SwitchStats {
     pub dup_ack: u64,
     pub fa_multicasts: u64,
     pub confirm_multicasts: u64,
+    /// FA buffer allocations (pair warm-up + lagging-holder fallbacks);
+    /// stays flat in steady state.
+    pub fa_alloc: u64,
 }
 
 /// The P4 switch state machine (Algorithm 2).
@@ -110,18 +139,33 @@ impl AggServer for P4Switch {
                     *a = a.wrapping_add(p);
                 }
                 if slot.agg_bm == full {
-                    // Aggregation complete: open the ACK round.
+                    // Aggregation complete: open the ACK round and
+                    // stage the FA in the off buffer of the pair (the
+                    // current one may still be multicast-in-flight from
+                    // the previous round on this slot).
                     slot.ack_count = 0;
                     slot.ack_bm = 0;
+                    slot.fa_cur ^= 1;
+                    let buf = &mut slot.fa[slot.fa_cur as usize];
+                    match Arc::get_mut(buf) {
+                        Some(dst) if dst.len() == slot.agg.len() => {
+                            dst.copy_from_slice(&slot.agg);
+                        }
+                        _ => {
+                            *buf = Arc::from(slot.agg.as_slice());
+                            self.stats.fa_alloc += 1;
+                        }
+                    }
                 }
             } else {
                 self.stats.dup_agg += 1;
             }
             // Alg. 2 lines 12-15: complete (incl. on retransmissions) =>
-            // multicast FA to every worker.
+            // multicast FA to every worker. Retransmissions re-share the
+            // already-staged buffer — its contents are this round's FA.
             if slot.agg_bm == full {
                 let mut out = pkt.clone();
-                out.payload = Arc::from(slot.agg.as_slice());
+                out.payload = slot.fa[slot.fa_cur as usize].clone();
                 out.acked = true;
                 self.stats.fa_multicasts += 1;
                 return vec![Action::Multicast(out)];
@@ -231,6 +275,48 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn fa_buffer_pair_absorbs_steady_state_rounds() {
+        // Dropping each round's FA before the next completes (the
+        // steady-state pattern) must keep the switch thread down to the
+        // pair's two warm-up allocations.
+        let mut sw = P4Switch::new(1, 2, 2);
+        for round in 0..6 {
+            assert!(drive(&mut sw, pa(0, 0, &[round, 1])).is_empty());
+            let acts = drive(&mut sw, pa(0, 1, &[1, round]));
+            match &acts[0] {
+                Action::Multicast(out) => assert_eq!(out.payload[..], [round + 1, round + 1]),
+                other => panic!("{other:?}"),
+            }
+            drop(acts);
+            drive(&mut sw, Packet::ack(0, 0));
+            drive(&mut sw, Packet::ack(0, 1)); // clears the slot
+        }
+        assert_eq!(sw.stats.fa_alloc, 2, "pair warm-up only");
+    }
+
+    #[test]
+    fn held_fa_from_previous_round_is_never_overwritten() {
+        // A multicast copy still in flight when the next round on the
+        // same slot completes must keep its contents: the pair flips to
+        // the other buffer (or falls back to a fresh allocation).
+        let mut sw = P4Switch::new(1, 1, 1); // 1 worker: PA completes instantly
+        let a1 = drive(&mut sw, pa(0, 0, &[5]));
+        let Action::Multicast(m1) = &a1[0] else { panic!("{a1:?}") };
+        drive(&mut sw, Packet::ack(0, 0)); // clear for round 2
+        let a2 = drive(&mut sw, pa(0, 0, &[7]));
+        let Action::Multicast(m2) = &a2[0] else { panic!("{a2:?}") };
+        assert_eq!(m1.payload[..], [5], "in-flight FA untouched");
+        assert_eq!(m2.payload[..], [7]);
+        // round 3 while BOTH previous FAs are still held: fallback path
+        drive(&mut sw, Packet::ack(0, 0));
+        let a3 = drive(&mut sw, pa(0, 0, &[9]));
+        let Action::Multicast(m3) = &a3[0] else { panic!("{a3:?}") };
+        assert_eq!(m1.payload[..], [5]);
+        assert_eq!(m2.payload[..], [7]);
+        assert_eq!(m3.payload[..], [9]);
     }
 
     #[test]

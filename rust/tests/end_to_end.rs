@@ -8,7 +8,7 @@ use p4sgd::data::synth;
 use p4sgd::engine::{Compute, NativeCompute};
 use p4sgd::glm::Loss;
 
-fn native(_w: usize) -> Box<dyn Compute> {
+fn native(_w: usize, _e: usize) -> Box<dyn Compute> {
     Box::new(NativeCompute)
 }
 
@@ -85,6 +85,49 @@ fn dp_and_mp_share_the_statistical_trajectory() {
 }
 
 #[test]
+fn engine_thread_pool_matches_serial_runner() {
+    // The tentpole invariant: engine_threads ∈ {1, 2, N} is pure
+    // throughput — loss curves and models agree with the serial runner
+    // to the same fixed-point wire tolerance as repeated serial runs.
+    let ds = synth::separable_sparse(192, 384, Loss::LogReg, 0.0, 0.15, 67);
+    let mut cfg = base_cfg(2, Loss::LogReg, 1.0);
+    cfg.cluster.engines = 4;
+    let serial = mp::train_mp(&cfg, &ds, &native);
+    for threads in [2usize, 4] {
+        cfg.cluster.engine_threads = threads;
+        let pooled = mp::train_mp(&cfg, &ds, &native);
+        for (e, (a, b)) in serial.loss_per_epoch.iter().zip(&pooled.loss_per_epoch).enumerate() {
+            assert!(
+                (a - b).abs() < 2e-3 * a.abs().max(1.0),
+                "threads={threads} epoch {e}: {a} vs {b}"
+            );
+        }
+        for (a, b) in serial.model.iter().zip(&pooled.model) {
+            assert!((a - b).abs() < 5e-3, "threads={threads}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn engine_thread_pool_survives_hostile_network() {
+    // Pool dispatch sits under the same retransmission machinery; loss,
+    // duplication, and reordering must not perturb the numbers.
+    let ds = synth::separable_sparse(128, 256, Loss::LogReg, 0.0, 0.2, 71);
+    let mut cfg = base_cfg(2, Loss::LogReg, 1.0);
+    cfg.cluster.engines = 4;
+    cfg.cluster.engine_threads = 4;
+    let clean = mp::train_mp(&cfg, &ds, &native);
+    cfg.net.drop_prob = 0.08;
+    cfg.net.dup_prob = 0.05;
+    cfg.net.timeout_us = 300;
+    let hostile = mp::train_mp(&cfg, &ds, &native);
+    assert!(hostile.agg.retransmits > 0);
+    for (a, b) in clean.loss_per_epoch.iter().zip(&hostile.loss_per_epoch) {
+        assert!((a - b).abs() < 1e-4 * a.abs().max(1.0), "{a} vs {b}");
+    }
+}
+
+#[test]
 fn pjrt_backend_trains_end_to_end() {
     if p4sgd::runtime::Runtime::load_default().is_err() {
         eprintln!("SKIP: artifacts unavailable");
@@ -93,7 +136,7 @@ fn pjrt_backend_trains_end_to_end() {
     let ds = synth::separable_sparse(64, 128, Loss::LogReg, 0.0, 0.3, 47);
     let mut cfg = base_cfg(2, Loss::LogReg, 1.0);
     cfg.train.epochs = 2;
-    let make = |_w: usize| -> Box<dyn Compute> {
+    let make = |_w: usize, _e: usize| -> Box<dyn Compute> {
         Box::new(p4sgd::runtime::PjrtCompute::load_default().expect("pjrt"))
     };
     let pjrt_rep = mp::train_mp(&cfg, &ds, &make);

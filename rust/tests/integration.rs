@@ -173,7 +173,7 @@ fn config_file_drives_training() {
     )
     .unwrap();
     let ds = synth::separable(128, 64, Loss::LogReg, 0.0, 17);
-    let make = |_w: usize| -> Box<dyn Compute> { Box::new(NativeCompute) };
+    let make = |_w: usize, _e: usize| -> Box<dyn Compute> { Box::new(NativeCompute) };
     let rep = p4sgd::coordinator::mp::train_mp(&cfg, &ds, &make);
     assert_eq!(rep.loss_per_epoch.len(), 2);
     assert_eq!(rep.model.len(), 64);
