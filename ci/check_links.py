@@ -1,0 +1,66 @@
+#!/usr/bin/env python3
+"""Link-check markdown files: every relative link target must exist.
+
+Usage: check_links.py FILE.md [FILE.md ...]
+
+Checks inline links/images (``[text](target)``) whose targets are
+relative paths, resolving them against the file's directory and the
+repo root (so ``docs/ARCHITECTURE.md`` can say ``README.md``). External
+(``http(s)``/``mailto``) links are only syntax-checked — CI stays
+offline. Pure-anchor links (``#section``) are accepted. Exits non-zero
+listing every broken link.
+"""
+
+import os
+import re
+import sys
+
+# [text](target) — target up to the first unescaped ')'; ignores code
+# spans by stripping backtick runs first.
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+CODE_SPAN_RE = re.compile(r"`[^`]*`")
+FENCE_RE = re.compile(r"^\s*(```|~~~)")
+
+
+def targets(path: str):
+    in_fence = False
+    with open(path, encoding="utf-8") as fh:
+        for lineno, line in enumerate(fh, 1):
+            if FENCE_RE.match(line):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            for match in LINK_RE.finditer(CODE_SPAN_RE.sub("``", line)):
+                yield lineno, match.group(1)
+
+
+def main(files):
+    repo_root = os.path.dirname(os.path.abspath(os.path.dirname(__file__)))
+    broken = []
+    checked = 0
+    for md in files:
+        base = os.path.dirname(os.path.abspath(md))
+        for lineno, target in targets(md):
+            checked += 1
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue  # offline CI: syntax only
+            if target.startswith("#"):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            candidates = [os.path.join(base, rel), os.path.join(repo_root, rel)]
+            if not any(os.path.exists(c) for c in candidates):
+                broken.append(f"{md}:{lineno}: broken link -> {target}")
+    for line in broken:
+        print(line, file=sys.stderr)
+    print(f"checked {checked} links in {len(files)} files, {len(broken)} broken")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    if len(sys.argv) < 2:
+        print(__doc__, file=sys.stderr)
+        sys.exit(2)
+    sys.exit(main(sys.argv[1:]))

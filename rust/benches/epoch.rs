@@ -60,6 +60,34 @@ fn main() {
         json.push(&r, &[("samples_per_s", sps), ("engine_threads", threads as f64)]);
     }
 
+    // forward–communication–backward overlap axis: depth 1 runs rounds
+    // synchronously (engines idle through the FA drain), depth 2 defers
+    // each round's backward+update into the next round's call. Network
+    // latency makes the drain window the cost that depth 2 hides, so
+    // depth2/depth1 samples_per_s is the overlap win under latency.
+    let overlap_ds = synth::table2_like("rcv1", 512, 2048, Loss::LogReg, 7);
+    for depth in [1usize, 2] {
+        let mut cfg = SystemConfig::default();
+        cfg.cluster.workers = 2;
+        cfg.cluster.engines = 2;
+        cfg.cluster.engine_threads = 2;
+        cfg.cluster.pipeline_depth = depth;
+        cfg.cluster.slots = 16;
+        cfg.train.epochs = 1;
+        cfg.train.batch = 64;
+        cfg.train.lr = 1.0;
+        cfg.train.loss = Loss::LogReg;
+        cfg.net.latency_ns = 20_000;
+        cfg.net.timeout_us = 3000;
+        let bcfg = Config { warmup_iters: 1, samples: 5, iters_per_sample: 1 };
+        let r = run(&format!("functional_mp_epoch_512x2048_w2_depth{depth}"), bcfg, || {
+            mp::train_mp(&cfg, &overlap_ds, &make)
+        });
+        let sps = overlap_ds.n as f64 / r.summary.mean;
+        println!("  -> {sps:.1} samples/s at pipeline_depth={depth}");
+        json.push(&r, &[("samples_per_s", sps), ("pipeline_depth", depth as f64)]);
+    }
+
     // DES: how fast the simulator regenerates a full figure's series
     let des_cfg = Config { warmup_iters: 5, samples: 30, iters_per_sample: 10 };
     let r = run("des_fig13_full_series", des_cfg, || {

@@ -41,6 +41,14 @@ pub struct ClusterConfig {
     /// thread pool (clamped to the engine count). A pure throughput
     /// knob: numerics are invariant (see `engine::runner`).
     pub engine_threads: usize,
+    /// Forward–communication–backward overlap depth: 1 (default) runs
+    /// mini-batch rounds synchronously — bit-compatible with the
+    /// pre-overlap pipeline — while 2 defers each round's
+    /// backward+update into the next round's call, draining the network
+    /// while the engines run backward. Depth 2 trades one round of
+    /// model staleness (bounded: epoch boundaries flush) for hiding
+    /// aggregation latency behind compute (see `pipeline`).
+    pub pipeline_depth: usize,
     /// Per-worker in-flight window (max outstanding aggregation
     /// operations). The switch itself always provisions the paper's
     /// full 64K-slot seq space.
@@ -49,7 +57,7 @@ pub struct ClusterConfig {
 
 impl Default for ClusterConfig {
     fn default() -> Self {
-        Self { workers: 4, engines: 8, engine_threads: 1, slots: 64 }
+        Self { workers: 4, engines: 8, engine_threads: 1, pipeline_depth: 1, slots: 64 }
     }
 }
 
@@ -122,6 +130,7 @@ impl SystemConfig {
             "cluster.workers",
             "cluster.engines",
             "cluster.engine_threads",
+            "cluster.pipeline_depth",
             "cluster.slots",
             "train.loss",
             "train.lr",
@@ -150,6 +159,9 @@ impl SystemConfig {
                 engines: doc.int_or("cluster.engines", d.cluster.engines as i64) as usize,
                 engine_threads: doc
                     .int_or("cluster.engine_threads", d.cluster.engine_threads as i64)
+                    as usize,
+                pipeline_depth: doc
+                    .int_or("cluster.pipeline_depth", d.cluster.pipeline_depth as i64)
                     as usize,
                 slots: doc.int_or("cluster.slots", d.cluster.slots as i64) as usize,
             },
@@ -199,6 +211,12 @@ impl SystemConfig {
         }
         if c.engine_threads == 0 || c.engine_threads > 8 {
             bail!("engine_threads must be in 1..=8 (one thread per engine max), got {}", c.engine_threads);
+        }
+        if !(1..=2).contains(&c.pipeline_depth) {
+            bail!(
+                "pipeline_depth must be 1 (synchronous) or 2 (one-round overlap), got {}",
+                c.pipeline_depth
+            );
         }
         if c.slots < 2 {
             bail!("need at least 2 aggregation slots, got {}", c.slots);
@@ -288,6 +306,19 @@ mod tests {
         bad.cluster.engine_threads = 0;
         assert!(bad.validate().is_err());
         bad.cluster.engine_threads = 9;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn pipeline_depth_parsed_and_bounded() {
+        let cfg = SystemConfig::from_toml("[cluster]\npipeline_depth = 2").unwrap();
+        assert_eq!(cfg.cluster.pipeline_depth, 2);
+        // unspecified -> synchronous default
+        assert_eq!(SystemConfig::default().cluster.pipeline_depth, 1);
+        let mut bad = SystemConfig::default();
+        bad.cluster.pipeline_depth = 0;
+        assert!(bad.validate().is_err());
+        bad.cluster.pipeline_depth = 3;
         assert!(bad.validate().is_err());
     }
 

@@ -7,6 +7,15 @@
 //! in fixed-size chunks — the communication pattern whose cost grows
 //! with D instead of B, which is exactly why the paper argues for model
 //! parallelism on GLMs.
+//!
+//! With `cluster.pipeline_depth = 2` the DP worker overlaps too: batch
+//! *k*'s gradient chunks fly through the switch while batch *k+1*'s
+//! local forward/backward computes against the (one-update-stale)
+//! model; the reduce is finished — and the update applied — only when
+//! batch *k+1*'s compute is done. The in-flight reduce is flushed at
+//! every epoch boundary, both to bound staleness and because the
+//! epoch-loss AllReduce shares the seq stream and would otherwise
+//! swallow the gradient FAs.
 
 use super::TrainReport;
 use crate::config::SystemConfig;
@@ -34,6 +43,7 @@ struct WorkerResult {
     worker: usize,
     model: Vec<f32>,
     loss_curve: Vec<f32>,
+    pipeline: PipelineStats,
     agg: AggStats,
 }
 
@@ -96,20 +106,77 @@ pub fn train_dp(
                 let micro_per_batch = local_b / mb;
                 let batches = n_micro / micro_per_batch;
                 let mut fa = vec![0.0f32; mb];
+                // Depth-2 overlap state: the gradient being AllReduced
+                // while the next batch computes, plus reduce bookkeeping.
+                let depth = cfg.cluster.pipeline_depth;
+                let mut g_fly = vec![0.0f32; d_pad];
+                let mut reduce = GradReduce::default();
+                let mut chunk_buf = vec![0i32; GRAD_CHUNK];
+                let mut in_fly = false;
+                let inv_b = 1.0 / t.batch as f32;
+                let mut pstats = PipelineStats::default();
                 for _ in 0..t.epochs {
                     let mut epoch_loss = 0.0f32;
                     for b in 0..batches {
+                        let retrans_mark = agg.stats.retransmits;
                         g.iter_mut().for_each(|v| *v = 0.0);
-                        // local forward+backward (no inter-worker dependency)
+                        // Local forward+backward (no inter-worker
+                        // dependency); at depth 2 the model is one update
+                        // stale while the previous batch's gradient is
+                        // still in the switch.
                         for j in 0..micro_per_batch {
                             let (pb, y) = &packed[b * micro_per_batch + j];
                             compute.forward_into(pb, &x, &mut fa);
                             epoch_loss += compute.loss_sum(&fa, y, t.loss);
                             compute.backward_acc_planes(pb, &fa, y, &mut g, t.lr, t.loss);
+                            // Keep the in-flight reduce moving between
+                            // micro-batches: completed chunks free window
+                            // slots for the unsent tail, so overlap isn't
+                            // capped at slots*GRAD_CHUNK elements when
+                            // D is large (the regime DP suffers in).
+                            if in_fly {
+                                while pump_reduce(
+                                    &mut agg,
+                                    &mut g_fly,
+                                    &mut reduce,
+                                    &mut chunk_buf,
+                                    Duration::ZERO,
+                                ) {}
+                            }
                         }
-                        // AllReduce the gradient in chunks through the switch.
-                        allreduce_grad(&mut agg, &mut g);
-                        compute.update(&mut x, &g, 1.0 / t.batch as f32);
+                        if depth >= 2 {
+                            // Retire batch b-1: its chunks had this whole
+                            // batch's compute to fly through the switch.
+                            if in_fly {
+                                finish_reduce(&mut agg, &mut g_fly, &mut reduce, &mut chunk_buf);
+                                compute.update(&mut x, &g_fly, inv_b);
+                                pstats.deferred_rounds += 1;
+                            }
+                            // Launch batch b's reduce and let it fly while
+                            // batch b+1 computes.
+                            std::mem::swap(&mut g, &mut g_fly);
+                            start_reduce(&mut agg, &mut g_fly, &mut reduce, &mut chunk_buf);
+                            in_fly = true;
+                        } else {
+                            // AllReduce the gradient in chunks through the
+                            // switch, then step.
+                            allreduce_grad(&mut agg, &mut g);
+                            compute.update(&mut x, &g, inv_b);
+                        }
+                        pstats.net.observe_round(agg.stats.retransmits - retrans_mark);
+                    }
+                    // Epoch boundary, observed as one more net round so
+                    // the per-round deltas keep partitioning the
+                    // cumulative retransmit counter exactly.
+                    let boundary_mark = agg.stats.retransmits;
+                    // Final-round flush, before anything else shares the
+                    // seq stream: the epoch-loss AllReduce below would
+                    // otherwise consume — and drop — the in-flight FAs.
+                    if in_fly {
+                        finish_reduce(&mut agg, &mut g_fly, &mut reduce, &mut chunk_buf);
+                        compute.update(&mut x, &g_fly, inv_b);
+                        pstats.deferred_rounds += 1;
+                        in_fly = false;
                     }
                     // AllReduce the epoch loss so every worker logs the
                     // global value (one extra chunk round).
@@ -117,11 +184,13 @@ pub fn train_dp(
                     lbuf[0] = epoch_loss;
                     allreduce_grad(&mut agg, &mut lbuf);
                     loss_curve.push(lbuf[0]);
+                    pstats.net.observe_round(agg.stats.retransmits - boundary_mark);
                 }
                 let _ = res_tx.send(WorkerResult {
                     worker: w,
                     model: x[..ds.d].to_vec(),
                     loss_curve,
+                    pipeline: pstats,
                     agg: agg.stats,
                 });
             });
@@ -134,54 +203,113 @@ pub fn train_dp(
     assert_eq!(results.len(), m);
     results.sort_by_key(|r| r.worker);
     let mut agg = AggStats::default();
+    let mut pipeline = PipelineStats::default();
     for r in &results {
         super::merge_agg(&mut agg, &r.agg);
+        pipeline.merge(&r.pipeline);
     }
     TrainReport {
         loss_per_epoch: results[0].loss_curve.clone(),
         wall: start.elapsed(),
         model: results[0].model.clone(), // replicas are identical
-        pipeline: PipelineStats::default(),
+        pipeline,
         agg,
+    }
+}
+
+/// Bookkeeping for one chunked AllReduce over a gradient buffer. The
+/// buffer stays with the caller (chunk `c` covers
+/// `buf[c * GRAD_CHUNK ..]`); sent-but-unreturned chunks are tracked by
+/// seq so the reduce can be left in flight across a batch of local
+/// compute (the depth-2 overlap) and finished later.
+#[derive(Debug, Default)]
+struct GradReduce {
+    /// seq -> chunk index for sent, unreturned chunks (≤ window).
+    inflight: Vec<(u16, usize)>,
+    sent: usize,
+    done: usize,
+    chunks: usize,
+}
+
+/// Fill the send window from `buf`, then poll once with `budget`,
+/// folding a returned FA chunk back into `buf`. Returns `false` when
+/// the budget expired without an event.
+fn pump_reduce<T: crate::net::Transport>(
+    agg: &mut AggClient<T>,
+    buf: &mut [f32],
+    st: &mut GradReduce,
+    chunk_buf: &mut [i32],
+    budget: Duration,
+) -> bool {
+    while st.sent < st.chunks {
+        let lo = st.sent * GRAD_CHUNK;
+        let hi = (lo + GRAD_CHUNK).min(buf.len());
+        chunk_buf.iter_mut().for_each(|v| *v = 0);
+        for (p, &v) in chunk_buf.iter_mut().zip(&buf[lo..hi]) {
+            *p = to_fixed(v);
+        }
+        match agg.try_send_pa(chunk_buf) {
+            Some(seq) => {
+                st.inflight.push((seq, st.sent));
+                st.sent += 1;
+            }
+            None => break,
+        }
+    }
+    match agg.poll(budget) {
+        Some(Event::Fa { seq, payload }) => {
+            if let Some(pos) = st.inflight.iter().position(|(s, _)| *s == seq) {
+                let (_, c) = st.inflight.swap_remove(pos);
+                let lo = c * GRAD_CHUNK;
+                let hi = (lo + GRAD_CHUNK).min(buf.len());
+                for (o, &v) in buf[lo..hi].iter_mut().zip(payload.iter()) {
+                    *o = from_fixed(v);
+                }
+                st.done += 1;
+            }
+            true
+        }
+        Some(_) => true,
+        None => false,
+    }
+}
+
+/// Launch an AllReduce of `buf`: reset `st`, fill the window, and drain
+/// whatever returns instantly — without blocking, so the caller can go
+/// compute the next batch while the chunks fly.
+fn start_reduce<T: crate::net::Transport>(
+    agg: &mut AggClient<T>,
+    buf: &mut [f32],
+    st: &mut GradReduce,
+    chunk_buf: &mut [i32],
+) {
+    st.inflight.clear();
+    st.sent = 0;
+    st.done = 0;
+    st.chunks = buf.len().div_ceil(GRAD_CHUNK);
+    while pump_reduce(agg, buf, st, chunk_buf, Duration::ZERO) {}
+}
+
+/// Drive an in-flight AllReduce to completion (depth 1 calls this right
+/// after [`start_reduce`]; depth 2 one batch of compute later).
+fn finish_reduce<T: crate::net::Transport>(
+    agg: &mut AggClient<T>,
+    buf: &mut [f32],
+    st: &mut GradReduce,
+    chunk_buf: &mut [i32],
+) {
+    while st.done < st.chunks {
+        pump_reduce(agg, buf, st, chunk_buf, Duration::from_millis(20));
     }
 }
 
 /// AllReduce `buf` in place, [`GRAD_CHUNK`] elements per slot, keeping
 /// up to the client's slot count in flight.
 fn allreduce_grad<T: crate::net::Transport>(agg: &mut AggClient<T>, buf: &mut [f32]) {
-    let chunks = buf.len().div_ceil(GRAD_CHUNK);
-    let mut sent = 0usize;
-    let mut done = 0usize;
-    let mut inflight: std::collections::HashMap<u16, usize> = std::collections::HashMap::new();
-    let mut payload = vec![0i32; GRAD_CHUNK];
-    while done < chunks {
-        // fill the window
-        while sent < chunks {
-            let lo = sent * GRAD_CHUNK;
-            let hi = (lo + GRAD_CHUNK).min(buf.len());
-            payload.iter_mut().for_each(|v| *v = 0);
-            for (p, &v) in payload.iter_mut().zip(&buf[lo..hi]) {
-                *p = to_fixed(v);
-            }
-            match agg.try_send_pa(&payload) {
-                Some(seq) => {
-                    inflight.insert(seq, sent);
-                    sent += 1;
-                }
-                None => break,
-            }
-        }
-        if let Some(Event::Fa { seq, payload }) = agg.poll(Duration::from_millis(20)) {
-            if let Some(c) = inflight.remove(&seq) {
-                let lo = c * GRAD_CHUNK;
-                let hi = (lo + GRAD_CHUNK).min(buf.len());
-                for (o, &v) in buf[lo..hi].iter_mut().zip(payload.iter()) {
-                    *o = from_fixed(v);
-                }
-                done += 1;
-            }
-        }
-    }
+    let mut st = GradReduce::default();
+    let mut chunk_buf = vec![0i32; GRAD_CHUNK];
+    start_reduce(agg, buf, &mut st, &mut chunk_buf);
+    finish_reduce(agg, buf, &mut st, &mut chunk_buf);
 }
 
 #[cfg(test)]
@@ -219,6 +347,31 @@ mod tests {
         let first = rep.loss_per_epoch[0];
         let last = *rep.loss_per_epoch.last().unwrap();
         assert!(last < 0.75 * first, "{:?}", rep.loss_per_epoch);
+    }
+
+    #[test]
+    fn dp_depth_two_overlap_converges() {
+        // Gradient AllReduce of batch k in flight while batch k+1
+        // computes locally: one update of staleness, flushed per epoch.
+        // Light loss keeps the retransmit machinery live so the
+        // per-round deltas can be checked against the global counter.
+        let ds = synth::separable(256, 64, Loss::LogReg, 0.0, 24);
+        let mut c = cfg(2);
+        c.cluster.pipeline_depth = 2;
+        c.train.epochs = 6;
+        c.net.drop_prob = 0.05;
+        c.net.timeout_us = 500;
+        let rep = train_dp(&c, &ds, &native);
+        assert!(rep.pipeline.deferred_rounds > 0, "depth-2 must defer updates");
+        // one observation per batch plus one per epoch boundary, and the
+        // deltas partition the cumulative retransmit counter exactly
+        let batches = (128 / (c.train.batch / 2)) as u64; // per-worker shard / local B
+        assert_eq!(rep.pipeline.net.rounds, (batches + 1) * 6 * 2);
+        assert!(rep.agg.retransmits > 0, "5% loss must retransmit");
+        assert_eq!(rep.pipeline.net.retransmits, rep.agg.retransmits);
+        let first = rep.loss_per_epoch[0];
+        let last = *rep.loss_per_epoch.last().unwrap();
+        assert!(last < 0.8 * first, "{:?}", rep.loss_per_epoch);
     }
 
     #[test]

@@ -27,8 +27,11 @@
 //! model/gradient slices (hence the `Send` bound on the trait: a
 //! backend is *moved into* its engine thread at construction, never
 //! shared), and jobs hand off through preallocated Condvar/epoch slots
-//! so the pool preserves the zero-allocation steady state. See
-//! [`runner`] for the ownership/handoff protocol.
+//! so the pool preserves the zero-allocation steady state. The backward
+//! additionally splits into non-blocking dispatch / probe / join
+//! ([`EngineRunner::dispatch_backward`] et al.) so the depth-2 pipeline
+//! can drain the network while the engines run. See [`runner`] for the
+//! ownership/handoff protocol.
 
 pub mod bitserial;
 pub mod runner;

@@ -42,6 +42,22 @@
 //! steady-state training loop stays **zero-allocation** with the pool
 //! active (enforced by `tests/alloc_steady_state.rs`).
 //!
+//! # Dispatch/join split (overlapped pipeline)
+//!
+//! The backward is also exposed in a split form for the depth-2
+//! forward–communication–backward pipeline: [`EngineRunner::dispatch_backward`]
+//! publishes the job and returns immediately (pool mode — the engines
+//! run while the worker keeps polling the transport),
+//! [`EngineRunner::backward_done`] probes completion without blocking
+//! (`try_lock`: a slot whose engine thread is mid-job holds the mutex
+//! and reads as not-done), and [`EngineRunner::join_backward`] blocks
+//! for the stragglers and returns the micro-batch loss. At most one
+//! backward may be open at a time, and every other dispatch
+//! (`forward`, `update`, `model`, `set_model`) asserts the window is
+//! closed — the slot protocol runs one job class at a time. The
+//! blocking [`EngineRunner::backward`] is exactly `dispatch` + `join`,
+//! so the split changes no numerics.
+//!
 //! # Bit-compatibility
 //!
 //! Thread count never changes the numbers. The forward fan-in adds
@@ -150,6 +166,12 @@ enum Inner {
 /// module docs for the ownership and handoff protocol.
 pub struct EngineRunner {
     inner: Inner,
+    /// A backward was dispatched and not yet joined (see the module
+    /// docs' dispatch/join split).
+    backward_open: bool,
+    /// Loss of an open serial backward (serial mode executes inline at
+    /// dispatch; the join merely reports it).
+    open_loss: f32,
 }
 
 impl EngineRunner {
@@ -165,7 +187,8 @@ impl EngineRunner {
         if threads <= 1 {
             let compute = mk(0);
             let pa_e = vec![0.0f32; prep.mb];
-            return Self { inner: Inner::Serial(Serial { prep, compute, state, pa_e }) };
+            let inner = Inner::Serial(Serial { prep, compute, state, pa_e });
+            return Self { inner, backward_open: false, open_loss: 0.0 };
         }
 
         // Contiguous near-even engine chunks keep the fan-in in global
@@ -215,7 +238,8 @@ impl EngineRunner {
             handles.push(handle);
         }
         let mb = prep.mb;
-        Self { inner: Inner::Pool(Pool { prep, slots, handles, chunks, mb }) }
+        let inner = Inner::Pool(Pool { prep, slots, handles, chunks, mb });
+        Self { inner, backward_open: false, open_loss: 0.0 }
     }
 
     /// The shard this runner executes over.
@@ -242,6 +266,7 @@ impl EngineRunner {
     /// Engine-summed PA for micro-batch `idx`, written into `pa`
     /// (`pa.len() == mb`). Fan-in is in engine order on every path.
     pub fn forward(&mut self, idx: usize, pa: &mut [f32]) {
+        assert!(!self.backward_open, "forward with an open backward — join it first");
         pa.fill(0.0);
         match &mut self.inner {
             Inner::Serial(s) => {
@@ -272,8 +297,21 @@ impl EngineRunner {
     /// Plane-replay backward for micro-batch `idx` against full
     /// activations `fa`: every engine accumulates its gradient slice.
     /// Returns the micro-batch loss sum (computed once, on engine 0's
-    /// backend).
+    /// backend). Exactly [`EngineRunner::dispatch_backward`] followed by
+    /// [`EngineRunner::join_backward`] — the synchronous special case.
     pub fn backward(&mut self, idx: usize, fa: &[f32], lr: f32, loss: Loss) -> f32 {
+        self.dispatch_backward(idx, fa, lr, loss);
+        self.join_backward()
+    }
+
+    /// Non-blocking half of the backward: publish the plane-replay job
+    /// for micro-batch `idx` to every engine thread and return while
+    /// they run (the overlapped pipeline keeps polling the transport in
+    /// the meantime). Serial mode executes inline — there is no second
+    /// thread to overlap with. Panics if a backward is already open.
+    pub fn dispatch_backward(&mut self, idx: usize, fa: &[f32], lr: f32, loss: Loss) {
+        assert!(!self.backward_open, "a backward is already open — join it first");
+        self.backward_open = true;
         match &mut self.inner {
             Inner::Serial(s) => {
                 let m = &s.prep.micro[idx];
@@ -281,7 +319,7 @@ impl EngineRunner {
                 for (ed, ge) in m.per_engine.iter().zip(&mut s.state.g) {
                     s.compute.backward_acc_planes(ed, fa, &m.y, ge, lr, loss);
                 }
-                loss_sum
+                self.open_loss = loss_sum;
             }
             Inner::Pool(p) => {
                 for t in 0..p.slots.len() {
@@ -290,6 +328,45 @@ impl EngineRunner {
                         st.fa.extend_from_slice(fa);
                     });
                 }
+            }
+        }
+    }
+
+    /// Whether a backward was dispatched and not yet joined.
+    pub fn backward_open(&self) -> bool {
+        self.backward_open
+    }
+
+    /// Non-blocking completion probe for the open backward: `true` when
+    /// [`EngineRunner::join_backward`] would not block (including when
+    /// no backward is open). A slot whose engine thread is mid-job
+    /// holds its mutex, so `try_lock` failure reads as not-done without
+    /// waiting.
+    pub fn backward_done(&self) -> bool {
+        if !self.backward_open {
+            return true;
+        }
+        match &self.inner {
+            Inner::Serial(_) => true,
+            Inner::Pool(p) => p.slots.iter().all(|slot| match slot.m.try_lock() {
+                Ok(st) => st.completed == st.epoch,
+                Err(std::sync::TryLockError::WouldBlock) => false,
+                // A poisoned slot means the engine thread died; report
+                // done so the join runs and surfaces the panic.
+                Err(std::sync::TryLockError::Poisoned(_)) => true,
+            }),
+        }
+    }
+
+    /// Blocking half of the backward: wait for every engine thread,
+    /// close the window, and return the micro-batch loss sum (engine
+    /// 0's backend). Panics if no backward is open.
+    pub fn join_backward(&mut self) -> f32 {
+        assert!(self.backward_open, "no backward is open");
+        self.backward_open = false;
+        match &mut self.inner {
+            Inner::Serial(_) => self.open_loss,
+            Inner::Pool(p) => {
                 let mut loss_sum = 0.0;
                 for t in 0..p.slots.len() {
                     let st = p.wait(t);
@@ -305,6 +382,7 @@ impl EngineRunner {
     /// Mini-batch boundary: `x -= g * inv_b`, then zero the gradients
     /// for the next accumulation window (synchronous SGD preserved).
     pub fn update(&mut self, inv_b: f32) {
+        assert!(!self.backward_open, "update with an open backward — join it first");
         match &mut self.inner {
             Inner::Serial(s) => {
                 for (xe, ge) in s.state.x.iter_mut().zip(s.state.g.iter_mut()) {
@@ -326,6 +404,7 @@ impl EngineRunner {
     /// Stitch the (unpadded) model partition back together — cold path,
     /// allocates.
     pub fn model(&mut self) -> Vec<f32> {
+        assert!(!self.backward_open, "model export with an open backward — join it first");
         match &mut self.inner {
             Inner::Serial(s) => s.state.model(&s.prep),
             Inner::Pool(p) => {
@@ -349,6 +428,7 @@ impl EngineRunner {
     /// Load a full (unpadded) worker partition into the per-engine
     /// slices — cold path, for tests and checkpoint restore.
     pub fn set_model(&mut self, x_full: &[f32]) {
+        assert!(!self.backward_open, "set_model with an open backward — join it first");
         match &mut self.inner {
             Inner::Serial(s) => {
                 for (sl, xe) in s.prep.engines.iter().zip(&mut s.state.x) {
@@ -571,6 +651,68 @@ mod tests {
         for (a, b) in ms.iter().zip(&mp) {
             assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn split_backward_is_bitwise_equal_to_blocking() {
+        // dispatch + (poll) + join must produce the same losses and
+        // model bits as the blocking call, for serial and pool runners.
+        for threads in [1usize, 2, 4] {
+            let p = prep(96, 32, 4);
+            let mut blocking = EngineRunner::new(p.clone(), &mk, threads);
+            let mut split = EngineRunner::new(p.clone(), &mk, threads);
+            let mut pa = vec![0.0f32; p.mb];
+            for idx in 0..p.micro_batches() {
+                blocking.forward(idx, &mut pa);
+                let fa = pa.clone();
+                let a = blocking.backward(idx, &fa, 0.5, Loss::LogReg);
+
+                split.forward(idx, &mut pa);
+                let fa = pa.clone();
+                assert!(!split.backward_open());
+                split.dispatch_backward(idx, &fa, 0.5, Loss::LogReg);
+                assert!(split.backward_open());
+                // Spin the non-blocking probe until the engines finish
+                // (serial mode is done immediately).
+                while !split.backward_done() {
+                    std::hint::spin_loop();
+                }
+                let b = split.join_backward();
+                assert!(!split.backward_open());
+                assert_eq!(a.to_bits(), b.to_bits(), "threads={threads} idx={idx}");
+            }
+            blocking.update(1.0 / 32.0);
+            split.update(1.0 / 32.0);
+            let ma = blocking.model();
+            let mb = split.model();
+            for (a, b) in ma.iter().zip(&mb) {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "already open")]
+    fn double_dispatch_without_join_panics() {
+        let p = prep(64, 16, 2);
+        let mut r = EngineRunner::new(p.clone(), &mk, 2);
+        let mut pa = vec![0.0f32; p.mb];
+        r.forward(0, &mut pa);
+        let fa = pa.clone();
+        r.dispatch_backward(0, &fa, 0.5, Loss::LogReg);
+        r.dispatch_backward(1, &fa, 0.5, Loss::LogReg);
+    }
+
+    #[test]
+    #[should_panic(expected = "open backward")]
+    fn forward_with_open_backward_panics() {
+        let p = prep(64, 16, 2);
+        let mut r = EngineRunner::new(p.clone(), &mk, 1);
+        let mut pa = vec![0.0f32; p.mb];
+        r.forward(0, &mut pa);
+        let fa = pa.clone();
+        r.dispatch_backward(0, &fa, 0.5, Loss::LogReg);
+        r.forward(1, &mut pa);
     }
 
     #[test]

@@ -17,8 +17,24 @@
 //! Python never runs on the training path: [`runtime`] loads the HLO
 //! artifacts via the PJRT C API and executes them from Rust.
 //!
-//! See `DESIGN.md` for the substitution table (FPGA/Tofino hardware →
-//! simulated substrates) and the per-experiment index.
+//! # The round lifecycle
+//!
+//! One training round (mini-batch) flows [`engine`] → [`pipeline`] →
+//! [`worker`] → [`net`] → [`switch`] and back: engines forward their
+//! vertical model slices ([`engine::EngineRunner`], ordered fan-in),
+//! the pipeline ships the partial activations through the
+//! [`worker::AggClient`] state machine (paper Alg. 3), the switch
+//! aggregates and multicasts (paper Alg. 2), and the returning full
+//! activations drive the plane-replay backward. With
+//! `cluster.pipeline_depth = 2` the backward+update of round *k*
+//! overlaps round *k+1*'s forwards and the network drain — the paper's
+//! forward–communication–backward pipeline parallelism (see
+//! [`pipeline`] for the depth-1 bit-compatibility and the depth-2
+//! bounded-staleness contracts).
+//!
+//! `docs/ARCHITECTURE.md` walks the module map and the round timing
+//! diagrams; `docs/CONFIG.md` is the configuration reference;
+//! `README.md` has the quickstart.
 
 pub mod bench;
 pub mod config;

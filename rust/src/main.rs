@@ -2,7 +2,8 @@
 //!
 //! Subcommands:
 //!
-//! * `repro <exp|all>` — regenerate a paper table/figure (see DESIGN.md).
+//! * `repro <exp|all>` — regenerate a paper table/figure (see
+//!   `docs/ARCHITECTURE.md` for the experiment index).
 //! * `train` — run the distributed trainer on a synthetic dataset.
 //! * `agg-bench` — measure AllReduce through the real protocol stack.
 //! * `info` — artifact/runtime diagnostics.
@@ -43,8 +44,8 @@ fn dispatch(args: &Args) -> Result<()> {
             println!("usage: p4sgd <repro|train|agg-bench|info> [options]");
             println!("  repro <table1..table4|fig8..fig15|all>");
             println!("  train [--mode mp|dp] [--backend native|pjrt] [--workers M] [--engines N]");
-            println!("        [--engine-threads T] [--loss linreg|logreg|svm] [--batch B]");
-            println!("        [--epochs E] [--dataset NAME]");
+            println!("        [--engine-threads T] [--pipeline-depth 1|2] [--loss linreg|logreg|svm]");
+            println!("        [--batch B] [--epochs E] [--dataset NAME]");
             println!("        [--samples N] [--features D] [--drop P]");
             println!("  agg-bench [--workers M] [--ops N] [--payload K]");
             Ok(())
@@ -57,6 +58,7 @@ fn train(args: &Args) -> Result<()> {
     cfg.cluster.workers = args.get_or("workers", 4usize);
     cfg.cluster.engines = args.get_or("engines", 4usize);
     cfg.cluster.engine_threads = args.get_or("engine-threads", 1usize);
+    cfg.cluster.pipeline_depth = args.get_or("pipeline-depth", 1usize);
     cfg.cluster.slots = args.get_or("slots", 16usize);
     cfg.train.loss = args.get_or("loss", Loss::LogReg);
     cfg.train.lr = args.get_or("lr", 0.5f32);
@@ -76,9 +78,10 @@ fn train(args: &Args) -> Result<()> {
         None => synth::separable(n, d, cfg.train.loss, 0.1, 7),
     };
     println!(
-        "training {} ({} samples x {} features), loss={}, {} workers x {} engines ({} engine threads), backend={backend:?}",
+        "training {} ({} samples x {} features), loss={}, {} workers x {} engines \
+         ({} engine threads, pipeline depth {}), backend={backend:?}",
         ds.name, ds.n, ds.d, cfg.train.loss, cfg.cluster.workers, cfg.cluster.engines,
-        cfg.cluster.engine_threads
+        cfg.cluster.engine_threads, cfg.cluster.pipeline_depth
     );
 
     let make: Box<dyn Fn(usize, usize) -> Box<dyn Compute> + Sync> = match backend {
@@ -97,12 +100,15 @@ fn train(args: &Args) -> Result<()> {
         println!("epoch {e:>3}: loss/sample {:.5}", l / ds.n as f32);
     }
     println!(
-        "wall {} | pa_sent {} retransmits {} | pipeline overlapped {} drained {}",
+        "wall {} | pa_sent {} | net {} | pipeline overlapped {} drained {} \
+         deferred-rounds {} overlapped-backwards {}",
         fmt_secs(report.wall.as_secs_f64()),
         report.agg.pa_sent,
-        report.agg.retransmits,
+        report.pipeline.net.summary(),
         report.pipeline.overlapped,
         report.pipeline.drained,
+        report.pipeline.deferred_rounds,
+        report.pipeline.overlapped_backwards,
     );
     Ok(())
 }

@@ -1,10 +1,62 @@
 //! Report plumbing: latency collections with paper-style whiskers,
-//! loss curves, and aligned-table / CSV rendering shared by the repro
-//! harness and the benches.
+//! per-round network-health counters, loss curves, and aligned-table /
+//! CSV rendering shared by the repro harness and the benches.
 
 use crate::util::stats::{Samples, Summary};
 use std::fmt::Write as _;
 use std::path::Path;
+
+/// Network-health counters surfaced **once per pipeline round** (one
+/// mini-batch) from cumulative `AggStats` snapshot deltas, never per
+/// packet: under loss, a per-packet feed turns the drain loop into a
+/// metrics firehose and buries the signal (which rounds hurt, and how
+/// badly), while a per-round delta costs one subtraction on the hot
+/// path and keeps worst-round visibility. Fed by
+/// `pipeline::run_minibatch` / `flush_round` and the DP batch loop; at
+/// depth 2 an observation window is one *call* (the previous round's
+/// drain plus the new round's sends — rounds interleave by design),
+/// and the deltas always partition the cumulative counters exactly.
+/// Field semantics are documented in `docs/ARCHITECTURE.md`.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct RoundNetStats {
+    /// Rounds observed.
+    pub rounds: u64,
+    /// Retransmissions summed over observed rounds.
+    pub retransmits: u64,
+    /// Rounds that needed at least one retransmission.
+    pub retrans_rounds: u64,
+    /// Retransmissions in the worst single round.
+    pub max_round_retransmits: u64,
+}
+
+impl RoundNetStats {
+    /// Record one finished round's retransmission delta.
+    pub fn observe_round(&mut self, retransmits: u64) {
+        self.rounds += 1;
+        self.retransmits += retransmits;
+        if retransmits > 0 {
+            self.retrans_rounds += 1;
+        }
+        self.max_round_retransmits = self.max_round_retransmits.max(retransmits);
+    }
+
+    /// Fold another worker's per-round counters into this one (rounds
+    /// and totals add; the worst round is the max of the worst rounds).
+    pub fn merge(&mut self, other: &Self) {
+        self.rounds += other.rounds;
+        self.retransmits += other.retransmits;
+        self.retrans_rounds += other.retrans_rounds;
+        self.max_round_retransmits = self.max_round_retransmits.max(other.max_round_retransmits);
+    }
+
+    /// "12 retransmits in 3/256 rounds (worst 7)" — the report line.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} retransmits in {}/{} rounds (worst {})",
+            self.retransmits, self.retrans_rounds, self.rounds, self.max_round_retransmits
+        )
+    }
+}
 
 /// Latency samples in nanoseconds with Fig. 8-style reporting.
 #[derive(Debug, Clone, Default)]
@@ -144,6 +196,27 @@ pub fn fmt_secs(s: f64) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn round_net_stats_observe_and_merge() {
+        let mut a = RoundNetStats::default();
+        a.observe_round(0);
+        a.observe_round(3);
+        a.observe_round(0);
+        assert_eq!(a.rounds, 3);
+        assert_eq!(a.retransmits, 3);
+        assert_eq!(a.retrans_rounds, 1);
+        assert_eq!(a.max_round_retransmits, 3);
+
+        let mut b = RoundNetStats::default();
+        b.observe_round(7);
+        a.merge(&b);
+        assert_eq!(a.rounds, 4);
+        assert_eq!(a.retransmits, 10);
+        assert_eq!(a.retrans_rounds, 2);
+        assert_eq!(a.max_round_retransmits, 7);
+        assert_eq!(a.summary(), "10 retransmits in 2/4 rounds (worst 7)");
+    }
 
     #[test]
     fn whiskers_format() {

@@ -7,9 +7,10 @@
 //!   duplication, reordering, and latency. This is the default substrate:
 //!   it makes every retransmission path in Algorithms 2/3 actually
 //!   execute, deterministically per seed.
-//! * [`udp::UdpNet`] — real localhost UDP datagrams (one socket per
-//!   node) for end-to-end realism; loss comes from the kernel (rare), so
-//!   protocol fault paths are exercised via `SimNet`.
+//! * [`udp::UdpEndpoint`] — real localhost UDP datagrams (one socket
+//!   per node, built via [`udp::build`]) for end-to-end realism; loss
+//!   comes from the kernel (rare), so protocol fault paths are
+//!   exercised via `SimNet`.
 
 pub mod sim;
 pub mod udp;

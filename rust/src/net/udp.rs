@@ -11,6 +11,12 @@
 //! payloads — so localhost UDP runs are also allocation-free once warm
 //! (provided the consumer drops each payload before the next receive,
 //! which the pipeline does).
+//!
+//! **Poll-with-budget (§Perf L3):** the overlapped pipeline's drain
+//! loop alternates zero- and short-budget polls with engine joins, so
+//! the socket mode (non-blocking vs read-timeout) is cached and only
+//! changed when a call actually needs a different one — the naive
+//! toggle costs two `fcntl`/`setsockopt` round trips per probe.
 
 use super::{NodeId, Transport};
 use crate::protocol::{Packet, PayloadPool};
@@ -20,6 +26,15 @@ use std::time::Duration;
 /// Max datagram we ever send: header + 4KiB payload headroom.
 const MAX_DGRAM: usize = 16 * 1024;
 
+/// Cached socket mode (see the module docs' poll-with-budget note).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Mode {
+    /// `O_NONBLOCK` set: receives return `WouldBlock` immediately.
+    NonBlocking,
+    /// Blocking with `SO_RCVTIMEO` set to the given budget.
+    Timeout(Duration),
+}
+
 /// A UDP endpoint implementing [`Transport`].
 pub struct UdpEndpoint {
     node: NodeId,
@@ -28,6 +43,8 @@ pub struct UdpEndpoint {
     scratch: Vec<u8>,
     rxbuf: [u8; MAX_DGRAM],
     pool: PayloadPool,
+    /// Last mode applied to the socket (`None` = fresh blocking socket).
+    mode: Option<Mode>,
 }
 
 /// Build `nodes` endpoints on consecutive localhost ports starting at
@@ -44,6 +61,7 @@ pub fn build(nodes: usize, base_port: u16) -> std::io::Result<Vec<UdpEndpoint>> 
                 scratch: Vec::new(),
                 rxbuf: [0; MAX_DGRAM],
                 pool: PayloadPool::new(),
+                mode: None,
             })
         })
         .collect()
@@ -58,27 +76,48 @@ impl UdpEndpoint {
         let port = addr.port();
         port.checked_sub(self.base_port).map(|p| p as NodeId)
     }
+
+    /// Put the socket in `want` mode, skipping the syscalls when it is
+    /// already there. The cache is invalidated before a transition and
+    /// set only after full success: a partially applied two-syscall
+    /// change (nonblocking cleared, timeout set failed) must read as
+    /// "unknown", not as the old mode, or a later zero-budget poll
+    /// would skip the syscalls and block forever.
+    fn set_mode(&mut self, want: Mode) -> Option<()> {
+        if self.mode == Some(want) {
+            return Some(());
+        }
+        let prev = self.mode.take();
+        match want {
+            Mode::NonBlocking => self.socket.set_nonblocking(true).ok()?,
+            Mode::Timeout(t) => {
+                if !matches!(prev, Some(Mode::Timeout(_))) {
+                    self.socket.set_nonblocking(false).ok()?;
+                }
+                self.socket.set_read_timeout(Some(t)).ok()?;
+            }
+        }
+        self.mode = Some(want);
+        Some(())
+    }
 }
 
 impl Transport for UdpEndpoint {
     fn send(&mut self, dst: NodeId, pkt: &Packet) {
         let mut scratch = std::mem::take(&mut self.scratch);
         pkt.encode(&mut scratch);
-        // Unreliable by contract: ignore send errors.
+        // Unreliable by contract: ignore send errors. (A non-blocking
+        // send mode never blocks on UDP anyway.)
         let _ = self.socket.send_to(&scratch, self.addr_of(dst));
         self.scratch = scratch;
     }
 
     fn recv_timeout(&mut self, timeout: Duration) -> Option<(NodeId, Packet)> {
         if timeout.is_zero() {
-            self.socket.set_nonblocking(true).ok()?;
-            let r = self.socket.recv_from(&mut self.rxbuf);
-            self.socket.set_nonblocking(false).ok()?;
-            let (n, from) = r.ok()?;
-            let pkt = Packet::decode_with(&self.rxbuf[..n], &mut self.pool).ok()?;
-            return Some((self.node_of(from)?, pkt));
+            self.set_mode(Mode::NonBlocking)?;
+        } else {
+            self.set_mode(Mode::Timeout(timeout))?;
         }
-        self.socket.set_read_timeout(Some(timeout)).ok()?;
         let (n, from) = self.socket.recv_from(&mut self.rxbuf).ok()?;
         let pkt = Packet::decode_with(&self.rxbuf[..n], &mut self.pool).ok()?;
         Some((self.node_of(from)?, pkt))
@@ -153,6 +192,33 @@ mod tests {
         let (_, p2) = b.recv_timeout(Duration::from_secs(2)).expect("delivery");
         assert_eq!(p2.payload[..], [5, 6, 7, 8]);
         assert_eq!(p2.payload.as_ptr(), ptr, "decode must reuse the pooled buffer");
+    }
+
+    #[test]
+    fn mixed_zero_and_timed_polls_share_the_mode_cache() {
+        // The depth-2 drain pattern: bursts of non-blocking probes
+        // interleaved with short timed waits. The cached-mode socket
+        // must deliver correctly across every transition.
+        let mut eps = build(2, BASE + 80).expect("bind");
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        for _ in 0..4 {
+            assert!(b.try_recv().is_none());
+        }
+        a.send(1, &Packet::pa(1, 0, vec![1]));
+        let (_, p) = b.recv_timeout(Duration::from_secs(2)).expect("timed after zero");
+        assert_eq!(p.seq, 1);
+        assert!(b.recv_timeout(Duration::from_millis(20)).is_none());
+        a.send(1, &Packet::pa(2, 0, vec![2]));
+        let mut got = None;
+        for _ in 0..200 {
+            got = b.try_recv();
+            if got.is_some() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(got.expect("zero after timed").1.seq, 2);
     }
 
     #[test]

@@ -31,15 +31,39 @@
 //! preallocated Condvar/epoch job slots (see `engine::runner`), so
 //! engine parallelism costs no steady-state allocation and changes no
 //! numerics (ordered fan-in keeps f32 sums bit-identical).
+//!
+//! **Round overlap (§Perf L3, `pipeline_depth`):** at depth 1 (the
+//! default) rounds are synchronous: [`run_minibatch`] forwards, drains
+//! every FA (running backwards as they land), updates, and returns —
+//! bit-compatible with the pre-overlap pipeline. At depth 2 the
+//! backward+update of round *k* is deferred into round *k+1*'s call:
+//! after round *k+1*'s forward fan-ins and PA sends, the worker
+//! dispatches round *k*'s backwards to the engine pool **without
+//! joining** ([`EngineRunner::dispatch_backward`]) and keeps polling
+//! the transport while the engines run — the paper's
+//! forward–communication–backward overlap, where aggregation latency
+//! hides behind compute instead of serializing after it. A
+//! `PendingRound` slot in [`PipelineScratch`] carries the in-flight
+//! round between calls: its seq→micro-batch map, the FAs that arrived
+//! before their gradient window opened (payload refcounts, decoded at
+//! dispatch), its accumulated loss, and its deferred update scale.
+//! The contract is **bounded staleness**: a round's forwards read the
+//! model one update older than the synchronous schedule would, and
+//! [`flush_round`] (called at every epoch boundary) retires the tail so
+//! staleness never crosses an epoch and per-epoch loss attribution
+//! stays exact. Gradient windows never mix: a round's backwards are
+//! dispatched only after the previous round's update has been applied.
 
 use crate::data::partition::{vertical, VerticalShard};
 use crate::data::quantize::{pack_rows, PackedBatch, LANE};
 use crate::engine::EngineRunner;
 use crate::glm::Loss;
+use crate::metrics::RoundNetStats;
 use crate::net::Transport;
 use crate::protocol::{decode_activations_into, encode_activations_into};
 use crate::worker::{AggClient, Event};
-use std::time::Duration;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 /// Hard cap on waiting for stragglers before declaring the cluster dead.
 const DRAIN_TIMEOUT: Duration = Duration::from_secs(30);
@@ -153,16 +177,87 @@ impl WorkerState {
 #[derive(Debug, Default, Clone, Copy)]
 pub struct PipelineStats {
     /// Micro-batches whose FA arrived only in the final drain (no
-    /// overlap left to exploit).
+    /// overlap left to exploit). Depth-1 path only.
     pub drained: u64,
-    /// Micro-batches overlapped with later forwards.
+    /// Micro-batches overlapped with later forwards. Depth-1 path only.
     pub overlapped: u64,
+    /// Depth-2: backward jobs dispatched to the engines while the
+    /// dispatcher kept pumping the transport (the dispatch/join split).
+    pub overlapped_backwards: u64,
+    /// Depth-2: FAs parked because their round's gradient window wasn't
+    /// open yet (backward deferred past the previous round's update).
+    pub deferred_fas: u64,
+    /// Depth-2: rounds retired through the deferred update path
+    /// (including the flush at epoch boundaries).
+    pub deferred_rounds: u64,
+    /// Per-round network health, sampled once per round from cumulative
+    /// `AggStats` deltas — never per packet (see [`RoundNetStats`]).
+    pub net: RoundNetStats,
+}
+
+impl PipelineStats {
+    /// Fold another worker's counters into this one.
+    pub fn merge(&mut self, other: &Self) {
+        self.drained += other.drained;
+        self.overlapped += other.overlapped;
+        self.overlapped_backwards += other.overlapped_backwards;
+        self.deferred_fas += other.deferred_fas;
+        self.deferred_rounds += other.deferred_rounds;
+        self.net.merge(&other.net);
+    }
+}
+
+/// One mini-batch round carried across [`run_minibatch`] calls by the
+/// depth-2 pipeline: its aggregation traffic is still in flight while
+/// the next round's forwards run. All buffers are reused round over
+/// round, so the overlapped path stays allocation-free in steady state.
+#[derive(Debug, Default)]
+struct PendingRound {
+    active: bool,
+    /// Micro-batch range `[first, first + count)`.
+    first: usize,
+    count: usize,
+    /// Deferred update scale, applied when the round retires.
+    inv_b: f32,
+    /// Loss accumulated from joined backwards.
+    loss_sum: f32,
+    /// Backwards fully executed (dispatched and joined).
+    done: usize,
+    /// seq -> micro-batch index, FAs still in flight.
+    pending: Vec<(u16, usize)>,
+    /// Arrived FAs awaiting the engines (payload refcounts; decoded at
+    /// dispatch): either the engines are busy with an earlier
+    /// micro-batch, or this round's gradient window hasn't opened yet.
+    ready: Vec<(usize, Arc<[i32]>)>,
+}
+
+impl PendingRound {
+    fn begin(&mut self, first: usize, count: usize, inv_b: f32) {
+        debug_assert!(!self.active, "round slot still in flight");
+        self.active = true;
+        self.first = first;
+        self.count = count;
+        self.inv_b = inv_b;
+        self.loss_sum = 0.0;
+        self.done = 0;
+        self.pending.clear();
+        self.pending.reserve(count);
+        self.ready.clear();
+        self.ready.reserve(count);
+    }
+
+    fn retire(&mut self) {
+        debug_assert!(self.done == self.count && self.pending.is_empty() && self.ready.is_empty());
+        self.active = false;
+    }
 }
 
 /// Reusable buffers for [`run_minibatch`]. Construct once per worker;
 /// every capacity is established during the first mini-batch, after
-/// which the steady-state loop never allocates.
-#[derive(Debug, Default)]
+/// which the steady-state loop never allocates. The scratch also fixes
+/// the pipeline depth for its worker (the round slots it carries are
+/// meaningless across a depth change).
+#[derive(Debug)]
 pub struct PipelineScratch {
     /// Engine-summed partial activations (MB wide).
     pa: Vec<f32>,
@@ -172,12 +267,50 @@ pub struct PipelineScratch {
     fa: Vec<f32>,
     /// In-flight seq -> micro-batch index (≤ window entries; linear scan
     /// beats hashing at this size and never rehashes/allocates).
+    /// Depth-1 path only — depth 2 tracks seqs per round.
     pending: Vec<(u16, usize)>,
+    /// Overlap depth: 1 = synchronous rounds (bit-compatible with the
+    /// pre-overlap pipeline), 2 = one round of
+    /// forward–communication–backward overlap.
+    depth: usize,
+    /// Depth-2 round slots: one is the in-flight round, the other is
+    /// recycled for the round being assembled.
+    rounds: [PendingRound; 2],
+    /// Which of `rounds` is the in-flight round.
+    flip: bool,
+}
+
+impl Default for PipelineScratch {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl PipelineScratch {
+    /// Synchronous (depth-1) scratch — the bit-compatible schedule.
     pub fn new() -> Self {
-        Self::default()
+        Self::with_depth(1)
+    }
+
+    /// `depth` ∈ {1, 2}: 1 runs rounds synchronously, 2 overlaps the
+    /// backward+update of round *k* with round *k+1*'s forwards and
+    /// sends (one-round staleness; see the module docs).
+    pub fn with_depth(depth: usize) -> Self {
+        assert!((1..=2).contains(&depth), "pipeline depth must be 1 or 2, got {depth}");
+        Self {
+            pa: Vec::new(),
+            payload: Vec::new(),
+            fa: Vec::new(),
+            pending: Vec::new(),
+            depth,
+            rounds: [PendingRound::default(), PendingRound::default()],
+            flip: false,
+        }
+    }
+
+    /// The overlap depth this scratch drives.
+    pub fn depth(&self) -> usize {
+        self.depth
     }
 }
 
@@ -203,11 +336,16 @@ fn on_event(
 }
 
 /// Run one mini-batch (micro-batches `[first, first + count)`) through
-/// the FCB pipeline. Returns the summed training loss of the mini-batch.
+/// the FCB pipeline. Returns the summed training loss of the mini-batch
+/// at depth 1; at depth 2 it returns the loss of the round *retired*
+/// this call (the previous one — 0.0 on the first call of an epoch),
+/// and [`flush_round`] returns the tail.
 ///
-/// The runner enters with zeroed gradients (fresh from construction or
-/// from the previous `update`, which clears them) and leaves the same
-/// way — gradient state never leaks across mini-batches.
+/// At depth 1 the runner enters with zeroed gradients (fresh from
+/// construction or from the previous `update`, which clears them) and
+/// leaves the same way — gradient state never leaks across
+/// mini-batches. At depth 2 the call leaves one round in flight in the
+/// scratch; its gradients retire on the next call or at the flush.
 #[allow(clippy::too_many_arguments)]
 pub fn run_minibatch<T: Transport>(
     runner: &mut EngineRunner,
@@ -219,8 +357,34 @@ pub fn run_minibatch<T: Transport>(
     stats: &mut PipelineStats,
     scratch: &mut PipelineScratch,
 ) -> f32 {
+    // Per-round network health: one cumulative-counter delta per round,
+    // not a sample per packet (noise-free under loss).
+    let retrans_mark = agg.stats.retransmits;
+    let loss_out = if scratch.depth >= 2 {
+        run_overlapped(runner, agg, first, count, loss, lr, stats, scratch)
+    } else {
+        run_synchronous(runner, agg, first, count, loss, lr, stats, scratch)
+    };
+    stats.net.observe_round(agg.stats.retransmits - retrans_mark);
+    loss_out
+}
+
+/// The depth-1 schedule: forward + ship every micro-batch, drain every
+/// FA (backwards run as they land), update, return. Bit-compatible with
+/// the pre-overlap pipeline.
+#[allow(clippy::too_many_arguments)]
+fn run_synchronous<T: Transport>(
+    runner: &mut EngineRunner,
+    agg: &mut AggClient<T>,
+    first: usize,
+    count: usize,
+    loss: Loss,
+    lr: f32,
+    stats: &mut PipelineStats,
+    scratch: &mut PipelineScratch,
+) -> f32 {
     let mb = runner.prep().mb;
-    let PipelineScratch { pa, payload, fa, pending } = scratch;
+    let PipelineScratch { pa, payload, fa, pending, .. } = scratch;
     pa.resize(mb, 0.0);
     // `fa` and `payload` size themselves inside the into-codecs (clear +
     // extend), so their capacity is warm after the first micro-batch.
@@ -284,6 +448,198 @@ pub fn run_minibatch<T: Transport>(
     let inv_b = 1.0 / (count * mb) as f32;
     runner.update(inv_b);
     loss_sum
+}
+
+/// Borrow bundle for the depth-2 scheduler: the engines, the network,
+/// and the shared FA decode buffer.
+struct Overlap<'a, T: Transport> {
+    runner: &'a mut EngineRunner,
+    agg: &'a mut AggClient<T>,
+    fa: &'a mut Vec<f32>,
+    loss: Loss,
+    lr: f32,
+    stats: &'a mut PipelineStats,
+}
+
+impl<T: Transport> Overlap<'_, T> {
+    /// Block until the open backward (if any) finishes, crediting `r` —
+    /// the round that owns the current gradient window.
+    fn join_open(&mut self, r: &mut PendingRound) {
+        if self.runner.backward_open() {
+            r.loss_sum += self.runner.join_backward();
+            r.done += 1;
+        }
+    }
+
+    /// Keep the engines busy without blocking: reap a finished backward
+    /// and dispatch the next ready FA of `r`. No-op while a backward is
+    /// still running (the dispatcher goes back to polling instead).
+    fn feed_engines(&mut self, r: &mut PendingRound) {
+        if !r.active {
+            return;
+        }
+        if self.runner.backward_open() {
+            if !self.runner.backward_done() {
+                return;
+            }
+            r.loss_sum += self.runner.join_backward();
+            r.done += 1;
+        }
+        if let Some((idx, payload)) = r.ready.pop() {
+            decode_activations_into(&payload, self.fa);
+            self.runner.dispatch_backward(idx, self.fa, self.lr, self.loss);
+            self.stats.overlapped_backwards += 1;
+        }
+    }
+
+    /// One scheduling step: feed the engines from `owner` (the round
+    /// whose gradient window is open), then poll the transport once
+    /// with `budget`. An arriving FA is parked on whichever round is
+    /// waiting on its seq: `owner`'s FAs become engine work
+    /// immediately, `parked`'s wait for the window to open. Returns
+    /// `false` when the budget expired without an event.
+    fn pump(&mut self, owner: &mut PendingRound, parked: &mut PendingRound, budget: Duration) -> bool {
+        self.feed_engines(owner);
+        let Some(ev) = self.agg.poll(budget) else { return false };
+        let Event::Fa { seq, payload } = ev else { return true };
+        if let Some(pos) = owner.pending.iter().position(|(s, _)| *s == seq) {
+            let (_, idx) = owner.pending.swap_remove(pos);
+            owner.ready.push((idx, payload));
+            self.feed_engines(owner);
+        } else if let Some(pos) = parked.pending.iter().position(|(s, _)| *s == seq) {
+            let (_, idx) = parked.pending.swap_remove(pos);
+            parked.ready.push((idx, payload));
+            self.stats.deferred_fas += 1;
+        }
+        // An FA for neither round is a client-level duplicate the
+        // AggClient already filtered as far as it could; drop it.
+        true
+    }
+
+    /// Retire `r`: drain its remaining FAs (the engines overlapping the
+    /// drain), join every backward, then apply the deferred update.
+    /// Returns the round's loss.
+    fn retire(&mut self, r: &mut PendingRound, parked: &mut PendingRound) -> f32 {
+        let deadline = Instant::now() + DRAIN_TIMEOUT;
+        while r.done < r.count {
+            if r.pending.is_empty() {
+                // Every FA is in hand: run the engines dry.
+                self.feed_engines(r);
+                self.join_open(r);
+                continue;
+            }
+            if !self.pump(r, parked, Duration::from_millis(2)) {
+                assert!(
+                    Instant::now() < deadline,
+                    "drain timeout: worker {} round [{}, {}) missing {} of {} backwards; \
+                     pending seqs {:?}; in_flight {}; stats {:?}",
+                    self.agg.worker(),
+                    r.first,
+                    r.first + r.count,
+                    r.count - r.done,
+                    r.count,
+                    r.pending.iter().map(|(s, _)| *s).collect::<Vec<_>>(),
+                    self.agg.in_flight(),
+                    self.agg.stats,
+                );
+            }
+        }
+        self.runner.update(r.inv_b);
+        self.stats.deferred_rounds += 1;
+        let loss = r.loss_sum;
+        r.retire();
+        loss
+    }
+}
+
+/// The depth-2 schedule: round *k*'s forwards and PA sends run while
+/// round *k-1*'s backwards drain off the network and through the engine
+/// pool; round *k-1*'s update applies mid-call, and round *k* is left
+/// in flight for the next call (or [`flush_round`]) to retire.
+#[allow(clippy::too_many_arguments)]
+fn run_overlapped<T: Transport>(
+    runner: &mut EngineRunner,
+    agg: &mut AggClient<T>,
+    first: usize,
+    count: usize,
+    loss: Loss,
+    lr: f32,
+    stats: &mut PipelineStats,
+    scratch: &mut PipelineScratch,
+) -> f32 {
+    let mb = runner.prep().mb;
+    let PipelineScratch { pa, payload, fa, rounds, flip, .. } = scratch;
+    pa.resize(mb, 0.0);
+    let [r0, r1] = rounds;
+    let (prev, cur) = if *flip { (r1, r0) } else { (r0, r1) };
+    cur.begin(first, count, 1.0 / (count * mb) as f32);
+    let mut ctx = Overlap { runner, agg, fa, loss, lr, stats };
+
+    // Stage 1: forward + ship round k; round k-1's backwards run on the
+    // engines whenever the network hands us their FAs.
+    for j in 0..count {
+        let idx = first + j;
+        // The runner executes one job class at a time: reap the open
+        // backward (round k-1's) before dispatching a forward.
+        ctx.join_open(prev);
+        ctx.runner.forward(idx, pa);
+        encode_activations_into(pa, payload);
+        let seq = loop {
+            if let Some(seq) = ctx.agg.try_send_pa(payload) {
+                break seq;
+            }
+            // Window full: pump until an operation retires.
+            ctx.pump(prev, cur, Duration::from_micros(200));
+        };
+        cur.pending.push((seq, idx));
+        // Opportunistic drain: overlap communication with later forwards.
+        while ctx.pump(prev, cur, Duration::ZERO) {}
+    }
+
+    // Stage 2: retire round k-1 — the rest of its backwards, then its
+    // deferred update. Round k's early FAs park on `cur` meanwhile.
+    let retired = if prev.active { ctx.retire(prev, cur) } else { 0.0 };
+
+    // Stage 3: the gradient window now belongs to round k; start on its
+    // already-arrived FAs without blocking. Stragglers — and the open
+    // backward we may leave behind — are the next call's (or the
+    // flush's) first order of business.
+    while ctx.pump(cur, prev, Duration::ZERO) {}
+    ctx.feed_engines(cur);
+
+    *flip = !*flip;
+    retired
+}
+
+/// Retire the depth-2 pipeline's in-flight round, if any: drain its
+/// remaining FAs, join its backwards, apply its deferred update, and
+/// return its loss (0.0 when nothing is pending — depth 1, a fresh
+/// scratch, or an already-flushed pipeline). Call at every point where
+/// the model must be consistent with the rounds issued so far: epoch
+/// boundaries (exact loss attribution, no cross-epoch staleness) and
+/// before exporting the model.
+pub fn flush_round<T: Transport>(
+    runner: &mut EngineRunner,
+    agg: &mut AggClient<T>,
+    loss: Loss,
+    lr: f32,
+    stats: &mut PipelineStats,
+    scratch: &mut PipelineScratch,
+) -> f32 {
+    let retrans_mark = agg.stats.retransmits;
+    let PipelineScratch { fa, rounds, flip, .. } = scratch;
+    let [r0, r1] = rounds;
+    // After a run_minibatch call the in-flight round sits where the
+    // *next* call would look for its previous round.
+    let (prev, cur) = if *flip { (r1, r0) } else { (r0, r1) };
+    debug_assert!(!cur.active, "assembly slot must be idle between calls");
+    if !prev.active {
+        return 0.0;
+    }
+    let mut ctx = Overlap { runner, agg, fa, loss, lr, stats };
+    let retired = ctx.retire(prev, cur);
+    stats.net.observe_round(agg.stats.retransmits - retrans_mark);
+    retired
 }
 
 #[cfg(test)]
@@ -360,6 +716,19 @@ mod tests {
                 assert!((a - b).abs() < 1e-3, "{a} vs {b}");
             }
         }
+    }
+
+    #[test]
+    fn scratch_depth_is_fixed_and_validated() {
+        assert_eq!(PipelineScratch::new().depth(), 1);
+        assert_eq!(PipelineScratch::default().depth(), 1);
+        assert_eq!(PipelineScratch::with_depth(2).depth(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "pipeline depth")]
+    fn scratch_rejects_depth_out_of_range() {
+        let _ = PipelineScratch::with_depth(3);
     }
 
     #[test]

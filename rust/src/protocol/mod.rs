@@ -15,6 +15,21 @@
 //! multicast, and `AggClient` retransmission copies all share one buffer
 //! instead of deep-cloning the activation vector per hop (§Perf L1 —
 //! the wire hot path moves no payload bytes it doesn't have to).
+//!
+//! # Payload-pool ownership discipline
+//!
+//! Every pool in the stack ([`PayloadPool`] here, the `AggClient` send
+//! pool, the switch's per-slot FA pair) follows one rule: **a pooled
+//! buffer is rewritten only while the pool holds the sole reference**,
+//! proven at the moment of reuse with `Arc::get_mut`. Holders never
+//! hand a buffer back explicitly — they just drop their clone (the
+//! depth-2 pipeline may park an FA payload for a whole round first),
+//! and the buffer becomes reusable the instant the last outside clone
+//! dies. A buffer still shared — a lagging multicast copy, a parked FA,
+//! an unsent retransmission — simply stays untouched and the pool
+//! allocates (or picks another slot) instead; correctness never depends
+//! on consumers being prompt, only steady-state allocation-freedom
+//! does.
 
 use anyhow::{bail, Result};
 use std::sync::Arc;

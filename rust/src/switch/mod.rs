@@ -13,6 +13,16 @@
 //! All three are **pure state machines** (`handle(packet) -> actions`) so
 //! the same logic runs under the threaded `SimNet`, the UDP transport,
 //! and the virtual-time DES used for Fig. 8.
+//!
+//! Ownership discipline: a server never writes through an ingress
+//! packet's payload (the sender may still hold it for retransmission)
+//! — egress FAs come from server-owned buffers, recycled per slot under
+//! the `Arc::get_mut` sole-reference rule (see [`crate::protocol`]'s
+//! payload-pool discipline and the FA buffer pair in [`p4::P4Switch`]).
+//! Retransmit visibility flows the other way: servers count duplicates
+//! (`dup_agg`/`dup_ack` in `p4::SwitchStats`), while the per-round
+//! surfacing the reports consume happens client-side
+//! (`metrics::RoundNetStats`), once per round, from `AggStats` deltas.
 
 pub mod host_ps;
 pub mod p4;

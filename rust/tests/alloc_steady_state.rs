@@ -246,6 +246,72 @@ fn pool_runner_steady_state_is_allocation_free() {
 }
 
 #[test]
+fn overlapped_depth2_steady_state_is_allocation_free() {
+    let _guard = serialize();
+    // The depth-2 round machinery (PendingRound slots, deferred FA
+    // parking, dispatch/join split) must preserve the zero-allocation
+    // contract: payloads park as refcount bumps, round vectors recycle.
+    let (prep, mut runner, mut agg) = rig(256, 11, 2);
+    assert_eq!(runner.threads(), 2, "pool must be active for this test");
+    let mut stats = PipelineStats::default();
+    let mut scratch = PipelineScratch::with_depth(2);
+    let per_batch = 4;
+    let batches = prep.micro_batches() / per_batch;
+    assert!(batches >= 5, "need warm-up and several measured batches");
+
+    // Warm-up: fills scratch/pool capacities, both round slots, and the
+    // pool's job-slot buffers on the engine threads.
+    for b in 0..2 {
+        let loss = run_minibatch(
+            &mut runner,
+            &mut agg,
+            b * per_batch,
+            per_batch,
+            Loss::LogReg,
+            0.5,
+            &mut stats,
+            &mut scratch,
+        );
+        assert!(loss.is_finite());
+    }
+
+    // Steady state, measured process-wide (dispatcher + engine threads).
+    let mut clean = false;
+    let mut seen = Vec::new();
+    for b in 2..5 {
+        let thread_before = allocs_on_this_thread();
+        let global_before = GLOBAL_ALLOCS.load(Ordering::SeqCst);
+        let loss = run_minibatch(
+            &mut runner,
+            &mut agg,
+            b * per_batch,
+            per_batch,
+            Loss::LogReg,
+            0.5,
+            &mut stats,
+            &mut scratch,
+        );
+        let global_delta = GLOBAL_ALLOCS.load(Ordering::SeqCst) - global_before;
+        let thread_delta = allocs_on_this_thread() - thread_before;
+        assert!(loss.is_finite());
+        assert_eq!(thread_delta, 0, "depth-2 dispatch path allocated on the worker thread");
+        seen.push(global_delta);
+        if global_delta == 0 {
+            clean = true;
+            break;
+        }
+    }
+    assert!(
+        clean,
+        "depth-2 steady state allocated in every measured window: {seen:?} \
+         (round slots, deferred parking, or dispatch slots are allocating per round)"
+    );
+    // the overlap machinery must actually have run
+    assert!(stats.deferred_fas > 0, "loopback FAs must park on the assembling round");
+    assert!(stats.deferred_rounds > 0, "rounds must retire through the deferred path");
+}
+
+#[test]
 fn steady_state_training_still_learns() {
     let _guard = serialize();
     // The zero-alloc loop must still be a correct trainer: loss falls,

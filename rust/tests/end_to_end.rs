@@ -69,6 +69,11 @@ fn hostile_network_does_not_change_numerics() {
     for (a, b) in clean.loss_per_epoch.iter().zip(&hostile.loss_per_epoch) {
         assert!((a - b).abs() < 1e-4 * a.abs().max(1.0), "{a} vs {b}");
     }
+    // per-round surfacing partitions the cumulative retransmit counter
+    // (one delta per round, never per packet)
+    assert_eq!(hostile.pipeline.net.retransmits, hostile.agg.retransmits);
+    assert!(hostile.pipeline.net.retrans_rounds > 0);
+    assert!(hostile.pipeline.net.max_round_retransmits > 0);
 }
 
 #[test]
@@ -125,6 +130,81 @@ fn engine_thread_pool_survives_hostile_network() {
     for (a, b) in clean.loss_per_epoch.iter().zip(&hostile.loss_per_epoch) {
         assert!((a - b).abs() < 1e-4 * a.abs().max(1.0), "{a} vs {b}");
     }
+}
+
+#[test]
+fn pipeline_depth_one_is_bitwise_identical_across_engine_threads() {
+    // Depth 1 must be the pre-overlap schedule bit for bit. A single
+    // worker on a clean zero-latency net is deterministic (its FAs
+    // arrive in seq order and switch addition is integer), so run-vs-run
+    // bitwise equality here is exactly "same code path".
+    let ds = synth::separable_sparse(128, 192, Loss::LogReg, 0.0, 0.2, 73);
+    for threads in [1usize, 4] {
+        let mut cfg = base_cfg(1, Loss::LogReg, 1.0);
+        cfg.cluster.engines = 4;
+        cfg.cluster.engine_threads = threads;
+        let default_depth = mp::train_mp(&cfg, &ds, &native);
+        cfg.cluster.pipeline_depth = 1;
+        let explicit = mp::train_mp(&cfg, &ds, &native);
+        assert_eq!(default_depth.loss_per_epoch.len(), explicit.loss_per_epoch.len());
+        for (e, (a, b)) in default_depth.loss_per_epoch.iter().zip(&explicit.loss_per_epoch).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "threads={threads} epoch {e}: {a} vs {b}");
+        }
+        for (a, b) in default_depth.model.iter().zip(&explicit.model) {
+            assert_eq!(a.to_bits(), b.to_bits(), "threads={threads}: {a} vs {b}");
+        }
+        // depth 1 never touches the deferred machinery
+        assert_eq!(explicit.pipeline.deferred_rounds, 0);
+        assert_eq!(explicit.pipeline.deferred_fas, 0);
+        assert_eq!(explicit.pipeline.overlapped_backwards, 0);
+    }
+}
+
+#[test]
+fn overlapped_pipeline_converges_under_hostile_network() {
+    // Depth 2 on the multi-worker trainer under loss, duplication, and
+    // reordering: the deferred-round machinery must stay live and the
+    // model must still train.
+    let ds = synth::separable_sparse(192, 256, Loss::LogReg, 0.0, 0.2, 79);
+    let mut cfg = base_cfg(3, Loss::LogReg, 1.0);
+    cfg.cluster.engines = 4;
+    cfg.cluster.engine_threads = 4;
+    cfg.cluster.pipeline_depth = 2;
+    cfg.net.drop_prob = 0.08;
+    cfg.net.dup_prob = 0.05;
+    cfg.net.reorder_prob = 0.05;
+    cfg.net.timeout_us = 300;
+    let rep = mp::train_mp(&cfg, &ds, &native);
+    assert!(rep.agg.retransmits > 0, "hostile net must retransmit");
+    // every round retired through the deferred path: batches/epoch *
+    // epochs * workers
+    let batches = (192 / cfg.train.batch) as u64;
+    assert_eq!(rep.pipeline.deferred_rounds, batches * cfg.train.epochs as u64 * 3);
+    // per-round surfacing: one observation per run_minibatch call plus
+    // one per epoch flush, and the deltas partition the global counter
+    assert_eq!(rep.pipeline.net.rounds, (batches + 1) * cfg.train.epochs as u64 * 3);
+    assert_eq!(rep.pipeline.net.retransmits, rep.agg.retransmits);
+    assert!(rep.pipeline.net.retrans_rounds > 0);
+    let first = rep.loss_per_epoch[0];
+    let last = *rep.loss_per_epoch.last().unwrap();
+    assert!(last < 0.85 * first, "{:?}", rep.loss_per_epoch);
+}
+
+#[test]
+fn overlapped_pipeline_matches_synchronous_convergence() {
+    // One round of staleness inside an epoch (boundaries flush) must
+    // land training in the same place as the synchronous schedule.
+    let ds = synth::separable_sparse(256, 256, Loss::LogReg, 0.0, 0.2, 83);
+    let mut cfg = base_cfg(2, Loss::LogReg, 1.0);
+    cfg.train.epochs = 6;
+    let sync = mp::train_mp(&cfg, &ds, &native);
+    cfg.cluster.pipeline_depth = 2;
+    let overlapped = mp::train_mp(&cfg, &ds, &native);
+    let a = *sync.loss_per_epoch.last().unwrap();
+    let b = *overlapped.loss_per_epoch.last().unwrap();
+    // one-step-stale gradients wiggle the trajectory, not the floor
+    assert!((a - b).abs() < 0.5 * a.abs().max(1.0), "sync {a} vs overlapped {b}");
+    assert!(b < 0.85 * overlapped.loss_per_epoch[0], "{:?}", overlapped.loss_per_epoch);
 }
 
 #[test]
@@ -185,4 +265,10 @@ fn report_counters_are_consistent() {
     // iterations: epochs * batches * micro-batches * workers
     let expect = (cfg.train.epochs * (ds.n / cfg.train.batch) * (cfg.train.batch / 8) * 2) as u64;
     assert_eq!(rep.agg.pa_sent, expect);
+    // per-round net stats: one observation per mini-batch round per
+    // worker (depth 1 — the flush is a no-op), no retransmit noise
+    let rounds = (cfg.train.epochs * (ds.n / cfg.train.batch) * 2) as u64;
+    assert_eq!(rep.pipeline.net.rounds, rounds);
+    assert_eq!(rep.pipeline.net.retransmits, 0);
+    assert_eq!(rep.pipeline.net.retrans_rounds, 0);
 }
