@@ -8,9 +8,32 @@ freshly produced one. Fails (exit 1) if any benchmark present in both
 got slower than `tolerance` times its previous mean. Skips cleanly when
 the baseline is empty or unparsable (the committed files start as schema
 templates until a toolchain-equipped run commits real numbers).
+
+A benchmark that vanishes from the current run normally fails the gate
+(a rename or a bench that died mid-run would otherwise let a regression
+escape). Exception: **axis migrations**. Parameterized benchmarks carry
+axis suffixes (`_t<N>` for engine threads, `_depth<N>` for pipeline
+depth); when an axis is re-pointed (say depth {1,3} becomes {1,4}),
+a dropped point is reported as migrated, not failed — but only if the
+current run introduced a *new* point with the same axis stem. Merely
+surviving siblings don't qualify: an axis that silently shrinks (a
+point deleted, nothing added) still fails as DROPPED.
 """
 import json
+import re
 import sys
+
+AXIS_SUFFIX = re.compile(r"_(t|depth)\d+")
+
+
+def axis_key(name):
+    """(stem, axis kinds) identifying the parameterized family a point
+    belongs to: the name with axis suffixes stripped, plus *which* axes
+    it carries. A dropped point is only excused by a new sibling on the
+    same stem AND the same axis (a new `_t` point never excuses a
+    dropped `_depth` point)."""
+    kinds = tuple(sorted({m.group(1) for m in AXIS_SUFFIX.finditer(name)}))
+    return (AXIS_SUFFIX.sub("", name), kinds)
 
 
 def load(path):
@@ -51,12 +74,19 @@ def main():
     # A benchmark that vanishes from the current run is a gate failure
     # too: a rename or a bench that died mid-run would otherwise let a
     # regression escape unmeasured. (An intentional rename fails once,
-    # then the new baseline carries the new name.)
+    # then the new baseline carries the new name.) Axis migrations are
+    # the exception — see the module docstring.
     cur_names = {r["name"] for r in cur["results"]}
+    new_keys = {axis_key(n) for n in cur_names - set(prev_by)}
     for name in prev_by:
-        if name not in cur_names:
-            print(f"    DROPPED: {name} (in baseline, missing from current run)")
-            failures.append(name)
+        if name in cur_names:
+            continue
+        stem, kinds = axis_key(name)
+        if kinds and (stem, kinds) in new_keys:
+            print(f"   MIGRATED: {name} (axis re-pointed; new same-axis sibling measured)")
+            continue
+        print(f"    DROPPED: {name} (in baseline, missing from current run)")
+        failures.append(name)
     if failures:
         print(f"regression gate FAILED at {tol:.2f}x tolerance: {failures}")
         return 1

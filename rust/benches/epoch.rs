@@ -61,12 +61,14 @@ fn main() {
     }
 
     // forward–communication–backward overlap axis: depth 1 runs rounds
-    // synchronously (engines idle through the FA drain), depth 2 defers
-    // each round's backward+update into the next round's call. Network
-    // latency makes the drain window the cost that depth 2 hides, so
-    // depth2/depth1 samples_per_s is the overlap win under latency.
+    // synchronously (engines idle through the FA drain), depth D ≥ 2
+    // keeps a ring of up to D-1 rounds in flight. Network latency makes
+    // the drain window the cost the ring hides, so depthD/depth1
+    // samples_per_s is the overlap win under latency — depth 4 shows
+    // what the extra in-flight rounds buy beyond the single deferred
+    // window.
     let overlap_ds = synth::table2_like("rcv1", 512, 2048, Loss::LogReg, 7);
-    for depth in [1usize, 2] {
+    for depth in [1usize, 2, 4] {
         let mut cfg = SystemConfig::default();
         cfg.cluster.workers = 2;
         cfg.cluster.engines = 2;

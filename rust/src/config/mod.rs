@@ -41,13 +41,15 @@ pub struct ClusterConfig {
     /// thread pool (clamped to the engine count). A pure throughput
     /// knob: numerics are invariant (see `engine::runner`).
     pub engine_threads: usize,
-    /// Forward–communication–backward overlap depth: 1 (default) runs
-    /// mini-batch rounds synchronously — bit-compatible with the
-    /// pre-overlap pipeline — while 2 defers each round's
-    /// backward+update into the next round's call, draining the network
-    /// while the engines run backward. Depth 2 trades one round of
-    /// model staleness (bounded: epoch boundaries flush) for hiding
-    /// aggregation latency behind compute (see `pipeline`).
+    /// Forward–communication–backward overlap depth D ∈ 1..=8:
+    /// 1 (default) runs mini-batch rounds synchronously —
+    /// bit-compatible with the pre-overlap pipeline — while D ≥ 2
+    /// keeps a ring of up to D-1 rounds in flight, draining the
+    /// network while the engines run their backwards (each round
+    /// accumulates into its own gradient slot). Depth D trades up to
+    /// D-1 rounds of model staleness (bounded: epoch boundaries flush
+    /// the whole ring) for hiding aggregation latency behind compute
+    /// (see `pipeline`).
     pub pipeline_depth: usize,
     /// Per-worker in-flight window (max outstanding aggregation
     /// operations). The switch itself always provisions the paper's
@@ -58,6 +60,24 @@ pub struct ClusterConfig {
 impl Default for ClusterConfig {
     fn default() -> Self {
         Self { workers: 4, engines: 8, engine_threads: 1, pipeline_depth: 1, slots: 64 }
+    }
+}
+
+impl ClusterConfig {
+    /// Per-worker `AggClient` window after depth scaling: D rounds of
+    /// outstanding seqs must fit without backpressure, capped at the
+    /// protocol's window ceiling (`SEQ_SPACE / 4` — windows must stay
+    /// ≪ the 64K seq space). Both trainers size their clients with
+    /// this; `docs/CONFIG.md` documents it next to `slots`.
+    pub fn effective_window(&self) -> usize {
+        (self.slots * self.pipeline_depth).min(crate::worker::agg_client::SEQ_SPACE / 4)
+    }
+
+    /// Switch per-slot FA ring width for this overlap depth: a depth-D
+    /// worker pipeline may park the FAs of up to D rounds before
+    /// dropping them (minimum 2 — the pre-ring buffer pair).
+    pub fn fa_ring(&self) -> usize {
+        self.pipeline_depth.max(2)
     }
 }
 
@@ -212,9 +232,10 @@ impl SystemConfig {
         if c.engine_threads == 0 || c.engine_threads > 8 {
             bail!("engine_threads must be in 1..=8 (one thread per engine max), got {}", c.engine_threads);
         }
-        if !(1..=2).contains(&c.pipeline_depth) {
+        if !(1..=8).contains(&c.pipeline_depth) {
             bail!(
-                "pipeline_depth must be 1 (synchronous) or 2 (one-round overlap), got {}",
+                "pipeline_depth must be in 1..=8 (1 = synchronous, D = up to D-1 rounds of \
+                 overlap), got {}",
                 c.pipeline_depth
             );
         }
@@ -311,15 +332,39 @@ mod tests {
 
     #[test]
     fn pipeline_depth_parsed_and_bounded() {
-        let cfg = SystemConfig::from_toml("[cluster]\npipeline_depth = 2").unwrap();
-        assert_eq!(cfg.cluster.pipeline_depth, 2);
+        let cfg = SystemConfig::from_toml("[cluster]\npipeline_depth = 4").unwrap();
+        assert_eq!(cfg.cluster.pipeline_depth, 4);
         // unspecified -> synchronous default
         assert_eq!(SystemConfig::default().cluster.pipeline_depth, 1);
+        // the full ring range validates
+        for d in 1..=8 {
+            let mut ok = SystemConfig::default();
+            ok.cluster.pipeline_depth = d;
+            ok.validate().unwrap();
+        }
         let mut bad = SystemConfig::default();
         bad.cluster.pipeline_depth = 0;
         assert!(bad.validate().is_err());
-        bad.cluster.pipeline_depth = 3;
+        bad.cluster.pipeline_depth = 9;
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn effective_window_scales_with_depth_and_caps() {
+        let mut cfg = SystemConfig::default();
+        cfg.cluster.slots = 64;
+        cfg.cluster.pipeline_depth = 1;
+        assert_eq!(cfg.cluster.effective_window(), 64);
+        cfg.cluster.pipeline_depth = 4;
+        assert_eq!(cfg.cluster.effective_window(), 256);
+        // the cap: max slots x max depth stays a valid AggClient window
+        cfg.cluster.slots = 1 << 14;
+        cfg.cluster.pipeline_depth = 8;
+        assert_eq!(cfg.cluster.effective_window(), crate::worker::agg_client::SEQ_SPACE / 4);
+        // FA ring: never below the pre-ring pair, scales with depth
+        assert_eq!(cfg.cluster.fa_ring(), 8);
+        cfg.cluster.pipeline_depth = 1;
+        assert_eq!(cfg.cluster.fa_ring(), 2);
     }
 
     #[test]

@@ -8,14 +8,14 @@
 //! with D instead of B, which is exactly why the paper argues for model
 //! parallelism on GLMs.
 //!
-//! With `cluster.pipeline_depth = 2` the DP worker overlaps too: batch
-//! *k*'s gradient chunks fly through the switch while batch *k+1*'s
-//! local forward/backward computes against the (one-update-stale)
-//! model; the reduce is finished — and the update applied — only when
-//! batch *k+1*'s compute is done. The in-flight reduce is flushed at
-//! every epoch boundary, both to bound staleness and because the
-//! epoch-loss AllReduce shares the seq stream and would otherwise
-//! swallow the gradient FAs.
+//! With `cluster.pipeline_depth = D ≥ 2` the DP worker overlaps too:
+//! a ring of up to D-1 batches' gradient AllReduces fly through the
+//! switch while the next batch computes against the (up to D-1
+//! updates stale) model; the *oldest* reduce is finished — and its
+//! update applied — only when the ring is full, and updates apply in
+//! batch order. The whole ring is flushed at every epoch boundary,
+//! both to bound staleness and because the epoch-loss AllReduce shares
+//! the seq stream and would otherwise swallow the gradient FAs.
 
 use super::TrainReport;
 use crate::config::SystemConfig;
@@ -61,8 +61,13 @@ pub fn train_dp(
 
     let mut endpoints = SimNet::build(m + 1, &cfg.net);
     let switch_ep = endpoints.pop().unwrap();
+    // Window and switch FA ring scale with the overlap depth, exactly
+    // like the MP trainer: D rounds of chunks may be outstanding.
+    let depth = cfg.cluster.pipeline_depth;
+    let window = cfg.cluster.effective_window();
     let server = runner::spawn(
-        P4Switch::new(crate::worker::agg_client::SEQ_SPACE, m, GRAD_CHUNK),
+        P4Switch::new(crate::worker::agg_client::SEQ_SPACE, m, GRAD_CHUNK)
+            .with_fa_ring(cfg.cluster.fa_ring()),
         switch_ep,
     );
 
@@ -86,7 +91,7 @@ pub fn train_dp(
                     ep,
                     switch_node(m),
                     w,
-                    cfg.cluster.slots,
+                    window,
                     Duration::from_micros(cfg.net.timeout_us),
                 );
                 let mut x = vec![0.0f32; d_pad];
@@ -106,13 +111,13 @@ pub fn train_dp(
                 let micro_per_batch = local_b / mb;
                 let batches = n_micro / micro_per_batch;
                 let mut fa = vec![0.0f32; mb];
-                // Depth-2 overlap state: the gradient being AllReduced
-                // while the next batch computes, plus reduce bookkeeping.
-                let depth = cfg.cluster.pipeline_depth;
-                let mut g_fly = vec![0.0f32; d_pad];
-                let mut reduce = GradReduce::default();
+                // Depth-D overlap state: a ring of up to D-1 gradients
+                // being AllReduced while the next batch computes, each
+                // with its own chunk bookkeeping; one shared chunk
+                // encode buffer. Capacity 0 at depth 1 — the ring code
+                // is unreachable there, so no dead d_pad buffer.
+                let mut ring = ReduceRing::new(depth.saturating_sub(1), d_pad);
                 let mut chunk_buf = vec![0i32; GRAD_CHUNK];
-                let mut in_fly = false;
                 let inv_b = 1.0 / t.batch as f32;
                 let mut pstats = PipelineStats::default();
                 for _ in 0..t.epochs {
@@ -121,43 +126,41 @@ pub fn train_dp(
                         let retrans_mark = agg.stats.retransmits;
                         g.iter_mut().for_each(|v| *v = 0.0);
                         // Local forward+backward (no inter-worker
-                        // dependency); at depth 2 the model is one update
-                        // stale while the previous batch's gradient is
-                        // still in the switch.
+                        // dependency); at depth D the model is up to D-1
+                        // updates stale while older batches' gradients
+                        // are still in the switch.
                         for j in 0..micro_per_batch {
                             let (pb, y) = &packed[b * micro_per_batch + j];
                             compute.forward_into(pb, &x, &mut fa);
                             epoch_loss += compute.loss_sum(&fa, y, t.loss);
                             compute.backward_acc_planes(pb, &fa, y, &mut g, t.lr, t.loss);
-                            // Keep the in-flight reduce moving between
+                            // Keep every in-flight reduce moving between
                             // micro-batches: completed chunks free window
-                            // slots for the unsent tail, so overlap isn't
-                            // capped at slots*GRAD_CHUNK elements when
+                            // slots for the unsent tails, so overlap isn't
+                            // capped at window*GRAD_CHUNK elements when
                             // D is large (the regime DP suffers in).
-                            if in_fly {
-                                while pump_reduce(
-                                    &mut agg,
-                                    &mut g_fly,
-                                    &mut reduce,
-                                    &mut chunk_buf,
-                                    Duration::ZERO,
-                                ) {}
+                            if ring.live > 0 {
+                                while pump_ring(&mut agg, &mut ring, &mut chunk_buf, Duration::ZERO) {}
                             }
                         }
                         if depth >= 2 {
-                            // Retire batch b-1: its chunks had this whole
-                            // batch's compute to fly through the switch.
-                            if in_fly {
-                                finish_reduce(&mut agg, &mut g_fly, &mut reduce, &mut chunk_buf);
-                                compute.update(&mut x, &g_fly, inv_b);
+                            // This batch computed against a model
+                            // ring.live updates behind the synchronous
+                            // schedule.
+                            pstats.depth.observe_round(ring.live, ring.live + 1);
+                            // Ring full: retire the oldest batch's
+                            // reduce — its chunks had D-1 batches of
+                            // compute to fly through the switch.
+                            if ring.live == ring.cap() {
+                                let s = finish_oldest(&mut agg, &mut ring, &mut chunk_buf);
+                                compute.update(&mut x, &ring.slots[s].buf, inv_b);
                                 pstats.deferred_rounds += 1;
                             }
-                            // Launch batch b's reduce and let it fly while
-                            // batch b+1 computes.
-                            std::mem::swap(&mut g, &mut g_fly);
-                            start_reduce(&mut agg, &mut g_fly, &mut reduce, &mut chunk_buf);
-                            in_fly = true;
+                            // Launch batch b's reduce and let it fly
+                            // while later batches compute.
+                            launch_reduce(&mut agg, &mut ring, &mut g, &mut chunk_buf);
                         } else {
+                            pstats.depth.observe_round(0, 1);
                             // AllReduce the gradient in chunks through the
                             // switch, then step.
                             allreduce_grad(&mut agg, &mut g);
@@ -169,14 +172,14 @@ pub fn train_dp(
                     // the per-round deltas keep partitioning the
                     // cumulative retransmit counter exactly.
                     let boundary_mark = agg.stats.retransmits;
-                    // Final-round flush, before anything else shares the
-                    // seq stream: the epoch-loss AllReduce below would
-                    // otherwise consume — and drop — the in-flight FAs.
-                    if in_fly {
-                        finish_reduce(&mut agg, &mut g_fly, &mut reduce, &mut chunk_buf);
-                        compute.update(&mut x, &g_fly, inv_b);
+                    // Ring flush, in batch order, before anything else
+                    // shares the seq stream: the epoch-loss AllReduce
+                    // below would otherwise consume — and drop — the
+                    // in-flight FAs. Staleness never crosses the epoch.
+                    while ring.live > 0 {
+                        let s = finish_oldest(&mut agg, &mut ring, &mut chunk_buf);
+                        compute.update(&mut x, &ring.slots[s].buf, inv_b);
                         pstats.deferred_rounds += 1;
-                        in_fly = false;
                     }
                     // AllReduce the epoch loss so every worker logs the
                     // global value (one extra chunk round).
@@ -231,16 +234,14 @@ struct GradReduce {
     chunks: usize,
 }
 
-/// Fill the send window from `buf`, then poll once with `budget`,
-/// folding a returned FA chunk back into `buf`. Returns `false` when
-/// the budget expired without an event.
-fn pump_reduce<T: crate::net::Transport>(
+/// Push unsent chunks of one reduce into the client's send window
+/// (until the window backpressures or the reduce is fully sent).
+fn fill_window<T: crate::net::Transport>(
     agg: &mut AggClient<T>,
-    buf: &mut [f32],
+    buf: &[f32],
     st: &mut GradReduce,
     chunk_buf: &mut [i32],
-    budget: Duration,
-) -> bool {
+) {
     while st.sent < st.chunks {
         let lo = st.sent * GRAD_CHUNK;
         let hi = (lo + GRAD_CHUNK).min(buf.len());
@@ -256,22 +257,151 @@ fn pump_reduce<T: crate::net::Transport>(
             None => break,
         }
     }
+}
+
+/// Fold one returned FA chunk back into `buf` if `seq` belongs to this
+/// reduce. Returns whether it did.
+fn fold_chunk(buf: &mut [f32], st: &mut GradReduce, seq: u16, payload: &[i32]) -> bool {
+    let Some(pos) = st.inflight.iter().position(|(s, _)| *s == seq) else {
+        return false;
+    };
+    let (_, c) = st.inflight.swap_remove(pos);
+    let lo = c * GRAD_CHUNK;
+    let hi = (lo + GRAD_CHUNK).min(buf.len());
+    for (o, &v) in buf[lo..hi].iter_mut().zip(payload.iter()) {
+        *o = from_fixed(v);
+    }
+    st.done += 1;
+    true
+}
+
+/// Fill the send window from `buf`, then poll once with `budget`,
+/// folding a returned FA chunk back into `buf`. Returns `false` when
+/// the budget expired without an event.
+fn pump_reduce<T: crate::net::Transport>(
+    agg: &mut AggClient<T>,
+    buf: &mut [f32],
+    st: &mut GradReduce,
+    chunk_buf: &mut [i32],
+    budget: Duration,
+) -> bool {
+    fill_window(agg, buf, st, chunk_buf);
     match agg.poll(budget) {
         Some(Event::Fa { seq, payload }) => {
-            if let Some(pos) = st.inflight.iter().position(|(s, _)| *s == seq) {
-                let (_, c) = st.inflight.swap_remove(pos);
-                let lo = c * GRAD_CHUNK;
-                let hi = (lo + GRAD_CHUNK).min(buf.len());
-                for (o, &v) in buf[lo..hi].iter_mut().zip(payload.iter()) {
-                    *o = from_fixed(v);
+            fold_chunk(buf, st, seq, &payload);
+            true
+        }
+        Some(_) => true,
+        None => false,
+    }
+}
+
+/// One in-flight chunked AllReduce: bookkeeping plus the gradient
+/// buffer being reduced in place. Buffers are preallocated and reused
+/// ring-slot over ring-slot (the launch swaps the worker's accumulator
+/// in).
+#[derive(Debug, Default)]
+struct ReduceSlot {
+    st: GradReduce,
+    buf: Vec<f32>,
+}
+
+/// Ring of flying reduces, oldest at `head` — the DP mirror of the MP
+/// pipeline's round ring. Capacity `depth - 1`: the batch being
+/// computed is the assembling "round".
+struct ReduceRing {
+    slots: Vec<ReduceSlot>,
+    head: usize,
+    live: usize,
+}
+
+impl ReduceRing {
+    fn new(cap: usize, d_pad: usize) -> Self {
+        Self {
+            slots: (0..cap)
+                .map(|_| ReduceSlot { st: GradReduce::default(), buf: vec![0.0f32; d_pad] })
+                .collect(),
+            head: 0,
+            live: 0,
+        }
+    }
+
+    fn cap(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+/// Fill the shared send window from every flying reduce (oldest first,
+/// so the next-to-retire drains soonest), then poll once with `budget`,
+/// routing a returned FA chunk to whichever reduce owns its seq.
+/// Returns `false` when the budget expired without an event.
+fn pump_ring<T: crate::net::Transport>(
+    agg: &mut AggClient<T>,
+    ring: &mut ReduceRing,
+    chunk_buf: &mut [i32],
+    budget: Duration,
+) -> bool {
+    let (cap, head, live) = (ring.cap(), ring.head, ring.live);
+    for k in 0..live {
+        let s = &mut ring.slots[(head + k) % cap];
+        fill_window(agg, &s.buf, &mut s.st, chunk_buf);
+    }
+    match agg.poll(budget) {
+        Some(Event::Fa { seq, payload }) => {
+            for k in 0..live {
+                let s = &mut ring.slots[(head + k) % cap];
+                if fold_chunk(&mut s.buf, &mut s.st, seq, &payload) {
+                    break;
                 }
-                st.done += 1;
             }
             true
         }
         Some(_) => true,
         None => false,
     }
+}
+
+/// Drive the *oldest* flying reduce to completion and pop it from the
+/// ring; returns its slot index so the caller can apply the update
+/// (updates must go in batch order). Younger reduces keep flying —
+/// their chunks are pumped alongside.
+fn finish_oldest<T: crate::net::Transport>(
+    agg: &mut AggClient<T>,
+    ring: &mut ReduceRing,
+    chunk_buf: &mut [i32],
+) -> usize {
+    debug_assert!(ring.live > 0, "no reduce in flight");
+    let i = ring.head;
+    while ring.slots[i].st.done < ring.slots[i].st.chunks {
+        pump_ring(agg, ring, chunk_buf, Duration::from_millis(20));
+    }
+    ring.head = (ring.head + 1) % ring.cap();
+    ring.live -= 1;
+    i
+}
+
+/// Launch a reduce of `g` in the next free ring slot: swap the
+/// accumulator in (the slot's previous buffer becomes the caller's
+/// next accumulator — zeroed at batch start), reset the bookkeeping,
+/// fill the window, and drain whatever returns instantly without
+/// blocking, so the caller can go compute the next batch while the
+/// chunks fly.
+fn launch_reduce<T: crate::net::Transport>(
+    agg: &mut AggClient<T>,
+    ring: &mut ReduceRing,
+    g: &mut Vec<f32>,
+    chunk_buf: &mut [i32],
+) {
+    debug_assert!(ring.live < ring.cap(), "reduce ring full — finish the oldest first");
+    let i = (ring.head + ring.live) % ring.cap();
+    let s = &mut ring.slots[i];
+    std::mem::swap(g, &mut s.buf);
+    s.st.inflight.clear();
+    s.st.sent = 0;
+    s.st.done = 0;
+    s.st.chunks = s.buf.len().div_ceil(GRAD_CHUNK);
+    ring.live += 1;
+    while pump_ring(agg, ring, chunk_buf, Duration::ZERO) {}
 }
 
 /// Launch an AllReduce of `buf`: reset `st`, fill the window, and drain
@@ -290,8 +420,9 @@ fn start_reduce<T: crate::net::Transport>(
     while pump_reduce(agg, buf, st, chunk_buf, Duration::ZERO) {}
 }
 
-/// Drive an in-flight AllReduce to completion (depth 1 calls this right
-/// after [`start_reduce`]; depth 2 one batch of compute later).
+/// Drive a standalone AllReduce to completion right after
+/// [`start_reduce`] (the depth-1 path; the overlapped path rides
+/// [`ReduceRing`] instead).
 fn finish_reduce<T: crate::net::Transport>(
     agg: &mut AggClient<T>,
     buf: &mut [f32],
@@ -369,6 +500,26 @@ mod tests {
         assert_eq!(rep.pipeline.net.rounds, (batches + 1) * 6 * 2);
         assert!(rep.agg.retransmits > 0, "5% loss must retransmit");
         assert_eq!(rep.pipeline.net.retransmits, rep.agg.retransmits);
+        let first = rep.loss_per_epoch[0];
+        let last = *rep.loss_per_epoch.last().unwrap();
+        assert!(last < 0.8 * first, "{:?}", rep.loss_per_epoch);
+    }
+
+    #[test]
+    fn dp_depth_four_ring_converges() {
+        // Up to three batches' gradient reduces in flight at once;
+        // updates still apply in batch order, staleness stays below the
+        // depth, and every reduce retires exactly once.
+        let ds = synth::separable(256, 64, Loss::LogReg, 0.0, 26);
+        let mut c = cfg(2);
+        c.cluster.pipeline_depth = 4;
+        c.train.epochs = 6;
+        let rep = train_dp(&c, &ds, &native);
+        let batches = (128 / (c.train.batch / 2)) as u64; // per-worker shard / local B
+        assert_eq!(rep.pipeline.deferred_rounds, batches * 6 * 2);
+        assert_eq!(rep.pipeline.net.rounds, (batches + 1) * 6 * 2);
+        assert!(rep.pipeline.depth.max_staleness() <= 3, "{:?}", rep.pipeline.depth);
+        assert_eq!(rep.pipeline.depth.max_in_flight, 4, "{:?}", rep.pipeline.depth);
         let first = rep.loss_per_epoch[0];
         let last = *rep.loss_per_epoch.last().unwrap();
         assert!(last < 0.8 * first, "{:?}", rep.loss_per_epoch);

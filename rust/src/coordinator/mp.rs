@@ -52,9 +52,17 @@ pub fn train_mp(cfg: &SystemConfig, ds: &Dataset, make_compute: &ComputeFactory)
     let mut endpoints = SimNet::build(m + 1, &cfg.net);
     let switch_ep = endpoints.pop().unwrap();
     // Paper §4.2: the switch provisions the full 16-bit slot space;
-    // cfg.cluster.slots is the per-worker in-flight *window*.
-    let server =
-        runner::spawn(P4Switch::new(crate::worker::agg_client::SEQ_SPACE, m, t.micro_batch), switch_ep);
+    // cfg.cluster.slots is the per-worker in-flight *window*, scaled by
+    // the pipeline depth so D rounds of outstanding seqs fit without
+    // backpressure. The switch's per-slot FA ring is sized to the depth
+    // too (parked FAs from D rounds may pin multicast buffers).
+    let depth = cfg.cluster.pipeline_depth;
+    let window = cfg.cluster.effective_window();
+    let server = runner::spawn(
+        P4Switch::new(crate::worker::agg_client::SEQ_SPACE, m, t.micro_batch)
+            .with_fa_ring(cfg.cluster.fa_ring()),
+        switch_ep,
+    );
 
     let (res_tx, res_rx) = mpsc::channel::<WorkerResult>();
     std::thread::scope(|scope| {
@@ -72,27 +80,29 @@ pub fn train_mp(cfg: &SystemConfig, ds: &Dataset, make_compute: &ComputeFactory)
                 ));
                 // Per-engine state + compute live in the runner: serial
                 // on this thread, or a persistent per-engine pool when
-                // engine_threads > 1.
-                let mut runner = EngineRunner::new(
+                // engine_threads > 1. One gradient slot (and backward
+                // ring entry) per pipeline-depth level.
+                let mut runner = EngineRunner::with_rounds(
                     prep.clone(),
                     &|e| make_compute(w, e),
                     cfg.cluster.engine_threads,
+                    depth,
                 );
                 let mut agg = AggClient::new(
                     ep,
                     switch_node(m),
                     w,
-                    cfg.cluster.slots,
+                    window,
                     Duration::from_micros(cfg.net.timeout_us),
                 );
                 let per_batch = t.batch / t.micro_batch;
                 let batches = prep.micro_batches() / per_batch;
                 let mut pstats = PipelineStats::default();
-                // One scratch per worker: after the first mini-batch the
-                // steady-state loop never allocates. The scratch fixes
-                // the overlap depth (1 = synchronous, bit-compatible;
-                // 2 = backward+update deferred one round).
-                let mut scratch = PipelineScratch::with_depth(cfg.cluster.pipeline_depth);
+                // One scratch per worker: once the round ring is warm
+                // the steady-state loop never allocates. The scratch
+                // fixes the overlap depth (1 = synchronous,
+                // bit-compatible; D ≥ 2 = up to D-1 rounds in flight).
+                let mut scratch = PipelineScratch::with_depth(depth);
                 let mut loss_curve = Vec::with_capacity(t.epochs);
                 for _ in 0..t.epochs {
                     let mut epoch_loss = 0.0f32;
@@ -108,7 +118,7 @@ pub fn train_mp(cfg: &SystemConfig, ds: &Dataset, make_compute: &ComputeFactory)
                             &mut scratch,
                         );
                     }
-                    // Depth-2: retire the round still in flight, so each
+                    // Depth ≥ 2: drain the whole round ring, so each
                     // epoch's loss covers exactly its own rounds and the
                     // model is consistent at the boundary (staleness
                     // never crosses an epoch). No-op at depth 1.
@@ -239,6 +249,29 @@ mod tests {
         assert_eq!(rep.pipeline.deferred_rounds, batches * 6 * 2);
         // and per-round net stats saw every round plus one flush per epoch
         assert_eq!(rep.pipeline.net.rounds, (batches + 1) * 6 * 2);
+        let first = rep.loss_per_epoch[0];
+        let last = *rep.loss_per_epoch.last().unwrap();
+        assert!(last < 0.8 * first, "{:?}", rep.loss_per_epoch);
+    }
+
+    #[test]
+    fn overlap_depth_four_rides_the_ring() {
+        // Depth 4: up to three rounds in flight between calls. Every
+        // round must still retire exactly once (through the ring or the
+        // epoch flush), staleness must stay below the depth, and the
+        // per-round net observations must keep partitioning the counter.
+        let ds = synth::separable(256, 96, Loss::LogReg, 0.0, 15);
+        let mut c = cfg(2);
+        c.cluster.pipeline_depth = 4;
+        c.train.epochs = 6;
+        let rep = train_mp(&c, &ds, &native);
+        let batches = (256 / c.train.batch) as u64;
+        assert_eq!(rep.pipeline.deferred_rounds, batches * 6 * 2);
+        assert_eq!(rep.pipeline.net.rounds, (batches + 1) * 6 * 2);
+        assert!(rep.pipeline.depth.max_staleness() <= 3, "{:?}", rep.pipeline.depth);
+        assert!(rep.pipeline.depth.max_in_flight <= 4, "{:?}", rep.pipeline.depth);
+        // with 8 batches/epoch the ring actually fills
+        assert_eq!(rep.pipeline.depth.max_in_flight, 4, "{:?}", rep.pipeline.depth);
         let first = rep.loss_per_epoch[0];
         let last = *rep.loss_per_epoch.last().unwrap();
         assert!(last < 0.8 * first, "{:?}", rep.loss_per_epoch);

@@ -27,11 +27,13 @@
 //! model/gradient slices (hence the `Send` bound on the trait: a
 //! backend is *moved into* its engine thread at construction, never
 //! shared), and jobs hand off through preallocated Condvar/epoch slots
-//! so the pool preserves the zero-allocation steady state. The backward
-//! additionally splits into non-blocking dispatch / probe / join
-//! ([`EngineRunner::dispatch_backward`] et al.) so the depth-2 pipeline
-//! can drain the network while the engines run. See [`runner`] for the
-//! ownership/handoff protocol.
+//! so the pool preserves the zero-allocation steady state. Backwards
+//! are slot-indexed and queued — one gradient slot per in-flight
+//! pipeline round, dispatched without blocking and reaped in order
+//! ([`EngineRunner::dispatch_backward`] /
+//! [`EngineRunner::try_reap_backward`]) — so the depth-D pipeline can
+//! drain the network while the engines run backwards from several
+//! rounds at once. See [`runner`] for the ownership/handoff protocol.
 
 pub mod bitserial;
 pub mod runner;

@@ -4,9 +4,9 @@
 //! The paper's worker instantiates `N` engines that process every
 //! micro-batch in lockstep, each over its own vertical slice of the
 //! model. This module gives the software worker the same shape: the
-//! runner owns all per-engine state (model slice `x`, gradient slice
-//! `g`, one [`Compute`] backend per engine, forward scratch) and
-//! executes forward / backward / update either
+//! runner owns all per-engine state (model slice `x`, per-round
+//! gradient slices `g[slot]`, one [`Compute`] backend per engine,
+//! forward scratch) and executes forward / backward / update either
 //!
 //! * **serially** on the caller's thread (`engine_threads = 1`, the
 //!   default — bit-compatible with the pre-runner pipeline), or
@@ -20,43 +20,52 @@
 //! Compute>`, model/gradient slices, and the `Arc<PreparedShard>` it
 //! reads micro-batches from. Nothing engine-local is ever shared or
 //! locked; the only shared state is one preallocated job slot per
-//! thread:
+//! thread, carrying a single *synchronous* job (forward, update,
+//! import/export) plus a fixed ring of *queued backward* entries:
 //!
 //! ```text
 //! dispatcher                       engine thread t
 //! ----------                      ----------------
-//! lock slot.m                      wait on slot.cv while
-//!   write job (Copy enum)            completed == epoch
-//!   copy fa into slot.fa (≤ MB)
-//!   epoch += 1
-//! notify slot.cv        ───────▶  run job against owned engines,
-//! ...                              writing PA rows into slot.out
-//! lock slot.m                      completed = epoch
-//! wait slot.done_cv     ◀───────  notify slot.done_cv
-//!   while completed != epoch
-//! fan-in slot.out (engine order)
+//! lock slot.m                      wait on slot.cv while idle
+//!   publish sync job (epoch += 1)
+//!   or push backward ring entry
+//!     (copy fa, bq_tail += 1)
+//! notify slot.cv        ───────▶  sync job: run under the lock,
+//! ...                              completed = epoch
+//! lock slot.m                      backward: swap fa out, UNLOCK,
+//! wait slot.done_cv     ◀───────   replay planes into g[slot],
+//!   (epoch or bq_done)             relock, bq_done += 1
 //! ```
 //!
-//! The handoff is a Mutex/Condvar epoch pair over preallocated buffers:
-//! no channel, no queue node, no payload allocation per dispatch — the
+//! The handoff is a Mutex/Condvar pair over preallocated buffers: no
+//! channel, no queue node, no payload allocation per dispatch — the
 //! steady-state training loop stays **zero-allocation** with the pool
-//! active (enforced by `tests/alloc_steady_state.rs`).
+//! active (enforced by `tests/alloc_steady_state.rs`), at every
+//! pipeline depth.
 //!
-//! # Dispatch/join split (overlapped pipeline)
+//! # Round ring (slot-indexed backwards)
 //!
-//! The backward is also exposed in a split form for the depth-2
-//! forward–communication–backward pipeline: [`EngineRunner::dispatch_backward`]
-//! publishes the job and returns immediately (pool mode — the engines
-//! run while the worker keeps polling the transport),
-//! [`EngineRunner::backward_done`] probes completion without blocking
-//! (`try_lock`: a slot whose engine thread is mid-job holds the mutex
-//! and reads as not-done), and [`EngineRunner::join_backward`] blocks
-//! for the stragglers and returns the micro-batch loss. At most one
-//! backward may be open at a time, and every other dispatch
-//! (`forward`, `update`, `model`, `set_model`) asserts the window is
-//! closed — the slot protocol runs one job class at a time. The
-//! blocking [`EngineRunner::backward`] is exactly `dispatch` + `join`,
-//! so the split changes no numerics.
+//! The depth-D pipeline keeps up to D mini-batch rounds in flight, so
+//! the runner provisions `rounds` **gradient accumulation slots** per
+//! engine and a backward ring of the same capacity:
+//! [`EngineRunner::dispatch_backward`]`(gslot, ...)` enqueues a
+//! plane-replay job against slot `gslot` and returns immediately (pool
+//! mode executes it *outside* the slot mutex, so dispatching never
+//! blocks behind a running backward); [`EngineRunner::try_reap_backward`]
+//! probes the oldest outstanding job without blocking (`try_lock`);
+//! [`EngineRunner::join_backward`] blocks for it. Jobs complete in
+//! dispatch order and report `(gslot, micro-batch loss)` so the
+//! pipeline can credit the right round. [`EngineRunner::update_slot`]
+//! applies and clears exactly one gradient slot — the pipeline calls it
+//! in round order, after joining that round's backwards (asserted).
+//!
+//! Backwards read only (planes, FA, labels) and write only their own
+//! gradient slot; forwards read only `x`. Jobs from different rounds
+//! therefore commute with forwards and with each other's updates, which
+//! is what lets a depth-D pipeline run round *k*'s backwards before
+//! round *k-1* has retired. The blocking [`EngineRunner::backward`] is
+//! exactly `dispatch(slot 0)` + `join`, so the depth-1 path changes no
+//! numerics.
 //!
 //! # Bit-compatibility
 //!
@@ -71,7 +80,8 @@
 
 use super::Compute;
 use crate::glm::Loss;
-use crate::pipeline::{PreparedShard, WorkerState};
+use crate::pipeline::PreparedShard;
+use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
@@ -79,19 +89,16 @@ use std::thread::JoinHandle;
 /// coordinator curries its per-(worker, engine) factory down to this.
 pub type EngineComputeFactory<'a> = dyn Fn(usize) -> Box<dyn Compute> + 'a;
 
-/// One job published to a pool thread. `Copy` on purpose: publishing a
-/// job writes a small fixed-size value into the slot, never a heap
-/// object.
+/// One synchronous job published to a pool thread. `Copy` on purpose:
+/// publishing writes a small fixed-size value into the slot, never a
+/// heap object. (Backwards travel through the slot's ring instead.)
 #[derive(Debug, Clone, Copy)]
 enum Job {
     Idle,
     /// Forward micro-batch `idx` on every owned engine into `slot.out`.
     Forward { idx: usize },
-    /// Replay micro-batch `idx` planes against `slot.fa`, accumulating
-    /// owned gradients; the engine-0 thread also writes `slot.loss_out`.
-    Backward { idx: usize, lr: f32, loss: Loss },
-    /// `x -= g * inv_b` then zero `g` on every owned engine.
-    Update { inv_b: f32 },
+    /// `x -= g[gslot] * inv_b` then zero `g[gslot]` on every owned engine.
+    Update { gslot: usize, inv_b: f32 },
     /// Copy owned (padded) model slices into `slot.xfer`.
     Export,
     /// Load owned (padded) model slices from `slot.xfer`.
@@ -99,38 +106,74 @@ enum Job {
     Shutdown,
 }
 
+/// One queued backward: plane-replay micro-batch `idx` against `fa`,
+/// accumulating into gradient slot `gslot`. Buffers are preallocated at
+/// construction and reused ring-slot over ring-slot.
+#[derive(Debug, Default)]
+struct BwdEntry {
+    idx: usize,
+    gslot: usize,
+    lr: f32,
+    loss: Loss,
+    /// Full activations input (MB wide, capacity warm after the entry's
+    /// first use).
+    fa: Vec<f32>,
+    /// Micro-batch loss sum (engine-0 thread only).
+    loss_out: f32,
+}
+
 /// Shared job slot between the dispatcher and one pool thread.
 struct Slot {
     m: Mutex<SlotState>,
-    /// Dispatcher -> engine thread: a new epoch was published.
+    /// Dispatcher -> engine thread: new work was published.
     cv: Condvar,
-    /// Engine thread -> dispatcher: the published epoch completed.
+    /// Engine thread -> dispatcher: published work completed.
     done_cv: Condvar,
 }
 
 struct SlotState {
-    /// Bumped by the dispatcher when a job is published.
+    /// Bumped by the dispatcher when a synchronous job is published.
     epoch: u64,
-    /// Epoch of the last job the engine thread finished.
+    /// Epoch of the last synchronous job the engine thread finished.
     completed: u64,
     job: Job,
-    /// Full activations input for `Backward` (MB wide, capacity warm
-    /// after the first backward).
-    fa: Vec<f32>,
+    /// Backward ring (capacity = the runner's round count); entry `i`
+    /// of dispatch counter `i` lives at `i % len`.
+    bq: Vec<BwdEntry>,
+    /// Backwards published / executed (monotonic counters).
+    bq_tail: u64,
+    bq_done: u64,
     /// Per-engine forward outputs, `out[i * mb..(i + 1) * mb]` for the
     /// thread's i-th owned engine. Preallocated at construction.
     out: Vec<f32>,
-    /// Micro-batch loss sum (engine-0 thread, `Backward` jobs).
-    loss_out: f32,
     /// Model import/export staging (cold path only).
     xfer: Vec<f32>,
+    /// The engine thread died outside the lock (see [`DeathNotice`]).
+    dead: bool,
+}
+
+/// Panic telltale for the out-of-lock backward execution window: a
+/// compute panic there poisons no mutex, so without this the dispatcher
+/// would block forever on `done_cv`. Armed before the unlocked section,
+/// disarmed (`mem::forget`) after it; on unwind it marks the slot dead
+/// and wakes the dispatcher, which panics in turn.
+struct DeathNotice<'a>(&'a Slot);
+
+impl Drop for DeathNotice<'_> {
+    fn drop(&mut self) {
+        if let Ok(mut st) = self.0.m.lock() {
+            st.dead = true;
+        }
+        self.0.done_cv.notify_all();
+    }
 }
 
 /// Engine state owned by exactly one thread (or by the serial runner).
 struct EngineLocal {
     engine: usize,
     x: Vec<f32>,
-    g: Vec<f32>,
+    /// One gradient accumulator per round slot.
+    g: Vec<Vec<f32>>,
     compute: Box<dyn Compute>,
 }
 
@@ -142,9 +185,15 @@ struct EngineLocal {
 struct Serial {
     prep: Arc<PreparedShard>,
     compute: Box<dyn Compute>,
-    state: WorkerState,
+    /// Per-engine model slices (padded).
+    x: Vec<Vec<f32>>,
+    /// Gradient slots: `g[gslot][engine]`.
+    g: Vec<Vec<Vec<f32>>>,
     /// Single engine's forward output (MB wide).
     pa_e: Vec<f32>,
+    /// Losses of dispatched-not-reaped backwards (serial mode executes
+    /// inline at dispatch; reaping merely reports, in dispatch order).
+    losses: VecDeque<f32>,
 }
 
 /// The persistent per-engine thread pool.
@@ -155,6 +204,8 @@ struct Pool {
     /// Engine ranges `[lo, hi)` owned by each thread, in engine order.
     chunks: Vec<(usize, usize)>,
     mb: usize,
+    /// Backward-ring capacity (== the runner's round count).
+    bq_cap: usize,
 }
 
 enum Inner {
@@ -162,33 +213,70 @@ enum Inner {
     Pool(Pool),
 }
 
+/// Dispatcher-side bookkeeping for the backward ring: which gradient
+/// slot each outstanding dispatch targets, and how many are in flight
+/// per slot (updates assert their slot is drained).
+#[derive(Debug)]
+struct BwdTracker {
+    /// Gradient slots == ring capacity == pipeline depth.
+    rounds: usize,
+    dispatched: u64,
+    joined: u64,
+    /// `gslots[i % rounds]` = gradient slot of dispatch `i`.
+    gslots: Vec<usize>,
+    /// Outstanding (unjoined) backwards per gradient slot.
+    per_slot: Vec<u32>,
+}
+
 /// Executes per-engine forward/backward/update for one worker. See the
 /// module docs for the ownership and handoff protocol.
 pub struct EngineRunner {
     inner: Inner,
-    /// A backward was dispatched and not yet joined (see the module
-    /// docs' dispatch/join split).
-    backward_open: bool,
-    /// Loss of an open serial backward (serial mode executes inline at
-    /// dispatch; the join merely reports it).
-    open_loss: f32,
+    trk: BwdTracker,
 }
 
 impl EngineRunner {
+    /// Single-round runner (gradient slot 0 only) — the synchronous
+    /// trainer's shape. Equivalent to [`EngineRunner::with_rounds`]
+    /// with `rounds = 1`.
+    pub fn new(prep: Arc<PreparedShard>, mk: &EngineComputeFactory, threads: usize) -> Self {
+        Self::with_rounds(prep, mk, threads, 1)
+    }
+
     /// Build a runner over `prep` with `threads` engine threads
     /// (clamped to `[1, engines]`; 1 = serial execution on the caller's
-    /// thread). In pool mode `mk` constructs one compute backend per
-    /// engine (each moved onto its thread); serial mode calls `mk(0)`
-    /// once and shares it across engines, like the pre-runner loop.
-    pub fn new(prep: Arc<PreparedShard>, mk: &EngineComputeFactory, threads: usize) -> Self {
+    /// thread) and `rounds` gradient slots / backward-ring entries
+    /// (`1..=8` — the pipeline passes its depth). In pool mode `mk`
+    /// constructs one compute backend per engine (each moved onto its
+    /// thread); serial mode calls `mk(0)` once and shares it across
+    /// engines, like the pre-runner loop.
+    pub fn with_rounds(
+        prep: Arc<PreparedShard>,
+        mk: &EngineComputeFactory,
+        threads: usize,
+        rounds: usize,
+    ) -> Self {
+        assert!((1..=8).contains(&rounds), "rounds must be in 1..=8, got {rounds}");
         let n = prep.engines.len();
         let threads = threads.clamp(1, n.max(1));
-        let state = WorkerState::zeros(&prep);
+        let trk = BwdTracker {
+            rounds,
+            dispatched: 0,
+            joined: 0,
+            gslots: vec![0; rounds],
+            per_slot: vec![0; rounds],
+        };
+        let mk_g = |prep: &PreparedShard| -> Vec<Vec<Vec<f32>>> {
+            (0..rounds).map(|_| prep.engines.iter().map(|s| vec![0.0f32; s.d_pad]).collect()).collect()
+        };
         if threads <= 1 {
             let compute = mk(0);
             let pa_e = vec![0.0f32; prep.mb];
-            let inner = Inner::Serial(Serial { prep, compute, state, pa_e });
-            return Self { inner, backward_open: false, open_loss: 0.0 };
+            let x = prep.engines.iter().map(|s| vec![0.0f32; s.d_pad]).collect();
+            let g = mk_g(&prep);
+            let losses = VecDeque::with_capacity(rounds);
+            let inner = Inner::Serial(Serial { prep, compute, x, g, pa_e, losses });
+            return Self { inner, trk };
         }
 
         // Contiguous near-even engine chunks keep the fan-in in global
@@ -202,15 +290,14 @@ impl EngineRunner {
             lo = hi;
         }
 
-        let mut state = state;
         let mut slots = Vec::with_capacity(threads);
         let mut handles = Vec::with_capacity(threads);
         for (t, &(e_lo, e_hi)) in chunks.iter().enumerate() {
             let locals: Vec<EngineLocal> = (e_lo..e_hi)
                 .map(|e| EngineLocal {
                     engine: e,
-                    x: std::mem::take(&mut state.x[e]),
-                    g: std::mem::take(&mut state.g[e]),
+                    x: vec![0.0f32; prep.engines[e].d_pad],
+                    g: (0..rounds).map(|_| vec![0.0f32; prep.engines[e].d_pad]).collect(),
                     compute: mk(e),
                 })
                 .collect();
@@ -219,10 +306,12 @@ impl EngineRunner {
                     epoch: 0,
                     completed: 0,
                     job: Job::Idle,
-                    fa: Vec::new(),
+                    bq: (0..rounds).map(|_| BwdEntry::default()).collect(),
+                    bq_tail: 0,
+                    bq_done: 0,
                     out: vec![0.0f32; (e_hi - e_lo) * prep.mb],
-                    loss_out: 0.0,
                     xfer: Vec::new(),
+                    dead: false,
                 }),
                 cv: Condvar::new(),
                 done_cv: Condvar::new(),
@@ -232,14 +321,14 @@ impl EngineRunner {
             let mb = prep.mb;
             let handle = std::thread::Builder::new()
                 .name(format!("p4sgd-engines-{t}"))
-                .spawn(move || engine_thread(thread_prep, thread_slot, locals, mb))
+                .spawn(move || engine_thread(thread_prep, thread_slot, locals, mb, t))
                 .expect("spawn engine thread");
             slots.push(slot);
             handles.push(handle);
         }
         let mb = prep.mb;
-        let inner = Inner::Pool(Pool { prep, slots, handles, chunks, mb });
-        Self { inner, backward_open: false, open_loss: 0.0 }
+        let inner = Inner::Pool(Pool { prep, slots, handles, chunks, mb, bq_cap: rounds });
+        Self { inner, trk }
     }
 
     /// The shard this runner executes over.
@@ -263,15 +352,21 @@ impl EngineRunner {
         }
     }
 
+    /// Number of gradient slots (== backward-ring capacity).
+    pub fn rounds(&self) -> usize {
+        self.trk.rounds
+    }
+
     /// Engine-summed PA for micro-batch `idx`, written into `pa`
     /// (`pa.len() == mb`). Fan-in is in engine order on every path.
+    /// Legal with backwards outstanding: forwards read only `x`, which
+    /// no backward touches.
     pub fn forward(&mut self, idx: usize, pa: &mut [f32]) {
-        assert!(!self.backward_open, "forward with an open backward — join it first");
         pa.fill(0.0);
         match &mut self.inner {
             Inner::Serial(s) => {
                 let m = &s.prep.micro[idx];
-                for (ed, xe) in m.per_engine.iter().zip(&s.state.x) {
+                for (ed, xe) in m.per_engine.iter().zip(&s.x) {
                     s.compute.forward_into(ed, xe, &mut s.pa_e);
                     for (p, v) in pa.iter_mut().zip(s.pa_e.iter()) {
                         *p += *v;
@@ -294,105 +389,155 @@ impl EngineRunner {
         }
     }
 
-    /// Plane-replay backward for micro-batch `idx` against full
-    /// activations `fa`: every engine accumulates its gradient slice.
+    /// Blocking plane-replay backward for micro-batch `idx` against
+    /// full activations `fa`, accumulating into gradient slot 0.
     /// Returns the micro-batch loss sum (computed once, on engine 0's
-    /// backend). Exactly [`EngineRunner::dispatch_backward`] followed by
-    /// [`EngineRunner::join_backward`] — the synchronous special case.
+    /// backend). Exactly [`EngineRunner::dispatch_backward`] followed
+    /// by [`EngineRunner::join_backward`] — the synchronous special
+    /// case, so it requires an empty ring.
     pub fn backward(&mut self, idx: usize, fa: &[f32], lr: f32, loss: Loss) -> f32 {
-        self.dispatch_backward(idx, fa, lr, loss);
-        self.join_backward()
+        assert!(
+            self.outstanding_backwards() == 0,
+            "blocking backward with dispatched backwards outstanding — reap them first"
+        );
+        self.dispatch_backward(0, idx, fa, lr, loss);
+        self.join_backward().1
     }
 
-    /// Non-blocking half of the backward: publish the plane-replay job
-    /// for micro-batch `idx` to every engine thread and return while
-    /// they run (the overlapped pipeline keeps polling the transport in
-    /// the meantime). Serial mode executes inline — there is no second
-    /// thread to overlap with. Panics if a backward is already open.
-    pub fn dispatch_backward(&mut self, idx: usize, fa: &[f32], lr: f32, loss: Loss) {
-        assert!(!self.backward_open, "a backward is already open — join it first");
-        self.backward_open = true;
+    /// Whether the backward ring has room for another dispatch.
+    pub fn can_dispatch_backward(&self) -> bool {
+        self.trk.dispatched - self.trk.joined < self.trk.rounds as u64
+    }
+
+    /// Dispatched-but-unjoined backwards.
+    pub fn outstanding_backwards(&self) -> usize {
+        (self.trk.dispatched - self.trk.joined) as usize
+    }
+
+    /// Non-blocking half of the backward: enqueue the plane-replay job
+    /// for micro-batch `idx` against gradient slot `gslot` on every
+    /// engine thread and return while they run (the overlapped pipeline
+    /// keeps polling the transport in the meantime). Serial mode
+    /// executes inline — there is no second thread to overlap with.
+    /// Panics when the ring is full (probe
+    /// [`EngineRunner::can_dispatch_backward`] first).
+    pub fn dispatch_backward(&mut self, gslot: usize, idx: usize, fa: &[f32], lr: f32, loss: Loss) {
+        assert!(self.can_dispatch_backward(), "backward ring full — reap one first");
+        assert!(gslot < self.trk.rounds, "gradient slot {gslot} out of range");
         match &mut self.inner {
             Inner::Serial(s) => {
                 let m = &s.prep.micro[idx];
                 let loss_sum = s.compute.loss_sum(fa, &m.y, loss);
-                for (ed, ge) in m.per_engine.iter().zip(&mut s.state.g) {
+                for (ed, ge) in m.per_engine.iter().zip(&mut s.g[gslot]) {
                     s.compute.backward_acc_planes(ed, fa, &m.y, ge, lr, loss);
                 }
-                self.open_loss = loss_sum;
+                s.losses.push_back(loss_sum);
             }
             Inner::Pool(p) => {
                 for t in 0..p.slots.len() {
-                    p.publish(t, Job::Backward { idx, lr, loss }, |st| {
-                        st.fa.clear();
-                        st.fa.extend_from_slice(fa);
-                    });
+                    p.publish_backward(t, idx, gslot, lr, loss, fa);
                 }
             }
         }
+        let i = (self.trk.dispatched % self.trk.rounds as u64) as usize;
+        self.trk.gslots[i] = gslot;
+        self.trk.per_slot[gslot] += 1;
+        self.trk.dispatched += 1;
     }
 
-    /// Whether a backward was dispatched and not yet joined.
-    pub fn backward_open(&self) -> bool {
-        self.backward_open
-    }
-
-    /// Non-blocking completion probe for the open backward: `true` when
-    /// [`EngineRunner::join_backward`] would not block (including when
-    /// no backward is open). A slot whose engine thread is mid-job
-    /// holds its mutex, so `try_lock` failure reads as not-done without
-    /// waiting.
-    pub fn backward_done(&self) -> bool {
-        if !self.backward_open {
-            return true;
+    /// Non-blocking reap: if the *oldest* outstanding backward has
+    /// finished on every engine thread, retire it and return its
+    /// `(gslot, micro-batch loss)`. A slot whose engine thread is
+    /// mid-sync-job holds its mutex, so `try_lock` failure reads as
+    /// not-done without waiting (backwards themselves execute outside
+    /// the lock). `None` when nothing is outstanding or not yet done.
+    pub fn try_reap_backward(&mut self) -> Option<(usize, f32)> {
+        if self.trk.joined == self.trk.dispatched {
+            return None;
         }
-        match &self.inner {
-            Inner::Serial(_) => true,
-            Inner::Pool(p) => p.slots.iter().all(|slot| match slot.m.try_lock() {
-                Ok(st) => st.completed == st.epoch,
-                Err(std::sync::TryLockError::WouldBlock) => false,
-                // A poisoned slot means the engine thread died; report
-                // done so the join runs and surfaces the panic.
-                Err(std::sync::TryLockError::Poisoned(_)) => true,
-            }),
-        }
-    }
-
-    /// Blocking half of the backward: wait for every engine thread,
-    /// close the window, and return the micro-batch loss sum (engine
-    /// 0's backend). Panics if no backward is open.
-    pub fn join_backward(&mut self) -> f32 {
-        assert!(self.backward_open, "no backward is open");
-        self.backward_open = false;
-        match &mut self.inner {
-            Inner::Serial(_) => self.open_loss,
+        let i = self.trk.joined;
+        let loss = match &mut self.inner {
+            Inner::Serial(s) => s.losses.pop_front().expect("serial loss queue in sync"),
             Inner::Pool(p) => {
-                let mut loss_sum = 0.0;
-                for t in 0..p.slots.len() {
-                    let st = p.wait(t);
-                    if t == 0 {
-                        loss_sum = st.loss_out;
+                for (t, slot) in p.slots.iter().enumerate() {
+                    match slot.m.try_lock() {
+                        Ok(st) => {
+                            assert!(!st.dead, "engine thread {t} died");
+                            if st.bq_done <= i {
+                                return None;
+                            }
+                        }
+                        Err(std::sync::TryLockError::WouldBlock) => return None,
+                        Err(std::sync::TryLockError::Poisoned(_)) => {
+                            panic!("engine thread {t} died")
+                        }
                     }
                 }
-                loss_sum
+                let st = p.slots[0].m.lock().unwrap();
+                st.bq[(i % p.bq_cap as u64) as usize].loss_out
             }
-        }
+        };
+        Some(self.retire_oldest(loss))
     }
 
-    /// Mini-batch boundary: `x -= g * inv_b`, then zero the gradients
-    /// for the next accumulation window (synchronous SGD preserved).
+    /// Blocking half of the backward: wait for the oldest outstanding
+    /// dispatch on every engine thread and return its `(gslot,
+    /// micro-batch loss)`. Panics if nothing is outstanding.
+    pub fn join_backward(&mut self) -> (usize, f32) {
+        assert!(self.trk.joined < self.trk.dispatched, "no backward is outstanding");
+        let i = self.trk.joined;
+        let loss = match &mut self.inner {
+            Inner::Serial(s) => s.losses.pop_front().expect("serial loss queue in sync"),
+            Inner::Pool(p) => {
+                let mut loss = 0.0;
+                for t in 0..p.slots.len() {
+                    let st = p.wait_backward(t, i);
+                    if t == 0 {
+                        loss = st.bq[(i % p.bq_cap as u64) as usize].loss_out;
+                    }
+                }
+                loss
+            }
+        };
+        self.retire_oldest(loss)
+    }
+
+    /// Shared join/reap bookkeeping: advance the tracker past the
+    /// oldest dispatch and report which gradient slot it credited.
+    fn retire_oldest(&mut self, loss: f32) -> (usize, f32) {
+        let gslot = self.trk.gslots[(self.trk.joined % self.trk.rounds as u64) as usize];
+        self.trk.per_slot[gslot] -= 1;
+        self.trk.joined += 1;
+        (gslot, loss)
+    }
+
+    /// Mini-batch boundary for the single-round path: exactly
+    /// [`EngineRunner::update_slot`] on slot 0.
     pub fn update(&mut self, inv_b: f32) {
-        assert!(!self.backward_open, "update with an open backward — join it first");
+        self.update_slot(0, inv_b);
+    }
+
+    /// Round boundary: `x -= g[gslot] * inv_b`, then zero that slot for
+    /// its next round (synchronous-SGD semantics per round). The
+    /// pipeline applies updates in round-retirement order; backwards
+    /// *of other slots* may still be outstanding (they touch neither
+    /// `x` nor this slot), but this slot must be drained first.
+    pub fn update_slot(&mut self, gslot: usize, inv_b: f32) {
+        assert!(gslot < self.trk.rounds, "gradient slot {gslot} out of range");
+        assert!(
+            self.trk.per_slot[gslot] == 0,
+            "update of gradient slot {gslot} with its backwards outstanding — join them first"
+        );
         match &mut self.inner {
             Inner::Serial(s) => {
-                for (xe, ge) in s.state.x.iter_mut().zip(s.state.g.iter_mut()) {
+                for (xe, ge) in s.x.iter_mut().zip(s.g[gslot].iter_mut()) {
                     s.compute.update(xe, ge, inv_b);
                     ge.iter_mut().for_each(|v| *v = 0.0);
                 }
             }
             Inner::Pool(p) => {
                 for t in 0..p.slots.len() {
-                    p.publish(t, Job::Update { inv_b }, |_| {});
+                    p.publish(t, Job::Update { gslot, inv_b }, |_| {});
                 }
                 for t in 0..p.slots.len() {
                     let _ = p.wait(t);
@@ -404,9 +549,12 @@ impl EngineRunner {
     /// Stitch the (unpadded) model partition back together — cold path,
     /// allocates.
     pub fn model(&mut self) -> Vec<f32> {
-        assert!(!self.backward_open, "model export with an open backward — join it first");
+        assert!(
+            self.outstanding_backwards() == 0,
+            "model export with backwards outstanding — flush the pipeline first"
+        );
         match &mut self.inner {
-            Inner::Serial(s) => s.state.model(&s.prep),
+            Inner::Serial(s) => crate::pipeline::stitch_model(&s.prep.engines, &s.x),
             Inner::Pool(p) => {
                 for t in 0..p.slots.len() {
                     p.publish(t, Job::Export, |_| {});
@@ -428,10 +576,13 @@ impl EngineRunner {
     /// Load a full (unpadded) worker partition into the per-engine
     /// slices — cold path, for tests and checkpoint restore.
     pub fn set_model(&mut self, x_full: &[f32]) {
-        assert!(!self.backward_open, "set_model with an open backward — join it first");
+        assert!(
+            self.outstanding_backwards() == 0,
+            "set_model with backwards outstanding — flush the pipeline first"
+        );
         match &mut self.inner {
             Inner::Serial(s) => {
-                for (sl, xe) in s.prep.engines.iter().zip(&mut s.state.x) {
+                for (sl, xe) in s.prep.engines.iter().zip(&mut s.x) {
                     let w = sl.hi - sl.lo;
                     xe[..w].copy_from_slice(&x_full[sl.lo..sl.hi]);
                     xe[w..].fill(0.0);
@@ -457,26 +608,62 @@ impl EngineRunner {
 }
 
 impl Pool {
-    /// Publish a job to thread `t`: stage inputs under the slot lock,
-    /// bump the epoch, wake the thread. Allocation-free in steady state.
+    /// Publish a synchronous job to thread `t`: stage inputs under the
+    /// slot lock, bump the epoch, wake the thread. Allocation-free in
+    /// steady state.
     fn publish<F: FnOnce(&mut SlotState)>(&self, t: usize, job: Job, stage: F) {
         let slot = &self.slots[t];
         let mut st = slot.m.lock().unwrap();
+        assert!(!st.dead, "engine thread {t} died");
         stage(&mut st);
         st.job = job;
         st.epoch += 1;
         slot.cv.notify_one();
     }
 
-    /// Block until thread `t` completed its published epoch; returns
-    /// the guard so the caller can read outputs in place.
+    /// Push a backward into thread `t`'s ring. The dispatcher-side
+    /// tracker guarantees room; the fa copy reuses the entry's buffer.
+    fn publish_backward(&self, t: usize, idx: usize, gslot: usize, lr: f32, loss: Loss, fa: &[f32]) {
+        let slot = &self.slots[t];
+        let mut st = slot.m.lock().unwrap();
+        assert!(!st.dead, "engine thread {t} died");
+        debug_assert!(st.bq_tail - st.bq_done < self.bq_cap as u64, "backward ring overflow");
+        let e = &mut st.bq[(st.bq_tail % self.bq_cap as u64) as usize];
+        e.idx = idx;
+        e.gslot = gslot;
+        e.lr = lr;
+        e.loss = loss;
+        e.fa.clear();
+        e.fa.extend_from_slice(fa);
+        st.bq_tail += 1;
+        slot.cv.notify_one();
+    }
+
+    /// Block until thread `t` completed its published synchronous
+    /// epoch; returns the guard so the caller can read outputs in place.
     fn wait(&self, t: usize) -> std::sync::MutexGuard<'_, SlotState> {
         let slot = &self.slots[t];
         let mut st = slot.m.lock().unwrap();
-        while st.completed != st.epoch {
+        loop {
+            assert!(!st.dead, "engine thread {t} died");
+            if st.completed == st.epoch {
+                return st;
+            }
             st = slot.done_cv.wait(st).unwrap();
         }
-        st
+    }
+
+    /// Block until thread `t` has executed backward dispatch `i`.
+    fn wait_backward(&self, t: usize, i: u64) -> std::sync::MutexGuard<'_, SlotState> {
+        let slot = &self.slots[t];
+        let mut st = slot.m.lock().unwrap();
+        loop {
+            assert!(!st.dead, "engine thread {t} died");
+            if st.bq_done > i {
+                return st;
+            }
+            st = slot.done_cv.wait(st).unwrap();
+        }
     }
 }
 
@@ -497,77 +684,106 @@ impl Drop for Pool {
     }
 }
 
-/// The pool thread body. Jobs execute while holding the slot lock: the
-/// dispatcher is barrier-waiting anyway, the lock is shared by exactly
-/// two threads, and a panic inside a compute poisons the mutex — which
-/// surfaces the failure at the dispatcher instead of deadlocking it.
-fn engine_thread(prep: Arc<PreparedShard>, slot: Arc<Slot>, mut locals: Vec<EngineLocal>, mb: usize) {
+/// The pool thread body. Synchronous jobs execute while holding the
+/// slot lock (the dispatcher is barrier-waiting anyway, and a panic
+/// inside poisons the mutex — surfacing the failure at the dispatcher
+/// instead of deadlocking it). Backwards execute **outside** the lock
+/// so the dispatcher can keep publishing (and polling the network)
+/// while the engines replay planes; a [`DeathNotice`] covers that
+/// window. Synchronous jobs take priority — the dispatcher is blocked
+/// on them, while queued backwards are reaped asynchronously.
+fn engine_thread(
+    prep: Arc<PreparedShard>,
+    slot: Arc<Slot>,
+    mut locals: Vec<EngineLocal>,
+    mb: usize,
+    thread_index: usize,
+) {
+    let _ = crate::util::affinity::pin_current(thread_index);
+    let mut exec_fa: Vec<f32> = Vec::new();
     let mut guard = slot.m.lock().unwrap();
     loop {
-        while guard.completed == guard.epoch {
-            guard = slot.cv.wait(guard).unwrap();
+        if guard.completed != guard.epoch {
+            match guard.job {
+                Job::Idle => {}
+                Job::Forward { idx } => {
+                    let m = &prep.micro[idx];
+                    let st = &mut *guard;
+                    for (i, l) in locals.iter_mut().enumerate() {
+                        l.compute.forward_into(
+                            &m.per_engine[l.engine],
+                            &l.x,
+                            &mut st.out[i * mb..(i + 1) * mb],
+                        );
+                    }
+                }
+                Job::Update { gslot, inv_b } => {
+                    for l in locals.iter_mut() {
+                        l.compute.update(&mut l.x, &l.g[gslot], inv_b);
+                        l.g[gslot].iter_mut().for_each(|v| *v = 0.0);
+                    }
+                }
+                Job::Export => {
+                    let st = &mut *guard;
+                    st.xfer.clear();
+                    for l in &locals {
+                        st.xfer.extend_from_slice(&l.x);
+                    }
+                }
+                Job::SetModel => {
+                    let st = &mut *guard;
+                    let mut off = 0;
+                    for l in locals.iter_mut() {
+                        l.x.copy_from_slice(&st.xfer[off..off + l.x.len()]);
+                        off += l.x.len();
+                    }
+                }
+                Job::Shutdown => {
+                    guard.completed = guard.epoch;
+                    slot.done_cv.notify_one();
+                    return;
+                }
+            }
+            guard.completed = guard.epoch;
+            slot.done_cv.notify_one();
+            continue;
         }
-        match guard.job {
-            Job::Idle => {}
-            Job::Forward { idx } => {
-                let m = &prep.micro[idx];
-                let st = &mut *guard;
-                for (i, l) in locals.iter_mut().enumerate() {
-                    l.compute.forward_into(
-                        &m.per_engine[l.engine],
-                        &l.x,
-                        &mut st.out[i * mb..(i + 1) * mb],
-                    );
-                }
+        if guard.bq_done < guard.bq_tail {
+            let cap = guard.bq.len() as u64;
+            let i = (guard.bq_done % cap) as usize;
+            let e = &mut guard.bq[i];
+            let (idx, gslot, lr, loss) = (e.idx, e.gslot, e.lr, e.loss);
+            std::mem::swap(&mut e.fa, &mut exec_fa);
+            drop(guard);
+            let notice = DeathNotice(&slot);
+            let m = &prep.micro[idx];
+            for l in locals.iter_mut() {
+                l.compute.backward_acc_planes(
+                    &m.per_engine[l.engine],
+                    &exec_fa,
+                    &m.y,
+                    &mut l.g[gslot],
+                    lr,
+                    loss,
+                );
             }
-            Job::Backward { idx, lr, loss } => {
-                let m = &prep.micro[idx];
-                let st = &mut *guard;
-                for l in locals.iter_mut() {
-                    l.compute.backward_acc_planes(
-                        &m.per_engine[l.engine],
-                        &st.fa,
-                        &m.y,
-                        &mut l.g,
-                        lr,
-                        loss,
-                    );
-                }
-                // Loss is a whole-micro-batch quantity; exactly one
-                // thread (the engine-0 owner) reports it.
-                if locals.first().is_some_and(|l| l.engine == 0) {
-                    st.loss_out = locals[0].compute.loss_sum(&st.fa, &m.y, loss);
-                }
-            }
-            Job::Update { inv_b } => {
-                for l in locals.iter_mut() {
-                    l.compute.update(&mut l.x, &l.g, inv_b);
-                    l.g.iter_mut().for_each(|v| *v = 0.0);
-                }
-            }
-            Job::Export => {
-                let st = &mut *guard;
-                st.xfer.clear();
-                for l in &locals {
-                    st.xfer.extend_from_slice(&l.x);
-                }
-            }
-            Job::SetModel => {
-                let st = &mut *guard;
-                let mut off = 0;
-                for l in locals.iter_mut() {
-                    l.x.copy_from_slice(&st.xfer[off..off + l.x.len()]);
-                    off += l.x.len();
-                }
-            }
-            Job::Shutdown => {
-                guard.completed = guard.epoch;
-                slot.done_cv.notify_one();
-                return;
-            }
+            // Loss is a whole-micro-batch quantity; exactly one thread
+            // (the engine-0 owner) reports it.
+            let loss_sum = if locals.first().is_some_and(|l| l.engine == 0) {
+                locals[0].compute.loss_sum(&exec_fa, &m.y, loss)
+            } else {
+                0.0
+            };
+            std::mem::forget(notice);
+            guard = slot.m.lock().unwrap();
+            let e = &mut guard.bq[i];
+            std::mem::swap(&mut e.fa, &mut exec_fa);
+            e.loss_out = loss_sum;
+            guard.bq_done += 1;
+            slot.done_cv.notify_one();
+            continue;
         }
-        guard.completed = guard.epoch;
-        slot.done_cv.notify_one();
+        guard = slot.cv.wait(guard).unwrap();
     }
 }
 
@@ -601,6 +817,13 @@ mod tests {
         assert_eq!(r.threads(), 3);
         let r = EngineRunner::new(prep(96, 16, 3), &mk, 0);
         assert_eq!(r.threads(), 1);
+        assert_eq!(r.rounds(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "rounds must be in 1..=8")]
+    fn round_count_is_bounded() {
+        let _ = EngineRunner::with_rounds(prep(64, 16, 2), &mk, 1, 9);
     }
 
     #[test]
@@ -655,12 +878,12 @@ mod tests {
 
     #[test]
     fn split_backward_is_bitwise_equal_to_blocking() {
-        // dispatch + (poll) + join must produce the same losses and
-        // model bits as the blocking call, for serial and pool runners.
+        // dispatch + (reap-probe) + join must produce the same losses
+        // and model bits as the blocking call, serial and pool.
         for threads in [1usize, 2, 4] {
             let p = prep(96, 32, 4);
             let mut blocking = EngineRunner::new(p.clone(), &mk, threads);
-            let mut split = EngineRunner::new(p.clone(), &mk, threads);
+            let mut split = EngineRunner::with_rounds(p.clone(), &mk, threads, 2);
             let mut pa = vec![0.0f32; p.mb];
             for idx in 0..p.micro_batches() {
                 blocking.forward(idx, &mut pa);
@@ -669,16 +892,19 @@ mod tests {
 
                 split.forward(idx, &mut pa);
                 let fa = pa.clone();
-                assert!(!split.backward_open());
-                split.dispatch_backward(idx, &fa, 0.5, Loss::LogReg);
-                assert!(split.backward_open());
+                assert_eq!(split.outstanding_backwards(), 0);
+                split.dispatch_backward(0, idx, &fa, 0.5, Loss::LogReg);
+                assert_eq!(split.outstanding_backwards(), 1);
                 // Spin the non-blocking probe until the engines finish
                 // (serial mode is done immediately).
-                while !split.backward_done() {
+                let b = loop {
+                    if let Some((gslot, loss)) = split.try_reap_backward() {
+                        assert_eq!(gslot, 0);
+                        break loss;
+                    }
                     std::hint::spin_loop();
-                }
-                let b = split.join_backward();
-                assert!(!split.backward_open());
+                };
+                assert_eq!(split.outstanding_backwards(), 0);
                 assert_eq!(a.to_bits(), b.to_bits(), "threads={threads} idx={idx}");
             }
             blocking.update(1.0 / 32.0);
@@ -692,27 +918,89 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "already open")]
-    fn double_dispatch_without_join_panics() {
-        let p = prep(64, 16, 2);
-        let mut r = EngineRunner::new(p.clone(), &mk, 2);
-        let mut pa = vec![0.0f32; p.mb];
-        r.forward(0, &mut pa);
-        let fa = pa.clone();
-        r.dispatch_backward(0, &fa, 0.5, Loss::LogReg);
-        r.dispatch_backward(1, &fa, 0.5, Loss::LogReg);
+    fn round_slots_accumulate_independently() {
+        // Two rounds' backwards dispatched back-to-back (no update in
+        // between) into separate gradient slots, then updated in order,
+        // must match the strictly sequential backward+update schedule
+        // bitwise: gradients never read x, updates subtract in the same
+        // order.
+        for threads in [1usize, 2] {
+            let p = prep(96, 16, 2);
+            let mut seq = EngineRunner::new(p.clone(), &mk, threads);
+            let mut ring = EngineRunner::with_rounds(p.clone(), &mk, threads, 4);
+            let mut pa = vec![0.0f32; p.mb];
+
+            // FAs computed from the same (zero) model for both runners.
+            let mut fas = Vec::new();
+            for idx in 0..2 {
+                seq.forward(idx, &mut pa);
+                fas.push(pa.clone());
+            }
+
+            let a0 = seq.backward(0, &fas[0], 0.5, Loss::LogReg);
+            seq.update(0.125);
+            let a1 = seq.backward(1, &fas[1], 0.5, Loss::LogReg);
+            seq.update(0.125);
+
+            ring.dispatch_backward(0, 0, &fas[0], 0.5, Loss::LogReg);
+            ring.dispatch_backward(1, 1, &fas[1], 0.5, Loss::LogReg);
+            let (s0, b0) = ring.join_backward();
+            let (s1, b1) = ring.join_backward();
+            assert_eq!((s0, s1), (0, 1), "reaps must come back in dispatch order");
+            ring.update_slot(0, 0.125);
+            ring.update_slot(1, 0.125);
+
+            assert_eq!(a0.to_bits(), b0.to_bits(), "threads={threads}");
+            assert_eq!(a1.to_bits(), b1.to_bits(), "threads={threads}");
+            let ms = seq.model();
+            let mr = ring.model();
+            for (a, b) in ms.iter().zip(&mr) {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads={threads}");
+            }
+        }
     }
 
     #[test]
-    #[should_panic(expected = "open backward")]
-    fn forward_with_open_backward_panics() {
-        let p = prep(64, 16, 2);
-        let mut r = EngineRunner::new(p.clone(), &mk, 1);
+    fn forward_may_interleave_with_outstanding_backwards() {
+        // The depth-D pipeline forwards round k+1 while round k's
+        // backwards are still in flight; the forward must read the
+        // same x regardless.
+        let p = prep(96, 16, 2);
+        let mut r = EngineRunner::with_rounds(p.clone(), &mk, 2, 2);
         let mut pa = vec![0.0f32; p.mb];
         r.forward(0, &mut pa);
         let fa = pa.clone();
-        r.dispatch_backward(0, &fa, 0.5, Loss::LogReg);
-        r.forward(1, &mut pa);
+        let mut pa_before = vec![0.0f32; p.mb];
+        r.forward(1, &mut pa_before);
+        r.dispatch_backward(0, 0, &fa, 0.5, Loss::LogReg);
+        let mut pa_during = vec![0.0f32; p.mb];
+        r.forward(1, &mut pa_during);
+        assert_eq!(pa_before, pa_during, "forward must not observe in-flight gradients");
+        let _ = r.join_backward();
+    }
+
+    #[test]
+    #[should_panic(expected = "backward ring full")]
+    fn dispatch_beyond_ring_capacity_panics() {
+        let p = prep(64, 16, 2);
+        let mut r = EngineRunner::new(p.clone(), &mk, 2); // rounds = 1
+        let mut pa = vec![0.0f32; p.mb];
+        r.forward(0, &mut pa);
+        let fa = pa.clone();
+        r.dispatch_backward(0, 0, &fa, 0.5, Loss::LogReg);
+        r.dispatch_backward(0, 1, &fa, 0.5, Loss::LogReg);
+    }
+
+    #[test]
+    #[should_panic(expected = "backwards outstanding")]
+    fn update_of_undrained_slot_panics() {
+        let p = prep(64, 16, 2);
+        let mut r = EngineRunner::with_rounds(p.clone(), &mk, 1, 2);
+        let mut pa = vec![0.0f32; p.mb];
+        r.forward(0, &mut pa);
+        let fa = pa.clone();
+        r.dispatch_backward(1, 0, &fa, 0.5, Loss::LogReg);
+        r.update_slot(1, 1.0);
     }
 
     #[test]
@@ -720,7 +1008,7 @@ mod tests {
         for threads in [1usize, 2, 4] {
             let p = prep(100, 16, 4);
             let x = x_full(100);
-            let mut r = EngineRunner::new(p, &mk, threads);
+            let mut r = EngineRunner::with_rounds(p, &mk, threads, 4);
             r.set_model(&x);
             assert_eq!(r.model(), x, "threads={threads}");
         }

@@ -10,11 +10,13 @@ use std::fmt;
 use std::str::FromStr;
 
 /// The GLM family member being trained.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Loss {
     /// Squared loss; labels are real-valued.
     LinReg,
-    /// Logistic loss; labels in {0, 1}.
+    /// Logistic loss; labels in {0, 1} (the default, as in the paper's
+    /// headline experiments).
+    #[default]
     LogReg,
     /// Hinge loss; labels in {-1, +1}.
     Svm,

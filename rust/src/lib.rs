@@ -26,11 +26,12 @@
 //! [`worker::AggClient`] state machine (paper Alg. 3), the switch
 //! aggregates and multicasts (paper Alg. 2), and the returning full
 //! activations drive the plane-replay backward. With
-//! `cluster.pipeline_depth = 2` the backward+update of round *k*
-//! overlaps round *k+1*'s forwards and the network drain — the paper's
-//! forward–communication–backward pipeline parallelism (see
-//! [`pipeline`] for the depth-1 bit-compatibility and the depth-2
-//! bounded-staleness contracts).
+//! `cluster.pipeline_depth = D ≥ 2` a ring of up to D-1 rounds stays
+//! in flight: their backwards and updates overlap later rounds'
+//! forwards and the network drain — the paper's
+//! forward–communication–backward pipeline parallelism, generalized to
+//! many outstanding rounds (see [`pipeline`] for the depth-1
+//! bit-compatibility and the bounded-staleness contracts).
 //!
 //! `docs/ARCHITECTURE.md` walks the module map and the round timing
 //! diagrams; `docs/CONFIG.md` is the configuration reference;

@@ -44,7 +44,7 @@ fn dispatch(args: &Args) -> Result<()> {
             println!("usage: p4sgd <repro|train|agg-bench|info> [options]");
             println!("  repro <table1..table4|fig8..fig15|all>");
             println!("  train [--mode mp|dp] [--backend native|pjrt] [--workers M] [--engines N]");
-            println!("        [--engine-threads T] [--pipeline-depth 1|2] [--loss linreg|logreg|svm]");
+            println!("        [--engine-threads T] [--pipeline-depth 1..8] [--loss linreg|logreg|svm]");
             println!("        [--batch B] [--epochs E] [--dataset NAME]");
             println!("        [--samples N] [--features D] [--drop P]");
             println!("  agg-bench [--workers M] [--ops N] [--payload K]");
@@ -101,7 +101,7 @@ fn train(args: &Args) -> Result<()> {
     }
     println!(
         "wall {} | pa_sent {} | net {} | pipeline overlapped {} drained {} \
-         deferred-rounds {} overlapped-backwards {}",
+         deferred-rounds {} overlapped-backwards {} | {}",
         fmt_secs(report.wall.as_secs_f64()),
         report.agg.pa_sent,
         report.pipeline.net.summary(),
@@ -109,6 +109,7 @@ fn train(args: &Args) -> Result<()> {
         report.pipeline.drained,
         report.pipeline.deferred_rounds,
         report.pipeline.overlapped_backwards,
+        report.pipeline.depth.summary(),
     );
     Ok(())
 }

@@ -58,6 +58,78 @@ impl RoundNetStats {
     }
 }
 
+/// Depth-D pipeline health: a bounded-staleness histogram plus an
+/// in-flight-depth gauge, fed once per round (cheap: one array bump)
+/// by `pipeline::run_minibatch` and the DP batch loop. Staleness is
+/// the number of model updates a round's forwards ran behind the
+/// synchronous schedule — the overlap contract bounds it by
+/// `pipeline_depth - 1` inside an epoch (and flushes at boundaries),
+/// which `max_staleness` lets tests assert directly.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct DepthStats {
+    /// `staleness_hist[s]` = rounds whose forwards ran `s` updates
+    /// stale (clamped to the last bucket; depths cap at 8, so the
+    /// clamp never engages in valid configurations).
+    pub staleness_hist: [u64; STALENESS_BUCKETS],
+    /// Most rounds simultaneously in flight (including the round being
+    /// assembled) observed by any worker.
+    pub max_in_flight: u64,
+}
+
+/// Histogram buckets: staleness 0..=8.
+const STALENESS_BUCKETS: usize = 9;
+
+impl DepthStats {
+    /// Histogram buckets: staleness 0..=8.
+    pub const BUCKETS: usize = STALENESS_BUCKETS;
+
+    /// Record one round: its forward-time staleness and how many
+    /// rounds were in flight when it began.
+    pub fn observe_round(&mut self, staleness: usize, in_flight: usize) {
+        self.staleness_hist[staleness.min(Self::BUCKETS - 1)] += 1;
+        self.max_in_flight = self.max_in_flight.max(in_flight as u64);
+    }
+
+    /// Rounds observed.
+    pub fn rounds(&self) -> u64 {
+        self.staleness_hist.iter().sum()
+    }
+
+    /// Largest staleness any round experienced (0 when none observed).
+    pub fn max_staleness(&self) -> usize {
+        self.staleness_hist.iter().rposition(|&c| c > 0).unwrap_or(0)
+    }
+
+    /// Mean staleness over observed rounds (0.0 when none observed).
+    pub fn mean_staleness(&self) -> f64 {
+        let rounds = self.rounds();
+        if rounds == 0 {
+            return 0.0;
+        }
+        let weighted: u64 =
+            self.staleness_hist.iter().enumerate().map(|(s, &c)| s as u64 * c).sum();
+        weighted as f64 / rounds as f64
+    }
+
+    /// Fold another worker's counters into this one.
+    pub fn merge(&mut self, other: &Self) {
+        for (a, b) in self.staleness_hist.iter_mut().zip(&other.staleness_hist) {
+            *a += *b;
+        }
+        self.max_in_flight = self.max_in_flight.max(other.max_in_flight);
+    }
+
+    /// "staleness mean 1.8 max 3, depth <=4 in flight" — the report line.
+    pub fn summary(&self) -> String {
+        format!(
+            "staleness mean {:.2} max {}, depth <={} in flight",
+            self.mean_staleness(),
+            self.max_staleness(),
+            self.max_in_flight
+        )
+    }
+}
+
 /// Latency samples in nanoseconds with Fig. 8-style reporting.
 #[derive(Debug, Clone, Default)]
 pub struct LatencyHist {
@@ -216,6 +288,36 @@ mod tests {
         assert_eq!(a.retrans_rounds, 2);
         assert_eq!(a.max_round_retransmits, 7);
         assert_eq!(a.summary(), "10 retransmits in 2/4 rounds (worst 7)");
+    }
+
+    #[test]
+    fn depth_stats_observe_merge_and_summary() {
+        let mut a = DepthStats::default();
+        a.observe_round(0, 1);
+        a.observe_round(1, 2);
+        a.observe_round(1, 2);
+        assert_eq!(a.rounds(), 3);
+        assert_eq!(a.max_staleness(), 1);
+        assert_eq!(a.max_in_flight, 2);
+        assert!((a.mean_staleness() - 2.0 / 3.0).abs() < 1e-12);
+
+        let mut b = DepthStats::default();
+        b.observe_round(3, 4);
+        a.merge(&b);
+        assert_eq!(a.rounds(), 4);
+        assert_eq!(a.max_staleness(), 3);
+        assert_eq!(a.max_in_flight, 4);
+        assert!(a.summary().contains("max 3"), "{}", a.summary());
+    }
+
+    #[test]
+    fn depth_stats_clamp_and_empty() {
+        let empty = DepthStats::default();
+        assert_eq!(empty.max_staleness(), 0);
+        assert_eq!(empty.mean_staleness(), 0.0);
+        let mut d = DepthStats::default();
+        d.observe_round(100, 100);
+        assert_eq!(d.max_staleness(), DepthStats::BUCKETS - 1);
     }
 
     #[test]

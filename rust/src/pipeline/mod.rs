@@ -16,49 +16,57 @@
 //! copy, an ~8x memory cut at P=4); [`PipelineScratch`] carries the PA
 //! accumulator, wire encode/decode buffers, and the seq→micro-batch
 //! map; `AggClient` recycles payload buffers through an `Arc` pool.
-//! After one warm-up mini-batch, [`run_minibatch`] performs **zero heap
-//! allocations** per micro-batch on the native backend (enforced by
+//! After one warm-up pass over every round slot, [`run_minibatch`]
+//! performs **zero heap allocations** per micro-batch on the native
+//! backend, at every pipeline depth (enforced by
 //! `tests/alloc_steady_state.rs` with a counting allocator).
 //!
 //! **Engine execution (§Perf L2):** per-engine compute state — model
 //! and gradient slices, one `Compute` per engine, the per-engine
 //! forward buffer — lives in the [`EngineRunner`], not here. The
 //! pipeline drives it through three calls per micro-batch lifecycle:
-//! `forward` (PA = ordered engine fan-in), `backward` (plane replay
-//! against the decoded FA, gradients accumulated engine-locally), and
-//! `update` at the mini-batch boundary. With `engine_threads > 1` those
-//! calls dispatch to the runner's persistent thread pool over
-//! preallocated Condvar/epoch job slots (see `engine::runner`), so
-//! engine parallelism costs no steady-state allocation and changes no
-//! numerics (ordered fan-in keeps f32 sums bit-identical).
+//! `forward` (PA = ordered engine fan-in), a slot-indexed backward
+//! (plane replay against the decoded FA, gradients accumulated
+//! engine-locally per round slot), and `update_slot` at each round
+//! boundary. With `engine_threads > 1` those calls dispatch to the
+//! runner's persistent thread pool over preallocated Condvar job slots
+//! (see `engine::runner`), so engine parallelism costs no steady-state
+//! allocation and changes no numerics (ordered fan-in keeps f32 sums
+//! bit-identical).
 //!
-//! **Round overlap (§Perf L3, `pipeline_depth`):** at depth 1 (the
+//! **Round ring (§Perf L3, `pipeline_depth`):** at depth 1 (the
 //! default) rounds are synchronous: [`run_minibatch`] forwards, drains
 //! every FA (running backwards as they land), updates, and returns —
-//! bit-compatible with the pre-overlap pipeline. At depth 2 the
-//! backward+update of round *k* is deferred into round *k+1*'s call:
-//! after round *k+1*'s forward fan-ins and PA sends, the worker
-//! dispatches round *k*'s backwards to the engine pool **without
-//! joining** ([`EngineRunner::dispatch_backward`]) and keeps polling
-//! the transport while the engines run — the paper's
-//! forward–communication–backward overlap, where aggregation latency
-//! hides behind compute instead of serializing after it. A
-//! `PendingRound` slot in [`PipelineScratch`] carries the in-flight
-//! round between calls: its seq→micro-batch map, the FAs that arrived
-//! before their gradient window opened (payload refcounts, decoded at
-//! dispatch), its accumulated loss, and its deferred update scale.
-//! The contract is **bounded staleness**: a round's forwards read the
-//! model one update older than the synchronous schedule would, and
-//! [`flush_round`] (called at every epoch boundary) retires the tail so
-//! staleness never crosses an epoch and per-epoch loss attribution
-//! stays exact. Gradient windows never mix: a round's backwards are
-//! dispatched only after the previous round's update has been applied.
+//! bit-compatible with the pre-overlap pipeline. At depth `D ∈ 2..=8`
+//! the scratch carries a **ring of D round slots**: up to D-1 rounds
+//! stay in flight between calls, each with its own seq→micro-batch
+//! map, parked-FA list (payload refcounts, decoded only at dispatch),
+//! accumulated loss, and deferred update scale. Ring slot `i` maps 1:1
+//! onto the runner's gradient slot `i`, so *any* in-flight round's
+//! backwards can run as soon as its FAs land — before older rounds
+//! have retired — and one slow AllReduce stalls nothing but its own
+//! round. A [`run_minibatch`] call begins round *k* in the next free
+//! slot, forwards and ships it while feeding arrived FAs of all live
+//! rounds to the engines ([`EngineRunner::dispatch_backward`] /
+//! [`EngineRunner::try_reap_backward`] — the dispatcher never blocks
+//! while the network is quiet and the engines are busy), and retires
+//! the *oldest* round only when the ring is full: join its remaining
+//! backwards, apply its update, free its slot.
+//!
+//! The contract is **bounded staleness**: a round's forwards read a
+//! model at most D-1 updates older than the synchronous schedule would
+//! (observed per round in [`crate::metrics::DepthStats`]), updates
+//! apply in round order, and [`flush_round`] (called at every epoch
+//! boundary) drains the whole ring so staleness never crosses an epoch
+//! and per-epoch loss attribution stays exact. Gradient state never
+//! mixes between rounds: each ring slot accumulates into its own
+//! engine-side gradient buffer, cleared by its own update.
 
 use crate::data::partition::{vertical, VerticalShard};
 use crate::data::quantize::{pack_rows, PackedBatch, LANE};
 use crate::engine::EngineRunner;
 use crate::glm::Loss;
-use crate::metrics::RoundNetStats;
+use crate::metrics::{DepthStats, RoundNetStats};
 use crate::net::Transport;
 use crate::protocol::{decode_activations_into, encode_activations_into};
 use crate::worker::{AggClient, Event};
@@ -147,9 +155,9 @@ impl PreparedShard {
 }
 
 /// Mutable training state of one worker: per-engine model and gradient.
-/// Owned by the [`EngineRunner`] during training (serial mode keeps it
-/// whole; pool mode moves each engine's slices onto that engine's
-/// thread); used directly only by the reference oracle and tests.
+/// The [`EngineRunner`] keeps its own (per-round-slot) copy of this
+/// shape internally; `WorkerState` is used directly by the reference
+/// oracle and tests.
 #[derive(Debug, Clone)]
 pub struct WorkerState {
     pub x: Vec<Vec<f32>>,
@@ -165,12 +173,19 @@ impl WorkerState {
 
     /// Stitch the (unpadded) model partition back together.
     pub fn model(&self, prep: &PreparedShard) -> Vec<f32> {
-        let mut out = Vec::new();
-        for (s, xe) in prep.engines.iter().zip(&self.x) {
-            out.extend_from_slice(&xe[..s.hi - s.lo]);
-        }
-        out
+        stitch_model(&prep.engines, &self.x)
     }
+}
+
+/// Stitch per-engine (padded) model slices back into the unpadded
+/// worker partition — the one place the padding convention is undone
+/// (shared by [`WorkerState::model`] and the runner's serial export).
+pub fn stitch_model(engines: &[EngineSlice], x: &[Vec<f32>]) -> Vec<f32> {
+    let mut out = Vec::new();
+    for (s, xe) in engines.iter().zip(x) {
+        out.extend_from_slice(&xe[..s.hi - s.lo]);
+    }
+    out
 }
 
 /// Counters from one mini-batch run.
@@ -181,15 +196,19 @@ pub struct PipelineStats {
     pub drained: u64,
     /// Micro-batches overlapped with later forwards. Depth-1 path only.
     pub overlapped: u64,
-    /// Depth-2: backward jobs dispatched to the engines while the
-    /// dispatcher kept pumping the transport (the dispatch/join split).
+    /// Overlap path: backward jobs dispatched to the engine ring while
+    /// the dispatcher kept pumping the transport.
     pub overlapped_backwards: u64,
-    /// Depth-2: FAs parked because their round's gradient window wasn't
-    /// open yet (backward deferred past the previous round's update).
+    /// Overlap path: FAs that arrived for a round *behind* the
+    /// retirement head — work the synchronous schedule would already
+    /// have needed, deferred into a later call.
     pub deferred_fas: u64,
-    /// Depth-2: rounds retired through the deferred update path
+    /// Overlap path: rounds retired through the deferred update path
     /// (including the flush at epoch boundaries).
     pub deferred_rounds: u64,
+    /// Staleness histogram + in-flight-depth gauge, one observation per
+    /// round (see [`DepthStats`]).
+    pub depth: DepthStats,
     /// Per-round network health, sampled once per round from cumulative
     /// `AggStats` deltas — never per packet (see [`RoundNetStats`]).
     pub net: RoundNetStats,
@@ -203,14 +222,16 @@ impl PipelineStats {
         self.overlapped_backwards += other.overlapped_backwards;
         self.deferred_fas += other.deferred_fas;
         self.deferred_rounds += other.deferred_rounds;
+        self.depth.merge(&other.depth);
         self.net.merge(&other.net);
     }
 }
 
 /// One mini-batch round carried across [`run_minibatch`] calls by the
-/// depth-2 pipeline: its aggregation traffic is still in flight while
-/// the next round's forwards run. All buffers are reused round over
+/// overlapped pipeline: its aggregation traffic is still in flight
+/// while later rounds' forwards run. All buffers are reused round over
 /// round, so the overlapped path stays allocation-free in steady state.
+/// Ring slot `i` accumulates gradients in the runner's slot `i`.
 #[derive(Debug, Default)]
 struct PendingRound {
     active: bool,
@@ -226,8 +247,7 @@ struct PendingRound {
     /// seq -> micro-batch index, FAs still in flight.
     pending: Vec<(u16, usize)>,
     /// Arrived FAs awaiting the engines (payload refcounts; decoded at
-    /// dispatch): either the engines are busy with an earlier
-    /// micro-batch, or this round's gradient window hasn't opened yet.
+    /// dispatch): the engine ring was full when they landed.
     ready: Vec<(usize, Arc<[i32]>)>,
 }
 
@@ -253,10 +273,11 @@ impl PendingRound {
 }
 
 /// Reusable buffers for [`run_minibatch`]. Construct once per worker;
-/// every capacity is established during the first mini-batch, after
-/// which the steady-state loop never allocates. The scratch also fixes
-/// the pipeline depth for its worker (the round slots it carries are
-/// meaningless across a depth change).
+/// every capacity is established while the ring warms up (each of the
+/// depth slots on its first use), after which the steady-state loop
+/// never allocates. The scratch also fixes the pipeline depth for its
+/// worker (the round ring it carries is meaningless across a depth
+/// change) — it must match the [`EngineRunner`]'s round count.
 #[derive(Debug)]
 pub struct PipelineScratch {
     /// Engine-summed partial activations (MB wide).
@@ -267,17 +288,19 @@ pub struct PipelineScratch {
     fa: Vec<f32>,
     /// In-flight seq -> micro-batch index (≤ window entries; linear scan
     /// beats hashing at this size and never rehashes/allocates).
-    /// Depth-1 path only — depth 2 tracks seqs per round.
+    /// Depth-1 path only — the overlap path tracks seqs per round.
     pending: Vec<(u16, usize)>,
-    /// Overlap depth: 1 = synchronous rounds (bit-compatible with the
-    /// pre-overlap pipeline), 2 = one round of
+    /// Overlap depth D: 1 = synchronous rounds (bit-compatible with the
+    /// pre-overlap pipeline), 2..=8 = up to D-1 rounds of in-flight
     /// forward–communication–backward overlap.
     depth: usize,
-    /// Depth-2 round slots: one is the in-flight round, the other is
-    /// recycled for the round being assembled.
-    rounds: [PendingRound; 2],
-    /// Which of `rounds` is the in-flight round.
-    flip: bool,
+    /// Round ring, one slot per depth level; slot `i` == runner
+    /// gradient slot `i`.
+    rounds: Vec<PendingRound>,
+    /// Ring index of the oldest in-flight round.
+    head: usize,
+    /// Number of in-flight rounds (`<= depth - 1` between calls).
+    live: usize,
 }
 
 impl Default for PipelineScratch {
@@ -292,19 +315,20 @@ impl PipelineScratch {
         Self::with_depth(1)
     }
 
-    /// `depth` ∈ {1, 2}: 1 runs rounds synchronously, 2 overlaps the
-    /// backward+update of round *k* with round *k+1*'s forwards and
-    /// sends (one-round staleness; see the module docs).
+    /// `depth` ∈ 1..=8: 1 runs rounds synchronously, D ≥ 2 keeps up to
+    /// D-1 rounds in flight across calls (bounded staleness D-1; see
+    /// the module docs).
     pub fn with_depth(depth: usize) -> Self {
-        assert!((1..=2).contains(&depth), "pipeline depth must be 1 or 2, got {depth}");
+        assert!((1..=8).contains(&depth), "pipeline depth must be in 1..=8, got {depth}");
         Self {
             pa: Vec::new(),
             payload: Vec::new(),
             fa: Vec::new(),
             pending: Vec::new(),
             depth,
-            rounds: [PendingRound::default(), PendingRound::default()],
-            flip: false,
+            rounds: (0..depth).map(|_| PendingRound::default()).collect(),
+            head: 0,
+            live: 0,
         }
     }
 
@@ -312,10 +336,16 @@ impl PipelineScratch {
     pub fn depth(&self) -> usize {
         self.depth
     }
+
+    /// Rounds currently in flight (0 between calls at depth 1).
+    pub fn in_flight_rounds(&self) -> usize {
+        self.live
+    }
 }
 
 /// Apply one FA event: decode, then loss + plane-replay backward on the
 /// runner (fanned out across engine threads when the pool is active).
+/// Depth-1 path: blocking backward against gradient slot 0.
 #[allow(clippy::too_many_arguments)]
 fn on_event(
     ev: Event,
@@ -337,15 +367,16 @@ fn on_event(
 
 /// Run one mini-batch (micro-batches `[first, first + count)`) through
 /// the FCB pipeline. Returns the summed training loss of the mini-batch
-/// at depth 1; at depth 2 it returns the loss of the round *retired*
-/// this call (the previous one — 0.0 on the first call of an epoch),
-/// and [`flush_round`] returns the tail.
+/// at depth 1; at depth ≥ 2 it returns the loss of the round *retired*
+/// this call (0.0 while the ring is still filling at the start of an
+/// epoch), and [`flush_round`] returns the tail.
 ///
 /// At depth 1 the runner enters with zeroed gradients (fresh from
 /// construction or from the previous `update`, which clears them) and
 /// leaves the same way — gradient state never leaks across
-/// mini-batches. At depth 2 the call leaves one round in flight in the
-/// scratch; its gradients retire on the next call or at the flush.
+/// mini-batches. At depth ≥ 2 the call leaves up to depth-1 rounds in
+/// flight in the scratch; their gradients retire (in round order) on
+/// later calls or at the flush.
 #[allow(clippy::too_many_arguments)]
 pub fn run_minibatch<T: Transport>(
     runner: &mut EngineRunner,
@@ -392,6 +423,7 @@ fn run_synchronous<T: Transport>(
     pending.reserve(count);
     let mut loss_sum = 0.0f32;
     let mut done = 0usize;
+    stats.depth.observe_round(0, 1);
 
     // Stage 1+2 interleaved: forward each micro-batch, ship PA, drain FAs.
     for j in 0..count {
@@ -444,14 +476,17 @@ fn run_synchronous<T: Transport>(
     }
 
     // Model update at the mini-batch boundary (synchronous SGD
-    // preserved); the runner zeroes its gradients for the next window.
+    // preserved); the runner zeroes its gradient slot for the next
+    // window.
     let inv_b = 1.0 / (count * mb) as f32;
     runner.update(inv_b);
     loss_sum
 }
 
-/// Borrow bundle for the depth-2 scheduler: the engines, the network,
-/// and the shared FA decode buffer.
+/// Borrow bundle for the depth-D scheduler: the engines, the network,
+/// and the shared FA decode buffer. Ring state (the rounds slice plus
+/// head/live indices) is threaded through the methods explicitly so
+/// callers keep ownership of the scratch.
 struct Overlap<'a, T: Transport> {
     runner: &'a mut EngineRunner,
     agg: &'a mut AggClient<T>,
@@ -462,100 +497,116 @@ struct Overlap<'a, T: Transport> {
 }
 
 impl<T: Transport> Overlap<'_, T> {
-    /// Block until the open backward (if any) finishes, crediting `r` —
-    /// the round that owns the current gradient window.
-    fn join_open(&mut self, r: &mut PendingRound) {
-        if self.runner.backward_open() {
-            r.loss_sum += self.runner.join_backward();
-            r.done += 1;
+    /// Credit every finished backward to its round (non-blocking).
+    fn reap(&mut self, rounds: &mut [PendingRound]) {
+        while let Some((gslot, loss)) = self.runner.try_reap_backward() {
+            rounds[gslot].loss_sum += loss;
+            rounds[gslot].done += 1;
         }
     }
 
-    /// Keep the engines busy without blocking: reap a finished backward
-    /// and dispatch the next ready FA of `r`. No-op while a backward is
-    /// still running (the dispatcher goes back to polling instead).
-    fn feed_engines(&mut self, r: &mut PendingRound) {
-        if !r.active {
-            return;
-        }
-        if self.runner.backward_open() {
-            if !self.runner.backward_done() {
+    /// Keep the engines busy without blocking: reap finished backwards,
+    /// then dispatch ready FAs — oldest round first, so the head (the
+    /// next to retire) drains soonest — while ring capacity lasts.
+    fn feed(&mut self, rounds: &mut [PendingRound], head: usize, live: usize) {
+        self.reap(rounds);
+        let depth = rounds.len();
+        for k in 0..live {
+            let slot = (head + k) % depth;
+            while self.runner.can_dispatch_backward() {
+                let Some((idx, payload)) = rounds[slot].ready.pop() else { break };
+                decode_activations_into(&payload, self.fa);
+                self.runner.dispatch_backward(slot, idx, self.fa, self.lr, self.loss);
+                self.stats.overlapped_backwards += 1;
+            }
+            if !self.runner.can_dispatch_backward() {
                 return;
             }
-            r.loss_sum += self.runner.join_backward();
-            r.done += 1;
-        }
-        if let Some((idx, payload)) = r.ready.pop() {
-            decode_activations_into(&payload, self.fa);
-            self.runner.dispatch_backward(idx, self.fa, self.lr, self.loss);
-            self.stats.overlapped_backwards += 1;
         }
     }
 
-    /// One scheduling step: feed the engines from `owner` (the round
-    /// whose gradient window is open), then poll the transport once
-    /// with `budget`. An arriving FA is parked on whichever round is
-    /// waiting on its seq: `owner`'s FAs become engine work
-    /// immediately, `parked`'s wait for the window to open. Returns
-    /// `false` when the budget expired without an event.
-    fn pump(&mut self, owner: &mut PendingRound, parked: &mut PendingRound, budget: Duration) -> bool {
-        self.feed_engines(owner);
+    /// One scheduling step: feed the engines, then poll the transport
+    /// once with `budget`, parking an arriving FA on whichever live
+    /// round is waiting on its seq (and handing it straight to the
+    /// engines when the ring has room). Returns `false` when the budget
+    /// expired without an event.
+    fn pump(&mut self, rounds: &mut [PendingRound], head: usize, live: usize, budget: Duration) -> bool {
+        self.feed(rounds, head, live);
         let Some(ev) = self.agg.poll(budget) else { return false };
         let Event::Fa { seq, payload } = ev else { return true };
-        if let Some(pos) = owner.pending.iter().position(|(s, _)| *s == seq) {
-            let (_, idx) = owner.pending.swap_remove(pos);
-            owner.ready.push((idx, payload));
-            self.feed_engines(owner);
-        } else if let Some(pos) = parked.pending.iter().position(|(s, _)| *s == seq) {
-            let (_, idx) = parked.pending.swap_remove(pos);
-            parked.ready.push((idx, payload));
-            self.stats.deferred_fas += 1;
+        let depth = rounds.len();
+        for k in 0..live {
+            let slot = (head + k) % depth;
+            if let Some(pos) = rounds[slot].pending.iter().position(|(s, _)| *s == seq) {
+                let (_, idx) = rounds[slot].pending.swap_remove(pos);
+                rounds[slot].ready.push((idx, payload));
+                if k > 0 {
+                    // An FA for a round behind the retirement head —
+                    // work the synchronous schedule would have forced
+                    // before this round's forwards even ran.
+                    self.stats.deferred_fas += 1;
+                }
+                self.feed(rounds, head, live);
+                return true;
+            }
         }
-        // An FA for neither round is a client-level duplicate the
+        // An FA for no live round is a client-level duplicate the
         // AggClient already filtered as far as it could; drop it.
         true
     }
 
-    /// Retire `r`: drain its remaining FAs (the engines overlapping the
-    /// drain), join every backward, then apply the deferred update.
-    /// Returns the round's loss.
-    fn retire(&mut self, r: &mut PendingRound, parked: &mut PendingRound) -> f32 {
+    /// Retire the head round: drain its remaining FAs (the engines
+    /// overlapping the drain), join its backwards, then apply its
+    /// deferred update. Returns the round's loss.
+    fn retire_head(&mut self, rounds: &mut [PendingRound], head: usize, live: usize) -> f32 {
         let deadline = Instant::now() + DRAIN_TIMEOUT;
-        while r.done < r.count {
-            if r.pending.is_empty() {
-                // Every FA is in hand: run the engines dry.
-                self.feed_engines(r);
-                self.join_open(r);
+        while rounds[head].done < rounds[head].count {
+            if rounds[head].pending.is_empty() {
+                // Every head FA is in hand: run the engines dry. If the
+                // head's remaining work sits in the engine ring
+                // (possibly queued behind other rounds' jobs, or the
+                // ring is full and its ready FAs can't enter), block on
+                // the oldest outstanding job instead of spinning.
+                self.feed(rounds, head, live);
+                if rounds[head].done >= rounds[head].count {
+                    break;
+                }
+                if self.runner.outstanding_backwards() > 0 {
+                    let (gslot, loss) = self.runner.join_backward();
+                    rounds[gslot].loss_sum += loss;
+                    rounds[gslot].done += 1;
+                }
                 continue;
             }
-            if !self.pump(r, parked, Duration::from_millis(2)) {
+            if !self.pump(rounds, head, live, Duration::from_millis(2)) {
                 assert!(
                     Instant::now() < deadline,
                     "drain timeout: worker {} round [{}, {}) missing {} of {} backwards; \
                      pending seqs {:?}; in_flight {}; stats {:?}",
                     self.agg.worker(),
-                    r.first,
-                    r.first + r.count,
-                    r.count - r.done,
-                    r.count,
-                    r.pending.iter().map(|(s, _)| *s).collect::<Vec<_>>(),
+                    rounds[head].first,
+                    rounds[head].first + rounds[head].count,
+                    rounds[head].count - rounds[head].done,
+                    rounds[head].count,
+                    rounds[head].pending.iter().map(|(s, _)| *s).collect::<Vec<_>>(),
                     self.agg.in_flight(),
                     self.agg.stats,
                 );
             }
         }
-        self.runner.update(r.inv_b);
+        self.runner.update_slot(head, rounds[head].inv_b);
         self.stats.deferred_rounds += 1;
-        let loss = r.loss_sum;
-        r.retire();
+        let loss = rounds[head].loss_sum;
+        rounds[head].retire();
         loss
     }
 }
 
-/// The depth-2 schedule: round *k*'s forwards and PA sends run while
-/// round *k-1*'s backwards drain off the network and through the engine
-/// pool; round *k-1*'s update applies mid-call, and round *k* is left
-/// in flight for the next call (or [`flush_round`]) to retire.
+/// The depth-D schedule: round *k*'s forwards and PA sends run while up
+/// to D-1 older rounds' backwards drain off the network and through the
+/// engine ring; the *oldest* round retires (update applied, slot freed)
+/// only when the ring is full, and round *k* is left in flight for
+/// later calls (or [`flush_round`]) to retire.
 #[allow(clippy::too_many_arguments)]
 fn run_overlapped<T: Transport>(
     runner: &mut EngineRunner,
@@ -568,20 +619,24 @@ fn run_overlapped<T: Transport>(
     scratch: &mut PipelineScratch,
 ) -> f32 {
     let mb = runner.prep().mb;
-    let PipelineScratch { pa, payload, fa, rounds, flip, .. } = scratch;
+    let depth = scratch.depth;
+    let PipelineScratch { pa, payload, fa, rounds, head, live, .. } = scratch;
     pa.resize(mb, 0.0);
-    let [r0, r1] = rounds;
-    let (prev, cur) = if *flip { (r1, r0) } else { (r0, r1) };
-    cur.begin(first, count, 1.0 / (count * mb) as f32);
+    let (mut head_i, mut live_i) = (*head, *live);
+    // Begin round k in the next free ring slot (== its gradient slot).
+    let tail = (head_i + live_i) % depth;
+    rounds[tail].begin(first, count, 1.0 / (count * mb) as f32);
+    live_i += 1;
+    // This round's forwards read a model live-1 updates behind the
+    // synchronous schedule — the bounded-staleness observation.
+    stats.depth.observe_round(live_i - 1, live_i);
     let mut ctx = Overlap { runner, agg, fa, loss, lr, stats };
 
-    // Stage 1: forward + ship round k; round k-1's backwards run on the
-    // engines whenever the network hands us their FAs.
+    // Stage 1: forward + ship round k; older rounds' backwards run on
+    // the engines whenever the network hands us their FAs.
     for j in 0..count {
         let idx = first + j;
-        // The runner executes one job class at a time: reap the open
-        // backward (round k-1's) before dispatching a forward.
-        ctx.join_open(prev);
+        ctx.feed(rounds, head_i, live_i);
         ctx.runner.forward(idx, pa);
         encode_activations_into(pa, payload);
         let seq = loop {
@@ -589,35 +644,43 @@ fn run_overlapped<T: Transport>(
                 break seq;
             }
             // Window full: pump until an operation retires.
-            ctx.pump(prev, cur, Duration::from_micros(200));
+            ctx.pump(rounds, head_i, live_i, Duration::from_micros(200));
         };
-        cur.pending.push((seq, idx));
+        rounds[tail].pending.push((seq, idx));
         // Opportunistic drain: overlap communication with later forwards.
-        while ctx.pump(prev, cur, Duration::ZERO) {}
+        while ctx.pump(rounds, head_i, live_i, Duration::ZERO) {}
     }
 
-    // Stage 2: retire round k-1 — the rest of its backwards, then its
-    // deferred update. Round k's early FAs park on `cur` meanwhile.
-    let retired = if prev.active { ctx.retire(prev, cur) } else { 0.0 };
+    // Stage 2: if the ring is now full, retire the oldest round — its
+    // backwards had up to D-1 rounds of forwards and sends to hide
+    // behind — so the next call finds a free slot.
+    let retired = if live_i == depth {
+        let l = ctx.retire_head(rounds, head_i, live_i);
+        head_i = (head_i + 1) % depth;
+        live_i -= 1;
+        l
+    } else {
+        0.0
+    };
 
-    // Stage 3: the gradient window now belongs to round k; start on its
-    // already-arrived FAs without blocking. Stragglers — and the open
-    // backward we may leave behind — are the next call's (or the
-    // flush's) first order of business.
-    while ctx.pump(cur, prev, Duration::ZERO) {}
-    ctx.feed_engines(cur);
+    // Stage 3: start on whatever FAs are already in hand without
+    // blocking; stragglers — and any still-queued backwards — are the
+    // next call's (or the flush's) first order of business.
+    while ctx.pump(rounds, head_i, live_i, Duration::ZERO) {}
+    ctx.feed(rounds, head_i, live_i);
 
-    *flip = !*flip;
+    (*head, *live) = (head_i, live_i);
     retired
 }
 
-/// Retire the depth-2 pipeline's in-flight round, if any: drain its
-/// remaining FAs, join its backwards, apply its deferred update, and
-/// return its loss (0.0 when nothing is pending — depth 1, a fresh
-/// scratch, or an already-flushed pipeline). Call at every point where
-/// the model must be consistent with the rounds issued so far: epoch
-/// boundaries (exact loss attribution, no cross-epoch staleness) and
-/// before exporting the model.
+/// Retire every in-flight round of the overlapped pipeline, oldest
+/// first: drain their remaining FAs, join their backwards, apply their
+/// deferred updates in round order, and return their summed loss (0.0
+/// when nothing is in flight — depth 1, a fresh scratch, or an
+/// already-flushed pipeline). Call at every point where the model must
+/// be consistent with the rounds issued so far: epoch boundaries (exact
+/// loss attribution, no cross-epoch staleness) and before exporting the
+/// model.
 pub fn flush_round<T: Transport>(
     runner: &mut EngineRunner,
     agg: &mut AggClient<T>,
@@ -626,20 +689,22 @@ pub fn flush_round<T: Transport>(
     stats: &mut PipelineStats,
     scratch: &mut PipelineScratch,
 ) -> f32 {
-    let retrans_mark = agg.stats.retransmits;
-    let PipelineScratch { fa, rounds, flip, .. } = scratch;
-    let [r0, r1] = rounds;
-    // After a run_minibatch call the in-flight round sits where the
-    // *next* call would look for its previous round.
-    let (prev, cur) = if *flip { (r1, r0) } else { (r0, r1) };
-    debug_assert!(!cur.active, "assembly slot must be idle between calls");
-    if !prev.active {
+    if scratch.live == 0 {
         return 0.0;
     }
+    let retrans_mark = agg.stats.retransmits;
+    let depth = scratch.depth;
+    let PipelineScratch { fa, rounds, head, live, .. } = scratch;
+    let mut total = 0.0f32;
     let mut ctx = Overlap { runner, agg, fa, loss, lr, stats };
-    let retired = ctx.retire(prev, cur);
-    stats.net.observe_round(agg.stats.retransmits - retrans_mark);
-    retired
+    while *live > 0 {
+        total += ctx.retire_head(rounds, *head, *live);
+        *head = (*head + 1) % depth;
+        *live -= 1;
+    }
+    let retrans_delta = ctx.agg.stats.retransmits - retrans_mark;
+    ctx.stats.net.observe_round(retrans_delta);
+    total
 }
 
 #[cfg(test)]
@@ -723,12 +788,22 @@ mod tests {
         assert_eq!(PipelineScratch::new().depth(), 1);
         assert_eq!(PipelineScratch::default().depth(), 1);
         assert_eq!(PipelineScratch::with_depth(2).depth(), 2);
+        let deep = PipelineScratch::with_depth(8);
+        assert_eq!(deep.depth(), 8);
+        assert_eq!(deep.rounds.len(), 8);
+        assert_eq!(deep.in_flight_rounds(), 0);
     }
 
     #[test]
     #[should_panic(expected = "pipeline depth")]
     fn scratch_rejects_depth_out_of_range() {
-        let _ = PipelineScratch::with_depth(3);
+        let _ = PipelineScratch::with_depth(9);
+    }
+
+    #[test]
+    #[should_panic(expected = "pipeline depth")]
+    fn scratch_rejects_depth_zero() {
+        let _ = PipelineScratch::with_depth(0);
     }
 
     #[test]

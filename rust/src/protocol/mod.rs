@@ -19,11 +19,11 @@
 //! # Payload-pool ownership discipline
 //!
 //! Every pool in the stack ([`PayloadPool`] here, the `AggClient` send
-//! pool, the switch's per-slot FA pair) follows one rule: **a pooled
+//! pool, the switch's per-slot FA ring) follows one rule: **a pooled
 //! buffer is rewritten only while the pool holds the sole reference**,
 //! proven at the moment of reuse with `Arc::get_mut`. Holders never
 //! hand a buffer back explicitly — they just drop their clone (the
-//! depth-2 pipeline may park an FA payload for a whole round first),
+//! overlapped pipeline may park an FA payload for whole rounds first),
 //! and the buffer becomes reusable the instant the last outside clone
 //! dies. A buffer still shared — a lagging multicast copy, a parked FA,
 //! an unsent retransmission — simply stays untouched and the pool

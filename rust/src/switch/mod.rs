@@ -18,7 +18,7 @@
 //! packet's payload (the sender may still hold it for retransmission)
 //! — egress FAs come from server-owned buffers, recycled per slot under
 //! the `Arc::get_mut` sole-reference rule (see [`crate::protocol`]'s
-//! payload-pool discipline and the FA buffer pair in [`p4::P4Switch`]).
+//! payload-pool discipline and the FA buffer ring in [`p4::P4Switch`]).
 //! Retransmit visibility flows the other way: servers count duplicates
 //! (`dup_agg`/`dup_ack` in `p4::SwitchStats`), while the per-round
 //! surfacing the reports consume happens client-side

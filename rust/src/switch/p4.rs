@@ -19,15 +19,19 @@
 //!
 //! The FA multicast is shared (`Arc`) across all `M` worker sends — the
 //! PA packet's buffer may still be referenced by its sender, so it is
-//! never written through. Each slot keeps a **pair** of FA buffers and
-//! alternates between them per round (§Perf L1): the off buffer from
-//! two rounds ago is normally exclusively the switch's again
+//! never written through. Each slot keeps a small **ring** of FA
+//! buffers (default 2; [`P4Switch::with_fa_ring`] widens it to the
+//! pipeline depth) and rotates through them per round (§Perf L1): the
+//! oldest buffer is normally exclusively the switch's again
 //! (`Arc::get_mut`) and is rewritten in place, so the switch thread
 //! stops allocating one fresh buffer per completed round; a fresh
-//! allocation happens only on each slot's first two rounds, or when a
-//! lagging holder (a not-yet-delivered multicast copy) still pins the
-//! buffer. The pair also guarantees a still-in-flight FA from round
-//! `r-1` is never overwritten by round `r`'s completion.
+//! allocation happens only on each slot's first ring-width rounds, or
+//! when a lagging holder (a not-yet-delivered multicast copy, or a
+//! worker's overlap pipeline parking the FA for a whole round) still
+//! pins the buffer. The ring also guarantees a still-held FA from up
+//! to ring-width-1 rounds ago is never overwritten by a later
+//! completion — with a depth-D worker pipeline parking FAs across D
+//! rounds, the trainers size the ring to `max(2, D)`.
 
 use super::{Action, AggServer};
 use crate::net::NodeId;
@@ -42,11 +46,11 @@ struct Slot {
     agg_bm: u32,
     ack_count: u32,
     ack_bm: u32,
-    /// Alternating FA multicast buffers (see module docs); start as the
+    /// Rotating FA multicast buffers (see module docs); start as the
     /// shared empty payload and are sized lazily on first completion.
-    fa: [Arc<[i32]>; 2],
+    fa: Vec<Arc<[i32]>>,
     /// Which of `fa` holds the current round's FA.
-    fa_cur: u8,
+    fa_cur: usize,
 }
 
 impl Default for Slot {
@@ -57,7 +61,7 @@ impl Default for Slot {
             agg_bm: 0,
             ack_count: 0,
             ack_bm: 0,
-            fa: [empty_payload(), empty_payload()],
+            fa: vec![empty_payload(), empty_payload()],
             fa_cur: 0,
         }
     }
@@ -100,6 +104,19 @@ impl P4Switch {
         }
     }
 
+    /// Widen every slot's FA ring to `n` buffers (`2..=16`): a depth-D
+    /// worker pipeline may park the FAs of up to D rounds before
+    /// dropping them, so the trainers pass `max(2, pipeline_depth)` to
+    /// keep the steady state allocation-free under overlap.
+    pub fn with_fa_ring(mut self, n: usize) -> Self {
+        assert!((2..=16).contains(&n), "fa ring must be in 2..=16, got {n}");
+        for s in &mut self.slots {
+            s.fa = (0..n).map(|_| empty_payload()).collect();
+            s.fa_cur = 0;
+        }
+        self
+    }
+
     /// All-workers bitmap — the completion condition for both rounds.
     fn full_bm(&self) -> u32 {
         if self.workers == 32 {
@@ -140,13 +157,13 @@ impl AggServer for P4Switch {
                 }
                 if slot.agg_bm == full {
                     // Aggregation complete: open the ACK round and
-                    // stage the FA in the off buffer of the pair (the
-                    // current one may still be multicast-in-flight from
-                    // the previous round on this slot).
+                    // stage the FA in the next ring buffer (earlier
+                    // ones may still be multicast-in-flight or parked
+                    // by an overlapping worker pipeline).
                     slot.ack_count = 0;
                     slot.ack_bm = 0;
-                    slot.fa_cur ^= 1;
-                    let buf = &mut slot.fa[slot.fa_cur as usize];
+                    slot.fa_cur = (slot.fa_cur + 1) % slot.fa.len();
+                    let buf = &mut slot.fa[slot.fa_cur];
                     match Arc::get_mut(buf) {
                         Some(dst) if dst.len() == slot.agg.len() => {
                             dst.copy_from_slice(&slot.agg);
@@ -165,7 +182,7 @@ impl AggServer for P4Switch {
             // already-staged buffer — its contents are this round's FA.
             if slot.agg_bm == full {
                 let mut out = pkt.clone();
-                out.payload = slot.fa[slot.fa_cur as usize].clone();
+                out.payload = slot.fa[slot.fa_cur].clone();
                 out.acked = true;
                 self.stats.fa_multicasts += 1;
                 return vec![Action::Multicast(out)];
@@ -317,6 +334,35 @@ mod tests {
         assert_eq!(m1.payload[..], [5]);
         assert_eq!(m2.payload[..], [7]);
         assert_eq!(m3.payload[..], [9]);
+    }
+
+    #[test]
+    fn fa_ring_absorbs_held_fas_across_depth_rounds() {
+        // Ring of 4 (a depth-4 worker pipeline): three still-held FAs
+        // from earlier rounds keep their contents while later rounds
+        // complete, with only the ring's warm-up allocations; a dropped
+        // buffer is rewritten in place on its next turn.
+        let mut sw = P4Switch::new(1, 1, 1).with_fa_ring(4);
+        let mut held = Vec::new();
+        for r in 0..4i32 {
+            let acts = drive(&mut sw, pa(0, 0, &[10 + r]));
+            let Action::Multicast(m) = &acts[0] else { panic!("{acts:?}") };
+            held.push(m.clone());
+            drive(&mut sw, Packet::ack(0, 0));
+        }
+        for (r, m) in held.iter().enumerate() {
+            assert_eq!(m.payload[..], [10 + r as i32], "held FA {r} untouched");
+        }
+        assert_eq!(sw.stats.fa_alloc, 4, "ring warm-up only");
+        // The oldest holder drops; its buffer's next turn reuses it.
+        held.remove(0);
+        let acts = drive(&mut sw, pa(0, 0, &[99]));
+        let Action::Multicast(m5) = &acts[0] else { panic!("{acts:?}") };
+        assert_eq!(m5.payload[..], [99]);
+        for (r, m) in held.iter().enumerate() {
+            assert_eq!(m.payload[..], [11 + r as i32], "held FA untouched after reuse");
+        }
+        assert_eq!(sw.stats.fa_alloc, 4, "steady state reuses the ring");
     }
 
     #[test]

@@ -45,6 +45,10 @@ where
     let join = std::thread::Builder::new()
         .name("agg-server".into())
         .spawn(move || {
+            // Affinity policy (feature-gated no-op by default): the
+            // switch is the fan-in point — park it on the last core,
+            // away from the engine threads pinned from core 0 up.
+            let _ = crate::util::affinity::pin_current(crate::util::affinity::last_core());
             while !stop2.load(Ordering::Relaxed) {
                 // Drain eagerly, then park: the switch is the fan-in
                 // point, and on few-core hosts yielding to peers beats

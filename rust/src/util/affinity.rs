@@ -1,0 +1,117 @@
+//! Core-affinity shim — the first slice of the NUMA roadmap item.
+//!
+//! Gated behind the `affinity` cargo feature (default **off**): the
+//! default build carries no platform dependency and compiles the no-op
+//! stub below, so call sites stay unconditional. With the feature on
+//! (Linux only), [`pin_current`] pins the calling thread via
+//! `sched_getaffinity`/`sched_setaffinity`, declared directly against
+//! libc — glibc and musl both export the symbols, so no crate
+//! dependency is needed (the offline build image vendors none).
+//!
+//! Core indices are **logical**: `pin_current(i)` pins to the i-th CPU
+//! of the thread's *currently allowed* set (mod its size), not to
+//! absolute CPU ids — under a container/cgroup mask like `cpus 2-3`,
+//! index 0 means CPU 2. Pinning therefore works (and the feature's CI
+//! smoke passes) on restricted and non-contiguous masks.
+//!
+//! Pinning policy (documented, deliberately simple):
+//!
+//! * each [`crate::engine::EngineRunner`] pool thread pins to its
+//!   thread index — on the single-worker scaling benches this maps
+//!   engine chunks 1:1 onto allowed cores;
+//! * the switch thread ([`crate::switch::runner::spawn`]) pins to the
+//!   **last** allowed core ([`last_core`]), keeping the fan-in point
+//!   off the engine cores.
+//!
+//! Multi-worker in-process runs share the core space (every worker's
+//! thread `t` lands on logical core `t`); per-worker offsets and
+//! NUMA-local shard placement are the remaining roadmap slices.
+
+/// Logical index of the last available core — the switch thread's home
+/// (see the module docs; [`pin_current`] maps it into the allowed set).
+pub fn last_core() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) - 1
+}
+
+/// Pin the calling thread to logical core `core` — the core-th CPU of
+/// the thread's allowed set, taken mod the set size. Returns `true` on
+/// success; always `false` when the `affinity` feature is off or the
+/// platform is unsupported.
+#[cfg(all(feature = "affinity", target_os = "linux"))]
+pub fn pin_current(core: usize) -> bool {
+    // One u64 word per 64 CPUs; 1024 CPUs matches glibc's cpu_set_t.
+    const WORDS: usize = 1024 / 64;
+    #[repr(C)]
+    struct CpuSet {
+        bits: [u64; WORDS],
+    }
+    extern "C" {
+        // pid 0 = the calling thread.
+        fn sched_getaffinity(pid: i32, cpusetsize: usize, mask: *mut CpuSet) -> i32;
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const CpuSet) -> i32;
+    }
+    let size = std::mem::size_of::<CpuSet>();
+    let mut allowed = CpuSet { bits: [0; WORDS] };
+    // SAFETY: `allowed` is a properly sized, writable mask; the kernel
+    // fills at most `size` bytes.
+    if unsafe { sched_getaffinity(0, size, &mut allowed) } != 0 {
+        return false;
+    }
+    let total: usize = allowed.bits.iter().map(|w| w.count_ones() as usize).sum();
+    if total == 0 {
+        return false;
+    }
+    // Walk to the (core % total)-th set bit of the allowed mask.
+    let mut remaining = core % total;
+    for (wi, &word) in allowed.bits.iter().enumerate() {
+        let mut w = word;
+        while w != 0 {
+            let bit = w.trailing_zeros() as usize;
+            if remaining == 0 {
+                let mut set = CpuSet { bits: [0; WORDS] };
+                set.bits[wi] |= 1u64 << bit;
+                // SAFETY: `set` is a properly sized, initialized mask;
+                // the kernel only reads `size` bytes from it.
+                return unsafe { sched_setaffinity(0, size, &set) == 0 };
+            }
+            remaining -= 1;
+            w &= w - 1; // clear lowest set bit
+        }
+    }
+    false
+}
+
+/// No-op stub: the `affinity` feature is off (or the target is not
+/// Linux), so threads stay wherever the scheduler puts them.
+#[cfg(not(all(feature = "affinity", target_os = "linux")))]
+pub fn pin_current(_core: usize) -> bool {
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn last_core_is_in_range() {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        assert!(last_core() < n);
+    }
+
+    #[cfg(not(all(feature = "affinity", target_os = "linux")))]
+    #[test]
+    fn stub_reports_unpinned() {
+        assert!(!pin_current(0));
+    }
+
+    #[cfg(all(feature = "affinity", target_os = "linux"))]
+    #[test]
+    fn pinning_succeeds_and_wraps() {
+        // Logical indices map into the *allowed* set, so this holds
+        // under restricted cpuset/taskset masks too.
+        assert!(pin_current(0), "pinning to the first allowed core must succeed");
+        assert!(pin_current(last_core()));
+        // An out-of-range index wraps instead of failing.
+        assert!(pin_current(usize::MAX - 1));
+    }
+}

@@ -6,6 +6,7 @@
 //! side of `criterion`, [`cli`] replaces `clap`, and [`prop`] is a seeded
 //! randomized-case runner standing in for `proptest` (see DESIGN.md).
 
+pub mod affinity;
 pub mod cli;
 pub mod prop;
 pub mod rng;

@@ -123,12 +123,13 @@ fn native(_e: usize) -> Box<dyn Compute> {
 
 type Rig = (Arc<PreparedShard>, EngineRunner, AggClient<Loopback>);
 
-/// One-worker training rig over the loopback transport.
-fn rig(n: usize, seed: u64, engine_threads: usize) -> Rig {
+/// One-worker training rig over the loopback transport. The runner's
+/// gradient-slot ring is sized to `depth`, like the trainers do.
+fn rig(n: usize, seed: u64, engine_threads: usize, depth: usize) -> Rig {
     let ds = synth::separable(n, 96, Loss::LogReg, 0.0, seed);
     let shard = shard_vertical(&ds, 1, 0, LANE);
     let prep = Arc::new(PreparedShard::prepare(&shard, 2, 8, 4));
-    let runner = EngineRunner::new(prep.clone(), &native, engine_threads);
+    let runner = EngineRunner::with_rounds(prep.clone(), &native, engine_threads, depth);
     let agg = AggClient::new(Loopback::new(), 1, 0, 8, Duration::from_secs(5));
     (prep, runner, agg)
 }
@@ -136,7 +137,7 @@ fn rig(n: usize, seed: u64, engine_threads: usize) -> Rig {
 #[test]
 fn run_minibatch_steady_state_is_allocation_free() {
     let _guard = serialize();
-    let (prep, mut runner, mut agg) = rig(128, 7, 1);
+    let (prep, mut runner, mut agg) = rig(128, 7, 1, 1);
     let mut stats = PipelineStats::default();
     let mut scratch = PipelineScratch::new();
     let per_batch = 4; // 32-sample mini-batch of MB=8 micro-batches
@@ -185,7 +186,7 @@ fn run_minibatch_steady_state_is_allocation_free() {
 #[test]
 fn pool_runner_steady_state_is_allocation_free() {
     let _guard = serialize();
-    let (prep, mut runner, mut agg) = rig(256, 9, 2);
+    let (prep, mut runner, mut agg) = rig(256, 9, 2, 1);
     assert_eq!(runner.threads(), 2, "pool must be active for this test");
     let mut stats = PipelineStats::default();
     let mut scratch = PipelineScratch::new();
@@ -245,23 +246,24 @@ fn pool_runner_steady_state_is_allocation_free() {
     );
 }
 
-#[test]
-fn overlapped_depth2_steady_state_is_allocation_free() {
-    let _guard = serialize();
-    // The depth-2 round machinery (PendingRound slots, deferred FA
-    // parking, dispatch/join split) must preserve the zero-allocation
-    // contract: payloads park as refcount bumps, round vectors recycle.
-    let (prep, mut runner, mut agg) = rig(256, 11, 2);
+/// Shared body for the overlapped-depth allocation tests: warm the
+/// whole round ring (every ring slot's vectors and every engine-side
+/// backward entry must see use before measuring), then require a clean
+/// window.
+fn overlapped_steady_state_is_allocation_free(depth: usize, seed: u64) -> PipelineStats {
+    let (prep, mut runner, mut agg) = rig(256, seed, 2, depth);
     assert_eq!(runner.threads(), 2, "pool must be active for this test");
+    assert_eq!(runner.rounds(), depth);
     let mut stats = PipelineStats::default();
-    let mut scratch = PipelineScratch::with_depth(2);
+    let mut scratch = PipelineScratch::with_depth(depth);
     let per_batch = 4;
     let batches = prep.micro_batches() / per_batch;
-    assert!(batches >= 5, "need warm-up and several measured batches");
+    // Warm-up must cycle every ring slot once: slot i first allocates
+    // its round vectors on round i.
+    let warm = depth.max(2);
+    assert!(batches >= warm + 3, "need warm-up and several measured batches");
 
-    // Warm-up: fills scratch/pool capacities, both round slots, and the
-    // pool's job-slot buffers on the engine threads.
-    for b in 0..2 {
+    for b in 0..warm {
         let loss = run_minibatch(
             &mut runner,
             &mut agg,
@@ -278,7 +280,7 @@ fn overlapped_depth2_steady_state_is_allocation_free() {
     // Steady state, measured process-wide (dispatcher + engine threads).
     let mut clean = false;
     let mut seen = Vec::new();
-    for b in 2..5 {
+    for b in warm..warm + 3 {
         let thread_before = allocs_on_this_thread();
         let global_before = GLOBAL_ALLOCS.load(Ordering::SeqCst);
         let loss = run_minibatch(
@@ -294,7 +296,7 @@ fn overlapped_depth2_steady_state_is_allocation_free() {
         let global_delta = GLOBAL_ALLOCS.load(Ordering::SeqCst) - global_before;
         let thread_delta = allocs_on_this_thread() - thread_before;
         assert!(loss.is_finite());
-        assert_eq!(thread_delta, 0, "depth-2 dispatch path allocated on the worker thread");
+        assert_eq!(thread_delta, 0, "depth-{depth} dispatch path allocated on the worker thread");
         seen.push(global_delta);
         if global_delta == 0 {
             clean = true;
@@ -303,12 +305,38 @@ fn overlapped_depth2_steady_state_is_allocation_free() {
     }
     assert!(
         clean,
-        "depth-2 steady state allocated in every measured window: {seen:?} \
-         (round slots, deferred parking, or dispatch slots are allocating per round)"
+        "depth-{depth} steady state allocated in every measured window: {seen:?} \
+         (round ring, deferred parking, or dispatch slots are allocating per round)"
     );
+    stats
+}
+
+#[test]
+fn overlapped_depth2_steady_state_is_allocation_free() {
+    let _guard = serialize();
+    // The round-ring machinery (PendingRound slots, deferred FA
+    // parking, slot-indexed dispatch) must preserve the zero-allocation
+    // contract: payloads park as refcount bumps, round vectors recycle.
+    let stats = overlapped_steady_state_is_allocation_free(2, 11);
     // the overlap machinery must actually have run
-    assert!(stats.deferred_fas > 0, "loopback FAs must park on the assembling round");
+    assert!(stats.deferred_fas > 0, "loopback FAs must land behind the retirement head");
     assert!(stats.deferred_rounds > 0, "rounds must retire through the deferred path");
+    assert!(stats.overlapped_backwards > 0, "backwards must ride the engine ring");
+}
+
+#[test]
+fn overlapped_depth4_steady_state_is_allocation_free() {
+    let _guard = serialize();
+    // Depth 4: four ring slots, four gradient slots, four engine-side
+    // backward entries — all recycled, none allocating once warm.
+    let stats = overlapped_steady_state_is_allocation_free(4, 17);
+    assert!(stats.deferred_rounds > 0, "rounds must retire through the deferred path");
+    assert!(stats.overlapped_backwards > 0, "backwards must ride the engine ring");
+    assert!(
+        stats.depth.max_in_flight >= 3,
+        "depth-4 ring must actually hold rounds in flight: {:?}",
+        stats.depth
+    );
 }
 
 #[test]
@@ -317,7 +345,7 @@ fn steady_state_training_still_learns() {
     // The zero-alloc loop must still be a correct trainer: loss falls,
     // with the serial runner and with the pool.
     for engine_threads in [1usize, 2] {
-        let (prep, mut runner, mut agg) = rig(256, 13, engine_threads);
+        let (prep, mut runner, mut agg) = rig(256, 13, engine_threads, 1);
         let mut stats = PipelineStats::default();
         let mut scratch = PipelineScratch::new();
         let per_batch = 4;
