@@ -1,0 +1,311 @@
+//! Round-consistent training checkpoints.
+//!
+//! A checkpoint captures everything needed to resume training **bitwise
+//! identically** at `pipeline_depth = 1`: the full stitched model (f32
+//! bit patterns, never re-rounded through text), the epoch cursor, the
+//! per-epoch loss curve accumulated so far, the cluster generation, and
+//! the round/seq cursors. The trainers checkpoint only at epoch
+//! boundaries *after* the round ring is flushed, so the model is
+//! consistent with exactly the rounds of the recorded epochs — the
+//! "round-consistent" part — and the depth-1 schedule is deterministic
+//! from a model + epoch cursor (batches iterate in order; the wire is
+//! fixed-point; FA completion follows seq order on FIFO links), so
+//! `restore → train` equals uninterrupted training bit for bit
+//! (`tests/fault_tolerance.rs` pins this).
+//!
+//! # On-disk format
+//!
+//! A little-endian binary file, `ckpt-<epoch>.bin` under the checkpoint
+//! directory:
+//!
+//! ```text
+//! magic  "P4CK"            | version u32 | generation u32
+//! epoch  u64               | rounds_done u64 | rng u64
+//! model_len u32 | model f32-bits * len
+//! curve_len u32 | curve f32-bits * len
+//! fnv1a-64 checksum of everything above
+//! ```
+//!
+//! Writes go through a temp file + rename, so a crash mid-save leaves
+//! the previous checkpoint intact; loads verify magic, version, and the
+//! checksum, so a truncated or corrupt file is rejected instead of
+//! resuming from garbage. [`latest`] scans a directory for the
+//! highest-epoch valid checkpoint.
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// File magic: "P4CK".
+const MAGIC: [u8; 4] = *b"P4CK";
+
+/// Serialization format version.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// A resumable training state (see the module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    /// Cluster generation at save time; resumed trainers start their
+    /// switch and clients at (at least) this generation.
+    pub generation: u32,
+    /// Next epoch to run: epochs `[0, epoch)` are folded into `model`.
+    pub epoch: usize,
+    /// Mini-batch rounds folded into the model (provenance /
+    /// diagnostics; at an epoch boundary this is `epoch * batches`).
+    pub rounds_done: u64,
+    /// Stochastic-schedule seed (the trainers' batch order is
+    /// deterministic today, so this carries the net seed for
+    /// provenance; a future shuffling trainer resumes its RNG from it).
+    pub rng: u64,
+    /// Full stitched model, bitwise-exact.
+    pub model: Vec<f32>,
+    /// Summed training loss of epochs `[0, epoch)`.
+    pub loss_curve: Vec<f32>,
+}
+
+/// What a successful save cost (feeds `metrics::FaultStats`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SaveReceipt {
+    pub path: PathBuf,
+    pub bytes: u64,
+}
+
+/// FNV-1a 64 over the serialized body (cheap, no dependency; catches
+/// truncation and bit rot, not adversaries).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn push_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
+    buf.extend_from_slice(&(xs.len() as u32).to_le_bytes());
+    for &v in xs {
+        buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+}
+
+fn read_u32(buf: &[u8], off: &mut usize) -> Result<u32> {
+    let end = *off + 4;
+    if end > buf.len() {
+        bail!("truncated checkpoint (at byte {off})");
+    }
+    let v = u32::from_le_bytes(buf[*off..end].try_into().unwrap());
+    *off = end;
+    Ok(v)
+}
+
+fn read_u64(buf: &[u8], off: &mut usize) -> Result<u64> {
+    let end = *off + 8;
+    if end > buf.len() {
+        bail!("truncated checkpoint (at byte {off})");
+    }
+    let v = u64::from_le_bytes(buf[*off..end].try_into().unwrap());
+    *off = end;
+    Ok(v)
+}
+
+fn read_f32s(buf: &[u8], off: &mut usize) -> Result<Vec<f32>> {
+    let len = read_u32(buf, off)? as usize;
+    let mut out = Vec::with_capacity(len);
+    for _ in 0..len {
+        out.push(f32::from_bits(read_u32(buf, off)?));
+    }
+    Ok(out)
+}
+
+impl Checkpoint {
+    /// Serialize to bytes (body + checksum).
+    fn to_bytes(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(48 + 4 * (self.model.len() + self.loss_curve.len()));
+        buf.extend_from_slice(&MAGIC);
+        buf.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        buf.extend_from_slice(&self.generation.to_le_bytes());
+        buf.extend_from_slice(&(self.epoch as u64).to_le_bytes());
+        buf.extend_from_slice(&self.rounds_done.to_le_bytes());
+        buf.extend_from_slice(&self.rng.to_le_bytes());
+        push_f32s(&mut buf, &self.model);
+        push_f32s(&mut buf, &self.loss_curve);
+        let sum = fnv1a(&buf);
+        buf.extend_from_slice(&sum.to_le_bytes());
+        buf
+    }
+
+    /// Parse from bytes, verifying magic, version, and checksum.
+    pub fn from_bytes(buf: &[u8]) -> Result<Checkpoint> {
+        if buf.len() < MAGIC.len() + 8 || buf[..4] != MAGIC {
+            bail!("not a p4sgd checkpoint (bad magic)");
+        }
+        let body = &buf[..buf.len() - 8];
+        let stored = u64::from_le_bytes(buf[buf.len() - 8..].try_into().unwrap());
+        if fnv1a(body) != stored {
+            bail!("checkpoint checksum mismatch (truncated or corrupt file)");
+        }
+        let mut off = 4usize;
+        let version = read_u32(body, &mut off)?;
+        if version != FORMAT_VERSION {
+            bail!("unsupported checkpoint version {version} (expected {FORMAT_VERSION})");
+        }
+        let generation = read_u32(body, &mut off)?;
+        let epoch = read_u64(body, &mut off)? as usize;
+        let rounds_done = read_u64(body, &mut off)?;
+        let rng = read_u64(body, &mut off)?;
+        let model = read_f32s(body, &mut off)?;
+        let loss_curve = read_f32s(body, &mut off)?;
+        if off != body.len() {
+            bail!("trailing bytes in checkpoint ({} past the curve)", body.len() - off);
+        }
+        Ok(Checkpoint { generation, epoch, rounds_done, rng, model, loss_curve })
+    }
+
+    /// The conventional file name for this checkpoint's epoch.
+    pub fn file_name(epoch: usize) -> String {
+        format!("ckpt-{epoch:06}.bin")
+    }
+
+    /// Write `dir/ckpt-<epoch>.bin` atomically (temp file + rename);
+    /// creates `dir` on demand. Returns the path and byte count.
+    pub fn save(&self, dir: &Path) -> Result<SaveReceipt> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+        let bytes = self.to_bytes();
+        let path = dir.join(Self::file_name(self.epoch));
+        let tmp = dir.join(format!(".{}.tmp", Self::file_name(self.epoch)));
+        std::fs::write(&tmp, &bytes)
+            .with_context(|| format!("writing checkpoint {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("publishing checkpoint {}", path.display()))?;
+        Ok(SaveReceipt { path, bytes: bytes.len() as u64 })
+    }
+
+    /// Load and verify one checkpoint file.
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        Self::from_bytes(&bytes)
+            .with_context(|| format!("parsing checkpoint {}", path.display()))
+    }
+}
+
+/// The highest-epoch **valid** checkpoint under `dir`, or `None` when
+/// the directory is missing or holds none. Candidates are ordered by
+/// the epoch in the file name (no parsing or checksumming of files
+/// that will lose anyway) and loaded newest-first until one validates;
+/// unreadable or corrupt files are skipped (an interrupted save must
+/// not poison recovery).
+pub fn latest(dir: &Path) -> Result<Option<Checkpoint>> {
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e).with_context(|| format!("scanning {}", dir.display())),
+    };
+    let mut candidates: Vec<(usize, PathBuf)> = Vec::new();
+    for entry in entries {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(num) = name.strip_prefix("ckpt-").and_then(|s| s.strip_suffix(".bin")) else {
+            continue;
+        };
+        let Ok(epoch) = num.parse::<usize>() else { continue };
+        candidates.push((epoch, entry.path()));
+    }
+    candidates.sort_by(|a, b| b.0.cmp(&a.0));
+    for (_, path) in candidates {
+        if let Ok(ck) = Checkpoint::load(&path) {
+            return Ok(Some(ck));
+        }
+    }
+    Ok(None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(epoch: usize) -> Checkpoint {
+        Checkpoint {
+            generation: 3,
+            epoch,
+            rounds_done: epoch as u64 * 8,
+            rng: 0xDEADBEEF,
+            model: vec![1.5f32, -0.0, f32::MIN_POSITIVE, 3.25e-7, -42.0],
+            loss_curve: (0..epoch).map(|e| 10.0 / (e + 1) as f32).collect(),
+        }
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("p4sgd-ckpt-test-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn roundtrip_is_bitwise() {
+        let ck = sample(4);
+        let back = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert_eq!(back.generation, 3);
+        assert_eq!(back.epoch, 4);
+        assert_eq!(back.rounds_done, 32);
+        assert_eq!(back.rng, 0xDEADBEEF);
+        assert_eq!(back.model.len(), ck.model.len());
+        for (a, b) in back.model.iter().zip(&ck.model) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+        }
+        for (a, b) in back.loss_curve.iter().zip(&ck.loss_curve) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn save_load_and_latest() {
+        let dir = tmpdir("latest");
+        assert!(latest(&dir).unwrap().is_none(), "missing dir reads as no checkpoint");
+        let r2 = sample(2).save(&dir).unwrap();
+        let r4 = sample(4).save(&dir).unwrap();
+        assert!(r2.bytes > 0 && r4.bytes > 0);
+        assert!(r4.path.ends_with("ckpt-000004.bin"));
+        let got = latest(&dir).unwrap().expect("checkpoints exist");
+        assert_eq!(got.epoch, 4, "latest must pick the highest epoch");
+        assert_eq!(Checkpoint::load(&r2.path).unwrap().epoch, 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corruption_is_rejected_and_skipped() {
+        let dir = tmpdir("corrupt");
+        let r = sample(3).save(&dir).unwrap();
+        let mut bytes = std::fs::read(&r.path).unwrap();
+        // truncation
+        assert!(Checkpoint::from_bytes(&bytes[..bytes.len() - 3]).is_err());
+        // bit flip in the model
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        let err = Checkpoint::from_bytes(&bytes).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "{err}");
+        // a corrupt file on disk must not poison latest()
+        std::fs::write(dir.join("ckpt-000009.bin"), &bytes).unwrap();
+        let got = latest(&dir).unwrap().expect("valid checkpoint remains");
+        assert_eq!(got.epoch, 3, "corrupt higher-epoch file skipped");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn version_and_magic_are_enforced() {
+        let ck = sample(1);
+        let mut bytes = ck.to_bytes();
+        bytes[0] = b'X';
+        assert!(Checkpoint::from_bytes(&bytes).is_err());
+        // bump the version field and re-checksum so only the version
+        // check can fail
+        let mut bytes = ck.to_bytes();
+        bytes[4] = 99;
+        let body_len = bytes.len() - 8;
+        let sum = fnv1a(&bytes[..body_len]);
+        bytes[body_len..].copy_from_slice(&sum.to_le_bytes());
+        let err = Checkpoint::from_bytes(&bytes).unwrap_err().to_string();
+        assert!(err.contains("version 99"), "{err}");
+    }
+}

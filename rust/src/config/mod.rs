@@ -55,11 +55,50 @@ pub struct ClusterConfig {
     /// operations). The switch itself always provisions the paper's
     /// full 64K-slot seq space.
     pub slots: usize,
+    /// Supervision silence timeout, milliseconds: a worker heard from
+    /// neither heartbeat nor Leave for this long is **evicted** (the
+    /// generation bumps, survivors resync, training resumes from the
+    /// last checkpoint over the re-partitioned survivors). 0 (default)
+    /// disables supervision — the historical wedge-on-crash behaviour,
+    /// and zero extra traffic.
+    pub worker_timeout_ms: u64,
+    /// Write a round-consistent checkpoint every this many epochs
+    /// (model + loss curve + generation + cursors, see `checkpoint`).
+    /// 0 (default) disables checkpointing.
+    pub checkpoint_interval: usize,
+    /// Directory for `ckpt-*.bin` files; required when
+    /// `checkpoint_interval > 0` or `resume` is set.
+    pub checkpoint_dir: Option<String>,
+    /// Resume from the latest valid checkpoint in `checkpoint_dir`
+    /// before training (bitwise-identical continuation at depth 1).
+    pub resume: bool,
+    /// After an eviction, re-admit the evicted worker on the restart
+    /// attempt (it "came back") instead of training on with the
+    /// survivors only. Counted in `FaultStats::rejoins`.
+    pub rejoin: bool,
+    /// Affinity core stride between in-process workers: worker `w`'s
+    /// engine thread `t` pins to logical core `w * core_offset + t`
+    /// (feature `affinity` only). 0 (default) keeps the historical
+    /// all-workers-share-cores layout; set it to `engine_threads` to
+    /// stripe workers across disjoint cores.
+    pub core_offset: usize,
 }
 
 impl Default for ClusterConfig {
     fn default() -> Self {
-        Self { workers: 4, engines: 8, engine_threads: 1, pipeline_depth: 1, slots: 64 }
+        Self {
+            workers: 4,
+            engines: 8,
+            engine_threads: 1,
+            pipeline_depth: 1,
+            slots: 64,
+            worker_timeout_ms: 0,
+            checkpoint_interval: 0,
+            checkpoint_dir: None,
+            resume: false,
+            rejoin: false,
+            core_offset: 0,
+        }
     }
 }
 
@@ -132,12 +171,34 @@ impl Default for NetConfig {
     }
 }
 
+/// Fault injection for tests and the CI smoke lane: simulate a worker
+/// crash (it goes silent mid-epoch — no Leave, no further packets) so
+/// the supervision/eviction/restore machinery actually runs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    /// Kill this worker (its original global index); `None` = no
+    /// injection. Requires `cluster.worker_timeout_ms > 0` (otherwise
+    /// the cluster would simply wedge) and at least 2 workers.
+    pub kill_worker: Option<usize>,
+    /// Fraction of the epoch range at which the kill fires, in
+    /// `[0, 1]`; the worker dies mid-epoch, after half that epoch's
+    /// batches. 0.5 = the CI lane's "killed at 50% of the epochs".
+    pub kill_at_frac: f64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        Self { kill_worker: None, kill_at_frac: 0.5 }
+    }
+}
+
 /// The complete run description.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct SystemConfig {
     pub cluster: ClusterConfig,
     pub train: TrainConfig,
     pub net: NetConfig,
+    pub fault: FaultConfig,
     pub backend: Option<Backend>,
 }
 
@@ -152,6 +213,14 @@ impl SystemConfig {
             "cluster.engine_threads",
             "cluster.pipeline_depth",
             "cluster.slots",
+            "cluster.worker_timeout_ms",
+            "cluster.checkpoint_interval",
+            "cluster.checkpoint_dir",
+            "cluster.resume",
+            "cluster.rejoin",
+            "cluster.core_offset",
+            "fault.kill_worker",
+            "fault.kill_at_frac",
             "train.loss",
             "train.lr",
             "train.batch",
@@ -184,6 +253,27 @@ impl SystemConfig {
                     .int_or("cluster.pipeline_depth", d.cluster.pipeline_depth as i64)
                     as usize,
                 slots: doc.int_or("cluster.slots", d.cluster.slots as i64) as usize,
+                worker_timeout_ms: doc
+                    .int_or("cluster.worker_timeout_ms", d.cluster.worker_timeout_ms as i64)
+                    as u64,
+                checkpoint_interval: doc
+                    .int_or("cluster.checkpoint_interval", d.cluster.checkpoint_interval as i64)
+                    as usize,
+                checkpoint_dir: doc
+                    .get("cluster.checkpoint_dir")
+                    .and_then(|v| v.as_str())
+                    .map(str::to_string),
+                resume: doc.bool_or("cluster.resume", d.cluster.resume),
+                rejoin: doc.bool_or("cluster.rejoin", d.cluster.rejoin),
+                core_offset: doc.int_or("cluster.core_offset", d.cluster.core_offset as i64)
+                    as usize,
+            },
+            fault: FaultConfig {
+                kill_worker: match doc.int_or("fault.kill_worker", -1) {
+                    n if n < 0 => None,
+                    n => Some(n as usize),
+                },
+                kill_at_frac: doc.float_or("fault.kill_at_frac", d.fault.kill_at_frac),
             },
             train: TrainConfig {
                 loss: doc
@@ -253,6 +343,39 @@ impl SystemConfig {
         }
         if !(self.net.drop_prob < 1.0 && self.net.drop_prob >= 0.0) {
             bail!("drop_prob must be in [0, 1), got {}", self.net.drop_prob);
+        }
+        if (c.checkpoint_interval > 0 || c.resume) && c.checkpoint_dir.is_none() {
+            bail!("checkpoint_interval/resume require cluster.checkpoint_dir");
+        }
+        if c.worker_timeout_ms >= 20_000 {
+            // The pipeline's hard drain deadline is 30s: eviction must
+            // fire (and propagate) well before survivors give up and
+            // panic, or supervision silently cannot work.
+            bail!(
+                "worker_timeout_ms must be < 20000 (survivors' drain loops abort at 30s, \
+                 and the eviction must reach them first), got {}",
+                c.worker_timeout_ms
+            );
+        }
+        if c.core_offset > 1024 {
+            bail!("core_offset must be <= 1024, got {}", c.core_offset);
+        }
+        if let Some(kw) = self.fault.kill_worker {
+            if c.worker_timeout_ms == 0 {
+                bail!(
+                    "fault.kill_worker requires cluster.worker_timeout_ms > 0 \
+                     (without supervision a dead worker wedges the cluster)"
+                );
+            }
+            if kw >= c.workers {
+                bail!("fault.kill_worker {kw} out of range (workers = {})", c.workers);
+            }
+            if c.workers < 2 {
+                bail!("fault.kill_worker needs at least 2 workers (someone must survive)");
+            }
+        }
+        if !(0.0..=1.0).contains(&self.fault.kill_at_frac) {
+            bail!("fault.kill_at_frac must be in [0, 1], got {}", self.fault.kill_at_frac);
         }
         Ok(())
     }
@@ -379,5 +502,73 @@ mod tests {
     #[test]
     fn bad_loss_string() {
         assert!(SystemConfig::from_toml("[train]\nloss = \"ridge\"").is_err());
+    }
+
+    #[test]
+    fn fault_tolerance_keys_parse_and_default_off() {
+        let d = SystemConfig::default();
+        assert_eq!(d.cluster.worker_timeout_ms, 0, "supervision off by default");
+        assert_eq!(d.cluster.checkpoint_interval, 0, "checkpointing off by default");
+        assert!(!d.cluster.resume && !d.cluster.rejoin);
+        assert_eq!(d.cluster.core_offset, 0);
+        assert_eq!(d.fault.kill_worker, None);
+        let cfg = SystemConfig::from_toml(
+            r#"
+            [cluster]
+            worker_timeout_ms = 500
+            checkpoint_interval = 2
+            checkpoint_dir = "/tmp/ckpts"
+            resume = true
+            rejoin = true
+            core_offset = 4
+            [fault]
+            kill_worker = 1
+            kill_at_frac = 0.5
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.cluster.worker_timeout_ms, 500);
+        assert_eq!(cfg.cluster.checkpoint_interval, 2);
+        assert_eq!(cfg.cluster.checkpoint_dir.as_deref(), Some("/tmp/ckpts"));
+        assert!(cfg.cluster.resume && cfg.cluster.rejoin);
+        assert_eq!(cfg.cluster.core_offset, 4);
+        assert_eq!(cfg.fault.kill_worker, Some(1));
+        assert_eq!(cfg.fault.kill_at_frac, 0.5);
+    }
+
+    #[test]
+    fn fault_tolerance_validation_bounds() {
+        // checkpointing without a directory
+        let mut cfg = SystemConfig::default();
+        cfg.cluster.checkpoint_interval = 2;
+        assert!(cfg.validate().is_err());
+        cfg.cluster.checkpoint_dir = Some("/tmp/x".into());
+        cfg.validate().unwrap();
+        // resume without a directory
+        let mut cfg = SystemConfig::default();
+        cfg.cluster.resume = true;
+        assert!(cfg.validate().is_err());
+        // kill without supervision
+        let mut cfg = SystemConfig::default();
+        cfg.fault.kill_worker = Some(1);
+        assert!(cfg.validate().is_err());
+        cfg.cluster.worker_timeout_ms = 300;
+        cfg.validate().unwrap();
+        // timeout must stay below the pipeline's 30s drain deadline
+        cfg.cluster.worker_timeout_ms = 20_000;
+        assert!(cfg.validate().is_err());
+        cfg.cluster.worker_timeout_ms = 19_999;
+        cfg.validate().unwrap();
+        // kill out of range
+        cfg.fault.kill_worker = Some(99);
+        assert!(cfg.validate().is_err());
+        // kill fraction out of range
+        let mut cfg = SystemConfig::default();
+        cfg.fault.kill_at_frac = 1.5;
+        assert!(cfg.validate().is_err());
+        // core offset bound
+        let mut cfg = SystemConfig::default();
+        cfg.cluster.core_offset = 2048;
+        assert!(cfg.validate().is_err());
     }
 }

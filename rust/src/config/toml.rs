@@ -52,13 +52,21 @@ pub struct Doc {
     map: BTreeMap<String, Value>,
 }
 
-/// Parse error with 1-based line number.
-#[derive(Debug, thiserror::Error, PartialEq)]
-#[error("toml parse error at line {line}: {msg}")]
+/// Parse error with 1-based line number. (Display/Error implemented by
+/// hand — the offline image vendors no derive-macro crates.)
+#[derive(Debug, PartialEq)]
 pub struct ParseError {
     pub line: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "toml parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 impl Doc {
     pub fn parse(text: &str) -> Result<Doc, ParseError> {

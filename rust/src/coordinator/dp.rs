@@ -16,22 +16,38 @@
 //! batch order. The whole ring is flushed at every epoch boundary,
 //! both to bound staleness and because the epoch-loss AllReduce shares
 //! the seq stream and would otherwise swallow the gradient FAs.
+//!
+//! # Fault tolerance
+//!
+//! The DP trainer mirrors the MP attempts structure (see
+//! [`super::mp`]): with `cluster.worker_timeout_ms > 0` a supervisor
+//! watches worker heartbeats, evicts the silent, and restarts the
+//! attempt over the survivors from the last checkpoint (replicated
+//! model — worker 0's copy is the checkpoint). Sample shards
+//! re-partition horizontally over the survivors; note that `B` must
+//! stay divisible by `survivors * MB` for the restart to be valid
+//! (choose `B` accordingly, or enable `cluster.rejoin`).
 
-use super::TrainReport;
+use super::supervisor::{self, CkptPart, CkptSink, SupervisorReport};
+use super::{compatible_ckpt, merge_agg, TrainReport, WorkerOutcome};
+use crate::checkpoint;
 use crate::config::SystemConfig;
 use crate::data::partition::horizontal;
 use crate::data::quantize::{pack_rows, LANE};
 use crate::data::Dataset;
 use crate::engine::Compute;
+use crate::metrics::FaultStats;
 use crate::net::sim::SimNet;
-use crate::net::switch_node;
+use crate::net::{supervisor_node, switch_node};
 use crate::pipeline::PipelineStats;
 use crate::protocol::{from_fixed, to_fixed};
 use crate::switch::p4::P4Switch;
 use crate::switch::runner;
 use crate::util::round_up;
 use crate::worker::{AggClient, AggStats, Event};
-use std::sync::mpsc;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 /// Gradient-chunk payload (elements per packet). The paper's DP system
@@ -39,12 +55,11 @@ use std::time::{Duration, Instant};
 /// SwitchML-era packet economy while reusing our slot machinery.
 pub const GRAD_CHUNK: usize = 64;
 
-struct WorkerResult {
-    worker: usize,
-    model: Vec<f32>,
-    loss_curve: Vec<f32>,
-    pipeline: PipelineStats,
-    agg: AggStats,
+/// One attempt's outcome (mirror of the MP trainer's).
+struct Attempt {
+    outcomes: Vec<WorkerOutcome>,
+    evicted: Vec<usize>,
+    generation: u32,
 }
 
 /// Train `ds` under data parallelism per `cfg`.
@@ -54,31 +69,182 @@ pub fn train_dp(
     make_compute: &super::mp::ComputeFactory,
 ) -> TrainReport {
     cfg.validate().expect("invalid config");
-    let m = cfg.cluster.workers;
     let t = &cfg.train;
-    assert!(t.batch % (t.micro_batch * m) == 0, "B must split over workers*MB");
+    assert!(
+        t.batch % (t.micro_batch * cfg.cluster.workers) == 0,
+        "B must split over workers*MB"
+    );
     let start = Instant::now();
 
-    let mut endpoints = SimNet::build(m + 1, &cfg.net);
-    let switch_ep = endpoints.pop().unwrap();
-    // Window and switch FA ring scale with the overlap depth, exactly
-    // like the MP trainer: D rounds of chunks may be outstanding.
+    let ckpt_dir = cfg.cluster.checkpoint_dir.as_ref().map(PathBuf::from);
+    let mut fault = FaultStats::default();
+    let mut members: Vec<usize> = (0..cfg.cluster.workers).collect();
+    let mut generation = 0u32;
+    let mut start_epoch = 0usize;
+    let mut model0: Option<Vec<f32>> = None;
+    let mut curve_prefix: Vec<f32> = Vec::new();
+    let mut kill_armed = cfg.fault.kill_worker.is_some();
+
+    if cfg.cluster.resume {
+        let dir = ckpt_dir.as_ref().expect("validated: resume requires checkpoint_dir");
+        let found = checkpoint::latest(dir).ok().flatten();
+        if let Some(ck) = found.and_then(|ck| compatible_ckpt(ck, ds.d, cfg.train.epochs)) {
+            start_epoch = ck.epoch;
+            generation = ck.generation;
+            curve_prefix = ck.loss_curve.clone();
+            model0 = Some(ck.model);
+            fault.restores += 1;
+        }
+    }
+
+    let mut pipeline = PipelineStats::default();
+    let mut agg = AggStats::default();
+    // Livelock guard, mirroring train_mp: restart attempts must make
+    // progress (membership shrinks or the restored epoch advances).
+    let mut stuck = 0usize;
+
+    loop {
+        let before = (members.len(), start_epoch);
+        let attempt = run_attempt(
+            cfg,
+            ds,
+            make_compute,
+            &members,
+            generation,
+            start_epoch,
+            model0.as_deref(),
+            kill_armed,
+            ckpt_dir.as_deref(),
+            &curve_prefix,
+            &mut fault,
+        );
+        for o in &attempt.outcomes {
+            pipeline.merge(&o.pipeline);
+            merge_agg(&mut agg, &o.agg);
+        }
+        if attempt.evicted.is_empty() {
+            let mut outcomes = attempt.outcomes;
+            assert_eq!(outcomes.len(), members.len(), "all workers must report");
+            assert!(
+                outcomes.iter().all(|o| !o.aborted),
+                "no eviction was recorded, so no worker may have aborted"
+            );
+            outcomes.sort_by_key(|r| r.worker);
+            let mut loss_per_epoch = curve_prefix.clone();
+            loss_per_epoch.extend_from_slice(&outcomes[0].loss_curve);
+            fault.resyncs = agg.resyncs;
+            fault.stale_gen = agg.stale_gen;
+            return TrainReport {
+                loss_per_epoch,
+                wall: start.elapsed(),
+                model: outcomes[0].model.clone(), // replicas are identical
+                pipeline,
+                agg,
+                fault,
+            };
+        }
+
+        kill_armed = false;
+        generation = attempt.generation;
+        let evicted_globals: Vec<usize> = attempt.evicted.iter().map(|&l| members[l]).collect();
+        if cfg.cluster.rejoin {
+            fault.rejoins += evicted_globals.len() as u64;
+        } else {
+            members.retain(|g| !evicted_globals.contains(g));
+            assert!(!members.is_empty(), "every worker was evicted — nothing can resume");
+            assert!(
+                t.batch % (t.micro_batch * members.len()) == 0,
+                "B ({}) must stay divisible by survivors*MB ({}x{}) — choose B accordingly \
+                 or enable cluster.rejoin",
+                t.batch,
+                members.len(),
+                t.micro_batch
+            );
+        }
+        let found = ckpt_dir.as_ref().and_then(|d| checkpoint::latest(d).ok().flatten());
+        match found.and_then(|ck| compatible_ckpt(ck, ds.d, cfg.train.epochs)) {
+            Some(ck) => {
+                start_epoch = ck.epoch;
+                curve_prefix = ck.loss_curve.clone();
+                model0 = Some(ck.model);
+                fault.restores += 1;
+            }
+            None => {
+                start_epoch = 0;
+                curve_prefix = Vec::new();
+                model0 = None;
+            }
+        }
+        if (members.len(), start_epoch) == before {
+            stuck += 1;
+            assert!(
+                stuck < 3,
+                "eviction/restart loop is not progressing (restarted {stuck}x at epoch \
+                 {start_epoch} with {} workers) — worker_timeout_ms is likely too small \
+                 for honest startup/compute gaps",
+                members.len()
+            );
+        } else {
+            stuck = 0;
+        }
+    }
+}
+
+/// Spawn one fabric + switch + worker set over `members` and run epochs
+/// `[start_epoch, epochs)`, supervising when configured.
+#[allow(clippy::too_many_arguments)]
+fn run_attempt(
+    cfg: &SystemConfig,
+    ds: &Dataset,
+    make_compute: &super::mp::ComputeFactory,
+    members: &[usize],
+    generation: u32,
+    start_epoch: usize,
+    model0: Option<&[f32]>,
+    kill_armed: bool,
+    ckpt_dir: Option<&Path>,
+    curve_prefix: &[f32],
+    fault: &mut FaultStats,
+) -> Attempt {
+    let m = members.len();
+    let t = &cfg.train;
     let depth = cfg.cluster.pipeline_depth;
     let window = cfg.cluster.effective_window();
+    let supervise = cfg.cluster.worker_timeout_ms > 0;
+    let ckpt_on = cfg.cluster.checkpoint_interval > 0 && ckpt_dir.is_some();
+
+    // Nodes: workers 0..m, switch m, supervisor m+1. Window and switch
+    // FA ring scale with the overlap depth, exactly like the MP
+    // trainer: D rounds of chunks may be outstanding.
+    let mut endpoints = SimNet::build(m + 2, &cfg.net);
+    let mut sup_ep = endpoints.pop().unwrap();
+    let switch_ep = endpoints.pop().unwrap();
     let server = runner::spawn(
         P4Switch::new(crate::worker::agg_client::SEQ_SPACE, m, GRAD_CHUNK)
-            .with_fa_ring(cfg.cluster.fa_ring()),
+            .with_fa_ring(cfg.cluster.fa_ring())
+            .with_generation(generation),
         switch_ep,
     );
 
-    let (res_tx, res_rx) = mpsc::channel::<WorkerResult>();
+    let (res_tx, res_rx) = mpsc::channel::<WorkerOutcome>();
+    let (ck_tx, ck_rx) = mpsc::channel::<CkptPart>();
+    // In-process completion flags: the watchdog's ground truth that a
+    // worker finished, immune to a dropped Leave packet.
+    let finished: Arc<Vec<AtomicBool>> = Arc::new((0..m).map(|_| AtomicBool::new(false)).collect());
+    let mut sup_report = SupervisorReport { evicted: Vec::new(), generation };
     std::thread::scope(|scope| {
         for (w, ep) in endpoints.into_iter().enumerate() {
             let res_tx = res_tx.clone();
+            let ck_tx = ck_tx.clone();
             let cfg = cfg.clone();
+            let global = members[w];
+            let finished = finished.clone();
             scope.spawn(move || {
                 let t = &cfg.train;
+                let sup = supervisor_node(m);
                 let d_pad = round_up(ds.d, LANE);
+                // Sample shards re-partition over the attempt's
+                // membership.
                 let ranges = horizontal(ds.n, m);
                 let (lo, hi) = ranges[w];
                 // Quantize + pack this worker's samples (full width).
@@ -86,17 +252,27 @@ pub fn train_dp(
                 let mb = t.micro_batch;
                 let n_local = ((hi - lo) / local_b) * local_b; // whole batches
                 // DP keeps the full-width model on one engine per worker.
-                let mut compute = make_compute(w, 0);
+                let mut compute = make_compute(global, 0);
                 let mut agg = AggClient::new(
                     ep,
                     switch_node(m),
                     w,
                     window,
                     Duration::from_micros(cfg.net.timeout_us),
-                );
+                )
+                .with_generation(generation);
+                if supervise {
+                    let hb = Duration::from_millis((cfg.cluster.worker_timeout_ms / 4).max(1));
+                    agg.enable_heartbeat(sup, hb);
+                    agg.heartbeat_now();
+                }
                 let mut x = vec![0.0f32; d_pad];
+                if let Some(m0) = model0 {
+                    // Restored replica (every worker holds the full model).
+                    x[..ds.d].copy_from_slice(m0);
+                }
                 let mut g = vec![0.0f32; d_pad];
-                let mut loss_curve = Vec::with_capacity(t.epochs);
+                let mut loss_curve = Vec::with_capacity(t.epochs.saturating_sub(start_epoch));
                 // pre-pack local micro-batches (bit-planes only: the
                 // backward replays planes, so no dequantized copy)
                 let n_micro = n_local / mb;
@@ -110,6 +286,16 @@ pub fn train_dp(
                 }
                 let micro_per_batch = local_b / mb;
                 let batches = n_micro / micro_per_batch;
+                let kill_at = if kill_armed
+                    && cfg.fault.kill_worker == Some(global)
+                    && start_epoch < t.epochs
+                {
+                    let ke = ((cfg.fault.kill_at_frac * t.epochs as f64) as usize)
+                        .clamp(start_epoch, t.epochs - 1);
+                    Some((ke, batches / 2))
+                } else {
+                    None
+                };
                 let mut fa = vec![0.0f32; mb];
                 // Depth-D overlap state: a ring of up to D-1 gradients
                 // being AllReduced while the next batch computes, each
@@ -120,9 +306,15 @@ pub fn train_dp(
                 let mut chunk_buf = vec![0i32; GRAD_CHUNK];
                 let inv_b = 1.0 / t.batch as f32;
                 let mut pstats = PipelineStats::default();
-                for _ in 0..t.epochs {
+                let mut aborted = false;
+                'epochs: for e in start_epoch..t.epochs {
                     let mut epoch_loss = 0.0f32;
                     for b in 0..batches {
+                        if kill_at == Some((e, b)) {
+                            // Simulated crash: vanish mid-epoch (no
+                            // Leave, no result, no further packets).
+                            return;
+                        }
                         let retrans_mark = agg.stats.retransmits;
                         g.iter_mut().for_each(|v| *v = 0.0);
                         // Local forward+backward (no inter-worker
@@ -143,6 +335,10 @@ pub fn train_dp(
                                 while pump_ring(&mut agg, &mut ring, &mut chunk_buf, Duration::ZERO) {}
                             }
                         }
+                        if agg.interrupted() {
+                            aborted = true;
+                            break 'epochs;
+                        }
                         if depth >= 2 {
                             // This batch computed against a model
                             // ring.live updates behind the synchronous
@@ -152,9 +348,16 @@ pub fn train_dp(
                             // reduce — its chunks had D-1 batches of
                             // compute to fly through the switch.
                             if ring.live == ring.cap() {
-                                let s = finish_oldest(&mut agg, &mut ring, &mut chunk_buf);
-                                compute.update(&mut x, &ring.slots[s].buf, inv_b);
-                                pstats.deferred_rounds += 1;
+                                match finish_oldest(&mut agg, &mut ring, &mut chunk_buf) {
+                                    Some(s) => {
+                                        compute.update(&mut x, &ring.slots[s].buf, inv_b);
+                                        pstats.deferred_rounds += 1;
+                                    }
+                                    None => {
+                                        aborted = true;
+                                        break 'epochs;
+                                    }
+                                }
                             }
                             // Launch batch b's reduce and let it fly
                             // while later batches compute.
@@ -163,7 +366,10 @@ pub fn train_dp(
                             pstats.depth.observe_round(0, 1);
                             // AllReduce the gradient in chunks through the
                             // switch, then step.
-                            allreduce_grad(&mut agg, &mut g);
+                            if !allreduce_grad(&mut agg, &mut g) {
+                                aborted = true;
+                                break 'epochs;
+                            }
                             compute.update(&mut x, &g, inv_b);
                         }
                         pstats.net.observe_round(agg.stats.retransmits - retrans_mark);
@@ -177,47 +383,87 @@ pub fn train_dp(
                     // below would otherwise consume — and drop — the
                     // in-flight FAs. Staleness never crosses the epoch.
                     while ring.live > 0 {
-                        let s = finish_oldest(&mut agg, &mut ring, &mut chunk_buf);
-                        compute.update(&mut x, &ring.slots[s].buf, inv_b);
-                        pstats.deferred_rounds += 1;
+                        match finish_oldest(&mut agg, &mut ring, &mut chunk_buf) {
+                            Some(s) => {
+                                compute.update(&mut x, &ring.slots[s].buf, inv_b);
+                                pstats.deferred_rounds += 1;
+                            }
+                            None => {
+                                aborted = true;
+                                break 'epochs;
+                            }
+                        }
                     }
                     // AllReduce the epoch loss so every worker logs the
                     // global value (one extra chunk round).
                     let mut lbuf = vec![0.0f32; GRAD_CHUNK];
                     lbuf[0] = epoch_loss;
-                    allreduce_grad(&mut agg, &mut lbuf);
+                    if !allreduce_grad(&mut agg, &mut lbuf) {
+                        aborted = true;
+                        break 'epochs;
+                    }
                     loss_curve.push(lbuf[0]);
                     pstats.net.observe_round(agg.stats.retransmits - boundary_mark);
+                    // Replicated model: worker 0 alone carries the
+                    // round-consistent checkpoint part.
+                    if ckpt_on
+                        && w == 0
+                        && (e + 1) % cfg.cluster.checkpoint_interval == 0
+                        && e + 1 < t.epochs
+                    {
+                        let _ = ck_tx.send(CkptPart {
+                            worker: 0,
+                            epoch: e + 1,
+                            part: x[..ds.d].to_vec(),
+                            curve: loss_curve.clone(),
+                        });
+                    }
                 }
-                let _ = res_tx.send(WorkerResult {
+                finished[w].store(true, Ordering::Release);
+                if supervise {
+                    agg.send_leave(sup);
+                }
+                let model = if aborted { Vec::new() } else { x[..ds.d].to_vec() };
+                let _ = res_tx.send(WorkerOutcome {
                     worker: w,
-                    model: x[..ds.d].to_vec(),
+                    model,
                     loss_curve,
                     pipeline: pstats,
                     agg: agg.stats,
+                    aborted,
                 });
             });
         }
         drop(res_tx);
+        drop(ck_tx);
+        if supervise || ckpt_on {
+            let sink = ckpt_on.then(|| CkptSink {
+                dir: ckpt_dir.expect("ckpt_on implies dir").to_path_buf(),
+                parts_expected: 1, // replicated model: worker 0 only
+                start_epoch,
+                prefix: curve_prefix.to_vec(),
+                rounds_per_epoch: (ds.n / t.batch) as u64,
+                rng: cfg.net.seed,
+            });
+            let timeout = supervise.then(|| Duration::from_millis(cfg.cluster.worker_timeout_ms));
+            sup_report = supervisor::run(
+                &mut sup_ep,
+                switch_node(m),
+                m,
+                timeout,
+                generation,
+                sink,
+                &ck_rx,
+                &finished,
+                fault,
+            );
+        }
     });
     server.shutdown();
 
-    let mut results: Vec<WorkerResult> = res_rx.into_iter().collect();
-    assert_eq!(results.len(), m);
-    results.sort_by_key(|r| r.worker);
-    let mut agg = AggStats::default();
-    let mut pipeline = PipelineStats::default();
-    for r in &results {
-        super::merge_agg(&mut agg, &r.agg);
-        pipeline.merge(&r.pipeline);
-    }
-    TrainReport {
-        loss_per_epoch: results[0].loss_curve.clone(),
-        wall: start.elapsed(),
-        model: results[0].model.clone(), // replicas are identical
-        pipeline,
-        agg,
-    }
+    let mut outcomes: Vec<WorkerOutcome> = res_rx.into_iter().collect();
+    outcomes.sort_by_key(|o| o.worker);
+    Attempt { outcomes, evicted: sup_report.evicted, generation: sup_report.generation }
 }
 
 /// Bookkeeping for one chunked AllReduce over a gradient buffer. The
@@ -235,7 +481,10 @@ struct GradReduce {
 }
 
 /// Push unsent chunks of one reduce into the client's send window
-/// (until the window backpressures or the reduce is fully sent).
+/// (until the window backpressures or the reduce is fully sent). A
+/// pending generation bump stops the fill: the reduce belongs to a
+/// dead membership, and its unsent chunks must not spawn orphan
+/// rounds at the new generation.
 fn fill_window<T: crate::net::Transport>(
     agg: &mut AggClient<T>,
     buf: &[f32],
@@ -243,6 +492,9 @@ fn fill_window<T: crate::net::Transport>(
     chunk_buf: &mut [i32],
 ) {
     while st.sent < st.chunks {
+        if agg.interrupted() {
+            return;
+        }
         let lo = st.sent * GRAD_CHUNK;
         let hi = (lo + GRAD_CHUNK).min(buf.len());
         chunk_buf.iter_mut().for_each(|v| *v = 0);
@@ -364,20 +616,26 @@ fn pump_ring<T: crate::net::Transport>(
 /// Drive the *oldest* flying reduce to completion and pop it from the
 /// ring; returns its slot index so the caller can apply the update
 /// (updates must go in batch order). Younger reduces keep flying —
-/// their chunks are pumped alongside.
+/// their chunks are pumped alongside. Returns `None` when a generation
+/// bump killed the reduce mid-drain (its chunks will never return;
+/// the caller must abort the attempt — a partial fold must never be
+/// applied).
 fn finish_oldest<T: crate::net::Transport>(
     agg: &mut AggClient<T>,
     ring: &mut ReduceRing,
     chunk_buf: &mut [i32],
-) -> usize {
+) -> Option<usize> {
     debug_assert!(ring.live > 0, "no reduce in flight");
     let i = ring.head;
     while ring.slots[i].st.done < ring.slots[i].st.chunks {
+        if agg.interrupted() {
+            return None;
+        }
         pump_ring(agg, ring, chunk_buf, Duration::from_millis(20));
     }
     ring.head = (ring.head + 1) % ring.cap();
     ring.live -= 1;
-    i
+    Some(i)
 }
 
 /// Launch a reduce of `g` in the next free ring slot: swap the
@@ -422,25 +680,33 @@ fn start_reduce<T: crate::net::Transport>(
 
 /// Drive a standalone AllReduce to completion right after
 /// [`start_reduce`] (the depth-1 path; the overlapped path rides
-/// [`ReduceRing`] instead).
+/// [`ReduceRing`] instead). Returns `false` when a generation bump
+/// interrupted the reduce — `buf` is then partially folded and must be
+/// discarded by the caller.
 fn finish_reduce<T: crate::net::Transport>(
     agg: &mut AggClient<T>,
     buf: &mut [f32],
     st: &mut GradReduce,
     chunk_buf: &mut [i32],
-) {
+) -> bool {
     while st.done < st.chunks {
+        if agg.interrupted() {
+            return false;
+        }
         pump_reduce(agg, buf, st, chunk_buf, Duration::from_millis(20));
     }
+    true
 }
 
 /// AllReduce `buf` in place, [`GRAD_CHUNK`] elements per slot, keeping
-/// up to the client's slot count in flight.
-fn allreduce_grad<T: crate::net::Transport>(agg: &mut AggClient<T>, buf: &mut [f32]) {
+/// up to the client's slot count in flight. Returns `false` (with
+/// `buf` in an undefined partially-folded state) when a generation
+/// bump interrupted it.
+fn allreduce_grad<T: crate::net::Transport>(agg: &mut AggClient<T>, buf: &mut [f32]) -> bool {
     let mut st = GradReduce::default();
     let mut chunk_buf = vec![0i32; GRAD_CHUNK];
     start_reduce(agg, buf, &mut st, &mut chunk_buf);
-    finish_reduce(agg, buf, &mut st, &mut chunk_buf);
+    finish_reduce(agg, buf, &mut st, &mut chunk_buf)
 }
 
 #[cfg(test)]

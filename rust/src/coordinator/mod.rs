@@ -13,7 +13,9 @@
 pub mod dp;
 pub mod mp;
 pub mod reference;
+pub(crate) mod supervisor;
 
+use crate::metrics::FaultStats;
 use crate::pipeline::PipelineStats;
 use crate::worker::AggStats;
 use std::time::Duration;
@@ -32,6 +34,25 @@ pub struct TrainReport {
     pub pipeline: PipelineStats,
     /// Aggregation-protocol counters summed over workers.
     pub agg: AggStats,
+    /// Fault-tolerance counters across all restart attempts (all-zero
+    /// on a failure-free run).
+    pub fault: FaultStats,
+}
+
+/// One worker thread's report back to its coordinator — shared by the
+/// MP and DP trainers.
+pub(crate) struct WorkerOutcome {
+    /// Local index within the attempt's membership.
+    pub worker: usize,
+    /// Model partition (MP) / replica (DP); empty when `aborted`.
+    pub model: Vec<f32>,
+    /// Per-epoch loss, covering the attempt's epoch range.
+    pub loss_curve: Vec<f32>,
+    pub pipeline: PipelineStats,
+    pub agg: AggStats,
+    /// A generation bump interrupted this worker (its model and the
+    /// tail of its curve are meaningless — the attempt restarts).
+    pub aborted: bool,
 }
 
 impl TrainReport {
@@ -39,6 +60,30 @@ impl TrainReport {
     pub fn mean_loss(&self, e: usize, n: usize) -> f32 {
         self.loss_per_epoch[e] / n as f32
     }
+}
+
+/// Gate a restored checkpoint on the current run's shape: a stale or
+/// foreign file in the checkpoint directory (different dataset width,
+/// epoch cursor past this run's range) must not poison recovery — it
+/// is skipped with a warning, and the trainer resumes from scratch
+/// instead of panicking on a mismatched slice or silently loading the
+/// wrong model.
+pub(crate) fn compatible_ckpt(
+    ck: crate::checkpoint::Checkpoint,
+    d: usize,
+    epochs: usize,
+) -> Option<crate::checkpoint::Checkpoint> {
+    if ck.model.len() == d && ck.epoch <= epochs {
+        return Some(ck);
+    }
+    eprintln!(
+        "ignoring incompatible checkpoint (model width {} vs dataset {}, epoch {} vs <= {})",
+        ck.model.len(),
+        d,
+        ck.epoch,
+        epochs
+    );
+    None
 }
 
 pub(crate) fn merge_agg(total: &mut AggStats, s: &AggStats) {
@@ -49,4 +94,7 @@ pub(crate) fn merge_agg(total: &mut AggStats, s: &AggStats) {
     total.dup_fa += s.dup_fa;
     total.confirms += s.confirms;
     total.stale += s.stale;
+    total.stale_gen += s.stale_gen;
+    total.resyncs += s.resyncs;
+    total.heartbeats += s.heartbeats;
 }

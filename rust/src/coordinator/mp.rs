@@ -1,56 +1,216 @@
 //! Model-parallel distributed trainer — the paper's system (C1).
 //!
-//! Topology: `M` worker threads + one switch thread over a [`SimNet`]
-//! fabric. The model and dataset are vertically partitioned; each
-//! iteration every worker pushes its micro-batch partial activations to
-//! the P4 switch, which aggregates and multicasts full activations. The
-//! workers proceed in lock step *implicitly*: slot `seq` only completes
-//! when all `M` PAs arrived, so no extra barrier is needed — exactly the
-//! paper's design.
+//! Topology: `M` worker threads + one switch thread + one supervisor
+//! endpoint over a [`SimNet`] fabric. The model and dataset are
+//! vertically partitioned; each iteration every worker pushes its
+//! micro-batch partial activations to the P4 switch, which aggregates
+//! and multicasts full activations. The workers proceed in lock step
+//! *implicitly*: slot `seq` only completes when all `M` PAs arrived,
+//! so no extra barrier is needed — exactly the paper's design.
+//!
+//! # Fault tolerance (attempts)
+//!
+//! With `cluster.worker_timeout_ms > 0` the trainer runs **attempts**:
+//! each attempt spawns a fresh fabric, switch (at the current cluster
+//! generation), and worker set, then supervises it (the crate-internal
+//! `coordinator::supervisor` watchdog). A worker silent past the
+//! timeout is
+//! evicted — the switch bumps the generation, survivors' pipelines
+//! drain cleanly and abort — and the coordinator starts the next
+//! attempt: membership minus the dead worker (or all workers again
+//! with `cluster.rejoin`), model shards **re-partitioned over the
+//! survivors**, state restored from the last round-consistent
+//! checkpoint (`cluster.checkpoint_interval` / `checkpoint_dir`; from
+//! scratch when none exists). The failure-free path runs exactly one
+//! attempt, and with supervision and checkpointing disabled it is the
+//! historical single-spawn trainer, bit for bit.
 
-use super::{merge_agg, TrainReport};
+use super::supervisor::{self, CkptPart, CkptSink, SupervisorReport};
+use super::{compatible_ckpt, merge_agg, TrainReport, WorkerOutcome};
+use crate::checkpoint;
 use crate::config::SystemConfig;
 use crate::data::partition::shard_vertical;
 use crate::data::quantize::LANE;
 use crate::data::Dataset;
 use crate::engine::{Compute, EngineRunner};
+use crate::metrics::FaultStats;
 use crate::net::sim::SimNet;
-use crate::net::switch_node;
+use crate::net::{supervisor_node, switch_node};
 use crate::pipeline::{flush_round, run_minibatch, PipelineScratch, PipelineStats, PreparedShard};
 use crate::switch::p4::P4Switch;
 use crate::switch::runner;
 use crate::worker::{AggClient, AggStats};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
-
-/// Per-worker results sent back to the coordinator.
-struct WorkerResult {
-    worker: usize,
-    model: Vec<f32>,
-    loss_curve: Vec<f32>,
-    pipeline: PipelineStats,
-    agg: AggStats,
-}
 
 /// Factory giving each (worker, engine) its compute backend (e.g. one
 /// PJRT client per engine, or the shared-nothing native engine). With
 /// `engine_threads > 1` the instance is moved onto that engine's
 /// thread — which is why [`Compute`] is `Send`; the serial runner
-/// calls the factory once per worker (engine 0) and shares it.
+/// calls the factory once per worker (engine 0) and shares it. The
+/// worker index is the **original global id** — stable across
+/// re-partitioning attempts.
 pub type ComputeFactory<'a> = dyn Fn(usize, usize) -> Box<dyn Compute> + Sync + 'a;
+
+/// One attempt's outcome.
+struct Attempt {
+    outcomes: Vec<WorkerOutcome>,
+    /// Local (attempt) indices evicted; empty = the attempt completed.
+    evicted: Vec<usize>,
+    generation: u32,
+}
 
 /// Train `ds` under model parallelism per `cfg`. Panics on invalid
 /// configuration (validate first) or if the cluster wedges (drain
-/// timeout in the pipeline).
+/// timeout in the pipeline) with supervision disabled.
 pub fn train_mp(cfg: &SystemConfig, ds: &Dataset, make_compute: &ComputeFactory) -> TrainReport {
     cfg.validate().expect("invalid config");
-    let m = cfg.cluster.workers;
-    let t = &cfg.train;
-    assert!(ds.d >= m, "need at least one feature per worker");
+    assert!(ds.d >= cfg.cluster.workers, "need at least one feature per worker");
     let start = Instant::now();
 
-    let mut endpoints = SimNet::build(m + 1, &cfg.net);
-    let switch_ep = endpoints.pop().unwrap();
+    let ckpt_dir = cfg.cluster.checkpoint_dir.as_ref().map(PathBuf::from);
+    let mut fault = FaultStats::default();
+    // Membership: original (global) worker ids still participating.
+    let mut members: Vec<usize> = (0..cfg.cluster.workers).collect();
+    let mut generation = 0u32;
+    let mut start_epoch = 0usize;
+    let mut model0: Option<Vec<f32>> = None;
+    let mut curve_prefix: Vec<f32> = Vec::new();
+    // The injected crash fires at most once across attempts.
+    let mut kill_armed = cfg.fault.kill_worker.is_some();
+
+    // Explicit resume before the first attempt.
+    if cfg.cluster.resume {
+        let dir = ckpt_dir.as_ref().expect("validated: resume requires checkpoint_dir");
+        let found = checkpoint::latest(dir).ok().flatten();
+        if let Some(ck) = found.and_then(|ck| compatible_ckpt(ck, ds.d, cfg.train.epochs)) {
+            start_epoch = ck.epoch;
+            generation = ck.generation;
+            curve_prefix = ck.loss_curve.clone();
+            model0 = Some(ck.model);
+            fault.restores += 1;
+        }
+    }
+
+    let mut pipeline = PipelineStats::default();
+    let mut agg = AggStats::default();
+    // Livelock guard: restart attempts must make progress (membership
+    // shrinks or the restored epoch advances); repeated evictions from
+    // the same state — e.g. a timeout smaller than honest startup work
+    // with `rejoin` re-admitting the victim forever — become a clear
+    // error instead of an infinite spawn loop.
+    let mut stuck = 0usize;
+
+    loop {
+        let before = (members.len(), start_epoch);
+        let attempt = run_attempt(
+            cfg,
+            ds,
+            make_compute,
+            &members,
+            generation,
+            start_epoch,
+            model0.as_deref(),
+            kill_armed,
+            ckpt_dir.as_deref(),
+            &curve_prefix,
+            &mut fault,
+        );
+        for o in &attempt.outcomes {
+            pipeline.merge(&o.pipeline);
+            merge_agg(&mut agg, &o.agg);
+        }
+        if attempt.evicted.is_empty() {
+            // Clean attempt: assemble the final report.
+            let mut outcomes = attempt.outcomes;
+            assert_eq!(outcomes.len(), members.len(), "all workers must report");
+            assert!(
+                outcomes.iter().all(|o| !o.aborted),
+                "no eviction was recorded, so no worker may have aborted"
+            );
+            outcomes.sort_by_key(|r| r.worker);
+            let mut model = Vec::with_capacity(ds.d);
+            for o in &outcomes {
+                model.extend_from_slice(&o.model);
+            }
+            let mut loss_per_epoch = curve_prefix.clone();
+            loss_per_epoch.extend_from_slice(&outcomes[0].loss_curve);
+            fault.resyncs = agg.resyncs;
+            fault.stale_gen = agg.stale_gen;
+            return TrainReport {
+                loss_per_epoch,
+                wall: start.elapsed(),
+                model,
+                pipeline,
+                agg,
+                fault,
+            };
+        }
+
+        // Eviction(s): drop (or re-admit) the dead workers, restore the
+        // last round-consistent checkpoint, and go again.
+        kill_armed = false;
+        generation = attempt.generation;
+        let evicted_globals: Vec<usize> = attempt.evicted.iter().map(|&l| members[l]).collect();
+        if cfg.cluster.rejoin {
+            // The workers "come back" on the next attempt.
+            fault.rejoins += evicted_globals.len() as u64;
+        } else {
+            members.retain(|g| !evicted_globals.contains(g));
+            assert!(!members.is_empty(), "every worker was evicted — nothing can resume");
+            assert!(ds.d >= members.len(), "need at least one feature per worker");
+        }
+        let found = ckpt_dir.as_ref().and_then(|d| checkpoint::latest(d).ok().flatten());
+        match found.and_then(|ck| compatible_ckpt(ck, ds.d, cfg.train.epochs)) {
+            Some(ck) => {
+                start_epoch = ck.epoch;
+                curve_prefix = ck.loss_curve.clone();
+                model0 = Some(ck.model);
+                fault.restores += 1;
+            }
+            None => {
+                // No (usable) checkpoint: resume from scratch over the
+                // survivors.
+                start_epoch = 0;
+                curve_prefix = Vec::new();
+                model0 = None;
+            }
+        }
+        if (members.len(), start_epoch) == before {
+            stuck += 1;
+            assert!(
+                stuck < 3,
+                "eviction/restart loop is not progressing (restarted {stuck}x at epoch \
+                 {start_epoch} with {} workers) — worker_timeout_ms is likely too small \
+                 for honest startup/compute gaps",
+                members.len()
+            );
+        } else {
+            stuck = 0;
+        }
+    }
+}
+
+/// Spawn one fabric + switch + worker set over `members` and run epochs
+/// `[start_epoch, epochs)`, supervising when configured.
+#[allow(clippy::too_many_arguments)]
+fn run_attempt(
+    cfg: &SystemConfig,
+    ds: &Dataset,
+    make_compute: &ComputeFactory,
+    members: &[usize],
+    generation: u32,
+    start_epoch: usize,
+    model0: Option<&[f32]>,
+    kill_armed: bool,
+    ckpt_dir: Option<&Path>,
+    curve_prefix: &[f32],
+    fault: &mut FaultStats,
+) -> Attempt {
+    let m = members.len();
+    let t = &cfg.train;
     // Paper §4.2: the switch provisions the full 16-bit slot space;
     // cfg.cluster.slots is the per-worker in-flight *window*, scaled by
     // the pipeline depth so D rounds of outstanding seqs fit without
@@ -58,20 +218,54 @@ pub fn train_mp(cfg: &SystemConfig, ds: &Dataset, make_compute: &ComputeFactory)
     // too (parked FAs from D rounds may pin multicast buffers).
     let depth = cfg.cluster.pipeline_depth;
     let window = cfg.cluster.effective_window();
+    let supervise = cfg.cluster.worker_timeout_ms > 0;
+    let ckpt_on = cfg.cluster.checkpoint_interval > 0 && ckpt_dir.is_some();
+
+    // Nodes: workers 0..m, switch m, supervisor m+1.
+    let mut endpoints = SimNet::build(m + 2, &cfg.net);
+    let mut sup_ep = endpoints.pop().unwrap();
+    let switch_ep = endpoints.pop().unwrap();
     let server = runner::spawn(
         P4Switch::new(crate::worker::agg_client::SEQ_SPACE, m, t.micro_batch)
-            .with_fa_ring(cfg.cluster.fa_ring()),
+            .with_fa_ring(cfg.cluster.fa_ring())
+            .with_generation(generation),
         switch_ep,
     );
 
-    let (res_tx, res_rx) = mpsc::channel::<WorkerResult>();
+    let (res_tx, res_rx) = mpsc::channel::<WorkerOutcome>();
+    let (ck_tx, ck_rx) = mpsc::channel::<CkptPart>();
+    // In-process completion flags: the watchdog's ground truth that a
+    // worker finished, immune to a dropped Leave packet.
+    let finished: Arc<Vec<AtomicBool>> = Arc::new((0..m).map(|_| AtomicBool::new(false)).collect());
+    let mut sup_report = SupervisorReport { evicted: Vec::new(), generation };
     std::thread::scope(|scope| {
         for (w, ep) in endpoints.into_iter().enumerate() {
             let res_tx = res_tx.clone();
+            let ck_tx = ck_tx.clone();
             let cfg = cfg.clone();
+            let global = members[w];
+            let finished = finished.clone();
             scope.spawn(move || {
                 let t = &cfg.train;
+                let sup = supervisor_node(m);
+                let mut agg = AggClient::new(
+                    ep,
+                    switch_node(m),
+                    w,
+                    window,
+                    Duration::from_micros(cfg.net.timeout_us),
+                )
+                .with_generation(generation);
+                if supervise {
+                    let hb = Duration::from_millis((cfg.cluster.worker_timeout_ms / 4).max(1));
+                    agg.enable_heartbeat(sup, hb);
+                    // Announce before the (potentially long) shard prep
+                    // so the grace window starts from real liveness.
+                    agg.heartbeat_now();
+                }
+                // Shards re-partition over the attempt's membership.
                 let shard = shard_vertical(ds, m, w, LANE);
+                let (slice_lo, slice_hi) = (shard.slice.lo, shard.slice.hi);
                 let prep = Arc::new(PreparedShard::prepare(
                     &shard,
                     cfg.cluster.engines,
@@ -81,32 +275,51 @@ pub fn train_mp(cfg: &SystemConfig, ds: &Dataset, make_compute: &ComputeFactory)
                 // Per-engine state + compute live in the runner: serial
                 // on this thread, or a persistent per-engine pool when
                 // engine_threads > 1. One gradient slot (and backward
-                // ring entry) per pipeline-depth level.
-                let mut runner = EngineRunner::with_rounds(
+                // ring entry) per pipeline-depth level. Pool threads
+                // stripe across cores by worker when core_offset is set.
+                let mut runner = EngineRunner::with_rounds_at(
                     prep.clone(),
-                    &|e| make_compute(w, e),
+                    &|e| make_compute(global, e),
                     cfg.cluster.engine_threads,
                     depth,
+                    w * cfg.cluster.core_offset,
                 );
-                let mut agg = AggClient::new(
-                    ep,
-                    switch_node(m),
-                    w,
-                    window,
-                    Duration::from_micros(cfg.net.timeout_us),
-                );
+                if let Some(m0) = model0 {
+                    // Restored model: this worker's slice of the full
+                    // stitched checkpoint under the new partitioning.
+                    runner.set_model(&m0[slice_lo..slice_hi]);
+                }
                 let per_batch = t.batch / t.micro_batch;
                 let batches = prep.micro_batches() / per_batch;
+                // The injected crash: global worker id matches, fire at
+                // kill_at_frac of the epoch range, mid-epoch.
+                let kill_at = if kill_armed
+                    && cfg.fault.kill_worker == Some(global)
+                    && start_epoch < t.epochs
+                {
+                    let ke = ((cfg.fault.kill_at_frac * t.epochs as f64) as usize)
+                        .clamp(start_epoch, t.epochs - 1);
+                    Some((ke, batches / 2))
+                } else {
+                    None
+                };
                 let mut pstats = PipelineStats::default();
                 // One scratch per worker: once the round ring is warm
                 // the steady-state loop never allocates. The scratch
                 // fixes the overlap depth (1 = synchronous,
                 // bit-compatible; D ≥ 2 = up to D-1 rounds in flight).
                 let mut scratch = PipelineScratch::with_depth(depth);
-                let mut loss_curve = Vec::with_capacity(t.epochs);
-                for _ in 0..t.epochs {
+                let mut loss_curve = Vec::with_capacity(t.epochs.saturating_sub(start_epoch));
+                let mut aborted = false;
+                'epochs: for e in start_epoch..t.epochs {
                     let mut epoch_loss = 0.0f32;
                     for b in 0..batches {
+                        if kill_at == Some((e, b)) {
+                            // Simulated crash: vanish mid-epoch — no
+                            // Leave, no result, no further packets. The
+                            // supervisor's silence timeout evicts us.
+                            return;
+                        }
                         epoch_loss += run_minibatch(
                             &mut runner,
                             &mut agg,
@@ -117,46 +330,83 @@ pub fn train_mp(cfg: &SystemConfig, ds: &Dataset, make_compute: &ComputeFactory)
                             &mut pstats,
                             &mut scratch,
                         );
+                        if agg.interrupted() {
+                            aborted = true;
+                            break 'epochs;
+                        }
                     }
                     // Depth ≥ 2: drain the whole round ring, so each
                     // epoch's loss covers exactly its own rounds and the
                     // model is consistent at the boundary (staleness
                     // never crosses an epoch). No-op at depth 1.
-                    epoch_loss += flush_round(&mut runner, &mut agg, t.loss, t.lr, &mut pstats, &mut scratch);
+                    epoch_loss +=
+                        flush_round(&mut runner, &mut agg, t.loss, t.lr, &mut pstats, &mut scratch);
+                    if agg.interrupted() {
+                        aborted = true;
+                        break 'epochs;
+                    }
                     loss_curve.push(epoch_loss);
+                    // Round-consistent checkpoint part: the ring is
+                    // flushed, so this partition reflects exactly
+                    // epochs [0, e+1). (Skip the final epoch — the run
+                    // is about to finish anyway.)
+                    if ckpt_on
+                        && (e + 1) % cfg.cluster.checkpoint_interval == 0
+                        && e + 1 < t.epochs
+                    {
+                        let _ = ck_tx.send(CkptPart {
+                            worker: w,
+                            epoch: e + 1,
+                            part: runner.model(),
+                            curve: loss_curve.clone(),
+                        });
+                    }
                 }
-                let _ = res_tx.send(WorkerResult {
+                finished[w].store(true, Ordering::Release);
+                if supervise {
+                    agg.send_leave(sup);
+                }
+                let model = if aborted { Vec::new() } else { runner.model() };
+                let _ = res_tx.send(WorkerOutcome {
                     worker: w,
-                    model: runner.model(),
+                    model,
                     loss_curve,
                     pipeline: pstats,
                     agg: agg.stats,
+                    aborted,
                 });
             });
         }
         drop(res_tx);
+        drop(ck_tx);
+        if supervise || ckpt_on {
+            let sink = ckpt_on.then(|| CkptSink {
+                dir: ckpt_dir.expect("ckpt_on implies dir").to_path_buf(),
+                parts_expected: m,
+                start_epoch,
+                prefix: curve_prefix.to_vec(),
+                rounds_per_epoch: ((ds.n / t.micro_batch) / (t.batch / t.micro_batch)) as u64,
+                rng: cfg.net.seed,
+            });
+            let timeout = supervise.then(|| Duration::from_millis(cfg.cluster.worker_timeout_ms));
+            sup_report = supervisor::run(
+                &mut sup_ep,
+                switch_node(m),
+                m,
+                timeout,
+                generation,
+                sink,
+                &ck_rx,
+                &finished,
+                fault,
+            );
+        }
     });
     server.shutdown();
 
-    // Assemble results.
-    let mut results: Vec<WorkerResult> = res_rx.into_iter().collect();
-    assert_eq!(results.len(), m, "all workers must report");
-    results.sort_by_key(|r| r.worker);
-    let mut model = Vec::with_capacity(ds.d);
-    let mut pipeline = PipelineStats::default();
-    let mut agg = AggStats::default();
-    for r in &results {
-        model.extend_from_slice(&r.model);
-        pipeline.merge(&r.pipeline);
-        merge_agg(&mut agg, &r.agg);
-    }
-    TrainReport {
-        loss_per_epoch: results[0].loss_curve.clone(),
-        wall: start.elapsed(),
-        model,
-        pipeline,
-        agg,
-    }
+    let mut outcomes: Vec<WorkerOutcome> = res_rx.into_iter().collect();
+    outcomes.sort_by_key(|o| o.worker);
+    Attempt { outcomes, evicted: sup_report.evicted, generation: sup_report.generation }
 }
 
 #[cfg(test)]

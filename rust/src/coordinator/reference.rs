@@ -68,6 +68,7 @@ pub fn train(cfg: &SystemConfig, ds: &Dataset) -> TrainReport {
         model: state.model(&prep),
         pipeline: PipelineStats::default(),
         agg: AggStats::default(),
+        fault: crate::metrics::FaultStats::default(),
     }
 }
 

@@ -1,0 +1,331 @@
+//! The cluster supervisor: membership watchdog + round-consistent
+//! checkpoint assembler, shared by the MP and DP coordinators.
+//!
+//! Each training **attempt** (one spawn of switch + workers over one
+//! membership) runs the supervisor on the coordinator thread, inside
+//! the worker scope. It owns the fabric's extra endpoint
+//! (`crate::net::supervisor_node`) and does three things per tick:
+//!
+//! 1. **Assemble checkpoints**: workers send their epoch-boundary model
+//!    partitions over an in-process channel ([`CkptPart`] — model bytes
+//!    never ride the packet fabric); once every expected part of an
+//!    epoch arrived, the full model is stitched in worker order and a
+//!    [`crate::checkpoint::Checkpoint`] is written (costs recorded in
+//!    [`FaultStats`]). Partitions are per-worker epoch-boundary states,
+//!    so the assembled model is **round-consistent**: it reflects
+//!    exactly the rounds of the recorded epochs, no matter how worker
+//!    wall-clocks interleave.
+//! 2. **Watch liveness**: workers heartbeat (`Ctrl::Join`) while they
+//!    pump the network and announce completion with `Ctrl::Leave`. A
+//!    worker silent past `worker_timeout` is **evicted**: the
+//!    supervisor orders the switch (`Ctrl::Evict`), the switch bumps
+//!    the generation and multicasts the notice, and the surviving
+//!    workers' pipelines drain and abort. Orders are re-sent
+//!    periodically until the attempt winds down — on a lossy fabric
+//!    neither the order nor the notice is guaranteed to arrive once.
+//! 3. **Wind down**: the loop exits when every worker has either left
+//!    or been evicted; a final channel drain catches checkpoint parts
+//!    sent just before a Leave.
+//!
+//! With supervision disabled but checkpointing enabled, a reduced loop
+//! only assembles checkpoints (the channel disconnects when the last
+//! worker finishes). With both disabled the coordinator never calls
+//! this module — the failure-free path is untouched.
+
+use crate::checkpoint::Checkpoint;
+use crate::metrics::FaultStats;
+use crate::net::{NodeId, Transport};
+use crate::protocol::{Ctrl, Packet};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// One worker's contribution to a round-consistent checkpoint, sent
+/// over the in-process channel right after its epoch-boundary flush.
+pub(crate) struct CkptPart {
+    /// Local worker index within the attempt.
+    pub worker: usize,
+    /// Epochs completed (the checkpoint's `epoch` cursor).
+    pub epoch: usize,
+    /// This worker's model partition (MP) or the full replica (DP).
+    pub part: Vec<f32>,
+    /// Worker-local loss curve covering `[start_epoch, epoch)`; only
+    /// worker 0's is recorded (the curves are cluster-global values).
+    pub curve: Vec<f32>,
+}
+
+/// Checkpoint sink configuration for one attempt.
+pub(crate) struct CkptSink {
+    pub dir: PathBuf,
+    /// Parts per epoch: the live worker count (MP partitions) or 1 (DP
+    /// replicas — only worker 0 sends).
+    pub parts_expected: usize,
+    /// Epoch the attempt started at (parts' curves begin here).
+    pub start_epoch: usize,
+    /// Loss curve of epochs `[0, start_epoch)` from the restored
+    /// checkpoint, prepended so saved curves always start at epoch 0.
+    pub prefix: Vec<f32>,
+    /// Mini-batch rounds per epoch (the checkpoint's cursor).
+    pub rounds_per_epoch: u64,
+    /// Seed provenance stored in the checkpoint.
+    pub rng: u64,
+}
+
+/// What one attempt's supervision observed.
+pub(crate) struct SupervisorReport {
+    /// Local worker indices evicted this attempt (empty = clean run).
+    pub evicted: Vec<usize>,
+    /// Cluster generation after this attempt's bumps.
+    pub generation: u32,
+}
+
+/// In-flight checkpoint assembly for one epoch.
+struct PendingCkpt {
+    epoch: usize,
+    parts: Vec<Option<Vec<f32>>>,
+    curve: Option<Vec<f32>>,
+}
+
+/// Assembles [`CkptPart`]s into saved checkpoints.
+struct Assembler {
+    sink: CkptSink,
+    pending: Vec<PendingCkpt>,
+}
+
+impl Assembler {
+    fn feed(&mut self, p: CkptPart, generation: u32, fault: &mut FaultStats) {
+        let idx = match self.pending.iter().position(|q| q.epoch == p.epoch) {
+            Some(i) => i,
+            None => {
+                self.pending.push(PendingCkpt {
+                    epoch: p.epoch,
+                    parts: (0..self.sink.parts_expected).map(|_| None).collect(),
+                    curve: None,
+                });
+                self.pending.len() - 1
+            }
+        };
+        let q = &mut self.pending[idx];
+        if p.worker < q.parts.len() {
+            q.parts[p.worker] = Some(p.part);
+        }
+        if p.worker == 0 {
+            assert_eq!(
+                self.sink.start_epoch + p.curve.len(),
+                p.epoch,
+                "worker-0 curve must cover [start_epoch, epoch)"
+            );
+            q.curve = Some(p.curve);
+        }
+        if q.parts.iter().all(Option::is_some) && q.curve.is_some() {
+            let q = self.pending.swap_remove(idx);
+            let mut model = Vec::new();
+            for part in q.parts.into_iter() {
+                model.extend_from_slice(&part.expect("checked complete"));
+            }
+            let mut loss_curve = self.sink.prefix.clone();
+            loss_curve.extend_from_slice(&q.curve.expect("checked complete"));
+            let ck = Checkpoint {
+                generation,
+                epoch: q.epoch,
+                rounds_done: q.epoch as u64 * self.sink.rounds_per_epoch,
+                rng: self.sink.rng,
+                model,
+                loss_curve,
+            };
+            let t0 = Instant::now();
+            match ck.save(&self.sink.dir) {
+                Ok(receipt) => {
+                    fault.checkpoints += 1;
+                    fault.checkpoint_bytes += receipt.bytes;
+                    fault.checkpoint_time_ns += t0.elapsed().as_nanos() as u64;
+                }
+                Err(e) => eprintln!("checkpoint save failed (continuing uncheckpointed): {e:#}"),
+            }
+        }
+    }
+}
+
+/// Run one attempt's supervision (see the module docs). `timeout` is
+/// the eviction silence threshold — `None` runs the reduced
+/// checkpoint-assembly-only loop. `finished` is the in-process ground
+/// truth for worker completion (each worker sets its flag right before
+/// reporting its outcome): the wire-level `Leave` can be dropped by a
+/// lossy fabric, and a completed-but-unheard worker must never be
+/// evicted — its flag, unlike its packets, cannot get lost. Returns
+/// when every worker has finished, left, or been evicted (supervised)
+/// or when the part channel disconnects (assembly-only).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run<T: Transport>(
+    ep: &mut T,
+    switch: NodeId,
+    workers: usize,
+    timeout: Option<Duration>,
+    generation: u32,
+    sink: Option<CkptSink>,
+    ck_rx: &mpsc::Receiver<CkptPart>,
+    finished: &[AtomicBool],
+    fault: &mut FaultStats,
+) -> SupervisorReport {
+    assert_eq!(finished.len(), workers, "one finished flag per worker");
+    let mut asm = sink.map(|sink| Assembler { sink, pending: Vec::new() });
+    let mut gen = generation;
+    let mut evicted: Vec<usize> = Vec::new();
+
+    if let Some(timeout) = timeout {
+        let mut last_heard = vec![Instant::now(); workers];
+        let mut done = vec![false; workers];
+        let mut evicted_mask = 0u32;
+        let mut last_order = Instant::now();
+        loop {
+            if let Some(a) = asm.as_mut() {
+                while let Ok(p) = ck_rx.try_recv() {
+                    a.feed(p, gen, fault);
+                }
+            }
+            if let Some((src, pkt)) = ep.recv_timeout(Duration::from_millis(2)) {
+                if src < workers {
+                    match pkt.ctrl {
+                        Ctrl::Join => last_heard[src] = Instant::now(),
+                        Ctrl::Leave => done[src] = true,
+                        _ => {}
+                    }
+                }
+            }
+            for (w, flag) in finished.iter().enumerate() {
+                if flag.load(Ordering::Acquire) {
+                    done[w] = true;
+                }
+            }
+            let now = Instant::now();
+            for w in 0..workers {
+                if done[w] || (evicted_mask >> w) & 1 == 1 {
+                    continue;
+                }
+                if now.duration_since(last_heard[w]) > timeout {
+                    evicted.push(w);
+                    evicted_mask |= 1 << w;
+                    gen = gen.wrapping_add(1);
+                    fault.evictions += 1;
+                    ep.send(switch, &Packet::evict(1 << w, gen));
+                    last_order = now;
+                }
+            }
+            // Lossy fabrics may drop the order or the switch's notice:
+            // re-announce periodically (idempotent — the switch bumps
+            // only on fresh evictions, but always re-multicasts).
+            if evicted_mask != 0 && now.duration_since(last_order) > timeout / 2 {
+                last_order = now;
+                ep.send(switch, &Packet::evict(evicted_mask, gen));
+            }
+            if (0..workers).all(|w| done[w] || (evicted_mask >> w) & 1 == 1) {
+                break;
+            }
+        }
+    } else if let Some(a) = asm.as_mut() {
+        // Assembly-only: block on the channel until every worker
+        // dropped its sender (scope teardown).
+        while let Ok(p) = ck_rx.recv() {
+            a.feed(p, gen, fault);
+        }
+    }
+
+    // Parts sent just before a Leave may still be queued.
+    if let Some(a) = asm.as_mut() {
+        while let Ok(p) = ck_rx.try_recv() {
+            a.feed(p, gen, fault);
+        }
+    }
+    SupervisorReport { evicted, generation: gen }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NetConfig;
+    use crate::net::sim::SimNet;
+
+    #[test]
+    fn assembler_stitches_parts_in_worker_order_and_saves() {
+        let dir = std::env::temp_dir().join(format!("p4sgd-supervisor-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut fault = FaultStats::default();
+        let mut asm = Assembler {
+            sink: CkptSink {
+                dir: dir.clone(),
+                parts_expected: 2,
+                start_epoch: 1,
+                prefix: vec![9.0],
+                rounds_per_epoch: 4,
+                rng: 7,
+            },
+            pending: Vec::new(),
+        };
+        // parts arrive out of worker order, interleaved across epochs
+        asm.feed(CkptPart { worker: 1, epoch: 2, part: vec![3.0, 4.0], curve: vec![] }, 5, &mut fault);
+        asm.feed(CkptPart { worker: 1, epoch: 4, part: vec![30.0], curve: vec![] }, 5, &mut fault);
+        assert_eq!(fault.checkpoints, 0, "incomplete epochs must not save");
+        asm.feed(CkptPart { worker: 0, epoch: 2, part: vec![1.0, 2.0], curve: vec![8.0] }, 5, &mut fault);
+        assert_eq!(fault.checkpoints, 1);
+        assert!(fault.checkpoint_bytes > 0);
+        let ck = crate::checkpoint::latest(&dir).unwrap().expect("saved");
+        assert_eq!(ck.epoch, 2);
+        assert_eq!(ck.generation, 5);
+        assert_eq!(ck.rounds_done, 8);
+        assert_eq!(ck.model, vec![1.0, 2.0, 3.0, 4.0], "worker order");
+        assert_eq!(ck.loss_curve, vec![9.0, 8.0], "prefix + worker-0 curve");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn silent_worker_is_evicted_and_leavers_are_not() {
+        // worker 0 heartbeats then leaves; worker 1 never speaks.
+        let cfg = NetConfig { latency_ns: 0, jitter_ns: 0, ..NetConfig::default() };
+        let mut eps = SimNet::build(4, &cfg); // 0,1 workers; 2 switch; 3 supervisor
+        let mut sup = eps.pop().unwrap();
+        let mut switch_ep = eps.pop().unwrap();
+        let _w1 = eps.pop().unwrap();
+        let mut w0 = eps.pop().unwrap();
+        let (_tx, rx) = mpsc::channel::<CkptPart>();
+        let mut fault = FaultStats::default();
+        let handle = std::thread::spawn(move || {
+            w0.send(3, &Packet::join(0, 0));
+            std::thread::sleep(Duration::from_millis(30));
+            w0.send(3, &Packet::leave(0, 0));
+        });
+        let flags = [AtomicBool::new(false), AtomicBool::new(false)];
+        let report =
+            run(&mut sup, 2, 2, Some(Duration::from_millis(120)), 0, None, &rx, &flags, &mut fault);
+        handle.join().unwrap();
+        assert_eq!(report.evicted, vec![1], "only the silent worker");
+        assert_eq!(report.generation, 1);
+        assert_eq!(fault.evictions, 1);
+        // the switch endpoint received the eviction order
+        let (src, order) = switch_ep.recv_timeout(Duration::from_secs(1)).expect("order");
+        assert_eq!(src, 3);
+        assert_eq!(order.ctrl, Ctrl::Evict);
+        assert_eq!(order.bm, 1 << 1);
+    }
+
+    #[test]
+    fn finished_flag_protects_a_worker_whose_leave_was_lost() {
+        // The wire-level Leave is droppable; the in-process finished
+        // flag is not. A worker that completed (flag set) but whose
+        // Leave never arrived must NOT be evicted, and the supervisor
+        // must still terminate.
+        let cfg = NetConfig { latency_ns: 0, jitter_ns: 0, ..NetConfig::default() };
+        let mut eps = SimNet::build(3, &cfg); // 1 worker; 1 switch; 2 supervisor
+        let mut sup = eps.pop().unwrap();
+        let _switch_ep = eps.pop().unwrap();
+        let _w0 = eps.pop().unwrap(); // never speaks — its Leave "was dropped"
+        let (_tx, rx) = mpsc::channel::<CkptPart>();
+        let mut fault = FaultStats::default();
+        let flags = [AtomicBool::new(true)]; // ...but it did finish
+        let report =
+            run(&mut sup, 1, 1, Some(Duration::from_millis(80)), 0, None, &rx, &flags, &mut fault);
+        assert!(report.evicted.is_empty(), "a finished worker must never be evicted");
+        assert_eq!(fault.evictions, 0);
+        assert_eq!(report.generation, 0);
+    }
+}

@@ -99,6 +99,10 @@ enum Job {
     Forward { idx: usize },
     /// `x -= g[gslot] * inv_b` then zero `g[gslot]` on every owned engine.
     Update { gslot: usize, inv_b: f32 },
+    /// Zero **every** gradient slot without touching `x` — the
+    /// membership-change abort path discarding a dead generation's
+    /// half-accumulated rounds.
+    ClearGrad,
     /// Copy owned (padded) model slices into `slot.xfer`.
     Export,
     /// Load owned (padded) model slices from `slot.xfer`.
@@ -256,6 +260,22 @@ impl EngineRunner {
         threads: usize,
         rounds: usize,
     ) -> Self {
+        Self::with_rounds_at(prep, mk, threads, rounds, 0)
+    }
+
+    /// [`EngineRunner::with_rounds`] with an affinity **core base**:
+    /// pool thread `t` pins to logical core `core_base + t` (instead of
+    /// plain `t`), so in-process multi-worker trainers can stripe
+    /// workers across disjoint cores (`cluster.core_offset` — worker
+    /// `w` passes `w * core_offset`). A no-op without the `affinity`
+    /// cargo feature, and `core_base = 0` is the historical behaviour.
+    pub fn with_rounds_at(
+        prep: Arc<PreparedShard>,
+        mk: &EngineComputeFactory,
+        threads: usize,
+        rounds: usize,
+        core_base: usize,
+    ) -> Self {
         assert!((1..=8).contains(&rounds), "rounds must be in 1..=8, got {rounds}");
         let n = prep.engines.len();
         let threads = threads.clamp(1, n.max(1));
@@ -319,9 +339,10 @@ impl EngineRunner {
             let thread_prep = prep.clone();
             let thread_slot = slot.clone();
             let mb = prep.mb;
+            let pin_core = core_base + t;
             let handle = std::thread::Builder::new()
                 .name(format!("p4sgd-engines-{t}"))
-                .spawn(move || engine_thread(thread_prep, thread_slot, locals, mb, t))
+                .spawn(move || engine_thread(thread_prep, thread_slot, locals, mb, pin_core))
                 .expect("spawn engine thread");
             slots.push(slot);
             handles.push(handle);
@@ -546,6 +567,37 @@ impl EngineRunner {
         }
     }
 
+    /// Zero every gradient slot without touching the model — the
+    /// membership-change abort path: a generation bump kills the
+    /// in-flight rounds, and their half-accumulated gradients must not
+    /// leak into the resumed training. Requires the backward ring
+    /// drained (join outstanding dispatches first); the pipeline's
+    /// abort helper does both.
+    pub fn clear_gradients(&mut self) {
+        assert!(
+            self.outstanding_backwards() == 0,
+            "clear_gradients with backwards outstanding — join them first"
+        );
+        match &mut self.inner {
+            Inner::Serial(s) => {
+                for slot in s.g.iter_mut() {
+                    for ge in slot.iter_mut() {
+                        ge.iter_mut().for_each(|v| *v = 0.0);
+                    }
+                }
+                s.losses.clear();
+            }
+            Inner::Pool(p) => {
+                for t in 0..p.slots.len() {
+                    p.publish(t, Job::ClearGrad, |_| {});
+                }
+                for t in 0..p.slots.len() {
+                    let _ = p.wait(t);
+                }
+            }
+        }
+    }
+
     /// Stitch the (unpadded) model partition back together — cold path,
     /// allocates.
     pub fn model(&mut self) -> Vec<f32> {
@@ -697,9 +749,9 @@ fn engine_thread(
     slot: Arc<Slot>,
     mut locals: Vec<EngineLocal>,
     mb: usize,
-    thread_index: usize,
+    pin_core: usize,
 ) {
-    let _ = crate::util::affinity::pin_current(thread_index);
+    let _ = crate::util::affinity::pin_current(pin_core);
     let mut exec_fa: Vec<f32> = Vec::new();
     let mut guard = slot.m.lock().unwrap();
     loop {
@@ -721,6 +773,13 @@ fn engine_thread(
                     for l in locals.iter_mut() {
                         l.compute.update(&mut l.x, &l.g[gslot], inv_b);
                         l.g[gslot].iter_mut().for_each(|v| *v = 0.0);
+                    }
+                }
+                Job::ClearGrad => {
+                    for l in locals.iter_mut() {
+                        for ge in l.g.iter_mut() {
+                            ge.iter_mut().for_each(|v| *v = 0.0);
+                        }
                     }
                 }
                 Job::Export => {
@@ -1042,5 +1101,78 @@ mod tests {
         r.backward(0, &fa, 0.5, Loss::LogReg);
         r.update(1.0);
         assert_eq!(r.model(), fresh, "gradient must start from zero each mini-batch");
+    }
+
+    #[test]
+    fn clear_gradients_discards_every_slot_without_touching_x() {
+        // The membership-abort path: half-accumulated rounds across
+        // multiple gradient slots are discarded; the model is bitwise
+        // untouched and the next full round behaves like a fresh one.
+        for threads in [1usize, 2] {
+            let p = prep(96, 16, 2);
+            let x = x_full(96);
+            let mut r = EngineRunner::with_rounds(p.clone(), &mk, threads, 3);
+            r.set_model(&x);
+            let mut pa = vec![0.0f32; p.mb];
+            r.forward(0, &mut pa);
+            let fa = pa.clone();
+            // dirty two slots, then abort
+            r.dispatch_backward(0, 0, &fa, 0.5, Loss::LogReg);
+            r.dispatch_backward(2, 1, &fa, 0.5, Loss::LogReg);
+            while r.outstanding_backwards() > 0 {
+                let _ = r.join_backward();
+            }
+            r.clear_gradients();
+            let after_abort = r.model();
+            for (a, b) in after_abort.iter().zip(&x) {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads={threads}: abort must not touch x");
+            }
+            // an update from the cleared slots is a no-op on the model
+            r.update_slot(0, 0.125);
+            r.update_slot(2, 0.125);
+            let m_cleared = r.model();
+            for (a, b) in m_cleared.iter().zip(&x) {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads={threads}: cleared slots step");
+            }
+            // and a fresh backward+update now matches a fresh runner's
+            let mut fresh = EngineRunner::with_rounds(p.clone(), &mk, threads, 3);
+            fresh.set_model(&x);
+            r.backward(0, &fa, 0.5, Loss::LogReg);
+            r.update(0.125);
+            fresh.backward(0, &fa, 0.5, Loss::LogReg);
+            fresh.update(0.125);
+            for (a, b) in r.model().iter().zip(&fresh.model()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads={threads}: post-abort round");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "backwards outstanding")]
+    fn clear_gradients_requires_a_drained_ring() {
+        let p = prep(64, 16, 2);
+        let mut r = EngineRunner::with_rounds(p.clone(), &mk, 1, 2);
+        let mut pa = vec![0.0f32; p.mb];
+        r.forward(0, &mut pa);
+        let fa = pa.clone();
+        r.dispatch_backward(0, 0, &fa, 0.5, Loss::LogReg);
+        r.clear_gradients();
+    }
+
+    #[test]
+    fn core_base_constructor_is_behavior_compatible() {
+        // with_rounds_at only offsets affinity pinning (a no-op without
+        // the feature): numerics identical to with_rounds.
+        let p = prep(96, 16, 2);
+        let x = x_full(96);
+        let mut a = EngineRunner::with_rounds(p.clone(), &mk, 2, 2);
+        let mut b = EngineRunner::with_rounds_at(p.clone(), &mk, 2, 2, 7);
+        a.set_model(&x);
+        b.set_model(&x);
+        let mut pa_a = vec![0.0f32; p.mb];
+        let mut pa_b = vec![0.0f32; p.mb];
+        a.forward(0, &mut pa_a);
+        b.forward(0, &mut pa_b);
+        assert_eq!(pa_a, pa_b);
     }
 }

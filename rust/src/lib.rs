@@ -38,6 +38,7 @@
 //! `README.md` has the quickstart.
 
 pub mod bench;
+pub mod checkpoint;
 pub mod config;
 pub mod coordinator;
 pub mod data;

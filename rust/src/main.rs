@@ -47,6 +47,10 @@ fn dispatch(args: &Args) -> Result<()> {
             println!("        [--engine-threads T] [--pipeline-depth 1..8] [--loss linreg|logreg|svm]");
             println!("        [--batch B] [--epochs E] [--dataset NAME]");
             println!("        [--samples N] [--features D] [--drop P]");
+            println!("        [--worker-timeout-ms MS] [--checkpoint-interval E] [--checkpoint-dir DIR]");
+            println!("        [--resume] [--rejoin] [--core-offset K]");
+            println!("        [--kill-worker W] [--kill-at FRAC]  (fault injection)");
+            println!("        [--expect-evictions N] [--max-final-loss L]  (smoke assertions)");
             println!("  agg-bench [--workers M] [--ops N] [--payload K]");
             Ok(())
         }
@@ -68,6 +72,17 @@ fn train(args: &Args) -> Result<()> {
     cfg.net.drop_prob = args.get_or("drop", 0.0f64);
     cfg.net.latency_ns = args.get_or("latency-ns", 0u64);
     cfg.net.timeout_us = args.get_or("timeout-us", 3000u64);
+    cfg.cluster.worker_timeout_ms = args.get_or("worker-timeout-ms", 0u64);
+    cfg.cluster.checkpoint_interval = args.get_or("checkpoint-interval", 0usize);
+    cfg.cluster.checkpoint_dir = args.get("checkpoint-dir").map(str::to_string);
+    cfg.cluster.resume = args.flag("resume");
+    cfg.cluster.rejoin = args.flag("rejoin");
+    cfg.cluster.core_offset = args.get_or("core-offset", 0usize);
+    cfg.fault.kill_worker = match args.get_or("kill-worker", -1i64) {
+        n if n < 0 => None,
+        n => Some(n as usize),
+    };
+    cfg.fault.kill_at_frac = args.get_or("kill-at", 0.5f64);
     cfg.validate()?;
 
     let backend: Backend = args.get_or("backend", Backend::Native);
@@ -111,6 +126,24 @@ fn train(args: &Args) -> Result<()> {
         report.pipeline.overlapped_backwards,
         report.pipeline.depth.summary(),
     );
+    println!("fault: {}", report.fault.summary());
+
+    // Smoke-lane assertions: let CI gate on the fault machinery and
+    // convergence without parsing our output.
+    let expect_evictions = args.get_or("expect-evictions", 0u64);
+    if expect_evictions > 0 && report.fault.evictions < expect_evictions {
+        bail!(
+            "expected >= {expect_evictions} eviction(s), observed {}",
+            report.fault.evictions
+        );
+    }
+    if let Some(bound) = args.get("max-final-loss") {
+        let bound: f32 = bound.parse().map_err(|e| anyhow::anyhow!("--max-final-loss: {e}"))?;
+        let last = report.loss_per_epoch.last().copied().unwrap_or(f32::INFINITY) / ds.n as f32;
+        if last.is_nan() || last > bound {
+            bail!("final loss/sample {last:.5} exceeds bound {bound:.5}");
+        }
+    }
     Ok(())
 }
 

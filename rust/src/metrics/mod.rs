@@ -130,6 +130,65 @@ impl DepthStats {
     }
 }
 
+/// Fault-tolerance counters, accumulated by the coordinators across
+/// restart attempts: membership events (evictions decided by the
+/// supervision loop, rejoins re-admitted after a recovery, client
+/// resyncs adopted from generation bumps, stale-generation packets
+/// dropped) plus checkpoint/restore costs. Zero everywhere on a
+/// fault-free run — the no-failure path never touches this machinery.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Workers evicted by the supervision loop (silence timeout).
+    pub evictions: u64,
+    /// Previously evicted workers re-admitted on a restart attempt.
+    pub rejoins: u64,
+    /// Generation bumps adopted by worker clients (each aborts that
+    /// client's in-flight window).
+    pub resyncs: u64,
+    /// Stale-generation packets dropped by clients — every one is an
+    /// FA/confirm that was *not* applied after a membership change.
+    pub stale_gen: u64,
+    /// Checkpoint restores performed (attempt restarts).
+    pub restores: u64,
+    /// Round-consistent checkpoints written.
+    pub checkpoints: u64,
+    /// Bytes written across all checkpoints.
+    pub checkpoint_bytes: u64,
+    /// Wall time spent serializing + writing checkpoints, nanoseconds.
+    pub checkpoint_time_ns: u64,
+}
+
+impl FaultStats {
+    /// Fold another accumulator into this one.
+    pub fn merge(&mut self, other: &Self) {
+        self.evictions += other.evictions;
+        self.rejoins += other.rejoins;
+        self.resyncs += other.resyncs;
+        self.stale_gen += other.stale_gen;
+        self.restores += other.restores;
+        self.checkpoints += other.checkpoints;
+        self.checkpoint_bytes += other.checkpoint_bytes;
+        self.checkpoint_time_ns += other.checkpoint_time_ns;
+    }
+
+    /// "1 evicted, 0 rejoined, 2 resyncs, 1 restore; 3 ckpts
+    /// (12.3KiB, 1.2ms)" — the report line.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} evicted, {} rejoined, {} resyncs ({} stale-gen dropped), {} restore(s); \
+             {} ckpt(s) ({} B, {})",
+            self.evictions,
+            self.rejoins,
+            self.resyncs,
+            self.stale_gen,
+            self.restores,
+            self.checkpoints,
+            self.checkpoint_bytes,
+            fmt_secs(self.checkpoint_time_ns as f64 * 1e-9),
+        )
+    }
+}
+
 /// Latency samples in nanoseconds with Fig. 8-style reporting.
 #[derive(Debug, Clone, Default)]
 pub struct LatencyHist {
@@ -318,6 +377,30 @@ mod tests {
         let mut d = DepthStats::default();
         d.observe_round(100, 100);
         assert_eq!(d.max_staleness(), DepthStats::BUCKETS - 1);
+    }
+
+    #[test]
+    fn fault_stats_merge_and_summary() {
+        let mut a = FaultStats { evictions: 1, resyncs: 2, checkpoints: 1, ..Default::default() };
+        let b = FaultStats {
+            rejoins: 1,
+            restores: 1,
+            stale_gen: 5,
+            checkpoint_bytes: 1024,
+            checkpoint_time_ns: 2_500_000,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.evictions, 1);
+        assert_eq!(a.rejoins, 1);
+        assert_eq!(a.resyncs, 2);
+        assert_eq!(a.stale_gen, 5);
+        assert_eq!(a.restores, 1);
+        assert_eq!(a.checkpoint_bytes, 1024);
+        let s = a.summary();
+        assert!(s.contains("1 evicted"), "{s}");
+        assert!(s.contains("1 restore"), "{s}");
+        assert_eq!(FaultStats::default(), FaultStats::default());
     }
 
     #[test]

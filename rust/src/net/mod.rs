@@ -27,6 +27,13 @@ pub fn switch_node(workers: usize) -> NodeId {
     workers
 }
 
+/// Conventional supervisor (membership watchdog) node id for an
+/// `m`-worker cluster — one past the switch. The trainers always
+/// provision it; it stays silent unless supervision is enabled.
+pub fn supervisor_node(workers: usize) -> NodeId {
+    workers + 1
+}
+
 /// A bidirectional packet endpoint bound to one node.
 pub trait Transport: Send {
     /// Fire-and-forget send (unreliable by design).

@@ -18,15 +18,15 @@
 //! changed when a call actually needs a different one — the naive
 //! toggle costs two `fcntl`/`setsockopt` round trips per probe.
 //!
-//! **Rx batch drain (part of the recvmmsg gap):** after every
-//! successful receive the endpoint siphons up to [`RX_BATCH`] more
-//! already-queued datagrams out of the kernel in one nonblocking burst
-//! (cached-mode loop, no per-datagram mode churn) into a pre-sized
-//! user-space queue; subsequent polls pop the queue without touching
-//! the socket. Bursts are the norm here — the switch multicasts FAs
-//! and confirms back-to-back — so this shrinks both the syscalls per
-//! packet and the kernel-buffer residency under load. (True `recvmmsg`
-//! — one syscall for the whole burst — is the remaining gap.)
+//! **Rx batch drain (`recvmmsg`):** after every successful receive the
+//! endpoint siphons the already-queued burst out of the kernel into a
+//! pre-sized user-space queue; subsequent polls pop the queue without
+//! touching the socket. Bursts are the norm here — the switch
+//! multicasts FAs and confirms back-to-back. On Linux the whole burst
+//! costs **one `recvmmsg(MSG_DONTWAIT)` syscall** (declared directly
+//! against libc, like `util/affinity.rs` — no crate dependency, no
+//! socket-mode churn at all) over preallocated per-slot buffers; other
+//! platforms fall back to the per-datagram nonblocking loop.
 
 use super::{NodeId, Transport};
 use crate::protocol::{Packet, PayloadPool};
@@ -42,6 +42,140 @@ const MAX_DGRAM: usize = 16 * 1024;
 /// below `PayloadPool::MAX_BUFS` so a full burst still decodes into
 /// pooled buffers.
 pub const RX_BATCH: usize = 16;
+
+/// Linux `recvmmsg` batch receive — one syscall per burst. The libc
+/// structures are declared directly (glibc and musl agree on the
+/// x86-64/aarch64 layouts used here); everything is preallocated once
+/// per endpoint, so the steady-state drain allocates nothing.
+/// (`dead_code` allowed: several fields exist purely for the C ABI —
+/// the kernel reads/writes them, Rust never does.)
+#[cfg(target_os = "linux")]
+#[allow(dead_code)]
+mod mmsg {
+    use super::MAX_DGRAM;
+
+    /// `AF_INET` — the only family our localhost sockets speak.
+    pub const AF_INET: u16 = 2;
+    const MSG_DONTWAIT: i32 = 0x40;
+
+    #[repr(C)]
+    struct IoVec {
+        base: *mut u8,
+        len: usize,
+    }
+
+    /// IPv4 socket address as the kernel fills it (16 bytes).
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct SockAddrIn {
+        pub sin_family: u16,
+        /// Big-endian port.
+        pub sin_port: u16,
+        pub sin_addr: u32,
+        pub sin_zero: [u8; 8],
+    }
+
+    #[repr(C)]
+    struct MsgHdr {
+        msg_name: *mut SockAddrIn,
+        msg_namelen: u32,
+        msg_iov: *mut IoVec,
+        msg_iovlen: usize,
+        msg_control: *mut u8,
+        msg_controllen: usize,
+        msg_flags: i32,
+    }
+
+    #[repr(C)]
+    struct MMsgHdr {
+        msg_hdr: MsgHdr,
+        msg_len: u32,
+    }
+
+    extern "C" {
+        // `timeout` is `*mut timespec`; we only ever pass NULL.
+        fn recvmmsg(
+            sockfd: i32,
+            msgvec: *mut MMsgHdr,
+            vlen: u32,
+            flags: i32,
+            timeout: *mut u8,
+        ) -> i32;
+    }
+
+    /// Preallocated receive slots: datagram buffers, source addresses,
+    /// and the iovec/mmsghdr arrays pointing at them. The pointed-at
+    /// storage is boxed (address-stable), so the arrays are built once
+    /// and stay valid for the endpoint's lifetime, wherever the
+    /// containing struct moves.
+    pub struct Batch {
+        cap: usize,
+        bufs: Vec<Box<[u8; MAX_DGRAM]>>,
+        addrs: Box<[SockAddrIn]>,
+        /// Referenced by `hdrs`; never read directly.
+        _iovs: Box<[IoVec]>,
+        hdrs: Box<[MMsgHdr]>,
+    }
+
+    impl Batch {
+        pub fn new(cap: usize) -> Self {
+            let mut bufs: Vec<Box<[u8; MAX_DGRAM]>> =
+                (0..cap).map(|_| Box::new([0u8; MAX_DGRAM])).collect();
+            let zero = SockAddrIn { sin_family: 0, sin_port: 0, sin_addr: 0, sin_zero: [0; 8] };
+            let mut addrs: Box<[SockAddrIn]> = vec![zero; cap].into_boxed_slice();
+            let mut iovs: Box<[IoVec]> = bufs
+                .iter_mut()
+                .map(|b| IoVec { base: b.as_mut_ptr(), len: MAX_DGRAM })
+                .collect::<Vec<_>>()
+                .into_boxed_slice();
+            let hdrs: Box<[MMsgHdr]> = (0..cap)
+                .map(|i| MMsgHdr {
+                    msg_hdr: MsgHdr {
+                        msg_name: &mut addrs[i] as *mut SockAddrIn,
+                        msg_namelen: std::mem::size_of::<SockAddrIn>() as u32,
+                        msg_iov: &mut iovs[i] as *mut IoVec,
+                        msg_iovlen: 1,
+                        msg_control: std::ptr::null_mut(),
+                        msg_controllen: 0,
+                        msg_flags: 0,
+                    },
+                    msg_len: 0,
+                })
+                .collect::<Vec<_>>()
+                .into_boxed_slice();
+            Self { cap, bufs, addrs, _iovs: iovs, hdrs }
+        }
+
+        /// One nonblocking `recvmmsg`; returns how many datagrams
+        /// landed (0 on would-block or error). Read them via
+        /// [`Batch::slot`] before the next call.
+        pub fn recv(&mut self, fd: i32) -> usize {
+            for h in self.hdrs.iter_mut() {
+                h.msg_hdr.msg_namelen = std::mem::size_of::<SockAddrIn>() as u32;
+                h.msg_len = 0;
+            }
+            // SAFETY: every msgvec entry points at storage owned by
+            // `self` (boxed, address-stable, sized as advertised);
+            // vlen equals the entry count; MSG_DONTWAIT never blocks;
+            // the kernel writes at most MAX_DGRAM bytes per slot and
+            // reports lengths via msg_len.
+            let n = unsafe {
+                recvmmsg(fd, self.hdrs.as_mut_ptr(), self.cap as u32, MSG_DONTWAIT, std::ptr::null_mut())
+            };
+            if n <= 0 {
+                0
+            } else {
+                n as usize
+            }
+        }
+
+        /// Datagram `i` of the last [`Batch::recv`]: `(source, bytes)`.
+        pub fn slot(&self, i: usize) -> (&SockAddrIn, &[u8]) {
+            let len = (self.hdrs[i].msg_len as usize).min(MAX_DGRAM);
+            (&self.addrs[i], &self.bufs[i][..len])
+        }
+    }
+}
 
 /// Cached socket mode (see the module docs' poll-with-budget note).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -64,6 +198,10 @@ pub struct UdpEndpoint {
     mode: Option<Mode>,
     /// Batch-drained packets awaiting delivery (≤ [`RX_BATCH`]).
     rxq: VecDeque<(NodeId, Packet)>,
+    /// `recvmmsg` slots, allocated on the first drain (send-only
+    /// endpoints never pay for them).
+    #[cfg(target_os = "linux")]
+    batch: Option<mmsg::Batch>,
 }
 
 /// Build `nodes` endpoints on consecutive localhost ports starting at
@@ -82,6 +220,8 @@ pub fn build(nodes: usize, base_port: u16) -> std::io::Result<Vec<UdpEndpoint>> 
                 pool: PayloadPool::new(),
                 mode: None,
                 rxq: VecDeque::with_capacity(RX_BATCH),
+                #[cfg(target_os = "linux")]
+                batch: None,
             })
         })
         .collect()
@@ -125,6 +265,52 @@ impl UdpEndpoint {
     pub fn rx_queued(&self) -> usize {
         self.rxq.len()
     }
+
+    /// Rx batch drain (see module docs): siphon whatever the kernel
+    /// already queued behind a successful receive into the user-space
+    /// queue. Linux: one `recvmmsg(MSG_DONTWAIT)` syscall for the
+    /// whole burst, no socket-mode changes.
+    #[cfg(target_os = "linux")]
+    fn drain_burst(&mut self) {
+        use std::os::unix::io::AsRawFd;
+        let fd = self.socket.as_raw_fd();
+        let UdpEndpoint { pool, rxq, base_port, batch, .. } = self;
+        let batch = batch.get_or_insert_with(|| mmsg::Batch::new(RX_BATCH));
+        let n = batch.recv(fd);
+        for i in 0..n {
+            let (addr, bytes) = batch.slot(i);
+            let Ok(pkt) = Packet::decode_with(bytes, pool) else {
+                continue; // skip garbage, keep the rest of the burst
+            };
+            if addr.sin_family != mmsg::AF_INET {
+                continue;
+            }
+            if let Some(src) = u16::from_be(addr.sin_port).checked_sub(*base_port) {
+                rxq.push_back((src as NodeId, pkt));
+            }
+        }
+    }
+
+    /// Portable fallback: per-datagram nonblocking receives over the
+    /// cached socket mode. (A timed receive leaves the socket cached
+    /// nonblocking — which the AggClient's poll loop would have
+    /// switched to on its next call anyway, so in sparse traffic the
+    /// drain's net cost is one EWOULDBLOCK recv.)
+    #[cfg(not(target_os = "linux"))]
+    fn drain_burst(&mut self) {
+        if self.set_mode(Mode::NonBlocking).is_none() {
+            return;
+        }
+        while self.rxq.len() < RX_BATCH {
+            let Ok((n, from)) = self.socket.recv_from(&mut self.rxbuf) else { break };
+            let Ok(pkt) = Packet::decode_with(&self.rxbuf[..n], &mut self.pool) else {
+                continue; // skip garbage, keep draining
+            };
+            if let Some(src) = self.node_of(from) {
+                self.rxq.push_back((src, pkt));
+            }
+        }
+    }
 }
 
 impl Transport for UdpEndpoint {
@@ -150,24 +336,7 @@ impl Transport for UdpEndpoint {
         let (n, from) = self.socket.recv_from(&mut self.rxbuf).ok()?;
         let pkt = Packet::decode_with(&self.rxbuf[..n], &mut self.pool).ok()?;
         let first = (self.node_of(from)?, pkt);
-        // Rx batch drain (see module docs): siphon whatever the kernel
-        // already queued behind this packet, nonblocking, up to the
-        // budget. A timed receive leaves the socket cached nonblocking —
-        // which the AggClient's poll loop (try_recv first, timed wait
-        // second) would have switched to on its very next call anyway,
-        // so in sparse traffic the drain's net cost is one EWOULDBLOCK
-        // recv, while a burst behind a timed wake is captured whole.
-        if self.set_mode(Mode::NonBlocking).is_some() {
-            while self.rxq.len() < RX_BATCH {
-                let Ok((n, from)) = self.socket.recv_from(&mut self.rxbuf) else { break };
-                let Ok(pkt) = Packet::decode_with(&self.rxbuf[..n], &mut self.pool) else {
-                    continue; // skip garbage, keep draining
-                };
-                if let Some(src) = self.node_of(from) {
-                    self.rxq.push_back((src, pkt));
-                }
-            }
-        }
+        self.drain_burst();
         Some(first)
     }
 

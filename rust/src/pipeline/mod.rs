@@ -61,6 +61,20 @@
 //! and per-epoch loss attribution stays exact. Gradient state never
 //! mixes between rounds: each ring slot accumulates into its own
 //! engine-side gradient buffer, cleared by its own update.
+//!
+//! **Generation bumps (membership changes):** when the `AggClient`
+//! observes a cluster-generation bump (a worker was evicted, left, or
+//! rejoined — see `crate::protocol`), every in-flight round is dead:
+//! its FAs will never arrive, and its half-accumulated gradients
+//! belong to the old membership. [`run_minibatch`] and [`flush_round`]
+//! then **drain the ring cleanly instead of wedging**: already
+//! dispatched backwards are joined (never abandoned mid-engine), every
+//! gradient slot is cleared without applying, every ring slot is
+//! reset, and the call returns 0.0 with [`AggClient::interrupted`]
+//! still set — the trainer checks it after every call and falls back
+//! to its checkpoint/restart path. No deferred backward ever crosses a
+//! membership change, and no stale-generation FA is ever applied (the
+//! client drops those before they reach this module).
 
 use crate::data::partition::{vertical, VerticalShard};
 use crate::data::quantize::{pack_rows, PackedBatch, LANE};
@@ -343,6 +357,36 @@ impl PipelineScratch {
     }
 }
 
+/// Generation-bump abort, overlap path: join every dispatched backward
+/// (an engine job is never abandoned mid-flight), discard every
+/// gradient slot, and reset the whole round ring — the dead
+/// generation's rounds must neither wedge the drain nor leak
+/// half-accumulated gradients into the resumed training. The caller
+/// resets the ring cursors and returns 0.0; the trainer sees the
+/// pending bump via [`AggClient::interrupted`].
+fn abort_ring(runner: &mut EngineRunner, rounds: &mut [PendingRound]) {
+    while runner.outstanding_backwards() > 0 {
+        let _ = runner.join_backward();
+    }
+    runner.clear_gradients();
+    for r in rounds.iter_mut() {
+        r.active = false;
+        r.count = 0;
+        r.done = 0;
+        r.loss_sum = 0.0;
+        r.pending.clear();
+        r.ready.clear();
+    }
+}
+
+/// Generation-bump abort, depth-1 path: the current mini-batch dies
+/// (its remaining FAs will never arrive); drop its seq map and the
+/// partial gradient.
+fn abort_sync(runner: &mut EngineRunner, pending: &mut Vec<(u16, usize)>) {
+    pending.clear();
+    runner.clear_gradients();
+}
+
 /// Apply one FA event: decode, then loss + plane-replay backward on the
 /// runner (fanned out across engine threads when the pool is active).
 /// Depth-1 path: blocking backward against gradient slot 0.
@@ -434,6 +478,11 @@ fn run_synchronous<T: Transport>(
         encode_activations_into(pa, payload);
         // Claim a slot; pump the network while backpressured.
         let seq = loop {
+            if agg.interrupted() {
+                // Membership changed under us: this round is dead.
+                abort_sync(runner, pending);
+                return 0.0;
+            }
             if let Some(seq) = agg.try_send_pa(payload) {
                 break seq;
             }
@@ -450,11 +499,19 @@ fn run_synchronous<T: Transport>(
                 stats.overlapped += 1;
             }
         }
+        if agg.interrupted() {
+            abort_sync(runner, pending);
+            return 0.0;
+        }
     }
 
     // Stage 3 tail: block for the remaining FAs.
     let deadline = std::time::Instant::now() + DRAIN_TIMEOUT;
     while done < count {
+        if agg.interrupted() {
+            abort_sync(runner, pending);
+            return 0.0;
+        }
         let Some(ev) = agg.poll(Duration::from_millis(20)) else {
             assert!(
                 std::time::Instant::now() < deadline,
@@ -557,10 +614,15 @@ impl<T: Transport> Overlap<'_, T> {
 
     /// Retire the head round: drain its remaining FAs (the engines
     /// overlapping the drain), join its backwards, then apply its
-    /// deferred update. Returns the round's loss.
-    fn retire_head(&mut self, rounds: &mut [PendingRound], head: usize, live: usize) -> f32 {
+    /// deferred update. Returns the round's loss, or `None` when a
+    /// generation bump killed the round mid-drain (the caller must
+    /// abort the whole ring — its FAs will never arrive).
+    fn retire_head(&mut self, rounds: &mut [PendingRound], head: usize, live: usize) -> Option<f32> {
         let deadline = Instant::now() + DRAIN_TIMEOUT;
         while rounds[head].done < rounds[head].count {
+            if self.agg.interrupted() {
+                return None;
+            }
             if rounds[head].pending.is_empty() {
                 // Every head FA is in hand: run the engines dry. If the
                 // head's remaining work sits in the engine ring
@@ -598,7 +660,7 @@ impl<T: Transport> Overlap<'_, T> {
         self.stats.deferred_rounds += 1;
         let loss = rounds[head].loss_sum;
         rounds[head].retire();
-        loss
+        Some(loss)
     }
 }
 
@@ -636,10 +698,20 @@ fn run_overlapped<T: Transport>(
     // the engines whenever the network hands us their FAs.
     for j in 0..count {
         let idx = first + j;
+        if ctx.agg.interrupted() {
+            abort_ring(ctx.runner, rounds);
+            (*head, *live) = (0, 0);
+            return 0.0;
+        }
         ctx.feed(rounds, head_i, live_i);
         ctx.runner.forward(idx, pa);
         encode_activations_into(pa, payload);
         let seq = loop {
+            if ctx.agg.interrupted() {
+                abort_ring(ctx.runner, rounds);
+                (*head, *live) = (0, 0);
+                return 0.0;
+            }
             if let Some(seq) = ctx.agg.try_send_pa(payload) {
                 break seq;
             }
@@ -655,10 +727,20 @@ fn run_overlapped<T: Transport>(
     // backwards had up to D-1 rounds of forwards and sends to hide
     // behind — so the next call finds a free slot.
     let retired = if live_i == depth {
-        let l = ctx.retire_head(rounds, head_i, live_i);
-        head_i = (head_i + 1) % depth;
-        live_i -= 1;
-        l
+        match ctx.retire_head(rounds, head_i, live_i) {
+            Some(l) => {
+                head_i = (head_i + 1) % depth;
+                live_i -= 1;
+                l
+            }
+            None => {
+                // A membership change killed the drain: no deferred
+                // backward crosses it — the whole ring resets.
+                abort_ring(ctx.runner, rounds);
+                (*head, *live) = (0, 0);
+                return 0.0;
+            }
+        }
     } else {
         0.0
     };
@@ -668,6 +750,11 @@ fn run_overlapped<T: Transport>(
     // next call's (or the flush's) first order of business.
     while ctx.pump(rounds, head_i, live_i, Duration::ZERO) {}
     ctx.feed(rounds, head_i, live_i);
+    if ctx.agg.interrupted() {
+        abort_ring(ctx.runner, rounds);
+        (*head, *live) = (0, 0);
+        return 0.0;
+    }
 
     (*head, *live) = (head_i, live_i);
     retired
@@ -698,9 +785,21 @@ pub fn flush_round<T: Transport>(
     let mut total = 0.0f32;
     let mut ctx = Overlap { runner, agg, fa, loss, lr, stats };
     while *live > 0 {
-        total += ctx.retire_head(rounds, *head, *live);
-        *head = (*head + 1) % depth;
-        *live -= 1;
+        match ctx.retire_head(rounds, *head, *live) {
+            Some(l) => {
+                total += l;
+                *head = (*head + 1) % depth;
+                *live -= 1;
+            }
+            None => {
+                // Generation bump mid-flush: the remaining rounds died
+                // with the old membership — drain the ring cleanly and
+                // let the trainer's interrupt check take over.
+                abort_ring(ctx.runner, rounds);
+                (*head, *live) = (0, 0);
+                break;
+            }
+        }
     }
     let retrans_delta = ctx.agg.stats.retransmits - retrans_mark;
     ctx.stats.net.observe_round(retrans_delta);

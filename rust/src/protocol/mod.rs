@@ -1,10 +1,29 @@
-//! The P4SGD wire protocol — paper Fig. 4.
+//! The P4SGD wire protocol — paper Fig. 4, extended with
+//! generation-tagged membership.
 //!
 //! A packet carries: `bm` (a bitmap with the source worker's index set),
 //! `seq` (the aggregation slot index on the switch), `is_agg` (aggregation
 //! vs acknowledgement round), `acked` (set by the switch on the
 //! ACK-confirm broadcast), and a payload of `MB` 32-bit integers — the
 //! partial (or full) activations in fixed-point.
+//!
+//! # Generations and membership control
+//!
+//! Every packet additionally carries `gen`, the **cluster generation** —
+//! a monotonically increasing membership epoch. The switch is the
+//! authority: it bumps the generation whenever membership changes (an
+//! eviction, a leave, a rejoin), atomically resetting its aggregation
+//! state, and drops any data packet tagged with a stale generation —
+//! so an aggregation can never mix contributions from two different
+//! memberships (the SwitchML/ATP versioned-slot lesson). Three control
+//! kinds ([`Ctrl`]) ride the same wire: `Join` (membership announce /
+//! heartbeat / resync probe), `Leave` (graceful departure), and `Evict`
+//! (supervisor-ordered removal; the `bm` field is the evicted mask).
+//!
+//! The wire format is **versioned** ([`WIRE_VERSION`]): the former
+//! reserved header byte now carries the version, and decoding rejects
+//! any other value with a clear error, so a pre-generation peer fails
+//! loudly instead of silently aggregating untagged packets.
 //!
 //! Activations travel as **i32 fixed-point** because the Tofino data
 //! plane has integer ALUs only; [`FIXED_SHIFT`] gives 16 fractional bits,
@@ -40,8 +59,13 @@ pub const FIXED_SHIFT: u32 = 16;
 /// Wire magic, catches stray datagrams on the UDP transport.
 pub const MAGIC: u16 = 0x5034; // "P4"
 
+/// Wire-format version. Version 1 added the generation field and the
+/// membership control kinds; version-0 frames (which carried a zero
+/// reserved byte where the version now lives) are rejected at decode.
+pub const WIRE_VERSION: u8 = 1;
+
 /// Fixed header size on the wire (see [`Packet::encode`]).
-pub const HEADER_BYTES: usize = 12;
+pub const HEADER_BYTES: usize = 16;
 
 /// f32 -> fixed-point i32 (saturating).
 #[inline]
@@ -63,6 +87,43 @@ pub fn empty_payload() -> Arc<[i32]> {
     EMPTY.get_or_init(|| Vec::new().into()).clone()
 }
 
+/// Membership control kind carried in the flags byte. `Data` (0) is
+/// the ordinary aggregation traffic; the others are the membership
+/// protocol: `Join` announces (or probes) membership at a generation —
+/// it doubles as the worker heartbeat and as the switch's "here is the
+/// current generation" resync answer; `Leave` is a graceful departure;
+/// `Evict` is the supervisor's removal order (and the switch's
+/// eviction notice, with `bm` holding the evicted mask).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Ctrl {
+    #[default]
+    Data,
+    Join,
+    Leave,
+    Evict,
+}
+
+impl Ctrl {
+    /// Two-bit wire encoding (flags bits 2-3).
+    fn to_bits(self) -> u8 {
+        match self {
+            Ctrl::Data => 0,
+            Ctrl::Join => 1,
+            Ctrl::Leave => 2,
+            Ctrl::Evict => 3,
+        }
+    }
+
+    fn from_bits(bits: u8) -> Ctrl {
+        match bits & 0b11 {
+            1 => Ctrl::Join,
+            2 => Ctrl::Leave,
+            3 => Ctrl::Evict,
+            _ => Ctrl::Data,
+        }
+    }
+}
+
 /// A protocol packet (paper Fig. 4). One packet per micro-batch per
 /// round; the switch swaps in a fresh payload when broadcasting FA (the
 /// PA buffer may still be shared with the sender).
@@ -73,46 +134,119 @@ pub struct Packet {
     /// Switch replaces PA with FA and sets this on agg broadcast; set on
     /// the ack-confirm broadcast too.
     pub acked: bool,
+    /// Membership control kind; `Ctrl::Data` for aggregation traffic.
+    pub ctrl: Ctrl,
     /// Aggregation slot index.
     pub seq: u16,
-    /// Source-worker bitmap (bit m = worker m). Max 32 workers.
+    /// Source-worker bitmap (bit m = worker m). Max 32 workers. For
+    /// `Ctrl::Evict` this is the evicted-worker mask instead.
     pub bm: u32,
+    /// Cluster generation the sender believes current; the switch drops
+    /// mismatched data packets and answers with the authoritative value.
+    pub gen: u32,
     /// MB fixed-point activations (PA upstream, FA downstream); empty on
-    /// the ack round. Shared — never mutate through this without
-    /// exclusive ownership (`Arc::get_mut`).
+    /// the ack round and on control packets. Shared — never mutate
+    /// through this without exclusive ownership (`Arc::get_mut`).
     pub payload: Arc<[i32]>,
 }
 
 impl Packet {
-    /// A worker's partial-activation packet (Alg. 3 lines 4-5).
+    /// A worker's partial-activation packet (Alg. 3 lines 4-5),
+    /// generation 0 — senders stamp their generation via
+    /// [`Packet::with_gen`].
     pub fn pa(seq: u16, worker: usize, payload: impl Into<Arc<[i32]>>) -> Self {
-        Packet { is_agg: true, acked: false, seq, bm: 1 << worker, payload: payload.into() }
+        Packet {
+            is_agg: true,
+            acked: false,
+            ctrl: Ctrl::Data,
+            seq,
+            bm: 1 << worker,
+            gen: 0,
+            payload: payload.into(),
+        }
     }
 
     /// A worker's acknowledgement packet (Alg. 3 lines 22-23).
     pub fn ack(seq: u16, worker: usize) -> Self {
-        Packet { is_agg: false, acked: false, seq, bm: 1 << worker, payload: empty_payload() }
+        Packet {
+            is_agg: false,
+            acked: false,
+            ctrl: Ctrl::Data,
+            seq,
+            bm: 1 << worker,
+            gen: 0,
+            payload: empty_payload(),
+        }
     }
 
-    /// Wire encoding:
-    /// `magic u16 | flags u8 | rsvd u8 | seq u16 | bm u32 | len u16 | payload i32*len`
-    /// (little-endian).
+    /// A membership announce / heartbeat / resync probe from `worker`
+    /// at generation `gen`.
+    pub fn join(worker: usize, gen: u32) -> Self {
+        Packet {
+            is_agg: false,
+            acked: false,
+            ctrl: Ctrl::Join,
+            seq: 0,
+            bm: 1 << worker,
+            gen,
+            payload: empty_payload(),
+        }
+    }
+
+    /// A graceful departure notice from `worker` at generation `gen`.
+    pub fn leave(worker: usize, gen: u32) -> Self {
+        Packet {
+            is_agg: false,
+            acked: false,
+            ctrl: Ctrl::Leave,
+            seq: 0,
+            bm: 1 << worker,
+            gen,
+            payload: empty_payload(),
+        }
+    }
+
+    /// A supervisor eviction order (or switch eviction notice) for the
+    /// workers in `mask`.
+    pub fn evict(mask: u32, gen: u32) -> Self {
+        Packet {
+            is_agg: false,
+            acked: false,
+            ctrl: Ctrl::Evict,
+            seq: 0,
+            bm: mask,
+            gen,
+            payload: empty_payload(),
+        }
+    }
+
+    /// Builder: stamp the sender's generation.
+    pub fn with_gen(mut self, gen: u32) -> Self {
+        self.gen = gen;
+        self
+    }
+
+    /// Wire encoding (version [`WIRE_VERSION`]):
+    /// `magic u16 | flags u8 | version u8 | seq u16 | bm u32 | gen u32 |
+    /// len u16 | payload i32*len` (little-endian). Flags: bit 0
+    /// `is_agg`, bit 1 `acked`, bits 2-3 the [`Ctrl`] kind.
     pub fn encode(&self, buf: &mut Vec<u8>) {
         buf.clear();
         buf.extend_from_slice(&MAGIC.to_le_bytes());
-        let flags = (self.is_agg as u8) | ((self.acked as u8) << 1);
+        let flags = (self.is_agg as u8) | ((self.acked as u8) << 1) | (self.ctrl.to_bits() << 2);
         buf.push(flags);
-        buf.push(0);
+        buf.push(WIRE_VERSION);
         buf.extend_from_slice(&self.seq.to_le_bytes());
         buf.extend_from_slice(&self.bm.to_le_bytes());
+        buf.extend_from_slice(&self.gen.to_le_bytes());
         buf.extend_from_slice(&(self.payload.len() as u16).to_le_bytes());
         for v in self.payload.iter() {
             buf.extend_from_slice(&v.to_le_bytes());
         }
     }
 
-    /// Validate the fixed header; returns `(flags, seq, bm, len)`.
-    fn parse_header(buf: &[u8]) -> Result<(u8, u16, u32, usize)> {
+    /// Validate the fixed header; returns `(flags, seq, bm, gen, len)`.
+    fn parse_header(buf: &[u8]) -> Result<(u8, u16, u32, u32, usize)> {
         if buf.len() < HEADER_BYTES {
             bail!("short packet: {} bytes", buf.len());
         }
@@ -120,14 +254,22 @@ impl Packet {
         if magic != MAGIC {
             bail!("bad magic {magic:#x}");
         }
+        let version = buf[3];
+        if version != WIRE_VERSION {
+            bail!(
+                "unsupported wire version {version} (expected {WIRE_VERSION}): \
+                 peer predates generation-tagged membership — upgrade it"
+            );
+        }
         let flags = buf[2];
         let seq = u16::from_le_bytes([buf[4], buf[5]]);
         let bm = u32::from_le_bytes([buf[6], buf[7], buf[8], buf[9]]);
-        let len = u16::from_le_bytes([buf[10], buf[11]]) as usize;
+        let gen = u32::from_le_bytes([buf[10], buf[11], buf[12], buf[13]]);
+        let len = u16::from_le_bytes([buf[14], buf[15]]) as usize;
         if buf.len() != HEADER_BYTES + 4 * len {
             bail!("length mismatch: header says {len} words, frame has {} bytes", buf.len());
         }
-        Ok((flags, seq, bm, len))
+        Ok((flags, seq, bm, gen, len))
     }
 
     /// Payload word `k` of a validated frame.
@@ -141,13 +283,21 @@ impl Packet {
     /// Allocates a fresh payload — steady-state receivers should prefer
     /// [`Packet::decode_with`] and a [`PayloadPool`].
     pub fn decode(buf: &[u8]) -> Result<Packet> {
-        let (flags, seq, bm, len) = Self::parse_header(buf)?;
+        let (flags, seq, bm, gen, len) = Self::parse_header(buf)?;
         let payload: Arc<[i32]> = if len == 0 {
             empty_payload()
         } else {
             (0..len).map(|k| Self::wire_word(buf, k)).collect()
         };
-        Ok(Packet { is_agg: flags & 1 != 0, acked: flags & 2 != 0, seq, bm, payload })
+        Ok(Packet {
+            is_agg: flags & 1 != 0,
+            acked: flags & 2 != 0,
+            ctrl: Ctrl::from_bits(flags >> 2),
+            seq,
+            bm,
+            gen,
+            payload,
+        })
     }
 
     /// [`Packet::decode`] drawing the payload buffer from `pool`: once
@@ -155,9 +305,17 @@ impl Packet {
     /// consumers, decoding is allocation-free (the UDP transport's
     /// mirror of the `SimNet` shared-`Arc` payload discipline).
     pub fn decode_with(buf: &[u8], pool: &mut PayloadPool) -> Result<Packet> {
-        let (flags, seq, bm, len) = Self::parse_header(buf)?;
+        let (flags, seq, bm, gen, len) = Self::parse_header(buf)?;
         let payload = pool.take(len, |k| Self::wire_word(buf, k));
-        Ok(Packet { is_agg: flags & 1 != 0, acked: flags & 2 != 0, seq, bm, payload })
+        Ok(Packet {
+            is_agg: flags & 1 != 0,
+            acked: flags & 2 != 0,
+            ctrl: Ctrl::from_bits(flags >> 2),
+            seq,
+            bm,
+            gen,
+            payload,
+        })
     }
 
     /// Total wire size in bytes.
@@ -306,11 +464,27 @@ mod tests {
     #[test]
     fn decode_rejects_garbage() {
         assert!(Packet::decode(&[]).is_err());
-        assert!(Packet::decode(&[0u8; 12]).is_err()); // bad magic
+        assert!(Packet::decode(&[0u8; 16]).is_err()); // bad magic
         let mut buf = Vec::new();
         Packet::pa(0, 0, vec![1, 2]).encode(&mut buf);
         buf.truncate(buf.len() - 1);
         assert!(Packet::decode(&buf).is_err()); // truncated payload
+    }
+
+    #[test]
+    fn decode_rejects_old_wire_version_with_clear_error() {
+        // A pre-generation peer wrote 0 where the version byte now
+        // lives; the error must say so instead of misparsing the frame.
+        let mut buf = Vec::new();
+        Packet::pa(7, 0, vec![1]).encode(&mut buf);
+        buf[3] = 0;
+        let err = Packet::decode(&buf).unwrap_err().to_string();
+        assert!(err.contains("unsupported wire version 0"), "{err}");
+        let mut pool = PayloadPool::new();
+        assert!(Packet::decode_with(&buf, &mut pool).is_err());
+        buf[3] = 2; // a future version is rejected too
+        let err = Packet::decode(&buf).unwrap_err().to_string();
+        assert!(err.contains("unsupported wire version 2"), "{err}");
     }
 
     #[test]
@@ -321,6 +495,29 @@ mod tests {
         pkt.encode(&mut buf);
         let back = Packet::decode(&buf).unwrap();
         assert!(back.is_agg && back.acked);
+        assert_eq!(back.ctrl, Ctrl::Data);
+    }
+
+    #[test]
+    fn generation_and_ctrl_roundtrip() {
+        let mut buf = Vec::new();
+        for (pkt, ctrl) in [
+            (Packet::pa(3, 1, vec![5]).with_gen(7), Ctrl::Data),
+            (Packet::join(2, 9), Ctrl::Join),
+            (Packet::leave(0, 1), Ctrl::Leave),
+            (Packet::evict(0b101, u32::MAX), Ctrl::Evict),
+        ] {
+            pkt.encode(&mut buf);
+            let back = Packet::decode(&buf).unwrap();
+            assert_eq!(back, pkt);
+            assert_eq!(back.ctrl, ctrl);
+            assert_eq!(back.gen, pkt.gen);
+        }
+        // control packets are payloadless and share the static empty Arc
+        let join = Packet::join(4, 2);
+        assert!(Arc::ptr_eq(&join.payload, &empty_payload()));
+        assert_eq!(join.bm, 1 << 4);
+        assert_eq!(Packet::evict(0b11, 5).bm, 0b11);
     }
 
     #[test]
@@ -409,8 +606,10 @@ mod tests {
             let pkt = Packet {
                 is_agg: rng.chance(0.5),
                 acked: rng.chance(0.5),
+                ctrl: Ctrl::from_bits(rng.next_u32() as u8),
                 seq: rng.next_u32() as u16,
                 bm: rng.next_u32(),
+                gen: rng.next_u32(),
                 payload: (0..len).map(|_| rng.next_u32() as i32).collect(),
             };
             let mut buf = Vec::new();
@@ -426,8 +625,9 @@ mod tests {
     #[test]
     fn paper_packet_is_64_bytes_class() {
         // Fig. 8 discussion: P4SGD uses 64B packets (vs SwitchML's 256B).
-        // MB=8 payload: 12B header + 32B payload = 44B on our wire, which
-        // with Ethernet+IP+UDP framing lands in the 64-100B class.
+        // MB=8 payload: 16B header (incl. the generation tag) + 32B
+        // payload = 48B on our wire, which with Ethernet+IP+UDP framing
+        // lands in the 64-100B class.
         let pkt = Packet::pa(0, 0, vec![0; 8]);
         assert!(pkt.wire_bytes() <= 64);
     }

@@ -32,10 +32,26 @@
 //! to ring-width-1 rounds ago is never overwritten by a later
 //! completion — with a depth-D worker pipeline parking FAs across D
 //! rounds, the trainers size the ring to `max(2, D)`.
+//!
+//! # Generations and membership
+//!
+//! Each switch instance carries the **cluster generation** and the
+//! current **member mask**; completion is `agg_bm == members`, so
+//! membership changes retune every slot's completion condition at
+//! once. A membership change (supervisor `Ctrl::Evict`, worker
+//! `Ctrl::Leave`, or a `Ctrl::Join` from a non-member — a rejoin)
+//! bumps the generation and **atomically resets every slot** (bitmaps,
+//! counts, aggregation copy, FA-ring cursor): an aggregation can never
+//! mix two memberships' contributions. Data packets tagged with any
+//! other generation are dropped (`stale_gen`) and answered with a
+//! unicast carrying the authoritative generation — a `Join` notice for
+//! a stale member (go resync) or an `Evict` notice for a non-member
+//! (you were removed) — so a desynchronized worker learns the truth in
+//! one round trip instead of retransmitting forever.
 
 use super::{Action, AggServer};
 use crate::net::NodeId;
-use crate::protocol::{empty_payload, Packet};
+use crate::protocol::{empty_payload, Ctrl, Packet};
 use std::sync::Arc;
 
 /// Per-slot register state.
@@ -79,29 +95,54 @@ pub struct SwitchStats {
     /// FA buffer allocations (pair warm-up + lagging-holder fallbacks);
     /// stays flat in steady state.
     pub fa_alloc: u64,
+    /// Data packets dropped for carrying the wrong generation (each is
+    /// answered with a generation notice, never aggregated).
+    pub stale_gen: u64,
+    /// Workers removed by supervisor `Evict` orders.
+    pub evictions: u64,
+    /// Non-members re-admitted via `Join`.
+    pub rejoins: u64,
+    /// Members departed via `Leave`.
+    pub leaves: u64,
 }
 
-/// The P4 switch state machine (Algorithm 2).
+/// The P4 switch state machine (Algorithm 2 + membership generations).
 pub struct P4Switch {
     slots: Vec<Slot>,
     workers: usize,
     payload_len: usize,
+    /// Cluster generation (authoritative; bumped on membership change).
+    gen: u32,
+    /// Current member mask (bit m = worker m participates).
+    members: u32,
     pub stats: SwitchStats,
 }
 
 impl P4Switch {
     /// `slots` aggregation slots for `workers` workers, payloads of
-    /// `payload_len` elements (MB).
+    /// `payload_len` elements (MB). All workers start as members at
+    /// generation 0 (see [`P4Switch::with_generation`]).
     pub fn new(slots: usize, workers: usize, payload_len: usize) -> Self {
         assert!(workers >= 1 && workers <= 32, "bm is a 32-bit bitmap");
+        let members = if workers == 32 { u32::MAX } else { (1u32 << workers) - 1 };
         Self {
             slots: (0..slots)
                 .map(|_| Slot { agg: vec![0; payload_len], ..Slot::default() })
                 .collect(),
             workers,
             payload_len,
+            gen: 0,
+            members,
             stats: SwitchStats::default(),
         }
+    }
+
+    /// Start at a non-zero generation — a trainer resuming after an
+    /// eviction spawns its fresh switch at the cluster's current
+    /// generation so stale packets from before the restart stay stale.
+    pub fn with_generation(mut self, gen: u32) -> Self {
+        self.gen = gen;
+        self
     }
 
     /// Widen every slot's FA ring to `n` buffers (`2..=16`): a depth-D
@@ -117,12 +158,88 @@ impl P4Switch {
         self
     }
 
-    /// All-workers bitmap — the completion condition for both rounds.
+    /// Current member mask — the completion condition for both rounds.
     fn full_bm(&self) -> u32 {
-        if self.workers == 32 {
-            u32::MAX
-        } else {
-            (1u32 << self.workers) - 1
+        self.members
+    }
+
+    /// The authoritative cluster generation.
+    pub fn generation(&self) -> u32 {
+        self.gen
+    }
+
+    /// The current member mask.
+    pub fn members(&self) -> u32 {
+        self.members
+    }
+
+    /// Membership changed: bump the generation and atomically reset
+    /// every aggregation slot — bitmaps, counts, the aggregation copy,
+    /// and the FA-ring cursor. In-flight FA multicast copies stay
+    /// valid (shared `Arc`s are never written through); they simply
+    /// belong to a dead generation and die at the receivers' gen check.
+    fn bump_generation(&mut self) {
+        self.gen = self.gen.wrapping_add(1);
+        for s in &mut self.slots {
+            s.agg_count = 0;
+            s.agg_bm = 0;
+            s.ack_count = 0;
+            s.ack_bm = 0;
+            s.agg.iter_mut().for_each(|a| *a = 0);
+            s.fa_cur = 0;
+        }
+    }
+
+    /// Handle a membership control packet; returns the egress actions.
+    fn handle_ctrl(&mut self, src: NodeId, pkt: &Packet) -> Vec<Action> {
+        match pkt.ctrl {
+            Ctrl::Evict => {
+                // Supervisor order: remove pkt.bm from the membership.
+                // Idempotent — a retransmitted order re-multicasts the
+                // notice (so survivors that missed it still learn)
+                // without bumping again.
+                let fresh = pkt.bm & self.members;
+                if fresh != 0 {
+                    self.members &= !pkt.bm;
+                    self.stats.evictions += u64::from(fresh.count_ones());
+                    self.bump_generation();
+                }
+                vec![Action::Multicast(Packet::evict(pkt.bm, self.gen))]
+            }
+            Ctrl::Leave => {
+                let fresh = pkt.bm & self.members;
+                if fresh == 0 {
+                    return Vec::new();
+                }
+                self.members &= !pkt.bm;
+                self.stats.leaves += u64::from(fresh.count_ones());
+                self.bump_generation();
+                let mut out = pkt.clone();
+                out.gen = self.gen;
+                vec![Action::Multicast(out)]
+            }
+            Ctrl::Join => {
+                if pkt.bm & !self.members != 0 {
+                    // Rejoin: re-admit, bump, announce the new
+                    // generation to everyone (survivors resync too —
+                    // their in-flight rounds predate the new member).
+                    self.members |= pkt.bm;
+                    self.stats.rejoins += 1;
+                    self.bump_generation();
+                    let mut out = pkt.clone();
+                    out.gen = self.gen;
+                    return vec![Action::Multicast(out)];
+                }
+                if pkt.gen != self.gen {
+                    // A member probing with a stale generation: answer
+                    // it directly with the authoritative value.
+                    let mut out = pkt.clone();
+                    out.gen = self.gen;
+                    return vec![Action::Unicast(src, out)];
+                }
+                Vec::new() // heartbeat at the current generation
+            }
+            Ctrl::Data => unreachable!("handle_ctrl called for data"),
         }
     }
 
@@ -139,7 +256,22 @@ impl P4Switch {
 }
 
 impl AggServer for P4Switch {
-    fn handle(&mut self, _src: NodeId, pkt: &Packet) -> Vec<Action> {
+    fn handle(&mut self, src: NodeId, pkt: &Packet) -> Vec<Action> {
+        if pkt.ctrl != Ctrl::Data {
+            return self.handle_ctrl(src, pkt);
+        }
+        if pkt.gen != self.gen || pkt.bm & !self.members != 0 {
+            // Wrong-generation (or non-member) data never touches a
+            // slot; answer with the authoritative generation so the
+            // sender resynchronizes instead of retransmitting forever.
+            self.stats.stale_gen += 1;
+            let nudge = if pkt.bm & !self.members != 0 {
+                Packet::evict(pkt.bm & !self.members, self.gen)
+            } else {
+                Packet::join(src.min(31), self.gen)
+            };
+            return vec![Action::Unicast(src, nudge)];
+        }
         let full = self.full_bm();
         let seq = pkt.seq as usize;
         assert!(seq < self.slots.len(), "seq {seq} out of range");
@@ -466,5 +598,135 @@ mod tests {
             Action::Multicast(out) => assert_eq!(out.payload[..], [32]),
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn evict_bumps_generation_and_resets_slots() {
+        let mut sw = P4Switch::new(2, 3, 1);
+        drive(&mut sw, pa(0, 0, &[5]));
+        drive(&mut sw, pa(0, 1, &[7]));
+        assert_eq!(sw.generation(), 0);
+        // Supervisor evicts worker 2 (node id 3 = supervisor's slot in
+        // a real run; the switch doesn't care who src is for Evict).
+        let acts = sw.handle(4, &Packet::evict(1 << 2, 0));
+        assert_eq!(sw.generation(), 1);
+        assert_eq!(sw.members(), 0b011);
+        assert_eq!(sw.stats.evictions, 1);
+        // the notice carries the new generation and the evicted mask
+        match &acts[0] {
+            Action::Multicast(out) => {
+                assert_eq!(out.ctrl, Ctrl::Evict);
+                assert_eq!(out.gen, 1);
+                assert_eq!(out.bm, 1 << 2);
+            }
+            other => panic!("{other:?}"),
+        }
+        // the in-flight round died with the old generation: slot reset
+        assert_eq!(sw.registers(0), (0, 0, 0, 0));
+        // the survivors alone now complete a round at gen 1
+        drive(&mut sw, pa(0, 0, &[1]).with_gen(1));
+        let acts = drive(&mut sw, pa(0, 1, &[2]).with_gen(1));
+        match &acts[0] {
+            Action::Multicast(out) => {
+                assert_eq!(out.payload[..], [3], "fresh aggregation, no stale residue");
+                assert_eq!(out.gen, 1);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn evict_is_idempotent_but_reannounces() {
+        let mut sw = P4Switch::new(1, 2, 1);
+        let _ = sw.handle(3, &Packet::evict(1 << 1, 0));
+        assert_eq!(sw.generation(), 1);
+        // retransmitted order: no second bump, but the notice repeats
+        // (survivors that missed the first multicast still learn)
+        let acts = sw.handle(3, &Packet::evict(1 << 1, 0));
+        assert_eq!(sw.generation(), 1);
+        assert_eq!(sw.stats.evictions, 1);
+        match &acts[0] {
+            Action::Multicast(out) => assert_eq!((out.ctrl, out.gen), (Ctrl::Evict, 1)),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn stale_generation_data_is_dropped_and_nudged() {
+        let mut sw = P4Switch::new(1, 2, 1);
+        sw.handle(3, &Packet::evict(1 << 1, 0)); // gen -> 1
+        // worker 0 retransmits a PA from generation 0: never aggregated
+        let acts = sw.handle(0, &pa(0, 0, &[5]));
+        assert_eq!(sw.stats.stale_gen, 1);
+        assert_eq!(sw.registers(0).1, 0, "stale PA must not set bitmap bits");
+        match &acts[0] {
+            Action::Unicast(dst, out) => {
+                assert_eq!(*dst, 0);
+                assert_eq!(out.ctrl, Ctrl::Join, "member gets a resync notice");
+                assert_eq!(out.gen, 1);
+            }
+            other => panic!("{other:?}"),
+        }
+        // the evicted worker's current-gen PA is refused with an Evict notice
+        let acts = sw.handle(1, &pa(0, 1, &[5]).with_gen(1));
+        assert_eq!(sw.stats.stale_gen, 2);
+        match &acts[0] {
+            Action::Unicast(dst, out) => {
+                assert_eq!(*dst, 1);
+                assert_eq!(out.ctrl, Ctrl::Evict);
+                assert_eq!(out.bm, 1 << 1);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejoin_readmits_and_bumps() {
+        let mut sw = P4Switch::new(1, 2, 1);
+        sw.handle(3, &Packet::evict(1 << 1, 0));
+        assert_eq!(sw.members(), 0b01);
+        // worker 1 comes back: Join from a non-member re-admits it
+        let acts = sw.handle(1, &Packet::join(1, 1));
+        assert_eq!(sw.members(), 0b11);
+        assert_eq!(sw.generation(), 2);
+        assert_eq!(sw.stats.rejoins, 1);
+        match &acts[0] {
+            Action::Multicast(out) => assert_eq!((out.ctrl, out.gen), (Ctrl::Join, 2)),
+            other => panic!("{other:?}"),
+        }
+        // both members aggregate again at the new generation
+        drive(&mut sw, pa(0, 0, &[1]).with_gen(2));
+        let acts = drive(&mut sw, pa(0, 1, &[2]).with_gen(2));
+        assert_eq!(acts.len(), 1, "full membership completes again");
+    }
+
+    #[test]
+    fn member_join_probe_is_answered_heartbeat_is_silent() {
+        let mut sw = P4Switch::new(1, 2, 1).with_generation(5);
+        assert_eq!(sw.generation(), 5);
+        // stale probe -> unicast answer with the authoritative gen
+        let acts = sw.handle(0, &Packet::join(0, 3));
+        match &acts[0] {
+            Action::Unicast(dst, out) => {
+                assert_eq!(*dst, 0);
+                assert_eq!(out.gen, 5);
+            }
+            other => panic!("{other:?}"),
+        }
+        // current-gen heartbeat -> no traffic
+        assert!(sw.handle(0, &Packet::join(0, 5)).is_empty());
+    }
+
+    #[test]
+    fn leave_departs_gracefully() {
+        let mut sw = P4Switch::new(1, 3, 1);
+        let acts = sw.handle(2, &Packet::leave(2, 0));
+        assert_eq!(sw.members(), 0b011);
+        assert_eq!(sw.generation(), 1);
+        assert_eq!(sw.stats.leaves, 1);
+        assert_eq!(acts.len(), 1);
+        // duplicate leave is silent
+        assert!(sw.handle(2, &Packet::leave(2, 1)).is_empty());
+        assert_eq!(sw.generation(), 1);
     }
 }

@@ -16,16 +16,20 @@
 //!
 //! Pinning policy (documented, deliberately simple):
 //!
-//! * each [`crate::engine::EngineRunner`] pool thread pins to its
-//!   thread index — on the single-worker scaling benches this maps
-//!   engine chunks 1:1 onto allowed cores;
+//! * each [`crate::engine::EngineRunner`] pool thread pins to
+//!   `core_base + t` (its thread index offset by the runner's core
+//!   base) — on the single-worker scaling benches this maps engine
+//!   chunks 1:1 onto allowed cores;
+//! * multi-worker in-process runs stripe workers across cores via
+//!   `cluster.core_offset`: worker `w` passes `w * core_offset` as the
+//!   base, so with `core_offset = engine_threads` workers own disjoint
+//!   core ranges instead of colliding on `0..T`. The default offset 0
+//!   keeps the historical shared layout;
 //! * the switch thread ([`crate::switch::runner::spawn`]) pins to the
 //!   **last** allowed core ([`last_core`]), keeping the fan-in point
 //!   off the engine cores.
 //!
-//! Multi-worker in-process runs share the core space (every worker's
-//! thread `t` lands on logical core `t`); per-worker offsets and
-//! NUMA-local shard placement are the remaining roadmap slices.
+//! NUMA-local shard placement is the remaining roadmap slice.
 
 /// Logical index of the last available core — the switch thread's home
 /// (see the module docs; [`pin_current`] maps it into the allowed set).

@@ -22,9 +22,31 @@
 //! references it — checked via `Arc::get_mut`. In steady state the
 //! client therefore sends without allocating, and retransmissions clone
 //! refcounts, not vectors.
+//!
+//! # Generations and resync
+//!
+//! Every outgoing packet is stamped with the client's **generation**
+//! (the membership epoch; the switch is the authority). Incoming
+//! traffic with a *higher* generation — an FA, a confirm, an eviction
+//! notice, a resync nudge — means the membership changed under us:
+//! the client adopts the new generation, **aborts every in-flight
+//! operation** (their rounds can never complete — the switch reset its
+//! slots), recycles their payload buffers, and surfaces a single
+//! [`Event::Generation`] so the pipeline drains its ring instead of
+//! retransmitting dead rounds forever. Traffic with a *lower*
+//! generation is a stale duplicate and is dropped (`stale_gen`). An
+//! `Evict` notice whose mask includes this worker additionally marks
+//! the bump `evicted` — the worker was removed, not merely
+//! desynchronized. The pending bump is readable via
+//! [`AggClient::interrupted`] / [`AggClient::take_bump`].
+//!
+//! With [`AggClient::enable_heartbeat`], every [`AggClient::poll`]
+//! opportunistically sends a `Join` heartbeat to the supervisor when
+//! the interval elapsed — liveness flows as long as the worker pumps
+//! the network, even while wedged in a drain loop.
 
 use crate::net::{NodeId, Transport};
-use crate::protocol::Packet;
+use crate::protocol::{Ctrl, Packet};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -57,6 +79,22 @@ pub struct AggStats {
     pub dup_fa: u64,
     pub confirms: u64,
     pub stale: u64,
+    /// Lower-generation packets dropped (late duplicates of a dead
+    /// membership; never applied).
+    pub stale_gen: u64,
+    /// Generation bumps adopted (each aborts the in-flight window).
+    pub resyncs: u64,
+    /// Heartbeat `Join`s sent to the supervisor.
+    pub heartbeats: u64,
+}
+
+/// A generation bump observed in incoming traffic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GenBump {
+    /// The generation adopted.
+    pub gen: u32,
+    /// The bump carried an eviction notice naming this worker.
+    pub evicted: bool,
 }
 
 /// Events surfaced to the training pipeline.
@@ -67,6 +105,17 @@ pub enum Event {
     Fa { seq: u16, payload: Arc<[i32]> },
     /// The switch confirmed all ACKs; the operation fully retired.
     SlotFreed { seq: u16 },
+    /// The cluster generation changed: every in-flight operation was
+    /// aborted; the pipeline must drain its ring and resynchronize.
+    Generation(GenBump),
+}
+
+/// Heartbeat configuration (supervisor liveness signal).
+#[derive(Debug)]
+struct Heartbeat {
+    node: NodeId,
+    every: Duration,
+    last: Instant,
 }
 
 /// Worker-side aggregation client (paper Algorithm 3).
@@ -83,6 +132,13 @@ pub struct AggClient<T: Transport> {
     /// Next round's sequence number (wraps through the 64K space).
     next_seq: u16,
     timeout: Duration,
+    /// Cluster generation stamped on every send (see the module docs).
+    gen: u32,
+    /// Unconsumed generation bump (set on adoption, cleared by
+    /// [`AggClient::take_bump`]).
+    bump: Option<GenBump>,
+    /// Optional supervisor heartbeat (see the module docs).
+    hb: Option<Heartbeat>,
     pub stats: AggStats,
 }
 
@@ -99,8 +155,56 @@ impl<T: Transport> AggClient<T> {
             pool: Vec::with_capacity(window),
             next_seq: 0,
             timeout,
+            gen: 0,
+            bump: None,
+            hb: None,
             stats: AggStats::default(),
         }
+    }
+
+    /// Start at a non-zero generation (a trainer resuming after a
+    /// membership change).
+    pub fn with_generation(mut self, gen: u32) -> Self {
+        self.gen = gen;
+        self
+    }
+
+    /// The generation currently stamped on outgoing packets.
+    pub fn generation(&self) -> u32 {
+        self.gen
+    }
+
+    /// Send a `Join` heartbeat to `node` whenever `every` has elapsed
+    /// at a [`AggClient::poll`] boundary (liveness for the supervisor's
+    /// silence watchdog).
+    pub fn enable_heartbeat(&mut self, node: NodeId, every: Duration) {
+        self.hb = Some(Heartbeat { node, every, last: Instant::now() });
+    }
+
+    /// An unconsumed generation bump is pending: the in-flight window
+    /// was aborted and the pipeline must drain before continuing.
+    pub fn interrupted(&self) -> bool {
+        self.bump.is_some()
+    }
+
+    /// Consume the pending generation bump, if any.
+    pub fn take_bump(&mut self) -> Option<GenBump> {
+        self.bump.take()
+    }
+
+    /// Graceful departure notice to `node` (the supervisor, at worker
+    /// exit; or the switch, to shrink the membership in place).
+    pub fn send_leave(&mut self, node: NodeId) {
+        let pkt = Packet::leave(self.worker, self.gen);
+        self.transport.send(node, &pkt);
+    }
+
+    /// Deliberate rejoin announce to the switch: a recovered worker
+    /// asks to be re-admitted (the switch bumps the generation and
+    /// multicasts the new membership).
+    pub fn send_rejoin(&mut self) {
+        let pkt = Packet::join(self.worker, self.gen);
+        self.transport.send(self.server, &pkt);
     }
 
     /// Worker index (bit position in `bm`).
@@ -148,14 +252,16 @@ impl<T: Transport> AggClient<T> {
 
     /// Alg. 3 `send pa_pkt`: claim the next round and send. Returns the
     /// seq, or `None` when the window is full (backpressure: the
-    /// pipeline must pump before issuing more).
+    /// pipeline must pump before issuing more) or a generation bump is
+    /// pending (the caller must drain and resync first — sending would
+    /// spawn orphan rounds at the new generation).
     pub fn try_send_pa(&mut self, payload: &[i32]) -> Option<u16> {
-        if self.inflight.len() >= self.window {
+        if self.inflight.len() >= self.window || self.interrupted() {
             return None;
         }
         let seq = self.next_seq;
         self.next_seq = self.next_seq.wrapping_add(1);
-        let pkt = Packet::pa(seq, self.worker, self.pooled_payload(payload));
+        let pkt = Packet::pa(seq, self.worker, self.pooled_payload(payload)).with_gen(self.gen);
         self.transport.send(self.server, &pkt);
         self.stats.pa_sent += 1;
         self.inflight
@@ -168,6 +274,7 @@ impl<T: Transport> AggClient<T> {
     pub fn poll(&mut self, budget: Duration) -> Option<Event> {
         let deadline = Instant::now() + budget;
         loop {
+            self.maybe_heartbeat();
             self.fire_expired_timers();
             let now = Instant::now();
             if now >= deadline {
@@ -202,9 +309,15 @@ impl<T: Transport> AggClient<T> {
 
     /// Blocking AllReduce convenience (non-pipelined callers):
     /// sends PA, pumps until the FA for that round arrives. Copies the
-    /// result out — the pipeline's zero-copy path is `poll`.
+    /// result out — the pipeline's zero-copy path is `poll`. If a
+    /// generation bump lands mid-operation the round is dead: the call
+    /// bails out returning the *input* unchanged, with
+    /// [`AggClient::interrupted`] set for the caller to inspect.
     pub fn allreduce(&mut self, payload: &[i32]) -> Vec<i32> {
         let seq = loop {
+            if self.interrupted() {
+                return payload.to_vec();
+            }
             if let Some(seq) = self.try_send_pa(payload) {
                 break seq;
             }
@@ -214,6 +327,7 @@ impl<T: Transport> AggClient<T> {
         loop {
             match self.poll(Duration::from_millis(100)) {
                 Some(Event::Fa { seq: s, payload }) if s == seq => return payload.to_vec(),
+                Some(Event::Generation(_)) => return payload.to_vec(),
                 Some(_) => continue,
                 None => continue,
             }
@@ -231,6 +345,28 @@ impl<T: Transport> AggClient<T> {
             }
         }
         t.saturating_duration_since(now).max(Duration::from_micros(1))
+    }
+
+    /// Opportunistic supervisor heartbeat (see the module docs).
+    fn maybe_heartbeat(&mut self) {
+        let Some(hb) = &self.hb else { return };
+        if hb.last.elapsed() < hb.every {
+            return;
+        }
+        self.heartbeat_now();
+    }
+
+    /// Force an immediate heartbeat (the worker's startup announce —
+    /// it starts the supervisor's grace window from real liveness,
+    /// before any long data-prep work). No-op when heartbeats are
+    /// disabled.
+    pub fn heartbeat_now(&mut self) {
+        let Some(hb) = &mut self.hb else { return };
+        hb.last = Instant::now();
+        let node = hb.node;
+        let pkt = Packet::join(self.worker, self.gen);
+        self.transport.send(node, &pkt);
+        self.stats.heartbeats += 1;
     }
 
     /// Alg. 3 `upon timeout`: retransmit and re-arm with backoff.
@@ -252,8 +388,45 @@ impl<T: Transport> AggClient<T> {
         }
     }
 
-    /// Alg. 3 `receive pkt`.
+    /// Adopt a new generation: abort the whole in-flight window (those
+    /// rounds died with the old membership), recycle the PA buffers,
+    /// and record the pending bump for the pipeline.
+    fn adopt_generation(&mut self, gen: u32, evicted: bool) -> Event {
+        self.gen = gen;
+        while let Some((_, phase)) = self.inflight.pop() {
+            if let Phase::AwaitFa { pkt, .. } = phase {
+                self.recycle(pkt.payload);
+            }
+        }
+        self.stats.resyncs += 1;
+        // A later bump supersedes an unconsumed earlier one, but an
+        // eviction flag is sticky until taken.
+        let bump = GenBump { gen, evicted: evicted || self.evicted() };
+        self.bump = Some(bump);
+        Event::Generation(bump)
+    }
+
+    /// An unconsumed bump says this worker was evicted.
+    fn evicted(&self) -> bool {
+        self.bump.is_some_and(|b| b.evicted)
+    }
+
+    /// Alg. 3 `receive pkt`, extended with the generation checks.
     fn dispatch(&mut self, _src: NodeId, pkt: Packet) -> Option<Event> {
+        let evicts_us = pkt.ctrl == Ctrl::Evict && (pkt.bm >> self.worker) & 1 == 1;
+        if pkt.gen > self.gen || (evicts_us && pkt.gen == self.gen && !self.evicted()) {
+            return Some(self.adopt_generation(pkt.gen.max(self.gen), evicts_us));
+        }
+        if pkt.gen < self.gen {
+            // A dead membership's traffic: never applied.
+            self.stats.stale_gen += 1;
+            return None;
+        }
+        if pkt.ctrl != Ctrl::Data {
+            // Current-generation control chatter (a duplicate notice, a
+            // heartbeat echo): nothing to do.
+            return None;
+        }
         let Some(idx) = self.find(pkt.seq) else {
             // FA/confirm for a round we already retired (duplicate) or
             // never issued (stale): ignore.
@@ -266,7 +439,7 @@ impl<T: Transport> AggClient<T> {
                 Phase::AwaitFa { .. } => {
                     // cancel_timer implicit; send ACK, arm ACK timer
                     // (Alg. 3 lines 20-24).
-                    let ack = Packet::ack(pkt.seq, self.worker);
+                    let ack = Packet::ack(pkt.seq, self.worker).with_gen(self.gen);
                     self.transport.send(self.server, &ack);
                     self.stats.acks_sent += 1;
                     self.stats.fa_received += 1;
@@ -466,11 +639,44 @@ mod tests {
         let mut fake_switch = eps.pop().unwrap();
         let mut c = AggClient::new(eps.pop().unwrap(), 1, 0, 4, Duration::from_secs(10));
         // unsolicited FA for a round never issued
-        fake_switch.send(0, &Packet { is_agg: true, acked: true, seq: 2, bm: 0, payload: vec![9].into() });
+        fake_switch.send(
+            0,
+            &Packet {
+                is_agg: true,
+                acked: true,
+                ctrl: Ctrl::Data,
+                seq: 2,
+                bm: 0,
+                gen: 0,
+                payload: vec![9].into(),
+            },
+        );
         // confirm for a round never issued
-        fake_switch.send(0, &Packet { is_agg: false, acked: true, seq: 3, bm: 0, payload: Vec::new().into() });
+        fake_switch.send(
+            0,
+            &Packet {
+                is_agg: false,
+                acked: true,
+                ctrl: Ctrl::Data,
+                seq: 3,
+                bm: 0,
+                gen: 0,
+                payload: Vec::new().into(),
+            },
+        );
         // far-future seq
-        fake_switch.send(0, &Packet { is_agg: true, acked: true, seq: 999, bm: 0, payload: Vec::new().into() });
+        fake_switch.send(
+            0,
+            &Packet {
+                is_agg: true,
+                acked: true,
+                ctrl: Ctrl::Data,
+                seq: 999,
+                bm: 0,
+                gen: 0,
+                payload: Vec::new().into(),
+            },
+        );
         for _ in 0..3 {
             assert!(c.poll(Duration::from_millis(20)).is_none());
         }
@@ -511,5 +717,130 @@ mod tests {
         }
         assert!(!c.pool.is_empty(), "retired PA buffers must return to the pool");
         assert!(c.pool.len() <= 2, "pool bounded by the window");
+    }
+
+    #[test]
+    fn generation_bump_aborts_the_inflight_window() {
+        let net = NetConfig { latency_ns: 0, jitter_ns: 0, ..NetConfig::default() };
+        let mut eps = SimNet::build(2, &net);
+        let mut fake_switch = eps.pop().unwrap();
+        let mut c = AggClient::new(eps.pop().unwrap(), 1, 0, 4, Duration::from_secs(10));
+        assert!(c.try_send_pa(&[1, 2]).is_some());
+        assert!(c.try_send_pa(&[3, 4]).is_some());
+        assert_eq!(c.in_flight(), 2);
+        // a higher-generation notice lands: the window dies with the
+        // old membership
+        fake_switch.send(0, &Packet::join(0, 3));
+        let ev = loop {
+            if let Some(ev) = c.poll(Duration::from_millis(20)) {
+                break ev;
+            }
+        };
+        assert_eq!(ev, Event::Generation(GenBump { gen: 3, evicted: false }));
+        assert_eq!(c.in_flight(), 0, "in-flight operations aborted");
+        assert_eq!(c.generation(), 3);
+        assert!(c.interrupted());
+        assert_eq!(c.stats.resyncs, 1);
+        assert!(!c.pool.is_empty(), "aborted PA buffers recycled");
+        assert_eq!(c.take_bump(), Some(GenBump { gen: 3, evicted: false }));
+        assert!(!c.interrupted());
+        // new sends carry the adopted generation
+        assert!(c.try_send_pa(&[5]).is_some());
+    }
+
+    #[test]
+    fn eviction_notice_marks_the_bump_evicted() {
+        let net = NetConfig { latency_ns: 0, jitter_ns: 0, ..NetConfig::default() };
+        let mut eps = SimNet::build(2, &net);
+        let mut fake_switch = eps.pop().unwrap();
+        let mut c = AggClient::new(eps.pop().unwrap(), 1, 0, 4, Duration::from_secs(10));
+        fake_switch.send(0, &Packet::evict(0b01, 1));
+        let ev = loop {
+            if let Some(ev) = c.poll(Duration::from_millis(20)) {
+                break ev;
+            }
+        };
+        assert_eq!(ev, Event::Generation(GenBump { gen: 1, evicted: true }));
+        // an eviction of a *different* worker at a higher gen is a
+        // plain resync for us — but our own eviction flag is sticky
+        // until taken
+        fake_switch.send(0, &Packet::evict(0b10, 2));
+        let ev = loop {
+            if let Some(ev) = c.poll(Duration::from_millis(20)) {
+                break ev;
+            }
+        };
+        assert_eq!(ev, Event::Generation(GenBump { gen: 2, evicted: true }));
+    }
+
+    #[test]
+    fn lower_generation_traffic_is_never_applied() {
+        let net = NetConfig { latency_ns: 0, jitter_ns: 0, ..NetConfig::default() };
+        let mut eps = SimNet::build(2, &net);
+        let mut fake_switch = eps.pop().unwrap();
+        let mut c = AggClient::new(eps.pop().unwrap(), 1, 0, 4, Duration::from_secs(10)).with_generation(5);
+        assert!(c.try_send_pa(&[1]).is_some());
+        // a gen-4 "FA" for our seq 0: a dead membership's packet
+        fake_switch.send(
+            0,
+            &Packet {
+                is_agg: true,
+                acked: true,
+                ctrl: Ctrl::Data,
+                seq: 0,
+                bm: 0b11,
+                gen: 4,
+                payload: vec![99].into(),
+            },
+        );
+        assert!(c.poll(Duration::from_millis(20)).is_none());
+        assert_eq!(c.stats.stale_gen, 1);
+        assert_eq!(c.stats.fa_received, 0, "stale-generation FA never applied");
+        assert_eq!(c.in_flight(), 1, "operation still pending");
+    }
+
+    #[test]
+    fn heartbeats_flow_while_polling() {
+        let net = NetConfig { latency_ns: 0, jitter_ns: 0, ..NetConfig::default() };
+        let mut eps = SimNet::build(2, &net);
+        let mut supervisor = eps.pop().unwrap();
+        let mut c = AggClient::new(eps.pop().unwrap(), 1, 0, 4, Duration::from_secs(10));
+        c.enable_heartbeat(1, Duration::from_millis(5));
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while c.stats.heartbeats < 3 && Instant::now() < deadline {
+            c.poll(Duration::from_millis(5));
+        }
+        assert!(c.stats.heartbeats >= 3, "heartbeats must keep flowing");
+        let (_, pkt) = supervisor.recv_timeout(Duration::from_secs(1)).expect("heartbeat");
+        assert_eq!(pkt.ctrl, Ctrl::Join);
+        assert_eq!(pkt.bm, 1 << 0);
+    }
+
+    #[test]
+    fn resync_against_a_real_switch_after_eviction() {
+        // Two workers + a switch; worker 1 is evicted mid-flight. The
+        // survivor's wedged round aborts via the notice and a fresh
+        // single-member round completes at the new generation.
+        let net = NetConfig { latency_ns: 0, jitter_ns: 0, ..NetConfig::default() };
+        let mut eps = SimNet::build(4, &net);
+        let mut supervisor = eps.pop().unwrap(); // node 3
+        let sw_ep = eps.pop().unwrap(); // node 2
+        let _other = eps.pop().unwrap(); // node 1 stays silent (the "crash")
+        let _h = runner::spawn(P4Switch::new(SEQ_SPACE, 2, 1), sw_ep);
+        let mut c = AggClient::new(eps.pop().unwrap(), 2, 0, 4, Duration::from_millis(50));
+        assert!(c.try_send_pa(&[7]).is_some());
+        // the round can't complete (worker 1 silent); evict worker 1
+        supervisor.send(2, &Packet::evict(1 << 1, 0));
+        let bump = loop {
+            match c.poll(Duration::from_millis(20)) {
+                Some(Event::Generation(b)) => break b,
+                _ => continue,
+            }
+        };
+        assert_eq!(bump, GenBump { gen: 1, evicted: false });
+        assert_eq!(c.in_flight(), 0);
+        c.take_bump();
+        // survivor-only membership: an allreduce now completes alone
+        assert_eq!(c.allreduce(&[42]), vec![42]);
     }
 }

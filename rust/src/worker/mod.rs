@@ -19,4 +19,4 @@
 
 pub mod agg_client;
 
-pub use agg_client::{AggClient, AggStats, Event};
+pub use agg_client::{AggClient, AggStats, Event, GenBump};

@@ -134,10 +134,13 @@ fn engine_thread_pool_survives_hostile_network() {
 
 #[test]
 fn pipeline_depth_one_is_bitwise_identical_across_engine_threads() {
-    // Depth 1 must be the pre-overlap schedule bit for bit. A single
-    // worker on a clean zero-latency net is deterministic (its FAs
-    // arrive in seq order and switch addition is integer), so run-vs-run
-    // bitwise equality here is exactly "same code path".
+    // Depth 1 must be the pre-overlap schedule bit for bit — over the
+    // generation-tagged wire format (every packet now carries the
+    // membership epoch; with no failures injected the tag is a
+    // constant and must change nothing). A single worker on a clean
+    // zero-latency net is deterministic (its FAs arrive in seq order
+    // and switch addition is integer), so run-vs-run bitwise equality
+    // here is exactly "same code path".
     let ds = synth::separable_sparse(128, 192, Loss::LogReg, 0.0, 0.2, 73);
     for threads in [1usize, 4] {
         let mut cfg = base_cfg(1, Loss::LogReg, 1.0);
@@ -157,6 +160,12 @@ fn pipeline_depth_one_is_bitwise_identical_across_engine_threads() {
         assert_eq!(explicit.pipeline.deferred_rounds, 0);
         assert_eq!(explicit.pipeline.deferred_fas, 0);
         assert_eq!(explicit.pipeline.overlapped_backwards, 0);
+        // ...and with no failures injected, the membership machinery
+        // stays dormant: no resyncs, no stale-generation drops, no
+        // evictions/restores (the fault counters are all zero).
+        assert_eq!(explicit.fault, Default::default(), "threads={threads}: {:?}", explicit.fault);
+        assert_eq!(explicit.agg.resyncs, 0);
+        assert_eq!(explicit.agg.stale_gen, 0);
     }
 }
 

@@ -1,0 +1,198 @@
+//! Crash, eviction, and checkpoint/resume — the generation-tagged
+//! membership machinery end to end: a worker killed mid-epoch is
+//! evicted within the silence timeout, the survivors resynchronize and
+//! resume from the last round-consistent checkpoint, and the
+//! no-failure path is bitwise untouched.
+
+use p4sgd::config::SystemConfig;
+use p4sgd::coordinator::{dp, mp};
+use p4sgd::data::synth;
+use p4sgd::engine::{Compute, NativeCompute};
+use p4sgd::glm::Loss;
+use std::path::PathBuf;
+
+fn native(_w: usize, _e: usize) -> Box<dyn Compute> {
+    Box::new(NativeCompute)
+}
+
+fn base_cfg(workers: usize) -> SystemConfig {
+    let mut c = SystemConfig::default();
+    c.cluster.workers = workers;
+    c.cluster.engines = 2;
+    c.cluster.slots = 8;
+    c.train.loss = Loss::LogReg;
+    c.train.lr = 1.0;
+    c.train.batch = 32;
+    c.train.micro_batch = 8;
+    c.train.epochs = 6;
+    c.net.latency_ns = 0;
+    c.net.jitter_ns = 0;
+    c.net.timeout_us = 3000;
+    c
+}
+
+/// Unique per-test checkpoint directory (removed before and after).
+fn ckpt_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("p4sgd-ft-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn kill_one_worker_mid_epoch_survivors_converge() {
+    // Three workers at depth 2; worker 2 crashes at 50% of the epochs,
+    // mid-epoch. The supervisor must evict it within the silence
+    // timeout, the survivors must resync (never applying a
+    // stale-generation FA — their windows abort instead), training
+    // must resume from the epoch-2 checkpoint over the re-partitioned
+    // survivors, and the final loss must meet the depth-2
+    // hostile-network tolerance. No hang anywhere.
+    let ds = synth::separable_sparse(192, 256, Loss::LogReg, 0.0, 0.2, 101);
+    let dir = ckpt_dir("kill");
+    let mut cfg = base_cfg(3);
+    cfg.cluster.pipeline_depth = 2;
+    cfg.cluster.worker_timeout_ms = 400;
+    cfg.cluster.checkpoint_interval = 2;
+    cfg.cluster.checkpoint_dir = Some(dir.to_string_lossy().into_owned());
+    cfg.fault.kill_worker = Some(2);
+    cfg.fault.kill_at_frac = 0.5;
+    let rep = mp::train_mp(&cfg, &ds, &native);
+
+    assert_eq!(rep.fault.evictions, 1, "{:?}", rep.fault);
+    assert_eq!(rep.fault.rejoins, 0, "{:?}", rep.fault);
+    assert!(
+        rep.fault.resyncs >= 2,
+        "both survivors must abort their windows on the bump: {:?}",
+        rep.fault
+    );
+    // The epoch-2 checkpoint existed before the epoch-3 kill: the
+    // restart restored it rather than training from scratch.
+    assert_eq!(rep.fault.restores, 1, "{:?}", rep.fault);
+    assert!(rep.fault.checkpoints >= 1, "{:?}", rep.fault);
+    assert!(rep.fault.checkpoint_bytes > 0, "{:?}", rep.fault);
+    // Full curve: restored prefix + the survivors' epochs.
+    assert_eq!(rep.loss_per_epoch.len(), cfg.train.epochs);
+    assert!(rep.loss_per_epoch.iter().all(|l| l.is_finite()));
+    let first = rep.loss_per_epoch[0];
+    let last = *rep.loss_per_epoch.last().unwrap();
+    assert!(last < 0.85 * first, "survivors must converge: {:?}", rep.loss_per_epoch);
+    // The survivor model covers the whole feature space again.
+    assert_eq!(rep.model.len(), ds.d);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn killed_worker_rejoins_on_the_restart_attempt() {
+    // Same crash, but with cluster.rejoin: the restart re-admits the
+    // dead worker (full membership again) and counts the rejoin.
+    let ds = synth::separable_sparse(192, 256, Loss::LogReg, 0.0, 0.2, 103);
+    let dir = ckpt_dir("rejoin");
+    let mut cfg = base_cfg(3);
+    cfg.cluster.worker_timeout_ms = 400;
+    cfg.cluster.checkpoint_interval = 2;
+    cfg.cluster.checkpoint_dir = Some(dir.to_string_lossy().into_owned());
+    cfg.cluster.rejoin = true;
+    cfg.fault.kill_worker = Some(1);
+    cfg.fault.kill_at_frac = 0.5;
+    let rep = mp::train_mp(&cfg, &ds, &native);
+
+    assert_eq!(rep.fault.evictions, 1, "{:?}", rep.fault);
+    assert_eq!(rep.fault.rejoins, 1, "{:?}", rep.fault);
+    assert_eq!(rep.loss_per_epoch.len(), cfg.train.epochs);
+    let first = rep.loss_per_epoch[0];
+    let last = *rep.loss_per_epoch.last().unwrap();
+    assert!(last < 0.85 * first, "{:?}", rep.loss_per_epoch);
+    assert_eq!(rep.model.len(), ds.d);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn checkpoint_restore_train_is_bitwise_identical_at_depth_one() {
+    // The resume contract: interrupting training at a checkpoint and
+    // resuming must reproduce uninterrupted training bit for bit at
+    // depth 1 (deterministic schedule, fixed-point wire, bitwise model
+    // serialization). Single worker on a clean zero-latency net — the
+    // same conditions under which the depth-1 invariance test holds.
+    let ds = synth::separable_sparse(128, 192, Loss::LogReg, 0.0, 0.2, 107);
+    let dir = ckpt_dir("bitwise");
+    let mut cfg = base_cfg(1);
+    cfg.cluster.checkpoint_interval = 2;
+    cfg.cluster.checkpoint_dir = Some(dir.to_string_lossy().into_owned());
+
+    // Uninterrupted run, checkpointing along the way (epochs 2 and 4).
+    let full = mp::train_mp(&cfg, &ds, &native);
+    assert_eq!(full.fault.checkpoints, 2, "{:?}", full.fault);
+    assert_eq!(full.fault.restores, 0);
+
+    // "Crash after epoch 4": resume from the latest checkpoint and run
+    // the remaining epochs.
+    cfg.cluster.resume = true;
+    let resumed = mp::train_mp(&cfg, &ds, &native);
+    assert_eq!(resumed.fault.restores, 1, "{:?}", resumed.fault);
+
+    assert_eq!(resumed.loss_per_epoch.len(), full.loss_per_epoch.len());
+    for (e, (a, b)) in full.loss_per_epoch.iter().zip(&resumed.loss_per_epoch).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "epoch {e}: {a} vs {b}");
+    }
+    assert_eq!(full.model.len(), resumed.model.len());
+    for (j, (a, b)) in full.model.iter().zip(&resumed.model).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "model[{j}]: {a} vs {b}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn supervision_and_checkpointing_do_not_change_depth1_numerics() {
+    // The no-failure guarantee: heartbeats, the supervisor endpoint,
+    // the generation-tagged wire, and checkpoint writes must leave the
+    // depth-1 training output bitwise identical to a bare run — and
+    // the fault machinery must stay dormant.
+    let ds = synth::separable_sparse(128, 192, Loss::LogReg, 0.0, 0.2, 109);
+    let bare = mp::train_mp(&base_cfg(1), &ds, &native);
+    assert_eq!(bare.fault, Default::default(), "bare run must not touch fault machinery");
+
+    let dir = ckpt_dir("dormant");
+    let mut cfg = base_cfg(1);
+    cfg.cluster.worker_timeout_ms = 5_000; // supervised, never triggered
+    cfg.cluster.checkpoint_interval = 2;
+    cfg.cluster.checkpoint_dir = Some(dir.to_string_lossy().into_owned());
+    let supervised = mp::train_mp(&cfg, &ds, &native);
+
+    assert_eq!(supervised.fault.evictions, 0);
+    assert_eq!(supervised.fault.resyncs, 0);
+    assert_eq!(supervised.fault.stale_gen, 0, "no stale-generation packet on a clean run");
+    assert!(supervised.agg.heartbeats > 0, "supervision must actually heartbeat");
+    for (e, (a, b)) in bare.loss_per_epoch.iter().zip(&supervised.loss_per_epoch).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "epoch {e}: {a} vs {b}");
+    }
+    for (a, b) in bare.model.iter().zip(&supervised.model) {
+        assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn dp_kill_one_worker_survivor_converges() {
+    // The DP mirror: 2 replicas, worker 1 crashes; the survivor is
+    // re-partitioned onto the full sample range (B stays divisible)
+    // and resumes from the replica checkpoint.
+    let ds = synth::separable_sparse(256, 64, Loss::LogReg, 0.0, 0.1, 113);
+    let dir = ckpt_dir("dp-kill");
+    let mut cfg = base_cfg(2);
+    cfg.cluster.slots = 16;
+    cfg.cluster.worker_timeout_ms = 400;
+    cfg.cluster.checkpoint_interval = 2;
+    cfg.cluster.checkpoint_dir = Some(dir.to_string_lossy().into_owned());
+    cfg.fault.kill_worker = Some(1);
+    cfg.fault.kill_at_frac = 0.5;
+    let rep = dp::train_dp(&cfg, &ds, &native);
+
+    assert_eq!(rep.fault.evictions, 1, "{:?}", rep.fault);
+    assert_eq!(rep.fault.restores, 1, "{:?}", rep.fault);
+    assert_eq!(rep.loss_per_epoch.len(), cfg.train.epochs);
+    let first = rep.loss_per_epoch[0];
+    let last = *rep.loss_per_epoch.last().unwrap();
+    assert!(last < 0.85 * first, "{:?}", rep.loss_per_epoch);
+    assert_eq!(rep.model.len(), ds.d);
+    let _ = std::fs::remove_dir_all(&dir);
+}
