@@ -165,7 +165,10 @@ impl Checkpoint {
         format!("ckpt-{epoch:06}.bin")
     }
 
-    /// Write `dir/ckpt-<epoch>.bin` atomically (temp file + rename);
+    /// Write `dir/ckpt-<epoch>.bin` atomically **and durably**: the
+    /// temp file is fsynced before the rename (so the published name
+    /// can never point at torn data after a host crash) and the
+    /// directory is fsynced after it (so the rename itself survives);
     /// creates `dir` on demand. Returns the path and byte count.
     pub fn save(&self, dir: &Path) -> Result<SaveReceipt> {
         std::fs::create_dir_all(dir)
@@ -173,10 +176,17 @@ impl Checkpoint {
         let bytes = self.to_bytes();
         let path = dir.join(Self::file_name(self.epoch));
         let tmp = dir.join(format!(".{}.tmp", Self::file_name(self.epoch)));
-        std::fs::write(&tmp, &bytes)
-            .with_context(|| format!("writing checkpoint {}", tmp.display()))?;
+        {
+            use std::io::Write;
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating checkpoint {}", tmp.display()))?;
+            f.write_all(&bytes)
+                .with_context(|| format!("writing checkpoint {}", tmp.display()))?;
+            f.sync_all().with_context(|| format!("fsyncing checkpoint {}", tmp.display()))?;
+        }
         std::fs::rename(&tmp, &path)
             .with_context(|| format!("publishing checkpoint {}", path.display()))?;
+        sync_dir(dir)?;
         Ok(SaveReceipt { path, bytes: bytes.len() as u64 })
     }
 
@@ -187,6 +197,21 @@ impl Checkpoint {
         Self::from_bytes(&bytes)
             .with_context(|| format!("parsing checkpoint {}", path.display()))
     }
+}
+
+/// Fsync a directory so a rename inside it is on stable storage.
+/// Directory fds only open on Unix; elsewhere this is a best-effort
+/// no-op (Windows metadata journaling covers the rename).
+fn sync_dir(dir: &Path) -> Result<()> {
+    #[cfg(unix)]
+    {
+        let d = std::fs::File::open(dir)
+            .with_context(|| format!("opening checkpoint dir {}", dir.display()))?;
+        d.sync_all().with_context(|| format!("fsyncing checkpoint dir {}", dir.display()))?;
+    }
+    #[cfg(not(unix))]
+    let _ = dir;
+    Ok(())
 }
 
 /// The highest-epoch **valid** checkpoint under `dir`, or `None` when
@@ -289,6 +314,40 @@ mod tests {
         std::fs::write(dir.join("ckpt-000009.bin"), &bytes).unwrap();
         let got = latest(&dir).unwrap().expect("valid checkpoint remains");
         assert_eq!(got.epoch, 3, "corrupt higher-epoch file skipped");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn latest_survives_a_torn_rename() {
+        // A host crash can leave any mix of: an orphaned temp file, a
+        // published name holding torn (partially written) data, or a
+        // zero-length published name — all from a save that never
+        // reached the directory fsync. Recovery must step past every
+        // one of them to the newest checkpoint that validates.
+        let dir = tmpdir("torn");
+        sample(2).save(&dir).unwrap();
+        // Orphaned temp from a crash before the rename.
+        std::fs::write(dir.join(".ckpt-000004.bin.tmp"), b"partial").unwrap();
+        // Rename landed but the data blocks never did (torn file).
+        let torn = &sample(4).to_bytes()[..20];
+        std::fs::write(dir.join("ckpt-000004.bin"), torn).unwrap();
+        // Rename landed on a file whose data was lost entirely.
+        std::fs::write(dir.join("ckpt-000006.bin"), b"").unwrap();
+        let got = latest(&dir).unwrap().expect("the durable epoch-2 checkpoint survives");
+        assert_eq!(got.epoch, 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn save_replaces_same_epoch_and_leaves_no_temp() {
+        let dir = tmpdir("replace");
+        sample(3).save(&dir).unwrap();
+        sample(3).save(&dir).unwrap(); // idempotent re-publish
+        let names: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(names, vec!["ckpt-000003.bin"], "temp files must not linger: {names:?}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

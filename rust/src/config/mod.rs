@@ -82,6 +82,14 @@ pub struct ClusterConfig {
     /// all-workers-share-cores layout; set it to `engine_threads` to
     /// stripe workers across disjoint cores.
     pub core_offset: usize,
+    /// Mid-run scale-up: quiesce at this epoch boundary, admit
+    /// `join_workers` fresh workers (`Ctrl::Join`), re-partition the
+    /// data across the grown membership, ship the current model in
+    /// memory, and resume — no process restart. `None` (default)
+    /// disables scale-up. Counted in `FaultStats::scale_ups`.
+    pub join_epoch: Option<usize>,
+    /// Workers admitted at the `join_epoch` boundary (default 1).
+    pub join_workers: usize,
 }
 
 impl Default for ClusterConfig {
@@ -98,6 +106,8 @@ impl Default for ClusterConfig {
             resume: false,
             rejoin: false,
             core_offset: 0,
+            join_epoch: None,
+            join_workers: 1,
         }
     }
 }
@@ -153,6 +163,10 @@ pub struct NetConfig {
     /// Worker retransmission timeout, microseconds (paper Alg. 3 timer).
     pub timeout_us: u64,
     pub seed: u64,
+    /// Deterministic chaos model layered on the fabric (`[chaos]` in
+    /// TOML). Off by default — and when off the fabric's RNG stream is
+    /// untouched, so existing seeded runs stay bitwise identical.
+    pub chaos: ChaosConfig,
 }
 
 impl Default for NetConfig {
@@ -167,7 +181,43 @@ impl Default for NetConfig {
             reorder_prob: 0.0,
             timeout_us: 50,
             seed: 1,
+            chaos: ChaosConfig::default(),
         }
+    }
+}
+
+/// Per-endpoint straggler and delay-burst model for the simulated
+/// fabric: one designated slow worker whose frames take
+/// `straggler_factor` times the sampled latency, plus seeded bursts of
+/// extra delay hitting any frame. Every draw comes from the fabric's
+/// own PCG stream, so a failing run replays exactly under the same
+/// `net.seed`. Mirrored analytically in `timing::des`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChaosConfig {
+    /// Worker index whose frames are slowed; `None` = no straggler.
+    pub straggler: Option<usize>,
+    /// Latency multiplier applied to the straggler's frames (>= 1.0).
+    pub straggler_factor: f64,
+    /// Per-frame probability of starting a delay burst, in [0, 1).
+    pub burst_prob: f64,
+    /// Extra delay added to each frame inside a burst, ns.
+    pub burst_ns: u64,
+    /// Frames a burst lasts once started.
+    pub burst_len: u32,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        Self { straggler: None, straggler_factor: 1.0, burst_prob: 0.0, burst_ns: 0, burst_len: 0 }
+    }
+}
+
+impl ChaosConfig {
+    /// Whether any chaos behaviour is configured. Gates both the
+    /// fabric's passthrough fast path and its RNG draws: a disabled
+    /// chaos model consumes nothing from the stream.
+    pub fn enabled(&self) -> bool {
+        self.straggler.is_some() || self.burst_prob > 0.0
     }
 }
 
@@ -219,6 +269,8 @@ impl SystemConfig {
             "cluster.resume",
             "cluster.rejoin",
             "cluster.core_offset",
+            "cluster.join_epoch",
+            "cluster.join_workers",
             "fault.kill_worker",
             "fault.kill_at_frac",
             "train.loss",
@@ -234,6 +286,11 @@ impl SystemConfig {
             "net.reorder_prob",
             "net.timeout_us",
             "net.seed",
+            "chaos.straggler",
+            "chaos.straggler_factor",
+            "chaos.burst_prob",
+            "chaos.burst_ns",
+            "chaos.burst_len",
             "backend",
         ];
         for k in doc.keys() {
@@ -267,6 +324,12 @@ impl SystemConfig {
                 rejoin: doc.bool_or("cluster.rejoin", d.cluster.rejoin),
                 core_offset: doc.int_or("cluster.core_offset", d.cluster.core_offset as i64)
                     as usize,
+                join_epoch: match doc.int_or("cluster.join_epoch", -1) {
+                    n if n < 0 => None,
+                    n => Some(n as usize),
+                },
+                join_workers: doc.int_or("cluster.join_workers", d.cluster.join_workers as i64)
+                    as usize,
             },
             fault: FaultConfig {
                 kill_worker: match doc.int_or("fault.kill_worker", -1) {
@@ -294,6 +357,17 @@ impl SystemConfig {
                 reorder_prob: doc.float_or("net.reorder_prob", d.net.reorder_prob),
                 timeout_us: doc.int_or("net.timeout_us", d.net.timeout_us as i64) as u64,
                 seed: doc.int_or("net.seed", d.net.seed as i64) as u64,
+                chaos: ChaosConfig {
+                    straggler: match doc.int_or("chaos.straggler", -1) {
+                        n if n < 0 => None,
+                        n => Some(n as usize),
+                    },
+                    straggler_factor: doc
+                        .float_or("chaos.straggler_factor", d.net.chaos.straggler_factor),
+                    burst_prob: doc.float_or("chaos.burst_prob", d.net.chaos.burst_prob),
+                    burst_ns: doc.int_or("chaos.burst_ns", d.net.chaos.burst_ns as i64) as u64,
+                    burst_len: doc.int_or("chaos.burst_len", d.net.chaos.burst_len as i64) as u32,
+                },
             },
             backend: match doc.get("backend") {
                 None => None,
@@ -376,6 +450,33 @@ impl SystemConfig {
         }
         if !(0.0..=1.0).contains(&self.fault.kill_at_frac) {
             bail!("fault.kill_at_frac must be in [0, 1], got {}", self.fault.kill_at_frac);
+        }
+        if let Some(je) = c.join_epoch {
+            if je == 0 {
+                bail!("cluster.join_epoch must be >= 1 (the cluster quiesces *after* that epoch)");
+            }
+            if c.join_workers == 0 {
+                bail!("cluster.join_workers must be >= 1 when join_epoch is set");
+            }
+            if c.workers + c.join_workers > 32 {
+                bail!(
+                    "scale-up target {} + {} exceeds the 32-worker ceiling",
+                    c.workers,
+                    c.join_workers
+                );
+            }
+        }
+        let ch = &self.net.chaos;
+        if ch.straggler_factor < 1.0 {
+            bail!("chaos.straggler_factor must be >= 1.0, got {}", ch.straggler_factor);
+        }
+        if !(ch.burst_prob < 1.0 && ch.burst_prob >= 0.0) {
+            bail!("chaos.burst_prob must be in [0, 1), got {}", ch.burst_prob);
+        }
+        if let Some(s) = ch.straggler {
+            if s >= c.workers {
+                bail!("chaos.straggler {s} out of range (workers = {})", c.workers);
+            }
         }
         Ok(())
     }
@@ -534,6 +635,67 @@ mod tests {
         assert_eq!(cfg.cluster.core_offset, 4);
         assert_eq!(cfg.fault.kill_worker, Some(1));
         assert_eq!(cfg.fault.kill_at_frac, 0.5);
+    }
+
+    #[test]
+    fn chaos_and_scale_up_keys_parse_and_default_off() {
+        let d = SystemConfig::default();
+        assert!(!d.net.chaos.enabled(), "chaos off by default");
+        assert_eq!(d.cluster.join_epoch, None, "scale-up off by default");
+        assert_eq!(d.cluster.join_workers, 1);
+        let cfg = SystemConfig::from_toml(
+            r#"
+            [cluster]
+            join_epoch = 3
+            join_workers = 2
+            [chaos]
+            straggler = 1
+            straggler_factor = 4.0
+            burst_prob = 0.05
+            burst_ns = 20000
+            burst_len = 8
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.cluster.join_epoch, Some(3));
+        assert_eq!(cfg.cluster.join_workers, 2);
+        let ch = &cfg.net.chaos;
+        assert!(ch.enabled());
+        assert_eq!(ch.straggler, Some(1));
+        assert_eq!(ch.straggler_factor, 4.0);
+        assert_eq!(ch.burst_prob, 0.05);
+        assert_eq!(ch.burst_ns, 20_000);
+        assert_eq!(ch.burst_len, 8);
+    }
+
+    #[test]
+    fn chaos_and_scale_up_validation_bounds() {
+        // straggler must name an existing worker
+        let mut cfg = SystemConfig::default();
+        cfg.net.chaos.straggler = Some(99);
+        assert!(cfg.validate().is_err());
+        cfg.net.chaos.straggler = Some(1);
+        cfg.validate().unwrap();
+        // slow-down factor below 1 would be a speed-up
+        cfg.net.chaos.straggler_factor = 0.5;
+        assert!(cfg.validate().is_err());
+        cfg.net.chaos.straggler_factor = 1.0;
+        cfg.validate().unwrap();
+        // burst probability is a probability
+        cfg.net.chaos.burst_prob = 1.0;
+        assert!(cfg.validate().is_err());
+        // join_epoch 0 would quiesce before any training
+        let mut cfg = SystemConfig::default();
+        cfg.cluster.join_epoch = Some(0);
+        assert!(cfg.validate().is_err());
+        cfg.cluster.join_epoch = Some(2);
+        cfg.validate().unwrap();
+        // a scale-up may not blow past the worker ceiling
+        cfg.cluster.workers = 31;
+        cfg.cluster.join_workers = 2;
+        assert!(cfg.validate().is_err());
+        cfg.cluster.join_workers = 0;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -29,8 +29,7 @@
 //! (choose `B` accordingly, or enable `cluster.rejoin`).
 
 use super::supervisor::{self, CkptPart, CkptSink, SupervisorReport};
-use super::{compatible_ckpt, merge_agg, TrainReport, WorkerOutcome};
-use crate::checkpoint;
+use super::{Attempt, AttemptPlan, TrainReport, WorkerOutcome};
 use crate::config::SystemConfig;
 use crate::data::partition::horizontal;
 use crate::data::quantize::{pack_rows, LANE};
@@ -44,25 +43,23 @@ use crate::protocol::{from_fixed, to_fixed};
 use crate::switch::p4::P4Switch;
 use crate::switch::runner;
 use crate::util::round_up;
-use crate::worker::{AggClient, AggStats, Event};
-use std::path::{Path, PathBuf};
+use crate::worker::{AggClient, Event};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Gradient-chunk payload (elements per packet). The paper's DP system
 /// streams D gradients through the switch; chunking at 64 matches the
 /// SwitchML-era packet economy while reusing our slot machinery.
 pub const GRAD_CHUNK: usize = 64;
 
-/// One attempt's outcome (mirror of the MP trainer's).
-struct Attempt {
-    outcomes: Vec<WorkerOutcome>,
-    evicted: Vec<usize>,
-    generation: u32,
-}
-
 /// Train `ds` under data parallelism per `cfg`.
+///
+/// The whole membership lifecycle — resume, eviction, in-place resync,
+/// mid-run scale-up — lives in [`super::run_elastic`]; this function
+/// supplies the DP-specific pieces: `B` must split over the
+/// membership's `workers * MB`, and the final model is any replica
+/// (they are identical).
 pub fn train_dp(
     cfg: &SystemConfig,
     ds: &Dataset,
@@ -74,149 +71,59 @@ pub fn train_dp(
         t.batch % (t.micro_batch * cfg.cluster.workers) == 0,
         "B must split over workers*MB"
     );
-    let start = Instant::now();
-
-    let ckpt_dir = cfg.cluster.checkpoint_dir.as_ref().map(PathBuf::from);
-    let mut fault = FaultStats::default();
-    let mut members: Vec<usize> = (0..cfg.cluster.workers).collect();
-    let mut generation = 0u32;
-    let mut start_epoch = 0usize;
-    let mut model0: Option<Vec<f32>> = None;
-    let mut curve_prefix: Vec<f32> = Vec::new();
-    let mut kill_armed = cfg.fault.kill_worker.is_some();
-
-    if cfg.cluster.resume {
-        let dir = ckpt_dir.as_ref().expect("validated: resume requires checkpoint_dir");
-        let found = checkpoint::latest(dir).ok().flatten();
-        if let Some(ck) = found.and_then(|ck| compatible_ckpt(ck, ds.d, cfg.train.epochs)) {
-            start_epoch = ck.epoch;
-            generation = ck.generation;
-            curve_prefix = ck.loss_curve.clone();
-            model0 = Some(ck.model);
-            fault.restores += 1;
-        }
-    }
-
-    let mut pipeline = PipelineStats::default();
-    let mut agg = AggStats::default();
-    // Livelock guard, mirroring train_mp: restart attempts must make
-    // progress (membership shrinks or the restored epoch advances).
-    let mut stuck = 0usize;
-
-    loop {
-        let before = (members.len(), start_epoch);
-        let attempt = run_attempt(
-            cfg,
-            ds,
-            make_compute,
-            &members,
-            generation,
-            start_epoch,
-            model0.as_deref(),
-            kill_armed,
-            ckpt_dir.as_deref(),
-            &curve_prefix,
-            &mut fault,
-        );
-        for o in &attempt.outcomes {
-            pipeline.merge(&o.pipeline);
-            merge_agg(&mut agg, &o.agg);
-        }
-        if attempt.evicted.is_empty() {
-            let mut outcomes = attempt.outcomes;
-            assert_eq!(outcomes.len(), members.len(), "all workers must report");
-            assert!(
-                outcomes.iter().all(|o| !o.aborted),
-                "no eviction was recorded, so no worker may have aborted"
-            );
-            outcomes.sort_by_key(|r| r.worker);
-            let mut loss_per_epoch = curve_prefix.clone();
-            loss_per_epoch.extend_from_slice(&outcomes[0].loss_curve);
-            fault.resyncs = agg.resyncs;
-            fault.stale_gen = agg.stale_gen;
-            return TrainReport {
-                loss_per_epoch,
-                wall: start.elapsed(),
-                model: outcomes[0].model.clone(), // replicas are identical
-                pipeline,
-                agg,
-                fault,
-            };
-        }
-
-        kill_armed = false;
-        generation = attempt.generation;
-        let evicted_globals: Vec<usize> = attempt.evicted.iter().map(|&l| members[l]).collect();
-        if cfg.cluster.rejoin {
-            fault.rejoins += evicted_globals.len() as u64;
-        } else {
-            members.retain(|g| !evicted_globals.contains(g));
+    super::run_elastic(
+        cfg,
+        ds.d,
+        &|members: &[usize]| {
             assert!(!members.is_empty(), "every worker was evicted — nothing can resume");
             assert!(
                 t.batch % (t.micro_batch * members.len()) == 0,
-                "B ({}) must stay divisible by survivors*MB ({}x{}) — choose B accordingly \
+                "B ({}) must stay divisible by members*MB ({}x{}) — choose B accordingly \
                  or enable cluster.rejoin",
                 t.batch,
                 members.len(),
                 t.micro_batch
             );
-        }
-        let found = ckpt_dir.as_ref().and_then(|d| checkpoint::latest(d).ok().flatten());
-        match found.and_then(|ck| compatible_ckpt(ck, ds.d, cfg.train.epochs)) {
-            Some(ck) => {
-                start_epoch = ck.epoch;
-                curve_prefix = ck.loss_curve.clone();
-                model0 = Some(ck.model);
-                fault.restores += 1;
-            }
-            None => {
-                start_epoch = 0;
-                curve_prefix = Vec::new();
-                model0 = None;
-            }
-        }
-        if (members.len(), start_epoch) == before {
-            stuck += 1;
-            assert!(
-                stuck < 3,
-                "eviction/restart loop is not progressing (restarted {stuck}x at epoch \
-                 {start_epoch} with {} workers) — worker_timeout_ms is likely too small \
-                 for honest startup/compute gaps",
-                members.len()
-            );
-        } else {
-            stuck = 0;
-        }
-    }
+        },
+        &|outcomes: &[WorkerOutcome]| outcomes[0].model.clone(), // replicas are identical
+        &mut |plan: &AttemptPlan<'_>, fault: &mut FaultStats| {
+            run_attempt(cfg, ds, make_compute, plan, fault)
+        },
+    )
 }
 
-/// Spawn one fabric + switch + worker set over `members` and run epochs
-/// `[start_epoch, epochs)`, supervising when configured.
-#[allow(clippy::too_many_arguments)]
+/// Spawn one fabric + switch + worker set over the plan's members and
+/// run epochs `[start_epoch, stop_epoch)`, supervising when configured.
 fn run_attempt(
     cfg: &SystemConfig,
     ds: &Dataset,
     make_compute: &super::mp::ComputeFactory,
-    members: &[usize],
-    generation: u32,
-    start_epoch: usize,
-    model0: Option<&[f32]>,
-    kill_armed: bool,
-    ckpt_dir: Option<&Path>,
-    curve_prefix: &[f32],
+    plan: &AttemptPlan<'_>,
     fault: &mut FaultStats,
 ) -> Attempt {
-    let m = members.len();
+    let m = plan.members.len();
     let t = &cfg.train;
+    let generation = plan.generation;
+    let start_epoch = plan.start_epoch;
+    let stop_epoch = plan.stop_epoch;
+    let model0 = plan.model0;
+    let kill_armed = plan.kill_armed;
+    let collect = plan.collect_parts;
     let depth = cfg.cluster.pipeline_depth;
     let window = cfg.cluster.effective_window();
     let supervise = cfg.cluster.worker_timeout_ms > 0;
-    let ckpt_on = cfg.cluster.checkpoint_interval > 0 && ckpt_dir.is_some();
+    // Disk saves stay interval-gated; the in-memory assembly runs
+    // whenever parts are collected at all.
+    let save_dir = if cfg.cluster.checkpoint_interval > 0 {
+        plan.ckpt_dir.map(|p| p.to_path_buf())
+    } else {
+        None
+    };
 
     // Nodes: workers 0..m, switch m, supervisor m+1. Window and switch
     // FA ring scale with the overlap depth, exactly like the MP
     // trainer: D rounds of chunks may be outstanding.
-    let mut endpoints = SimNet::build(m + 2, &cfg.net);
+    let (mut endpoints, chaos) = SimNet::build_with_chaos(m + 2, &cfg.net);
     let mut sup_ep = endpoints.pop().unwrap();
     let switch_ep = endpoints.pop().unwrap();
     let server = runner::spawn(
@@ -231,13 +138,13 @@ fn run_attempt(
     // In-process completion flags: the watchdog's ground truth that a
     // worker finished, immune to a dropped Leave packet.
     let finished: Arc<Vec<AtomicBool>> = Arc::new((0..m).map(|_| AtomicBool::new(false)).collect());
-    let mut sup_report = SupervisorReport { evicted: Vec::new(), generation };
+    let mut sup_report = SupervisorReport { evicted: Vec::new(), generation, mem_ckpt: None };
     std::thread::scope(|scope| {
         for (w, ep) in endpoints.into_iter().enumerate() {
             let res_tx = res_tx.clone();
             let ck_tx = ck_tx.clone();
             let cfg = cfg.clone();
-            let global = members[w];
+            let global = plan.members[w];
             let finished = finished.clone();
             scope.spawn(move || {
                 let t = &cfg.train;
@@ -272,7 +179,7 @@ fn run_attempt(
                     x[..ds.d].copy_from_slice(m0);
                 }
                 let mut g = vec![0.0f32; d_pad];
-                let mut loss_curve = Vec::with_capacity(t.epochs.saturating_sub(start_epoch));
+                let mut loss_curve = Vec::with_capacity(stop_epoch.saturating_sub(start_epoch));
                 // pre-pack local micro-batches (bit-planes only: the
                 // backward replays planes, so no dequantized copy)
                 let n_micro = n_local / mb;
@@ -307,7 +214,7 @@ fn run_attempt(
                 let inv_b = 1.0 / t.batch as f32;
                 let mut pstats = PipelineStats::default();
                 let mut aborted = false;
-                'epochs: for e in start_epoch..t.epochs {
+                'epochs: for e in start_epoch..stop_epoch {
                     let mut epoch_loss = 0.0f32;
                     for b in 0..batches {
                         if kill_at == Some((e, b)) {
@@ -405,12 +312,11 @@ fn run_attempt(
                     loss_curve.push(lbuf[0]);
                     pstats.net.observe_round(agg.stats.retransmits - boundary_mark);
                     // Replicated model: worker 0 alone carries the
-                    // round-consistent checkpoint part.
-                    if ckpt_on
-                        && w == 0
-                        && (e + 1) % cfg.cluster.checkpoint_interval == 0
-                        && e + 1 < t.epochs
-                    {
+                    // round-consistent checkpoint part — at **every**
+                    // boundary; the assembler keeps the newest in
+                    // memory (resync/scale-up seed) and hits disk only
+                    // on the configured interval.
+                    if collect && w == 0 && e + 1 < t.epochs {
                         let _ = ck_tx.send(CkptPart {
                             worker: 0,
                             epoch: e + 1,
@@ -436,12 +342,13 @@ fn run_attempt(
         }
         drop(res_tx);
         drop(ck_tx);
-        if supervise || ckpt_on {
-            let sink = ckpt_on.then(|| CkptSink {
-                dir: ckpt_dir.expect("ckpt_on implies dir").to_path_buf(),
+        if supervise || collect {
+            let sink = collect.then(|| CkptSink {
+                dir: save_dir.clone(),
+                interval: cfg.cluster.checkpoint_interval,
                 parts_expected: 1, // replicated model: worker 0 only
                 start_epoch,
-                prefix: curve_prefix.to_vec(),
+                prefix: plan.curve_prefix.to_vec(),
                 rounds_per_epoch: (ds.n / t.batch) as u64,
                 rng: cfg.net.seed,
             });
@@ -460,10 +367,16 @@ fn run_attempt(
         }
     });
     server.shutdown();
+    fault.straggler_rounds += chaos.straggled_frames.load(Ordering::Relaxed);
 
     let mut outcomes: Vec<WorkerOutcome> = res_rx.into_iter().collect();
     outcomes.sort_by_key(|o| o.worker);
-    Attempt { outcomes, evicted: sup_report.evicted, generation: sup_report.generation }
+    Attempt {
+        outcomes,
+        evicted: sup_report.evicted,
+        generation: sup_report.generation,
+        mem_ckpt: sup_report.mem_ckpt,
+    }
 }
 
 /// Bookkeeping for one chunked AllReduce over a gradient buffer. The

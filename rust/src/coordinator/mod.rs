@@ -15,10 +15,13 @@ pub mod mp;
 pub mod reference;
 pub(crate) mod supervisor;
 
+use crate::checkpoint::{self, Checkpoint};
+use crate::config::SystemConfig;
 use crate::metrics::FaultStats;
 use crate::pipeline::PipelineStats;
 use crate::worker::AggStats;
-use std::time::Duration;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
 
 /// Result of a training run.
 #[derive(Debug, Clone)]
@@ -84,6 +87,256 @@ pub(crate) fn compatible_ckpt(
         epochs
     );
     None
+}
+
+/// One attempt's marching orders, handed to the trainer-specific
+/// `run_attempt` by [`run_elastic`].
+pub(crate) struct AttemptPlan<'a> {
+    /// Original (global) worker ids participating in this attempt;
+    /// local index within the attempt = position in this slice.
+    pub members: &'a [usize],
+    /// Cluster generation the switch and workers start at.
+    pub generation: u32,
+    /// First epoch this attempt runs.
+    pub start_epoch: usize,
+    /// Exclusive end of this attempt's epoch range: `train.epochs`, or
+    /// the scale-up quiesce boundary (`cluster.join_epoch`).
+    pub stop_epoch: usize,
+    /// Full stitched model to seed workers with (each takes its slice /
+    /// replica); `None` = train from scratch.
+    pub model0: Option<&'a [f32]>,
+    /// Loss curve of epochs `[0, start_epoch)`.
+    pub curve_prefix: &'a [f32],
+    /// Whether the injected crash (`fault.kill_worker`) may still fire.
+    pub kill_armed: bool,
+    /// Where interval-gated checkpoints land (`None` = no disk).
+    pub ckpt_dir: Option<&'a Path>,
+    /// Workers must feed an epoch-boundary `CkptPart` every epoch (the
+    /// assembler keeps the newest complete model in memory — the
+    /// in-place-resync / scale-up seed — and writes to disk only on
+    /// the configured interval).
+    pub collect_parts: bool,
+}
+
+/// One attempt's outcome, reported back to [`run_elastic`].
+pub(crate) struct Attempt {
+    pub outcomes: Vec<WorkerOutcome>,
+    /// Local (attempt) indices evicted; empty = the attempt completed.
+    pub evicted: Vec<usize>,
+    /// Cluster generation after this attempt's bumps.
+    pub generation: u32,
+    /// Newest round-consistent checkpoint assembled in memory.
+    pub mem_ckpt: Option<Checkpoint>,
+}
+
+/// Drive training **attempts** over an elastic membership — the one
+/// driver behind [`mp::train_mp`] and [`dp::train_dp`], which differ
+/// only in how a membership is validated (`check_members`), how worker
+/// models assemble into the full one (`assemble_model`), and what one
+/// attempt actually spawns (`run_attempt`).
+///
+/// The driver owns the whole membership lifecycle:
+///
+/// * **Explicit resume** (`cluster.resume`) from the newest compatible
+///   disk checkpoint before the first attempt.
+/// * **Mid-run scale-up** (`cluster.join_epoch` / `join_workers`): the
+///   attempt quiesces at the join boundary, fresh global ids are
+///   admitted, the boundary model ships **in memory** to the enlarged
+///   membership, and training continues — no process restart, no disk
+///   round-trip.
+/// * **Eviction policy**: with `cluster.rejoin` the next attempt's
+///   membership — and therefore every shard assignment — is unchanged,
+///   so the survivors **resync in place** from the newest in-memory
+///   epoch-boundary model (zero checkpoint restores). Without it the
+///   membership shrinks, shards re-partition, and the last disk
+///   checkpoint is the fallback (from scratch when none is usable).
+/// * **Livelock guard**: restart attempts must make progress
+///   (membership shrinks or the restored epoch advances).
+pub(crate) fn run_elastic(
+    cfg: &SystemConfig,
+    model_width: usize,
+    check_members: &dyn Fn(&[usize]),
+    assemble_model: &dyn Fn(&[WorkerOutcome]) -> Vec<f32>,
+    run_attempt: &mut dyn FnMut(&AttemptPlan<'_>, &mut FaultStats) -> Attempt,
+) -> TrainReport {
+    let start = Instant::now();
+    let epochs = cfg.train.epochs;
+    let ckpt_dir = cfg.cluster.checkpoint_dir.as_ref().map(PathBuf::from);
+    let supervise = cfg.cluster.worker_timeout_ms > 0;
+    let ckpt_on = cfg.cluster.checkpoint_interval > 0 && ckpt_dir.is_some();
+
+    let mut fault = FaultStats::default();
+    // Membership: original (global) worker ids still participating.
+    let mut members: Vec<usize> = (0..cfg.cluster.workers).collect();
+    let mut generation = 0u32;
+    let mut start_epoch = 0usize;
+    let mut model0: Option<Vec<f32>> = None;
+    let mut curve_prefix: Vec<f32> = Vec::new();
+    // The injected crash fires at most once across attempts.
+    let mut kill_armed = cfg.fault.kill_worker.is_some();
+    // A scheduled mid-run scale-up, consumed when its boundary passes.
+    let mut pending_join = match cfg.cluster.join_epoch {
+        Some(je) if je < epochs => Some((je, cfg.cluster.join_workers)),
+        _ => None,
+    };
+
+    // Explicit resume before the first attempt.
+    if cfg.cluster.resume {
+        let dir = ckpt_dir.as_ref().expect("validated: resume requires checkpoint_dir");
+        let found = checkpoint::latest(dir).ok().flatten();
+        if let Some(ck) = found.and_then(|ck| compatible_ckpt(ck, model_width, epochs)) {
+            start_epoch = ck.epoch;
+            generation = ck.generation;
+            curve_prefix = ck.loss_curve.clone();
+            model0 = Some(ck.model);
+            fault.restores += 1;
+        }
+    }
+
+    let mut pipeline = PipelineStats::default();
+    let mut agg = AggStats::default();
+    // Livelock guard: repeated evictions from the same state — e.g. a
+    // timeout smaller than honest startup work with `rejoin`
+    // re-admitting the victim forever — become a clear error instead of
+    // an infinite spawn loop.
+    let mut stuck = 0usize;
+
+    loop {
+        // A join whose boundary is already behind us (a restore landed
+        // on or past it): admit the newcomers into this very attempt.
+        if let Some((je, jw)) = pending_join {
+            if je <= start_epoch {
+                pending_join = None;
+                admit_join(&mut members, jw, check_members);
+                generation = generation.wrapping_add(1);
+                fault.scale_ups += jw as u64;
+            }
+        }
+        let stop_epoch = pending_join.map_or(epochs, |(je, _)| je);
+        let before = (members.len(), start_epoch);
+        let attempt = run_attempt(
+            &AttemptPlan {
+                members: &members,
+                generation,
+                start_epoch,
+                stop_epoch,
+                model0: model0.as_deref(),
+                curve_prefix: &curve_prefix,
+                kill_armed,
+                ckpt_dir: ckpt_dir.as_deref(),
+                collect_parts: supervise || ckpt_on || stop_epoch < epochs,
+            },
+            &mut fault,
+        );
+        for o in &attempt.outcomes {
+            pipeline.merge(&o.pipeline);
+            merge_agg(&mut agg, &o.agg);
+        }
+        if attempt.evicted.is_empty() {
+            let mut outcomes = attempt.outcomes;
+            assert_eq!(outcomes.len(), members.len(), "all workers must report");
+            assert!(
+                outcomes.iter().all(|o| !o.aborted),
+                "no eviction was recorded, so no worker may have aborted"
+            );
+            outcomes.sort_by_key(|r| r.worker);
+            if stop_epoch < epochs {
+                // Scale-up quiesce: the attempt stopped cleanly at the
+                // join boundary. Admit the newcomers, ship the boundary
+                // state in memory, and continue — no restart, no disk.
+                let ck = attempt
+                    .mem_ckpt
+                    .expect("quiesced attempts collect parts, so the boundary state is in memory");
+                assert_eq!(ck.epoch, stop_epoch, "quiesce must stop exactly at the join boundary");
+                let (_, jw) = pending_join.take().expect("stop_epoch < epochs implies a join");
+                admit_join(&mut members, jw, check_members);
+                generation = generation.wrapping_add(1);
+                fault.scale_ups += jw as u64;
+                start_epoch = ck.epoch;
+                curve_prefix = ck.loss_curve;
+                model0 = Some(ck.model);
+                stuck = 0;
+                continue;
+            }
+            // Clean final attempt: assemble the report.
+            let mut loss_per_epoch = curve_prefix.clone();
+            loss_per_epoch.extend_from_slice(&outcomes[0].loss_curve);
+            fault.resyncs = agg.resyncs;
+            fault.stale_gen = agg.stale_gen;
+            return TrainReport {
+                loss_per_epoch,
+                wall: start.elapsed(),
+                model: assemble_model(&outcomes),
+                pipeline,
+                agg,
+                fault,
+            };
+        }
+
+        // Eviction(s): drop (or re-admit) the dead workers, reseed the
+        // next attempt, and go again.
+        kill_armed = false;
+        generation = attempt.generation;
+        let evicted_globals: Vec<usize> = attempt.evicted.iter().map(|&l| members[l]).collect();
+        let mut reseeded = false;
+        if cfg.cluster.rejoin {
+            // The workers "come back": membership — and therefore every
+            // shard assignment — is unchanged, so the survivors resync
+            // **in place** from the newest in-memory epoch-boundary
+            // model. Zero disk restores.
+            fault.rejoins += evicted_globals.len() as u64;
+            if let Some(ck) = attempt.mem_ckpt {
+                start_epoch = ck.epoch;
+                curve_prefix = ck.loss_curve;
+                model0 = Some(ck.model);
+                fault.inplace_resyncs += 1;
+                reseeded = true;
+            }
+        } else {
+            members.retain(|g| !evicted_globals.contains(g));
+            check_members(&members);
+        }
+        if !reseeded {
+            // Shards re-partition (or no boundary state ever formed):
+            // restore the last round-consistent disk checkpoint, from
+            // scratch when nothing usable is there.
+            let found = ckpt_dir.as_ref().and_then(|d| checkpoint::latest(d).ok().flatten());
+            match found.and_then(|ck| compatible_ckpt(ck, model_width, epochs)) {
+                Some(ck) => {
+                    start_epoch = ck.epoch;
+                    curve_prefix = ck.loss_curve.clone();
+                    model0 = Some(ck.model);
+                    fault.restores += 1;
+                }
+                None => {
+                    start_epoch = 0;
+                    curve_prefix = Vec::new();
+                    model0 = None;
+                }
+            }
+        }
+        if (members.len(), start_epoch) == before {
+            stuck += 1;
+            assert!(
+                stuck < 3,
+                "eviction/restart loop is not progressing (restarted {stuck}x at epoch \
+                 {start_epoch} with {} workers) — worker_timeout_ms is likely too small \
+                 for honest startup/compute gaps",
+                members.len()
+            );
+        } else {
+            stuck = 0;
+        }
+    }
+}
+
+/// Admit `count` fresh workers: new global ids one past the largest
+/// ever used (evicted ids are never reused, so a rejoin and a joiner
+/// can never collide).
+fn admit_join(members: &mut Vec<usize>, count: usize, check_members: &dyn Fn(&[usize])) {
+    let next = members.iter().max().map_or(0, |g| g + 1);
+    members.extend(next..next + count);
+    check_members(members);
 }
 
 pub(crate) fn merge_agg(total: &mut AggStats, s: &AggStats) {

@@ -26,8 +26,7 @@
 //! historical single-spawn trainer, bit for bit.
 
 use super::supervisor::{self, CkptPart, CkptSink, SupervisorReport};
-use super::{compatible_ckpt, merge_agg, TrainReport, WorkerOutcome};
-use crate::checkpoint;
+use super::{Attempt, AttemptPlan, TrainReport, WorkerOutcome};
 use crate::config::SystemConfig;
 use crate::data::partition::shard_vertical;
 use crate::data::quantize::LANE;
@@ -39,11 +38,10 @@ use crate::net::{supervisor_node, switch_node};
 use crate::pipeline::{flush_round, run_minibatch, PipelineScratch, PipelineStats, PreparedShard};
 use crate::switch::p4::P4Switch;
 use crate::switch::runner;
-use crate::worker::{AggClient, AggStats};
-use std::path::{Path, PathBuf};
+use crate::worker::AggClient;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Factory giving each (worker, engine) its compute backend (e.g. one
 /// PJRT client per engine, or the shared-nothing native engine). With
@@ -54,163 +52,57 @@ use std::time::{Duration, Instant};
 /// re-partitioning attempts.
 pub type ComputeFactory<'a> = dyn Fn(usize, usize) -> Box<dyn Compute> + Sync + 'a;
 
-/// One attempt's outcome.
-struct Attempt {
-    outcomes: Vec<WorkerOutcome>,
-    /// Local (attempt) indices evicted; empty = the attempt completed.
-    evicted: Vec<usize>,
-    generation: u32,
-}
-
 /// Train `ds` under model parallelism per `cfg`. Panics on invalid
 /// configuration (validate first) or if the cluster wedges (drain
 /// timeout in the pipeline) with supervision disabled.
+///
+/// The whole membership lifecycle — resume, eviction, in-place resync,
+/// mid-run scale-up — lives in [`super::run_elastic`]; this function
+/// supplies the MP-specific pieces: vertical shards need one feature
+/// per worker, and the final model stitches the partitions in worker
+/// order.
 pub fn train_mp(cfg: &SystemConfig, ds: &Dataset, make_compute: &ComputeFactory) -> TrainReport {
     cfg.validate().expect("invalid config");
     assert!(ds.d >= cfg.cluster.workers, "need at least one feature per worker");
-    let start = Instant::now();
-
-    let ckpt_dir = cfg.cluster.checkpoint_dir.as_ref().map(PathBuf::from);
-    let mut fault = FaultStats::default();
-    // Membership: original (global) worker ids still participating.
-    let mut members: Vec<usize> = (0..cfg.cluster.workers).collect();
-    let mut generation = 0u32;
-    let mut start_epoch = 0usize;
-    let mut model0: Option<Vec<f32>> = None;
-    let mut curve_prefix: Vec<f32> = Vec::new();
-    // The injected crash fires at most once across attempts.
-    let mut kill_armed = cfg.fault.kill_worker.is_some();
-
-    // Explicit resume before the first attempt.
-    if cfg.cluster.resume {
-        let dir = ckpt_dir.as_ref().expect("validated: resume requires checkpoint_dir");
-        let found = checkpoint::latest(dir).ok().flatten();
-        if let Some(ck) = found.and_then(|ck| compatible_ckpt(ck, ds.d, cfg.train.epochs)) {
-            start_epoch = ck.epoch;
-            generation = ck.generation;
-            curve_prefix = ck.loss_curve.clone();
-            model0 = Some(ck.model);
-            fault.restores += 1;
-        }
-    }
-
-    let mut pipeline = PipelineStats::default();
-    let mut agg = AggStats::default();
-    // Livelock guard: restart attempts must make progress (membership
-    // shrinks or the restored epoch advances); repeated evictions from
-    // the same state — e.g. a timeout smaller than honest startup work
-    // with `rejoin` re-admitting the victim forever — become a clear
-    // error instead of an infinite spawn loop.
-    let mut stuck = 0usize;
-
-    loop {
-        let before = (members.len(), start_epoch);
-        let attempt = run_attempt(
-            cfg,
-            ds,
-            make_compute,
-            &members,
-            generation,
-            start_epoch,
-            model0.as_deref(),
-            kill_armed,
-            ckpt_dir.as_deref(),
-            &curve_prefix,
-            &mut fault,
-        );
-        for o in &attempt.outcomes {
-            pipeline.merge(&o.pipeline);
-            merge_agg(&mut agg, &o.agg);
-        }
-        if attempt.evicted.is_empty() {
-            // Clean attempt: assemble the final report.
-            let mut outcomes = attempt.outcomes;
-            assert_eq!(outcomes.len(), members.len(), "all workers must report");
-            assert!(
-                outcomes.iter().all(|o| !o.aborted),
-                "no eviction was recorded, so no worker may have aborted"
-            );
-            outcomes.sort_by_key(|r| r.worker);
-            let mut model = Vec::with_capacity(ds.d);
-            for o in &outcomes {
-                model.extend_from_slice(&o.model);
-            }
-            let mut loss_per_epoch = curve_prefix.clone();
-            loss_per_epoch.extend_from_slice(&outcomes[0].loss_curve);
-            fault.resyncs = agg.resyncs;
-            fault.stale_gen = agg.stale_gen;
-            return TrainReport {
-                loss_per_epoch,
-                wall: start.elapsed(),
-                model,
-                pipeline,
-                agg,
-                fault,
-            };
-        }
-
-        // Eviction(s): drop (or re-admit) the dead workers, restore the
-        // last round-consistent checkpoint, and go again.
-        kill_armed = false;
-        generation = attempt.generation;
-        let evicted_globals: Vec<usize> = attempt.evicted.iter().map(|&l| members[l]).collect();
-        if cfg.cluster.rejoin {
-            // The workers "come back" on the next attempt.
-            fault.rejoins += evicted_globals.len() as u64;
-        } else {
-            members.retain(|g| !evicted_globals.contains(g));
+    super::run_elastic(
+        cfg,
+        ds.d,
+        &|members: &[usize]| {
             assert!(!members.is_empty(), "every worker was evicted — nothing can resume");
             assert!(ds.d >= members.len(), "need at least one feature per worker");
-        }
-        let found = ckpt_dir.as_ref().and_then(|d| checkpoint::latest(d).ok().flatten());
-        match found.and_then(|ck| compatible_ckpt(ck, ds.d, cfg.train.epochs)) {
-            Some(ck) => {
-                start_epoch = ck.epoch;
-                curve_prefix = ck.loss_curve.clone();
-                model0 = Some(ck.model);
-                fault.restores += 1;
+        },
+        &|outcomes: &[WorkerOutcome]| {
+            // Vertical partitions stitch in worker order into the full
+            // model.
+            let mut model = Vec::with_capacity(ds.d);
+            for o in outcomes {
+                model.extend_from_slice(&o.model);
             }
-            None => {
-                // No (usable) checkpoint: resume from scratch over the
-                // survivors.
-                start_epoch = 0;
-                curve_prefix = Vec::new();
-                model0 = None;
-            }
-        }
-        if (members.len(), start_epoch) == before {
-            stuck += 1;
-            assert!(
-                stuck < 3,
-                "eviction/restart loop is not progressing (restarted {stuck}x at epoch \
-                 {start_epoch} with {} workers) — worker_timeout_ms is likely too small \
-                 for honest startup/compute gaps",
-                members.len()
-            );
-        } else {
-            stuck = 0;
-        }
-    }
+            model
+        },
+        &mut |plan: &AttemptPlan<'_>, fault: &mut FaultStats| {
+            run_attempt(cfg, ds, make_compute, plan, fault)
+        },
+    )
 }
 
-/// Spawn one fabric + switch + worker set over `members` and run epochs
-/// `[start_epoch, epochs)`, supervising when configured.
-#[allow(clippy::too_many_arguments)]
+/// Spawn one fabric + switch + worker set over the plan's members and
+/// run epochs `[start_epoch, stop_epoch)`, supervising when configured.
 fn run_attempt(
     cfg: &SystemConfig,
     ds: &Dataset,
     make_compute: &ComputeFactory,
-    members: &[usize],
-    generation: u32,
-    start_epoch: usize,
-    model0: Option<&[f32]>,
-    kill_armed: bool,
-    ckpt_dir: Option<&Path>,
-    curve_prefix: &[f32],
+    plan: &AttemptPlan<'_>,
     fault: &mut FaultStats,
 ) -> Attempt {
-    let m = members.len();
+    let m = plan.members.len();
     let t = &cfg.train;
+    let generation = plan.generation;
+    let start_epoch = plan.start_epoch;
+    let stop_epoch = plan.stop_epoch;
+    let model0 = plan.model0;
+    let kill_armed = plan.kill_armed;
+    let collect = plan.collect_parts;
     // Paper §4.2: the switch provisions the full 16-bit slot space;
     // cfg.cluster.slots is the per-worker in-flight *window*, scaled by
     // the pipeline depth so D rounds of outstanding seqs fit without
@@ -219,10 +111,16 @@ fn run_attempt(
     let depth = cfg.cluster.pipeline_depth;
     let window = cfg.cluster.effective_window();
     let supervise = cfg.cluster.worker_timeout_ms > 0;
-    let ckpt_on = cfg.cluster.checkpoint_interval > 0 && ckpt_dir.is_some();
+    // Disk saves stay interval-gated; the in-memory assembly runs
+    // whenever parts are collected at all.
+    let save_dir = if cfg.cluster.checkpoint_interval > 0 {
+        plan.ckpt_dir.map(|p| p.to_path_buf())
+    } else {
+        None
+    };
 
     // Nodes: workers 0..m, switch m, supervisor m+1.
-    let mut endpoints = SimNet::build(m + 2, &cfg.net);
+    let (mut endpoints, chaos) = SimNet::build_with_chaos(m + 2, &cfg.net);
     let mut sup_ep = endpoints.pop().unwrap();
     let switch_ep = endpoints.pop().unwrap();
     let server = runner::spawn(
@@ -237,13 +135,13 @@ fn run_attempt(
     // In-process completion flags: the watchdog's ground truth that a
     // worker finished, immune to a dropped Leave packet.
     let finished: Arc<Vec<AtomicBool>> = Arc::new((0..m).map(|_| AtomicBool::new(false)).collect());
-    let mut sup_report = SupervisorReport { evicted: Vec::new(), generation };
+    let mut sup_report = SupervisorReport { evicted: Vec::new(), generation, mem_ckpt: None };
     std::thread::scope(|scope| {
         for (w, ep) in endpoints.into_iter().enumerate() {
             let res_tx = res_tx.clone();
             let ck_tx = ck_tx.clone();
             let cfg = cfg.clone();
-            let global = members[w];
+            let global = plan.members[w];
             let finished = finished.clone();
             scope.spawn(move || {
                 let t = &cfg.train;
@@ -309,9 +207,9 @@ fn run_attempt(
                 // fixes the overlap depth (1 = synchronous,
                 // bit-compatible; D ≥ 2 = up to D-1 rounds in flight).
                 let mut scratch = PipelineScratch::with_depth(depth);
-                let mut loss_curve = Vec::with_capacity(t.epochs.saturating_sub(start_epoch));
+                let mut loss_curve = Vec::with_capacity(stop_epoch.saturating_sub(start_epoch));
                 let mut aborted = false;
-                'epochs: for e in start_epoch..t.epochs {
+                'epochs: for e in start_epoch..stop_epoch {
                     let mut epoch_loss = 0.0f32;
                     for b in 0..batches {
                         if kill_at == Some((e, b)) {
@@ -348,12 +246,13 @@ fn run_attempt(
                     loss_curve.push(epoch_loss);
                     // Round-consistent checkpoint part: the ring is
                     // flushed, so this partition reflects exactly
-                    // epochs [0, e+1). (Skip the final epoch — the run
-                    // is about to finish anyway.)
-                    if ckpt_on
-                        && (e + 1) % cfg.cluster.checkpoint_interval == 0
-                        && e + 1 < t.epochs
-                    {
+                    // epochs [0, e+1). Sent at **every** boundary —
+                    // the assembler keeps the newest complete model in
+                    // memory (the in-place-resync / scale-up seed) and
+                    // writes to disk only on the configured interval.
+                    // (Skip the final epoch — the run is about to
+                    // finish anyway.)
+                    if collect && e + 1 < t.epochs {
                         let _ = ck_tx.send(CkptPart {
                             worker: w,
                             epoch: e + 1,
@@ -379,12 +278,13 @@ fn run_attempt(
         }
         drop(res_tx);
         drop(ck_tx);
-        if supervise || ckpt_on {
-            let sink = ckpt_on.then(|| CkptSink {
-                dir: ckpt_dir.expect("ckpt_on implies dir").to_path_buf(),
+        if supervise || collect {
+            let sink = collect.then(|| CkptSink {
+                dir: save_dir.clone(),
+                interval: cfg.cluster.checkpoint_interval,
                 parts_expected: m,
                 start_epoch,
-                prefix: curve_prefix.to_vec(),
+                prefix: plan.curve_prefix.to_vec(),
                 rounds_per_epoch: ((ds.n / t.micro_batch) / (t.batch / t.micro_batch)) as u64,
                 rng: cfg.net.seed,
             });
@@ -403,10 +303,16 @@ fn run_attempt(
         }
     });
     server.shutdown();
+    fault.straggler_rounds += chaos.straggled_frames.load(Ordering::Relaxed);
 
     let mut outcomes: Vec<WorkerOutcome> = res_rx.into_iter().collect();
     outcomes.sort_by_key(|o| o.worker);
-    Attempt { outcomes, evicted: sup_report.evicted, generation: sup_report.generation }
+    Attempt {
+        outcomes,
+        evicted: sup_report.evicted,
+        generation: sup_report.generation,
+        mem_ckpt: sup_report.mem_ckpt,
+    }
 }
 
 #[cfg(test)]

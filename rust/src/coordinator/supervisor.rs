@@ -55,9 +55,17 @@ pub(crate) struct CkptPart {
     pub curve: Vec<f32>,
 }
 
-/// Checkpoint sink configuration for one attempt.
+/// Checkpoint sink configuration for one attempt. Workers feed a part
+/// at **every** epoch boundary; the assembler always keeps the newest
+/// complete model in memory (the in-place-resync / scale-up seed) and
+/// writes to `dir` only on the configured interval — disk traffic is
+/// unchanged from the interval-gated days.
 pub(crate) struct CkptSink {
-    pub dir: PathBuf,
+    /// Where interval-gated checkpoints land; `None` = memory only.
+    pub dir: Option<PathBuf>,
+    /// Write `dir/ckpt-*.bin` when `epoch % interval == 0` (0 with a
+    /// `dir` set never saves — callers pass `None` instead).
+    pub interval: usize,
     /// Parts per epoch: the live worker count (MP partitions) or 1 (DP
     /// replicas — only worker 0 sends).
     pub parts_expected: usize,
@@ -78,6 +86,10 @@ pub(crate) struct SupervisorReport {
     pub evicted: Vec<usize>,
     /// Cluster generation after this attempt's bumps.
     pub generation: u32,
+    /// Newest round-consistent checkpoint assembled **in memory** this
+    /// attempt (regardless of what reached disk) — the state an
+    /// in-place resync or scale-up continues from.
+    pub mem_ckpt: Option<Checkpoint>,
 }
 
 /// In-flight checkpoint assembly for one epoch.
@@ -87,10 +99,12 @@ struct PendingCkpt {
     curve: Option<Vec<f32>>,
 }
 
-/// Assembles [`CkptPart`]s into saved checkpoints.
+/// Assembles [`CkptPart`]s into checkpoints: the newest complete one
+/// is always held in memory; disk saves follow the sink's interval.
 struct Assembler {
     sink: CkptSink,
     pending: Vec<PendingCkpt>,
+    mem_ckpt: Option<Checkpoint>,
 }
 
 impl Assembler {
@@ -134,14 +148,23 @@ impl Assembler {
                 model,
                 loss_curve,
             };
-            let t0 = Instant::now();
-            match ck.save(&self.sink.dir) {
-                Ok(receipt) => {
-                    fault.checkpoints += 1;
-                    fault.checkpoint_bytes += receipt.bytes;
-                    fault.checkpoint_time_ns += t0.elapsed().as_nanos() as u64;
+            if let Some(dir) = self.sink.dir.as_ref() {
+                if self.sink.interval > 0 && ck.epoch % self.sink.interval == 0 {
+                    let t0 = Instant::now();
+                    match ck.save(dir) {
+                        Ok(receipt) => {
+                            fault.checkpoints += 1;
+                            fault.checkpoint_bytes += receipt.bytes;
+                            fault.checkpoint_time_ns += t0.elapsed().as_nanos() as u64;
+                        }
+                        Err(e) => {
+                            eprintln!("checkpoint save failed (continuing uncheckpointed): {e:#}")
+                        }
+                    }
                 }
-                Err(e) => eprintln!("checkpoint save failed (continuing uncheckpointed): {e:#}"),
+            }
+            if self.mem_ckpt.as_ref().map_or(true, |c| ck.epoch >= c.epoch) {
+                self.mem_ckpt = Some(ck);
             }
         }
     }
@@ -169,7 +192,7 @@ pub(crate) fn run<T: Transport>(
     fault: &mut FaultStats,
 ) -> SupervisorReport {
     assert_eq!(finished.len(), workers, "one finished flag per worker");
-    let mut asm = sink.map(|sink| Assembler { sink, pending: Vec::new() });
+    let mut asm = sink.map(|sink| Assembler { sink, pending: Vec::new(), mem_ckpt: None });
     let mut gen = generation;
     let mut evicted: Vec<usize> = Vec::new();
 
@@ -237,7 +260,7 @@ pub(crate) fn run<T: Transport>(
             a.feed(p, gen, fault);
         }
     }
-    SupervisorReport { evicted, generation: gen }
+    SupervisorReport { evicted, generation: gen, mem_ckpt: asm.and_then(|a| a.mem_ckpt) }
 }
 
 #[cfg(test)]
@@ -253,7 +276,8 @@ mod tests {
         let mut fault = FaultStats::default();
         let mut asm = Assembler {
             sink: CkptSink {
-                dir: dir.clone(),
+                dir: Some(dir.clone()),
+                interval: 2,
                 parts_expected: 2,
                 start_epoch: 1,
                 prefix: vec![9.0],
@@ -261,11 +285,13 @@ mod tests {
                 rng: 7,
             },
             pending: Vec::new(),
+            mem_ckpt: None,
         };
         // parts arrive out of worker order, interleaved across epochs
         asm.feed(CkptPart { worker: 1, epoch: 2, part: vec![3.0, 4.0], curve: vec![] }, 5, &mut fault);
         asm.feed(CkptPart { worker: 1, epoch: 4, part: vec![30.0], curve: vec![] }, 5, &mut fault);
         assert_eq!(fault.checkpoints, 0, "incomplete epochs must not save");
+        assert!(asm.mem_ckpt.is_none(), "incomplete epochs must not land in memory either");
         asm.feed(CkptPart { worker: 0, epoch: 2, part: vec![1.0, 2.0], curve: vec![8.0] }, 5, &mut fault);
         assert_eq!(fault.checkpoints, 1);
         assert!(fault.checkpoint_bytes > 0);
@@ -275,6 +301,41 @@ mod tests {
         assert_eq!(ck.rounds_done, 8);
         assert_eq!(ck.model, vec![1.0, 2.0, 3.0, 4.0], "worker order");
         assert_eq!(ck.loss_curve, vec![9.0, 8.0], "prefix + worker-0 curve");
+        assert_eq!(asm.mem_ckpt.as_ref().map(|c| c.epoch), Some(2), "kept in memory too");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn off_interval_epochs_stay_in_memory_only() {
+        // interval 2: epoch 3 completes => no disk write, but the
+        // in-memory checkpoint (the resync/scale-up seed) advances.
+        let dir = std::env::temp_dir()
+            .join(format!("p4sgd-supervisor-mem-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut fault = FaultStats::default();
+        let mut asm = Assembler {
+            sink: CkptSink {
+                dir: Some(dir.clone()),
+                interval: 2,
+                parts_expected: 1,
+                start_epoch: 2,
+                prefix: vec![9.0, 8.0],
+                rounds_per_epoch: 4,
+                rng: 7,
+            },
+            pending: Vec::new(),
+            mem_ckpt: None,
+        };
+        asm.feed(CkptPart { worker: 0, epoch: 3, part: vec![1.0], curve: vec![7.0] }, 0, &mut fault);
+        assert_eq!(fault.checkpoints, 0, "off-interval epoch must not hit disk");
+        let mem = asm.mem_ckpt.as_ref().expect("complete epoch lands in memory");
+        assert_eq!(mem.epoch, 3);
+        assert_eq!(mem.loss_curve, vec![9.0, 8.0, 7.0]);
+        assert!(crate::checkpoint::latest(&dir).unwrap().is_none());
+        // the next on-interval epoch both saves and replaces it
+        asm.feed(CkptPart { worker: 0, epoch: 4, part: vec![2.0], curve: vec![7.0, 6.0] }, 0, &mut fault);
+        assert_eq!(fault.checkpoints, 1);
+        assert_eq!(asm.mem_ckpt.as_ref().map(|c| c.epoch), Some(4));
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -46,11 +46,15 @@ fn dispatch(args: &Args) -> Result<()> {
             println!("  train [--mode mp|dp] [--backend native|pjrt] [--workers M] [--engines N]");
             println!("        [--engine-threads T] [--pipeline-depth 1..8] [--loss linreg|logreg|svm]");
             println!("        [--batch B] [--epochs E] [--dataset NAME]");
-            println!("        [--samples N] [--features D] [--drop P]");
+            println!("        [--samples N] [--features D] [--drop P] [--dup P] [--reorder P]");
             println!("        [--worker-timeout-ms MS] [--checkpoint-interval E] [--checkpoint-dir DIR]");
             println!("        [--resume] [--rejoin] [--core-offset K]");
+            println!("        [--join-epoch E] [--join-workers N]  (mid-run scale-up)");
             println!("        [--kill-worker W] [--kill-at FRAC]  (fault injection)");
-            println!("        [--expect-evictions N] [--max-final-loss L]  (smoke assertions)");
+            println!("        [--chaos-straggler W] [--chaos-factor F]  (seeded chaos)");
+            println!("        [--chaos-burst-prob P] [--chaos-burst-ns NS] [--chaos-burst-len K]");
+            println!("        [--expect-evictions N] [--expect-resyncs N] [--max-final-loss L]");
+            println!("            (smoke assertions)");
             println!("  agg-bench [--workers M] [--ops N] [--payload K]");
             Ok(())
         }
@@ -70,6 +74,8 @@ fn train(args: &Args) -> Result<()> {
     cfg.train.micro_batch = args.get_or("micro-batch", 8usize);
     cfg.train.epochs = args.get_or("epochs", 8usize);
     cfg.net.drop_prob = args.get_or("drop", 0.0f64);
+    cfg.net.dup_prob = args.get_or("dup", 0.0f64);
+    cfg.net.reorder_prob = args.get_or("reorder", 0.0f64);
     cfg.net.latency_ns = args.get_or("latency-ns", 0u64);
     cfg.net.timeout_us = args.get_or("timeout-us", 3000u64);
     cfg.cluster.worker_timeout_ms = args.get_or("worker-timeout-ms", 0u64);
@@ -78,11 +84,24 @@ fn train(args: &Args) -> Result<()> {
     cfg.cluster.resume = args.flag("resume");
     cfg.cluster.rejoin = args.flag("rejoin");
     cfg.cluster.core_offset = args.get_or("core-offset", 0usize);
+    cfg.cluster.join_epoch = match args.get_or("join-epoch", -1i64) {
+        n if n < 0 => None,
+        n => Some(n as usize),
+    };
+    cfg.cluster.join_workers = args.get_or("join-workers", 1usize);
     cfg.fault.kill_worker = match args.get_or("kill-worker", -1i64) {
         n if n < 0 => None,
         n => Some(n as usize),
     };
     cfg.fault.kill_at_frac = args.get_or("kill-at", 0.5f64);
+    cfg.net.chaos.straggler = match args.get_or("chaos-straggler", -1i64) {
+        n if n < 0 => None,
+        n => Some(n as usize),
+    };
+    cfg.net.chaos.straggler_factor = args.get_or("chaos-factor", 1.0f64);
+    cfg.net.chaos.burst_prob = args.get_or("chaos-burst-prob", 0.0f64);
+    cfg.net.chaos.burst_ns = args.get_or("chaos-burst-ns", 0u64);
+    cfg.net.chaos.burst_len = args.get_or("chaos-burst-len", 0u32);
     cfg.validate()?;
 
     let backend: Backend = args.get_or("backend", Backend::Native);
@@ -130,11 +149,18 @@ fn train(args: &Args) -> Result<()> {
 
     // Smoke-lane assertions: let CI gate on the fault machinery and
     // convergence without parsing our output.
-    let expect_evictions = args.get_or("expect-evictions", 0u64);
-    if expect_evictions > 0 && report.fault.evictions < expect_evictions {
+    let expect_evictions = args.get_or("expect-evictions", -1i64);
+    if expect_evictions >= 0 && report.fault.evictions != expect_evictions as u64 {
         bail!(
-            "expected >= {expect_evictions} eviction(s), observed {}",
+            "expected exactly {expect_evictions} eviction(s), observed {}",
             report.fault.evictions
+        );
+    }
+    let expect_resyncs = args.get_or("expect-resyncs", 0u64);
+    if expect_resyncs > 0 && report.fault.inplace_resyncs < expect_resyncs {
+        bail!(
+            "expected >= {expect_resyncs} in-place resync(s), observed {}",
+            report.fault.inplace_resyncs
         );
     }
     if let Some(bound) = args.get("max-final-loss") {

@@ -156,6 +156,16 @@ pub struct FaultStats {
     pub checkpoint_bytes: u64,
     /// Wall time spent serializing + writing checkpoints, nanoseconds.
     pub checkpoint_time_ns: u64,
+    /// Membership changes absorbed without a checkpoint restore:
+    /// shard ownership was unchanged, so survivors continued from
+    /// their in-memory epoch-boundary state.
+    pub inplace_resyncs: u64,
+    /// Workers admitted into an in-progress job at a quiesce boundary
+    /// (mid-run scale-up), counted per worker added.
+    pub scale_ups: u64,
+    /// Data frames the chaos fabric delayed on the straggler's behalf
+    /// — a proxy for rounds the slow worker held back.
+    pub straggler_rounds: u64,
 }
 
 impl FaultStats {
@@ -169,12 +179,15 @@ impl FaultStats {
         self.checkpoints += other.checkpoints;
         self.checkpoint_bytes += other.checkpoint_bytes;
         self.checkpoint_time_ns += other.checkpoint_time_ns;
+        self.inplace_resyncs += other.inplace_resyncs;
+        self.scale_ups += other.scale_ups;
+        self.straggler_rounds += other.straggler_rounds;
     }
 
     /// "1 evicted, 0 rejoined, 2 resyncs, 1 restore; 3 ckpts
     /// (12.3KiB, 1.2ms)" — the report line.
     pub fn summary(&self) -> String {
-        format!(
+        let mut line = format!(
             "{} evicted, {} rejoined, {} resyncs ({} stale-gen dropped), {} restore(s); \
              {} ckpt(s) ({} B, {})",
             self.evictions,
@@ -185,7 +198,17 @@ impl FaultStats {
             self.checkpoints,
             self.checkpoint_bytes,
             fmt_secs(self.checkpoint_time_ns as f64 * 1e-9),
-        )
+        );
+        if self.inplace_resyncs > 0 || self.scale_ups > 0 {
+            line.push_str(&format!(
+                "; {} in-place resync(s), {} scale-up(s)",
+                self.inplace_resyncs, self.scale_ups
+            ));
+        }
+        if self.straggler_rounds > 0 {
+            line.push_str(&format!("; {} straggler-delayed frame(s)", self.straggler_rounds));
+        }
+        line
     }
 }
 

@@ -47,6 +47,17 @@ pub trait Transport: Send {
         self.recv_timeout(Duration::ZERO)
     }
 
+    /// Fan one packet out to every destination in `dsts` — the
+    /// multicast twin of [`Transport::send`], same fire-and-forget
+    /// contract. The default loops `send`; transports with a batched
+    /// tx path (see `udp`'s `sendmmsg`) override it to encode once and
+    /// hand the kernel the whole fan-out in one syscall.
+    fn send_many(&mut self, dsts: &[NodeId], pkt: &Packet) {
+        for &dst in dsts {
+            self.send(dst, pkt);
+        }
+    }
+
     /// This endpoint's node id.
     fn node(&self) -> NodeId;
 }

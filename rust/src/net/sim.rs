@@ -22,7 +22,8 @@ use crate::protocol::Packet;
 use crate::util::rng::Pcg32;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 /// A frame in flight. Cloning a [`Packet`] (fan-out, duplication) copies
@@ -86,6 +87,17 @@ pub struct FabricStats {
     pub dropped: u64,
     pub duplicated: u64,
     pub reordered: u64,
+    pub straggled: u64,
+}
+
+/// Live chaos counters, shared between the fabric thread and whoever
+/// built the net (the coordinators fold them into `FaultStats` at
+/// attempt teardown — unlike [`FabricStats`] they are readable while
+/// the fabric still runs).
+#[derive(Debug, Default)]
+pub struct ChaosMeter {
+    /// Frames delayed because their source is the configured straggler.
+    pub straggled_frames: AtomicU64,
 }
 
 /// Build a simulated network with `nodes` endpoints. The fabric thread
@@ -94,6 +106,15 @@ pub struct SimNet;
 
 impl SimNet {
     pub fn build(nodes: usize, cfg: &NetConfig) -> Vec<SimEndpoint> {
+        Self::build_with_chaos(nodes, cfg).0
+    }
+
+    /// Like [`SimNet::build`], but also hands back the fabric's live
+    /// [`ChaosMeter`] so the caller can observe straggler activity
+    /// while the net is running (zeroed forever on the passthrough
+    /// path — nothing to meter).
+    pub fn build_with_chaos(nodes: usize, cfg: &NetConfig) -> (Vec<SimEndpoint>, Arc<ChaosMeter>) {
+        let meter = Arc::new(ChaosMeter::default());
         let mut egress_txs = Vec::with_capacity(nodes);
         let mut egress_rxs = Vec::with_capacity(nodes);
         for _ in 0..nodes {
@@ -105,10 +126,11 @@ impl SimNet {
             && cfg.jitter_ns == 0
             && cfg.drop_prob == 0.0
             && cfg.dup_prob == 0.0
-            && cfg.reorder_prob == 0.0;
+            && cfg.reorder_prob == 0.0
+            && !cfg.chaos.enabled();
         if passthrough {
             // No behaviour to inject: skip the fabric thread entirely.
-            return egress_rxs
+            let eps = egress_rxs
                 .into_iter()
                 .enumerate()
                 .map(|(node, rx)| SimEndpoint {
@@ -117,6 +139,7 @@ impl SimNet {
                     rx,
                 })
                 .collect();
+            return (eps, meter);
         }
         let (ingress_tx, ingress_rx) = mpsc::channel::<Frame>();
         let endpoints = egress_rxs
@@ -125,11 +148,12 @@ impl SimNet {
             .map(|(node, rx)| SimEndpoint { node, path: Path::Fabric(ingress_tx.clone()), rx })
             .collect();
         let cfg = cfg.clone();
+        let fabric_meter = meter.clone();
         std::thread::Builder::new()
             .name("simnet-fabric".into())
-            .spawn(move || fabric_loop(ingress_rx, egress_txs, cfg))
+            .spawn(move || fabric_loop(ingress_rx, egress_txs, cfg, fabric_meter))
             .expect("spawn fabric thread");
-        endpoints
+        (endpoints, meter)
     }
 }
 
@@ -137,9 +161,12 @@ fn fabric_loop(
     ingress: mpsc::Receiver<Frame>,
     egress: Vec<mpsc::Sender<(NodeId, Packet)>>,
     cfg: NetConfig,
+    meter: Arc<ChaosMeter>,
 ) -> FabricStats {
     let mut rng = Pcg32::new(cfg.seed, 0xFAB);
     let mut stats = FabricStats::default();
+    // Delay-burst state: frames left in the currently active burst.
+    let mut burst_left: u32 = 0;
     // (virtual deliver time ns, tiebreak counter) -> frame
     let mut heap: BinaryHeap<Reverse<(u64, u64, usize)>> = BinaryHeap::new();
     let mut stash: Vec<Option<Frame>> = Vec::new();
@@ -200,6 +227,26 @@ fn fabric_loop(
                     // Hold the frame back past a few peers.
                     lat += 4 * (cfg.latency_ns + cfg.jitter_ns).max(1);
                     stats.reordered += 1;
+                }
+                // Chaos model (config-gated so a disabled model draws
+                // nothing from the RNG stream — existing seeded runs
+                // replay bit-identically). The straggler multiplier is
+                // draw-free by design: the slow worker is *always*
+                // slow, which is what the depth-D hiding bound is
+                // stated against.
+                if cfg.chaos.straggler == Some(frame.src) {
+                    lat = (lat as f64 * cfg.chaos.straggler_factor).max(1.0) as u64;
+                    stats.straggled += 1;
+                    meter.straggled_frames.fetch_add(1, Ordering::Relaxed);
+                }
+                if cfg.chaos.burst_prob > 0.0 {
+                    if burst_left > 0 {
+                        burst_left -= 1;
+                        lat += cfg.chaos.burst_ns;
+                    } else if rng.chance(cfg.chaos.burst_prob) {
+                        burst_left = cfg.chaos.burst_len.saturating_sub(1);
+                        lat += cfg.chaos.burst_ns;
+                    }
                 }
                 if rng.chance(cfg.dup_prob) {
                     stats.duplicated += 1;
@@ -290,6 +337,73 @@ mod tests {
         let mut a = eps.pop().unwrap();
         a.send(99, &Packet::pa(0, 0, vec![]));
         assert!(a.recv_timeout(Duration::from_millis(50)).is_none());
+    }
+
+    #[test]
+    fn straggler_frames_arrive_after_fast_peers() {
+        // Node 0 is the straggler at 50x: its frame, sent *first*,
+        // must still arrive at node 2 after node 1's (1ms vs 50ms of
+        // logical latency — a margin no scheduler hiccup closes).
+        let mut cfg = NetConfig { latency_ns: 1_000_000, jitter_ns: 0, ..NetConfig::default() };
+        cfg.chaos.straggler = Some(0);
+        cfg.chaos.straggler_factor = 50.0;
+        let (mut eps, meter) = SimNet::build_with_chaos(3, &cfg);
+        let mut c = eps.pop().unwrap();
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.send(2, &Packet::pa(0, 0, vec![]));
+        b.send(2, &Packet::pa(1, 1, vec![]));
+        let (first, _) = c.recv_timeout(Duration::from_secs(2)).expect("fast frame");
+        assert_eq!(first, 1, "the fast worker's frame must win");
+        let (second, _) = c.recv_timeout(Duration::from_secs(2)).expect("slow frame");
+        assert_eq!(second, 0);
+        assert_eq!(meter.straggled_frames.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn chaos_replays_bit_identically_under_a_fixed_seed() {
+        // One sender (FIFO into the fabric => a deterministic RNG
+        // consumption order): the surviving seq set under drop +
+        // bursts must be identical run to run.
+        let run = || {
+            let mut cfg = NetConfig { latency_ns: 0, jitter_ns: 0, ..NetConfig::default() };
+            cfg.drop_prob = 0.3;
+            cfg.chaos.burst_prob = 0.1;
+            cfg.chaos.burst_ns = 50_000;
+            cfg.chaos.burst_len = 4;
+            cfg.seed = 42;
+            let mut eps = SimNet::build(2, &cfg);
+            let mut b = eps.pop().unwrap();
+            let mut a = eps.pop().unwrap();
+            for i in 0..200u16 {
+                a.send(1, &Packet::pa(i, 0, vec![]));
+            }
+            drop(a); // fabric drains, then every survivor is queued
+            let mut seqs = Vec::new();
+            while let Some((_, pkt)) = b.recv_timeout(Duration::from_millis(500)) {
+                seqs.push(pkt.seq);
+            }
+            seqs
+        };
+        let first = run();
+        let second = run();
+        assert!(!first.is_empty() && first.len() < 200, "drop must act: {}", first.len());
+        assert_eq!(first, second, "fixed seed must replay the exact same survivor set");
+    }
+
+    #[test]
+    fn disabled_chaos_keeps_the_passthrough_path() {
+        // Chaos off + zero-fault config must still skip the fabric
+        // thread entirely (the bitwise no-failure guarantee rides on
+        // this), and the meter must stay zero.
+        let (mut eps, meter) = SimNet::build_with_chaos(2, &fast_cfg());
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.send(1, &Packet::pa(4, 0, vec![9]));
+        let (_, pkt) = b.recv_timeout(Duration::from_secs(1)).expect("delivery");
+        assert_eq!(pkt.seq, 4);
+        assert!(matches!(a.path, Path::Direct(_)), "chaos off must not spawn a fabric");
+        assert_eq!(meter.straggled_frames.load(Ordering::Relaxed), 0);
     }
 
     #[test]

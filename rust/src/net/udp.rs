@@ -101,6 +101,7 @@ mod mmsg {
             flags: i32,
             timeout: *mut u8,
         ) -> i32;
+        fn sendmmsg(sockfd: i32, msgvec: *mut MMsgHdr, vlen: u32, flags: i32) -> i32;
     }
 
     /// Preallocated receive slots: datagram buffers, source addresses,
@@ -175,6 +176,80 @@ mod mmsg {
             (&self.addrs[i], &self.bufs[i][..len])
         }
     }
+
+    /// Batched multicast tx — the `sendmmsg` twin of [`Batch`]: one
+    /// encoded datagram fanned out to N localhost destinations in one
+    /// syscall. Unlike rx, the kernel copies everything during the
+    /// call, so the header arrays need only outlive it; they are
+    /// reusable `Vec`s (allocation-free once warm), repointed at the
+    /// caller's encode scratch each send.
+    pub struct TxBatch {
+        addrs: Vec<SockAddrIn>,
+        iovs: Vec<IoVec>,
+        hdrs: Vec<MMsgHdr>,
+    }
+
+    impl TxBatch {
+        pub fn new() -> Self {
+            Self { addrs: Vec::new(), iovs: Vec::new(), hdrs: Vec::new() }
+        }
+
+        /// Send `bytes` to `127.0.0.1:(base_port + dst)` for every
+        /// `dst` in `dsts` via one `sendmmsg` (looping only if the
+        /// kernel accepts a partial batch). Returns datagrams
+        /// accepted; shortfalls are packet loss, which the protocol
+        /// tolerates by contract.
+        pub fn send(&mut self, fd: i32, bytes: &[u8], base_port: u16, dsts: &[usize]) -> usize {
+            let n = dsts.len();
+            self.addrs.clear();
+            self.addrs.extend(dsts.iter().map(|&d| SockAddrIn {
+                sin_family: AF_INET,
+                sin_port: (base_port + d as u16).to_be(),
+                sin_addr: u32::from_be(0x7F00_0001), // 127.0.0.1
+                sin_zero: [0; 8],
+            }));
+            self.iovs.clear();
+            self.iovs.extend((0..n).map(|_| IoVec {
+                // The kernel only reads from a tx iovec; the mutable
+                // pointer is an ABI artifact shared with the rx path.
+                base: bytes.as_ptr() as *mut u8,
+                len: bytes.len(),
+            }));
+            // Headers are built only after `addrs`/`iovs` hold their
+            // final length, so the pointers taken here cannot be
+            // invalidated by a later reallocation.
+            self.hdrs.clear();
+            for i in 0..n {
+                self.hdrs.push(MMsgHdr {
+                    msg_hdr: MsgHdr {
+                        msg_name: &mut self.addrs[i] as *mut SockAddrIn,
+                        msg_namelen: std::mem::size_of::<SockAddrIn>() as u32,
+                        msg_iov: &mut self.iovs[i] as *mut IoVec,
+                        msg_iovlen: 1,
+                        msg_control: std::ptr::null_mut(),
+                        msg_controllen: 0,
+                        msg_flags: 0,
+                    },
+                    msg_len: 0,
+                });
+            }
+            let mut sent = 0;
+            while sent < n {
+                // SAFETY: every msgvec entry points at storage owned
+                // by `self` or at the caller's `bytes`, all live for
+                // the duration of the call; vlen matches the entry
+                // count; the kernel copies before returning.
+                let r = unsafe {
+                    sendmmsg(fd, self.hdrs.as_mut_ptr().add(sent), (n - sent) as u32, 0)
+                };
+                if r <= 0 {
+                    break;
+                }
+                sent += r as usize;
+            }
+            sent
+        }
+    }
 }
 
 /// Cached socket mode (see the module docs' poll-with-budget note).
@@ -202,6 +277,10 @@ pub struct UdpEndpoint {
     /// endpoints never pay for them).
     #[cfg(target_os = "linux")]
     batch: Option<mmsg::Batch>,
+    /// `sendmmsg` headers, allocated on the first multicast (unicast
+    /// endpoints never pay for them).
+    #[cfg(target_os = "linux")]
+    tx: Option<mmsg::TxBatch>,
 }
 
 /// Build `nodes` endpoints on consecutive localhost ports starting at
@@ -222,6 +301,8 @@ pub fn build(nodes: usize, base_port: u16) -> std::io::Result<Vec<UdpEndpoint>> 
                 rxq: VecDeque::with_capacity(RX_BATCH),
                 #[cfg(target_os = "linux")]
                 batch: None,
+                #[cfg(target_os = "linux")]
+                tx: None,
             })
         })
         .collect()
@@ -321,6 +402,28 @@ impl Transport for UdpEndpoint {
         // send mode never blocks on UDP anyway.)
         let _ = self.socket.send_to(&scratch, self.addr_of(dst));
         self.scratch = scratch;
+    }
+
+    /// Batched multicast (see module docs): encode once, hand the
+    /// kernel the whole fan-out in one `sendmmsg` on Linux; the
+    /// portable fallback is the trait's per-destination loop.
+    fn send_many(&mut self, dsts: &[NodeId], pkt: &Packet) {
+        #[cfg(target_os = "linux")]
+        if dsts.len() > 1 {
+            use std::os::unix::io::AsRawFd;
+            let fd = self.socket.as_raw_fd();
+            let base_port = self.base_port;
+            let mut scratch = std::mem::take(&mut self.scratch);
+            pkt.encode(&mut scratch);
+            let tx = self.tx.get_or_insert_with(mmsg::TxBatch::new);
+            // Unreliable by contract: a short batch is packet loss.
+            let _ = tx.send(fd, &scratch, base_port, dsts);
+            self.scratch = scratch;
+            return;
+        }
+        for &dst in dsts {
+            self.send(dst, pkt);
+        }
     }
 
     fn recv_timeout(&mut self, timeout: Duration) -> Option<(NodeId, Packet)> {
@@ -467,6 +570,43 @@ mod tests {
         }
         assert!(queued > 0, "a settled 4-packet burst must batch-drain into the rx queue");
         assert_eq!(b.rx_queued(), 0, "queue fully delivered");
+    }
+
+    #[test]
+    fn multicast_send_many_reaches_every_destination() {
+        // The batched tx twin of the rx burst drain: one `send_many`
+        // per round from the "switch" endpoint must land the same
+        // payload on every worker endpoint (Linux: one `sendmmsg`
+        // syscall per round; elsewhere: the portable loop).
+        let mut eps = build(4, BASE + 112).expect("bind");
+        let mut sw = eps.pop().unwrap(); // node 3 plays the switch
+        let dsts: Vec<NodeId> = (0..3).collect();
+        for round in 0u16..4 {
+            sw.send_many(&dsts, &Packet::pa(round, 3, vec![round as i32, -7]));
+        }
+        for ep in eps.iter_mut() {
+            let mut seqs = Vec::new();
+            for _ in 0..4 {
+                let (src, pkt) =
+                    ep.recv_timeout(Duration::from_secs(2)).expect("fan-out delivery");
+                assert_eq!(src, 3);
+                assert_eq!(pkt.payload[..], [pkt.seq as i32, -7]);
+                seqs.push(pkt.seq);
+            }
+            seqs.sort_unstable();
+            assert_eq!(seqs, [0, 1, 2, 3], "every round reaches every destination");
+        }
+    }
+
+    #[test]
+    fn send_many_to_one_destination_matches_send() {
+        let mut eps = build(2, BASE + 128).expect("bind");
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.send_many(&[1], &Packet::pa(9, 0, vec![5]));
+        let (src, pkt) = b.recv_timeout(Duration::from_secs(2)).expect("delivery");
+        assert_eq!((src, pkt.seq), (0, 9));
+        assert_eq!(pkt.payload[..], [5]);
     }
 
     #[test]

@@ -49,6 +49,9 @@ where
             // switch is the fan-in point — park it on the last core,
             // away from the engine threads pinned from core 0 up.
             let _ = crate::util::affinity::pin_current(crate::util::affinity::last_core());
+            // Multicast fan-out list, rebuilt only when the membership
+            // size changes (scale-up admits workers mid-job).
+            let mut fanout: Vec<crate::net::NodeId> = (0..server.workers()).collect();
             while !stop2.load(Ordering::Relaxed) {
                 // Drain eagerly, then park: the switch is the fan-in
                 // point, and on few-core hosts yielding to peers beats
@@ -63,9 +66,11 @@ where
                     match action {
                         Action::Unicast(dst, out) => transport.send(dst, &out),
                         Action::Multicast(out) => {
-                            for w in 0..server.workers() {
-                                transport.send(w, &out);
+                            if fanout.len() != server.workers() {
+                                fanout.clear();
+                                fanout.extend(0..server.workers());
                             }
+                            transport.send_many(&fanout, &out);
                         }
                     }
                 }

@@ -79,6 +79,46 @@ impl P4sgdSim {
         self.epoch_time_n(samples / self.b, rng)
     }
 
+    /// Straggler-aware epoch time at round-ring depth `depth` — the
+    /// timing mirror of `net/sim`'s chaos model (`[chaos] straggler` /
+    /// `straggler_factor`): every aggregation crossing the straggler's
+    /// port takes `factor` times as long, and a depth-`D` round ring
+    /// lets up to `D - 1` later rounds' compute fly while the slow FA
+    /// is outstanding.
+    ///
+    /// At depth 1 the whole delay lands on the critical path; the ring
+    /// hides the straggler completely once the delayed FA fits inside
+    /// the overlap window, i.e. when
+    /// `factor * (wire + t_agg) <= (depth - 1) * t_round`.
+    pub fn epoch_time_straggler(&self, samples: usize, factor: f64, depth: usize) -> Sim {
+        assert!(factor >= 1.0, "a straggler is never faster than the cluster");
+        assert!(depth >= 1);
+        let t_stage = self.fpga.t_micro(self.d_local());
+        let micro = (self.b / self.mb) as f64;
+        // One round's compute (fwd + bwd pipelines + update) and its
+        // aggregation's return, slowed by the straggler on every FA
+        // (lock-step: the switch waits for the slowest PA).
+        let t_round = 2.0 * micro * t_stage + t_stage * 0.05;
+        let t_fa = (self.mb as f64 * 4.0 / LINK_BYTES_PER_S + self.agg.mean(self.mb)) * factor;
+        let mut now = 0.0f64;
+        let mut inflight = std::collections::VecDeque::with_capacity(depth);
+        for _ in 0..samples / self.b {
+            // Ring full (the round being assembled counts as one):
+            // stall until the oldest FA retires.
+            if inflight.len() == depth {
+                let oldest: f64 = inflight.pop_front().expect("checked non-empty");
+                now = now.max(oldest);
+            }
+            now += t_round;
+            inflight.push_back(now + t_fa);
+        }
+        // Epoch boundary: the ring drains (staleness never crosses it).
+        while let Some(oldest) = inflight.pop_front() {
+            now = now.max(oldest);
+        }
+        now
+    }
+
     /// Vanilla (non-pipelined) MP on the same hardware: whole-mini-batch
     /// forward, one aggregation of B elements, whole-mini-batch backward
     /// (paper Eq. 2; the Fig. 2b schedule).
@@ -203,6 +243,45 @@ mod tests {
         let t8 = sim(5_000, 8, 16).epoch_time(1600, None);
         let speedup = t1 / t8;
         assert!(speedup < 4.0, "speedup {speedup}");
+    }
+
+    #[test]
+    fn depth_ring_hides_a_straggler_within_its_bound() {
+        // Pick a straggler whose delayed FA still fits inside depth 4's
+        // three-round overlap window: depth 4 must absorb it almost
+        // fully while depth 1 eats the whole delay on every round.
+        let s = sim(100_000, 8, 64);
+        let t_stage = s.fpga.t_micro(s.d.div_ceil(s.m));
+        let micro = (s.b / s.mb) as f64;
+        let t_round = 2.0 * micro * t_stage + t_stage * 0.05;
+        let fa = s.mb as f64 * 4.0 / LINK_BYTES_PER_S + s.agg.mean(s.mb);
+        let factor = 2.7 * t_round / fa;
+        assert!(factor > 1.0, "compute-bound regime expected (t_round {t_round}, fa {fa})");
+        assert!(factor * fa <= 3.0 * t_round, "chosen factor must fit the depth-4 bound");
+        let hidden = s.epoch_time_straggler(6400, factor, 4);
+        let clean4 = s.epoch_time_straggler(6400, 1.0, 4);
+        assert!(hidden <= 1.02 * clean4, "depth 4 must hide it: {hidden} vs {clean4}");
+        let hurt = s.epoch_time_straggler(6400, factor, 1);
+        let clean1 = s.epoch_time_straggler(6400, 1.0, 1);
+        assert!(hurt > 1.3 * clean1, "depth 1 must pay the delay: {hurt} vs {clean1}");
+    }
+
+    #[test]
+    fn straggler_penalty_shrinks_monotonically_with_depth() {
+        let s = sim(100_000, 8, 64);
+        let f = 20.0;
+        let t1 = s.epoch_time_straggler(6400, f, 1);
+        let t2 = s.epoch_time_straggler(6400, f, 2);
+        let t4 = s.epoch_time_straggler(6400, f, 4);
+        assert!(t1 >= t2 && t2 >= t4, "{t1} {t2} {t4}");
+        assert!(t1 > t4, "a deep ring must beat the synchronous schedule: {t1} vs {t4}");
+        // and the depth-1 closed form pins the model
+        let t_stage = s.fpga.t_micro(s.d.div_ceil(s.m));
+        let micro = (s.b / s.mb) as f64;
+        let t_round = 2.0 * micro * t_stage + t_stage * 0.05;
+        let fa = (s.mb as f64 * 4.0 / LINK_BYTES_PER_S + s.agg.mean(s.mb)) * f;
+        let closed = (6400 / s.b) as f64 * (t_round + fa);
+        assert!((t1 - closed).abs() < 1e-9 * closed.max(1.0), "{t1} vs {closed}");
     }
 
     #[test]

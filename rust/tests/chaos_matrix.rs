@@ -1,0 +1,175 @@
+//! Deterministic chaos/straggler scenario matrix.
+//!
+//! Every scenario {drop, dup, reorder, straggler, burst} must converge
+//! at every pipeline depth {1, 2, 4} — and because reliability is
+//! exact and SGD is synchronous, each chaos run must produce the same
+//! loss trajectory as the clean run at that depth. A fixed
+//! [`NetConfig::seed`] makes the whole fabric schedule replayable, so
+//! the most hostile combination is additionally asserted bit-identical
+//! across two runs.
+
+use p4sgd::config::SystemConfig;
+use p4sgd::coordinator::mp;
+use p4sgd::data::synth;
+use p4sgd::engine::{Compute, NativeCompute};
+use p4sgd::glm::Loss;
+
+fn native(_w: usize, _e: usize) -> Box<dyn Compute> {
+    Box::new(NativeCompute)
+}
+
+fn base_cfg(depth: usize) -> SystemConfig {
+    let mut c = SystemConfig::default();
+    c.cluster.workers = 2;
+    c.cluster.engines = 2;
+    c.cluster.slots = 8;
+    c.cluster.pipeline_depth = depth;
+    c.train.loss = Loss::LogReg;
+    c.train.lr = 1.0;
+    c.train.batch = 32;
+    c.train.micro_batch = 8;
+    c.train.epochs = 4;
+    c.net.latency_ns = 0;
+    c.net.jitter_ns = 0;
+    c.net.timeout_us = 3000;
+    c.net.seed = 42;
+    c
+}
+
+const SCENARIOS: &[&str] = &["drop", "dup", "reorder", "straggler", "burst"];
+
+fn apply_scenario(cfg: &mut SystemConfig, scenario: &str) {
+    match scenario {
+        "drop" => {
+            cfg.net.drop_prob = 0.08;
+            cfg.net.timeout_us = 500; // recover lost frames promptly
+        }
+        "dup" => cfg.net.dup_prob = 0.08,
+        "reorder" => {
+            cfg.net.latency_ns = 2_000; // reordering needs real delay
+            cfg.net.reorder_prob = 0.25;
+        }
+        "straggler" => {
+            cfg.net.latency_ns = 20_000; // the factor multiplies this
+            cfg.net.chaos.straggler = Some(0);
+            cfg.net.chaos.straggler_factor = 8.0;
+        }
+        "burst" => {
+            cfg.net.chaos.burst_prob = 0.02;
+            cfg.net.chaos.burst_ns = 100_000;
+            cfg.net.chaos.burst_len = 4;
+        }
+        other => panic!("unknown scenario {other:?}"),
+    }
+}
+
+/// Run every scenario at one depth and hold each to the clean
+/// trajectory: chaos may slow the fabric down, never change the math.
+fn run_matrix_at_depth(depth: usize) {
+    let ds = synth::separable(128, 64, Loss::LogReg, 0.0, 21);
+    let clean = mp::train_mp(&base_cfg(depth), &ds, &native);
+    assert!(clean.loss_per_epoch.iter().all(|l| l.is_finite()));
+    for scenario in SCENARIOS {
+        let mut cfg = base_cfg(depth);
+        apply_scenario(&mut cfg, scenario);
+        let rep = mp::train_mp(&cfg, &ds, &native);
+
+        assert_eq!(
+            rep.loss_per_epoch.len(),
+            cfg.train.epochs,
+            "{scenario} at depth {depth}"
+        );
+        assert_eq!(rep.fault.evictions, 0, "{scenario} at depth {depth}: {:?}", rep.fault);
+        let first = rep.loss_per_epoch[0];
+        let last = *rep.loss_per_epoch.last().unwrap();
+        assert!(
+            last < 0.85 * first,
+            "{scenario} at depth {depth} must converge: {:?}",
+            rep.loss_per_epoch
+        );
+        for (e, (a, b)) in rep.loss_per_epoch.iter().zip(&clean.loss_per_epoch).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-4 * a.abs().max(1.0),
+                "{scenario} at depth {depth}, epoch {e}: {a} vs clean {b}"
+            );
+        }
+        if *scenario == "straggler" {
+            assert!(
+                rep.fault.straggler_rounds > 0,
+                "the straggler model must actually delay frames: {:?}",
+                rep.fault
+            );
+        }
+    }
+}
+
+#[test]
+fn matrix_converges_at_depth_one() {
+    run_matrix_at_depth(1);
+}
+
+#[test]
+fn matrix_converges_at_depth_two() {
+    run_matrix_at_depth(2);
+}
+
+#[test]
+fn matrix_converges_at_depth_four() {
+    run_matrix_at_depth(4);
+}
+
+#[test]
+fn hostile_combination_replays_bit_identically() {
+    // Drop + dup + reorder + straggler + bursts all at once, fixed
+    // seed: two runs must agree bit for bit on the loss curve and the
+    // final model. This is the replay contract the chaos harness
+    // exists for — a failure seen once is a failure seen forever.
+    let ds = synth::separable(128, 64, Loss::LogReg, 0.0, 23);
+    let mut cfg = base_cfg(2);
+    cfg.net.drop_prob = 0.05;
+    cfg.net.dup_prob = 0.05;
+    cfg.net.reorder_prob = 0.15;
+    cfg.net.latency_ns = 5_000;
+    cfg.net.timeout_us = 800;
+    cfg.net.chaos.straggler = Some(1);
+    cfg.net.chaos.straggler_factor = 4.0;
+    cfg.net.chaos.burst_prob = 0.02;
+    cfg.net.chaos.burst_ns = 50_000;
+    cfg.net.chaos.burst_len = 3;
+
+    let a = mp::train_mp(&cfg, &ds, &native);
+    let b = mp::train_mp(&cfg, &ds, &native);
+
+    assert!(a.fault.straggler_rounds > 0, "{:?}", a.fault);
+    assert_eq!(a.loss_per_epoch.len(), b.loss_per_epoch.len());
+    for (e, (x, y)) in a.loss_per_epoch.iter().zip(&b.loss_per_epoch).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "epoch {e}: {x} vs {y}");
+    }
+    assert_eq!(a.model.len(), b.model.len());
+    for (j, (x, y)) in a.model.iter().zip(&b.model).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "model[{j}]: {x} vs {y}");
+    }
+}
+
+#[test]
+fn supervised_straggler_is_slowed_but_never_evicted() {
+    // A straggler is slow, not dead: its heartbeats still land well
+    // inside the silence timeout, so supervision must leave it alone
+    // while the depth-4 ring hides most of its delay.
+    let ds = synth::separable(128, 64, Loss::LogReg, 0.0, 29);
+    let mut cfg = base_cfg(4);
+    cfg.cluster.worker_timeout_ms = 400;
+    cfg.net.latency_ns = 20_000;
+    cfg.net.chaos.straggler = Some(0);
+    cfg.net.chaos.straggler_factor = 8.0;
+    let rep = mp::train_mp(&cfg, &ds, &native);
+
+    assert_eq!(rep.fault.evictions, 0, "{:?}", rep.fault);
+    assert_eq!(rep.fault.restores, 0, "{:?}", rep.fault);
+    assert!(rep.fault.straggler_rounds > 0, "{:?}", rep.fault);
+    assert!(rep.agg.heartbeats > 0, "{:?}", rep.agg);
+    assert_eq!(rep.loss_per_epoch.len(), cfg.train.epochs);
+    let first = rep.loss_per_epoch[0];
+    let last = *rep.loss_per_epoch.last().unwrap();
+    assert!(last < 0.85 * first, "{:?}", rep.loss_per_epoch);
+}

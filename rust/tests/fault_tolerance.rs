@@ -172,6 +172,114 @@ fn supervision_and_checkpointing_do_not_change_depth1_numerics() {
 }
 
 #[test]
+fn rejoin_resyncs_in_place_with_zero_restores() {
+    // The in-place resync path: with cluster.rejoin the post-eviction
+    // membership — and therefore every shard assignment — is unchanged,
+    // so the survivors continue from the newest in-memory epoch-boundary
+    // model. No checkpoint directory is even configured: nothing can be
+    // restored from disk, and nothing needs to be.
+    let ds = synth::separable_sparse(192, 256, Loss::LogReg, 0.0, 0.2, 131);
+    let mut cfg = base_cfg(3);
+    cfg.cluster.worker_timeout_ms = 400;
+    cfg.cluster.rejoin = true;
+    cfg.fault.kill_worker = Some(1);
+    cfg.fault.kill_at_frac = 0.5;
+    let rep = mp::train_mp(&cfg, &ds, &native);
+
+    assert_eq!(rep.fault.evictions, 1, "{:?}", rep.fault);
+    assert_eq!(rep.fault.rejoins, 1, "{:?}", rep.fault);
+    assert_eq!(rep.fault.restores, 0, "in-place resync must not touch disk: {:?}", rep.fault);
+    assert!(rep.fault.inplace_resyncs >= 1, "{:?}", rep.fault);
+    assert_eq!(rep.fault.checkpoints, 0, "no dir, no disk writes: {:?}", rep.fault);
+    assert_eq!(rep.loss_per_epoch.len(), cfg.train.epochs);
+    let first = rep.loss_per_epoch[0];
+    let last = *rep.loss_per_epoch.last().unwrap();
+    assert!(last < 0.85 * first, "{:?}", rep.loss_per_epoch);
+    assert_eq!(rep.model.len(), ds.d);
+}
+
+#[test]
+fn mid_run_scale_up_matches_fixed_size_convergence() {
+    // A fresh worker joins after epoch 2: the cluster quiesces at the
+    // boundary, re-partitions over 3 workers, ships the boundary model
+    // in memory, and continues — no restart, no disk, no eviction. The
+    // same synchronous SGD runs either way, so the loss trajectory must
+    // match a fixed 3-worker run to the usual re-partitioning tolerance.
+    let ds = synth::separable(256, 96, Loss::LogReg, 0.0, 137);
+    let mut cfg = base_cfg(2);
+    cfg.cluster.join_epoch = Some(2);
+    cfg.cluster.join_workers = 1;
+    let rep = mp::train_mp(&cfg, &ds, &native);
+
+    assert_eq!(rep.fault.scale_ups, 1, "{:?}", rep.fault);
+    assert_eq!(rep.fault.evictions, 0, "{:?}", rep.fault);
+    assert_eq!(rep.fault.restores, 0, "scale-up must not restart from disk: {:?}", rep.fault);
+    assert_eq!(rep.loss_per_epoch.len(), cfg.train.epochs);
+    assert_eq!(rep.model.len(), ds.d, "the stitched model covers the full feature space");
+
+    let fixed = mp::train_mp(&base_cfg(3), &ds, &native);
+    for (e, (a, b)) in rep.loss_per_epoch.iter().zip(&fixed.loss_per_epoch).enumerate() {
+        // epochs [0,2) ran on 2 workers, the rest on 3 — worker count
+        // does not change the synchronous trajectory beyond fixed-point
+        // wire rounding (see worker_count_does_not_change_convergence)
+        assert!((a - b).abs() < 5e-3 * a.abs().max(1.0), "epoch {e}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn dp_mid_run_scale_up_converges() {
+    // The DP mirror: B stays divisible by the enlarged membership's
+    // workers * MB, the joiner receives the replica in memory, and the
+    // run converges with zero restores.
+    let ds = synth::separable(192, 64, Loss::LogReg, 0.0, 139);
+    let mut cfg = base_cfg(2);
+    cfg.cluster.slots = 16;
+    cfg.train.batch = 48; // divisible by 2*8 and 3*8
+    cfg.cluster.join_epoch = Some(3);
+    cfg.cluster.join_workers = 1;
+    let rep = dp::train_dp(&cfg, &ds, &native);
+
+    assert_eq!(rep.fault.scale_ups, 1, "{:?}", rep.fault);
+    assert_eq!(rep.fault.evictions, 0, "{:?}", rep.fault);
+    assert_eq!(rep.fault.restores, 0, "{:?}", rep.fault);
+    assert_eq!(rep.loss_per_epoch.len(), cfg.train.epochs);
+    assert_eq!(rep.model.len(), ds.d);
+    let first = rep.loss_per_epoch[0];
+    let last = *rep.loss_per_epoch.last().unwrap();
+    assert!(last < 0.85 * first, "{:?}", rep.loss_per_epoch);
+}
+
+#[test]
+fn scale_up_survives_a_later_crash() {
+    // Scale up at epoch 2, then kill one of the original workers at
+    // epoch 4: the eviction machinery must work unchanged over the
+    // enlarged membership (shards re-partition over the survivors from
+    // the newest disk checkpoint).
+    let ds = synth::separable_sparse(192, 256, Loss::LogReg, 0.0, 0.2, 149);
+    let dir = ckpt_dir("scale-crash");
+    let mut cfg = base_cfg(2);
+    cfg.cluster.pipeline_depth = 2;
+    cfg.cluster.worker_timeout_ms = 400;
+    cfg.cluster.checkpoint_interval = 1;
+    cfg.cluster.checkpoint_dir = Some(dir.to_string_lossy().into_owned());
+    cfg.cluster.join_epoch = Some(2);
+    cfg.cluster.join_workers = 1;
+    cfg.fault.kill_worker = Some(1);
+    cfg.fault.kill_at_frac = 0.7; // epoch 4 of 6 — after the join
+    let rep = mp::train_mp(&cfg, &ds, &native);
+
+    assert_eq!(rep.fault.scale_ups, 1, "{:?}", rep.fault);
+    assert_eq!(rep.fault.evictions, 1, "{:?}", rep.fault);
+    assert_eq!(rep.fault.restores, 1, "{:?}", rep.fault);
+    assert_eq!(rep.loss_per_epoch.len(), cfg.train.epochs);
+    assert_eq!(rep.model.len(), ds.d);
+    let first = rep.loss_per_epoch[0];
+    let last = *rep.loss_per_epoch.last().unwrap();
+    assert!(last < 0.85 * first, "{:?}", rep.loss_per_epoch);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn dp_kill_one_worker_survivor_converges() {
     // The DP mirror: 2 replicas, worker 1 crashes; the survivor is
     // re-partitioned onto the full sample range (B stays divisible)
