@@ -1,12 +1,15 @@
 #!/usr/bin/env python3
 """Regression gate over BENCH_*.json files.
 
-Usage: bench_compare.py <previous.json> <current.json> <tolerance>
+Usage: bench_compare.py <previous.json> <current.json> [tolerance]
+       bench_compare.py <previous.json> <current.json> --tolerance X
 
 Compares per-benchmark mean_s between the previous commit's JSON and the
-freshly produced one. Fails (exit 1) if any benchmark present in both
-got slower than `tolerance` times its previous mean. Skips cleanly when
-the baseline is empty or unparsable (the committed files start as schema
+freshly produced one, printing an aligned baseline/current/ratio line
+per metric. Fails (exit 1) if any benchmark present in both got slower
+than the tolerance (default 2.0x) times its previous mean; the bare
+positional form is kept for existing callers. Skips cleanly when the
+baseline is empty or unparsable (the committed files start as schema
 templates until a toolchain-equipped run commits real numbers).
 
 A benchmark that vanishes from the current run normally fails the gate
@@ -44,11 +47,40 @@ def load(path):
         return None
 
 
+def parse_args(argv):
+    """(previous, current, tolerance) from either CLI form; None on
+    usage errors. `--tolerance X` and a bare third positional are
+    equivalent (the flag wins if, confusingly, both are given)."""
+    flag_tol = None
+    positional = []
+    it = iter(argv)
+    for a in it:
+        if a == "--tolerance":
+            nxt = next(it, None)
+            if nxt is None:
+                return None
+            flag_tol = nxt
+        elif a.startswith("--tolerance="):
+            flag_tol = a.split("=", 1)[1]
+        elif a.startswith("-") and a != "-":
+            return None
+        else:
+            positional.append(a)
+    if len(positional) < 2 or len(positional) > 3:
+        return None
+    tol = flag_tol if flag_tol is not None else (positional[2] if len(positional) == 3 else "2.0")
+    try:
+        return positional[0], positional[1], float(tol)
+    except ValueError:
+        return None
+
+
 def main():
-    if len(sys.argv) != 4:
+    parsed = parse_args(sys.argv[1:])
+    if parsed is None:
         print(__doc__)
         return 2
-    prev_path, cur_path, tol = sys.argv[1], sys.argv[2], float(sys.argv[3])
+    prev_path, cur_path, tol = parsed
     prev, cur = load(prev_path), load(cur_path)
     if not prev or not prev.get("results"):
         print(f"no baseline results in {prev_path}; skipping regression gate")
@@ -57,17 +89,19 @@ def main():
         print(f"error: no current results in {cur_path}")
         return 1
     prev_by = {r["name"]: r for r in prev["results"]}
+    width = max(len(n) for n in set(prev_by) | {r["name"] for r in cur["results"]})
+    print(f"  {'':>9}  {'benchmark':<{width}}  {'baseline':>10}  {'current':>10}  ratio")
     failures = []
     for r in cur["results"]:
         p = prev_by.get(r["name"])
         if p is None:
-            print(f"        new: {r['name']} mean {r['mean_s']:.3e}s")
+            print(f"  {'new':>9}: {r['name']:<{width}}  {'-':>10}  {r['mean_s']:>9.3e}s")
             continue
         ratio = r["mean_s"] / p["mean_s"] if p["mean_s"] > 0 else 1.0
         verdict = "REGRESSED" if ratio > tol else "ok"
         print(
-            f"  {verdict:>9}: {r['name']} "
-            f"{p['mean_s']:.3e}s -> {r['mean_s']:.3e}s ({ratio:.2f}x)"
+            f"  {verdict:>9}: {r['name']:<{width}}  "
+            f"{p['mean_s']:>9.3e}s  {r['mean_s']:>9.3e}s  {ratio:.2f}x"
         )
         if ratio > tol:
             failures.append(r["name"])

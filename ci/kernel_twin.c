@@ -1,0 +1,563 @@
+/* kernel_twin.c — C twin of the rust bit-serial kernels, for toolchain-free
+ * validation and baseline measurement.
+ *
+ * Two jobs, one file:
+ *
+ *  1. `parity`: empirically validate the SIMD bitwise-parity contract from
+ *     `rust/src/engine/bitserial.rs` — the AVX2+FMA mask-expand MAC with the
+ *     fixed stride-halving reduction tree must produce the exact same f32
+ *     bits as the 32-lane scalar oracle, across precisions, odd widths, and
+ *     dense/sparse/mixed rows. The twin mirrors the rust kernels line for
+ *     line (same pack layout, same tree, same hybrid density dispatch), so a
+ *     clean run here is direct evidence the rust design is sound on real
+ *     silicon even when no rust toolchain is available.
+ *
+ *  2. `bench`: measure the same shapes `cargo bench --bench kernels` times
+ *     (MB=8, P=4, d in {256, 1024, 4096}; dense, forced-scalar, 1-in-16
+ *     sparse, plane-replay backward, dense backward) with the same harness
+ *     discipline (5 warmup, 30 samples x 5 iters, per-iteration seconds,
+ *     linear-interpolated percentiles) and emit `BENCH_kernels.json` in the
+ *     exact `p4sgd::bench::JsonReport` schema. Used to seed the regression
+ *     gate baseline from a container that has gcc but no cargo.
+ *
+ * Build:  gcc -O2 -o kernel_twin ci/kernel_twin.c -lm
+ *         (the AVX2 kernel carries its own per-function target attribute,
+ *          mirroring rust's #[target_feature] — the rest of the file stays
+ *          at the x86-64 baseline, like the rust scalar path)
+ * Run:    ./kernel_twin parity
+ *         ./kernel_twin bench [out.json]
+ */
+#include <math.h>
+#include <stdint.h>
+#include <stdio.h>
+#include <stdlib.h>
+#include <string.h>
+#include <time.h>
+
+#if defined(__x86_64__)
+#include <immintrin.h>
+#endif
+
+#define LANE 32
+#define MB 8
+#define DENSE_THRESHOLD_FRAC 0.25f
+
+/* ---------- rng (PCG32; only the data *distribution* matters) ---------- */
+
+typedef struct {
+    uint64_t state, inc;
+} pcg32;
+
+static uint32_t pcg_next(pcg32 *r) {
+    uint64_t old = r->state;
+    r->state = old * 6364136223846793005ULL + r->inc;
+    uint32_t xs = (uint32_t)(((old >> 18u) ^ old) >> 27u);
+    uint32_t rot = (uint32_t)(old >> 59u);
+    return (xs >> rot) | (xs << ((32 - rot) & 31));
+}
+
+static pcg32 pcg_seeded(uint64_t seed) {
+    pcg32 r = {0, (seed << 1) | 1};
+    pcg_next(&r);
+    r.state += 0x853c49e6748fea9bULL + seed;
+    pcg_next(&r);
+    return r;
+}
+
+static float rng_f32(pcg32 *r) { return (float)(pcg_next(r) >> 8) * (1.0f / 16777216.0f); }
+
+static float rng_gauss(pcg32 *r) {
+    float u1 = rng_f32(r), u2 = rng_f32(r);
+    if (u1 < 1e-12f) u1 = 1e-12f;
+    return sqrtf(-2.0f * logf(u1)) * cosf(6.28318530717958647692f * u2);
+}
+
+/* ---------- quantize + pack (mirror of data/quantize.rs) ---------- */
+
+static uint32_t quantize(float v, uint32_t precision) {
+    uint32_t levels = (1u << precision) - 1;
+    float hi = 1.0f - 1e-7f;
+    float c = v < 0.0f ? 0.0f : (v > hi ? hi : v);
+    uint32_t q = (uint32_t)floorf(c * (float)(1u << precision));
+    return q < levels ? q : levels;
+}
+
+static float dequantize(uint32_t q, uint32_t precision) {
+    return (float)q / (float)(1ull << precision);
+}
+
+typedef struct {
+    uint32_t *planes;    /* planes[((p*mb)+i)*w + k] */
+    uint32_t *plane_pop; /* plane_pop[p*mb + i] */
+    uint32_t precision;
+    size_t mb, d; /* d padded to a LANE multiple */
+} packed_batch;
+
+static size_t pb_lanes(const packed_batch *pb) { return pb->d / LANE; }
+
+static packed_batch pack_rows(const float *rows, size_t mb, size_t d_in, size_t d_pad,
+                              uint32_t precision) {
+    size_t w = d_pad / LANE;
+    packed_batch pb = {calloc(precision * mb * w, 4), calloc(precision * mb, 4), precision, mb, d_pad};
+    for (size_t i = 0; i < mb; i++) {
+        for (size_t j = 0; j < d_in; j++) {
+            uint32_t q = quantize(rows[i * d_in + j], precision);
+            if (q == 0) continue;
+            size_t lane = j / LANE, bit = j % LANE;
+            for (size_t p = 0; p < precision; p++)
+                if ((q >> (precision - 1 - p)) & 1) pb.planes[(p * mb + i) * w + lane] |= 1u << bit;
+        }
+    }
+    for (size_t r = 0; r < precision * mb; r++) {
+        uint32_t pop = 0;
+        for (size_t k = 0; k < w; k++) pop += (uint32_t)__builtin_popcount(pb.planes[r * w + k]);
+        pb.plane_pop[r] = pop;
+    }
+    return pb;
+}
+
+static void pb_free(packed_batch *pb) {
+    free(pb->planes);
+    free(pb->plane_pop);
+}
+
+/* ---------- scalar kernels (mirror of engine/bitserial.rs) ---------- */
+
+static float tree_reduce32(const float acc[LANE]) {
+    float buf[LANE];
+    memcpy(buf, acc, sizeof buf);
+    for (size_t n = LANE / 2; n >= 1; n /= 2) {
+        for (size_t i = 0; i < n; i++) buf[i] += buf[i + n];
+        if (n == 1) break;
+    }
+    return buf[0];
+}
+
+static float dense_plane_sum_scalar(const uint32_t *words, size_t nw, const float *x) {
+    float acc[LANE] = {0};
+    for (size_t k = 0; k < nw; k++) {
+        uint32_t word = words[k];
+        const float *lanes = x + k * LANE;
+        for (size_t b = 0; b < LANE; b++) acc[b] += (float)((word >> b) & 1u) * lanes[b];
+    }
+    return tree_reduce32(acc);
+}
+
+static float sparse_plane_sum(const uint32_t *words, size_t nw, const float *x) {
+    float sum = 0.0f;
+    for (size_t k = 0; k < nw; k++) {
+        uint32_t word = words[k];
+        size_t xoff = k * LANE;
+        while (word != 0) {
+            sum += x[xoff + (size_t)__builtin_ctz(word)];
+            word &= word - 1;
+        }
+    }
+    return sum;
+}
+
+/* ---------- AVX2+FMA kernel (mirror of bitserial.rs `mod simd`) ---------- */
+
+#if defined(__x86_64__)
+/* {+0.0, 1.0} per lane: 1.0 where wv has the lane's bit set. */
+#define MASK01(wv, bits) \
+    _mm256_and_ps(_mm256_castsi256_ps(_mm256_cmpeq_epi32(_mm256_and_si256((wv), (bits)), (bits))), ones)
+
+__attribute__((target("avx2,fma"))) static float dense_plane_sum_avx2(const uint32_t *words, size_t nw,
+                                                                      const float *x) {
+    __m256i bits0 = _mm256_setr_epi32(1 << 0, 1 << 1, 1 << 2, 1 << 3, 1 << 4, 1 << 5, 1 << 6, 1 << 7);
+    __m256i bits1 =
+        _mm256_setr_epi32(1 << 8, 1 << 9, 1 << 10, 1 << 11, 1 << 12, 1 << 13, 1 << 14, 1 << 15);
+    __m256i bits2 =
+        _mm256_setr_epi32(1 << 16, 1 << 17, 1 << 18, 1 << 19, 1 << 20, 1 << 21, 1 << 22, 1 << 23);
+    __m256i bits3 = _mm256_setr_epi32(1 << 24, 1 << 25, 1 << 26, 1 << 27, 1 << 28, 1 << 29, 1 << 30,
+                                      (int)(1u << 31));
+    __m256 ones = _mm256_set1_ps(1.0f);
+    __m256 a0 = _mm256_setzero_ps(), a1 = _mm256_setzero_ps();
+    __m256 a2 = _mm256_setzero_ps(), a3 = _mm256_setzero_ps();
+    for (size_t k = 0; k < nw; k++) {
+        __m256i wv = _mm256_set1_epi32((int)words[k]);
+        const float *xp = x + k * LANE;
+        a0 = _mm256_fmadd_ps(MASK01(wv, bits0), _mm256_loadu_ps(xp), a0);
+        a1 = _mm256_fmadd_ps(MASK01(wv, bits1), _mm256_loadu_ps(xp + 8), a1);
+        a2 = _mm256_fmadd_ps(MASK01(wv, bits2), _mm256_loadu_ps(xp + 16), a2);
+        a3 = _mm256_fmadd_ps(MASK01(wv, bits3), _mm256_loadu_ps(xp + 24), a3);
+    }
+    /* tree_reduce32 in 8-wide form — same association as the scalar tree. */
+    __m256 h0 = _mm256_add_ps(a0, a2);
+    __m256 h1 = _mm256_add_ps(a1, a3);
+    __m256 q = _mm256_add_ps(h0, h1);
+    __m128 r4 = _mm_add_ps(_mm256_castps256_ps128(q), _mm256_extractf128_ps(q, 1));
+    __m128 r2 = _mm_add_ps(r4, _mm_movehl_ps(r4, r4));
+    __m128 r1 = _mm_add_ss(r2, _mm_shuffle_ps(r2, r2, 1));
+    return _mm_cvtss_f32(r1);
+}
+
+static int simd_active(void) { return __builtin_cpu_supports("avx2") && __builtin_cpu_supports("fma"); }
+#else
+static float dense_plane_sum_avx2(const uint32_t *words, size_t nw, const float *x) {
+    (void)words;
+    (void)nw;
+    (void)x;
+    return 0.0f;
+}
+static int simd_active(void) { return 0; }
+#endif
+
+/* ---------- hybrid forward + backward (mirror of bitserial.rs) ---------- */
+
+static void forward_into(const packed_batch *pb, const float *x, float *out, int use_simd) {
+    size_t w = pb_lanes(pb);
+    float dense_cutoff = DENSE_THRESHOLD_FRAC * (float)pb->d;
+    for (size_t i = 0; i < pb->mb; i++) {
+        float acc = 0.0f;
+        for (size_t p = 0; p < pb->precision; p++) {
+            const uint32_t *words = pb->planes + (p * pb->mb + i) * w;
+            float plane_sum;
+            if ((float)pb->plane_pop[p * pb->mb + i] >= dense_cutoff)
+                plane_sum = use_simd ? dense_plane_sum_avx2(words, w, x)
+                                     : dense_plane_sum_scalar(words, w, x);
+            else
+                plane_sum = sparse_plane_sum(words, w, x);
+            acc += plane_sum * powf(0.5f, (float)(p + 1));
+        }
+        out[i] = acc;
+    }
+}
+
+static float logreg_df(float fa, float y) { return 1.0f / (1.0f + expf(-fa)) - y; }
+
+static void backward_acc_planes(const packed_batch *pb, const float *fa, const float *y, float *g,
+                                float lr) {
+    size_t w = pb_lanes(pb);
+    for (size_t k = 0; k < pb->mb; k++) {
+        float scale = lr * logreg_df(fa[k], y[k]);
+        if (scale == 0.0f) continue;
+        for (size_t p = 0; p < pb->precision; p++) {
+            float contrib = scale * powf(0.5f, (float)(p + 1));
+            const uint32_t *row = pb->planes + (p * pb->mb + k) * w;
+            for (size_t kw = 0; kw < w; kw++) {
+                uint32_t word = row[kw];
+                size_t goff = kw * LANE;
+                while (word != 0) {
+                    g[goff + (size_t)__builtin_ctz(word)] += contrib;
+                    word &= word - 1;
+                }
+            }
+        }
+    }
+}
+
+static void backward_acc_dense(const float *a_dq, size_t mb, size_t d, const float *fa, const float *y,
+                               float *g, float lr) {
+    for (size_t k = 0; k < mb; k++) {
+        float scale = lr * logreg_df(fa[k], y[k]);
+        if (scale == 0.0f) continue;
+        const float *row = a_dq + k * d;
+        for (size_t j = 0; j < d; j++) g[j] += scale * row[j];
+    }
+}
+
+/* ---------- parity mode ---------- */
+
+static uint32_t f32_bits(float v) {
+    uint32_t b;
+    memcpy(&b, &v, 4);
+    return b;
+}
+
+static int parity(void) {
+    if (!simd_active()) {
+        fprintf(stderr, "parity: CPU lacks AVX2+FMA; nothing to validate here\n");
+        return 0;
+    }
+    pcg32 rng = pcg_seeded(42);
+    const uint32_t precisions[] = {1, 2, 4, 8};
+    int cases = 0;
+    for (int it = 0; it < 400; it++) {
+        size_t mb = 1 + pcg_next(&rng) % 8;
+        size_t d = 1 + pcg_next(&rng) % 300;
+        size_t d_pad = ((d + LANE - 1) / LANE) * LANE;
+        uint32_t precision = precisions[pcg_next(&rng) % 4];
+        int mode = (int)(pcg_next(&rng) % 3); /* dense / 5%-sparse / alternating */
+        float *rows = malloc(mb * d * 4);
+        for (size_t j = 0; j < mb * d; j++) {
+            float v = rng_f32(&rng);
+            if (mode == 1 && rng_f32(&rng) >= 0.05f) v = 0.0f;
+            if (mode == 2 && j % 2 == 1) v = 0.0f;
+            rows[j] = v;
+        }
+        float *x = malloc(d_pad * 4);
+        for (size_t j = 0; j < d_pad; j++) x[j] = rng_gauss(&rng);
+        packed_batch pb = pack_rows(rows, mb, d, d_pad, precision);
+        float *got = malloc(mb * 4), *want = malloc(mb * 4);
+        forward_into(&pb, x, got, 1);
+        forward_into(&pb, x, want, 0);
+        for (size_t i = 0; i < mb; i++) {
+            if (f32_bits(got[i]) != f32_bits(want[i])) {
+                fprintf(stderr,
+                        "PARITY FAIL fwd: sample %zu: %a vs %a (P=%u d=%zu mode=%d)\n", i,
+                        (double)got[i], (double)want[i], precision, d, mode);
+                return 1;
+            }
+        }
+        /* word-level kernel pair, bypassing the hybrid dispatch */
+        size_t w = pb_lanes(&pb);
+        float simd = dense_plane_sum_avx2(pb.planes, w, x);
+        float scalar = dense_plane_sum_scalar(pb.planes, w, x);
+        if (f32_bits(simd) != f32_bits(scalar)) {
+            fprintf(stderr, "PARITY FAIL plane-row: %a vs %a (d=%zu)\n", (double)simd,
+                    (double)scalar, d);
+            return 1;
+        }
+        cases++;
+        pb_free(&pb);
+        free(rows);
+        free(x);
+        free(got);
+        free(want);
+    }
+    /* long rows too (the bench shapes) */
+    for (size_t d = 512; d <= 8192; d *= 2) {
+        uint32_t *words = malloc(d / LANE * 4);
+        float *x = malloc(d * 4);
+        for (size_t k = 0; k < d / LANE; k++) words[k] = pcg_next(&rng);
+        for (size_t j = 0; j < d; j++) x[j] = rng_gauss(&rng);
+        float simd = dense_plane_sum_avx2(words, d / LANE, x);
+        float scalar = dense_plane_sum_scalar(words, d / LANE, x);
+        if (f32_bits(simd) != f32_bits(scalar)) {
+            fprintf(stderr, "PARITY FAIL long row d=%zu: %a vs %a\n", d, (double)simd,
+                    (double)scalar);
+            return 1;
+        }
+        cases++;
+        free(words);
+        free(x);
+    }
+    printf("parity OK: avx2 mask-expand MAC bit-identical to scalar tree oracle (%d cases)\n", cases);
+    return 0;
+}
+
+/* ---------- bench mode (mirror of p4sgd::bench harness) ---------- */
+
+#define WARMUP 5
+#define SAMPLES 30
+#define ITERS 5
+
+static double now_s(void) {
+    struct timespec ts;
+    clock_gettime(CLOCK_MONOTONIC, &ts);
+    return (double)ts.tv_sec + (double)ts.tv_nsec * 1e-9;
+}
+
+static int cmp_double(const void *a, const void *b) {
+    double x = *(const double *)a, y = *(const double *)b;
+    return (x > y) - (x < y);
+}
+
+static double pct_sorted(const double *s, int n, double q) {
+    if (n == 1) return s[0];
+    double rank = q / 100.0 * (double)(n - 1);
+    int lo = (int)floor(rank);
+    int hi = (int)ceil(rank);
+    double frac = rank - lo;
+    if (hi > n - 1) hi = n - 1;
+    return s[lo] * (1.0 - frac) + s[hi] * frac;
+}
+
+static char json_buf[65536];
+static size_t json_len;
+
+static void emit(const char *name, double *samp, size_t macs) {
+    qsort(samp, SAMPLES, sizeof(double), cmp_double);
+    double mean = 0;
+    for (int i = 0; i < SAMPLES; i++) mean += samp[i];
+    mean /= SAMPLES;
+    double p50 = pct_sorted(samp, SAMPLES, 50.0), p95 = pct_sorted(samp, SAMPLES, 95.0);
+    printf("%-28s mean %.3e s  p50 %.3e  p95 %.3e  (%.2f Geff-MAC/s)\n", name, mean, p50, p95,
+           (double)macs / mean / 1e9);
+    json_len += (size_t)snprintf(
+        json_buf + json_len, sizeof json_buf - json_len,
+        "%s{\"name\": \"%s\", \"mean_s\": %.9e, \"p50_s\": %.9e, \"p95_s\": %.9e, "
+        "\"samples\": %d, \"eff_mac_per_s\": %.9e}",
+        json_len ? ", " : "", name, mean, p50, p95, SAMPLES, (double)macs / mean);
+}
+
+static void clobber(void *p) { __asm__ volatile("" : : "r"(p) : "memory"); }
+
+#define TIMED(samp, body)                                       \
+    do {                                                        \
+        for (int w_ = 0; w_ < WARMUP; w_++) { body; }           \
+        for (int s_ = 0; s_ < SAMPLES; s_++) {                  \
+            double t0_ = now_s();                               \
+            for (int i_ = 0; i_ < ITERS; i_++) { body; }        \
+            (samp)[s_] = (now_s() - t0_) / ITERS;               \
+        }                                                       \
+    } while (0)
+
+static int bench(const char *out_path) {
+    int use_simd = simd_active();
+    printf("# kernel twin bench (MB=%d, P=4), avx2 %s\n", MB, use_simd ? "active" : "INACTIVE");
+    pcg32 rng = pcg_seeded(0);
+    double samp[SAMPLES];
+    const size_t ds[] = {256, 1024, 4096};
+
+    for (int which = 0; which < 2; which++) { /* 0: dispatch (simd), 1: forced scalar */
+        for (int di = 0; di < 3; di++) {
+            size_t d = ds[di];
+            float *rows = malloc(MB * d * 4), *x = malloc(d * 4), pa[MB];
+            for (size_t j = 0; j < MB * d; j++) rows[j] = rng_f32(&rng);
+            for (size_t j = 0; j < d; j++) x[j] = rng_gauss(&rng);
+            packed_batch pb = pack_rows(rows, MB, d, d, 4);
+            char name[64];
+            snprintf(name, sizeof name, which ? "native_fwd_scalar_d%zu" : "native_fwd_d%zu", d);
+            int simd_here = which ? 0 : use_simd;
+            TIMED(samp, {
+                forward_into(&pb, x, pa, simd_here);
+                clobber(pa);
+            });
+            emit(name, samp, MB * d);
+            pb_free(&pb);
+            free(rows);
+            free(x);
+        }
+    }
+
+    for (int di = 0; di < 3; di++) { /* 1-in-16 sparse: set-bit iteration path */
+        size_t d = ds[di];
+        float *rows = calloc(MB * d, 4), *x = malloc(d * 4), pa[MB];
+        for (size_t j = 0; j < MB * d; j++)
+            if (j % 16 == 0) rows[j] = rng_f32(&rng);
+        for (size_t j = 0; j < d; j++) x[j] = rng_gauss(&rng);
+        packed_batch pb = pack_rows(rows, MB, d, d, 4);
+        char name[64];
+        snprintf(name, sizeof name, "native_fwd_sparse16_d%zu", d);
+        TIMED(samp, {
+            forward_into(&pb, x, pa, use_simd);
+            clobber(pa);
+        });
+        emit(name, samp, MB * d);
+        pb_free(&pb);
+        free(rows);
+        free(x);
+    }
+
+    for (int di = 0; di < 3; di++) {
+        size_t d = ds[di];
+        float *rows = malloc(MB * d * 4), fa[MB], y[MB];
+        for (size_t j = 0; j < MB * d; j++) rows[j] = rng_f32(&rng);
+        for (int k = 0; k < MB; k++) fa[k] = rng_gauss(&rng), y[k] = 1.0f;
+        packed_batch pb = pack_rows(rows, MB, d, d, 4);
+        float *g = calloc(d, 4);
+        char name[64];
+        snprintf(name, sizeof name, "native_bwd_planes_d%zu", d);
+        TIMED(samp, {
+            backward_acc_planes(&pb, fa, y, g, 0.1f);
+            clobber(g);
+        });
+        emit(name, samp, MB * d);
+
+        float *dq = malloc(MB * d * 4);
+        for (size_t i = 0; i < MB; i++)
+            for (size_t j = 0; j < d; j++) dq[i * d + j] = dequantize(quantize(rows[i * d + j], 4), 4);
+        float *g2 = calloc(d, 4);
+        snprintf(name, sizeof name, "native_bwd_dense_d%zu", d);
+        TIMED(samp, {
+            backward_acc_dense(dq, MB, d, fa, y, g2, 0.1f);
+            clobber(g2);
+        });
+        emit(name, samp, MB * d);
+        pb_free(&pb);
+        free(rows);
+        free(g);
+        free(dq);
+        free(g2);
+    }
+
+    FILE *f = fopen(out_path, "w");
+    if (!f) {
+        perror(out_path);
+        return 1;
+    }
+    fprintf(f,
+            "{\"bench\": \"kernels\", \"schema\": 1, \"note\": \"baseline measured by "
+            "ci/kernel_twin.c (gcc -O2, per-function avx2+fma) on a 1-core Xeon 2.70GHz; "
+            "regenerate with cargo bench --bench kernels --features simd\", \"results\": [%s]}\n",
+            json_buf);
+    fclose(f);
+    printf("wrote %s\n", out_path);
+    return 0;
+}
+
+/* ---------- des mode: twin of timing/des.rs epoch_time_n (no jitter) ----------
+ *
+ * `des_fig13_full_series` in benches/epoch.rs is pure float arithmetic (the
+ * pipeline recurrence, deterministic t_agg), so it can be mirrored and
+ * *measured* here — unlike the functional mp-trainer entries, which need the
+ * whole thread/switch stack. Constants mirror timing/models.rs
+ * (FpgaModel::default, AGG_P4SGD, LINK_BYTES_PER_S). */
+
+static double des_epoch_time(size_t d, size_t m, size_t b, size_t mb, size_t samples) {
+    double d_local = ceil((double)d / (double)m);
+    double d_engine = ceil(d_local / 8.0); /* FpgaModel::default engines */
+    double cycles = ceil(d_engine * 4.0 / 64.0);
+    if (cycles < 1.0) cycles = 1.0;
+    double t_stage = cycles / 250e6;
+    size_t micro = b / mb;
+    double wire = (double)mb * 4.0 / 12.5e9;
+    double t_agg = 1.05e-6 + 0.15e-6 + 0.4e-9 * (double)mb; /* AGG_P4SGD mean */
+    double now = 0.0;
+    for (size_t it = 0; it < samples / b; it++) {
+        double fwd_done = now, bwd_done = now;
+        for (size_t j = 0; j < micro; j++) {
+            fwd_done += t_stage;
+            double fa = fwd_done + wire + t_agg;
+            bwd_done = j == 0 ? fa : (bwd_done > fa ? bwd_done : fa);
+            bwd_done += t_stage;
+        }
+        now = bwd_done + t_stage * 0.05;
+    }
+    return now;
+}
+
+static volatile double des_sink;
+
+static int des(void) {
+    /* Mirror of benches/epoch.rs `des_fig13_full_series`, harness
+     * Config { warmup 5, samples 30, iters_per_sample 10 }. */
+    const int DW = 5, DS = 30, DI = 10;
+    double samp[30];
+    for (int s = -DW; s < DS; s++) {
+        double t0 = now_s();
+        int reps = s < 0 ? 1 : DI;
+        for (int i = 0; i < reps; i++) {
+            double acc = 0.0;
+            const size_t dims[] = {47236, 332710};
+            const size_t bs[] = {16, 64};
+            const size_t ms[] = {1, 2, 4, 8};
+            for (int di = 0; di < 2; di++)
+                for (int bi = 0; bi < 2; bi++)
+                    for (int mi = 0; mi < 4; mi++)
+                        acc += des_epoch_time(dims[di], ms[mi], bs[bi], 8,
+                                              100000 / bs[bi] * bs[bi]);
+            des_sink = acc;
+        }
+        if (s >= 0) samp[s] = (now_s() - t0) / DI;
+    }
+    qsort(samp, DS, sizeof(double), cmp_double);
+    double mean = 0;
+    for (int i = 0; i < DS; i++) mean += samp[i];
+    mean /= DS;
+    printf("des_fig13_full_series: mean %.9e p50 %.9e p95 %.9e (series value %.6e)\n", mean,
+           pct_sorted(samp, DS, 50.0), pct_sorted(samp, DS, 95.0), des_sink);
+    return 0;
+}
+
+int main(int argc, char **argv) {
+    const char *mode = argc > 1 ? argv[1] : "parity";
+    if (strcmp(mode, "parity") == 0) return parity();
+    if (strcmp(mode, "bench") == 0) return bench(argc > 2 ? argv[2] : "BENCH_kernels.json");
+    if (strcmp(mode, "des") == 0) return des();
+    fprintf(stderr, "usage: kernel_twin <parity|bench [out.json]|des>\n");
+    return 2;
+}

@@ -13,6 +13,12 @@ use p4sgd::timing::models::{FpgaModel, AGG_P4SGD};
 
 fn main() {
     println!("# end-to-end epoch hot paths");
+    // the same NativeCompute runs under every entry below, so whether
+    // the explicit SIMD dense MAC is dispatched is part of the record
+    println!(
+        "  explicit SIMD dense MAC: {}",
+        if p4sgd::engine::bitserial::simd_active() { "active" } else { "inactive" }
+    );
     let mut json = JsonReport::new("epoch");
 
     // functional: one epoch of distributed MP training, 4 workers

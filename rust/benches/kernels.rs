@@ -10,6 +10,13 @@
 //! hybrid kernel's branchless MAC path) and on 1-in-16 sparse data (the
 //! set-bit iteration path); backward measures the plane-replay kernel
 //! against the dense dequantized reference it replaced.
+//!
+//! The simd-vs-scalar axis: `native_fwd_d*` runs the dispatching
+//! forward (the explicit AVX2/NEON MAC when built with `--features
+//! simd` on a capable CPU), `native_fwd_scalar_d*` pins the scalar
+//! oracle on identical shapes. Their ratio is the explicit-SIMD win;
+//! both entries exist in every build, so the regression gate tracks the
+//! pair regardless of features.
 
 use p4sgd::bench::{run, Config, JsonReport};
 use p4sgd::data::quantize::{dequantized_rows, pack_rows};
@@ -23,6 +30,10 @@ fn main() {
     let mut rng = Pcg32::seeded(0);
     let mut json = JsonReport::new("kernels");
     println!("# L1 hot paths (MB=8, P=4)");
+    println!(
+        "  explicit SIMD dense MAC: {}",
+        if bitserial::simd_active() { "active" } else { "inactive (scalar oracle dispatched)" }
+    );
 
     for d in [256usize, 1024, 4096] {
         let rows: Vec<f32> = (0..8 * d).map(|_| rng.f32()).collect();
@@ -40,6 +51,20 @@ fn main() {
         let gops = (8 * d) as f64 / r.summary.mean / 1e9;
         println!("  -> {gops:.2} Geff-MAC/s");
         json.push(&r, &[("eff_mac_per_s", gops * 1e9)]);
+    }
+
+    // the scalar side of the simd-vs-scalar axis: same shapes, same
+    // data distribution, dense MAC pinned to the bitwise oracle
+    for d in [256usize, 1024, 4096] {
+        let rows: Vec<f32> = (0..8 * d).map(|_| rng.f32()).collect();
+        let pb = pack_rows(&rows, 8, d, d, 4);
+        let x: Vec<f32> = (0..d).map(|_| rng.gauss() as f32).collect();
+        let mut pa = vec![0.0f32; 8];
+        let r = run(&format!("native_fwd_scalar_d{d}"), cfg, || {
+            bitserial::forward_into_scalar(&pb, &x, &mut pa);
+            std::hint::black_box(&mut pa);
+        });
+        json.push(&r, &[("eff_mac_per_s", (8 * d) as f64 / r.summary.mean)]);
     }
 
     for d in [256usize, 1024, 4096] {

@@ -82,6 +82,14 @@ pub struct ClusterConfig {
     /// all-workers-share-cores layout; set it to `engine_threads` to
     /// stripe workers across disjoint cores.
     pub core_offset: usize,
+    /// NUMA-local shard placement (feature `affinity` only): pinned
+    /// engine-pool threads first-touch their model/gradient scratch and
+    /// `mbind` their engines' bit-planes onto their own node. On by
+    /// default — it is a no-op without pinning, on single-node hosts,
+    /// and in serial mode — with `false` as the escape hatch (e.g. to
+    /// A/B the placement win on a multi-socket box). Locality-only:
+    /// numerics are bitwise identical either way.
+    pub numa_local: bool,
     /// Mid-run scale-up: quiesce at this epoch boundary, admit
     /// `join_workers` fresh workers (`Ctrl::Join`), re-partition the
     /// data across the grown membership, ship the current model in
@@ -106,6 +114,7 @@ impl Default for ClusterConfig {
             resume: false,
             rejoin: false,
             core_offset: 0,
+            numa_local: true,
             join_epoch: None,
             join_workers: 1,
         }
@@ -269,6 +278,7 @@ impl SystemConfig {
             "cluster.resume",
             "cluster.rejoin",
             "cluster.core_offset",
+            "cluster.numa_local",
             "cluster.join_epoch",
             "cluster.join_workers",
             "fault.kill_worker",
@@ -324,6 +334,7 @@ impl SystemConfig {
                 rejoin: doc.bool_or("cluster.rejoin", d.cluster.rejoin),
                 core_offset: doc.int_or("cluster.core_offset", d.cluster.core_offset as i64)
                     as usize,
+                numa_local: doc.bool_or("cluster.numa_local", d.cluster.numa_local),
                 join_epoch: match doc.int_or("cluster.join_epoch", -1) {
                     n if n < 0 => None,
                     n => Some(n as usize),
@@ -612,6 +623,7 @@ mod tests {
         assert_eq!(d.cluster.checkpoint_interval, 0, "checkpointing off by default");
         assert!(!d.cluster.resume && !d.cluster.rejoin);
         assert_eq!(d.cluster.core_offset, 0);
+        assert!(d.cluster.numa_local, "NUMA placement defaults on (no-op without pinning)");
         assert_eq!(d.fault.kill_worker, None);
         let cfg = SystemConfig::from_toml(
             r#"
@@ -622,6 +634,7 @@ mod tests {
             resume = true
             rejoin = true
             core_offset = 4
+            numa_local = false
             [fault]
             kill_worker = 1
             kill_at_frac = 0.5
@@ -633,6 +646,7 @@ mod tests {
         assert_eq!(cfg.cluster.checkpoint_dir.as_deref(), Some("/tmp/ckpts"));
         assert!(cfg.cluster.resume && cfg.cluster.rejoin);
         assert_eq!(cfg.cluster.core_offset, 4);
+        assert!(!cfg.cluster.numa_local);
         assert_eq!(cfg.fault.kill_worker, Some(1));
         assert_eq!(cfg.fault.kill_at_frac, 0.5);
     }

@@ -174,13 +174,16 @@ fn run_attempt(
                 // on this thread, or a persistent per-engine pool when
                 // engine_threads > 1. One gradient slot (and backward
                 // ring entry) per pipeline-depth level. Pool threads
-                // stripe across cores by worker when core_offset is set.
-                let mut runner = EngineRunner::with_rounds_at(
+                // stripe across cores by worker when core_offset is
+                // set, and pinned threads place their shard NUMA-locally
+                // unless cluster.numa_local opts out.
+                let mut runner = EngineRunner::with_placement(
                     prep.clone(),
                     &|e| make_compute(global, e),
                     cfg.cluster.engine_threads,
                     depth,
                     w * cfg.cluster.core_offset,
+                    cfg.cluster.numa_local,
                 );
                 if let Some(m0) = model0 {
                     // Restored model: this worker's slice of the full

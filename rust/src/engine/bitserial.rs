@@ -25,6 +25,37 @@
 //! that is 8x less backward memory traffic, and it lets `PreparedShard`
 //! drop the dense copy entirely. [`backward_acc`] keeps the dense form
 //! as the cross-validation reference.
+//!
+//! # Explicit SIMD (`simd` cargo feature) and the bitwise-parity contract
+//!
+//! The dense MAC is the one loop the whole throughput story leans on,
+//! and by default it leans on LLVM auto-vectorizing the 32-lane scalar
+//! form. With the `simd` feature, [`forward_into`] instead dispatches a
+//! hand-written `std::arch` kernel — AVX2+FMA on x86_64, NEON on
+//! aarch64, chosen by runtime CPU detection with the scalar path as the
+//! fallback *and* as the bitwise oracle. Parity is exact, not
+//! approximate, by construction:
+//!
+//! * **Mask-expand multiply is exact.** Each plane word is broadcast
+//!   and compared against per-lane bit masks, yielding a `{+0.0, 1.0}`
+//!   multiplicand per lane — the vector image of the scalar
+//!   `((word >> b) & 1) as f32`. The product `mask * x` is exactly
+//!   representable (it is `±0.0` or `x` itself), so the fused
+//!   multiply-add rounds identically to the scalar mul-then-add.
+//! * **Fan-in uses one fixed reduction tree.** Ordered f32 addition is
+//!   not associative, so both kernels reduce their 32 accumulator
+//!   lanes with the same stride-halving tree
+//!   (`acc[i] += acc[i + 16]`, then `+8`, `+4`, `+2`, `+1` —
+//!   [`tree_reduce32`] in the scalar path, vertical vector adds
+//!   followed by in-register folds in the SIMD paths). The tree is
+//!   expressible at any vector width that divides 16, which is what
+//!   lets an 8-wide AVX2 kernel and a 4-wide NEON kernel produce the
+//!   same bits as each other and as the scalar loop.
+//!
+//! `simd_forward_bitwise_matches_scalar` (property test, compiled under
+//! `--features simd`) asserts `to_bits()` equality across precisions,
+//! odd widths, and dense/sparse/mixed rows; the runner-level twin in
+//! `engine::runner` extends the claim through the thread pool.
 
 use crate::data::quantize::{PackedBatch, LANE};
 use crate::glm::Loss;
@@ -43,16 +74,34 @@ use crate::glm::Loss;
 /// set-bit iteration.
 pub const DENSE_THRESHOLD_FRAC: f32 = 0.25;
 
+/// Fixed stride-halving reduction tree over the 32 accumulator lanes:
+/// `acc[i] += acc[i + 16]`, then `+8`, `+4`, `+2`, `+1`. This exact
+/// association is what every dense-MAC kernel (scalar, AVX2, NEON)
+/// commits to, so plane sums are bit-identical across them — a vector
+/// kernel implements the first halvings as vertical register adds and
+/// the rest as in-register folds (see the module docs).
 #[inline]
-fn is_dense(pop: u32, d: usize) -> bool {
-    pop as f32 >= DENSE_THRESHOLD_FRAC * d as f32
+fn tree_reduce32(acc: &[f32; LANE]) -> f32 {
+    let mut buf = *acc;
+    let mut n = LANE;
+    while n > 1 {
+        n /= 2;
+        for i in 0..n {
+            buf[i] += buf[i + n];
+        }
+    }
+    buf[0]
 }
 
-/// Branchless plane-row sum: every lane multiplies its 0/1 mask bit into
-/// the model value, accumulating in 32 independent lanes so the compiler
-/// can vectorize without reassociating a serial f32 chain.
+/// Branchless plane-row sum, scalar form: every lane multiplies its 0/1
+/// mask bit into the model value, accumulating in 32 independent lanes
+/// so the compiler can vectorize without reassociating a serial f32
+/// chain, then fans in through the fixed reduction tree. This is the
+/// bitwise oracle the explicit SIMD kernels are validated against —
+/// public for the parity property tests and `bench/kernels`'
+/// simd-vs-scalar axis.
 #[inline]
-fn dense_plane_sum(words: &[u32], x: &[f32]) -> f32 {
+pub fn dense_plane_sum_scalar(words: &[u32], x: &[f32]) -> f32 {
     let mut acc = [0.0f32; LANE];
     for (k, &word) in words.iter().enumerate() {
         let lanes = &x[k * LANE..(k + 1) * LANE];
@@ -60,10 +109,78 @@ fn dense_plane_sum(words: &[u32], x: &[f32]) -> f32 {
             *a += ((word >> b) & 1) as f32 * lanes[b];
         }
     }
-    acc.iter().sum()
+    tree_reduce32(&acc)
 }
 
-/// Sparse plane-row sum: iterate set bits only.
+/// Whether [`forward_into`] dispatches the explicit SIMD dense MAC on
+/// this build and CPU: requires the `simd` cargo feature plus runtime
+/// AVX2+FMA (x86_64) or NEON (aarch64). The detection macros cache
+/// their answer, but [`forward_into`] still hoists this to one call per
+/// micro-batch rather than one per plane-row.
+pub fn simd_active() -> bool {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    {
+        std::arch::is_aarch64_feature_detected!("neon")
+    }
+    #[cfg(not(all(feature = "simd", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+    {
+        false
+    }
+}
+
+/// The explicit SIMD dense plane-row MAC, or `None` when the `simd`
+/// feature is off or the CPU lacks AVX2+FMA / NEON. Bit-identical to
+/// [`dense_plane_sum_scalar`] (see the module docs for why). Public for
+/// the parity tests and benches; [`forward_into`] dispatches internally
+/// without the per-call detection.
+pub fn dense_plane_sum_simd(words: &[u32], x: &[f32]) -> Option<f32> {
+    assert!(x.len() >= words.len() * LANE, "x shorter than the plane row");
+    if !simd_active() {
+        return None;
+    }
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        // SAFETY: `simd_active()` verified AVX2 and FMA at runtime.
+        Some(unsafe { simd::dense_plane_sum_avx2(words, x) })
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    {
+        // SAFETY: `simd_active()` verified NEON at runtime.
+        Some(unsafe { simd::dense_plane_sum_neon(words, x) })
+    }
+    #[cfg(not(all(feature = "simd", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+    {
+        None
+    }
+}
+
+/// Dense plane-row MAC as dispatched by the forward: the explicit SIMD
+/// kernel when `use_simd` (callers pass a hoisted [`simd_active`]),
+/// else the scalar oracle. Either way the same bits come out.
+#[inline]
+fn dense_plane_sum(words: &[u32], x: &[f32], use_simd: bool) -> f32 {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if use_simd {
+        // SAFETY: `use_simd` is only true when the caller observed
+        // `simd_active()` — AVX2 and FMA are present at runtime.
+        return unsafe { simd::dense_plane_sum_avx2(words, x) };
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    if use_simd {
+        // SAFETY: `use_simd` is only true when the caller observed
+        // `simd_active()` — NEON is present at runtime.
+        return unsafe { simd::dense_plane_sum_neon(words, x) };
+    }
+    let _ = use_simd;
+    dense_plane_sum_scalar(words, x)
+}
+
+/// Sparse plane-row sum: iterate set bits only, `trailing_zeros` on a
+/// copied word with a clear-lowest-set step — no per-bit shift/test.
 #[inline]
 fn sparse_plane_sum(words: &[u32], x: &[f32]) -> f32 {
     let mut sum = 0.0f32;
@@ -81,18 +198,34 @@ fn sparse_plane_sum(words: &[u32], x: &[f32]) -> f32 {
 
 /// Forward pass over a packed micro-batch, written into `out`
 /// (`out.len() == pb.mb`): `out[k] = A[k] . x`. Allocation-free; the
-/// strategy is picked per plane-row from the pack-time popcount.
+/// strategy is picked per plane-row from the pack-time popcount, with
+/// both the density cutoff (one multiply) and the SIMD CPU probe (one
+/// cached-atomic load) hoisted out of the per-row loop.
 pub fn forward_into(pb: &PackedBatch, x: &[f32], out: &mut [f32]) {
+    forward_into_impl(pb, x, out, simd_active());
+}
+
+/// [`forward_into`] pinned to the scalar dense MAC regardless of build
+/// features — the oracle path the SIMD parity tests and the
+/// simd-vs-scalar bench axis compare against.
+pub fn forward_into_scalar(pb: &PackedBatch, x: &[f32], out: &mut [f32]) {
+    forward_into_impl(pb, x, out, false);
+}
+
+fn forward_into_impl(pb: &PackedBatch, x: &[f32], out: &mut [f32], use_simd: bool) {
     assert_eq!(x.len(), pb.d, "model slice width");
     assert_eq!(out.len(), pb.mb, "PA buffer width");
     let w = pb.lanes();
+    // Density cutoff in set-bit counts, computed once per micro-batch so
+    // the per-row strategy pick is a single compare.
+    let dense_cutoff = DENSE_THRESHOLD_FRAC * pb.d as f32;
     for (i, pa_i) in out.iter_mut().enumerate() {
         let mut acc = 0.0f32;
         for p in 0..pb.precision as usize {
             let base = (p * pb.mb + i) * w;
             let words = &pb.planes[base..base + w];
-            let plane_sum = if is_dense(pb.plane_pop[p * pb.mb + i], pb.d) {
-                dense_plane_sum(words, x)
+            let plane_sum = if pb.plane_pop[p * pb.mb + i] as f32 >= dense_cutoff {
+                dense_plane_sum(words, x, use_simd)
             } else {
                 sparse_plane_sum(words, x)
             };
@@ -162,6 +295,115 @@ pub fn backward_acc(a_dq: &[f32], mb: usize, fa: &[f32], y: &[f32], g: &mut [f32
         for (gj, &aj) in g.iter_mut().zip(row) {
             *gj += scale * aj;
         }
+    }
+}
+
+/// AVX2+FMA dense plane-row MAC. The kernel is the vector image of
+/// [`dense_plane_sum_scalar`]: broadcast each plane word, compare
+/// against per-lane bit constants to get a `{+0.0, 1.0}` mask, FMA the
+/// mask against the model lanes (exact — see the module docs), then fan
+/// the four 8-wide accumulators in through the fixed reduction tree.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod simd {
+    use super::LANE;
+    use std::arch::x86_64::*;
+
+    /// `1 << i` in the i32 form the epi32 lane constants want.
+    const fn b(i: u32) -> i32 {
+        (1u32 << i) as i32
+    }
+
+    /// `{+0.0, 1.0}` per lane: 1.0 where `wv` has the lane's bit set.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn mask01(wv: __m256i, bits: __m256i, ones: __m256) -> __m256 {
+        let m = _mm256_cmpeq_epi32(_mm256_and_si256(wv, bits), bits);
+        _mm256_and_ps(_mm256_castsi256_ps(m), ones)
+    }
+
+    /// # Safety
+    ///
+    /// Requires AVX2 and FMA at runtime (callers gate on
+    /// [`super::simd_active`]) and `x.len() >= words.len() * LANE`.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dense_plane_sum_avx2(words: &[u32], x: &[f32]) -> f32 {
+        debug_assert!(x.len() >= words.len() * LANE);
+        let bits0 = _mm256_setr_epi32(b(0), b(1), b(2), b(3), b(4), b(5), b(6), b(7));
+        let bits1 = _mm256_setr_epi32(b(8), b(9), b(10), b(11), b(12), b(13), b(14), b(15));
+        let bits2 = _mm256_setr_epi32(b(16), b(17), b(18), b(19), b(20), b(21), b(22), b(23));
+        let bits3 = _mm256_setr_epi32(b(24), b(25), b(26), b(27), b(28), b(29), b(30), b(31));
+        let ones = _mm256_set1_ps(1.0);
+        let mut a0 = _mm256_setzero_ps();
+        let mut a1 = _mm256_setzero_ps();
+        let mut a2 = _mm256_setzero_ps();
+        let mut a3 = _mm256_setzero_ps();
+        for (k, &word) in words.iter().enumerate() {
+            let wv = _mm256_set1_epi32(word as i32);
+            let xp = x.as_ptr().add(k * LANE);
+            a0 = _mm256_fmadd_ps(mask01(wv, bits0, ones), _mm256_loadu_ps(xp), a0);
+            a1 = _mm256_fmadd_ps(mask01(wv, bits1, ones), _mm256_loadu_ps(xp.add(8)), a1);
+            a2 = _mm256_fmadd_ps(mask01(wv, bits2, ones), _mm256_loadu_ps(xp.add(16)), a2);
+            a3 = _mm256_fmadd_ps(mask01(wv, bits3, ones), _mm256_loadu_ps(xp.add(24)), a3);
+        }
+        // `tree_reduce32` in 8-wide form: aN holds tree lanes 8N..8N+8,
+        // so n=16 pairs (a0,a2)/(a1,a3), n=8 pairs the halves, and the
+        // remaining strides fold within one register.
+        let h0 = _mm256_add_ps(a0, a2); // buf[i] += buf[i + 16], i in 0..8
+        let h1 = _mm256_add_ps(a1, a3); // buf[i] += buf[i + 16], i in 8..16
+        let q = _mm256_add_ps(h0, h1); // buf[i] += buf[i + 8]
+        let r4 = _mm_add_ps(_mm256_castps256_ps128(q), _mm256_extractf128_ps(q, 1)); // += buf[i + 4]
+        let r2 = _mm_add_ps(r4, _mm_movehl_ps(r4, r4)); // buf[i] += buf[i + 2]
+        let r1 = _mm_add_ss(r2, _mm_shuffle_ps(r2, r2, 1)); // buf[0] += buf[1]
+        _mm_cvtss_f32(r1)
+    }
+}
+
+/// NEON dense plane-row MAC — the 4-wide twin of the AVX2 kernel above,
+/// committing to the same fixed reduction tree so all three kernels
+/// (scalar, AVX2, NEON) produce identical bits.
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+mod simd {
+    use super::LANE;
+    use std::arch::aarch64::*;
+
+    /// # Safety
+    ///
+    /// Requires NEON at runtime (callers gate on [`super::simd_active`])
+    /// and `x.len() >= words.len() * LANE`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dense_plane_sum_neon(words: &[u32], x: &[f32]) -> f32 {
+        debug_assert!(x.len() >= words.len() * LANE);
+        let mut bitvals = [0u32; LANE];
+        for (i, bv) in bitvals.iter_mut().enumerate() {
+            *bv = 1u32 << i;
+        }
+        let mut bits = [vdupq_n_u32(0); 8];
+        for (v, bq) in bits.iter_mut().enumerate() {
+            *bq = vld1q_u32(bitvals.as_ptr().add(4 * v));
+        }
+        let ones = vreinterpretq_u32_f32(vdupq_n_f32(1.0));
+        let mut acc = [vdupq_n_f32(0.0); 8];
+        for (k, &word) in words.iter().enumerate() {
+            let wv = vdupq_n_u32(word);
+            let xp = x.as_ptr().add(k * LANE);
+            for (v, av) in acc.iter_mut().enumerate() {
+                let m = vceqq_u32(vandq_u32(wv, bits[v]), bits[v]);
+                let mask = vreinterpretq_f32_u32(vandq_u32(m, ones));
+                *av = vfmaq_f32(*av, mask, vld1q_f32(xp.add(4 * v)));
+            }
+        }
+        // `tree_reduce32` in 4-wide form: acc[v] holds tree lanes
+        // 4v..4v+4, so n=16 pairs (acc[v], acc[v+4]), n=8 and n=4 pair
+        // the quarters, and the last two strides fold in-register.
+        let u0 = vaddq_f32(acc[0], acc[4]);
+        let u1 = vaddq_f32(acc[1], acc[5]);
+        let u2 = vaddq_f32(acc[2], acc[6]);
+        let u3 = vaddq_f32(acc[3], acc[7]);
+        let t0 = vaddq_f32(u0, u2); // buf[i] += buf[i + 8], i in 0..4
+        let t1 = vaddq_f32(u1, u3); // buf[i] += buf[i + 8], i in 4..8
+        let r = vaddq_f32(t0, t1); // buf[i] += buf[i + 4]
+        let r2 = vadd_f32(vget_low_f32(r), vget_high_f32(r)); // buf[i] += buf[i + 2]
+        vpadds_f32(r2) // buf[0] += buf[1]
     }
 }
 
@@ -336,6 +578,70 @@ mod tests {
                         g_planes[j], g_dense[j]
                     ));
                 }
+            }
+            Ok(())
+        });
+    }
+
+    /// The tentpole parity claim from the module docs: the explicit
+    /// SIMD dense MAC produces the same *bits* as the scalar oracle —
+    /// across precisions, odd widths, and dense/sparse/mixed rows —
+    /// both at the plane-row word level and through the full hybrid
+    /// forward (where it also proves the density dispatch is
+    /// kernel-agnostic). Skips gracefully when the CPU lacks AVX2/NEON.
+    #[cfg(feature = "simd")]
+    #[test]
+    fn simd_forward_bitwise_matches_scalar() {
+        if !simd_active() {
+            eprintln!("simd_forward_bitwise_matches_scalar: CPU lacks AVX2+FMA/NEON; skipping");
+            return;
+        }
+        prop::check("simd forward bits == scalar forward bits", 80, |rng| {
+            let mb = prop::small_size(rng, 1, 8);
+            let d = prop::small_size(rng, 1, 300); // odd widths included
+            let d_pad = d.div_ceil(LANE) * LANE;
+            let precision = [1u32, 2, 4, 8][rng.below_usize(4)];
+            // Dense, sparse, or mixed rows, so both per-row strategies
+            // (and the hoisted cutoff itself) get exercised.
+            let mode = rng.below_usize(3);
+            let rows: Vec<f32> = (0..mb * d)
+                .map(|j| match mode {
+                    0 => rng.f32(),
+                    1 => {
+                        if rng.chance(0.05) {
+                            rng.f32()
+                        } else {
+                            0.0
+                        }
+                    }
+                    _ => {
+                        if j % 2 == 0 {
+                            rng.f32()
+                        } else {
+                            0.0
+                        }
+                    }
+                })
+                .collect();
+            let x: Vec<f32> = (0..d_pad).map(|_| rng.gauss() as f32).collect();
+            let pb = pack_rows(&rows, mb, d, d_pad, precision);
+            let mut got = vec![0.0f32; mb];
+            let mut want = vec![0.0f32; mb];
+            forward_into(&pb, &x, &mut got);
+            forward_into_scalar(&pb, &x, &mut want);
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                if g.to_bits() != w.to_bits() {
+                    return Err(format!(
+                        "sample {i}: {g:?} vs {w:?} (P={precision}, d={d}, mode={mode})"
+                    ));
+                }
+            }
+            // Word-level check of the kernel pair, bypassing dispatch.
+            let row = &pb.planes[..pb.lanes()];
+            let simd = dense_plane_sum_simd(row, &x).expect("simd_active was checked above");
+            let scalar = dense_plane_sum_scalar(row, &x);
+            if simd.to_bits() != scalar.to_bits() {
+                return Err(format!("plane-row kernel: {simd:?} vs {scalar:?} (d={d})"));
             }
             Ok(())
         });

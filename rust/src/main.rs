@@ -48,7 +48,7 @@ fn dispatch(args: &Args) -> Result<()> {
             println!("        [--batch B] [--epochs E] [--dataset NAME]");
             println!("        [--samples N] [--features D] [--drop P] [--dup P] [--reorder P]");
             println!("        [--worker-timeout-ms MS] [--checkpoint-interval E] [--checkpoint-dir DIR]");
-            println!("        [--resume] [--rejoin] [--core-offset K]");
+            println!("        [--resume] [--rejoin] [--core-offset K] [--no-numa-local]");
             println!("        [--join-epoch E] [--join-workers N]  (mid-run scale-up)");
             println!("        [--kill-worker W] [--kill-at FRAC]  (fault injection)");
             println!("        [--chaos-straggler W] [--chaos-factor F]  (seeded chaos)");
@@ -84,6 +84,7 @@ fn train(args: &Args) -> Result<()> {
     cfg.cluster.resume = args.flag("resume");
     cfg.cluster.rejoin = args.flag("rejoin");
     cfg.cluster.core_offset = args.get_or("core-offset", 0usize);
+    cfg.cluster.numa_local = !args.flag("no-numa-local");
     cfg.cluster.join_epoch = match args.get_or("join-epoch", -1i64) {
         n if n < 0 => None,
         n => Some(n as usize),

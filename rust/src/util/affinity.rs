@@ -29,7 +29,17 @@
 //!   **last** allowed core ([`last_core`]), keeping the fan-in point
 //!   off the engine cores.
 //!
-//! NUMA-local shard placement is the remaining roadmap slice.
+//! NUMA-local shard placement (the second roadmap slice) rides on the
+//! pinning: once an engine-pool thread is pinned, it first-touches its
+//! model/gradient scratch and `mbind`s its engines' bit-planes onto its
+//! own node ([`bind_to_current_node`]) so steady-state plane streaming
+//! reads local memory. Like pinning, this needs no crate dependency —
+//! `mbind` and `getcpu` have no glibc wrappers, so they go through a
+//! direct `syscall(2)` declaration (x86_64 and aarch64 numbers only;
+//! other architectures get the stub). Placement is best-effort and
+//! advisory: single-node hosts short-circuit ([`numa_nodes`]), a kernel
+//! refusing `mbind` changes nothing, and `cluster.numa_local = false`
+//! opts out — values never change, only which node backs the pages.
 
 /// Logical index of the last available core — the switch thread's home
 /// (see the module docs; [`pin_current`] maps it into the allowed set).
@@ -92,6 +102,151 @@ pub fn pin_current(_core: usize) -> bool {
     false
 }
 
+/// The two NUMA syscalls glibc wraps for neither glibc nor musl
+/// (`mbind` lives in libnuma, `getcpu` in the vDSO), reached through a
+/// direct `syscall(2)` declaration — same no-crate-dependency rule as
+/// the pinning above, which is why the numbers are per-architecture.
+#[cfg(all(
+    feature = "affinity",
+    target_os = "linux",
+    any(target_arch = "x86_64", target_arch = "aarch64")
+))]
+mod numa_sys {
+    pub type Long = std::ffi::c_long;
+    extern "C" {
+        pub fn syscall(num: Long, ...) -> Long;
+        pub fn sysconf(name: i32) -> Long;
+    }
+    /// `_SC_PAGESIZE` — 30 on both glibc and musl.
+    pub const SC_PAGESIZE: i32 = 30;
+    #[cfg(target_arch = "x86_64")]
+    pub const SYS_GETCPU: Long = 309;
+    #[cfg(target_arch = "aarch64")]
+    pub const SYS_GETCPU: Long = 168;
+    #[cfg(target_arch = "x86_64")]
+    pub const SYS_MBIND: Long = 237;
+    #[cfg(target_arch = "aarch64")]
+    pub const SYS_MBIND: Long = 235;
+}
+
+/// Number of possible NUMA nodes
+/// (`/sys/devices/system/node/possible`); 1 when detection fails or
+/// the stub is active. Placement short-circuits on 1-node hosts.
+#[cfg(all(
+    feature = "affinity",
+    target_os = "linux",
+    any(target_arch = "x86_64", target_arch = "aarch64")
+))]
+pub fn numa_nodes() -> usize {
+    std::fs::read_to_string("/sys/devices/system/node/possible")
+        .ok()
+        .and_then(|s| s.trim().rsplit(['-', ',']).next()?.parse::<usize>().ok())
+        .map(|n| n + 1)
+        .unwrap_or(1)
+}
+
+/// NUMA node the calling thread is executing on right now (`getcpu`),
+/// or `None` when the syscall is unavailable. Meaningful after
+/// [`pin_current`]: a pinned thread cannot migrate off its node.
+#[cfg(all(
+    feature = "affinity",
+    target_os = "linux",
+    any(target_arch = "x86_64", target_arch = "aarch64")
+))]
+pub fn current_node() -> Option<usize> {
+    let mut cpu: u32 = 0;
+    let mut node: u32 = 0;
+    // SAFETY: getcpu writes two u32s through valid pointers; the third
+    // (tcache) argument is ignored since Linux 2.6.24.
+    let rc = unsafe {
+        numa_sys::syscall(
+            numa_sys::SYS_GETCPU,
+            &mut cpu as *mut u32,
+            &mut node as *mut u32,
+            std::ptr::null_mut::<u8>(),
+        )
+    };
+    (rc == 0).then_some(node as usize)
+}
+
+/// Best-effort: bind — and migrate, `MPOL_MF_MOVE` — the pages backing
+/// `buf` onto the calling thread's current node via
+/// `mbind(MPOL_PREFERRED)`. Page-granular by nature: neighbouring heap
+/// objects sharing a boundary page follow along, which is fine for a
+/// locality hint. Returns whether the kernel accepted the binding;
+/// `false` on single-node hosts, empty buffers, or refused syscalls —
+/// callers must treat placement as advisory.
+#[cfg(all(
+    feature = "affinity",
+    target_os = "linux",
+    any(target_arch = "x86_64", target_arch = "aarch64")
+))]
+pub fn bind_to_current_node<T>(buf: &[T]) -> bool {
+    let bytes = std::mem::size_of_val(buf);
+    if bytes == 0 || numa_nodes() <= 1 {
+        return false;
+    }
+    let Some(node) = current_node() else { return false };
+    if node >= 64 {
+        return false; // one nodemask word covers any realistic host
+    }
+    let nodemask: u64 = 1u64 << node;
+    // SAFETY: sysconf is a pure query.
+    let page = unsafe { numa_sys::sysconf(numa_sys::SC_PAGESIZE) };
+    let page = if page > 0 { page as usize } else { 4096 };
+    let addr = buf.as_ptr() as usize;
+    let start = addr & !(page - 1);
+    let len = addr + bytes - start;
+    const MPOL_PREFERRED: numa_sys::Long = 1;
+    const MPOL_MF_MOVE: numa_sys::Long = 1 << 1;
+    // SAFETY: [start, start + len) covers only pages at least partially
+    // backing `buf`, which is live across the call; the nodemask
+    // outlives it; maxnode 65 tells the kernel to consume exactly the
+    // one u64 word (it reads maxnode - 1 bits).
+    let rc = unsafe {
+        numa_sys::syscall(
+            numa_sys::SYS_MBIND,
+            start,
+            len,
+            MPOL_PREFERRED,
+            &nodemask as *const u64,
+            65usize,
+            MPOL_MF_MOVE,
+        )
+    };
+    rc == 0
+}
+
+/// Stub: NUMA detection is off with the feature (or unsupported here).
+#[cfg(not(all(
+    feature = "affinity",
+    target_os = "linux",
+    any(target_arch = "x86_64", target_arch = "aarch64")
+)))]
+pub fn numa_nodes() -> usize {
+    1
+}
+
+/// Stub: no node information without the `affinity` feature.
+#[cfg(not(all(
+    feature = "affinity",
+    target_os = "linux",
+    any(target_arch = "x86_64", target_arch = "aarch64")
+)))]
+pub fn current_node() -> Option<usize> {
+    None
+}
+
+/// Stub: placement silently declines without the `affinity` feature.
+#[cfg(not(all(
+    feature = "affinity",
+    target_os = "linux",
+    any(target_arch = "x86_64", target_arch = "aarch64")
+)))]
+pub fn bind_to_current_node<T>(_buf: &[T]) -> bool {
+    false
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -106,6 +261,40 @@ mod tests {
     #[test]
     fn stub_reports_unpinned() {
         assert!(!pin_current(0));
+    }
+
+    #[test]
+    fn numa_detection_is_sane() {
+        assert!(numa_nodes() >= 1);
+    }
+
+    #[cfg(not(all(
+        feature = "affinity",
+        target_os = "linux",
+        any(target_arch = "x86_64", target_arch = "aarch64")
+    )))]
+    #[test]
+    fn numa_stubs_decline() {
+        assert_eq!(numa_nodes(), 1);
+        assert_eq!(current_node(), None);
+        assert!(!bind_to_current_node(&[0.0f32; 16]));
+    }
+
+    #[cfg(all(
+        feature = "affinity",
+        target_os = "linux",
+        any(target_arch = "x86_64", target_arch = "aarch64")
+    ))]
+    #[test]
+    fn binding_is_best_effort_and_never_corrupts() {
+        // getcpu must answer on any Linux this runs on.
+        assert!(current_node().is_some());
+        let buf = vec![1.0f32; 4096];
+        // On a 1-node host this declines (false); either way the data
+        // must be untouched — placement moves pages, not values.
+        let _ = bind_to_current_node(&buf);
+        assert!(buf.iter().all(|&v| v == 1.0));
+        assert!(!bind_to_current_node::<f32>(&[]), "empty buffers decline");
     }
 
     #[cfg(all(feature = "affinity", target_os = "linux"))]
