@@ -98,6 +98,11 @@ pub struct ClusterConfig {
     pub join_epoch: Option<usize>,
     /// Workers admitted at the `join_epoch` boundary (default 1).
     pub join_workers: usize,
+    /// Cluster **process mode** port plan: node `i` (workers `0..M`,
+    /// switch `M`, coordinator `M+1`) binds `127.0.0.1:(base_port + i)`.
+    /// Every role of one cluster must agree on it; run concurrent
+    /// clusters on disjoint ranges. Ignored in thread mode.
+    pub base_port: u16,
 }
 
 impl Default for ClusterConfig {
@@ -117,6 +122,7 @@ impl Default for ClusterConfig {
             numa_local: true,
             join_epoch: None,
             join_workers: 1,
+            base_port: 46000,
         }
     }
 }
@@ -281,6 +287,7 @@ impl SystemConfig {
             "cluster.numa_local",
             "cluster.join_epoch",
             "cluster.join_workers",
+            "cluster.base_port",
             "fault.kill_worker",
             "fault.kill_at_frac",
             "train.loss",
@@ -341,6 +348,7 @@ impl SystemConfig {
                 },
                 join_workers: doc.int_or("cluster.join_workers", d.cluster.join_workers as i64)
                     as usize,
+                base_port: doc.int_or("cluster.base_port", d.cluster.base_port as i64) as u16,
             },
             fault: FaultConfig {
                 kill_worker: match doc.int_or("fault.kill_worker", -1) {
@@ -476,6 +484,17 @@ impl SystemConfig {
                     c.join_workers
                 );
             }
+        }
+        if c.base_port < 1024 {
+            bail!("cluster.base_port must be >= 1024 (unprivileged range), got {}", c.base_port);
+        }
+        if c.base_port as usize + c.workers + 2 > 65536 {
+            bail!(
+                "cluster.base_port {} leaves no room for {} workers + switch + coordinator \
+                 below port 65536",
+                c.base_port,
+                c.workers
+            );
         }
         let ch = &self.net.chaos;
         if ch.straggler_factor < 1.0 {
@@ -710,6 +729,20 @@ mod tests {
         assert!(cfg.validate().is_err());
         cfg.cluster.join_workers = 0;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn base_port_parses_and_is_bounded() {
+        assert_eq!(SystemConfig::default().cluster.base_port, 46000);
+        let cfg = SystemConfig::from_toml("[cluster]\nbase_port = 48000").unwrap();
+        assert_eq!(cfg.cluster.base_port, 48000);
+        let mut bad = SystemConfig::default();
+        bad.cluster.base_port = 80;
+        assert!(bad.validate().is_err(), "privileged ports rejected");
+        bad.cluster.base_port = 65531;
+        assert!(bad.validate().is_err(), "port plan must fit below 65536");
+        bad.cluster.base_port = 65530; // 65530..=65535: 4 workers + switch + coordinator
+        bad.validate().unwrap();
     }
 
     #[test]

@@ -12,6 +12,7 @@
 
 pub mod dp;
 pub mod mp;
+pub mod process;
 pub mod reference;
 pub(crate) mod supervisor;
 

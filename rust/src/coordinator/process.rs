@@ -1,0 +1,827 @@
+//! Cluster **process mode**: the trainer as N OS processes over kernel
+//! UDP (`train --role {switch,worker,coordinator}`), one socket per
+//! role on the shared base-port plan.
+//!
+//! # Topology
+//!
+//! Node ids are **global worker ids, forever**: workers are nodes
+//! `0..M`, the switch is node `M`, the coordinator node `M+1` (`M` =
+//! `cluster.workers`, the initial membership). Node `i` binds
+//! `127.0.0.1:(cluster.base_port + i)`. Restart attempts over a
+//! shrunken membership run the switch with a **sparse global-id
+//! bitmap** (`P4Switch::with_members`) — nothing renumbers, so a
+//! worker's socket, heartbeat identity, and eviction bit never change
+//! across attempts.
+//!
+//! # Control plane
+//!
+//! Aggregation traffic is the same v1 frame as thread mode; everything
+//! the in-process trainer moved over channels rides the reliable
+//! [`blob`](crate::protocol::blob) layer instead:
+//!
+//! * coordinator → switch: [`ReconfigMsg`] (fresh generation /
+//!   membership) and `Shutdown`;
+//! * coordinator → worker: [`PlanMsg`] (one attempt's marching orders,
+//!   optionally carrying the resume model) and `Shutdown`;
+//! * worker → coordinator: [`PartMsg`] (epoch-boundary checkpoint
+//!   parts, feeding the same checkpoint assembler as thread mode) and
+//!   [`OutcomeMsg`] (the attempt result, with the worker's `AggStats`
+//!   delta).
+//!
+//! All f32s travel as raw bits, and i32 fixed-point aggregation is
+//! commutative — a depth-1 process-mode run produces the **bitwise
+//! identical** final model to the same-seed thread-mode run (the
+//! process test harness asserts exactly that).
+//!
+//! # Supervision
+//!
+//! The coordinator reuses the elastic attempt driver
+//! (`coordinator::run_elastic`) unchanged; only the attempt body
+//! differs:
+//! liveness is "any frame from a member node", silence past
+//! `cluster.worker_timeout_ms` triggers the same `Ctrl::Evict` order to
+//! the switch as thread mode (re-sent periodically — UDP may drop it),
+//! and survivors' aborted outcomes arrive as blobs. A SIGKILLed worker
+//! process is indistinguishable from the paper's failed FPGA: it just
+//! goes silent. Use `rejoin = false` with real process death — rejoin
+//! re-plans the dead worker forever (the livelock guard trips).
+//!
+//! Process mode is model-parallel only and does not support mid-run
+//! scale-up (`join_epoch`) — the CLI rejects both.
+
+use super::supervisor::{Assembler, CkptPart, CkptSink};
+use super::{Attempt, AttemptPlan, TrainReport, WorkerOutcome};
+use crate::config::SystemConfig;
+use crate::coordinator::mp::ComputeFactory;
+use crate::data::partition::shard_vertical;
+use crate::data::quantize::LANE;
+use crate::data::Dataset;
+use crate::engine::EngineRunner;
+use crate::metrics::FaultStats;
+use crate::net::{supervisor_node, switch_node, udp, NodeId, Transport};
+use crate::pipeline::{flush_round, run_minibatch, PipelineScratch, PipelineStats, PreparedShard};
+use crate::protocol::blob::{
+    u64s_to_words, words_to_u64s, BlobOut, BlobRx, Msg, OutcomeMsg, PartMsg, PlanMsg, ReconfigMsg,
+};
+use crate::protocol::{Ctrl, Packet};
+use crate::worker::{AggClient, AggStats};
+use anyhow::{ensure, Context, Result};
+use std::collections::VecDeque;
+use std::path::Path;
+use std::process::{Child, Command, ExitStatus, Stdio};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Exit code of a worker process that executed the `--kill-worker`
+/// crash injection (it vanishes mid-epoch, like a SIGKILL).
+pub const KILL_EXIT: i32 = 86;
+
+// ---------------------------------------------------------------------------
+// Blob bookkeeping shared by both endpoints of the control plane
+// ---------------------------------------------------------------------------
+
+/// Outbound blobs + reassembly for one endpoint: monotone ids, due-date
+/// pumping, and a record of blobs whose receiver never answered.
+struct Wire {
+    rx: BlobRx,
+    outbox: Vec<BlobOut>,
+    next_id: u32,
+    failed: Vec<u32>,
+}
+
+impl Wire {
+    fn new() -> Self {
+        Wire { rx: BlobRx::new(), outbox: Vec::new(), next_id: 1, failed: Vec::new() }
+    }
+
+    /// Queue `msg` for `dst`; returns the blob id for delivery checks.
+    fn send_msg(&mut self, dst: NodeId, msg: &Msg) -> u32 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.outbox.push(BlobOut::new(id, dst, msg.encode()));
+        id
+    }
+
+    /// (Re)send due fragments; completed blobs drop out of the outbox,
+    /// dead ones (whole retry budget spent) land in `failed`.
+    fn pump(&mut self, send: &mut dyn FnMut(NodeId, &Packet)) {
+        let now = Instant::now();
+        for b in self.outbox.iter_mut() {
+            b.pump(now, send);
+        }
+        let failed = &mut self.failed;
+        self.outbox.retain(|b| {
+            if b.failed() {
+                failed.push(b.id());
+                return false;
+            }
+            !b.done()
+        });
+    }
+
+    fn on_ack(&mut self, src: NodeId, pkt: &Packet) {
+        for b in self.outbox.iter_mut() {
+            if b.id() == pkt.bm && b.dst() == src {
+                b.on_ack(pkt.seq);
+            }
+        }
+    }
+
+    /// Feed one `Ctrl::Blob` frame; returns the decoded message when
+    /// this fragment completes one.
+    fn on_frag(
+        &mut self,
+        src: NodeId,
+        pkt: &Packet,
+        send: &mut dyn FnMut(NodeId, &Packet),
+    ) -> Option<Msg> {
+        let (_, words) = self.rx.on_frag(src, pkt, send)?;
+        Msg::decode(&words)
+    }
+
+    /// Blob `id` was fully acknowledged.
+    fn delivered(&self, id: u32) -> bool {
+        !self.failed.contains(&id) && !self.outbox.iter().any(|b| b.id() == id)
+    }
+
+    fn has_failed(&self, id: u32) -> bool {
+        self.failed.contains(&id)
+    }
+
+    /// Nothing left in flight.
+    fn idle(&self) -> bool {
+        self.outbox.is_empty()
+    }
+}
+
+/// `AggStats` counters accumulated **this attempt** (the client is
+/// long-lived across attempts), in the fixed field order of
+/// [`agg_stats_from_words`].
+fn agg_stats_words(cur: &AggStats, base: &AggStats) -> Vec<i32> {
+    u64s_to_words(&[
+        cur.pa_sent - base.pa_sent,
+        cur.acks_sent - base.acks_sent,
+        cur.retransmits - base.retransmits,
+        cur.fa_received - base.fa_received,
+        cur.dup_fa - base.dup_fa,
+        cur.confirms - base.confirms,
+        cur.stale - base.stale,
+        cur.stale_gen - base.stale_gen,
+        cur.resyncs - base.resyncs,
+        cur.heartbeats - base.heartbeats,
+    ])
+}
+
+fn agg_stats_from_words(w: &[i32]) -> AggStats {
+    let v = words_to_u64s(w, 10);
+    AggStats {
+        pa_sent: v[0],
+        acks_sent: v[1],
+        retransmits: v[2],
+        fa_received: v[3],
+        dup_fa: v[4],
+        confirms: v[5],
+        stale: v[6],
+        stale_gen: v[7],
+        resyncs: v[8],
+        heartbeats: v[9],
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The switch process
+// ---------------------------------------------------------------------------
+
+/// `train --role switch`: bind node `M` and pump the P4 state machine
+/// until the coordinator's `Shutdown` blob arrives.
+pub fn run_switch(cfg: &SystemConfig) -> Result<()> {
+    cfg.validate()?;
+    let m = cfg.cluster.workers;
+    let ep = udp::bind_one(switch_node(m), cfg.cluster.base_port)
+        .with_context(|| format!("binding switch node {} (stale process on the port?)", switch_node(m)))?;
+    crate::switch::runner::run_process_switch(ep, m, cfg.train.micro_batch, cfg.cluster.fa_ring());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// The worker process
+// ---------------------------------------------------------------------------
+
+/// Drain blob frames captured by the client's poll loop, feed acks and
+/// reassembly, and retransmit due fragments.
+fn pump_worker_wire<T: Transport>(
+    wire: &mut Wire,
+    inbox: &mut VecDeque<Msg>,
+    agg: &mut AggClient<T>,
+) {
+    while let Some((src, pkt)) = agg.take_ctrl() {
+        match pkt.ctrl {
+            Ctrl::BlobAck => wire.on_ack(src, &pkt),
+            Ctrl::Blob => {
+                if let Some(msg) = wire.on_frag(src, &pkt, &mut |d, p| agg.send_ctrl(d, p)) {
+                    inbox.push_back(msg);
+                }
+            }
+            _ => {}
+        }
+    }
+    wire.pump(&mut |d, p| agg.send_ctrl(d, p));
+}
+
+/// `train --role worker --worker-id G`: bind node `G`, join the
+/// cluster, and serve attempts until the coordinator says `Shutdown`.
+///
+/// The worker is long-lived across attempts: it keeps one `AggClient`
+/// (socket, heartbeat clock, stats) and loops *wait for plan → run
+/// attempt → report outcome*. A plan that excludes this worker (it was
+/// evicted without `rejoin`) just means "keep waiting" — a later plan
+/// may readmit it.
+pub fn run_worker(
+    cfg: &SystemConfig,
+    ds: &Dataset,
+    make_compute: &ComputeFactory,
+    global: usize,
+) -> Result<()> {
+    cfg.validate()?;
+    let m_init = cfg.cluster.workers;
+    ensure!(global < m_init, "--worker-id {global} out of range (workers = {m_init})");
+    ensure!(cfg.cluster.worker_timeout_ms > 0, "process mode requires supervision (worker_timeout_ms > 0)");
+    let coord = supervisor_node(m_init);
+    let ep = udp::bind_one(global, cfg.cluster.base_port)
+        .with_context(|| format!("binding worker node {global}"))?;
+    let mut agg = AggClient::new(
+        ep,
+        switch_node(m_init),
+        global,
+        cfg.cluster.effective_window(),
+        Duration::from_micros(cfg.net.timeout_us),
+    );
+    let hb = Duration::from_millis((cfg.cluster.worker_timeout_ms / 4).max(1));
+    agg.enable_heartbeat(coord, hb);
+    agg.heartbeat_now();
+    let mut wire = Wire::new();
+    let mut inbox: VecDeque<Msg> = VecDeque::new();
+    loop {
+        // Plan-wait: stay live (heartbeats flow inside poll) and keep
+        // the blob engine pumping. Generation bumps observed here are
+        // old news — the next plan names the generation authoritatively.
+        let plan = loop {
+            match inbox.pop_front() {
+                Some(Msg::Shutdown) => return Ok(()),
+                Some(Msg::Plan(p)) => break p,
+                Some(_) => continue, // not worker business: drop
+                None => {
+                    let _ = agg.poll(Duration::from_millis(2));
+                    let _ = agg.take_bump();
+                    pump_worker_wire(&mut wire, &mut inbox, &mut agg);
+                }
+            }
+        };
+        let Some(local) = plan.members.iter().position(|&g| g == global) else {
+            continue; // not in this attempt: wait for readmission
+        };
+        run_attempt_body(cfg, ds, make_compute, &mut agg, &mut wire, &mut inbox, &plan, local, global, coord);
+    }
+}
+
+/// One attempt on a worker process — the process-mode twin of the
+/// worker closure in `mp::run_attempt`, with checkpoint parts and the
+/// outcome travelling as blobs instead of channel sends.
+#[allow(clippy::too_many_arguments)]
+fn run_attempt_body<T: Transport>(
+    cfg: &SystemConfig,
+    ds: &Dataset,
+    make_compute: &ComputeFactory,
+    agg: &mut AggClient<T>,
+    wire: &mut Wire,
+    inbox: &mut VecDeque<Msg>,
+    plan: &PlanMsg,
+    local: usize,
+    global: usize,
+    coord: NodeId,
+) {
+    let t = &cfg.train;
+    let m = plan.members.len();
+    let depth = cfg.cluster.pipeline_depth;
+    let base_stats = agg.stats;
+    agg.set_generation(plan.generation);
+    // Announce before the (potentially long) shard prep so the
+    // coordinator's grace window starts from real liveness.
+    agg.heartbeat_now();
+    let shard = shard_vertical(ds, m, local, LANE);
+    let (slice_lo, slice_hi) = (shard.slice.lo, shard.slice.hi);
+    let prep =
+        Arc::new(PreparedShard::prepare(&shard, cfg.cluster.engines, t.micro_batch, t.precision));
+    let mut runner = EngineRunner::with_placement(
+        prep.clone(),
+        &|e| make_compute(global, e),
+        cfg.cluster.engine_threads,
+        depth,
+        local * cfg.cluster.core_offset,
+        cfg.cluster.numa_local,
+    );
+    if let Some(m0) = &plan.model0 {
+        runner.set_model(&m0[slice_lo..slice_hi]);
+    }
+    let per_batch = t.batch / t.micro_batch;
+    let batches = prep.micro_batches() / per_batch;
+    let kill_at = if plan.kill_armed
+        && cfg.fault.kill_worker == Some(global)
+        && plan.start_epoch < t.epochs
+    {
+        let ke = ((cfg.fault.kill_at_frac * t.epochs as f64) as usize)
+            .clamp(plan.start_epoch, t.epochs - 1);
+        Some((ke, batches / 2))
+    } else {
+        None
+    };
+    // Mirrors run_elastic's collect_parts (supervision is always on in
+    // process mode, so in practice this is always true).
+    let collect = cfg.cluster.worker_timeout_ms > 0
+        || (cfg.cluster.checkpoint_interval > 0 && cfg.cluster.checkpoint_dir.is_some())
+        || plan.stop_epoch < t.epochs;
+    let mut pstats = PipelineStats::default();
+    let mut scratch = PipelineScratch::with_depth(depth);
+    let mut loss_curve = Vec::with_capacity(plan.stop_epoch.saturating_sub(plan.start_epoch));
+    let mut aborted = false;
+    'epochs: for e in plan.start_epoch..plan.stop_epoch {
+        let mut epoch_loss = 0.0f32;
+        for b in 0..batches {
+            if kill_at == Some((e, b)) {
+                // Simulated crash: this OS process vanishes mid-epoch —
+                // no Leave, no outcome, no further packets. The
+                // coordinator's silence timeout evicts us.
+                std::process::exit(KILL_EXIT);
+            }
+            epoch_loss += run_minibatch(
+                &mut runner,
+                agg,
+                b * per_batch,
+                per_batch,
+                t.loss,
+                t.lr,
+                &mut pstats,
+                &mut scratch,
+            );
+            // Between rounds: retransmit part blobs, absorb their acks.
+            pump_worker_wire(wire, inbox, agg);
+            if agg.interrupted() {
+                aborted = true;
+                break 'epochs;
+            }
+        }
+        epoch_loss += flush_round(&mut runner, agg, t.loss, t.lr, &mut pstats, &mut scratch);
+        if agg.interrupted() {
+            aborted = true;
+            break 'epochs;
+        }
+        loss_curve.push(epoch_loss);
+        if collect && e + 1 < t.epochs {
+            wire.send_msg(
+                coord,
+                &Msg::Part(PartMsg {
+                    generation: plan.generation,
+                    worker: local,
+                    epoch: e + 1,
+                    curve: loss_curve.clone(),
+                    part: runner.model(),
+                }),
+            );
+        }
+    }
+    let _ = agg.take_bump();
+    let model = if aborted { Vec::new() } else { runner.model() };
+    wire.send_msg(
+        coord,
+        &Msg::Outcome(OutcomeMsg {
+            generation: plan.generation,
+            worker: local,
+            aborted,
+            curve: loss_curve,
+            model,
+            agg_words: agg_stats_words(&agg.stats, &base_stats),
+        }),
+    );
+    // The coordinator is waiting on the outcome (and any trailing
+    // parts): drain the outbox before returning to plan-wait. Bounded —
+    // a dead coordinator must not wedge the worker forever.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while !wire.idle() && Instant::now() < deadline {
+        let _ = agg.poll(Duration::from_millis(2));
+        let _ = agg.take_bump();
+        pump_worker_wire(wire, inbox, agg);
+    }
+    agg.send_leave(coord);
+}
+
+// ---------------------------------------------------------------------------
+// The coordinator process
+// ---------------------------------------------------------------------------
+
+/// `train --role coordinator`: bind node `M+1`, drive training attempts
+/// over the live switch/worker processes, and return the stitched
+/// report. The whole membership lifecycle (resume, eviction policy,
+/// livelock guard) is `coordinator::run_elastic`, unchanged — only the
+/// attempt body speaks UDP.
+pub fn run_coordinator(cfg: &SystemConfig, ds: &Dataset) -> Result<TrainReport> {
+    cfg.validate()?;
+    ensure!(ds.d >= cfg.cluster.workers, "need at least one feature per worker");
+    ensure!(cfg.cluster.worker_timeout_ms > 0, "process mode requires supervision (worker_timeout_ms > 0)");
+    ensure!(cfg.cluster.join_epoch.is_none(), "process mode does not support mid-run scale-up");
+    let m_init = cfg.cluster.workers;
+    let switch = switch_node(m_init);
+    let mut ep = udp::bind_one(supervisor_node(m_init), cfg.cluster.base_port)
+        .context("binding coordinator endpoint")?;
+    let mut wire = Wire::new();
+    let report = super::run_elastic(
+        cfg,
+        ds.d,
+        &|members: &[usize]| {
+            assert!(!members.is_empty(), "every worker was evicted — nothing can resume");
+            assert!(ds.d >= members.len(), "need at least one feature per worker");
+        },
+        &|outcomes: &[WorkerOutcome]| {
+            // Vertical partitions stitch in worker order (same as MP).
+            let mut model = Vec::with_capacity(ds.d);
+            for o in outcomes {
+                model.extend_from_slice(&o.model);
+            }
+            model
+        },
+        &mut |plan: &AttemptPlan<'_>, fault: &mut FaultStats| {
+            run_wire_attempt(cfg, ds, &mut ep, &mut wire, plan, fault)
+        },
+    );
+    // Wind the cluster down: the switch and every worker exit on their
+    // Shutdown blob. Dead workers never ack — their blobs are abandoned
+    // at the deadline.
+    wire.send_msg(switch, &Msg::Shutdown);
+    for g in 0..m_init {
+        wire.send_msg(g, &Msg::Shutdown);
+    }
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !wire.idle() && Instant::now() < deadline {
+        if let Some((src, pkt)) = ep.recv_timeout(Duration::from_millis(2)) {
+            match pkt.ctrl {
+                Ctrl::BlobAck => wire.on_ack(src, &pkt),
+                Ctrl::Blob => {
+                    // A straggling re-sent outcome: ack it (so the
+                    // sender stops), drop the message.
+                    let _ = wire.on_frag(src, &pkt, &mut |d, p| ep.send(d, p));
+                }
+                _ => {}
+            }
+        }
+        wire.pump(&mut |d, p| ep.send(d, p));
+    }
+    Ok(report)
+}
+
+/// One attempt over the wire: reconfigure the switch, ship plans,
+/// supervise until every member reported an outcome or was evicted.
+fn run_wire_attempt(
+    cfg: &SystemConfig,
+    ds: &Dataset,
+    ep: &mut udp::UdpEndpoint,
+    wire: &mut Wire,
+    plan: &AttemptPlan<'_>,
+    fault: &mut FaultStats,
+) -> Attempt {
+    let t = &cfg.train;
+    let m = plan.members.len();
+    let switch = switch_node(cfg.cluster.workers);
+    let timeout = Duration::from_millis(cfg.cluster.worker_timeout_ms);
+    let mut gen = plan.generation;
+    let save_dir = if cfg.cluster.checkpoint_interval > 0 {
+        plan.ckpt_dir.map(|p| p.to_path_buf())
+    } else {
+        None
+    };
+
+    // 1. The switch adopts this attempt's membership/generation first —
+    //    otherwise early PAs would bounce as stale.
+    let mask: u32 = plan.members.iter().fold(0u32, |a, &g| a | (1 << g));
+    let rid = wire.send_msg(
+        switch,
+        &Msg::Reconfig(ReconfigMsg {
+            generation: gen,
+            members_mask: mask,
+            payload_len: t.micro_batch,
+            fa_ring: cfg.cluster.fa_ring(),
+        }),
+    );
+    while !wire.delivered(rid) {
+        assert!(!wire.has_failed(rid), "switch process unreachable (reconfig never acknowledged)");
+        wire.pump(&mut |d, p| ep.send(d, p));
+        if let Some((src, pkt)) = ep.recv_timeout(Duration::from_millis(2)) {
+            if pkt.ctrl == Ctrl::BlobAck {
+                wire.on_ack(src, &pkt);
+            }
+        }
+    }
+
+    // 2. Marching orders to every member. Delivery overlaps the
+    //    supervision below: a dead worker never acks its plan and is
+    //    evicted by silence like any other.
+    for &g in plan.members {
+        wire.send_msg(
+            g,
+            &Msg::Plan(PlanMsg {
+                generation: gen,
+                start_epoch: plan.start_epoch,
+                stop_epoch: plan.stop_epoch,
+                members: plan.members.to_vec(),
+                model0: plan.model0.map(|m0| m0.to_vec()),
+                kill_armed: plan.kill_armed,
+            }),
+        );
+    }
+
+    // 3. Supervise: liveness = any frame from a member node; checkpoint
+    //    parts feed the same assembler as thread mode; silence past the
+    //    timeout orders the switch to evict (re-sent — UDP drops).
+    let mut asm = plan.collect_parts.then(|| {
+        Assembler::new(CkptSink {
+            dir: save_dir,
+            interval: cfg.cluster.checkpoint_interval,
+            parts_expected: m,
+            start_epoch: plan.start_epoch,
+            prefix: plan.curve_prefix.to_vec(),
+            rounds_per_epoch: ((ds.n / t.micro_batch) / (t.batch / t.micro_batch)) as u64,
+            rng: cfg.net.seed,
+        })
+    });
+    let mut last_heard = vec![Instant::now(); m];
+    let mut outcomes: Vec<Option<WorkerOutcome>> = (0..m).map(|_| None).collect();
+    let mut evicted: Vec<usize> = Vec::new();
+    let mut evicted_mask = 0u32; // over global ids, like the switch's
+    let mut last_order = Instant::now();
+    loop {
+        if let Some((src, pkt)) = ep.recv_timeout(Duration::from_millis(2)) {
+            let local = plan.members.iter().position(|&g| g == src);
+            if let Some(l) = local {
+                last_heard[l] = Instant::now();
+            }
+            match pkt.ctrl {
+                Ctrl::BlobAck => wire.on_ack(src, &pkt),
+                Ctrl::Blob => match wire.on_frag(src, &pkt, &mut |d, p| ep.send(d, p)) {
+                    Some(Msg::Part(p))
+                        if p.generation == plan.generation && local == Some(p.worker) =>
+                    {
+                        if let Some(a) = asm.as_mut() {
+                            a.feed(
+                                CkptPart {
+                                    worker: p.worker,
+                                    epoch: p.epoch,
+                                    part: p.part,
+                                    curve: p.curve,
+                                },
+                                gen,
+                                fault,
+                            );
+                        }
+                    }
+                    Some(Msg::Outcome(o))
+                        if o.generation == plan.generation && local == Some(o.worker) =>
+                    {
+                        outcomes[o.worker] = Some(WorkerOutcome {
+                            worker: o.worker,
+                            model: o.model,
+                            loss_curve: o.curve,
+                            // Pipeline counters stay worker-local in
+                            // process mode (the report shows zeros).
+                            pipeline: PipelineStats::default(),
+                            agg: agg_stats_from_words(&o.agg_words),
+                            aborted: o.aborted,
+                        });
+                    }
+                    _ => {} // stale generation, foreign sender, or hostile
+                },
+                _ => {} // Join heartbeats / Leave: liveness only
+            }
+        }
+        wire.pump(&mut |d, p| ep.send(d, p));
+        let now = Instant::now();
+        for (l, &g) in plan.members.iter().enumerate() {
+            if outcomes[l].is_some() || (evicted_mask >> g) & 1 == 1 {
+                continue;
+            }
+            if now.duration_since(last_heard[l]) > timeout {
+                evicted.push(l);
+                evicted_mask |= 1 << g;
+                gen = gen.wrapping_add(1);
+                fault.evictions += 1;
+                ep.send(switch, &Packet::evict(1 << g, gen));
+                last_order = now;
+            }
+        }
+        if evicted_mask != 0 && now.duration_since(last_order) > timeout / 2 {
+            // The order or the switch's notice may have been dropped:
+            // re-announce (idempotent at the switch).
+            last_order = now;
+            ep.send(switch, &Packet::evict(evicted_mask, gen));
+        }
+        if plan
+            .members
+            .iter()
+            .enumerate()
+            .all(|(l, &g)| outcomes[l].is_some() || (evicted_mask >> g) & 1 == 1)
+        {
+            break;
+        }
+    }
+    Attempt {
+        outcomes: outcomes.into_iter().flatten().collect(),
+        evicted,
+        generation: gen,
+        mem_ckpt: asm.and_then(|a| a.into_mem_ckpt()),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Report file (machine-readable run summary)
+// ---------------------------------------------------------------------------
+
+/// Write a machine-readable JSON run summary (`train --report PATH`,
+/// thread and coordinator roles alike). `model_bits` carries the final
+/// model as raw f32 bit patterns so harnesses can assert **bitwise**
+/// model agreement across modes (depth 1 is exact by design).
+pub fn write_report(path: &Path, report: &TrainReport, n_samples: usize) -> std::io::Result<()> {
+    fn jf32(v: f32) -> String {
+        if v.is_finite() {
+            format!("{v:?}")
+        } else {
+            "null".to_string()
+        }
+    }
+    let loss: Vec<String> =
+        report.loss_per_epoch.iter().map(|l| jf32(l / n_samples as f32)).collect();
+    let final_loss =
+        report.loss_per_epoch.last().map_or("null".to_string(), |l| jf32(l / n_samples as f32));
+    let bits: Vec<String> = report.model.iter().map(|v| v.to_bits().to_string()).collect();
+    let f = &report.fault;
+    let a = &report.agg;
+    let json = format!(
+        "{{\n  \"schema\": 1,\n  \"samples\": {},\n  \"epochs\": {},\n  \"wall_secs\": {},\n  \
+         \"loss_per_epoch\": [{}],\n  \"final_loss_per_sample\": {},\n  \"model_width\": {},\n  \
+         \"model_bits\": [{}],\n  \"evictions\": {},\n  \"rejoins\": {},\n  \
+         \"inplace_resyncs\": {},\n  \"restores\": {},\n  \"checkpoints\": {},\n  \
+         \"resyncs\": {},\n  \"stale_gen\": {},\n  \"pa_sent\": {},\n  \"retransmits\": {}\n}}\n",
+        n_samples,
+        report.loss_per_epoch.len(),
+        report.wall.as_secs_f64(),
+        loss.join(", "),
+        final_loss,
+        report.model.len(),
+        bits.join(", "),
+        f.evictions,
+        f.rejoins,
+        f.inplace_resyncs,
+        f.restores,
+        f.checkpoints,
+        f.resyncs,
+        f.stale_gen,
+        a.pa_sent,
+        a.retransmits,
+    );
+    std::fs::write(path, json)
+}
+
+// ---------------------------------------------------------------------------
+// Cluster launcher
+// ---------------------------------------------------------------------------
+
+/// The OS processes of one launched cluster.
+pub struct ClusterProcs {
+    pub switch: Child,
+    pub workers: Vec<Child>,
+    pub coordinator: Child,
+}
+
+impl ClusterProcs {
+    /// SIGKILL every process that is still running (best effort).
+    pub fn kill_all(&mut self) {
+        let _ = self.switch.kill();
+        for w in &mut self.workers {
+            let _ = w.kill();
+        }
+        let _ = self.coordinator.kill();
+    }
+}
+
+/// Spawn one cluster from `bin`: a switch process, `workers` worker
+/// processes, and a coordinator, each as `bin train <common> --role
+/// ...`. Every process derives the same config and dataset from
+/// `common`, so the options must be identical across roles — which this
+/// launcher guarantees by construction.
+pub fn spawn_cluster(bin: &Path, common: &[String], workers: usize) -> std::io::Result<ClusterProcs> {
+    let spawn_role = |role_args: &[&str]| -> std::io::Result<Child> {
+        Command::new(bin)
+            .arg("train")
+            .args(common)
+            .args(role_args)
+            .stdin(Stdio::null())
+            .spawn()
+    };
+    let mut procs = ClusterProcs {
+        switch: spawn_role(&["--role", "switch"])?,
+        workers: Vec::with_capacity(workers),
+        coordinator: spawn_role(&["--role", "coordinator"])?,
+    };
+    for w in 0..workers {
+        match spawn_role(&["--role", "worker", "--worker-id", &w.to_string()]) {
+            Ok(child) => procs.workers.push(child),
+            Err(e) => {
+                procs.kill_all();
+                return Err(e);
+            }
+        }
+    }
+    Ok(procs)
+}
+
+/// Wait for `child` until `deadline`, polling; `None` = still running.
+pub fn wait_deadline(child: &mut Child, deadline: Instant) -> std::io::Result<Option<ExitStatus>> {
+    loop {
+        if let Some(st) = child.try_wait()? {
+            return Ok(Some(st));
+        }
+        if Instant::now() >= deadline {
+            return Ok(None);
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn agg_stats_delta_roundtrips() {
+        let base = AggStats { pa_sent: 10, confirms: 4, ..AggStats::default() };
+        let cur = AggStats {
+            pa_sent: 110,
+            acks_sent: 7,
+            retransmits: 3,
+            fa_received: 100,
+            dup_fa: 1,
+            confirms: 104,
+            stale: 2,
+            stale_gen: 5,
+            resyncs: 1,
+            heartbeats: 42,
+        };
+        let got = agg_stats_from_words(&agg_stats_words(&cur, &base));
+        assert_eq!(got.pa_sent, 100);
+        assert_eq!(got.acks_sent, 7);
+        assert_eq!(got.confirms, 100);
+        assert_eq!(got.heartbeats, 42);
+        assert_eq!(got.stale_gen, 5);
+    }
+
+    #[test]
+    fn wire_tracks_delivery_and_failure() {
+        let mut tx = Wire::new();
+        let mut rx = Wire::new();
+        let id = tx.send_msg(3, &Msg::Shutdown);
+        assert!(!tx.delivered(id) && !tx.idle());
+        // loop fragments into the receiver, acks back into the sender
+        let mut frags: Vec<(NodeId, Packet)> = Vec::new();
+        tx.pump(&mut |d, p| frags.push((d, p.clone())));
+        let mut acks: Vec<(NodeId, Packet)> = Vec::new();
+        let mut got = None;
+        for (_, p) in &frags {
+            if let Some(msg) = rx.on_frag(9, p, &mut |d, a| acks.push((d, a.clone()))) {
+                got = Some(msg);
+            }
+        }
+        assert_eq!(got, Some(Msg::Shutdown));
+        for (_, a) in &acks {
+            tx.on_ack(9, a);
+        }
+        tx.pump(&mut |_, _| {});
+        assert!(tx.delivered(id) && tx.idle() && !tx.has_failed(id));
+    }
+
+    #[test]
+    fn report_json_is_parseable_shape() {
+        let report = TrainReport {
+            loss_per_epoch: vec![2.0, 1.0],
+            wall: Duration::from_millis(1500),
+            model: vec![1.0, -0.5],
+            pipeline: PipelineStats::default(),
+            agg: AggStats::default(),
+            fault: FaultStats::default(),
+        };
+        let dir = std::env::temp_dir().join(format!("p4sgd-report-{}", std::process::id()));
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("report.json");
+        write_report(&path, &report, 2).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"final_loss_per_sample\": 0.5"), "{text}");
+        let bits = format!("\"model_bits\": [{}, {}]", 1.0f32.to_bits(), (-0.5f32).to_bits());
+        assert!(text.contains(&bits), "{text}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

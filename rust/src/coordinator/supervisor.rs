@@ -101,14 +101,25 @@ struct PendingCkpt {
 
 /// Assembles [`CkptPart`]s into checkpoints: the newest complete one
 /// is always held in memory; disk saves follow the sink's interval.
-struct Assembler {
+/// In-process attempts drive it through [`run`]; the process-mode
+/// coordinator feeds it directly from `Part` blobs off the wire.
+pub(crate) struct Assembler {
     sink: CkptSink,
     pending: Vec<PendingCkpt>,
     mem_ckpt: Option<Checkpoint>,
 }
 
 impl Assembler {
-    fn feed(&mut self, p: CkptPart, generation: u32, fault: &mut FaultStats) {
+    pub(crate) fn new(sink: CkptSink) -> Self {
+        Assembler { sink, pending: Vec::new(), mem_ckpt: None }
+    }
+
+    /// The newest complete checkpoint assembled so far.
+    pub(crate) fn into_mem_ckpt(self) -> Option<Checkpoint> {
+        self.mem_ckpt
+    }
+
+    pub(crate) fn feed(&mut self, p: CkptPart, generation: u32, fault: &mut FaultStats) {
         let idx = match self.pending.iter().position(|q| q.epoch == p.epoch) {
             Some(i) => i,
             None => {

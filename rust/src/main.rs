@@ -5,12 +5,18 @@
 //! * `repro <exp|all>` — regenerate a paper table/figure (see
 //!   `docs/ARCHITECTURE.md` for the experiment index).
 //! * `train` — run the distributed trainer on a synthetic dataset.
+//!   `--role thread` (default) runs everything in one process;
+//!   `--role switch|worker|coordinator` runs ONE role of a
+//!   multi-process cluster over kernel UDP (every role must be given
+//!   identical options — they all derive the same config and dataset).
+//! * `cluster` — launch a whole process-mode cluster (switch + workers
+//!   + coordinator) from one command and wait for it.
 //! * `agg-bench` — measure AllReduce through the real protocol stack.
 //! * `info` — artifact/runtime diagnostics.
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 use p4sgd::config::{Backend, SystemConfig};
-use p4sgd::coordinator::{dp, mp};
+use p4sgd::coordinator::{dp, mp, process};
 use p4sgd::data::synth;
 use p4sgd::engine::{Compute, NativeCompute};
 use p4sgd::glm::Loss;
@@ -37,13 +43,16 @@ fn dispatch(args: &Args) -> Result<()> {
             p4sgd::repro::run(which)
         }
         Some("train") => train(args),
+        Some("cluster") => cluster(args),
         Some("agg-bench") => agg_bench(args),
         Some("info") => info(),
         Some(other) => bail!("unknown subcommand {other:?}"),
         None => {
-            println!("usage: p4sgd <repro|train|agg-bench|info> [options]");
+            println!("usage: p4sgd <repro|train|cluster|agg-bench|info> [options]");
             println!("  repro <table1..table4|fig8..fig15|all>");
             println!("  train [--mode mp|dp] [--backend native|pjrt] [--workers M] [--engines N]");
+            println!("        [--role thread|switch|worker|coordinator] [--worker-id W]");
+            println!("        [--base-port P] [--report PATH]  (process mode / run summary)");
             println!("        [--engine-threads T] [--pipeline-depth 1..8] [--loss linreg|logreg|svm]");
             println!("        [--batch B] [--epochs E] [--dataset NAME]");
             println!("        [--samples N] [--features D] [--drop P] [--dup P] [--reorder P]");
@@ -55,6 +64,8 @@ fn dispatch(args: &Args) -> Result<()> {
             println!("        [--chaos-burst-prob P] [--chaos-burst-ns NS] [--chaos-burst-len K]");
             println!("        [--expect-evictions N] [--expect-resyncs N] [--max-final-loss L]");
             println!("            (smoke assertions)");
+            println!("  cluster [same options as train, minus --role/--worker-id]");
+            println!("          [--cluster-timeout-secs S]  (launch switch+workers+coordinator)");
             println!("  agg-bench [--workers M] [--ops N] [--payload K]");
             Ok(())
         }
@@ -103,7 +114,29 @@ fn train(args: &Args) -> Result<()> {
     cfg.net.chaos.burst_prob = args.get_or("chaos-burst-prob", 0.0f64);
     cfg.net.chaos.burst_ns = args.get_or("chaos-burst-ns", 0u64);
     cfg.net.chaos.burst_len = args.get_or("chaos-burst-len", 0u32);
+    cfg.cluster.base_port = args.get_or("base-port", cfg.cluster.base_port);
+    let mode = args.get_or("mode", "mp".to_string());
+    let role = args.get_or("role", "thread".to_string());
+    if role != "thread" {
+        // Process roles are always supervised (an unwatched cluster of
+        // OS processes would wedge forever on any crash), run the MP
+        // trainer only, and do not support mid-run scale-up.
+        if cfg.cluster.worker_timeout_ms == 0 {
+            cfg.cluster.worker_timeout_ms = 3000;
+        }
+        if mode != "mp" {
+            bail!("--role {role} supports --mode mp only");
+        }
+        if cfg.cluster.join_epoch.is_some() {
+            bail!("--role {role} does not support --join-epoch");
+        }
+    }
     cfg.validate()?;
+
+    if role == "switch" {
+        // The switch never touches the dataset or the compute backend.
+        return process::run_switch(&cfg);
+    }
 
     let backend: Backend = args.get_or("backend", Backend::Native);
     let n = args.get_or("samples", 1024usize);
@@ -112,24 +145,35 @@ fn train(args: &Args) -> Result<()> {
         Some(name) => synth::table2_like(name, n, d, cfg.train.loss, 7),
         None => synth::separable(n, d, cfg.train.loss, 0.1, 7),
     };
-    println!(
-        "training {} ({} samples x {} features), loss={}, {} workers x {} engines \
-         ({} engine threads, pipeline depth {}), backend={backend:?}",
-        ds.name, ds.n, ds.d, cfg.train.loss, cfg.cluster.workers, cfg.cluster.engines,
-        cfg.cluster.engine_threads, cfg.cluster.pipeline_depth
-    );
-
     let make: Box<dyn Fn(usize, usize) -> Box<dyn Compute> + Sync> = match backend {
         Backend::Native => Box::new(|_, _| Box::new(NativeCompute)),
         Backend::Pjrt => {
             Box::new(|_, _| Box::new(PjrtCompute::load_default().expect("pjrt backend")))
         }
     };
-    let mode = args.get_or("mode", "mp".to_string());
-    let report = match mode.as_str() {
-        "mp" => mp::train_mp(&cfg, &ds, make.as_ref()),
-        "dp" => dp::train_dp(&cfg, &ds, make.as_ref()),
-        other => bail!("unknown mode {other:?} (mp|dp)"),
+
+    if role == "worker" {
+        let w: usize = args
+            .get("worker-id")
+            .context("--role worker requires --worker-id")?
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--worker-id: {e}"))?;
+        return process::run_worker(&cfg, &ds, make.as_ref(), w);
+    }
+
+    println!(
+        "training {} ({} samples x {} features), loss={}, {} workers x {} engines \
+         ({} engine threads, pipeline depth {}), backend={backend:?}, role={role}",
+        ds.name, ds.n, ds.d, cfg.train.loss, cfg.cluster.workers, cfg.cluster.engines,
+        cfg.cluster.engine_threads, cfg.cluster.pipeline_depth
+    );
+
+    let report = match (role.as_str(), mode.as_str()) {
+        ("thread", "mp") => mp::train_mp(&cfg, &ds, make.as_ref()),
+        ("thread", "dp") => dp::train_dp(&cfg, &ds, make.as_ref()),
+        ("coordinator", _) => process::run_coordinator(&cfg, &ds)?,
+        ("thread", other) => bail!("unknown mode {other:?} (mp|dp)"),
+        (other, _) => bail!("unknown role {other:?} (thread|switch|worker|coordinator)"),
     };
     for (e, l) in report.loss_per_epoch.iter().enumerate() {
         println!("epoch {e:>3}: loss/sample {:.5}", l / ds.n as f32);
@@ -170,6 +214,64 @@ fn train(args: &Args) -> Result<()> {
         if last.is_nan() || last > bound {
             bail!("final loss/sample {last:.5} exceeds bound {bound:.5}");
         }
+    }
+    if let Some(path) = args.get("report") {
+        process::write_report(std::path::Path::new(path), &report, ds.n)
+            .with_context(|| format!("writing --report {path}"))?;
+    }
+    Ok(())
+}
+
+/// Launch a whole process-mode cluster — one switch, `--workers` worker
+/// processes, one coordinator — re-running this same binary with
+/// `--role` arguments appended to the (verbatim) `cluster` options, and
+/// wait for the coordinator's verdict. Worker crash exits (e.g. the
+/// `--kill-worker` injection) are reported but do not fail the launch;
+/// the coordinator's exit code is the cluster's.
+fn cluster(args: &Args) -> Result<()> {
+    use std::time::{Duration, Instant};
+
+    let workers = args.get_or("workers", 4usize);
+    let limit = args.get_or("cluster-timeout-secs", 600u64);
+    // Everything after the subcommand passes through to every role
+    // verbatim, so all processes derive the identical config/dataset.
+    let common: Vec<String> = std::env::args().skip(2).collect();
+    if args.get("role").is_some() || args.get("worker-id").is_some() {
+        bail!("cluster spawns every role itself; drop --role/--worker-id");
+    }
+    let bin = std::env::current_exe().context("resolving our own binary path")?;
+    let mut procs = process::spawn_cluster(&bin, &common, workers)
+        .context("spawning cluster processes")?;
+    let verdict = process::wait_deadline(
+        &mut procs.coordinator,
+        Instant::now() + Duration::from_secs(limit),
+    )?;
+    let Some(st) = verdict else {
+        procs.kill_all();
+        bail!("cluster did not finish within {limit}s — killed");
+    };
+    // The coordinator's Shutdown blobs should wind everyone down fast.
+    let deadline = Instant::now() + Duration::from_secs(15);
+    for (w, child) in procs.workers.iter_mut().enumerate() {
+        match process::wait_deadline(child, deadline)? {
+            Some(ws) if !ws.success() => eprintln!("cluster: worker {w} exited with {ws}"),
+            None => {
+                let _ = child.kill();
+                eprintln!("cluster: worker {w} still running at teardown — killed");
+            }
+            _ => {}
+        }
+    }
+    match process::wait_deadline(&mut procs.switch, deadline)? {
+        Some(ss) if !ss.success() => eprintln!("cluster: switch exited with {ss}"),
+        None => {
+            let _ = procs.switch.kill();
+            eprintln!("cluster: switch still running at teardown — killed");
+        }
+        _ => {}
+    }
+    if !st.success() {
+        bail!("coordinator exited with {st}");
     }
     Ok(())
 }

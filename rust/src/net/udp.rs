@@ -286,26 +286,30 @@ pub struct UdpEndpoint {
 /// Build `nodes` endpoints on consecutive localhost ports starting at
 /// `base_port`. Fails if any port is taken.
 pub fn build(nodes: usize, base_port: u16) -> std::io::Result<Vec<UdpEndpoint>> {
-    (0..nodes)
-        .map(|node| {
-            let socket = UdpSocket::bind(("127.0.0.1", base_port + node as u16))?;
-            socket.set_nonblocking(false)?;
-            Ok(UdpEndpoint {
-                node,
-                base_port,
-                socket,
-                scratch: Vec::new(),
-                rxbuf: [0; MAX_DGRAM],
-                pool: PayloadPool::new(),
-                mode: None,
-                rxq: VecDeque::with_capacity(RX_BATCH),
-                #[cfg(target_os = "linux")]
-                batch: None,
-                #[cfg(target_os = "linux")]
-                tx: None,
-            })
-        })
-        .collect()
+    (0..nodes).map(|node| bind_one(node, base_port)).collect()
+}
+
+/// Bind the single endpoint for `node` (process mode: each OS process
+/// owns exactly its own socket; peers are addressed by node id on the
+/// shared `base_port` plan). Fails if the port is taken — a stale
+/// process from a previous run, or a base-port collision.
+pub fn bind_one(node: NodeId, base_port: u16) -> std::io::Result<UdpEndpoint> {
+    let socket = UdpSocket::bind(("127.0.0.1", base_port + node as u16))?;
+    socket.set_nonblocking(false)?;
+    Ok(UdpEndpoint {
+        node,
+        base_port,
+        socket,
+        scratch: Vec::new(),
+        rxbuf: [0; MAX_DGRAM],
+        pool: PayloadPool::new(),
+        mode: None,
+        rxq: VecDeque::with_capacity(RX_BATCH),
+        #[cfg(target_os = "linux")]
+        batch: None,
+        #[cfg(target_os = "linux")]
+        tx: None,
+    })
 }
 
 impl UdpEndpoint {

@@ -1,0 +1,717 @@
+//! Reliable chunked messages over the v1 frame — the control plane of
+//! process mode.
+//!
+//! Kernel UDP drops, duplicates, and reorders; the aggregation protocol
+//! tolerates that by design (idempotent slots, retransmission), but the
+//! coordinator's control messages — attempt plans, switch reconfigs,
+//! checkpoint parts, final outcomes — must arrive **exactly once and
+//! whole**. This module fragments an arbitrary `Vec<i32>` message into
+//! [`Ctrl::Blob`] frames, acknowledges each fragment with
+//! [`Ctrl::BlobAck`], retransmits with exponential backoff until every
+//! fragment is acked, and reassembles on the far side keyed by
+//! `(src node, blob id)`.
+//!
+//! Field reuse on the frame: `seq` carries the fragment index, `bm` the
+//! sender-unique blob id, and the first two payload words of every
+//! fragment repeat `[n_frags, total_words]` so reassembly can start
+//! from any fragment. Blob frames bypass membership entirely — every
+//! receiver handles `Blob`/`BlobAck` *before* any generation check
+//! (generation still travels, but inside the message body where it
+//! matters).
+//!
+//! On top of the fragment layer, [`Msg`] defines the process-mode
+//! control vocabulary: `Plan` (coordinator → worker: run this attempt),
+//! `Reconfig` (coordinator → switch: fresh membership/generation),
+//! `Part` (worker → coordinator: epoch-boundary checkpoint part),
+//! `Outcome` (worker → coordinator: final attempt result), and
+//! `Shutdown`. All f32 payloads travel as raw `to_bits()` words — the
+//! depth-1 bitwise-determinism contract survives the wire.
+
+use super::{empty_payload, Ctrl, Packet};
+use std::collections::{HashMap, VecDeque};
+use std::time::{Duration, Instant};
+
+/// Data words per fragment. With the 2-word fragment header and the
+/// 16-byte frame header this stays well inside `net::udp::MAX_DGRAM`
+/// (16 KiB): 16 + 4*(2 + 2048) = 8216 bytes.
+pub const FRAG_WORDS: usize = 2048;
+
+/// Repeated per-fragment header: `[n_frags, total_words]`.
+const FRAG_HDR: usize = 2;
+
+/// Fragments (re)sent per [`BlobOut::pump`] sweep — bounds the burst a
+/// large model blob puts on the socket in one call.
+const MAX_BURST: usize = 32;
+
+/// Sweeps without an ack before [`BlobOut::failed`] turns true. With
+/// the backoff capped at 500 ms this is well over 30 s of silence.
+const MAX_ATTEMPTS: u32 = 96;
+
+const BACKOFF_INITIAL: Duration = Duration::from_millis(15);
+const BACKOFF_MAX: Duration = Duration::from_millis(500);
+
+/// Build the wire frame for fragment `frag` of blob `id`.
+fn frag_packet(id: u32, frag: u16, n_frags: usize, total_words: usize, data: &[i32]) -> Packet {
+    let mut payload = Vec::with_capacity(FRAG_HDR + data.len());
+    payload.push(n_frags as i32);
+    payload.push(total_words as i32);
+    payload.extend_from_slice(data);
+    Packet {
+        is_agg: false,
+        acked: false,
+        ctrl: Ctrl::Blob,
+        seq: frag,
+        bm: id,
+        gen: 0,
+        payload: payload.into(),
+    }
+}
+
+/// The acknowledgement frame for fragment `frag` of blob `id`.
+pub fn ack_packet(id: u32, frag: u16) -> Packet {
+    Packet {
+        is_agg: false,
+        acked: false,
+        ctrl: Ctrl::BlobAck,
+        seq: frag,
+        bm: id,
+        gen: 0,
+        payload: empty_payload(),
+    }
+}
+
+/// One outbound blob: fragments, per-fragment ack state, and the
+/// retransmission clock. Drive it with [`BlobOut::pump`] until
+/// [`BlobOut::done`] (or give up at [`BlobOut::failed`]).
+#[derive(Debug)]
+pub struct BlobOut {
+    id: u32,
+    dst: usize,
+    words: Vec<i32>,
+    n_frags: usize,
+    acked: Vec<bool>,
+    remaining: usize,
+    cursor: usize,
+    next_send: Option<Instant>,
+    backoff: Duration,
+    attempts: u32,
+}
+
+impl BlobOut {
+    /// A new outbound blob for node `dst`. `id` must be unique per
+    /// sender (receivers key by `(src, id)`).
+    pub fn new(id: u32, dst: usize, words: Vec<i32>) -> Self {
+        let n_frags = words.len().div_ceil(FRAG_WORDS).max(1);
+        assert!(n_frags <= u16::MAX as usize, "blob too large: {} words", words.len());
+        BlobOut {
+            id,
+            dst,
+            words,
+            n_frags,
+            acked: vec![false; n_frags],
+            remaining: n_frags,
+            cursor: 0,
+            next_send: None,
+            backoff: BACKOFF_INITIAL,
+            attempts: 0,
+        }
+    }
+
+    pub fn id(&self) -> u32 {
+        self.id
+    }
+
+    pub fn dst(&self) -> usize {
+        self.dst
+    }
+
+    /// Every fragment acknowledged.
+    pub fn done(&self) -> bool {
+        self.remaining == 0
+    }
+
+    /// The receiver has been silent through the whole retry budget.
+    pub fn failed(&self) -> bool {
+        self.remaining > 0 && self.attempts > MAX_ATTEMPTS
+    }
+
+    /// Record an ack for `frag`; progress resets the backoff clock.
+    pub fn on_ack(&mut self, frag: u16) {
+        let k = frag as usize;
+        if k < self.n_frags && !self.acked[k] {
+            self.acked[k] = true;
+            self.remaining -= 1;
+            self.backoff = BACKOFF_INITIAL;
+            self.attempts = 0;
+            if !self.done() {
+                // more to send — the freed window should fill now
+                self.next_send = None;
+            }
+        }
+    }
+
+    /// (Re)send due fragments through `send`. Call this from the owner's
+    /// poll loop; it is a no-op between backoff deadlines.
+    pub fn pump(&mut self, now: Instant, send: &mut dyn FnMut(usize, &Packet)) {
+        if self.done() || self.failed() {
+            return;
+        }
+        if let Some(deadline) = self.next_send {
+            if now < deadline {
+                return;
+            }
+        }
+        let mut sent = 0;
+        for step in 0..self.n_frags {
+            let k = (self.cursor + step) % self.n_frags;
+            if self.acked[k] {
+                continue;
+            }
+            let lo = k * FRAG_WORDS;
+            let hi = (lo + FRAG_WORDS).min(self.words.len());
+            let pkt = frag_packet(self.id, k as u16, self.n_frags, self.words.len(), &self.words[lo..hi]);
+            send(self.dst, &pkt);
+            sent += 1;
+            if sent >= MAX_BURST {
+                self.cursor = (k + 1) % self.n_frags;
+                break;
+            }
+        }
+        self.attempts += 1;
+        self.next_send = Some(now + self.backoff);
+        self.backoff = (self.backoff * 2).min(BACKOFF_MAX);
+    }
+}
+
+/// Reassembly state for one inbound blob.
+#[derive(Debug)]
+struct BlobIn {
+    n_frags: usize,
+    total_words: usize,
+    words: Vec<i32>,
+    have: Vec<bool>,
+    remaining: usize,
+}
+
+/// The receive side: feeds fragments, acks every one (duplicates
+/// included — acks can be lost too), and emits each completed message
+/// exactly once. Completed blob ids are remembered so a late duplicate
+/// fragment is re-acked without re-emitting the message.
+#[derive(Debug, Default)]
+pub struct BlobRx {
+    partial: HashMap<(usize, u32), BlobIn>,
+    recent: VecDeque<(usize, u32)>,
+}
+
+impl BlobRx {
+    /// Completed-blob memory; late duplicates beyond it are still acked
+    /// (the sender stops retransmitting) but could re-emit — senders
+    /// allocate monotonically increasing ids, so a duplicate that far
+    /// behind the stream does not occur in practice.
+    const RECENT_CAP: usize = 128;
+
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Feed one [`Ctrl::Blob`] frame from `src`. Malformed fragments
+    /// are dropped without an ack. Returns the whole message when this
+    /// fragment completes it.
+    pub fn on_frag(
+        &mut self,
+        src: usize,
+        pkt: &Packet,
+        send: &mut dyn FnMut(usize, &Packet),
+    ) -> Option<(u32, Vec<i32>)> {
+        if pkt.ctrl != Ctrl::Blob || pkt.payload.len() < FRAG_HDR {
+            return None;
+        }
+        let id = pkt.bm;
+        let frag = pkt.seq as usize;
+        let n_frags = pkt.payload[0];
+        let total_words = pkt.payload[1];
+        if n_frags <= 0 || total_words < 0 || frag >= n_frags as usize {
+            return None;
+        }
+        let (n_frags, total_words) = (n_frags as usize, total_words as usize);
+        if n_frags != total_words.div_ceil(FRAG_WORDS).max(1) {
+            return None;
+        }
+        let lo = frag * FRAG_WORDS;
+        let hi = (lo + FRAG_WORDS).min(total_words);
+        if pkt.payload.len() != FRAG_HDR + (hi - lo) {
+            return None;
+        }
+        if self.recent.contains(&(src, id)) {
+            send(src, &ack_packet(id, pkt.seq));
+            return None;
+        }
+        let slot = self.partial.entry((src, id)).or_insert_with(|| BlobIn {
+            n_frags,
+            total_words,
+            words: vec![0; total_words],
+            have: vec![false; n_frags],
+            remaining: n_frags,
+        });
+        if slot.n_frags != n_frags || slot.total_words != total_words {
+            return None; // conflicting geometry for the same id — hostile
+        }
+        send(src, &ack_packet(id, pkt.seq));
+        if !slot.have[frag] {
+            slot.have[frag] = true;
+            slot.remaining -= 1;
+            slot.words[lo..hi].copy_from_slice(&pkt.payload[FRAG_HDR..]);
+        }
+        if slot.remaining > 0 {
+            return None;
+        }
+        let done = self.partial.remove(&(src, id)).unwrap();
+        self.recent.push_back((src, id));
+        if self.recent.len() > Self::RECENT_CAP {
+            self.recent.pop_front();
+        }
+        Some((id, done.words))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Message vocabulary
+// ---------------------------------------------------------------------------
+
+const KIND_PLAN: i32 = 1;
+const KIND_PART: i32 = 2;
+const KIND_OUTCOME: i32 = 3;
+const KIND_RECONFIG: i32 = 4;
+const KIND_SHUTDOWN: i32 = 5;
+
+/// Coordinator → worker: run (or skip) one attempt. `members` are
+/// global worker ids in local-index order — a worker's shard index is
+/// its position in this list; a worker absent from the list keeps
+/// waiting for the next plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanMsg {
+    pub generation: u32,
+    pub start_epoch: usize,
+    pub stop_epoch: usize,
+    pub members: Vec<usize>,
+    /// Resume model (full width), or `None` for a fresh start.
+    pub model0: Option<Vec<f32>>,
+    /// Arm the `--kill-worker` crash injection for this attempt.
+    pub kill_armed: bool,
+}
+
+/// Worker → coordinator: one epoch-boundary checkpoint part.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PartMsg {
+    pub generation: u32,
+    /// Local (shard) index within the attempt's membership.
+    pub worker: usize,
+    pub epoch: usize,
+    pub curve: Vec<f32>,
+    pub part: Vec<f32>,
+}
+
+/// Worker → coordinator: the final result of an attempt.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OutcomeMsg {
+    pub generation: u32,
+    /// Local (shard) index within the attempt's membership.
+    pub worker: usize,
+    pub aborted: bool,
+    pub curve: Vec<f32>,
+    pub model: Vec<f32>,
+    /// The worker's `AggStats` counters, field-ordered (see
+    /// `agg_stats_to_words`).
+    pub agg_words: Vec<i32>,
+}
+
+/// Coordinator → switch: adopt a fresh membership at `generation`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReconfigMsg {
+    pub generation: u32,
+    /// Member bitmap over *global* worker ids.
+    pub members_mask: u32,
+    /// Aggregation payload length (micro-batch words).
+    pub payload_len: usize,
+    /// FA-buffer ring depth.
+    pub fa_ring: usize,
+}
+
+/// A decoded process-mode control message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    Plan(PlanMsg),
+    Part(PartMsg),
+    Outcome(OutcomeMsg),
+    Reconfig(ReconfigMsg),
+    Shutdown,
+}
+
+fn push_f32s(out: &mut Vec<i32>, vs: &[f32]) {
+    out.push(vs.len() as i32);
+    out.extend(vs.iter().map(|v| v.to_bits() as i32));
+}
+
+struct Reader<'a> {
+    words: &'a [i32],
+    at: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn word(&mut self) -> Option<i32> {
+        let v = *self.words.get(self.at)?;
+        self.at += 1;
+        Some(v)
+    }
+
+    fn size(&mut self) -> Option<usize> {
+        let v = self.word()?;
+        usize::try_from(v).ok()
+    }
+
+    fn f32s(&mut self) -> Option<Vec<f32>> {
+        let n = self.size()?;
+        if self.at + n > self.words.len() {
+            return None;
+        }
+        let vs = self.words[self.at..self.at + n]
+            .iter()
+            .map(|&w| f32::from_bits(w as u32))
+            .collect();
+        self.at += n;
+        Some(vs)
+    }
+}
+
+impl Msg {
+    /// Flat i32 encoding (word 0 is the kind tag).
+    pub fn encode(&self) -> Vec<i32> {
+        let mut w = Vec::new();
+        match self {
+            Msg::Plan(p) => {
+                w.push(KIND_PLAN);
+                w.push(p.generation as i32);
+                w.push(p.start_epoch as i32);
+                w.push(p.stop_epoch as i32);
+                w.push(p.kill_armed as i32);
+                w.push(p.members.len() as i32);
+                w.extend(p.members.iter().map(|&m| m as i32));
+                match &p.model0 {
+                    Some(m) => {
+                        w.push(1);
+                        push_f32s(&mut w, m);
+                    }
+                    None => w.push(0),
+                }
+            }
+            Msg::Part(p) => {
+                w.push(KIND_PART);
+                w.push(p.generation as i32);
+                w.push(p.worker as i32);
+                w.push(p.epoch as i32);
+                push_f32s(&mut w, &p.curve);
+                push_f32s(&mut w, &p.part);
+            }
+            Msg::Outcome(o) => {
+                w.push(KIND_OUTCOME);
+                w.push(o.generation as i32);
+                w.push(o.worker as i32);
+                w.push(o.aborted as i32);
+                push_f32s(&mut w, &o.curve);
+                push_f32s(&mut w, &o.model);
+                w.push(o.agg_words.len() as i32);
+                w.extend_from_slice(&o.agg_words);
+            }
+            Msg::Reconfig(r) => {
+                w.push(KIND_RECONFIG);
+                w.push(r.generation as i32);
+                w.push(r.members_mask as i32);
+                w.push(r.payload_len as i32);
+                w.push(r.fa_ring as i32);
+            }
+            Msg::Shutdown => w.push(KIND_SHUTDOWN),
+        }
+        w
+    }
+
+    /// Decode a completed blob; `None` on malformed input (hostile
+    /// senders get a silent drop, not a panic).
+    pub fn decode(words: &[i32]) -> Option<Msg> {
+        let mut r = Reader { words, at: 0 };
+        match r.word()? {
+            KIND_PLAN => {
+                let generation = r.word()? as u32;
+                let start_epoch = r.size()?;
+                let stop_epoch = r.size()?;
+                let kill_armed = r.word()? != 0;
+                let n = r.size()?;
+                let mut members = Vec::with_capacity(n.min(64));
+                for _ in 0..n {
+                    members.push(r.size()?);
+                }
+                let model0 = if r.word()? != 0 { Some(r.f32s()?) } else { None };
+                Some(Msg::Plan(PlanMsg {
+                    generation,
+                    start_epoch,
+                    stop_epoch,
+                    members,
+                    model0,
+                    kill_armed,
+                }))
+            }
+            KIND_PART => Some(Msg::Part(PartMsg {
+                generation: r.word()? as u32,
+                worker: r.size()?,
+                epoch: r.size()?,
+                curve: r.f32s()?,
+                part: r.f32s()?,
+            })),
+            KIND_OUTCOME => {
+                let generation = r.word()? as u32;
+                let worker = r.size()?;
+                let aborted = r.word()? != 0;
+                let curve = r.f32s()?;
+                let model = r.f32s()?;
+                let n = r.size()?;
+                if r.at + n > words.len() {
+                    return None;
+                }
+                let agg_words = words[r.at..r.at + n].to_vec();
+                Some(Msg::Outcome(OutcomeMsg {
+                    generation,
+                    worker,
+                    aborted,
+                    curve,
+                    model,
+                    agg_words,
+                }))
+            }
+            KIND_RECONFIG => Some(Msg::Reconfig(ReconfigMsg {
+                generation: r.word()? as u32,
+                members_mask: r.word()? as u32,
+                payload_len: r.size()?,
+                fa_ring: r.size()?,
+            })),
+            KIND_SHUTDOWN => Some(Msg::Shutdown),
+            _ => None,
+        }
+    }
+}
+
+/// `AggStats` ↔ words (u64 fields split into two i32s, field order
+/// fixed; see `worker::agg_client::AggStats`).
+pub fn u64s_to_words(vals: &[u64]) -> Vec<i32> {
+    let mut w = Vec::with_capacity(vals.len() * 2);
+    for v in vals {
+        w.push(*v as u32 as i32);
+        w.push((*v >> 32) as u32 as i32);
+    }
+    w
+}
+
+/// Inverse of [`u64s_to_words`]; short input yields zeros.
+pub fn words_to_u64s(words: &[i32], n: usize) -> Vec<u64> {
+    (0..n)
+        .map(|k| {
+            let lo = words.get(2 * k).copied().unwrap_or(0) as u32 as u64;
+            let hi = words.get(2 * k + 1).copied().unwrap_or(0) as u32 as u64;
+            lo | (hi << 32)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deliver every pumped fragment to a BlobRx, optionally dropping
+    /// some, and loop acks back; returns the completed message if any.
+    fn exchange(out: &mut BlobOut, rx: &mut BlobRx, drop_every: usize) -> Option<Vec<i32>> {
+        let mut now = Instant::now();
+        for round in 0..200 {
+            let mut frags: Vec<(usize, Packet)> = Vec::new();
+            out.pump(now, &mut |dst, pkt| frags.push((dst, pkt.clone())));
+            let mut acks: Vec<Packet> = Vec::new();
+            let mut done = None;
+            for (k, (_dst, pkt)) in frags.iter().enumerate() {
+                if drop_every > 0 && (round + k) % drop_every == 0 {
+                    continue; // lossy wire
+                }
+                if let Some((_, words)) = rx.on_frag(7, pkt, &mut |_, ack| acks.push(ack.clone())) {
+                    done = Some(words);
+                }
+            }
+            for ack in &acks {
+                out.on_ack(ack.seq);
+            }
+            if out.done() {
+                return done;
+            }
+            now += Duration::from_secs(1); // skip past any backoff
+        }
+        None
+    }
+
+    #[test]
+    fn single_fragment_roundtrip() {
+        let msg: Vec<i32> = vec![1, -2, 3];
+        let mut out = BlobOut::new(1, 9, msg.clone());
+        let mut rx = BlobRx::new();
+        assert_eq!(exchange(&mut out, &mut rx, 0).unwrap(), msg);
+        assert!(out.done() && !out.failed());
+    }
+
+    #[test]
+    fn multi_fragment_roundtrip_with_loss() {
+        let msg: Vec<i32> = (0..FRAG_WORDS as i32 * 3 + 17).collect();
+        let mut out = BlobOut::new(2, 9, msg.clone());
+        let mut rx = BlobRx::new();
+        assert_eq!(exchange(&mut out, &mut rx, 3).unwrap(), msg, "survives 1-in-3 loss");
+    }
+
+    #[test]
+    fn empty_message_roundtrip() {
+        let mut out = BlobOut::new(3, 0, Vec::new());
+        let mut rx = BlobRx::new();
+        assert_eq!(exchange(&mut out, &mut rx, 0).unwrap(), Vec::<i32>::new());
+    }
+
+    #[test]
+    fn duplicate_fragments_emit_once_and_reack() {
+        let msg: Vec<i32> = vec![5; 10];
+        let mut out = BlobOut::new(4, 0, msg.clone());
+        let mut frags = Vec::new();
+        out.pump(Instant::now(), &mut |_, p| frags.push(p.clone()));
+        let mut rx = BlobRx::new();
+        let mut acks = 0;
+        let first = rx.on_frag(1, &frags[0], &mut |_, _| acks += 1);
+        assert_eq!(first.unwrap().1, msg);
+        // duplicate after completion: re-acked, not re-emitted
+        let dup = rx.on_frag(1, &frags[0], &mut |_, _| acks += 1);
+        assert!(dup.is_none());
+        assert_eq!(acks, 2);
+    }
+
+    #[test]
+    fn hostile_fragments_are_dropped_without_ack() {
+        let mut rx = BlobRx::new();
+        let mut acks = 0;
+        let mut sink = |_: usize, _: &Packet| acks += 1;
+        // geometry lies: claims 1 frag for 3 * FRAG_WORDS words
+        let bad = frag_packet(9, 0, 1, FRAG_WORDS * 3, &[1, 2]);
+        assert!(rx.on_frag(0, &bad, &mut sink).is_none());
+        // frag index out of range
+        let bad = frag_packet(9, 5, 2, FRAG_WORDS + 4, &[1, 2, 3, 4]);
+        assert!(rx.on_frag(0, &bad, &mut sink).is_none());
+        // payload shorter than the slice the header promises
+        let mut short = frag_packet(9, 0, 1, 8, &[1, 2, 3, 4, 5, 6, 7, 8]);
+        short.payload = vec![1, 8, 1].into();
+        assert!(rx.on_frag(0, &short, &mut sink).is_none());
+        // not a blob frame at all
+        assert!(rx.on_frag(0, &Packet::join(1, 0), &mut sink).is_none());
+        assert_eq!(acks, 0);
+    }
+
+    #[test]
+    fn sender_gives_up_after_retry_budget() {
+        let mut out = BlobOut::new(5, 0, vec![1]);
+        let mut now = Instant::now();
+        for _ in 0..=MAX_ATTEMPTS {
+            out.pump(now, &mut |_, _| {});
+            now += Duration::from_secs(2);
+        }
+        assert!(out.failed());
+        // a failed sender stops transmitting
+        let mut sent = 0;
+        out.pump(now, &mut |_, _| sent += 1);
+        assert_eq!(sent, 0);
+    }
+
+    #[test]
+    fn plan_msg_roundtrip() {
+        for model0 in [None, Some(vec![0.5f32, -1.25, 3.0e-8])] {
+            let m = Msg::Plan(PlanMsg {
+                generation: 7,
+                start_epoch: 2,
+                stop_epoch: 9,
+                members: vec![0, 2, 3],
+                model0: model0.clone(),
+                kill_armed: model0.is_some(),
+            });
+            assert_eq!(Msg::decode(&m.encode()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn part_outcome_reconfig_roundtrip() {
+        let part = Msg::Part(PartMsg {
+            generation: 3,
+            worker: 1,
+            epoch: 4,
+            curve: vec![0.9, 0.5],
+            part: vec![1.0, -2.0, f32::MIN_POSITIVE],
+        });
+        let outcome = Msg::Outcome(OutcomeMsg {
+            generation: 3,
+            worker: 0,
+            aborted: true,
+            curve: vec![0.7],
+            model: vec![-0.125; 5],
+            agg_words: u64s_to_words(&[u64::MAX, 0, 12345678901234]),
+        });
+        let reconfig = Msg::Reconfig(ReconfigMsg {
+            generation: 8,
+            members_mask: 0b1011,
+            payload_len: 16,
+            fa_ring: 4,
+        });
+        for m in [part, outcome, reconfig, Msg::Shutdown] {
+            assert_eq!(Msg::decode(&m.encode()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn f32_bits_survive_exactly() {
+        let vals = vec![f32::NAN, f32::INFINITY, -0.0, 1.0000001];
+        let m = Msg::Part(PartMsg {
+            generation: 0,
+            worker: 0,
+            epoch: 0,
+            curve: vec![],
+            part: vals.clone(),
+        });
+        match Msg::decode(&m.encode()).unwrap() {
+            Msg::Part(p) => {
+                for (a, b) in p.part.iter().zip(&vals) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn u64_words_roundtrip() {
+        let vals = [0u64, 1, u64::MAX, 1 << 40];
+        assert_eq!(words_to_u64s(&u64s_to_words(&vals), 4), vals);
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(Msg::decode(&[]).is_none());
+        assert!(Msg::decode(&[99]).is_none());
+        assert!(Msg::decode(&[KIND_PLAN, 1]).is_none()); // truncated
+        assert!(Msg::decode(&[KIND_PART, 1, -5, 0, 0, 0]).is_none()); // negative size
+        let mut w = Msg::Plan(PlanMsg {
+            generation: 1,
+            start_epoch: 0,
+            stop_epoch: 1,
+            members: vec![0],
+            model0: Some(vec![1.0]),
+            kill_armed: false,
+        })
+        .encode();
+        w.truncate(w.len() - 1);
+        assert!(Msg::decode(&w).is_none());
+    }
+}

@@ -53,6 +53,8 @@
 use anyhow::{bail, Result};
 use std::sync::Arc;
 
+pub mod blob;
+
 /// Fixed-point fractional bits for activation payloads.
 pub const FIXED_SHIFT: u32 = 16;
 
@@ -94,6 +96,12 @@ pub fn empty_payload() -> Arc<[i32]> {
 /// current generation" resync answer; `Leave` is a graceful departure;
 /// `Evict` is the supervisor's removal order (and the switch's
 /// eviction notice, with `bm` holding the evicted mask).
+///
+/// `Blob` / `BlobAck` are the reliable-message fragments of
+/// [`blob`] (plans, checkpoint parts, outcomes in process mode). They
+/// ride the same frame but bypass membership entirely: `seq` is the
+/// fragment index, `bm` the blob id, and `gen` informational only —
+/// every receiver handles them before any generation check.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum Ctrl {
     #[default]
@@ -101,24 +109,33 @@ pub enum Ctrl {
     Join,
     Leave,
     Evict,
+    Blob,
+    BlobAck,
 }
 
 impl Ctrl {
-    /// Two-bit wire encoding (flags bits 2-3).
+    /// Four-bit wire encoding (flags bits 2-5). Values 0-3 are the v1
+    /// membership kinds; 4-5 were assigned to the blob layer without a
+    /// version bump because v1 decoders treated the upper flag bits as
+    /// reserved-zero and the kinds only appear in process mode.
     fn to_bits(self) -> u8 {
         match self {
             Ctrl::Data => 0,
             Ctrl::Join => 1,
             Ctrl::Leave => 2,
             Ctrl::Evict => 3,
+            Ctrl::Blob => 4,
+            Ctrl::BlobAck => 5,
         }
     }
 
     fn from_bits(bits: u8) -> Ctrl {
-        match bits & 0b11 {
+        match bits & 0b1111 {
             1 => Ctrl::Join,
             2 => Ctrl::Leave,
             3 => Ctrl::Evict,
+            4 => Ctrl::Blob,
+            5 => Ctrl::BlobAck,
             _ => Ctrl::Data,
         }
     }

@@ -145,6 +145,17 @@ impl P4Switch {
         self
     }
 
+    /// Start with an explicit member mask (process mode: worker ids are
+    /// global and fixed for the cluster's life, so a restart attempt
+    /// over survivors runs with a sparse mask — e.g. `0b101` after
+    /// worker 1 died — rather than re-numbering the survivors).
+    pub fn with_members(mut self, mask: u32) -> Self {
+        let full = if self.workers == 32 { u32::MAX } else { (1u32 << self.workers) - 1 };
+        assert!(mask != 0 && mask & !full == 0, "member mask {mask:#b} outside 0..{}", self.workers);
+        self.members = mask;
+        self
+    }
+
     /// Widen every slot's FA ring to `n` buffers (`2..=16`): a depth-D
     /// worker pipeline may park the FAs of up to D rounds before
     /// dropping them, so the trainers pass `max(2, pipeline_depth)` to
@@ -239,6 +250,11 @@ impl P4Switch {
                 }
                 Vec::new() // heartbeat at the current generation
             }
+            // Blob-layer frames are not the switch's business (the
+            // process-mode pump intercepts its own reconfigs before the
+            // state machine); a stray one — a hostile or misrouted
+            // datagram — is dropped, never panicked on.
+            Ctrl::Blob | Ctrl::BlobAck => Vec::new(),
             Ctrl::Data => unreachable!("handle_ctrl called for data"),
         }
     }

@@ -80,6 +80,85 @@ where
     ServerHandle { stop, join: Some(join) }
 }
 
+/// Pump a concrete [`P4Switch`](crate::switch::p4::P4Switch) on the
+/// calling thread — the main loop of a **switch process** in cluster
+/// process mode (`train --role switch`).
+///
+/// Differences from [`spawn`]:
+///
+/// * Runs until the coordinator's `Shutdown` control blob arrives
+///   (there is no in-process handle to drop — the lifecycle is owned
+///   over the wire).
+/// * Understands the blob layer: `Reconfig` messages replace the
+///   switch state machine wholesale (fresh generation, *global-id*
+///   member bitmap, payload length, FA ring) so restart attempts can
+///   run sparse memberships like `0b101` without renumbering nodes.
+///   Malformed or out-of-range reconfigs are ignored — a hostile
+///   socket peer must never panic the switch.
+/// * Multicasts fan out to **all** `0..workers` node ids, members or
+///   not: evicted-but-alive workers still need generation notices,
+///   and datagrams to dead ports are harmless.
+pub fn run_process_switch<T: Transport>(
+    mut transport: T,
+    workers: usize,
+    payload_len: usize,
+    fa_ring: usize,
+) {
+    use crate::protocol::blob::{BlobRx, Msg, FRAG_WORDS};
+    use crate::protocol::Ctrl;
+    use crate::switch::p4::P4Switch;
+    use crate::worker::agg_client::SEQ_SPACE;
+
+    let full = if workers == 32 { u32::MAX } else { (1u32 << workers) - 1 };
+    let mut server = P4Switch::new(SEQ_SPACE, workers, payload_len).with_fa_ring(fa_ring);
+    let mut rx = BlobRx::new();
+    let fanout: Vec<crate::net::NodeId> = (0..workers).collect();
+    loop {
+        let Some((src, pkt)) = transport
+            .try_recv()
+            .or_else(|| transport.recv_timeout(Duration::from_millis(5)))
+        else {
+            continue;
+        };
+        match pkt.ctrl {
+            Ctrl::Blob => {
+                let mut acks: Vec<(crate::net::NodeId, crate::protocol::Packet)> = Vec::new();
+                let complete = rx.on_frag(src, &pkt, &mut |dst, p| acks.push((dst, p.clone())));
+                for (dst, p) in &acks {
+                    transport.send(*dst, p);
+                }
+                match complete.and_then(|(_, words)| Msg::decode(&words)) {
+                    Some(Msg::Reconfig(r)) => {
+                        let sane = r.members_mask != 0
+                            && r.members_mask & !full == 0
+                            && (2..=16).contains(&r.fa_ring)
+                            && (1..=FRAG_WORDS).contains(&r.payload_len);
+                        if sane {
+                            server = P4Switch::new(SEQ_SPACE, workers, r.payload_len)
+                                .with_generation(r.generation)
+                                .with_members(r.members_mask)
+                                .with_fa_ring(r.fa_ring);
+                        } else {
+                            eprintln!("switch: ignoring invalid reconfig {r:?}");
+                        }
+                    }
+                    Some(Msg::Shutdown) => return,
+                    _ => {} // not switch business (or hostile): drop
+                }
+            }
+            Ctrl::BlobAck => {} // the switch never originates blobs
+            _ => {
+                for action in server.handle(src, &pkt) {
+                    match action {
+                        Action::Unicast(dst, out) => transport.send(dst, &out),
+                        Action::Multicast(out) => transport.send_many(&fanout, &out),
+                    }
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -115,5 +194,70 @@ mod tests {
         let mut eps = SimNet::build(2, &cfg);
         let handle = spawn(P4Switch::new(2, 1, 1), eps.pop().unwrap());
         handle.shutdown();
+    }
+
+    /// Drive one control blob to `dst` and pump until every fragment
+    /// is acknowledged.
+    fn deliver_blob(
+        ep: &mut crate::net::sim::SimEndpoint,
+        dst: usize,
+        id: u32,
+        msg: &crate::protocol::blob::Msg,
+    ) {
+        use crate::protocol::blob::BlobOut;
+        use crate::protocol::Ctrl;
+        let mut out = BlobOut::new(id, dst, msg.encode());
+        while !out.done() {
+            assert!(!out.failed(), "switch never acked blob {id}");
+            let mut sends = Vec::new();
+            out.pump(std::time::Instant::now(), &mut |d, p| sends.push((d, p.clone())));
+            for (d, p) in sends {
+                ep.send(d, &p);
+            }
+            if let Some((_, p)) = ep.recv_timeout(Duration::from_millis(200)) {
+                if p.ctrl == Ctrl::BlobAck && p.bm == id {
+                    out.on_ack(p.seq);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn process_switch_reconfigures_to_sparse_members_and_shuts_down() {
+        use crate::protocol::blob::{Msg, ReconfigMsg};
+        let cfg = NetConfig { latency_ns: 0, jitter_ns: 0, ..NetConfig::default() };
+        // nodes: workers 0..3, switch 3, coordinator 4
+        let mut eps = SimNet::build(5, &cfg);
+        let mut coord = eps.pop().unwrap();
+        let sw_ep = eps.pop().unwrap();
+        let sw = 3usize;
+        let join = std::thread::spawn(move || run_process_switch(sw_ep, 3, 2, 2));
+        // a hostile reconfig (empty membership) must be ignored...
+        let bad =
+            Msg::Reconfig(ReconfigMsg { generation: 9, members_mask: 0, payload_len: 2, fa_ring: 2 });
+        deliver_blob(&mut coord, sw, 1, &bad);
+        // ...then a real one: sparse global-id membership {0, 2} at gen 7
+        let good = Msg::Reconfig(ReconfigMsg {
+            generation: 7,
+            members_mask: 0b101,
+            payload_len: 2,
+            fa_ring: 2,
+        });
+        deliver_blob(&mut coord, sw, 2, &good);
+        // a round over just those two members completes
+        eps[0].send(sw, &Packet::pa(0, 0, vec![1, 2]).with_gen(7));
+        eps[2].send(sw, &Packet::pa(0, 2, vec![10, 20]).with_gen(7));
+        for w in [0usize, 2] {
+            let fa = loop {
+                let (_, p) = eps[w].recv_timeout(Duration::from_secs(2)).expect("FA");
+                if p.is_agg {
+                    break p;
+                }
+            };
+            assert_eq!(fa.payload[..], [11, 22]);
+            assert_eq!(fa.gen, 7);
+        }
+        deliver_blob(&mut coord, sw, 3, &Msg::Shutdown);
+        join.join().unwrap();
     }
 }

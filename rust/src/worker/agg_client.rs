@@ -47,6 +47,7 @@
 
 use crate::net::{NodeId, Transport};
 use crate::protocol::{Ctrl, Packet};
+use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -139,6 +140,10 @@ pub struct AggClient<T: Transport> {
     bump: Option<GenBump>,
     /// Optional supervisor heartbeat (see the module docs).
     hb: Option<Heartbeat>,
+    /// Blob-layer frames (`Ctrl::Blob`/`Ctrl::BlobAck`) received while
+    /// polling. They bypass the generation machinery entirely — process
+    /// mode drains them via [`AggClient::take_ctrl`] between batches.
+    ctrl_inbox: VecDeque<(NodeId, Packet)>,
     pub stats: AggStats,
 }
 
@@ -158,6 +163,7 @@ impl<T: Transport> AggClient<T> {
             gen: 0,
             bump: None,
             hb: None,
+            ctrl_inbox: VecDeque::new(),
             stats: AggStats::default(),
         }
     }
@@ -172,6 +178,28 @@ impl<T: Transport> AggClient<T> {
     /// The generation currently stamped on outgoing packets.
     pub fn generation(&self) -> u32 {
         self.gen
+    }
+
+    /// Adopt `gen` for the next attempt without treating it as an
+    /// interruption (process mode: the coordinator's plan names the
+    /// generation before any traffic flows). The in-flight window must
+    /// be empty.
+    pub fn set_generation(&mut self, gen: u32) {
+        debug_assert!(self.inflight.is_empty(), "set_generation with rounds in flight");
+        self.gen = gen;
+        self.bump = None;
+    }
+
+    /// Send a raw control frame (the process-mode blob layer rides the
+    /// client's transport between aggregation rounds).
+    pub fn send_ctrl(&mut self, node: NodeId, pkt: &Packet) {
+        self.transport.send(node, pkt);
+    }
+
+    /// Next queued blob-layer frame, with its source node (frames are
+    /// captured during [`AggClient::poll`]; see `ctrl_inbox`).
+    pub fn take_ctrl(&mut self) -> Option<(NodeId, Packet)> {
+        self.ctrl_inbox.pop_front()
     }
 
     /// Send a `Join` heartbeat to `node` whenever `every` has elapsed
@@ -411,8 +439,22 @@ impl<T: Transport> AggClient<T> {
         self.bump.is_some_and(|b| b.evicted)
     }
 
+    /// Bounded blob-frame queue: past the cap the oldest frame drops —
+    /// the blob layer's retransmission recovers it.
+    const CTRL_INBOX_CAP: usize = 1024;
+
     /// Alg. 3 `receive pkt`, extended with the generation checks.
-    fn dispatch(&mut self, _src: NodeId, pkt: Packet) -> Option<Event> {
+    fn dispatch(&mut self, src: NodeId, pkt: Packet) -> Option<Event> {
+        if matches!(pkt.ctrl, Ctrl::Blob | Ctrl::BlobAck) {
+            // Blob frames bypass membership entirely (their `gen` field
+            // is informational): queuing one must never abort the
+            // window or count as stale traffic.
+            if self.ctrl_inbox.len() >= Self::CTRL_INBOX_CAP {
+                self.ctrl_inbox.pop_front();
+            }
+            self.ctrl_inbox.push_back((src, pkt));
+            return None;
+        }
         let evicts_us = pkt.ctrl == Ctrl::Evict && (pkt.bm >> self.worker) & 1 == 1;
         if pkt.gen > self.gen || (evicts_us && pkt.gen == self.gen && !self.evicted()) {
             return Some(self.adopt_generation(pkt.gen.max(self.gen), evicts_us));

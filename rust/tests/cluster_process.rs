@@ -1,0 +1,410 @@
+//! Process-mode cluster harness: spawn the real `p4sgd` binary as
+//! 1 switch + N workers + 1 coordinator over kernel UDP on localhost,
+//! wait on exit codes, and assert against the coordinator's `--report`
+//! JSON.
+//!
+//! Three escalating proofs:
+//!
+//! 1. **Parity**: a clean 2-worker process cluster reaches the bitwise
+//!    identical final model as the in-process thread trainer on the
+//!    same seed (depth 1 is exact by design — f32 bits travel raw and
+//!    i32 fixed-point aggregation is associative in any arrival order).
+//! 2. **Process death**: one worker is SIGKILLed mid-epoch; the
+//!    coordinator must evict it by silence, restore the last disk
+//!    checkpoint, restart over the survivor, and still hit the loss
+//!    bound — `FaultStats` crossing a real process boundary.
+//! 3. **Hostile socket**: raw truncated/garbage/wrong-version/
+//!    wrong-generation datagrams sprayed at a live switch process must
+//!    never panic it; stale members get the v1 `Join` notice with the
+//!    authoritative generation, and a concurrently-sprayed training run
+//!    still converges with zero evictions.
+//!
+//! Every test skips gracefully when the trainer binary is missing and
+//! serializes on one mutex (real ports are a shared resource). Port
+//! ranges are spaced per test so a wedged predecessor cannot alias a
+//! successor's cluster.
+
+use p4sgd::config::SystemConfig;
+use p4sgd::coordinator::mp;
+use p4sgd::coordinator::process::{spawn_cluster, wait_deadline, ClusterProcs};
+use p4sgd::data::synth;
+use p4sgd::engine::{Compute, NativeCompute};
+use p4sgd::glm::Loss;
+use p4sgd::net::udp;
+use p4sgd::protocol::blob::{BlobOut, Msg, ReconfigMsg};
+use p4sgd::protocol::{Ctrl, Packet};
+use std::net::UdpSocket;
+use std::path::{Path, PathBuf};
+use std::process::{Command, Stdio};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+const BIN: &str = env!("CARGO_BIN_EXE_p4sgd");
+
+/// Real UDP ports are a shared resource: one cluster at a time.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn native(_w: usize, _e: usize) -> Box<dyn Compute> {
+    Box::new(NativeCompute)
+}
+
+/// `Some(bin)` when the trainer binary exists, else a graceful skip.
+fn bin_or_skip() -> Option<&'static Path> {
+    let p = Path::new(BIN);
+    if p.exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping: trainer binary {BIN} not built");
+        None
+    }
+}
+
+fn tmp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("p4sgd-cluster-{}-{tag}", std::process::id()))
+}
+
+/// Build the pass-through `train` options shared by every role.
+fn common_args(kv: &[(&str, &str)], report: &Path) -> Vec<String> {
+    let mut v = Vec::new();
+    for (k, val) in kv {
+        v.push(format!("--{k}"));
+        v.push((*val).to_string());
+    }
+    v.push("--report".to_string());
+    v.push(report.to_string_lossy().into_owned());
+    v
+}
+
+/// Kills every cluster process on drop so a failed assertion cannot
+/// leave orphans squatting on the test ports.
+struct Cluster(ClusterProcs);
+
+impl Drop for Cluster {
+    fn drop(&mut self) {
+        self.0.kill_all();
+    }
+}
+
+/// Wait for the coordinator's verdict, then reap it.
+fn coordinator_verdict(procs: &mut Cluster, secs: u64) -> std::process::ExitStatus {
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    wait_deadline(&mut procs.0.coordinator, deadline)
+        .expect("waiting on coordinator")
+        .unwrap_or_else(|| panic!("coordinator still running after {secs}s"))
+}
+
+// -- tiny report parser (the schema is ours; see process::write_report) --
+
+fn field_u64(text: &str, key: &str) -> u64 {
+    let pat = format!("\"{key}\": ");
+    let at = text.find(&pat).unwrap_or_else(|| panic!("report lacks {key}: {text}"));
+    let rest = &text[at + pat.len()..];
+    let end = rest.find(|c: char| !c.is_ascii_digit()).unwrap_or(rest.len());
+    rest[..end].parse().unwrap_or_else(|e| panic!("parsing {key}: {e}"))
+}
+
+fn field_array(text: &str, key: &str) -> Vec<String> {
+    let pat = format!("\"{key}\": [");
+    let at = text.find(&pat).unwrap_or_else(|| panic!("report lacks {key}: {text}"));
+    let rest = &text[at + pat.len()..];
+    let end = rest.find(']').expect("unclosed array in report");
+    rest[..end]
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect()
+}
+
+fn read_report(path: &Path) -> String {
+    std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("coordinator never wrote {}: {e}", path.display()))
+}
+
+fn losses(text: &str) -> Vec<f32> {
+    field_array(text, "loss_per_epoch")
+        .iter()
+        .map(|s| s.parse().expect("finite loss"))
+        .collect()
+}
+
+#[test]
+fn process_cluster_matches_in_process_training_bitwise() {
+    let Some(bin) = bin_or_skip() else { return };
+    let _guard = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let report = tmp_path("parity.json");
+    let _ = std::fs::remove_file(&report);
+    let common = common_args(
+        &[
+            ("workers", "2"),
+            ("engines", "2"),
+            ("batch", "32"),
+            ("micro-batch", "8"),
+            ("epochs", "4"),
+            ("samples", "256"),
+            ("features", "64"),
+            ("worker-timeout-ms", "10000"),
+            ("base-port", "48000"),
+            ("expect-evictions", "0"),
+        ],
+        &report,
+    );
+    let mut procs = Cluster(spawn_cluster(bin, &common, 2).expect("spawning cluster"));
+    let st = coordinator_verdict(&mut procs, 120);
+    assert!(st.success(), "coordinator failed: {st}");
+    let deadline = Instant::now() + Duration::from_secs(20);
+    for (w, child) in procs.0.workers.iter_mut().enumerate() {
+        let ws = wait_deadline(child, deadline).expect("waiting on worker");
+        assert!(matches!(ws, Some(s) if s.success()), "worker {w} unclean exit: {ws:?}");
+    }
+    let ss = wait_deadline(&mut procs.0.switch, deadline).expect("waiting on switch");
+    assert!(matches!(ss, Some(s) if s.success()), "switch unclean exit: {ss:?}");
+
+    let text = read_report(&report);
+    assert_eq!(field_u64(&text, "evictions"), 0);
+    let curve = losses(&text);
+    assert_eq!(curve.len(), 4, "one loss per epoch");
+    assert!(
+        curve[curve.len() - 1] < curve[0],
+        "training must converge over the wire: {curve:?}"
+    );
+
+    // The in-process trainer on the identical config and seed: the
+    // process cluster must land on the very same f32 bit patterns.
+    let mut cfg = SystemConfig::default();
+    cfg.cluster.workers = 2;
+    cfg.cluster.engines = 2;
+    cfg.cluster.engine_threads = 1;
+    cfg.cluster.pipeline_depth = 1;
+    cfg.cluster.slots = 16;
+    cfg.cluster.worker_timeout_ms = 10_000;
+    cfg.train.loss = Loss::LogReg;
+    cfg.train.lr = 0.5;
+    cfg.train.batch = 32;
+    cfg.train.micro_batch = 8;
+    cfg.train.epochs = 4;
+    cfg.net.latency_ns = 0;
+    cfg.net.jitter_ns = 0;
+    cfg.net.timeout_us = 3000;
+    let ds = synth::separable(256, 64, cfg.train.loss, 0.1, 7);
+    let reference = mp::train_mp(&cfg, &ds, &native);
+    let want: Vec<u32> = reference.model.iter().map(|v| v.to_bits()).collect();
+    let got: Vec<u32> = field_array(&text, "model_bits")
+        .iter()
+        .map(|s| s.parse().expect("u32 bit pattern"))
+        .collect();
+    assert_eq!(got, want, "process-mode model must be bitwise identical to thread mode");
+    let _ = std::fs::remove_file(&report);
+}
+
+#[test]
+fn sigkilled_worker_is_evicted_and_training_recovers() {
+    let Some(bin) = bin_or_skip() else { return };
+    let _guard = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let report = tmp_path("sigkill.json");
+    let ckpt = tmp_path("sigkill-ckpt");
+    let _ = std::fs::remove_file(&report);
+    let _ = std::fs::remove_dir_all(&ckpt);
+    let ckpt_arg = ckpt.to_string_lossy().into_owned();
+    let common = common_args(
+        &[
+            ("workers", "2"),
+            ("engines", "2"),
+            ("batch", "32"),
+            ("micro-batch", "8"),
+            ("epochs", "40"),
+            ("samples", "1024"),
+            ("features", "256"),
+            ("worker-timeout-ms", "1500"),
+            ("checkpoint-interval", "2"),
+            ("checkpoint-dir", ckpt_arg.as_str()),
+            ("base-port", "48100"),
+            ("expect-evictions", "1"),
+            ("max-final-loss", "0.65"),
+        ],
+        &report,
+    );
+    let mut procs = Cluster(spawn_cluster(bin, &common, 2).expect("spawning cluster"));
+
+    // SIGKILL is only meaningful mid-attempt: wait until the first
+    // round-consistent checkpoint hits disk (epoch 2 of 40 — the run is
+    // provably in flight and the recovery path has something to restore
+    // from), then kill worker 1 outright. No Leave, no exit handler —
+    // from the cluster's view the process just stops answering.
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        assert!(Instant::now() < deadline, "no checkpoint within 60s — cluster never got going");
+        if std::fs::read_dir(&ckpt).map(|d| d.count() > 0).unwrap_or(false) {
+            break;
+        }
+        if let Some(st) = procs.0.coordinator.try_wait().expect("poll coordinator") {
+            panic!("coordinator exited before the kill: {st}");
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    procs.0.workers[1].kill().expect("SIGKILL worker 1");
+    let killed = procs.0.workers[1].wait().expect("reap killed worker");
+    assert!(!killed.success(), "SIGKILL must not look like a clean exit");
+
+    // The coordinator self-asserts `--expect-evictions 1` and the loss
+    // bound; its exit code is the verdict. (Teardown includes a bounded
+    // wait for the dead worker's unanswerable Shutdown blob.)
+    let st = coordinator_verdict(&mut procs, 180);
+    assert!(st.success(), "coordinator failed after worker SIGKILL: {st}");
+    let deadline = Instant::now() + Duration::from_secs(20);
+    let w0 = wait_deadline(&mut procs.0.workers[0], deadline).expect("waiting on worker 0");
+    assert!(matches!(w0, Some(s) if s.success()), "survivor unclean exit: {w0:?}");
+    let ss = wait_deadline(&mut procs.0.switch, deadline).expect("waiting on switch");
+    assert!(matches!(ss, Some(s) if s.success()), "switch unclean exit: {ss:?}");
+
+    let text = read_report(&report);
+    assert_eq!(field_u64(&text, "evictions"), 1, "exactly one eviction: {text}");
+    assert!(field_u64(&text, "restores") >= 1, "restart must restore the disk checkpoint: {text}");
+    assert!(field_u64(&text, "checkpoints") >= 1, "checkpoints must have been written: {text}");
+    let curve = losses(&text);
+    assert!(
+        curve[curve.len() - 1] < curve[0],
+        "recovered run must still converge: {curve:?}"
+    );
+    let _ = std::fs::remove_file(&report);
+    let _ = std::fs::remove_dir_all(&ckpt);
+}
+
+/// Reliable-deliver one control blob from a test endpoint, ignoring any
+/// interleaved non-ack traffic (e.g. notice replies to earlier probes).
+fn deliver_blob(ep: &mut udp::UdpEndpoint, dst: usize, id: u32, msg: &Msg) {
+    use p4sgd::net::Transport;
+    let mut out = BlobOut::new(id, dst, msg.encode());
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while !out.done() {
+        assert!(!out.failed(), "switch never acked blob {id}");
+        assert!(Instant::now() < deadline, "blob {id} delivery timed out");
+        let mut sends = Vec::new();
+        out.pump(Instant::now(), &mut |d, p| sends.push((d, p.clone())));
+        for (d, p) in sends {
+            ep.send(d, &p);
+        }
+        if let Some((_, p)) = ep.recv_timeout(Duration::from_millis(50)) {
+            if p.ctrl == Ctrl::BlobAck && p.bm == id {
+                out.on_ack(p.seq);
+            }
+        }
+    }
+}
+
+#[test]
+fn hostile_datagrams_never_panic_the_switch_and_training_survives() {
+    use p4sgd::net::Transport;
+    let Some(bin) = bin_or_skip() else { return };
+    let _guard = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+
+    // --- Phase A: a lone switch process under a focused spray. -------
+    // Nodes on base port 48200: workers {0, 1}, switch 2. The probe
+    // endpoint binds as "node 50" (port 48250) — a perfectly formed v1
+    // peer that is not part of the cluster.
+    let mut sw = Command::new(bin)
+        .args(["train", "--role", "switch", "--workers", "2", "--base-port", "48200"])
+        .stdin(Stdio::null())
+        .spawn()
+        .expect("spawning switch");
+    let sw_node = 2usize;
+    let sw_addr = ("127.0.0.1", 48202u16);
+    let mut probe = udp::bind_one(50, 48200).expect("binding probe endpoint");
+
+    // A stale-generation PA from (claimed) member worker 0: per the v1
+    // notice rules the switch must answer the sender with a unicast
+    // `Join` carrying its authoritative generation — retried because
+    // the switch process may still be booting on the first sends, and
+    // tolerant of replies queued from earlier probes (only a notice
+    // with the wanted generation counts).
+    let stale_notice = |probe: &mut udp::UdpEndpoint, want_gen: u32| -> bool {
+        for _ in 0..50 {
+            probe.send(sw_node, &Packet::pa(0, 0, vec![0i32; 8]).with_gen(4242));
+            if let Some((src, p)) = probe.recv_timeout(Duration::from_millis(100)) {
+                if src == sw_node && p.ctrl == Ctrl::Join && p.gen == want_gen {
+                    return true;
+                }
+            }
+        }
+        false
+    };
+    assert!(stale_notice(&mut probe, 0), "no v1 notice for a stale member probe");
+
+    // Raw hostility: empty, truncated, garbage, wrong-version, wrong
+    // magic. None may panic the switch (proven by it still answering).
+    let junk = UdpSocket::bind("127.0.0.1:0").expect("binding junk socket");
+    let mut frame = Vec::new();
+    Packet::pa(0, 0, vec![1, 2, 3, 4, 5, 6, 7, 8]).encode(&mut frame);
+    let mut wrong_version = frame.clone();
+    wrong_version[3] = 0;
+    let mut wrong_magic = frame.clone();
+    wrong_magic[0] ^= 0xFF;
+    for payload in [&[][..], &[0x34][..], &[0x34, 0x50, 1][..], &[0xAA; 64][..]] {
+        junk.send_to(payload, sw_addr).expect("spray");
+    }
+    junk.send_to(&wrong_version, sw_addr).expect("spray");
+    junk.send_to(&wrong_magic, sw_addr).expect("spray");
+    junk.send_to(&frame[..frame.len() - 3], sw_addr).expect("spray");
+
+    // A hostile reconfig (empty membership) must be ignored; a valid
+    // one re-arms the switch at generation 7 — and the stale probe now
+    // gets the *new* authoritative generation back.
+    let bad = ReconfigMsg { generation: 9, members_mask: 0, payload_len: 8, fa_ring: 2 };
+    deliver_blob(&mut probe, sw_node, 1, &Msg::Reconfig(bad));
+    let good = ReconfigMsg { generation: 7, members_mask: 0b11, payload_len: 8, fa_ring: 2 };
+    deliver_blob(&mut probe, sw_node, 2, &Msg::Reconfig(good));
+    assert!(stale_notice(&mut probe, 7), "no v1 notice after reconfig");
+
+    deliver_blob(&mut probe, sw_node, 3, &Msg::Shutdown);
+    let st = wait_deadline(&mut sw, Instant::now() + Duration::from_secs(15))
+        .expect("waiting on switch");
+    assert!(matches!(st, Some(s) if s.success()), "sprayed switch unclean exit: {st:?}");
+
+    // --- Phase B: a whole cluster trains while under fire. -----------
+    let report = tmp_path("hostile.json");
+    let _ = std::fs::remove_file(&report);
+    let common = common_args(
+        &[
+            ("workers", "2"),
+            ("engines", "2"),
+            ("batch", "32"),
+            ("micro-batch", "8"),
+            ("epochs", "6"),
+            ("samples", "256"),
+            ("features", "128"),
+            ("worker-timeout-ms", "10000"),
+            ("base-port", "48210"),
+            ("expect-evictions", "0"),
+        ],
+        &report,
+    );
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let mut stale = Vec::new();
+    Packet::pa(0, 0, vec![0i32; 8]).with_gen(9999).encode(&mut stale);
+    let sprayer = std::thread::spawn(move || {
+        let sock = UdpSocket::bind("127.0.0.1:0").expect("binding sprayer");
+        let live_switch = ("127.0.0.1", 48212u16);
+        let mut wrong_version = stale.clone();
+        wrong_version[3] = 0;
+        while !stop2.load(Ordering::Relaxed) {
+            let _ = sock.send_to(&[0xAA; 48], live_switch);
+            let _ = sock.send_to(&wrong_version, live_switch);
+            let _ = sock.send_to(&stale, live_switch);
+            std::thread::sleep(Duration::from_micros(500));
+        }
+    });
+    let mut procs = Cluster(spawn_cluster(bin, &common, 2).expect("spawning cluster"));
+    let st = coordinator_verdict(&mut procs, 120);
+    stop.store(true, Ordering::Relaxed);
+    sprayer.join().expect("sprayer thread");
+    assert!(st.success(), "coordinator failed under hostile spray: {st}");
+    let text = read_report(&report);
+    assert_eq!(field_u64(&text, "evictions"), 0, "hostile frames caused evictions: {text}");
+    let curve = losses(&text);
+    assert!(
+        curve[curve.len() - 1] < curve[0],
+        "training under spray must converge: {curve:?}"
+    );
+    let _ = std::fs::remove_file(&report);
+}
