@@ -16,7 +16,8 @@ A benchmark that vanishes from the current run normally fails the gate
 (a rename or a bench that died mid-run would otherwise let a regression
 escape). Exception: **axis migrations**. Parameterized benchmarks carry
 axis suffixes (`_t<N>` for engine threads, `_depth<N>` for pipeline
-depth); when an axis is re-pointed (say depth {1,3} becomes {1,4}),
+depth, `_tree<N>` for aggregation-tree leaf count); when an axis is
+re-pointed (say depth {1,3} becomes {1,4}),
 a dropped point is reported as migrated, not failed — but only if the
 current run introduced a *new* point with the same axis stem. Merely
 surviving siblings don't qualify: an axis that silently shrinks (a
@@ -26,7 +27,7 @@ import json
 import re
 import sys
 
-AXIS_SUFFIX = re.compile(r"_(t|depth)\d+")
+AXIS_SUFFIX = re.compile(r"_(tree|t|depth)\d+")
 
 
 def axis_key(name):

@@ -7,10 +7,13 @@
  *     `rust/src/engine/bitserial.rs` — the AVX2+FMA mask-expand MAC with the
  *     fixed stride-halving reduction tree must produce the exact same f32
  *     bits as the 32-lane scalar oracle, across precisions, odd widths, and
- *     dense/sparse/mixed rows. The twin mirrors the rust kernels line for
- *     line (same pack layout, same tree, same hybrid density dispatch), so a
- *     clean run here is direct evidence the rust design is sound on real
- *     silicon even when no rust toolchain is available.
+ *     dense/sparse/mixed rows; and the AVX2 blend-based backward scatter
+ *     must leave every untouched gradient lane's bits alone (gradients are
+ *     seeded with -0.0 lanes that a masked add of +0.0 would clobber — the
+ *     blend-not-add half of the contract). The twin mirrors the rust kernels
+ *     line for line (same pack layout, same tree, same hybrid density
+ *     dispatch), so a clean run here is direct evidence the rust design is
+ *     sound on real silicon even when no rust toolchain is available.
  *
  *  2. `bench`: measure the same shapes `cargo bench --bench kernels` times
  *     (MB=8, P=4, d in {256, 1024, 4096}; dense, forced-scalar, 1-in-16
@@ -193,6 +196,37 @@ __attribute__((target("avx2,fma"))) static float dense_plane_sum_avx2(const uint
     return _mm_cvtss_f32(r1);
 }
 
+/* One 8-lane group of the backward scatter: load, add, then *blend* on the
+ * mask so unset lanes store back their exact original bits (mirror of
+ * bitserial.rs `scatter8`). */
+#define SCATTER8(gp, wv, bits)                                                                       \
+    do {                                                                                             \
+        __m256 m_ =                                                                                  \
+            _mm256_castsi256_ps(_mm256_cmpeq_epi32(_mm256_and_si256((wv), (bits)), (bits)));         \
+        __m256 g_ = _mm256_loadu_ps(gp);                                                             \
+        _mm256_storeu_ps((gp), _mm256_blendv_ps(g_, _mm256_add_ps(g_, cv), m_));                     \
+    } while (0)
+
+__attribute__((target("avx2"))) static void backward_plane_row_avx2(const uint32_t *words, size_t nw,
+                                                                    float contrib, float *g) {
+    __m256i bits0 = _mm256_setr_epi32(1 << 0, 1 << 1, 1 << 2, 1 << 3, 1 << 4, 1 << 5, 1 << 6, 1 << 7);
+    __m256i bits1 =
+        _mm256_setr_epi32(1 << 8, 1 << 9, 1 << 10, 1 << 11, 1 << 12, 1 << 13, 1 << 14, 1 << 15);
+    __m256i bits2 =
+        _mm256_setr_epi32(1 << 16, 1 << 17, 1 << 18, 1 << 19, 1 << 20, 1 << 21, 1 << 22, 1 << 23);
+    __m256i bits3 = _mm256_setr_epi32(1 << 24, 1 << 25, 1 << 26, 1 << 27, 1 << 28, 1 << 29, 1 << 30,
+                                      (int)(1u << 31));
+    __m256 cv = _mm256_set1_ps(contrib);
+    for (size_t k = 0; k < nw; k++) {
+        __m256i wv = _mm256_set1_epi32((int)words[k]);
+        float *gp = g + k * LANE;
+        SCATTER8(gp, wv, bits0);
+        SCATTER8(gp + 8, wv, bits1);
+        SCATTER8(gp + 16, wv, bits2);
+        SCATTER8(gp + 24, wv, bits3);
+    }
+}
+
 static int simd_active(void) { return __builtin_cpu_supports("avx2") && __builtin_cpu_supports("fma"); }
 #else
 static float dense_plane_sum_avx2(const uint32_t *words, size_t nw, const float *x) {
@@ -200,6 +234,12 @@ static float dense_plane_sum_avx2(const uint32_t *words, size_t nw, const float 
     (void)nw;
     (void)x;
     return 0.0f;
+}
+static void backward_plane_row_avx2(const uint32_t *words, size_t nw, float contrib, float *g) {
+    (void)words;
+    (void)nw;
+    (void)contrib;
+    (void)g;
 }
 static int simd_active(void) { return 0; }
 #endif
@@ -227,23 +267,31 @@ static void forward_into(const packed_batch *pb, const float *x, float *out, int
 
 static float logreg_df(float fa, float y) { return 1.0f / (1.0f + expf(-fa)) - y; }
 
+static void backward_plane_row_scalar(const uint32_t *words, size_t nw, float contrib, float *g) {
+    for (size_t kw = 0; kw < nw; kw++) {
+        uint32_t word = words[kw];
+        size_t goff = kw * LANE;
+        while (word != 0) {
+            g[goff + (size_t)__builtin_ctz(word)] += contrib;
+            word &= word - 1;
+        }
+    }
+}
+
 static void backward_acc_planes(const packed_batch *pb, const float *fa, const float *y, float *g,
-                                float lr) {
+                                float lr, int use_simd) {
     size_t w = pb_lanes(pb);
+    float dense_cutoff = DENSE_THRESHOLD_FRAC * (float)pb->d;
     for (size_t k = 0; k < pb->mb; k++) {
         float scale = lr * logreg_df(fa[k], y[k]);
         if (scale == 0.0f) continue;
         for (size_t p = 0; p < pb->precision; p++) {
             float contrib = scale * powf(0.5f, (float)(p + 1));
             const uint32_t *row = pb->planes + (p * pb->mb + k) * w;
-            for (size_t kw = 0; kw < w; kw++) {
-                uint32_t word = row[kw];
-                size_t goff = kw * LANE;
-                while (word != 0) {
-                    g[goff + (size_t)__builtin_ctz(word)] += contrib;
-                    word &= word - 1;
-                }
-            }
+            if (use_simd && (float)pb->plane_pop[p * pb->mb + k] >= dense_cutoff)
+                backward_plane_row_avx2(row, w, contrib, g);
+            else
+                backward_plane_row_scalar(row, w, contrib, g);
         }
     }
 }
@@ -310,6 +358,32 @@ static int parity(void) {
                     (double)scalar, d);
             return 1;
         }
+        /* backward scatter parity: blend twin vs set-bit oracle, gradients
+         * seeded with -0.0 lanes a masked add (g + 0.0) would clobber */
+        float *fa = malloc(mb * 4), *yv = malloc(mb * 4);
+        for (size_t s = 0; s < mb; s++) {
+            fa[s] = rng_gauss(&rng);
+            yv[s] = (pcg_next(&rng) & 1) ? 1.0f : 0.0f;
+        }
+        float *g_simd = malloc(d_pad * 4), *g_scal = malloc(d_pad * 4);
+        for (size_t j = 0; j < d_pad; j++) {
+            float v = rng_f32(&rng) < 0.2f ? -0.0f : rng_gauss(&rng);
+            g_simd[j] = v;
+            g_scal[j] = v;
+        }
+        backward_acc_planes(&pb, fa, yv, g_simd, 0.3f, 1);
+        backward_acc_planes(&pb, fa, yv, g_scal, 0.3f, 0);
+        for (size_t j = 0; j < d_pad; j++) {
+            if (f32_bits(g_simd[j]) != f32_bits(g_scal[j])) {
+                fprintf(stderr, "PARITY FAIL bwd: lane %zu: %a vs %a (P=%u d=%zu mode=%d)\n", j,
+                        (double)g_simd[j], (double)g_scal[j], precision, d, mode);
+                return 1;
+            }
+        }
+        free(fa);
+        free(yv);
+        free(g_simd);
+        free(g_scal);
         cases++;
         pb_free(&pb);
         free(rows);
@@ -317,7 +391,7 @@ static int parity(void) {
         free(got);
         free(want);
     }
-    /* long rows too (the bench shapes) */
+    /* long rows too (the bench shapes), forward and backward */
     for (size_t d = 512; d <= 8192; d *= 2) {
         uint32_t *words = malloc(d / LANE * 4);
         float *x = malloc(d * 4);
@@ -330,11 +404,29 @@ static int parity(void) {
                     (double)scalar);
             return 1;
         }
+        float *g1 = malloc(d * 4), *g2 = malloc(d * 4);
+        for (size_t j = 0; j < d; j++) {
+            float v = (j % 7 == 0) ? -0.0f : rng_gauss(&rng);
+            g1[j] = v;
+            g2[j] = v;
+        }
+        backward_plane_row_avx2(words, d / LANE, 0.125f, g1);
+        backward_plane_row_scalar(words, d / LANE, 0.125f, g2);
+        for (size_t j = 0; j < d; j++) {
+            if (f32_bits(g1[j]) != f32_bits(g2[j])) {
+                fprintf(stderr, "PARITY FAIL long bwd row d=%zu lane %zu: %a vs %a\n", d, j,
+                        (double)g1[j], (double)g2[j]);
+                return 1;
+            }
+        }
         cases++;
         free(words);
         free(x);
+        free(g1);
+        free(g2);
     }
-    printf("parity OK: avx2 mask-expand MAC bit-identical to scalar tree oracle (%d cases)\n", cases);
+    printf("parity OK: avx2 mask-expand MAC + blend scatter bit-identical to scalar oracles (%d cases)\n",
+           cases);
     return 0;
 }
 
@@ -452,7 +544,7 @@ static int bench(const char *out_path) {
         char name[64];
         snprintf(name, sizeof name, "native_bwd_planes_d%zu", d);
         TIMED(samp, {
-            backward_acc_planes(&pb, fa, y, g, 0.1f);
+            backward_acc_planes(&pb, fa, y, g, 0.1f, use_simd);
             clobber(g);
         });
         emit(name, samp, MB * d);

@@ -40,6 +40,23 @@ fn main() {
     println!("  -> {samples_per_s:.1} samples/s end-to-end");
     json.push(&r, &[("samples_per_s", samples_per_s)]);
 
+    // topology axis: the same 4-worker epoch through a 2-leaf + spine
+    // tree. Identical numerics (depth-1 tree runs are bitwise equal to
+    // flat), so tree2/flat samples_per_s isolates the cost of the extra
+    // aggregation level — two switch hops and the partial-aggregate
+    // relay — which the latency-free fabric makes a pure protocol tax.
+    {
+        let mut cfg = cfg.clone();
+        cfg.switch.tree = true;
+        cfg.switch.leaves = 2;
+        let r = run("functional_mp_epoch_512x2048_w4_tree2", bcfg, || {
+            mp::train_mp(&cfg, &ds, &make)
+        });
+        let sps = ds.n as f64 / r.summary.mean;
+        println!("  -> {sps:.1} samples/s through 2 leaves + spine ({:.2}x flat)", sps / samples_per_s);
+        json.push(&r, &[("samples_per_s", sps), ("leaves", 2.0)]);
+    }
+
     // engine-thread scaling axis: one worker with a wide shard so the
     // per-engine forward/backward dominates dispatch overhead. The
     // regression gate tracks each thread count as its own entry; t4/t1

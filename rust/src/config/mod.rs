@@ -145,6 +145,70 @@ impl ClusterConfig {
     }
 }
 
+/// Aggregation-switch topology: flat (the default), a two-level
+/// leaf/spine tree, and multi-tenant slot partitioning.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SwitchConfig {
+    /// Run aggregation as a two-level tree: `leaves` pod switches, each
+    /// aggregating its pod of workers and forwarding one
+    /// partial-aggregate per (slot, round) to a spine switch that
+    /// completes across pods. `false` (default) keeps the flat
+    /// single-switch path, bitwise untouched.
+    pub tree: bool,
+    /// Leaf count for the tree (2..=8, and at most one leaf per
+    /// worker). Ignored when `tree = false`.
+    pub leaves: usize,
+    /// Explicit pod sizes, comma-separated (e.g. `"3,1"`), assigned to
+    /// workers contiguously in index order; must have `leaves` entries
+    /// summing to `cluster.workers`. `None` (default) splits evenly
+    /// (earlier pods take the remainder).
+    pub pods: Option<String>,
+    /// Concurrent training jobs sharing one switch (1..=4). Values > 1
+    /// partition the slot table into per-job ranges selected by the v1
+    /// header's job id (see `switch::tenant`). 1 (default) keeps the
+    /// single-tenant table.
+    pub jobs: usize,
+    /// Slots per job partition when `jobs > 1`; must cover each
+    /// tenant's client window (`effective_window`).
+    pub job_slots: usize,
+}
+
+impl Default for SwitchConfig {
+    fn default() -> Self {
+        Self { tree: false, leaves: 2, pods: None, jobs: 1, job_slots: 4096 }
+    }
+}
+
+impl SwitchConfig {
+    /// Pod sizes over `workers` workers: the parsed `pods` list, or an
+    /// even split with earlier pods taking the remainder. Call only
+    /// after `validate` (an invalid `pods` string panics here).
+    pub fn pod_sizes(&self, workers: usize) -> Vec<usize> {
+        match &self.pods {
+            Some(s) => s
+                .split(',')
+                .map(|t| t.trim().parse::<usize>().expect("validated pod size"))
+                .collect(),
+            None => (0..self.leaves)
+                .map(|l| workers / self.leaves + usize::from(l < workers % self.leaves))
+                .collect(),
+        }
+    }
+
+    /// Which pod (= leaf index) owns `worker`, under the contiguous
+    /// assignment of [`SwitchConfig::pod_sizes`].
+    pub fn pod_of(&self, worker: usize, workers: usize) -> usize {
+        let mut base = 0;
+        for (l, sz) in self.pod_sizes(workers).iter().enumerate() {
+            if worker < base + sz {
+                return l;
+            }
+            base += sz;
+        }
+        panic!("worker {worker} outside the {workers}-worker pod map");
+    }
+}
+
 /// Training hyper-parameters (paper Alg. 1).
 #[derive(Debug, Clone, PartialEq)]
 pub struct TrainConfig {
@@ -261,6 +325,7 @@ impl Default for FaultConfig {
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct SystemConfig {
     pub cluster: ClusterConfig,
+    pub switch: SwitchConfig,
     pub train: TrainConfig,
     pub net: NetConfig,
     pub fault: FaultConfig,
@@ -288,6 +353,11 @@ impl SystemConfig {
             "cluster.join_epoch",
             "cluster.join_workers",
             "cluster.base_port",
+            "switch.tree",
+            "switch.leaves",
+            "switch.pods",
+            "switch.jobs",
+            "switch.job_slots",
             "fault.kill_worker",
             "fault.kill_at_frac",
             "train.loss",
@@ -349,6 +419,13 @@ impl SystemConfig {
                 join_workers: doc.int_or("cluster.join_workers", d.cluster.join_workers as i64)
                     as usize,
                 base_port: doc.int_or("cluster.base_port", d.cluster.base_port as i64) as u16,
+            },
+            switch: SwitchConfig {
+                tree: doc.bool_or("switch.tree", d.switch.tree),
+                leaves: doc.int_or("switch.leaves", d.switch.leaves as i64) as usize,
+                pods: doc.get("switch.pods").and_then(|v| v.as_str()).map(str::to_string),
+                jobs: doc.int_or("switch.jobs", d.switch.jobs as i64) as usize,
+                job_slots: doc.int_or("switch.job_slots", d.switch.job_slots as i64) as usize,
             },
             fault: FaultConfig {
                 kill_worker: match doc.int_or("fault.kill_worker", -1) {
@@ -488,13 +565,71 @@ impl SystemConfig {
         if c.base_port < 1024 {
             bail!("cluster.base_port must be >= 1024 (unprivileged range), got {}", c.base_port);
         }
-        if c.base_port as usize + c.workers + 2 > 65536 {
+        let sw = &self.switch;
+        // flat mode needs workers + switch + coordinator ports; a tree
+        // swaps the one switch for `leaves` leaves + a spine.
+        let extra = if sw.tree { sw.leaves + 2 } else { 2 };
+        if c.base_port as usize + c.workers + extra > 65536 {
             bail!(
-                "cluster.base_port {} leaves no room for {} workers + switch + coordinator \
+                "cluster.base_port {} leaves no room for {} workers + switch(es) + coordinator \
                  below port 65536",
                 c.base_port,
                 c.workers
             );
+        }
+        if sw.tree {
+            if !(2..=8).contains(&sw.leaves) {
+                bail!("switch.leaves must be in 2..=8, got {}", sw.leaves);
+            }
+            if sw.leaves > c.workers {
+                bail!("switch.leaves {} exceeds the {} workers (empty pods)", sw.leaves, c.workers);
+            }
+            if c.join_epoch.is_some() {
+                bail!("switch.tree is incompatible with cluster.join_epoch (scale-up re-plans \
+                       the flat port map)");
+            }
+        }
+        if let Some(p) = &sw.pods {
+            if !sw.tree {
+                bail!("switch.pods requires switch.tree = true");
+            }
+            let sizes: Vec<usize> = p
+                .split(',')
+                .map(|t| t.trim().parse::<usize>())
+                .collect::<Result<_, _>>()
+                .map_err(|_| anyhow::anyhow!("switch.pods {p:?} is not a comma-separated size list"))?;
+            if sizes.len() != sw.leaves {
+                bail!("switch.pods has {} entries for {} leaves", sizes.len(), sw.leaves);
+            }
+            if sizes.iter().any(|&s| s == 0) {
+                bail!("switch.pods entries must be >= 1 (empty pods are not spawnable)");
+            }
+            if sizes.iter().sum::<usize>() != c.workers {
+                bail!(
+                    "switch.pods {p:?} sums to {}, not the {} workers",
+                    sizes.iter().sum::<usize>(),
+                    c.workers
+                );
+            }
+        }
+        if !(1..=4).contains(&sw.jobs) {
+            bail!("switch.jobs must be in 1..=4 (the 2-bit wire field), got {}", sw.jobs);
+        }
+        if sw.jobs > 1 {
+            if sw.tree {
+                bail!("switch.jobs > 1 on a tree is not supported (partition the leaves instead)");
+            }
+            if sw.job_slots < c.effective_window() {
+                bail!(
+                    "switch.job_slots {} does not cover the client window {} (in-flight rounds \
+                     would alias one slot)",
+                    sw.job_slots,
+                    c.effective_window()
+                );
+            }
+            if sw.job_slots > crate::worker::agg_client::SEQ_SPACE {
+                bail!("switch.job_slots must be <= the 64K seq space, got {}", sw.job_slots);
+            }
         }
         let ch = &self.net.chaos;
         if ch.straggler_factor < 1.0 {
@@ -743,6 +878,75 @@ mod tests {
         assert!(bad.validate().is_err(), "port plan must fit below 65536");
         bad.cluster.base_port = 65530; // 65530..=65535: 4 workers + switch + coordinator
         bad.validate().unwrap();
+    }
+
+    #[test]
+    fn switch_tree_keys_parse_and_default_flat() {
+        let d = SystemConfig::default();
+        assert!(!d.switch.tree, "flat single switch is the default");
+        assert_eq!(d.switch.jobs, 1);
+        let cfg = SystemConfig::from_toml(
+            r#"
+            [cluster]
+            workers = 4
+            [switch]
+            tree = true
+            leaves = 2
+            pods = "3,1"
+            "#,
+        )
+        .unwrap();
+        assert!(cfg.switch.tree);
+        assert_eq!(cfg.switch.pod_sizes(4), [3, 1]);
+        assert_eq!(
+            (0..4).map(|w| cfg.switch.pod_of(w, 4)).collect::<Vec<_>>(),
+            [0, 0, 0, 1]
+        );
+        // even split default: earlier pods take the remainder
+        let even = SwitchConfig { tree: true, leaves: 3, ..SwitchConfig::default() };
+        assert_eq!(even.pod_sizes(8), [3, 3, 2]);
+        assert_eq!(even.pod_of(5, 8), 1);
+        assert_eq!(even.pod_of(7, 8), 2);
+    }
+
+    #[test]
+    fn switch_tree_validation_bounds() {
+        let tree = |f: fn(&mut SystemConfig)| {
+            let mut cfg = SystemConfig::default();
+            cfg.switch.tree = true;
+            f(&mut cfg);
+            cfg.validate()
+        };
+        tree(|_| {}).unwrap();
+        assert!(tree(|c| c.switch.leaves = 1).is_err(), "a 1-leaf tree is just flat");
+        assert!(tree(|c| c.switch.leaves = 9).is_err());
+        assert!(tree(|c| c.cluster.workers = 1).is_err(), "more leaves than workers");
+        assert!(tree(|c| c.cluster.join_epoch = Some(2)).is_err(), "tree excludes scale-up");
+        assert!(tree(|c| c.switch.pods = Some("2,1".into())).is_err(), "pods must sum to workers");
+        assert!(tree(|c| c.switch.pods = Some("4,0".into())).is_err(), "no empty pods");
+        assert!(tree(|c| c.switch.pods = Some("2,x".into())).is_err(), "pods must be numeric");
+        tree(|c| c.switch.pods = Some("2,2".into())).unwrap();
+        // pods without tree
+        let mut cfg = SystemConfig::default();
+        cfg.switch.pods = Some("2,2".into());
+        assert!(cfg.validate().is_err());
+        // multi-tenant bounds
+        let mut cfg = SystemConfig::default();
+        cfg.switch.jobs = 5;
+        assert!(cfg.validate().is_err());
+        cfg.switch.jobs = 2;
+        cfg.switch.job_slots = 16; // < effective_window (64)
+        assert!(cfg.validate().is_err());
+        cfg.switch.job_slots = 64;
+        cfg.validate().unwrap();
+        cfg.switch.tree = true;
+        assert!(cfg.validate().is_err(), "tree + multi-tenant unsupported");
+        // tree port plan needs room for every leaf + the spine
+        let mut cfg = SystemConfig::default();
+        cfg.cluster.base_port = 65530; // fits flat (4 + 2)...
+        cfg.validate().unwrap();
+        cfg.switch.tree = true; // ...but not 4 workers + 2 leaves + spine + coordinator
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -34,7 +34,7 @@ use crate::data::Dataset;
 use crate::engine::{Compute, EngineRunner};
 use crate::metrics::FaultStats;
 use crate::net::sim::SimNet;
-use crate::net::{supervisor_node, switch_node};
+use crate::net::{leaf_node, spine_node, switch_node, NodeId};
 use crate::pipeline::{flush_round, run_minibatch, PipelineScratch, PipelineStats, PreparedShard};
 use crate::switch::p4::P4Switch;
 use crate::switch::runner;
@@ -119,16 +119,73 @@ fn run_attempt(
         None
     };
 
-    // Nodes: workers 0..m, switch m, supervisor m+1.
-    let (mut endpoints, chaos) = SimNet::build_with_chaos(m + 2, &cfg.net);
+    // Nodes — flat: workers 0..m, switch m, supervisor m+1; tree:
+    // workers 0..m, leaves m..m+L, spine m+L, supervisor m+L+1.
+    let tree = cfg.switch.tree;
+    let n_leaves = if tree { cfg.switch.leaves } else { 0 };
+    let nodes = m + n_leaves + 2;
+    let (mut endpoints, chaos) = SimNet::build_with_chaos(nodes, &cfg.net);
     let mut sup_ep = endpoints.pop().unwrap();
-    let switch_ep = endpoints.pop().unwrap();
-    let server = runner::spawn(
-        P4Switch::new(crate::worker::agg_client::SEQ_SPACE, m, t.micro_batch)
-            .with_fa_ring(cfg.cluster.fa_ring())
-            .with_generation(generation),
-        switch_ep,
-    );
+    let sup_node = nodes - 1;
+    // Pods partition the ORIGINAL global ids, so a worker keeps its
+    // leaf across re-partitioning attempts; `routes[w]` is the switch
+    // owning local worker w's membership bit (its leaf, or the flat
+    // switch) — the AggClient server and the supervisor's evict target.
+    let seq_space = crate::worker::agg_client::SEQ_SPACE;
+    let fa_ring = cfg.cluster.fa_ring();
+    let mut routes: Vec<NodeId> = vec![switch_node(m); m];
+    let mut servers: Vec<runner::ServerHandle> = Vec::new();
+    if tree {
+        let spine_ep = endpoints.pop().unwrap();
+        let mut leaf_eps: Vec<_> = (0..n_leaves).map(|_| endpoints.pop().unwrap()).collect();
+        leaf_eps.reverse(); // popped high-to-low; leaf l binds node m + l
+        let spine = spine_node(m, n_leaves);
+        let mut spine_mask = 0u32;
+        for (l, ep) in leaf_eps.into_iter().enumerate() {
+            let pod: Vec<usize> = (0..m)
+                .filter(|&w| cfg.switch.pod_of(plan.members[w], cfg.cluster.workers) == l)
+                .collect();
+            if pod.is_empty() {
+                continue; // fully-evicted pod: no leaf to run
+            }
+            spine_mask |= 1 << l;
+            let pod_mask = pod.iter().fold(0u32, |acc, &w| acc | 1 << w);
+            for &w in &pod {
+                routes[w] = leaf_node(m, l);
+            }
+            servers.push(runner::spawn_at(
+                P4Switch::new(seq_space, m, t.micro_batch)
+                    .with_fa_ring(fa_ring)
+                    .with_generation(generation)
+                    .with_members(pod_mask)
+                    .with_uplink(spine, l),
+                ep,
+                l + 1,
+                Some(pod),
+            ));
+        }
+        let leaf_nodes: Vec<NodeId> = (0..n_leaves)
+            .filter(|l| (spine_mask >> l) & 1 == 1)
+            .map(|l| leaf_node(m, l))
+            .collect();
+        servers.push(runner::spawn_at(
+            P4Switch::new(seq_space, n_leaves, t.micro_batch)
+                .with_fa_ring(fa_ring)
+                .with_generation(generation)
+                .with_members(spine_mask),
+            spine_ep,
+            0,
+            Some(leaf_nodes),
+        ));
+    } else {
+        let switch_ep = endpoints.pop().unwrap();
+        servers.push(runner::spawn(
+            P4Switch::new(seq_space, m, t.micro_batch)
+                .with_fa_ring(fa_ring)
+                .with_generation(generation),
+            switch_ep,
+        ));
+    }
 
     let (res_tx, res_rx) = mpsc::channel::<WorkerOutcome>();
     let (ck_tx, ck_rx) = mpsc::channel::<CkptPart>();
@@ -143,12 +200,13 @@ fn run_attempt(
             let cfg = cfg.clone();
             let global = plan.members[w];
             let finished = finished.clone();
+            let server_node = routes[w];
             scope.spawn(move || {
                 let t = &cfg.train;
-                let sup = supervisor_node(m);
+                let sup = sup_node;
                 let mut agg = AggClient::new(
                     ep,
-                    switch_node(m),
+                    server_node,
                     w,
                     window,
                     Duration::from_micros(cfg.net.timeout_us),
@@ -292,9 +350,9 @@ fn run_attempt(
                 rng: cfg.net.seed,
             });
             let timeout = supervise.then(|| Duration::from_millis(cfg.cluster.worker_timeout_ms));
-            sup_report = supervisor::run(
+            sup_report = supervisor::run_routed(
                 &mut sup_ep,
-                switch_node(m),
+                &routes,
                 m,
                 timeout,
                 generation,
@@ -305,7 +363,9 @@ fn run_attempt(
             );
         }
     });
-    server.shutdown();
+    for server in servers {
+        server.shutdown();
+    }
     fault.straggler_rounds += chaos.straggled_frames.load(Ordering::Relaxed);
 
     let mut outcomes: Vec<WorkerOutcome> = res_rx.into_iter().collect();
@@ -376,6 +436,38 @@ mod tests {
         for (a, b) in r1.loss_per_epoch.iter().zip(&r4.loss_per_epoch) {
             assert!((a - b).abs() < 5e-3 * a.abs().max(1.0), "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn tree_depth1_is_bitwise_identical_to_flat() {
+        // i32 aggregation is associative across the pod split, so the
+        // 2-leaf + spine tree must reproduce the flat switch bit for
+        // bit — the acceptance bar for the whole tree path.
+        let ds = synth::separable(128, 64, Loss::LogReg, 0.0, 9);
+        let mut c = cfg(4);
+        c.train.epochs = 3;
+        let flat = train_mp(&c, &ds, &native);
+        c.switch.tree = true;
+        c.switch.leaves = 2;
+        c.validate().unwrap();
+        let tree = train_mp(&c, &ds, &native);
+        assert_eq!(
+            flat.model.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+            tree.model.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+            "tree FA must be bitwise identical to flat"
+        );
+        assert_eq!(
+            flat.loss_per_epoch.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+            tree.loss_per_epoch.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+        );
+        // an uneven pod map changes nothing either (associativity)
+        c.switch.pods = Some("3,1".into());
+        c.validate().unwrap();
+        let uneven = train_mp(&c, &ds, &native);
+        assert_eq!(
+            flat.model.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+            uneven.model.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+        );
     }
 
     #[test]

@@ -13,6 +13,16 @@
 //! worker's socket, heartbeat identity, and eviction bit never change
 //! across attempts.
 //!
+//! With `[switch] tree` the single switch becomes `L + 1` switch
+//! processes on the tree port plan: leaves at `M..M+L` (`--role leaf
+//! --leaf-id l`), the spine at `M+L` (`--role spine`), and the
+//! coordinator shifted to `M+L+1`. A worker talks only to its pod's
+//! leaf; the coordinator reconfigures each live leaf with the
+//! membership ∩ pod mask plus the spine with the non-empty-leaf mask,
+//! and routes eviction orders to the evicted worker's **leaf** (never
+//! the spine — worker bits would alias leaf bits there; the
+//! generation-sync chain carries the bump across the tree).
+//!
 //! # Control plane
 //!
 //! Aggregation traffic is the same v1 frame as thread mode; everything
@@ -58,7 +68,10 @@ use crate::data::quantize::LANE;
 use crate::data::Dataset;
 use crate::engine::EngineRunner;
 use crate::metrics::FaultStats;
-use crate::net::{supervisor_node, switch_node, udp, NodeId, Transport};
+use crate::net::{
+    leaf_node, spine_node, supervisor_node, switch_node, tree_supervisor_node, udp, NodeId,
+    Transport,
+};
 use crate::pipeline::{flush_round, run_minibatch, PipelineScratch, PipelineStats, PreparedShard};
 use crate::protocol::blob::{
     u64s_to_words, words_to_u64s, BlobOut, BlobRx, Msg, OutcomeMsg, PartMsg, PlanMsg, ReconfigMsg,
@@ -75,6 +88,32 @@ use std::time::{Duration, Instant};
 /// Exit code of a worker process that executed the `--kill-worker`
 /// crash injection (it vanishes mid-epoch, like a SIGKILL).
 pub const KILL_EXIT: i32 = 86;
+
+// ---------------------------------------------------------------------------
+// Topology: where each role lives under the active (flat or tree) plan
+// ---------------------------------------------------------------------------
+
+/// Coordinator/supervisor node: one past the last switch, whichever
+/// plan is active.
+fn coord_node(cfg: &SystemConfig) -> NodeId {
+    let m = cfg.cluster.workers;
+    if cfg.switch.tree {
+        tree_supervisor_node(m, cfg.switch.leaves)
+    } else {
+        supervisor_node(m)
+    }
+}
+
+/// The aggregation server worker `global` sends PAs to: the flat
+/// switch, or its pod's leaf in tree mode.
+fn agg_route(cfg: &SystemConfig, global: usize) -> NodeId {
+    let m = cfg.cluster.workers;
+    if cfg.switch.tree {
+        leaf_node(m, cfg.switch.pod_of(global, m))
+    } else {
+        switch_node(m)
+    }
+}
 
 // ---------------------------------------------------------------------------
 // Blob bookkeeping shared by both endpoints of the control plane
@@ -196,10 +235,67 @@ fn agg_stats_from_words(w: &[i32]) -> AggStats {
 /// until the coordinator's `Shutdown` blob arrives.
 pub fn run_switch(cfg: &SystemConfig) -> Result<()> {
     cfg.validate()?;
+    ensure!(!cfg.switch.tree, "--role switch is the flat plan; tree clusters run --role leaf/spine");
     let m = cfg.cluster.workers;
     let ep = udp::bind_one(switch_node(m), cfg.cluster.base_port)
         .with_context(|| format!("binding switch node {} (stale process on the port?)", switch_node(m)))?;
     crate::switch::runner::run_process_switch(ep, m, cfg.train.micro_batch, cfg.cluster.fa_ring());
+    Ok(())
+}
+
+/// `train --role leaf --leaf-id L`: bind node `M+L` and aggregate one
+/// pod, forwarding one partial-aggregate packet per (slot, round) up to
+/// the spine. Same lifecycle as the flat switch (reconfig blobs carry
+/// the pod ∩ membership mask; `Shutdown` ends it).
+pub fn run_leaf(cfg: &SystemConfig, leaf: usize) -> Result<()> {
+    cfg.validate()?;
+    ensure!(cfg.switch.tree, "--role leaf requires tree mode (--tree)");
+    let m = cfg.cluster.workers;
+    let n_leaves = cfg.switch.leaves;
+    ensure!(leaf < n_leaves, "--leaf-id {leaf} out of range (leaves = {n_leaves})");
+    let pod: Vec<NodeId> = (0..m).filter(|&w| cfg.switch.pod_of(w, m) == leaf).collect();
+    let pod_mask = pod.iter().fold(0u32, |a, &w| a | (1 << w));
+    let node = leaf_node(m, leaf);
+    let ep = udp::bind_one(node, cfg.cluster.base_port)
+        .with_context(|| format!("binding leaf node {node} (stale process on the port?)"))?;
+    crate::switch::runner::run_process_switch_cfg(
+        ep,
+        &crate::switch::runner::SwitchProc {
+            workers: m,
+            payload_len: cfg.train.micro_batch,
+            fa_ring: cfg.cluster.fa_ring(),
+            members: pod_mask,
+            uplink: Some((spine_node(m, n_leaves), leaf)),
+            fanout: pod,
+            pin_index: leaf + 1,
+        },
+    );
+    Ok(())
+}
+
+/// `train --role spine`: bind node `M+L` and complete aggregation
+/// across the leaves — an unmodified P4 state machine whose "workers"
+/// are the leaves (bitmap domain `0..L`).
+pub fn run_spine(cfg: &SystemConfig) -> Result<()> {
+    cfg.validate()?;
+    ensure!(cfg.switch.tree, "--role spine requires tree mode (--tree)");
+    let m = cfg.cluster.workers;
+    let n_leaves = cfg.switch.leaves;
+    let node = spine_node(m, n_leaves);
+    let ep = udp::bind_one(node, cfg.cluster.base_port)
+        .with_context(|| format!("binding spine node {node} (stale process on the port?)"))?;
+    crate::switch::runner::run_process_switch_cfg(
+        ep,
+        &crate::switch::runner::SwitchProc {
+            workers: n_leaves,
+            payload_len: cfg.train.micro_batch,
+            fa_ring: cfg.cluster.fa_ring(),
+            members: (1u32 << n_leaves) - 1,
+            uplink: None,
+            fanout: (0..n_leaves).map(|l| leaf_node(m, l)).collect(),
+            pin_index: 0,
+        },
+    );
     Ok(())
 }
 
@@ -246,12 +342,12 @@ pub fn run_worker(
     let m_init = cfg.cluster.workers;
     ensure!(global < m_init, "--worker-id {global} out of range (workers = {m_init})");
     ensure!(cfg.cluster.worker_timeout_ms > 0, "process mode requires supervision (worker_timeout_ms > 0)");
-    let coord = supervisor_node(m_init);
+    let coord = coord_node(cfg);
     let ep = udp::bind_one(global, cfg.cluster.base_port)
         .with_context(|| format!("binding worker node {global}"))?;
     let mut agg = AggClient::new(
         ep,
-        switch_node(m_init),
+        agg_route(cfg, global),
         global,
         cfg.cluster.effective_window(),
         Duration::from_micros(cfg.net.timeout_us),
@@ -429,8 +525,7 @@ pub fn run_coordinator(cfg: &SystemConfig, ds: &Dataset) -> Result<TrainReport> 
     ensure!(cfg.cluster.worker_timeout_ms > 0, "process mode requires supervision (worker_timeout_ms > 0)");
     ensure!(cfg.cluster.join_epoch.is_none(), "process mode does not support mid-run scale-up");
     let m_init = cfg.cluster.workers;
-    let switch = switch_node(m_init);
-    let mut ep = udp::bind_one(supervisor_node(m_init), cfg.cluster.base_port)
+    let mut ep = udp::bind_one(coord_node(cfg), cfg.cluster.base_port)
         .context("binding coordinator endpoint")?;
     let mut wire = Wire::new();
     let report = super::run_elastic(
@@ -452,10 +547,17 @@ pub fn run_coordinator(cfg: &SystemConfig, ds: &Dataset) -> Result<TrainReport> 
             run_wire_attempt(cfg, ds, &mut ep, &mut wire, plan, fault)
         },
     );
-    // Wind the cluster down: the switch and every worker exit on their
+    // Wind the cluster down: every switch and worker exits on its
     // Shutdown blob. Dead workers never ack — their blobs are abandoned
     // at the deadline.
-    wire.send_msg(switch, &Msg::Shutdown);
+    if cfg.switch.tree {
+        for l in 0..cfg.switch.leaves {
+            wire.send_msg(leaf_node(m_init, l), &Msg::Shutdown);
+        }
+        wire.send_msg(spine_node(m_init, cfg.switch.leaves), &Msg::Shutdown);
+    } else {
+        wire.send_msg(switch_node(m_init), &Msg::Shutdown);
+    }
     for g in 0..m_init {
         wire.send_msg(g, &Msg::Shutdown);
     }
@@ -489,7 +591,7 @@ fn run_wire_attempt(
 ) -> Attempt {
     let t = &cfg.train;
     let m = plan.members.len();
-    let switch = switch_node(cfg.cluster.workers);
+    let m_init = cfg.cluster.workers;
     let timeout = Duration::from_millis(cfg.cluster.worker_timeout_ms);
     let mut gen = plan.generation;
     let save_dir = if cfg.cluster.checkpoint_interval > 0 {
@@ -498,20 +600,46 @@ fn run_wire_attempt(
         None
     };
 
-    // 1. The switch adopts this attempt's membership/generation first —
-    //    otherwise early PAs would bounce as stale.
-    let mask: u32 = plan.members.iter().fold(0u32, |a, &g| a | (1 << g));
-    let rid = wire.send_msg(
-        switch,
-        &Msg::Reconfig(ReconfigMsg {
+    // 1. Every switch adopts this attempt's membership/generation first
+    //    — otherwise early PAs would bounce as stale. Flat: one
+    //    reconfig. Tree: one per leaf with a live pod (membership ∩
+    //    pod), plus the spine with the live-leaf mask; a fully-evicted
+    //    pod's leaf gets nothing and just idles.
+    let reconfig = |members_mask: u32| {
+        Msg::Reconfig(ReconfigMsg {
             generation: gen,
-            members_mask: mask,
+            members_mask,
             payload_len: t.micro_batch,
             fa_ring: cfg.cluster.fa_ring(),
-        }),
-    );
-    while !wire.delivered(rid) {
-        assert!(!wire.has_failed(rid), "switch process unreachable (reconfig never acknowledged)");
+        })
+    };
+    let mut rids: Vec<u32> = Vec::new();
+    if cfg.switch.tree {
+        let mut spine_mask = 0u32;
+        for l in 0..cfg.switch.leaves {
+            let pod_mask = plan
+                .members
+                .iter()
+                .filter(|&&g| cfg.switch.pod_of(g, m_init) == l)
+                .fold(0u32, |a, &g| a | (1 << g));
+            if pod_mask == 0 {
+                continue;
+            }
+            spine_mask |= 1 << l;
+            rids.push(wire.send_msg(leaf_node(m_init, l), &reconfig(pod_mask)));
+        }
+        rids.push(wire.send_msg(spine_node(m_init, cfg.switch.leaves), &reconfig(spine_mask)));
+    } else {
+        let mask: u32 = plan.members.iter().fold(0u32, |a, &g| a | (1 << g));
+        rids.push(wire.send_msg(switch_node(m_init), &reconfig(mask)));
+    }
+    while !rids.iter().all(|&rid| wire.delivered(rid)) {
+        for &rid in &rids {
+            assert!(
+                !wire.has_failed(rid),
+                "a switch process is unreachable (reconfig never acknowledged)"
+            );
+        }
         wire.pump(&mut |d, p| ep.send(d, p));
         if let Some((src, pkt)) = ep.recv_timeout(Duration::from_millis(2)) {
             if pkt.ctrl == Ctrl::BlobAck {
@@ -611,15 +739,28 @@ fn run_wire_attempt(
                 evicted_mask |= 1 << g;
                 gen = gen.wrapping_add(1);
                 fault.evictions += 1;
-                ep.send(switch, &Packet::evict(1 << g, gen));
+                // Tree mode orders the evicted worker's LEAF (never the
+                // spine — worker bits alias leaf bits there); the leaf's
+                // generation notice carries the bump across the tree.
+                ep.send(agg_route(cfg, g), &Packet::evict(1 << g, gen));
                 last_order = now;
             }
         }
         if evicted_mask != 0 && now.duration_since(last_order) > timeout / 2 {
             // The order or the switch's notice may have been dropped:
-            // re-announce (idempotent at the switch).
+            // re-announce (idempotent at the switch), once per distinct
+            // switch that owns an evicted worker.
             last_order = now;
-            ep.send(switch, &Packet::evict(evicted_mask, gen));
+            let mut sent: Vec<NodeId> = Vec::new();
+            for &g in plan.members {
+                if (evicted_mask >> g) & 1 == 1 {
+                    let route = agg_route(cfg, g);
+                    if !sent.contains(&route) {
+                        sent.push(route);
+                        ep.send(route, &Packet::evict(evicted_mask, gen));
+                    }
+                }
+            }
         }
         if plan
             .members
@@ -691,9 +832,10 @@ pub fn write_report(path: &Path, report: &TrainReport, n_samples: usize) -> std:
 // Cluster launcher
 // ---------------------------------------------------------------------------
 
-/// The OS processes of one launched cluster.
+/// The OS processes of one launched cluster. `switches` is the single
+/// flat switch, or the spine followed by every leaf in tree mode.
 pub struct ClusterProcs {
-    pub switch: Child,
+    pub switches: Vec<Child>,
     pub workers: Vec<Child>,
     pub coordinator: Child,
 }
@@ -701,7 +843,9 @@ pub struct ClusterProcs {
 impl ClusterProcs {
     /// SIGKILL every process that is still running (best effort).
     pub fn kill_all(&mut self) {
-        let _ = self.switch.kill();
+        for s in &mut self.switches {
+            let _ = s.kill();
+        }
         for w in &mut self.workers {
             let _ = w.kill();
         }
@@ -709,12 +853,19 @@ impl ClusterProcs {
     }
 }
 
-/// Spawn one cluster from `bin`: a switch process, `workers` worker
-/// processes, and a coordinator, each as `bin train <common> --role
-/// ...`. Every process derives the same config and dataset from
-/// `common`, so the options must be identical across roles — which this
-/// launcher guarantees by construction.
-pub fn spawn_cluster(bin: &Path, common: &[String], workers: usize) -> std::io::Result<ClusterProcs> {
+/// Spawn one cluster from `bin`: the switch process(es), `workers`
+/// worker processes, and a coordinator, each as `bin train <common>
+/// --role ...`. `leaves == 0` launches the flat plan (one `--role
+/// switch`); `leaves > 0` launches a spine plus that many leaves.
+/// Every process derives the same config and dataset from `common`, so
+/// the options must be identical across roles — which this launcher
+/// guarantees by construction.
+pub fn spawn_cluster(
+    bin: &Path,
+    common: &[String],
+    workers: usize,
+    leaves: usize,
+) -> std::io::Result<ClusterProcs> {
     let spawn_role = |role_args: &[&str]| -> std::io::Result<Child> {
         Command::new(bin)
             .arg("train")
@@ -724,18 +875,36 @@ pub fn spawn_cluster(bin: &Path, common: &[String], workers: usize) -> std::io::
             .spawn()
     };
     let mut procs = ClusterProcs {
-        switch: spawn_role(&["--role", "switch"])?,
+        switches: Vec::with_capacity(leaves + 1),
         workers: Vec::with_capacity(workers),
         coordinator: spawn_role(&["--role", "coordinator"])?,
     };
-    for w in 0..workers {
-        match spawn_role(&["--role", "worker", "--worker-id", &w.to_string()]) {
-            Ok(child) => procs.workers.push(child),
+    let mut spawn_into = |procs: &mut ClusterProcs, args: &[&str], switch: bool| {
+        match spawn_role(args) {
+            Ok(child) => {
+                if switch {
+                    procs.switches.push(child);
+                } else {
+                    procs.workers.push(child);
+                }
+                Ok(())
+            }
             Err(e) => {
                 procs.kill_all();
-                return Err(e);
+                Err(e)
             }
         }
+    };
+    if leaves == 0 {
+        spawn_into(&mut procs, &["--role", "switch"], true)?;
+    } else {
+        spawn_into(&mut procs, &["--role", "spine"], true)?;
+        for l in 0..leaves {
+            spawn_into(&mut procs, &["--role", "leaf", "--leaf-id", &l.to_string()], true)?;
+        }
+    }
+    for w in 0..workers {
+        spawn_into(&mut procs, &["--role", "worker", "--worker-id", &w.to_string()], false)?;
     }
     Ok(procs)
 }

@@ -202,7 +202,29 @@ pub(crate) fn run<T: Transport>(
     finished: &[AtomicBool],
     fault: &mut FaultStats,
 ) -> SupervisorReport {
+    run_routed(ep, &vec![switch; workers], workers, timeout, generation, sink, ck_rx, finished, fault)
+}
+
+/// [`run`] with a per-worker eviction route: `routes[w]` is the switch
+/// that owns worker `w`'s membership — the flat switch for everyone in
+/// a single-switch cluster, or worker `w`'s **leaf** in a two-level
+/// tree (an eviction order must reach the switch whose bitmap holds
+/// the worker's bit; the generation bump then travels leaf → spine →
+/// other leaves via the tree's gen-sync notices).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_routed<T: Transport>(
+    ep: &mut T,
+    routes: &[NodeId],
+    workers: usize,
+    timeout: Option<Duration>,
+    generation: u32,
+    sink: Option<CkptSink>,
+    ck_rx: &mpsc::Receiver<CkptPart>,
+    finished: &[AtomicBool],
+    fault: &mut FaultStats,
+) -> SupervisorReport {
     assert_eq!(finished.len(), workers, "one finished flag per worker");
+    assert_eq!(routes.len(), workers, "one eviction route per worker");
     let mut asm = sink.map(|sink| Assembler { sink, pending: Vec::new(), mem_ckpt: None });
     let mut gen = generation;
     let mut evicted: Vec<usize> = Vec::new();
@@ -242,16 +264,24 @@ pub(crate) fn run<T: Transport>(
                     evicted_mask |= 1 << w;
                     gen = gen.wrapping_add(1);
                     fault.evictions += 1;
-                    ep.send(switch, &Packet::evict(1 << w, gen));
+                    ep.send(routes[w], &Packet::evict(1 << w, gen));
                     last_order = now;
                 }
             }
             // Lossy fabrics may drop the order or the switch's notice:
             // re-announce periodically (idempotent — the switch bumps
-            // only on fresh evictions, but always re-multicasts).
+            // only on fresh evictions, but always re-multicasts). Each
+            // distinct route gets the full mask: a leaf intersects away
+            // the bits of other pods before treating any as fresh.
             if evicted_mask != 0 && now.duration_since(last_order) > timeout / 2 {
                 last_order = now;
-                ep.send(switch, &Packet::evict(evicted_mask, gen));
+                let mut sent: Vec<NodeId> = Vec::new();
+                for w in 0..workers {
+                    if (evicted_mask >> w) & 1 == 1 && !sent.contains(&routes[w]) {
+                        sent.push(routes[w]);
+                        ep.send(routes[w], &Packet::evict(evicted_mask, gen));
+                    }
+                }
             }
             if (0..workers).all(|w| done[w] || (evicted_mask >> w) & 1 == 1) {
                 break;

@@ -52,10 +52,24 @@
 //!   lets an 8-wide AVX2 kernel and a 4-wide NEON kernel produce the
 //!   same bits as each other and as the scalar loop.
 //!
-//! `simd_forward_bitwise_matches_scalar` (property test, compiled under
-//! `--features simd`) asserts `to_bits()` equality across precisions,
-//! odd widths, and dense/sparse/mixed rows; the runner-level twin in
-//! `engine::runner` extends the claim through the thread pool.
+//! The backward rides the same contract. [`backward_acc_planes`]
+//! dispatches a blend-based scatter twin for dense plane-rows
+//! ([`backward_plane_row_simd`]): each lane's bit picks between
+//! `g + contrib` and the *unchanged* gradient bits via a vector select.
+//! Select, never masked-add — `g + 0.0` at an unset lane would turn a
+//! `-0.0` into `+0.0` and break bitwise parity. Because every gradient
+//! lane is touched at most once per word there is no reduction to
+//! re-associate, so the scatter is bit-identical to the set-bit oracle
+//! by construction; the sparse rows keep set-bit iteration exactly as
+//! before (any mix of strategies lands on the same bits).
+//!
+//! `simd_forward_bitwise_matches_scalar` and
+//! `simd_backward_bitwise_matches_scalar` (property tests, compiled
+//! under `--features simd`) assert `to_bits()` equality across
+//! precisions, odd widths, and dense/sparse/mixed rows; the
+//! runner-level twin in `engine::runner` extends the claim through the
+//! thread pool, and `ci/kernel_twin.c parity` replays both contracts in
+//! C on machines with gcc but no cargo.
 
 use crate::data::quantize::{PackedBatch, LANE};
 use crate::glm::Loss;
@@ -243,10 +257,86 @@ pub fn forward(pb: &PackedBatch, x: &[f32]) -> Vec<f32> {
     pa
 }
 
+/// Scalar plane-row scatter — the backward analogue of
+/// [`dense_plane_sum_scalar`]: add `contrib` into `g` at every set bit
+/// of the row (set-bit iteration). Each gradient lane is touched at
+/// most once per word, so any strategy that adds `contrib` exactly at
+/// the set lanes and leaves every other lane's *bits* untouched is
+/// bitwise identical — the invariant the SIMD blend twins are built on.
+/// Public as the oracle for the parity tests, `bench/kernels`, and
+/// `ci/kernel_twin.c`.
+#[inline]
+pub fn backward_plane_row_scalar(words: &[u32], contrib: f32, g: &mut [f32]) {
+    for (kw, &w) in words.iter().enumerate() {
+        let mut word = w;
+        let goff = kw * LANE;
+        while word != 0 {
+            let j = word.trailing_zeros() as usize;
+            g[goff + j] += contrib;
+            word &= word - 1;
+        }
+    }
+}
+
+/// The explicit SIMD plane-row scatter: returns `false` with `g`
+/// untouched when the `simd` feature is off or the CPU lacks AVX2 /
+/// NEON — the backward twin of [`dense_plane_sum_simd`]. Bit-identical
+/// to [`backward_plane_row_scalar`] (see the module docs for why blend
+/// beats masked-add). Public for the parity tests and benches;
+/// [`backward_acc_planes`] dispatches internally without the per-call
+/// detection.
+pub fn backward_plane_row_simd(words: &[u32], contrib: f32, g: &mut [f32]) -> bool {
+    assert!(g.len() >= words.len() * LANE, "g shorter than the plane row");
+    if !simd_active() {
+        return false;
+    }
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        // SAFETY: `simd_active()` verified AVX2 at runtime.
+        unsafe { simd::backward_plane_row_avx2(words, contrib, g) };
+        true
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    {
+        // SAFETY: `simd_active()` verified NEON at runtime.
+        unsafe { simd::backward_plane_row_neon(words, contrib, g) };
+        true
+    }
+    #[cfg(not(all(feature = "simd", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+    {
+        false
+    }
+}
+
+/// Plane-row scatter as dispatched by the backward: the blend kernel
+/// when `use_simd` (callers pass a hoisted [`simd_active`] AND'd with
+/// the density cutoff), else the set-bit oracle. Same bits either way.
+#[inline]
+fn backward_plane_row(words: &[u32], contrib: f32, g: &mut [f32], use_simd: bool) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if use_simd {
+        // SAFETY: `use_simd` is only true when the caller observed
+        // `simd_active()` — AVX2 is present at runtime.
+        return unsafe { simd::backward_plane_row_avx2(words, contrib, g) };
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    if use_simd {
+        // SAFETY: `use_simd` is only true when the caller observed
+        // `simd_active()` — NEON is present at runtime.
+        return unsafe { simd::backward_plane_row_neon(words, contrib, g) };
+    }
+    let _ = use_simd;
+    backward_plane_row_scalar(words, contrib, g)
+}
+
 /// Plane-replay backward pass: `g += sum_k scale_k * A[k, :]` with
 /// `scale_k = lr*df(FA_k, y_k)`, accumulated straight from the
 /// bit-planes — each set bit of plane `p` contributes
 /// `scale_k * 2^-(p+1)` to its gradient lane (the FPGA's FIFO replay).
+/// Dense plane-rows (by the same pack-time popcount cutoff the forward
+/// uses) take the explicit SIMD blend scatter when available; sparse
+/// rows keep set-bit iteration. Either way the bits match
+/// [`backward_acc_planes_scalar`] exactly.
 pub fn backward_acc_planes(
     pb: &PackedBatch,
     fa: &[f32],
@@ -255,9 +345,36 @@ pub fn backward_acc_planes(
     lr: f32,
     loss: Loss,
 ) {
+    backward_acc_planes_impl(pb, fa, y, g, lr, loss, simd_active());
+}
+
+/// [`backward_acc_planes`] pinned to the scalar scatter regardless of
+/// build features — the oracle path for the SIMD parity tests and the
+/// simd-vs-scalar bench axis.
+pub fn backward_acc_planes_scalar(
+    pb: &PackedBatch,
+    fa: &[f32],
+    y: &[f32],
+    g: &mut [f32],
+    lr: f32,
+    loss: Loss,
+) {
+    backward_acc_planes_impl(pb, fa, y, g, lr, loss, false);
+}
+
+fn backward_acc_planes_impl(
+    pb: &PackedBatch,
+    fa: &[f32],
+    y: &[f32],
+    g: &mut [f32],
+    lr: f32,
+    loss: Loss,
+    use_simd: bool,
+) {
     assert_eq!(g.len(), pb.d, "gradient slice width");
     assert!(fa.len() >= pb.mb && y.len() >= pb.mb);
     let w = pb.lanes();
+    let dense_cutoff = DENSE_THRESHOLD_FRAC * pb.d as f32;
     for k in 0..pb.mb {
         let scale = lr * loss.df(fa[k], y[k]);
         if scale == 0.0 {
@@ -266,15 +383,9 @@ pub fn backward_acc_planes(
         for p in 0..pb.precision as usize {
             let contrib = scale * 0.5f32.powi(p as i32 + 1);
             let base = (p * pb.mb + k) * w;
-            for kw in 0..w {
-                let mut word = pb.planes[base + kw];
-                let goff = kw * LANE;
-                while word != 0 {
-                    let j = word.trailing_zeros() as usize;
-                    g[goff + j] += contrib;
-                    word &= word - 1;
-                }
-            }
+            let words = &pb.planes[base..base + w];
+            let dense = pb.plane_pop[p * pb.mb + k] as f32 >= dense_cutoff;
+            backward_plane_row(words, contrib, g, use_simd && dense);
         }
     }
 }
@@ -356,6 +467,44 @@ mod simd {
         let r1 = _mm_add_ss(r2, _mm_shuffle_ps(r2, r2, 1)); // buf[0] += buf[1]
         _mm_cvtss_f32(r1)
     }
+
+    /// One 8-lane group of the backward scatter: load the gradient,
+    /// compute `g + contrib`, then *blend* on the bit mask so unset
+    /// lanes store back their exact original bits.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn scatter8(gp: *mut f32, wv: __m256i, bits: __m256i, cv: __m256) {
+        let m = _mm256_castsi256_ps(_mm256_cmpeq_epi32(_mm256_and_si256(wv, bits), bits));
+        let gv = _mm256_loadu_ps(gp);
+        _mm256_storeu_ps(gp, _mm256_blendv_ps(gv, _mm256_add_ps(gv, cv), m));
+    }
+
+    /// AVX2 blend-based plane-row scatter — the backward twin of the
+    /// MAC above. Select-not-add is the parity contract: a masked add
+    /// of `+0.0` would flip `-0.0` gradient lanes (see the module
+    /// docs).
+    ///
+    /// # Safety
+    ///
+    /// Requires AVX2 at runtime (callers gate on [`super::simd_active`])
+    /// and `g.len() >= words.len() * LANE`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn backward_plane_row_avx2(words: &[u32], contrib: f32, g: &mut [f32]) {
+        debug_assert!(g.len() >= words.len() * LANE);
+        let bits0 = _mm256_setr_epi32(b(0), b(1), b(2), b(3), b(4), b(5), b(6), b(7));
+        let bits1 = _mm256_setr_epi32(b(8), b(9), b(10), b(11), b(12), b(13), b(14), b(15));
+        let bits2 = _mm256_setr_epi32(b(16), b(17), b(18), b(19), b(20), b(21), b(22), b(23));
+        let bits3 = _mm256_setr_epi32(b(24), b(25), b(26), b(27), b(28), b(29), b(30), b(31));
+        let cv = _mm256_set1_ps(contrib);
+        for (k, &word) in words.iter().enumerate() {
+            let wv = _mm256_set1_epi32(word as i32);
+            let gp = g.as_mut_ptr().add(k * LANE);
+            scatter8(gp, wv, bits0, cv);
+            scatter8(gp.add(8), wv, bits1, cv);
+            scatter8(gp.add(16), wv, bits2, cv);
+            scatter8(gp.add(24), wv, bits3, cv);
+        }
+    }
 }
 
 /// NEON dense plane-row MAC — the 4-wide twin of the AVX2 kernel above,
@@ -404,6 +553,39 @@ mod simd {
         let r = vaddq_f32(t0, t1); // buf[i] += buf[i + 4]
         let r2 = vadd_f32(vget_low_f32(r), vget_high_f32(r)); // buf[i] += buf[i + 2]
         vpadds_f32(r2) // buf[0] += buf[1]
+    }
+
+    /// NEON blend-based plane-row scatter — the 4-wide twin of the
+    /// AVX2 backward kernel. `vbslq_f32` selects `g + contrib` where
+    /// the lane's bit is set and the *original bits* everywhere else,
+    /// which is what keeps `-0.0` gradient lanes intact (see the
+    /// module docs).
+    ///
+    /// # Safety
+    ///
+    /// Requires NEON at runtime (callers gate on [`super::simd_active`])
+    /// and `g.len() >= words.len() * LANE`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn backward_plane_row_neon(words: &[u32], contrib: f32, g: &mut [f32]) {
+        debug_assert!(g.len() >= words.len() * LANE);
+        let mut bitvals = [0u32; LANE];
+        for (i, bv) in bitvals.iter_mut().enumerate() {
+            *bv = 1u32 << i;
+        }
+        let mut bits = [vdupq_n_u32(0); 8];
+        for (v, bq) in bits.iter_mut().enumerate() {
+            *bq = vld1q_u32(bitvals.as_ptr().add(4 * v));
+        }
+        let cv = vdupq_n_f32(contrib);
+        for (k, &word) in words.iter().enumerate() {
+            let wv = vdupq_n_u32(word);
+            for (v, bq) in bits.iter().enumerate() {
+                let m = vceqq_u32(vandq_u32(wv, *bq), *bq);
+                let gp = g.as_mut_ptr().add(k * LANE + 4 * v);
+                let gv = vld1q_f32(gp);
+                vst1q_f32(gp, vbslq_f32(m, vaddq_f32(gv, cv), gv));
+            }
+        }
     }
 }
 
@@ -642,6 +824,90 @@ mod tests {
             let scalar = dense_plane_sum_scalar(row, &x);
             if simd.to_bits() != scalar.to_bits() {
                 return Err(format!("plane-row kernel: {simd:?} vs {scalar:?} (d={d})"));
+            }
+            Ok(())
+        });
+    }
+
+    /// The backward half of the parity contract: the blend-based SIMD
+    /// scatter must produce the same gradient *bits* as the set-bit
+    /// oracle — including lanes it never touches, seeded with `-0.0`
+    /// values that a masked add (`g + 0.0`) would clobber — across
+    /// precisions, odd widths, densities, and all three losses. Skips
+    /// gracefully when the CPU lacks AVX2/NEON.
+    #[cfg(feature = "simd")]
+    #[test]
+    fn simd_backward_bitwise_matches_scalar() {
+        if !simd_active() {
+            eprintln!("simd_backward_bitwise_matches_scalar: CPU lacks AVX2+FMA/NEON; skipping");
+            return;
+        }
+        prop::check("simd backward bits == scalar backward bits", 80, |rng| {
+            let mb = prop::small_size(rng, 1, 8);
+            let d = prop::small_size(rng, 1, 300); // odd widths included
+            let d_pad = d.div_ceil(LANE) * LANE;
+            let precision = [1u32, 2, 4, 8][rng.below_usize(4)];
+            let loss = [Loss::LinReg, Loss::LogReg, Loss::Svm][rng.below_usize(3)];
+            // Dense, sparse, or mixed rows — both scatter strategies
+            // (and the popcount cutoff itself) get exercised.
+            let mode = rng.below_usize(3);
+            let rows: Vec<f32> = (0..mb * d)
+                .map(|j| match mode {
+                    0 => rng.f32(),
+                    1 => {
+                        if rng.chance(0.05) {
+                            rng.f32()
+                        } else {
+                            0.0
+                        }
+                    }
+                    _ => {
+                        if j % 2 == 0 {
+                            rng.f32()
+                        } else {
+                            0.0
+                        }
+                    }
+                })
+                .collect();
+            let fa: Vec<f32> = (0..mb).map(|_| rng.gauss() as f32).collect();
+            let y: Vec<f32> = (0..mb)
+                .map(|_| if rng.chance(0.5) { 1.0 } else { 0.0 })
+                .collect();
+            // Seed the gradient with awkward values: the negative
+            // zeros must come out of the blend bit-for-bit intact.
+            let g0: Vec<f32> = (0..d_pad)
+                .map(|_| if rng.chance(0.2) { -0.0 } else { rng.gauss() as f32 })
+                .collect();
+            let pb = pack_rows(&rows, mb, d, d_pad, precision);
+            let mut got = g0.clone();
+            let mut want = g0.clone();
+            backward_acc_planes(&pb, &fa, &y, &mut got, 0.3, loss);
+            backward_acc_planes_scalar(&pb, &fa, &y, &mut want, 0.3, loss);
+            for j in 0..d_pad {
+                if got[j].to_bits() != want[j].to_bits() {
+                    return Err(format!(
+                        "lane {j}: {:?} vs {:?} (P={precision}, d={d}, loss={loss}, mode={mode})",
+                        got[j], want[j]
+                    ));
+                }
+            }
+            // Row-level check of the kernel pair, bypassing dispatch.
+            let row = &pb.planes[..pb.lanes()];
+            let mut gv = g0.clone();
+            let mut gs = g0;
+            assert!(
+                backward_plane_row_simd(row, 0.125, &mut gv),
+                "simd_active was checked above"
+            );
+            backward_plane_row_scalar(row, 0.125, &mut gs);
+            for j in 0..d_pad {
+                if gv[j].to_bits() != gs[j].to_bits() {
+                    return Err(format!(
+                        "plane-row kernel lane {j}: {:?} vs {:?} (d={d})",
+                        gv[j], gs[j]
+                    ));
+                }
             }
             Ok(())
         });

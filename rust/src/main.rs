@@ -51,8 +51,10 @@ fn dispatch(args: &Args) -> Result<()> {
             println!("usage: p4sgd <repro|train|cluster|agg-bench|info> [options]");
             println!("  repro <table1..table4|fig8..fig15|all>");
             println!("  train [--mode mp|dp] [--backend native|pjrt] [--workers M] [--engines N]");
-            println!("        [--role thread|switch|worker|coordinator] [--worker-id W]");
-            println!("        [--base-port P] [--report PATH]  (process mode / run summary)");
+            println!("        [--role thread|switch|leaf|spine|worker|coordinator] [--worker-id W]");
+            println!("        [--leaf-id L] [--base-port P] [--report PATH]  (process mode / run summary)");
+            println!("        [--tree] [--leaves L] [--pods N,N,..]  (two-level switch tree)");
+            println!("        [--jobs J] [--job-slots S]  (multi-tenant slot partitioning)");
             println!("        [--engine-threads T] [--pipeline-depth 1..8] [--loss linreg|logreg|svm]");
             println!("        [--batch B] [--epochs E] [--dataset NAME]");
             println!("        [--samples N] [--features D] [--drop P] [--dup P] [--reorder P]");
@@ -115,6 +117,11 @@ fn train(args: &Args) -> Result<()> {
     cfg.net.chaos.burst_ns = args.get_or("chaos-burst-ns", 0u64);
     cfg.net.chaos.burst_len = args.get_or("chaos-burst-len", 0u32);
     cfg.cluster.base_port = args.get_or("base-port", cfg.cluster.base_port);
+    cfg.switch.tree = args.flag("tree");
+    cfg.switch.leaves = args.get_or("leaves", cfg.switch.leaves);
+    cfg.switch.pods = args.get("pods").map(str::to_string);
+    cfg.switch.jobs = args.get_or("jobs", cfg.switch.jobs);
+    cfg.switch.job_slots = args.get_or("job-slots", cfg.switch.job_slots);
     let mode = args.get_or("mode", "mp".to_string());
     let role = args.get_or("role", "thread".to_string());
     if role != "thread" {
@@ -133,9 +140,19 @@ fn train(args: &Args) -> Result<()> {
     }
     cfg.validate()?;
 
-    if role == "switch" {
-        // The switch never touches the dataset or the compute backend.
-        return process::run_switch(&cfg);
+    // Switch roles never touch the dataset or the compute backend.
+    match role.as_str() {
+        "switch" => return process::run_switch(&cfg),
+        "spine" => return process::run_spine(&cfg),
+        "leaf" => {
+            let l: usize = args
+                .get("leaf-id")
+                .context("--role leaf requires --leaf-id")?
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--leaf-id: {e}"))?;
+            return process::run_leaf(&cfg, l);
+        }
+        _ => {}
     }
 
     let backend: Backend = args.get_or("backend", Backend::Native);
@@ -173,7 +190,9 @@ fn train(args: &Args) -> Result<()> {
         ("thread", "dp") => dp::train_dp(&cfg, &ds, make.as_ref()),
         ("coordinator", _) => process::run_coordinator(&cfg, &ds)?,
         ("thread", other) => bail!("unknown mode {other:?} (mp|dp)"),
-        (other, _) => bail!("unknown role {other:?} (thread|switch|worker|coordinator)"),
+        (other, _) => {
+            bail!("unknown role {other:?} (thread|switch|leaf|spine|worker|coordinator)")
+        }
     };
     for (e, l) in report.loss_per_epoch.iter().enumerate() {
         println!("epoch {e:>3}: loss/sample {:.5}", l / ds.n as f32);
@@ -232,6 +251,7 @@ fn cluster(args: &Args) -> Result<()> {
     use std::time::{Duration, Instant};
 
     let workers = args.get_or("workers", 4usize);
+    let leaves = if args.flag("tree") { args.get_or("leaves", 2usize) } else { 0 };
     let limit = args.get_or("cluster-timeout-secs", 600u64);
     // Everything after the subcommand passes through to every role
     // verbatim, so all processes derive the identical config/dataset.
@@ -240,7 +260,7 @@ fn cluster(args: &Args) -> Result<()> {
         bail!("cluster spawns every role itself; drop --role/--worker-id");
     }
     let bin = std::env::current_exe().context("resolving our own binary path")?;
-    let mut procs = process::spawn_cluster(&bin, &common, workers)
+    let mut procs = process::spawn_cluster(&bin, &common, workers, leaves)
         .context("spawning cluster processes")?;
     let verdict = process::wait_deadline(
         &mut procs.coordinator,
@@ -262,13 +282,15 @@ fn cluster(args: &Args) -> Result<()> {
             _ => {}
         }
     }
-    match process::wait_deadline(&mut procs.switch, deadline)? {
-        Some(ss) if !ss.success() => eprintln!("cluster: switch exited with {ss}"),
-        None => {
-            let _ = procs.switch.kill();
-            eprintln!("cluster: switch still running at teardown — killed");
+    for (s, child) in procs.switches.iter_mut().enumerate() {
+        match process::wait_deadline(child, deadline)? {
+            Some(ss) if !ss.success() => eprintln!("cluster: switch {s} exited with {ss}"),
+            None => {
+                let _ = child.kill();
+                eprintln!("cluster: switch {s} still running at teardown — killed");
+            }
+            _ => {}
         }
-        _ => {}
     }
     if !st.success() {
         bail!("coordinator exited with {st}");

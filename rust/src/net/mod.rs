@@ -34,6 +34,26 @@ pub fn supervisor_node(workers: usize) -> NodeId {
     workers + 1
 }
 
+/// Tree node plan: for an `m`-worker, `L`-leaf two-level tree the
+/// address space is workers `0..m`, leaves `m..m+L`, the spine at
+/// `m+L`, and the supervisor/coordinator at `m+L+1`. Leaf `l`'s node
+/// id (it replaces the flat switch for its pod's workers).
+pub fn leaf_node(workers: usize, leaf: usize) -> NodeId {
+    workers + leaf
+}
+
+/// Spine node id in an `m`-worker, `leaves`-leaf tree.
+pub fn spine_node(workers: usize, leaves: usize) -> NodeId {
+    workers + leaves
+}
+
+/// Supervisor node id in an `m`-worker, `leaves`-leaf tree — one past
+/// the spine (the flat plan's [`supervisor_node`], shifted by the
+/// extra switches).
+pub fn tree_supervisor_node(workers: usize, leaves: usize) -> NodeId {
+    workers + leaves + 1
+}
+
 /// A bidirectional packet endpoint bound to one node.
 pub trait Transport: Send {
     /// Fire-and-forget send (unreliable by design).

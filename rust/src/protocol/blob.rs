@@ -63,6 +63,7 @@ fn frag_packet(id: u32, frag: u16, n_frags: usize, total_words: usize, data: &[i
         seq: frag,
         bm: id,
         gen: 0,
+        job: 0,
         payload: payload.into(),
     }
 }
@@ -76,6 +77,7 @@ pub fn ack_packet(id: u32, frag: u16) -> Packet {
         seq: frag,
         bm: id,
         gen: 0,
+        job: 0,
         payload: empty_payload(),
     }
 }

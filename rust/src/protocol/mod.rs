@@ -161,6 +161,13 @@ pub struct Packet {
     /// Cluster generation the sender believes current; the switch drops
     /// mismatched data packets and answers with the authoritative value.
     pub gen: u32,
+    /// Tenant job id (0-3), carried in the two formerly-reserved flag
+    /// bits. Job 0 is the default single-tenant job — a job-0 frame is
+    /// byte-identical to a pre-tenant v1 frame, and v1 decoders ignored
+    /// the upper flag bits, so no version bump is needed. A
+    /// job-partitioned switch dispatches on this field and never lets
+    /// one job's traffic touch another's slots (see `switch::tenant`).
+    pub job: u8,
     /// MB fixed-point activations (PA upstream, FA downstream); empty on
     /// the ack round and on control packets. Shared — never mutate
     /// through this without exclusive ownership (`Arc::get_mut`).
@@ -179,6 +186,7 @@ impl Packet {
             seq,
             bm: 1 << worker,
             gen: 0,
+            job: 0,
             payload: payload.into(),
         }
     }
@@ -192,6 +200,7 @@ impl Packet {
             seq,
             bm: 1 << worker,
             gen: 0,
+            job: 0,
             payload: empty_payload(),
         }
     }
@@ -206,6 +215,7 @@ impl Packet {
             seq: 0,
             bm: 1 << worker,
             gen,
+            job: 0,
             payload: empty_payload(),
         }
     }
@@ -219,6 +229,7 @@ impl Packet {
             seq: 0,
             bm: 1 << worker,
             gen,
+            job: 0,
             payload: empty_payload(),
         }
     }
@@ -233,6 +244,7 @@ impl Packet {
             seq: 0,
             bm: mask,
             gen,
+            job: 0,
             payload: empty_payload(),
         }
     }
@@ -243,14 +255,25 @@ impl Packet {
         self
     }
 
+    /// Builder: stamp the tenant job id (0-3; see [`Packet::job`]).
+    pub fn with_job(mut self, job: u8) -> Self {
+        assert!(job < 4, "job id {job} does not fit the 2-bit wire field");
+        self.job = job;
+        self
+    }
+
     /// Wire encoding (version [`WIRE_VERSION`]):
     /// `magic u16 | flags u8 | version u8 | seq u16 | bm u32 | gen u32 |
     /// len u16 | payload i32*len` (little-endian). Flags: bit 0
-    /// `is_agg`, bit 1 `acked`, bits 2-3 the [`Ctrl`] kind.
+    /// `is_agg`, bit 1 `acked`, bits 2-5 the [`Ctrl`] kind, bits 6-7
+    /// the tenant job id.
     pub fn encode(&self, buf: &mut Vec<u8>) {
         buf.clear();
         buf.extend_from_slice(&MAGIC.to_le_bytes());
-        let flags = (self.is_agg as u8) | ((self.acked as u8) << 1) | (self.ctrl.to_bits() << 2);
+        let flags = (self.is_agg as u8)
+            | ((self.acked as u8) << 1)
+            | (self.ctrl.to_bits() << 2)
+            | ((self.job & 0b11) << 6);
         buf.push(flags);
         buf.push(WIRE_VERSION);
         buf.extend_from_slice(&self.seq.to_le_bytes());
@@ -313,6 +336,7 @@ impl Packet {
             seq,
             bm,
             gen,
+            job: (flags >> 6) & 0b11,
             payload,
         })
     }
@@ -331,6 +355,7 @@ impl Packet {
             seq,
             bm,
             gen,
+            job: (flags >> 6) & 0b11,
             payload,
         })
     }
@@ -627,6 +652,7 @@ mod tests {
                 seq: rng.next_u32() as u16,
                 bm: rng.next_u32(),
                 gen: rng.next_u32(),
+                job: (rng.next_u32() & 0b11) as u8,
                 payload: (0..len).map(|_| rng.next_u32() as i32).collect(),
             };
             let mut buf = Vec::new();
@@ -637,6 +663,36 @@ mod tests {
                 Err(e) => Err(e.to_string()),
             }
         });
+    }
+
+    #[test]
+    fn job_id_rides_the_reserved_flag_bits() {
+        let mut buf = Vec::new();
+        for job in 0..4u8 {
+            let pkt = Packet::pa(11, 2, vec![3, -4]).with_gen(5).with_job(job);
+            pkt.encode(&mut buf);
+            let back = Packet::decode(&buf).unwrap();
+            assert_eq!(back.job, job);
+            assert_eq!(back, pkt);
+            // job bits must not bleed into the Ctrl kind or vice versa
+            assert_eq!(back.ctrl, Ctrl::Data);
+            let ev = Packet::evict(0b10, 1).with_job(job);
+            ev.encode(&mut buf);
+            let back = Packet::decode(&buf).unwrap();
+            assert_eq!((back.ctrl, back.job), (Ctrl::Evict, job));
+        }
+        // job 0 is byte-identical to a pre-tenant frame
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        Packet::ack(7, 1).encode(&mut a);
+        Packet::ack(7, 1).with_job(0).encode(&mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not fit")]
+    fn job_id_overflow_panics() {
+        let _ = Packet::ack(0, 0).with_job(4);
     }
 
     #[test]

@@ -358,3 +358,146 @@ pub fn fig15() -> Result<()> {
     t.save_csv("fig15")?;
     Ok(())
 }
+
+/// Beyond the paper: the two-level switch tree's scaling study.
+///
+/// Three artifacts, each also dropped under `repro/`:
+/// 1. **Predicted** (DES `epoch_time_topo`): flat vs 2-leaf+spine epoch
+///    time across fan-in/payload points — the tree pays two extra hops
+///    per FA and wins only once one switch's ingress fan-in
+///    serialization dominates.
+/// 2. **Measured**: the real thread-mode trainer, flat vs 2-leaf+spine
+///    (`[switch] tree`), same seed — wall clock per run plus the
+///    bitwise model check (i32 aggregation is associative across the
+///    pod split).
+/// 3. **Per-level stats**: the leaf/spine `SwitchStats` of a direct
+///    in-process drive — partials up, FAs relayed, spine completions.
+pub fn tree() -> Result<()> {
+    use crate::switch::{Action, AggServer};
+    use crate::protocol::Packet;
+
+    banner("tree", "two-level switch aggregation: predicted vs measured scaling");
+    let mut t = Table::new(vec!["workers", "payload", "flat epoch", "tree-2 epoch", "tree/flat"]);
+    for (m, mb) in [(4usize, 8usize), (8, 64), (16, 512), (32, 4096)] {
+        let sim = P4sgdSim {
+            fpga: FpgaModel::default(),
+            agg: AGG_P4SGD,
+            d: 1_000_000,
+            m,
+            b: mb * 8,
+            mb,
+        };
+        let n = sim.b * 50;
+        let flat = sim.epoch_time_topo(n, None);
+        let tree = sim.epoch_time_topo(n, Some(2));
+        t.row(vec![
+            m.to_string(),
+            mb.to_string(),
+            fmt_secs(flat),
+            fmt_secs(tree),
+            format!("{:.3}", tree / flat),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "(model: two extra hops per FA vs splitting one switch's ingress fan-in across pods)"
+    );
+    t.save_csv("tree_predicted")?;
+
+    // Measured: the real trainer through both topologies, same seed.
+    let ds = synth::separable(512, 128, Loss::LogReg, 0.1, 9);
+    let mut cfg = conv_cfg(4, 4);
+    let flat_t = std::time::Instant::now();
+    let flat_rep = mp::train_mp(&cfg, &ds, &native);
+    let flat_wall = flat_t.elapsed().as_secs_f64();
+    cfg.switch.tree = true;
+    cfg.switch.leaves = 2;
+    let tree_t = std::time::Instant::now();
+    let tree_rep = mp::train_mp(&cfg, &ds, &native);
+    let tree_wall = tree_t.elapsed().as_secs_f64();
+    let bitwise = flat_rep.model.len() == tree_rep.model.len()
+        && flat_rep
+            .model
+            .iter()
+            .zip(&tree_rep.model)
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+    anyhow::ensure!(bitwise, "tree model diverged bitwise from flat — aggregation is broken");
+    let mut t2 = Table::new(vec!["topology", "wall", "final loss", "bitwise == flat"]);
+    let loss = |r: &crate::coordinator::TrainReport| {
+        format!("{:.5}", r.loss_per_epoch.last().unwrap_or(&f32::NAN) / ds.n as f32)
+    };
+    t2.row(vec!["flat".to_string(), fmt_secs(flat_wall), loss(&flat_rep), "-".to_string()]);
+    t2.row(vec![
+        "2-leaf+spine".to_string(),
+        fmt_secs(tree_wall),
+        loss(&tree_rep),
+        bitwise.to_string(),
+    ]);
+    print!("{}", t2.render());
+    println!("(software substrate: the tree's extra hops cost wall time at this scale, never bits)");
+    t2.save_csv("tree_measured")?;
+
+    // Per-level stats: drive 4 workers x 256 rounds through an
+    // in-process 2-leaf+spine directly and read the counters.
+    let (spine_node, rounds) = (6usize, 256usize);
+    let mut leaves: Vec<crate::switch::p4::P4Switch> = (0..2)
+        .map(|l| {
+            crate::switch::p4::P4Switch::new(SEQ_SPACE, 4, 4)
+                .with_members(0b11 << (2 * l))
+                .with_uplink(spine_node, l)
+        })
+        .collect();
+    let mut spine = crate::switch::p4::P4Switch::new(SEQ_SPACE, 2, 4);
+    let mut fa_down = 0u64;
+    for r in 0..rounds {
+        for w in 0..4usize {
+            let leaf = w / 2;
+            let pa = Packet::pa(r as u16, w, vec![w as i32 + 1; 4]);
+            let ups: Vec<Action> = leaves[leaf].handle(w, &pa);
+            for up in ups {
+                let Action::Unicast(_, partial) = up else { continue };
+                for down in spine.handle(4 + leaf, &partial) {
+                    let Action::Multicast(fa) = down else { continue };
+                    for lf in leaves.iter_mut() {
+                        for relay in lf.handle(spine_node, &fa) {
+                            if matches!(relay, Action::Multicast(_)) {
+                                fa_down += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let mut t3 = Table::new(vec!["level", "agg packets", "partials up", "FA relayed", "FA multicasts"]);
+    for (l, lf) in leaves.iter().enumerate() {
+        let s = lf.stats;
+        t3.row(vec![
+            format!("leaf{l}"),
+            s.agg_packets.to_string(),
+            s.partials_up.to_string(),
+            s.fa_relayed.to_string(),
+            s.fa_multicasts.to_string(),
+        ]);
+    }
+    let s = spine.stats;
+    t3.row(vec![
+        "spine".to_string(),
+        s.agg_packets.to_string(),
+        s.partials_up.to_string(),
+        s.fa_relayed.to_string(),
+        s.fa_multicasts.to_string(),
+    ]);
+    print!("{}", t3.render());
+    println!("({} FA relays reached pods across {} rounds)", fa_down, rounds);
+    t3.save_csv("tree_levels")?;
+
+    // The scaling-curve artifacts live under repro/ as well.
+    let dir = std::path::Path::new("repro");
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(dir.join("tree_predicted.csv"), t.to_csv())?;
+    std::fs::write(dir.join("tree_measured.csv"), t2.to_csv())?;
+    std::fs::write(dir.join("tree_levels.csv"), t3.to_csv())?;
+    println!("(csv: results/tree_*.csv and repro/tree_*.csv)");
+    Ok(())
+}

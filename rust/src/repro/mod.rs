@@ -12,7 +12,9 @@ pub mod tables;
 
 use anyhow::{bail, Result};
 
-/// Everything in paper order.
+/// Everything in paper order. The extra "tree" scaling study (not a
+/// paper artifact — our two-level switch generalization) dispatches by
+/// name only.
 pub const ALL: [&str; 12] = [
     "table1", "table2", "table3", "table4", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13",
     "fig14", "fig15",
@@ -40,7 +42,8 @@ pub fn run(which: &str) -> Result<()> {
         "fig13" => figs::fig13(),
         "fig14" => figs::fig14(),
         "fig15" => figs::fig15(),
-        other => bail!("unknown experiment {other:?}; one of {ALL:?} or `all`"),
+        "tree" => figs::tree(),
+        other => bail!("unknown experiment {other:?}; one of {ALL:?}, `tree`, or `all`"),
     }
 }
 

@@ -9,6 +9,15 @@
 //! * [`host_ps::HostPs`] — end-host parameter server ("CPUSync"/
 //!   "GPUSync" aggregation path): same semantics, but every operation
 //!   crosses the extra hop and the host software stack.
+//! * [`tenant::JobPartitionedSwitch`] — multi-job front-end: carves the
+//!   slot table into contiguous per-job partitions selected by the v1
+//!   header's job id, one independent `P4Switch` per tenant.
+//!
+//! `P4Switch` additionally runs in **leaf mode** (`with_uplink`) to
+//! form a two-level aggregation tree: leaves aggregate their pod and
+//! forward one partial-aggregate per (slot, round) to a spine — an
+//! unmodified flat `P4Switch` whose "workers" are the leaves — which
+//! completes across pods and multicasts the FA back down.
 //!
 //! All three are **pure state machines** (`handle(packet) -> actions`) so
 //! the same logic runs under the threaded `SimNet`, the UDP transport,
@@ -28,6 +37,7 @@ pub mod host_ps;
 pub mod p4;
 pub mod runner;
 pub mod switchml;
+pub mod tenant;
 
 use crate::net::NodeId;
 use crate::protocol::Packet;

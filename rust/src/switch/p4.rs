@@ -48,6 +48,31 @@
 //! a stale member (go resync) or an `Evict` notice for a non-member
 //! (you were removed) — so a desynchronized worker learns the truth in
 //! one round trip instead of retransmitting forever.
+//!
+//! # Two-level trees (leaf / spine)
+//!
+//! [`P4Switch::with_uplink`] turns an instance into a **leaf**: it
+//! aggregates its pod of workers exactly as above, but a pod-complete
+//! round emits **one partial-aggregate packet per (slot, round)** up to
+//! the spine (carrying the leaf's bit in `bm`) instead of an FA
+//! multicast. The spine is an *unmodified* flat switch whose "workers"
+//! are the leaves; when it completes across leaves it multicasts the FA
+//! down, each leaf stores it (zero-copy `Arc` clone) and relays it to
+//! its pod. The ACK round nests the same way: pod-ack-complete sends
+//! one leaf ACK up, the spine's confirm releases the pod. i32 addition
+//! is associative and commutative, so a depth-1 tree run is **bitwise
+//! identical** to the flat path.
+//!
+//! Reliability needs no timers in either level: worker PA/ACK
+//! retransmissions re-drive the uplink (a dup PA on a pod-complete,
+//! FA-less slot re-sends the partial up; a dup ACK on an unconfirmed
+//! slot re-sends the leaf ACK up), and the flat switch's own
+//! dup-handling (re-multicast FA, re-confirm) answers them at the
+//! spine. Generations are one shared domain: an `Evict`/`Leave`/rejoin
+//! bump at a leaf forwards a gen-sync up, the spine adopts the newer
+//! generation and re-announces it to every leaf, and each leaf
+//! re-announces down — so all switches converge without a broadcast
+//! channel (`gen_syncs` counts the adoptions).
 
 use super::{Action, AggServer};
 use crate::net::NodeId;
@@ -64,9 +89,18 @@ struct Slot {
     ack_bm: u32,
     /// Rotating FA multicast buffers (see module docs); start as the
     /// shared empty payload and are sized lazily on first completion.
+    /// In uplink (leaf) mode the ring holds the **partial-aggregate**
+    /// buffers sent up instead — the FA relayed down lives in
+    /// `fa_relay`.
     fa: Vec<Arc<[i32]>>,
     /// Which of `fa` holds the current round's FA.
     fa_cur: usize,
+    /// Leaf mode: the spine's FA for the in-flight round (a zero-copy
+    /// clone of the downlink payload), valid while `fa_ready`.
+    fa_relay: Arc<[i32]>,
+    /// Leaf mode: the spine's FA for this round has arrived (cleared by
+    /// the spine confirm, which retires the round).
+    fa_ready: bool,
 }
 
 impl Default for Slot {
@@ -79,6 +113,8 @@ impl Default for Slot {
             ack_bm: 0,
             fa: vec![empty_payload(), empty_payload()],
             fa_cur: 0,
+            fa_relay: empty_payload(),
+            fa_ready: false,
         }
     }
 }
@@ -104,6 +140,25 @@ pub struct SwitchStats {
     pub rejoins: u64,
     /// Members departed via `Leave`.
     pub leaves: u64,
+    /// Leaf mode: partial-aggregate packets sent up the uplink
+    /// (including retransmission-driven re-sends).
+    pub partials_up: u64,
+    /// Leaf mode: leaf ACKs sent up the uplink (including re-sends).
+    pub acks_up: u64,
+    /// Leaf mode: distinct spine FAs stored and relayed down.
+    pub fa_relayed: u64,
+    /// Newer generations adopted from a gen-sync (tree convergence).
+    pub gen_syncs: u64,
+}
+
+/// Leaf-mode wiring: where partial aggregates go and which bit this
+/// leaf occupies in the spine's member bitmap.
+#[derive(Debug, Clone, Copy)]
+pub struct Uplink {
+    /// The spine switch's node id.
+    pub spine: NodeId,
+    /// This leaf's index in the spine's worker domain (`bm` bit).
+    pub leaf_bit: usize,
 }
 
 /// The P4 switch state machine (Algorithm 2 + membership generations).
@@ -115,6 +170,8 @@ pub struct P4Switch {
     gen: u32,
     /// Current member mask (bit m = worker m participates).
     members: u32,
+    /// Leaf mode: forward pod-complete partials to this spine.
+    uplink: Option<Uplink>,
     pub stats: SwitchStats,
 }
 
@@ -133,6 +190,7 @@ impl P4Switch {
             payload_len,
             gen: 0,
             members,
+            uplink: None,
             stats: SwitchStats::default(),
         }
     }
@@ -154,6 +212,21 @@ impl P4Switch {
         assert!(mask != 0 && mask & !full == 0, "member mask {mask:#b} outside 0..{}", self.workers);
         self.members = mask;
         self
+    }
+
+    /// Run as a **leaf**: pod-complete rounds send one partial-aggregate
+    /// packet (bit `leaf_bit` set) to `spine` instead of multicasting an
+    /// FA, and the spine's FA/confirm downlink drives the pod's FA
+    /// multicast and slot retirement (see the module docs).
+    pub fn with_uplink(mut self, spine: NodeId, leaf_bit: usize) -> Self {
+        assert!(leaf_bit < 32, "leaf bit {leaf_bit} outside the spine's 32-bit bitmap");
+        self.uplink = Some(Uplink { spine, leaf_bit });
+        self
+    }
+
+    /// Leaf-mode wiring, if any.
+    pub fn uplink(&self) -> Option<Uplink> {
+        self.uplink
     }
 
     /// Widen every slot's FA ring to `n` buffers (`2..=16`): a depth-D
@@ -190,7 +263,13 @@ impl P4Switch {
     /// valid (shared `Arc`s are never written through); they simply
     /// belong to a dead generation and die at the receivers' gen check.
     fn bump_generation(&mut self) {
-        self.gen = self.gen.wrapping_add(1);
+        self.sync_generation(self.gen.wrapping_add(1));
+    }
+
+    /// Adopt `gen` outright and reset every slot (the tree's gen-sync
+    /// path; `bump_generation` is the `gen + 1` special case).
+    fn sync_generation(&mut self, gen: u32) {
+        self.gen = gen;
         for s in &mut self.slots {
             s.agg_count = 0;
             s.agg_bm = 0;
@@ -198,7 +277,15 @@ impl P4Switch {
             s.ack_bm = 0;
             s.agg.iter_mut().for_each(|a| *a = 0);
             s.fa_cur = 0;
+            s.fa_ready = false;
         }
+    }
+
+    /// The downward gen-sync notice: an `Evict` with an empty mask
+    /// bumps no receiver's membership but carries the authoritative
+    /// generation, so stale peers resynchronize.
+    fn gen_notice(&self) -> Packet {
+        Packet::evict(0, self.gen)
     }
 
     /// Handle a membership control packet; returns the egress actions.
@@ -215,7 +302,21 @@ impl P4Switch {
                     self.stats.evictions += u64::from(fresh.count_ones());
                     self.bump_generation();
                 }
-                vec![Action::Multicast(Packet::evict(pkt.bm, self.gen))]
+                if pkt.gen > self.gen {
+                    // The order names an era further ahead than one
+                    // local bump reaches (an earlier order was lost, or
+                    // another switch in the tree bumped first): adopt
+                    // it outright so the whole tree converges.
+                    self.sync_generation(pkt.gen);
+                    self.stats.gen_syncs += 1;
+                }
+                let mut acts = vec![Action::Multicast(Packet::evict(pkt.bm, self.gen))];
+                if let Some(up) = self.uplink {
+                    // Always forward the gen-sync up (supervisor
+                    // re-announces re-drive a lost uplink hop).
+                    acts.push(Action::Unicast(up.spine, self.gen_notice()));
+                }
+                acts
             }
             Ctrl::Leave => {
                 let fresh = pkt.bm & self.members;
@@ -227,7 +328,11 @@ impl P4Switch {
                 self.bump_generation();
                 let mut out = pkt.clone();
                 out.gen = self.gen;
-                vec![Action::Multicast(out)]
+                let mut acts = vec![Action::Multicast(out)];
+                if let Some(up) = self.uplink {
+                    acts.push(Action::Unicast(up.spine, self.gen_notice()));
+                }
+                acts
             }
             Ctrl::Join => {
                 if pkt.bm & !self.members != 0 {
@@ -239,7 +344,11 @@ impl P4Switch {
                     self.bump_generation();
                     let mut out = pkt.clone();
                     out.gen = self.gen;
-                    return vec![Action::Multicast(out)];
+                    let mut acts = vec![Action::Multicast(out)];
+                    if let Some(up) = self.uplink {
+                        acts.push(Action::Unicast(up.spine, self.gen_notice()));
+                    }
+                    return acts;
                 }
                 if pkt.gen != self.gen {
                     // A member probing with a stale generation: answer
@@ -259,10 +368,73 @@ impl P4Switch {
         }
     }
 
+    /// Leaf mode: everything arriving **from the spine** — FA and
+    /// confirm downlinks, gen-sync notices, and stale-partial nudges.
+    /// Spine control traffic must never reach `handle_ctrl`: the
+    /// spine's `Join` nudge carries a leaf-domain bit that would
+    /// corrupt the pod membership via the rejoin branch.
+    fn handle_from_spine(&mut self, pkt: &Packet) -> Vec<Action> {
+        match pkt.ctrl {
+            Ctrl::Evict | Ctrl::Join => {
+                // Gen-sync or stale-partial nudge: adopt a newer
+                // generation and re-announce it to the pod (the mask is
+                // leaf-domain — membership is never touched).
+                if pkt.gen > self.gen {
+                    self.sync_generation(pkt.gen);
+                    self.stats.gen_syncs += 1;
+                    return vec![Action::Multicast(self.gen_notice())];
+                }
+                Vec::new()
+            }
+            Ctrl::Leave | Ctrl::Blob | Ctrl::BlobAck => Vec::new(),
+            Ctrl::Data => {
+                if pkt.gen != self.gen {
+                    self.stats.stale_gen += 1;
+                    return Vec::new();
+                }
+                let full = self.members;
+                let seq = pkt.seq as usize % self.slots.len();
+                let slot = &mut self.slots[seq];
+                if pkt.is_agg && pkt.acked {
+                    // FA downlink. A dup (our retransmitted partial
+                    // re-triggered the spine's multicast) relays again;
+                    // an FA for a round we've already retired is stale.
+                    if slot.fa_ready {
+                        self.stats.fa_multicasts += 1;
+                        return vec![Action::Multicast(pkt.clone())];
+                    }
+                    if slot.agg_bm == full {
+                        slot.fa_relay = pkt.payload.clone();
+                        slot.fa_ready = true;
+                        self.stats.fa_relayed += 1;
+                        self.stats.fa_multicasts += 1;
+                        return vec![Action::Multicast(pkt.clone())];
+                    }
+                    Vec::new()
+                } else if !pkt.is_agg && pkt.acked {
+                    // Confirm downlink: every worker everywhere holds
+                    // FA — retire the round (the flat switch's
+                    // ack-complete clear, deferred to the spine's say).
+                    if slot.ack_bm == full {
+                        slot.agg_count = 0;
+                        slot.agg_bm = 0;
+                        slot.agg.iter_mut().for_each(|a| *a = 0);
+                        slot.fa_ready = false;
+                        self.stats.confirm_multicasts += 1;
+                        return vec![Action::Multicast(pkt.clone())];
+                    }
+                    Vec::new()
+                } else {
+                    Vec::new() // the spine never sends unacked data down
+                }
+            }
+        }
+    }
+
     /// Test/diagnostic view of a slot's registers:
     /// `(agg_count, agg_bm, ack_count, ack_bm)`.
     pub fn registers(&self, seq: u16) -> (u32, u32, u32, u32) {
-        let s = &self.slots[seq as usize];
+        let s = &self.slots[seq as usize % self.slots.len()];
         (s.agg_count, s.agg_bm, s.ack_count, s.ack_bm)
     }
 
@@ -273,6 +445,11 @@ impl P4Switch {
 
 impl AggServer for P4Switch {
     fn handle(&mut self, src: NodeId, pkt: &Packet) -> Vec<Action> {
+        if let Some(up) = self.uplink {
+            if src == up.spine {
+                return self.handle_from_spine(pkt);
+            }
+        }
         if pkt.ctrl != Ctrl::Data {
             return self.handle_ctrl(src, pkt);
         }
@@ -289,8 +466,12 @@ impl AggServer for P4Switch {
             return vec![Action::Unicast(src, nudge)];
         }
         let full = self.full_bm();
-        let seq = pkt.seq as usize;
-        assert!(seq < self.slots.len(), "seq {seq} out of range");
+        // Modulo indexing: with the default SEQ_SPACE-sized table this
+        // is the identity map, but a job-partitioned switch hands each
+        // tenant a small contiguous table that the 16-bit wire seq
+        // wraps onto (safe while the table is at least the senders'
+        // window — `switch::tenant` enforces that).
+        let seq = pkt.seq as usize % self.slots.len();
         let slot = &mut self.slots[seq];
 
         if pkt.is_agg {
@@ -329,6 +510,26 @@ impl AggServer for P4Switch {
             // multicast FA to every worker. Retransmissions re-share the
             // already-staged buffer — its contents are this round's FA.
             if slot.agg_bm == full {
+                if let Some(up) = self.uplink {
+                    if slot.fa_ready {
+                        // The spine's FA is already here: this dup PA
+                        // is a worker that lost the FA multicast.
+                        let mut out = pkt.clone();
+                        out.payload = slot.fa_relay.clone();
+                        out.acked = true;
+                        self.stats.fa_multicasts += 1;
+                        return vec![Action::Multicast(out)];
+                    }
+                    // One partial-aggregate per (slot, round) up; dup
+                    // PAs re-drive it, so uplink reliability rides the
+                    // workers' retransmission timers — no leaf timer.
+                    let mut partial = pkt.clone();
+                    partial.bm = 1 << up.leaf_bit;
+                    partial.gen = self.gen;
+                    partial.payload = slot.fa[slot.fa_cur].clone();
+                    self.stats.partials_up += 1;
+                    return vec![Action::Unicast(up.spine, partial)];
+                }
                 let mut out = pkt.clone();
                 out.payload = slot.fa[slot.fa_cur].clone();
                 out.acked = true;
@@ -342,8 +543,10 @@ impl AggServer for P4Switch {
             if slot.ack_bm & pkt.bm == 0 {
                 slot.ack_count += 1; // derived, diagnostics only
                 slot.ack_bm |= pkt.bm;
-                if slot.ack_bm == full {
+                if slot.ack_bm == full && self.uplink.is_none() {
                     // Every worker holds FA: the single copy can go.
+                    // (A leaf defers this clear to the spine confirm —
+                    // a lost leaf ACK must keep the round re-drivable.)
                     slot.agg_count = 0;
                     slot.agg_bm = 0;
                     slot.agg.iter_mut().for_each(|a| *a = 0);
@@ -353,6 +556,21 @@ impl AggServer for P4Switch {
             }
             // Alg. 2 lines 27-29: confirm to all workers.
             if slot.ack_bm == full {
+                if let Some(up) = self.uplink {
+                    if slot.fa_ready {
+                        // Pod fully ACKed, spine confirm still pending:
+                        // (re)send the leaf ACK up — dup worker ACKs
+                        // re-drive a lost uplink hop.
+                        let mut ack = pkt.clone();
+                        ack.bm = 1 << up.leaf_bit;
+                        ack.gen = self.gen;
+                        self.stats.acks_up += 1;
+                        return vec![Action::Unicast(up.spine, ack)];
+                    }
+                    // !fa_ready with a full ack_bm means the round was
+                    // confirmed and retired: a worker missed the
+                    // confirm — fall through and re-confirm (liveness).
+                }
                 let mut out = pkt.clone();
                 out.acked = true;
                 self.stats.confirm_multicasts += 1;
@@ -744,5 +962,226 @@ mod tests {
         // duplicate leave is silent
         assert!(sw.handle(2, &Packet::leave(2, 1)).is_empty());
         assert_eq!(sw.generation(), 1);
+    }
+
+    #[test]
+    fn small_slot_table_wraps_seq_modulo() {
+        // A job partition hands each tenant a small table; the 16-bit
+        // wire seq wraps onto it.
+        let mut sw = P4Switch::new(8, 2, 1);
+        drive(&mut sw, pa(11, 0, &[5]));
+        assert_eq!(sw.registers(3).1, 0b01, "seq 11 lands in slot 3 of 8");
+        assert_eq!(sw.registers(11).1, 0b01, "registers wraps the same way");
+    }
+
+    // --- two-level tree: 2 leaves x 2 workers + spine -------------------
+
+    const LEAF0: NodeId = 4;
+    const SPINE: NodeId = 6;
+    const SUP: NodeId = 7;
+
+    struct Tree {
+        leaves: Vec<P4Switch>,
+        spine: P4Switch,
+    }
+
+    fn tree(slots: usize, payload: usize) -> Tree {
+        Tree {
+            leaves: (0..2)
+                .map(|l| {
+                    P4Switch::new(slots, 4, payload)
+                        .with_members(0b11 << (2 * l))
+                        .with_uplink(SPINE, l)
+                })
+                .collect(),
+            spine: P4Switch::new(slots, 2, payload),
+        }
+    }
+
+    /// Deliver `pkt` from `worker` to its leaf, route any uplink
+    /// traffic through the spine and its downlinks back through both
+    /// leaves; returns every pod-bound multicast that resulted.
+    fn drive_tree(t: &mut Tree, worker: usize, pkt: Packet) -> Vec<Packet> {
+        let leaf_of = worker / 2;
+        let mut down = Vec::new();
+        let mut ups = Vec::new();
+        for act in t.leaves[leaf_of].handle(worker, &pkt) {
+            match act {
+                Action::Multicast(p) => down.push(p),
+                Action::Unicast(dst, p) => {
+                    assert_eq!(dst, SPINE, "leaf unicasts go up");
+                    ups.push(p);
+                }
+            }
+        }
+        for up in ups {
+            for act in t.spine.handle(LEAF0 + leaf_of, &up) {
+                let spine_out: Vec<(usize, Packet)> = match act {
+                    Action::Multicast(p) => vec![(0, p.clone()), (1, p)],
+                    Action::Unicast(dst, p) => vec![(dst - LEAF0, p)],
+                };
+                for (l, p) in spine_out {
+                    for act2 in t.leaves[l].handle(SPINE, &p) {
+                        match act2 {
+                            Action::Multicast(q) => down.push(q),
+                            Action::Unicast(dst, q) => {
+                                // a gen-sync bouncing back up is legal
+                                assert_eq!(dst, SPINE);
+                                let _ = t.spine.handle(LEAF0 + l, &q);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        down
+    }
+
+    #[test]
+    fn tree_completes_and_matches_flat_bitwise() {
+        let payloads: [&[i32]; 4] = [&[1, 10], &[2, 20], &[3, 30], &[4, i32::MAX]];
+        // flat reference sum (wrapping, like the Tofino ALUs)
+        let mut flat = P4Switch::new(4, 4, 2);
+        let mut flat_fa = None;
+        for w in 0..4 {
+            for a in flat.handle(w, &pa(0, w, payloads[w])) {
+                if let Action::Multicast(p) = a {
+                    flat_fa = Some(p.payload.clone());
+                }
+            }
+        }
+        let flat_fa = flat_fa.unwrap();
+        // same contributions through the tree
+        let mut t = tree(4, 2);
+        assert!(drive_tree(&mut t, 0, pa(0, 0, payloads[0])).is_empty());
+        assert!(drive_tree(&mut t, 1, pa(0, 1, payloads[1])).is_empty(), "partial up, no FA yet");
+        assert_eq!(t.leaves[0].stats.partials_up, 1);
+        assert!(drive_tree(&mut t, 2, pa(0, 2, payloads[2])).is_empty());
+        let down = drive_tree(&mut t, 3, pa(0, 3, payloads[3]));
+        // spine completed: both leaves relay the FA to their pods
+        assert_eq!(down.len(), 2);
+        for fa in &down {
+            assert!(fa.is_agg && fa.acked);
+            assert_eq!(fa.payload[..], flat_fa[..], "tree FA bitwise == flat FA");
+        }
+        assert_eq!(t.spine.stats.fa_multicasts, 1);
+        assert_eq!(t.leaves[0].stats.fa_relayed, 1);
+        assert_eq!(t.leaves[1].stats.fa_relayed, 1);
+    }
+
+    #[test]
+    fn leaf_redrives_partial_on_dup_pa_and_serves_fa_when_ready() {
+        let mut t = tree(2, 1);
+        drive_tree(&mut t, 0, pa(0, 0, &[5]));
+        assert!(drive_tree(&mut t, 1, pa(0, 1, &[7])).is_empty(), "pod 0 complete, FA pending");
+        // worker 0 retransmits: the leaf re-sends the partial up (the
+        // spine dedups it), still no FA
+        assert!(drive_tree(&mut t, 0, pa(0, 0, &[5])).is_empty());
+        assert_eq!(t.leaves[0].stats.partials_up, 2);
+        assert_eq!(t.spine.stats.dup_agg, 1);
+        // pod 1 completes: FA lands everywhere
+        drive_tree(&mut t, 2, pa(0, 2, &[11]));
+        let down = drive_tree(&mut t, 3, pa(0, 3, &[13]));
+        assert_eq!(down.len(), 2);
+        assert_eq!(down[0].payload[..], [36]);
+        // now a dup PA is served from the leaf's stored relay — no
+        // spine round trip
+        let spine_aggs = t.spine.stats.agg_packets;
+        let again = drive_tree(&mut t, 0, pa(0, 0, &[5]));
+        assert_eq!(again.len(), 1);
+        assert_eq!(again[0].payload[..], [36]);
+        assert_eq!(t.spine.stats.agg_packets, spine_aggs, "no uplink traffic");
+    }
+
+    #[test]
+    fn tree_ack_round_confirms_through_spine() {
+        let mut t = tree(2, 1);
+        for w in 0..4 {
+            drive_tree(&mut t, w, pa(0, w, &[w as i32 + 1]));
+        }
+        // pod 0 ACKs: leaf 0 acks up, but nothing confirms yet
+        assert!(drive_tree(&mut t, 0, Packet::ack(0, 0)).is_empty());
+        assert!(drive_tree(&mut t, 1, Packet::ack(0, 1)).is_empty());
+        assert_eq!(t.leaves[0].stats.acks_up, 1);
+        assert_eq!(t.spine.registers(0).3, 0b01, "spine holds leaf 0's ACK");
+        // pod 1 ACKs: the spine confirms, both leaves retire + confirm
+        assert!(drive_tree(&mut t, 2, Packet::ack(0, 2)).is_empty());
+        let down = drive_tree(&mut t, 3, Packet::ack(0, 3));
+        assert_eq!(down.len(), 2);
+        assert!(down.iter().all(|p| !p.is_agg && p.acked));
+        assert_eq!(t.leaves[0].registers(0).1, 0, "leaf agg regs retired");
+        assert_eq!(t.spine.registers(0).1, 0, "spine agg regs retired");
+        // a late worker ACK is re-confirmed by its leaf alone
+        let late = drive_tree(&mut t, 1, Packet::ack(0, 1));
+        assert_eq!(late.len(), 1);
+        assert!(!late[0].is_agg && late[0].acked);
+        // and the slot is reusable end to end
+        for w in 0..3 {
+            assert!(drive_tree(&mut t, w, pa(0, w, &[2])).is_empty());
+        }
+        let down = drive_tree(&mut t, 3, pa(0, 3, &[2]));
+        assert_eq!(down[0].payload[..], [8], "fresh round, no residue");
+    }
+
+    #[test]
+    fn evict_gen_sync_propagates_through_tree() {
+        let mut t = tree(2, 1);
+        // supervisor evicts worker 3: the order goes to the OWNING leaf
+        let acts = t.leaves[1].handle(SUP, &Packet::evict(1 << 3, 1));
+        assert_eq!(t.leaves[1].generation(), 1);
+        assert_eq!(t.leaves[1].members(), 0b0100);
+        // the leaf multicasts the notice down AND forwards a gen-sync up
+        let up = acts
+            .iter()
+            .find_map(|a| match a {
+                Action::Unicast(dst, p) => {
+                    assert_eq!(*dst, SPINE);
+                    Some(p.clone())
+                }
+                _ => None,
+            })
+            .expect("gen-sync up");
+        assert_eq!((up.ctrl, up.bm, up.gen), (Ctrl::Evict, 0, 1));
+        // spine adopts the newer generation without evicting any leaf
+        let spine_acts = t.spine.handle(LEAF0 + 1, &up);
+        assert_eq!(t.spine.generation(), 1);
+        assert_eq!(t.spine.members(), 0b11, "leaf membership untouched");
+        assert_eq!(t.spine.stats.gen_syncs, 1);
+        // ... and re-announces; leaf 0 adopts and notifies its pod
+        let Action::Multicast(notice) = &spine_acts[0] else { panic!("{spine_acts:?}") };
+        let l0 = t.leaves[0].handle(SPINE, notice);
+        assert_eq!(t.leaves[0].generation(), 1);
+        assert_eq!(t.leaves[0].members(), 0b0011, "pod membership untouched");
+        match &l0[0] {
+            Action::Multicast(p) => assert_eq!((p.ctrl, p.bm, p.gen), (Ctrl::Evict, 0, 1)),
+            other => panic!("{other:?}"),
+        }
+        // idempotent: a re-announced order re-syncs nothing further
+        let _ = t.leaves[0].handle(SPINE, notice);
+        assert_eq!(t.leaves[0].stats.gen_syncs, 1);
+    }
+
+    #[test]
+    fn spine_nudge_never_corrupts_pod_membership() {
+        // A leaf one generation behind sends a partial; the spine's
+        // stale nudge (a Join carrying a leaf-domain bit) must sync the
+        // generation, not "rejoin" a phantom pod member.
+        let mut leaf = P4Switch::new(2, 4, 1).with_members(0b0011).with_uplink(SPINE, 0);
+        let mut spine = P4Switch::new(2, 2, 1).with_generation(3);
+        leaf.handle(0, &pa(0, 0, &[1]));
+        let acts = leaf.handle(1, &pa(0, 1, &[2]));
+        let Action::Unicast(_, partial) = &acts[0] else { panic!("{acts:?}") };
+        let nudges = spine.handle(LEAF0, partial);
+        assert_eq!(spine.stats.stale_gen, 1);
+        let Action::Unicast(dst, nudge) = &nudges[0] else { panic!("{nudges:?}") };
+        assert_eq!((*dst, nudge.ctrl), (LEAF0, Ctrl::Join));
+        let down = leaf.handle(SPINE, nudge);
+        assert_eq!(leaf.generation(), 3, "leaf adopted the spine's generation");
+        assert_eq!(leaf.members(), 0b0011, "pod membership untouched by the nudge");
+        assert_eq!(leaf.registers(0), (0, 0, 0, 0), "slots reset on sync");
+        match &down[0] {
+            Action::Multicast(p) => assert_eq!(p.gen, 3, "pod learns the new generation"),
+            other => panic!("{other:?}"),
+        }
     }
 }

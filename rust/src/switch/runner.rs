@@ -35,7 +35,26 @@ impl Drop for ServerHandle {
 
 /// Spawn a thread pumping `server` over `transport`. A `Multicast`
 /// action fans out to workers `0..server.workers()`.
-pub fn spawn<S, T>(mut server: S, mut transport: T) -> ServerHandle
+pub fn spawn<S, T>(server: S, transport: T) -> ServerHandle
+where
+    S: AggServer + 'static,
+    T: Transport + 'static,
+{
+    spawn_at(server, transport, 0, None)
+}
+
+/// [`spawn`] with an explicit core slot and multicast fan-out — the
+/// tree form. Every co-located switch pins `index` cores down from the
+/// top (`last_core() - index`) so a spine and its leaves (or several
+/// `cluster`-launcher switches on one host) never contend on one core;
+/// `fanout`, when given, fixes the multicast targets (a leaf's pod, a
+/// spine's leaves) instead of the default `0..server.workers()`.
+pub fn spawn_at<S, T>(
+    mut server: S,
+    mut transport: T,
+    index: usize,
+    fanout: Option<Vec<crate::net::NodeId>>,
+) -> ServerHandle
 where
     S: AggServer + 'static,
     T: Transport + 'static,
@@ -43,15 +62,20 @@ where
     let stop = Arc::new(AtomicBool::new(false));
     let stop2 = stop.clone();
     let join = std::thread::Builder::new()
-        .name("agg-server".into())
+        .name(format!("agg-server-{index}"))
         .spawn(move || {
             // Affinity policy (feature-gated no-op by default): the
-            // switch is the fan-in point — park it on the last core,
-            // away from the engine threads pinned from core 0 up.
-            let _ = crate::util::affinity::pin_current(crate::util::affinity::last_core());
-            // Multicast fan-out list, rebuilt only when the membership
-            // size changes (scale-up admits workers mid-job).
-            let mut fanout: Vec<crate::net::NodeId> = (0..server.workers()).collect();
+            // switch is the fan-in point — park it near the last core,
+            // away from the engine threads pinned from core 0 up, each
+            // co-located switch on its own core counting down.
+            let core = crate::util::affinity::last_core().saturating_sub(index);
+            let _ = crate::util::affinity::pin_current(core);
+            let fixed = fanout.is_some();
+            // Multicast fan-out list; the dynamic default is rebuilt
+            // only when the membership size changes (scale-up admits
+            // workers mid-job).
+            let mut fanout: Vec<crate::net::NodeId> =
+                fanout.unwrap_or_else(|| (0..server.workers()).collect());
             while !stop2.load(Ordering::Relaxed) {
                 // Drain eagerly, then park: the switch is the fan-in
                 // point, and on few-core hosts yielding to peers beats
@@ -66,7 +90,7 @@ where
                     match action {
                         Action::Unicast(dst, out) => transport.send(dst, &out),
                         Action::Multicast(out) => {
-                            if fanout.len() != server.workers() {
+                            if !fixed && fanout.len() != server.workers() {
                                 fanout.clear();
                                 fanout.extend(0..server.workers());
                             }
@@ -99,20 +123,71 @@ where
 ///   not: evicted-but-alive workers still need generation notices,
 ///   and datagrams to dead ports are harmless.
 pub fn run_process_switch<T: Transport>(
-    mut transport: T,
+    transport: T,
     workers: usize,
     payload_len: usize,
     fa_ring: usize,
 ) {
+    let full = if workers == 32 { u32::MAX } else { (1u32 << workers) - 1 };
+    let cfg = SwitchProc {
+        workers,
+        payload_len,
+        fa_ring,
+        members: full,
+        uplink: None,
+        fanout: (0..workers).collect(),
+        pin_index: 0,
+    };
+    run_process_switch_cfg(transport, &cfg);
+}
+
+/// One switch process's place in the topology — everything
+/// [`run_process_switch_cfg`] needs beyond the transport. Static for
+/// the process lifetime (it comes from the CLI); only membership,
+/// generation, payload length and ring depth change per attempt, via
+/// `Reconfig` blobs.
+#[derive(Debug, Clone)]
+pub struct SwitchProc {
+    /// Bitmap domain: worker count for a flat switch or a leaf, leaf
+    /// count for a spine.
+    pub workers: usize,
+    pub payload_len: usize,
+    pub fa_ring: usize,
+    /// Initial member mask (a leaf starts with its pod, a spine with
+    /// every leaf); reconfigs replace it.
+    pub members: u32,
+    /// `Some((spine_node, leaf_bit))` puts the switch in leaf mode.
+    pub uplink: Option<(crate::net::NodeId, usize)>,
+    /// Multicast targets: pod worker nodes (flat/leaf) or leaf nodes
+    /// (spine).
+    pub fanout: Vec<crate::net::NodeId>,
+    /// Core slot from the top (`last_core() - pin_index`) so co-located
+    /// switch processes don't contend on one core.
+    pub pin_index: usize,
+}
+
+/// The topology-aware form of [`run_process_switch`]: runs a flat
+/// switch, a leaf, or a spine, per `cfg`.
+pub fn run_process_switch_cfg<T: Transport>(mut transport: T, cfg: &SwitchProc) {
     use crate::protocol::blob::{BlobRx, Msg, FRAG_WORDS};
     use crate::protocol::Ctrl;
     use crate::switch::p4::P4Switch;
     use crate::worker::agg_client::SEQ_SPACE;
 
+    let core = crate::util::affinity::last_core().saturating_sub(cfg.pin_index);
+    let _ = crate::util::affinity::pin_current(core);
+    let workers = cfg.workers;
     let full = if workers == 32 { u32::MAX } else { (1u32 << workers) - 1 };
-    let mut server = P4Switch::new(SEQ_SPACE, workers, payload_len).with_fa_ring(fa_ring);
+    let build = |payload_len: usize, fa_ring: usize| {
+        let sw = P4Switch::new(SEQ_SPACE, workers, payload_len).with_fa_ring(fa_ring);
+        match cfg.uplink {
+            Some((spine, bit)) => sw.with_uplink(spine, bit),
+            None => sw,
+        }
+    };
+    let mut server = build(cfg.payload_len, cfg.fa_ring).with_members(cfg.members);
     let mut rx = BlobRx::new();
-    let fanout: Vec<crate::net::NodeId> = (0..workers).collect();
+    let fanout = &cfg.fanout;
     loop {
         let Some((src, pkt)) = transport
             .try_recv()
@@ -134,10 +209,9 @@ pub fn run_process_switch<T: Transport>(
                             && (2..=16).contains(&r.fa_ring)
                             && (1..=FRAG_WORDS).contains(&r.payload_len);
                         if sane {
-                            server = P4Switch::new(SEQ_SPACE, workers, r.payload_len)
+                            server = build(r.payload_len, r.fa_ring)
                                 .with_generation(r.generation)
-                                .with_members(r.members_mask)
-                                .with_fa_ring(r.fa_ring);
+                                .with_members(r.members_mask);
                         } else {
                             eprintln!("switch: ignoring invalid reconfig {r:?}");
                         }
@@ -151,7 +225,7 @@ pub fn run_process_switch<T: Transport>(
                 for action in server.handle(src, &pkt) {
                     match action {
                         Action::Unicast(dst, out) => transport.send(dst, &out),
-                        Action::Multicast(out) => transport.send_many(&fanout, &out),
+                        Action::Multicast(out) => transport.send_many(fanout, &out),
                     }
                 }
             }

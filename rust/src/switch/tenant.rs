@@ -1,0 +1,235 @@
+//! Multi-tenant slot partitioning: several training jobs sharing one
+//! physical switch without touching each other's slots, stats, or
+//! generations.
+//!
+//! The slot table of a real Tofino pipeline is a fixed SRAM budget; the
+//! multi-job sharing design of "Enabling Fast and Flexible Distributed
+//! Deep Learning with Programmable Switches" (PAPERS.md) carves it into
+//! contiguous per-job ranges selected by a job id carried in the packet
+//! header. [`JobPartitionedSwitch`] reproduces that: the v1 header's
+//! two reserved flag bits carry [`Packet::job`](crate::protocol::Packet)
+//! and each job gets its own [`P4Switch`] over a `job_slots`-sized
+//! table — job `j` owns physical slots `[j * job_slots, (j+1) *
+//! job_slots)`. The 16-bit wire `seq` wraps onto the job's table by
+//! modulo (see `P4Switch::handle`), which is sound while `job_slots` is
+//! at least each tenant's client window — [`JobPartitionedSwitch::add_job`]
+//! asserts it.
+//!
+//! Isolation properties (tested below):
+//!
+//! * **Slots**: same `seq` from two jobs lands in two disjoint
+//!   registers; an FA for one job never carries the other's sums.
+//! * **Generations**: an eviction in job A bumps only job A's
+//!   generation; job B's rounds keep completing at its own.
+//! * **Stats**: each job reads its own [`SwitchStats`]
+//!   (`P4Switch::stats`); frames with an unknown job id are counted
+//!   here and dropped without touching any tenant.
+//!
+//! Egress discipline: the inner switch's `Multicast` means "my
+//! workers", so the wrapper expands it into unicasts to exactly the
+//! job's node list — one tenant's FA never reaches another tenant's
+//! sockets — and stamps the job id on every egress frame (control
+//! notices are built fresh inside `P4Switch` with `job: 0`).
+
+use super::{Action, AggServer};
+use crate::net::NodeId;
+use crate::protocol::Packet;
+use crate::switch::p4::P4Switch;
+
+/// One tenant: its state machine and the node ids of its workers
+/// (bit `i` of the inner switch's bitmaps is `workers[i]`).
+struct Tenant {
+    switch: P4Switch,
+    workers: Vec<NodeId>,
+}
+
+/// A switch front-end that dispatches on [`Packet::job`] to one of up
+/// to four independent [`P4Switch`] partitions.
+pub struct JobPartitionedSwitch {
+    job_slots: usize,
+    tenants: Vec<Tenant>,
+    /// Frames naming a job no tenant owns (hostile or misconfigured).
+    pub dropped_unknown_job: u64,
+}
+
+impl JobPartitionedSwitch {
+    /// An empty partition table; every job added owns `job_slots`
+    /// contiguous slots.
+    pub fn new(job_slots: usize) -> Self {
+        assert!(job_slots > 0, "a job needs at least one slot");
+        JobPartitionedSwitch { job_slots, tenants: Vec::new(), dropped_unknown_job: 0 }
+    }
+
+    /// Add the next job (ids are assigned in call order: first call is
+    /// job 0). `workers` maps the job's bitmap bits to node ids;
+    /// `window` is the tenants' client window (must fit the partition,
+    /// or two in-flight rounds would alias one slot).
+    pub fn add_job(
+        mut self,
+        workers: Vec<NodeId>,
+        payload_len: usize,
+        fa_ring: usize,
+        window: usize,
+    ) -> Self {
+        assert!(self.tenants.len() < 4, "the 2-bit job field holds at most 4 jobs");
+        assert!(!workers.is_empty() && workers.len() <= 32, "1..=32 workers per job");
+        assert!(
+            window <= self.job_slots,
+            "client window {window} overruns the {}-slot partition",
+            self.job_slots
+        );
+        let switch = P4Switch::new(self.job_slots, workers.len(), payload_len).with_fa_ring(fa_ring);
+        self.tenants.push(Tenant { switch, workers });
+        self
+    }
+
+    pub fn num_jobs(&self) -> usize {
+        self.tenants.len()
+    }
+
+    /// Job `j`'s partition of the shared physical table:
+    /// `(first_slot, len)`.
+    pub fn slot_range(&self, j: usize) -> (usize, usize) {
+        assert!(j < self.tenants.len());
+        (j * self.job_slots, self.job_slots)
+    }
+
+    /// Job `j`'s state machine — per-job stats, generation, registers.
+    pub fn job(&self, j: usize) -> &P4Switch {
+        &self.tenants[j].switch
+    }
+}
+
+impl AggServer for JobPartitionedSwitch {
+    fn handle(&mut self, src: NodeId, pkt: &Packet) -> Vec<Action> {
+        let Some(tenant) = self.tenants.get_mut(pkt.job as usize) else {
+            self.dropped_unknown_job += 1;
+            return Vec::new();
+        };
+        let mut out = Vec::new();
+        for action in tenant.switch.handle(src, pkt) {
+            match action {
+                Action::Unicast(dst, mut p) => {
+                    p.job = pkt.job;
+                    out.push(Action::Unicast(dst, p));
+                }
+                Action::Multicast(mut p) => {
+                    p.job = pkt.job;
+                    for &w in &tenant.workers {
+                        out.push(Action::Unicast(w, p.clone()));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn workers(&self) -> usize {
+        self.tenants.iter().map(|t| t.workers.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::Ctrl;
+
+    /// Two jobs: job 0 = workers at nodes {10, 11}, job 1 = {20}.
+    fn two_jobs() -> JobPartitionedSwitch {
+        JobPartitionedSwitch::new(8)
+            .add_job(vec![10, 11], 2, 2, 8)
+            .add_job(vec![20], 2, 2, 4)
+    }
+
+    fn pa(job: u8, seq: u16, bit: usize, vals: &[i32]) -> Packet {
+        Packet::pa(seq, bit, vals.to_vec()).with_job(job)
+    }
+
+    #[test]
+    fn jobs_aggregate_independently_and_fa_reaches_only_their_workers() {
+        let mut sw = two_jobs();
+        // same seq, both jobs, interleaved
+        assert!(sw.handle(10, &pa(0, 3, 0, &[1, 2])).is_empty());
+        let fa1 = sw.handle(20, &pa(1, 3, 0, &[100, 200]));
+        // job 1 is a single worker: complete instantly, unicast to 20
+        assert_eq!(fa1.len(), 1);
+        match &fa1[0] {
+            Action::Unicast(dst, p) => {
+                assert_eq!(*dst, 20);
+                assert_eq!(p.job, 1);
+                assert_eq!(p.payload[..], [100, 200], "no cross-job sums");
+            }
+            other => panic!("{other:?}"),
+        }
+        // job 0 completes later, expanded to ITS two nodes only
+        let fa0 = sw.handle(11, &pa(0, 3, 1, &[10, 20]));
+        let dsts: Vec<_> = fa0
+            .iter()
+            .map(|a| match a {
+                Action::Unicast(dst, p) => {
+                    assert_eq!(p.job, 0);
+                    assert_eq!(p.payload[..], [11, 22]);
+                    *dst
+                }
+                other => panic!("{other:?}"),
+            })
+            .collect();
+        assert_eq!(dsts, [10, 11]);
+        assert_eq!(sw.job(0).stats.agg_packets, 2);
+        assert_eq!(sw.job(1).stats.agg_packets, 1, "stats never cross");
+    }
+
+    #[test]
+    fn eviction_in_one_job_leaves_the_other_generation_alone() {
+        let mut sw = two_jobs();
+        let acts = sw.handle(99, &Packet::evict(0b10, 0).with_job(0));
+        assert_eq!(sw.job(0).generation(), 1);
+        assert_eq!(sw.job(1).generation(), 0, "generations never cross");
+        // the eviction notice goes to job 0's nodes, stamped job 0
+        for a in &acts {
+            match a {
+                Action::Unicast(dst, p) => {
+                    assert!(*dst == 10 || *dst == 11);
+                    assert_eq!((p.ctrl, p.job), (Ctrl::Evict, 0));
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+        // job 1 still completes rounds at its own generation
+        let fa = sw.handle(20, &pa(1, 0, 0, &[7, 7]));
+        assert_eq!(fa.len(), 1);
+    }
+
+    #[test]
+    fn partition_is_bitwise_identical_to_a_solo_switch() {
+        let mut shared = two_jobs();
+        let mut solo = P4Switch::new(8, 2, 2);
+        for (seq, vals) in [(0u16, [3, -9]), (1, [5, i32::MAX])] {
+            // noise from the other tenant in between
+            shared.handle(20, &pa(1, seq, 0, &[seq as i32, 42]));
+            for bit in 0..2 {
+                let shared_out = shared.handle(10 + bit, &pa(0, seq, bit, &vals));
+                let solo_out = solo.handle(bit, &Packet::pa(seq, bit, vals.to_vec()));
+                if let Some(Action::Multicast(sp)) = solo_out.first() {
+                    let Action::Unicast(_, tp) = &shared_out[0] else { panic!() };
+                    assert_eq!(tp.payload[..], sp.payload[..], "bitwise i32 parity");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_job_is_dropped_without_touching_tenants() {
+        let mut sw = two_jobs();
+        assert!(sw.handle(10, &pa(2, 0, 0, &[1, 1])).is_empty());
+        assert_eq!(sw.dropped_unknown_job, 1);
+        assert_eq!(sw.job(0).stats.agg_packets, 0);
+        assert_eq!(sw.job(1).stats.agg_packets, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "overruns")]
+    fn window_must_fit_the_partition() {
+        let _ = JobPartitionedSwitch::new(4).add_job(vec![0], 1, 2, 5);
+    }
+}

@@ -119,6 +119,67 @@ impl P4sgdSim {
         now
     }
 
+    /// Fan-in serialization at one aggregation point: the completing
+    /// contribution is processed only after all `k` arrive, and their
+    /// `mb`-word frames serialize on the switch's ingress pipe. Flat
+    /// calibration folds this into `agg.base` (Fig. 8 measures the
+    /// whole path at small fan-in); the tree model needs it explicit
+    /// because splitting the fan-in across levels is the whole point.
+    fn t_fan_in(&self, k: usize) -> Sim {
+        k.saturating_sub(1) as f64 * self.mb as f64 * 4.0 / LINK_BYTES_PER_S
+    }
+
+    /// Mean FA latency under a topology: `None` = one flat switch
+    /// absorbing all M PAs; `Some(L)` = a two-level tree where each
+    /// leaf aggregates its ~M/L pod, forwards one partial-aggregate
+    /// frame up, the spine completes across L leaves, and the FA rides
+    /// back down through the leaf's relay (a match + multicast, no
+    /// aggregation — modelled at half a traversal).
+    pub fn agg_latency(&self, tree: Option<usize>) -> Sim {
+        let elem = self.agg.per_elem * self.mb as f64;
+        match tree {
+            None => self.agg.base + self.agg.jitter + elem + self.t_fan_in(self.m),
+            Some(leaves) => {
+                assert!((1..=self.m).contains(&leaves), "leaves must be 1..=M");
+                let pod = self.m.div_ceil(leaves);
+                let wire = self.mb as f64 * 4.0 / LINK_BYTES_PER_S;
+                2.5 * self.agg.base            // leaf agg + spine agg + leaf FA relay
+                    + self.agg.jitter
+                    + 2.0 * elem               // two aggregating traversals
+                    + self.t_fan_in(pod)       // pods drain concurrently
+                    + self.t_fan_in(leaves)    // spine completes across leaves
+                    + 2.0 * wire               // uplink partial + downlink FA
+            }
+        }
+    }
+
+    /// Epoch time under a topology (see [`P4sgdSim::agg_latency`]):
+    /// the same pipeline recurrence as [`P4sgdSim::epoch_time_n`] with
+    /// the aggregation term swapped for the topology's FA path. Use the
+    /// `None` (fan-in-aware flat) and `Some(L)` forms of *this* method
+    /// against each other — the legacy flat methods keep fan-in folded
+    /// into the calibrated base and are not comparable to the tree.
+    pub fn epoch_time_topo(&self, samples: usize, tree: Option<usize>) -> Sim {
+        let t_stage = self.fpga.t_micro(self.d_local());
+        let micro = self.b / self.mb;
+        assert!(micro >= 1);
+        let wire = self.mb as f64 * 4.0 / LINK_BYTES_PER_S;
+        let t_agg = self.agg_latency(tree);
+        let mut now = 0.0f64;
+        for _ in 0..samples / self.b {
+            let mut fwd_done = now;
+            let mut bwd_done = now;
+            for j in 0..micro {
+                fwd_done += t_stage;
+                let fa = fwd_done + wire + t_agg;
+                bwd_done = if j == 0 { fa } else { bwd_done.max(fa) };
+                bwd_done += t_stage;
+            }
+            now = bwd_done + t_stage * 0.05;
+        }
+        now
+    }
+
     /// Vanilla (non-pipelined) MP on the same hardware: whole-mini-batch
     /// forward, one aggregation of B elements, whole-mini-batch backward
     /// (paper Eq. 2; the Fig. 2b schedule).
@@ -282,6 +343,53 @@ mod tests {
         let fa = (s.mb as f64 * 4.0 / LINK_BYTES_PER_S + s.agg.mean(s.mb)) * f;
         let closed = (6400 / s.b) as f64 * (t_round + fa);
         assert!((t1 - closed).abs() < 1e-9 * closed.max(1.0), "{t1} vs {closed}");
+    }
+
+    #[test]
+    fn tree_pays_hop_latency_at_small_fan_in() {
+        // 4 workers, 8-element payloads: the extra leaf->spine->leaf
+        // hops cost more than splitting a 4-way fan-in saves, so the
+        // flat switch must win — and the epoch curve must agree.
+        let s = sim(100_000, 4, 64);
+        assert!(s.agg_latency(Some(2)) > s.agg_latency(None));
+        let flat = s.epoch_time_topo(6400, None);
+        let tree = s.epoch_time_topo(6400, Some(2));
+        assert!(tree > flat, "tree {tree} flat {flat}");
+    }
+
+    #[test]
+    fn tree_wins_when_fan_in_serialization_dominates() {
+        // 32 workers x 4096-element payloads: the flat switch
+        // serializes 31 partial frames on one ingress pipe; 8 pods of 4
+        // drain concurrently and the spine only completes across 8.
+        let s = P4sgdSim {
+            fpga: FpgaModel::default(),
+            agg: AGG_P4SGD,
+            d: 1_000_000,
+            m: 32,
+            b: 8192,
+            mb: 4096,
+        };
+        assert!(
+            s.agg_latency(Some(8)) < s.agg_latency(None),
+            "tree {} flat {}",
+            s.agg_latency(Some(8)),
+            s.agg_latency(None)
+        );
+    }
+
+    #[test]
+    fn tree_latency_is_monotone_in_hops_not_leaves() {
+        // More leaves shrink the pod fan-in but grow the spine's; at
+        // tiny payloads every variant still pays the same two extra
+        // hops, so all tree points sit above flat by roughly 1.5 base.
+        let s = sim(100_000, 8, 64);
+        let flat = s.agg_latency(None);
+        for l in [2usize, 4, 8] {
+            let t = s.agg_latency(Some(l));
+            assert!(t > flat, "leaves {l}: {t} vs {flat}");
+            assert!(t < flat + 2.0 * s.agg.base, "hop overhead bounded: {t} vs {flat}");
+        }
     }
 
     #[test]

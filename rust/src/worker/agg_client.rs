@@ -87,6 +87,9 @@ pub struct AggStats {
     pub resyncs: u64,
     /// Heartbeat `Join`s sent to the supervisor.
     pub heartbeats: u64,
+    /// Frames stamped with another tenant's job id, dropped unapplied
+    /// (misrouted multicast on a shared switch).
+    pub wrong_job: u64,
 }
 
 /// A generation bump observed in incoming traffic.
@@ -124,6 +127,10 @@ pub struct AggClient<T: Transport> {
     transport: T,
     server: NodeId,
     worker: usize,
+    /// Tenant job id stamped on every outgoing frame (0 = the
+    /// single-tenant default, byte-identical to the pre-tenant wire);
+    /// ingress with another job id is dropped unapplied.
+    job: u8,
     /// In-flight operations, keyed by seq (small: <= window).
     inflight: Vec<(u16, Phase)>,
     /// Max outstanding operations.
@@ -155,6 +162,7 @@ impl<T: Transport> AggClient<T> {
             transport,
             server,
             worker,
+            job: 0,
             inflight: Vec::with_capacity(window),
             window,
             pool: Vec::with_capacity(window),
@@ -172,6 +180,15 @@ impl<T: Transport> AggClient<T> {
     /// membership change).
     pub fn with_generation(mut self, gen: u32) -> Self {
         self.gen = gen;
+        self
+    }
+
+    /// Join tenant `job` (0..=3) on a job-partitioned switch: every
+    /// outgoing frame carries the id, and frames from other tenants are
+    /// dropped before they can touch rounds or generations.
+    pub fn with_job(mut self, job: u8) -> Self {
+        assert!(job < 4, "job id {job} does not fit the 2-bit wire field");
+        self.job = job;
         self
     }
 
@@ -223,7 +240,7 @@ impl<T: Transport> AggClient<T> {
     /// Graceful departure notice to `node` (the supervisor, at worker
     /// exit; or the switch, to shrink the membership in place).
     pub fn send_leave(&mut self, node: NodeId) {
-        let pkt = Packet::leave(self.worker, self.gen);
+        let pkt = Packet::leave(self.worker, self.gen).with_job(self.job);
         self.transport.send(node, &pkt);
     }
 
@@ -231,7 +248,7 @@ impl<T: Transport> AggClient<T> {
     /// asks to be re-admitted (the switch bumps the generation and
     /// multicasts the new membership).
     pub fn send_rejoin(&mut self) {
-        let pkt = Packet::join(self.worker, self.gen);
+        let pkt = Packet::join(self.worker, self.gen).with_job(self.job);
         self.transport.send(self.server, &pkt);
     }
 
@@ -289,7 +306,9 @@ impl<T: Transport> AggClient<T> {
         }
         let seq = self.next_seq;
         self.next_seq = self.next_seq.wrapping_add(1);
-        let pkt = Packet::pa(seq, self.worker, self.pooled_payload(payload)).with_gen(self.gen);
+        let pkt = Packet::pa(seq, self.worker, self.pooled_payload(payload))
+            .with_gen(self.gen)
+            .with_job(self.job);
         self.transport.send(self.server, &pkt);
         self.stats.pa_sent += 1;
         self.inflight
@@ -392,7 +411,7 @@ impl<T: Transport> AggClient<T> {
         let Some(hb) = &mut self.hb else { return };
         hb.last = Instant::now();
         let node = hb.node;
-        let pkt = Packet::join(self.worker, self.gen);
+        let pkt = Packet::join(self.worker, self.gen).with_job(self.job);
         self.transport.send(node, &pkt);
         self.stats.heartbeats += 1;
     }
@@ -455,6 +474,12 @@ impl<T: Transport> AggClient<T> {
             self.ctrl_inbox.push_back((src, pkt));
             return None;
         }
+        if pkt.job != self.job {
+            // Another tenant's frame (shared-switch misroute): its
+            // generations and rounds live in a different partition.
+            self.stats.wrong_job += 1;
+            return None;
+        }
         let evicts_us = pkt.ctrl == Ctrl::Evict && (pkt.bm >> self.worker) & 1 == 1;
         if pkt.gen > self.gen || (evicts_us && pkt.gen == self.gen && !self.evicted()) {
             return Some(self.adopt_generation(pkt.gen.max(self.gen), evicts_us));
@@ -481,7 +506,7 @@ impl<T: Transport> AggClient<T> {
                 Phase::AwaitFa { .. } => {
                     // cancel_timer implicit; send ACK, arm ACK timer
                     // (Alg. 3 lines 20-24).
-                    let ack = Packet::ack(pkt.seq, self.worker).with_gen(self.gen);
+                    let ack = Packet::ack(pkt.seq, self.worker).with_gen(self.gen).with_job(self.job);
                     self.transport.send(self.server, &ack);
                     self.stats.acks_sent += 1;
                     self.stats.fa_received += 1;
@@ -690,6 +715,7 @@ mod tests {
                 seq: 2,
                 bm: 0,
                 gen: 0,
+                job: 0,
                 payload: vec![9].into(),
             },
         );
@@ -703,6 +729,7 @@ mod tests {
                 seq: 3,
                 bm: 0,
                 gen: 0,
+                job: 0,
                 payload: Vec::new().into(),
             },
         );
@@ -716,6 +743,7 @@ mod tests {
                 seq: 999,
                 bm: 0,
                 gen: 0,
+                job: 0,
                 payload: Vec::new().into(),
             },
         );
@@ -832,6 +860,7 @@ mod tests {
                 seq: 0,
                 bm: 0b11,
                 gen: 4,
+                job: 0,
                 payload: vec![99].into(),
             },
         );

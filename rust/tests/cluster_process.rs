@@ -3,7 +3,7 @@
 //! wait on exit codes, and assert against the coordinator's `--report`
 //! JSON.
 //!
-//! Three escalating proofs:
+//! Four escalating proofs:
 //!
 //! 1. **Parity**: a clean 2-worker process cluster reaches the bitwise
 //!    identical final model as the in-process thread trainer on the
@@ -18,6 +18,11 @@
 //!    never panic it; stale members get the v1 `Join` notice with the
 //!    authoritative generation, and a concurrently-sprayed training run
 //!    still converges with zero evictions.
+//! 4. **Tree parity**: the same training run through a real
+//!    2-leaf + spine tree (three switch OS processes, partial
+//!    aggregates riding kernel UDP between them) lands on the bitwise
+//!    identical model as the flat in-process reference — i32
+//!    aggregation is associative across the pod split.
 //!
 //! Every test skips gracefully when the trainer binary is missing and
 //! serializes on one mutex (real ports are a shared resource). Port
@@ -149,7 +154,7 @@ fn process_cluster_matches_in_process_training_bitwise() {
         ],
         &report,
     );
-    let mut procs = Cluster(spawn_cluster(bin, &common, 2).expect("spawning cluster"));
+    let mut procs = Cluster(spawn_cluster(bin, &common, 2, 0).expect("spawning cluster"));
     let st = coordinator_verdict(&mut procs, 120);
     assert!(st.success(), "coordinator failed: {st}");
     let deadline = Instant::now() + Duration::from_secs(20);
@@ -157,7 +162,7 @@ fn process_cluster_matches_in_process_training_bitwise() {
         let ws = wait_deadline(child, deadline).expect("waiting on worker");
         assert!(matches!(ws, Some(s) if s.success()), "worker {w} unclean exit: {ws:?}");
     }
-    let ss = wait_deadline(&mut procs.0.switch, deadline).expect("waiting on switch");
+    let ss = wait_deadline(&mut procs.0.switches[0], deadline).expect("waiting on switch");
     assert!(matches!(ss, Some(s) if s.success()), "switch unclean exit: {ss:?}");
 
     let text = read_report(&report);
@@ -224,7 +229,7 @@ fn sigkilled_worker_is_evicted_and_training_recovers() {
         ],
         &report,
     );
-    let mut procs = Cluster(spawn_cluster(bin, &common, 2).expect("spawning cluster"));
+    let mut procs = Cluster(spawn_cluster(bin, &common, 2, 0).expect("spawning cluster"));
 
     // SIGKILL is only meaningful mid-attempt: wait until the first
     // round-consistent checkpoint hits disk (epoch 2 of 40 — the run is
@@ -254,7 +259,7 @@ fn sigkilled_worker_is_evicted_and_training_recovers() {
     let deadline = Instant::now() + Duration::from_secs(20);
     let w0 = wait_deadline(&mut procs.0.workers[0], deadline).expect("waiting on worker 0");
     assert!(matches!(w0, Some(s) if s.success()), "survivor unclean exit: {w0:?}");
-    let ss = wait_deadline(&mut procs.0.switch, deadline).expect("waiting on switch");
+    let ss = wait_deadline(&mut procs.0.switches[0], deadline).expect("waiting on switch");
     assert!(matches!(ss, Some(s) if s.success()), "switch unclean exit: {ss:?}");
 
     let text = read_report(&report);
@@ -268,6 +273,78 @@ fn sigkilled_worker_is_evicted_and_training_recovers() {
     );
     let _ = std::fs::remove_file(&report);
     let _ = std::fs::remove_dir_all(&ckpt);
+}
+
+#[test]
+fn tree_cluster_is_bitwise_identical_to_flat_thread_mode() {
+    let Some(bin) = bin_or_skip() else { return };
+    let _guard = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let report = tmp_path("tree.json");
+    let _ = std::fs::remove_file(&report);
+    // Nodes on base port 48300: workers 0..4, leaves 4..6, spine 6,
+    // coordinator 7.
+    let mut common = common_args(
+        &[
+            ("workers", "4"),
+            ("engines", "2"),
+            ("batch", "32"),
+            ("micro-batch", "8"),
+            ("epochs", "3"),
+            ("samples", "256"),
+            ("features", "64"),
+            ("worker-timeout-ms", "10000"),
+            ("base-port", "48300"),
+            ("leaves", "2"),
+            ("expect-evictions", "0"),
+        ],
+        &report,
+    );
+    common.push("--tree".to_string());
+    let mut procs = Cluster(spawn_cluster(bin, &common, 4, 2).expect("spawning tree cluster"));
+    assert_eq!(procs.0.switches.len(), 3, "spine + 2 leaves");
+    let st = coordinator_verdict(&mut procs, 120);
+    assert!(st.success(), "tree coordinator failed: {st}");
+    let deadline = Instant::now() + Duration::from_secs(20);
+    for (w, child) in procs.0.workers.iter_mut().enumerate() {
+        let ws = wait_deadline(child, deadline).expect("waiting on worker");
+        assert!(matches!(ws, Some(s) if s.success()), "worker {w} unclean exit: {ws:?}");
+    }
+    for (s, child) in procs.0.switches.iter_mut().enumerate() {
+        let ss = wait_deadline(child, deadline).expect("waiting on switch");
+        assert!(matches!(ss, Some(st) if st.success()), "switch {s} unclean exit: {ss:?}");
+    }
+
+    let text = read_report(&report);
+    assert_eq!(field_u64(&text, "evictions"), 0, "tree run must not evict: {text}");
+    let curve = losses(&text);
+    assert!(curve[curve.len() - 1] < curve[0], "tree run must converge: {curve:?}");
+
+    // Reference: the flat in-process trainer on the identical config
+    // and seed. Three switch processes or one, the sums are the sums.
+    let mut cfg = SystemConfig::default();
+    cfg.cluster.workers = 4;
+    cfg.cluster.engines = 2;
+    cfg.cluster.engine_threads = 1;
+    cfg.cluster.pipeline_depth = 1;
+    cfg.cluster.slots = 16;
+    cfg.cluster.worker_timeout_ms = 10_000;
+    cfg.train.loss = Loss::LogReg;
+    cfg.train.lr = 0.5;
+    cfg.train.batch = 32;
+    cfg.train.micro_batch = 8;
+    cfg.train.epochs = 3;
+    cfg.net.latency_ns = 0;
+    cfg.net.jitter_ns = 0;
+    cfg.net.timeout_us = 3000;
+    let ds = synth::separable(256, 64, cfg.train.loss, 0.1, 7);
+    let reference = mp::train_mp(&cfg, &ds, &native);
+    let want: Vec<u32> = reference.model.iter().map(|v| v.to_bits()).collect();
+    let got: Vec<u32> = field_array(&text, "model_bits")
+        .iter()
+        .map(|s| s.parse().expect("u32 bit pattern"))
+        .collect();
+    assert_eq!(got, want, "tree-cluster model must be bitwise identical to flat thread mode");
+    let _ = std::fs::remove_file(&report);
 }
 
 /// Reliable-deliver one control blob from a test endpoint, ignoring any
@@ -394,7 +471,7 @@ fn hostile_datagrams_never_panic_the_switch_and_training_survives() {
             std::thread::sleep(Duration::from_micros(500));
         }
     });
-    let mut procs = Cluster(spawn_cluster(bin, &common, 2).expect("spawning cluster"));
+    let mut procs = Cluster(spawn_cluster(bin, &common, 2, 0).expect("spawning cluster"));
     let st = coordinator_verdict(&mut procs, 120);
     stop.store(true, Ordering::Relaxed);
     sprayer.join().expect("sprayer thread");

@@ -1,0 +1,280 @@
+//! Multi-tenant isolation, end to end: two training jobs sharing one
+//! physical switch through [`JobPartitionedSwitch`] must behave exactly
+//! as if each owned a switch of its own.
+//!
+//! Three escalating claims:
+//!
+//! 1. **Convergence under sharing** — two concurrent logistic-regression
+//!    jobs, each 2 workers, both train to high accuracy while
+//!    interleaving rounds on the shared slot table.
+//! 2. **Bitwise solo parity** — a job's final model is `to_bits()`
+//!    identical to the same job trained alone against a dedicated flat
+//!    [`P4Switch`]. Aggregation is exact i32, so any cross-tenant
+//!    contamination (a foreign payload summed in, a slot collision, a
+//!    misrouted FA) shows up as a bit difference.
+//! 3. **Control-plane isolation** — an eviction in one tenant bumps only
+//!    that tenant's generation; the other job's clients never see a
+//!    resync, a stale generation, or a wrong-job frame.
+//!
+//! The trainer here is a deliberately tiny fixed-point SGD loop (not
+//! `mp::train_mp`): each worker's model update depends only on the exact
+//! i32 aggregate, which is what makes "bitwise identical to the solo
+//! run" a theorem the test can check rather than a tolerance.
+
+use p4sgd::config::NetConfig;
+use p4sgd::data::{synth, Dataset};
+use p4sgd::glm::Loss;
+use p4sgd::net::sim::{SimEndpoint, SimNet};
+use p4sgd::net::Transport;
+use p4sgd::protocol::{Ctrl, Packet};
+use p4sgd::switch::p4::P4Switch;
+use p4sgd::switch::runner;
+use p4sgd::switch::tenant::JobPartitionedSwitch;
+use p4sgd::switch::{Action, AggServer};
+use p4sgd::worker::agg_client::SEQ_SPACE;
+use p4sgd::worker::{AggClient, AggStats};
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+const D: usize = 32;
+const JOB_SLOTS: usize = 64;
+const WINDOW: usize = 4;
+const TIMEOUT: Duration = Duration::from_millis(200);
+/// Fixed-point gradient scale (same spirit as the trainer's i32 wire).
+const SCALE: f32 = 65536.0;
+
+/// Pump a [`JobPartitionedSwitch`] over its endpoint until `stop`, then
+/// hand the switch back so the test can audit per-tenant stats and
+/// generations (the runner's `ServerHandle` consumes its server).
+fn pump_shared(
+    mut sw: JobPartitionedSwitch,
+    mut ep: SimEndpoint,
+    stop: Arc<AtomicBool>,
+) -> thread::JoinHandle<JobPartitionedSwitch> {
+    thread::spawn(move || {
+        while !stop.load(Ordering::Relaxed) {
+            let Some((src, pkt)) =
+                ep.try_recv().or_else(|| ep.recv_timeout(Duration::from_millis(2)))
+            else {
+                continue;
+            };
+            for action in sw.handle(src, &pkt) {
+                match action {
+                    Action::Unicast(dst, out) => ep.send(dst, &out),
+                    Action::Multicast(_) => unreachable!("the tenant wrapper expands multicasts"),
+                }
+            }
+        }
+        sw
+    })
+}
+
+/// Deterministic fixed-point logistic SGD over `rounds` full-batch
+/// rounds: local gradient on this worker's shard, quantized to i32,
+/// summed through the switch, applied identically by every member.
+/// Because the update consumes only the exact integer aggregate, the
+/// final model is a pure function of (dataset, rounds) — sharing the
+/// switch with another tenant must not change a single bit.
+fn train_worker(
+    mut c: AggClient<SimEndpoint>,
+    ds: Arc<Dataset>,
+    shard: Range<usize>,
+    rounds: usize,
+    progress: Option<Arc<AtomicUsize>>,
+) -> (Vec<f32>, AggStats) {
+    let d = ds.d;
+    let mut model = vec![0.0f32; d];
+    for _ in 0..rounds {
+        let mut g = vec![0.0f32; d];
+        for i in shard.clone() {
+            let row = &ds.features[i * d..(i + 1) * d];
+            let fa: f32 = row.iter().zip(&model).map(|(a, x)| a * x).sum();
+            let df = Loss::LogReg.df(fa, ds.labels[i]);
+            for (gj, &aj) in g.iter_mut().zip(row) {
+                *gj += df * aj;
+            }
+        }
+        let q: Vec<i32> = g.iter().map(|v| (v * SCALE) as i32).collect();
+        let sum = c.allreduce(&q);
+        assert!(!c.interrupted(), "foreign-tenant traffic bumped this job's generation");
+        for (xj, &s) in model.iter_mut().zip(&sum) {
+            *xj -= 0.5 * (s as f32) / SCALE / 2.0; // lr 0.5, mean of 2 workers
+        }
+        if let Some(p) = &progress {
+            p.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    (model, c.stats)
+}
+
+fn half(n: usize, w: usize) -> Range<usize> {
+    w * (n / 2)..(w + 1) * (n / 2)
+}
+
+fn bits(model: &[f32]) -> Vec<u32> {
+    model.iter().map(|v| v.to_bits()).collect()
+}
+
+fn accuracy(ds: &Dataset, model: &[f32]) -> f32 {
+    let mut ok = 0usize;
+    for i in 0..ds.n {
+        let row = &ds.features[i * ds.d..(i + 1) * ds.d];
+        let fa: f32 = row.iter().zip(model).map(|(a, x)| a * x).sum();
+        if (fa > 0.0) == (ds.labels[i] > 0.5) {
+            ok += 1;
+        }
+    }
+    ok as f32 / ds.n as f32
+}
+
+fn quiet_net() -> NetConfig {
+    NetConfig { latency_ns: 0, jitter_ns: 0, ..NetConfig::default() }
+}
+
+/// The same job trained alone on a dedicated flat switch — the oracle
+/// the shared-switch model must match bit for bit.
+fn solo_run(ds: &Arc<Dataset>, rounds: usize) -> Vec<f32> {
+    let mut eps = SimNet::build(3, &quiet_net());
+    let sw_ep = eps.pop().unwrap();
+    let _h = runner::spawn(P4Switch::new(SEQ_SPACE, 2, D), sw_ep);
+    let handles: Vec<_> = eps
+        .into_iter()
+        .enumerate()
+        .map(|(w, ep)| {
+            let c = AggClient::new(ep, 2, w, WINDOW, TIMEOUT);
+            let ds = ds.clone();
+            let shard = half(ds.n, w);
+            thread::spawn(move || train_worker(c, ds, shard, rounds, None))
+        })
+        .collect();
+    let models: Vec<Vec<f32>> = handles.into_iter().map(|h| h.join().unwrap().0).collect();
+    assert_eq!(bits(&models[0]), bits(&models[1]), "solo replicas must agree");
+    models.into_iter().next().unwrap()
+}
+
+#[test]
+fn concurrent_tenants_converge_and_match_their_solo_runs() {
+    let rounds = 60usize;
+    let ds0 = Arc::new(synth::separable(128, D, Loss::LogReg, 0.05, 11));
+    let ds1 = Arc::new(synth::separable(128, D, Loss::LogReg, 0.05, 22));
+
+    // Nodes: 0,1 = job 0 workers; 2,3 = job 1 workers; 4 = the switch.
+    let mut eps = SimNet::build(5, &quiet_net());
+    let sw_ep = eps.pop().unwrap();
+    let sw = JobPartitionedSwitch::new(JOB_SLOTS)
+        .add_job(vec![0, 1], D, 2, WINDOW)
+        .add_job(vec![2, 3], D, 2, WINDOW);
+    let stop = Arc::new(AtomicBool::new(false));
+    let pump = pump_shared(sw, sw_ep, stop.clone());
+
+    let mut handles = Vec::new();
+    for (node, ep) in eps.into_iter().enumerate() {
+        let (job, bit, ds) =
+            if node < 2 { (0u8, node, ds0.clone()) } else { (1u8, node - 2, ds1.clone()) };
+        let c = AggClient::new(ep, 4, bit, WINDOW, TIMEOUT).with_job(job);
+        let shard = half(ds.n, bit);
+        handles.push(thread::spawn(move || train_worker(c, ds, shard, rounds, None)));
+    }
+    let results: Vec<(Vec<f32>, AggStats)> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    stop.store(true, Ordering::Relaxed);
+    let sw = pump.join().unwrap();
+
+    // Replicas within each job agree bitwise.
+    assert_eq!(bits(&results[0].0), bits(&results[1].0), "job 0 replicas diverged");
+    assert_eq!(bits(&results[2].0), bits(&results[3].0), "job 1 replicas diverged");
+
+    // Sharing the switch changed nothing: bit-identical to solo runs.
+    assert_eq!(bits(&results[0].0), bits(&solo_run(&ds0, rounds)), "job 0 != its solo run");
+    assert_eq!(bits(&results[2].0), bits(&solo_run(&ds1, rounds)), "job 1 != its solo run");
+
+    // Both tenants actually learned their (different) tasks.
+    let (a0, a1) = (accuracy(&ds0, &results[0].0), accuracy(&ds1, &results[2].0));
+    assert!(a0 >= 0.9, "job 0 accuracy {a0}");
+    assert!(a1 >= 0.9, "job 1 accuracy {a1}");
+
+    // Switch-side isolation: each tenant's stats account for its own
+    // traffic, generations untouched, nothing dropped as unknown.
+    for j in 0..2 {
+        let s = &sw.job(j).stats;
+        assert!(s.agg_packets >= 2 * rounds as u64, "job {j} agg under-counted: {s:?}");
+        assert!(s.fa_multicasts >= rounds as u64, "job {j} FAs under-counted: {s:?}");
+        assert_eq!(sw.job(j).generation(), 0, "job {j} generation moved");
+    }
+    assert_eq!(sw.dropped_unknown_job, 0);
+
+    // Client-side isolation: no cross-tenant frames, no resyncs.
+    for (_, stats) in &results {
+        assert_eq!(stats.wrong_job, 0, "{stats:?}");
+        assert_eq!(stats.resyncs, 0, "{stats:?}");
+        assert_eq!(stats.stale_gen, 0, "{stats:?}");
+    }
+}
+
+#[test]
+fn eviction_in_one_tenant_is_invisible_to_the_other() {
+    let rounds = 40usize;
+    let ds0 = Arc::new(synth::separable(96, D, Loss::LogReg, 0.05, 33));
+
+    // Nodes: 0,1 = job 0 workers (training); 2,3 = job 1 workers (held
+    // by the test, idle); 4 = the switch; 5 = the supervisor.
+    let mut eps = SimNet::build(6, &quiet_net());
+    let mut supervisor = eps.pop().unwrap();
+    let sw_ep = eps.pop().unwrap();
+    let mut ep3 = eps.pop().unwrap();
+    let mut ep2 = eps.pop().unwrap();
+    let sw = JobPartitionedSwitch::new(JOB_SLOTS)
+        .add_job(vec![0, 1], D, 2, WINDOW)
+        .add_job(vec![2, 3], D, 2, WINDOW);
+    let stop = Arc::new(AtomicBool::new(false));
+    let pump = pump_shared(sw, sw_ep, stop.clone());
+
+    let progress = Arc::new(AtomicUsize::new(0));
+    let handles: Vec<_> = eps
+        .into_iter()
+        .enumerate()
+        .map(|(w, ep)| {
+            let c = AggClient::new(ep, 4, w, WINDOW, TIMEOUT).with_job(0);
+            let ds = ds0.clone();
+            let shard = half(ds.n, w);
+            let p = progress.clone();
+            thread::spawn(move || train_worker(c, ds, shard, rounds, Some(p)))
+        })
+        .collect();
+
+    // Mid-training (a few rounds in), evict job 1's worker bit 1.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while progress.load(Ordering::Relaxed) < 10 {
+        assert!(Instant::now() < deadline, "job 0 stalled before the eviction");
+        thread::yield_now();
+    }
+    supervisor.send(4, &Packet::evict(0b10, 0).with_job(1));
+
+    // The notice reaches exactly job 1's nodes, stamped with its id.
+    for ep in [&mut ep2, &mut ep3] {
+        let (_, pkt) = ep.recv_timeout(Duration::from_secs(2)).expect("eviction notice");
+        assert_eq!(pkt.ctrl, Ctrl::Evict);
+        assert_eq!(pkt.job, 1);
+        assert_eq!(pkt.gen, 1);
+    }
+
+    let results: Vec<(Vec<f32>, AggStats)> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    stop.store(true, Ordering::Relaxed);
+    let sw = pump.join().unwrap();
+
+    assert_eq!(sw.job(1).generation(), 1, "job 1 must have taken the eviction");
+    assert_eq!(sw.job(0).generation(), 0, "generations never cross");
+    for (_, stats) in &results {
+        assert_eq!(stats.resyncs, 0, "job 0 saw a resync: {stats:?}");
+        assert_eq!(stats.stale_gen, 0, "{stats:?}");
+        assert_eq!(stats.wrong_job, 0, "{stats:?}");
+    }
+    // And the surviving tenant's training was entirely unaffected.
+    let acc = accuracy(&ds0, &results[0].0);
+    assert!(acc >= 0.9, "job 0 accuracy {acc}");
+    assert_eq!(bits(&results[0].0), bits(&results[1].0));
+}
