@@ -12,12 +12,19 @@ positional form is kept for existing callers. Skips cleanly when the
 baseline is empty or unparsable (the committed files start as schema
 templates until a toolchain-equipped run commits real numbers).
 
+Most rows gate on `mean_s` (lower is better). Rows that carry a
+`predictions_per_s` extra — the serve-tier benches — gate on that
+instead, with the comparison inverted: current throughput below
+baseline/tolerance fails. Both rows must carry the key for the
+inversion to kick in; a row that loses the key falls back to `mean_s`
+(which for serve rows is per-request latency, still lower-better).
+
 A benchmark that vanishes from the current run normally fails the gate
 (a rename or a bench that died mid-run would otherwise let a regression
 escape). Exception: **axis migrations**. Parameterized benchmarks carry
 axis suffixes (`_t<N>` for engine threads, `_depth<N>` for pipeline
-depth, `_tree<N>` for aggregation-tree leaf count); when an axis is
-re-pointed (say depth {1,3} becomes {1,4}),
+depth, `_tree<N>` for aggregation-tree leaf count, `_s<N>` for serve
+shard count); when an axis is re-pointed (say depth {1,3} becomes {1,4}),
 a dropped point is reported as migrated, not failed — but only if the
 current run introduced a *new* point with the same axis stem. Merely
 surviving siblings don't qualify: an axis that silently shrinks (a
@@ -27,7 +34,22 @@ import json
 import re
 import sys
 
-AXIS_SUFFIX = re.compile(r"_(tree|t|depth)\d+")
+AXIS_SUFFIX = re.compile(r"_(tree|t|depth|s)\d+")
+
+THROUGHPUT_KEY = "predictions_per_s"
+
+
+def gate_metric(p, r):
+    """(key, prev value, cur value, ratio) for one baseline/current row
+    pair, where ratio > tolerance always means REGRESSED. Latency rows
+    gate on mean_s (lower-better, ratio = cur/prev); rows where both
+    sides report predictions_per_s gate on throughput (higher-better,
+    so the ratio is inverted: prev/cur)."""
+    if THROUGHPUT_KEY in p and THROUGHPUT_KEY in r:
+        pv, cv = p[THROUGHPUT_KEY], r[THROUGHPUT_KEY]
+        return THROUGHPUT_KEY, pv, cv, (pv / cv if cv > 0 else float("inf"))
+    pv, cv = p["mean_s"], r["mean_s"]
+    return "mean_s", pv, cv, (cv / pv if pv > 0 else 1.0)
 
 
 def axis_key(name):
@@ -98,11 +120,12 @@ def main():
         if p is None:
             print(f"  {'new':>9}: {r['name']:<{width}}  {'-':>10}  {r['mean_s']:>9.3e}s")
             continue
-        ratio = r["mean_s"] / p["mean_s"] if p["mean_s"] > 0 else 1.0
+        key, pv, cv, ratio = gate_metric(p, r)
+        unit = "/s" if key == THROUGHPUT_KEY else "s "
         verdict = "REGRESSED" if ratio > tol else "ok"
         print(
             f"  {verdict:>9}: {r['name']:<{width}}  "
-            f"{p['mean_s']:>9.3e}s  {r['mean_s']:>9.3e}s  {ratio:.2f}x"
+            f"{pv:>9.3e}{unit} {cv:>9.3e}{unit} {ratio:.2f}x"
         )
         if ratio > tol:
             failures.append(r["name"])

@@ -645,6 +645,9 @@ static int des(void) {
     return 0;
 }
 
+/* ci/serve_twin.c embeds this file (KERNEL_TWIN_EMBED) to reuse the
+ * pack/forward kernels and harness helpers without duplicating them. */
+#ifndef KERNEL_TWIN_EMBED
 int main(int argc, char **argv) {
     const char *mode = argc > 1 ? argv[1] : "parity";
     if (strcmp(mode, "parity") == 0) return parity();
@@ -653,3 +656,4 @@ int main(int argc, char **argv) {
     fprintf(stderr, "usage: kernel_twin <parity|bench [out.json]|des>\n");
     return 2;
 }
+#endif

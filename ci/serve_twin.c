@@ -1,0 +1,346 @@
+/* serve_twin.c — C twin of the rust serve-tier shard pipeline, for
+ * toolchain-free baseline measurement of `cargo bench --bench serve`.
+ *
+ * Mirrors `rust/src/serve/shard.rs` structurally: shared-nothing shard
+ * threads (pthreads), a bounded admission queue per shard, admission
+ * batching (flush at max_batch rows or when the *first* admitted row
+ * has waited max_wait_us), and the training forward kernel behind it —
+ * the same pack_rows + forward_into the kernel twin validates against
+ * the rust SIMD parity contract. Embeds kernel_twin.c for those
+ * kernels so the two twins cannot drift apart.
+ *
+ * Measured the same three ways as rust/benches/serve.rs:
+ *
+ *   serve_closed_s<N>           closed loop, fixed outstanding window
+ *                               (capacity: each completion funds the
+ *                               next dispatch)
+ *   serve_open_s<N>             open loop at 70% of measured closed
+ *                               capacity; arrivals follow the schedule
+ *                               t0 + i/rate and latency is charged
+ *                               from the *scheduled* arrival, so
+ *                               queueing delay is not coordinated away
+ *   serve_train_concurrent_s<N> closed loop while a training-style
+ *                               pack+forward loop competes for cores
+ *
+ * Emits BENCH_serve.json in the `p4sgd::bench::JsonReport` schema:
+ * mean_s/p50_s/p95_s are per-request end-to-end latency, `samples` is
+ * the request count, and the extra columns carry predictions_per_s,
+ * p99_s, p999_s (and offered_per_s for the open-loop row). The gate
+ * (ci/bench_compare.py) compares serve rows on predictions_per_s,
+ * higher-is-better.
+ *
+ * Build:  gcc -O2 -pthread -o serve_twin ci/serve_twin.c -lm
+ * Run:    ./serve_twin [out.json]
+ */
+#define KERNEL_TWIN_EMBED
+#include "kernel_twin.c"
+
+#include <pthread.h>
+#include <unistd.h>
+
+#define D 256
+#define PRECISION 4
+#define MAX_BATCH 32
+#define MAX_WAIT_US 200
+#define QDEPTH 256 /* max_batch * 8, as in shard::spawn */
+#define REQUESTS 65536
+
+/* ---------- bounded admission queue (mutex + condvar) ---------- */
+
+typedef struct {
+    uint32_t buf[QDEPTH];
+    size_t head, count;
+    int closed;
+    pthread_mutex_t mu;
+    pthread_cond_t cv;
+} queue;
+
+static void q_init(queue *q) {
+    memset(q, 0, sizeof *q);
+    pthread_mutex_init(&q->mu, NULL);
+    pthread_cond_init(&q->cv, NULL);
+}
+
+/* Returns 0 on success, -1 if full (caller retries — the closed loop's
+ * window never exceeds the depth, so this is open-loop backpressure). */
+static int q_push(queue *q, uint32_t id) {
+    pthread_mutex_lock(&q->mu);
+    if (q->count == QDEPTH) {
+        pthread_mutex_unlock(&q->mu);
+        return -1;
+    }
+    q->buf[(q->head + q->count) % QDEPTH] = id;
+    q->count++;
+    pthread_cond_signal(&q->cv);
+    pthread_mutex_unlock(&q->mu);
+    return 0;
+}
+
+static void q_close(queue *q) {
+    pthread_mutex_lock(&q->mu);
+    q->closed = 1;
+    pthread_cond_broadcast(&q->cv);
+    pthread_mutex_unlock(&q->mu);
+}
+
+/* Blocking pop: -1 only when the queue is closed *and* drained (the
+ * graceful-drain contract of ShardHandle::stop). */
+static long q_pop_block(queue *q) {
+    pthread_mutex_lock(&q->mu);
+    while (q->count == 0 && !q->closed) pthread_cond_wait(&q->cv, &q->mu);
+    long id = -1;
+    if (q->count > 0) {
+        id = q->buf[q->head];
+        q->head = (q->head + 1) % QDEPTH;
+        q->count--;
+    }
+    pthread_mutex_unlock(&q->mu);
+    return id;
+}
+
+/* Pop with a monotonic deadline: the batch top-up path. */
+static long q_pop_until(queue *q, double deadline_mono) {
+    pthread_mutex_lock(&q->mu);
+    while (q->count == 0 && !q->closed) {
+        double remain = deadline_mono - now_s();
+        if (remain <= 0) break;
+        struct timespec abst;
+        clock_gettime(CLOCK_REALTIME, &abst);
+        abst.tv_nsec += (long)(remain * 1e9);
+        abst.tv_sec += abst.tv_nsec / 1000000000L;
+        abst.tv_nsec %= 1000000000L;
+        pthread_cond_timedwait(&q->cv, &q->mu, &abst);
+    }
+    long id = -1;
+    if (q->count > 0) {
+        id = q->buf[q->head];
+        q->head = (q->head + 1) % QDEPTH;
+        q->count--;
+    }
+    pthread_mutex_unlock(&q->mu);
+    return id;
+}
+
+/* ---------- shard threads ---------- */
+
+static float g_weights[D];
+static float *g_rows;                /* REQUESTS x D request payloads */
+static double *g_send, *g_done;      /* per-request timestamps */
+static volatile size_t g_completed;  /* across all shards */
+
+typedef struct {
+    queue q;
+    pthread_t thread;
+    int use_simd;
+} shard;
+
+static void *shard_main(void *arg) {
+    shard *sh = arg;
+    float *batch = malloc(MAX_BATCH * D * 4);
+    float out[MAX_BATCH];
+    uint32_t ids[MAX_BATCH];
+    for (;;) {
+        long first = q_pop_block(&sh->q);
+        if (first < 0) break;
+        double deadline = now_s() + MAX_WAIT_US * 1e-6;
+        size_t n = 0;
+        ids[n++] = (uint32_t)first;
+        while (n < MAX_BATCH) {
+            long id = q_pop_until(&sh->q, deadline);
+            if (id < 0) break;
+            ids[n++] = (uint32_t)id;
+        }
+        for (size_t i = 0; i < n; i++)
+            memcpy(batch + i * D, g_rows + (size_t)ids[i] * D, D * 4);
+        packed_batch pb = pack_rows(batch, n, D, D, PRECISION);
+        forward_into(&pb, g_weights, out, sh->use_simd);
+        pb_free(&pb);
+        clobber(out);
+        double tdone = now_s();
+        for (size_t i = 0; i < n; i++) g_done[ids[i]] = tdone;
+        __atomic_add_fetch(&g_completed, n, __ATOMIC_RELEASE);
+    }
+    free(batch);
+    return NULL;
+}
+
+static void shards_start(shard *shs, size_t n, int use_simd) {
+    g_completed = 0;
+    for (size_t s = 0; s < n; s++) {
+        q_init(&shs[s].q);
+        shs[s].use_simd = use_simd;
+        pthread_create(&shs[s].thread, NULL, shard_main, &shs[s]);
+    }
+}
+
+static void shards_stop(shard *shs, size_t n) {
+    for (size_t s = 0; s < n; s++) q_close(&shs[s].q);
+    for (size_t s = 0; s < n; s++) pthread_join(shs[s].thread, NULL);
+}
+
+/* ---------- load generation ---------- */
+
+typedef struct {
+    double elapsed_s;
+    double lat[REQUESTS]; /* sorted on return */
+} run_out;
+
+static void finish_latencies(run_out *out) {
+    for (size_t i = 0; i < REQUESTS; i++) out->lat[i] = g_done[i] - g_send[i];
+    qsort(out->lat, REQUESTS, sizeof(double), cmp_double);
+}
+
+/* Closed loop: a fixed window of outstanding requests; every
+ * completion funds the next dispatch (mirror of benches/serve.rs). */
+static void closed_loop(size_t n_shards, int use_simd, run_out *out) {
+    shard *shs = calloc(n_shards, sizeof(shard));
+    shards_start(shs, n_shards, use_simd);
+    size_t window = n_shards * 64;
+    if (window > REQUESTS) window = REQUESTS;
+    size_t sent = 0;
+    double t0 = now_s();
+    while (__atomic_load_n(&g_completed, __ATOMIC_ACQUIRE) < REQUESTS) {
+        size_t done = __atomic_load_n(&g_completed, __ATOMIC_ACQUIRE);
+        while (sent < REQUESTS && sent - done < window) {
+            g_send[sent] = now_s();
+            while (q_push(&shs[sent % n_shards].q, (uint32_t)sent) < 0) usleep(5);
+            sent++;
+        }
+        usleep(20);
+    }
+    out->elapsed_s = now_s() - t0;
+    shards_stop(shs, n_shards);
+    free(shs);
+    finish_latencies(out);
+}
+
+/* Open loop: arrivals on the fixed schedule t0 + i/rate; latency is
+ * charged from the scheduled arrival (no coordinated omission). */
+static void open_loop(size_t n_shards, double rate, int use_simd, run_out *out) {
+    shard *shs = calloc(n_shards, sizeof(shard));
+    shards_start(shs, n_shards, use_simd);
+    double gap = 1.0 / rate;
+    double t0 = now_s();
+    for (size_t i = 0; i < REQUESTS; i++) {
+        double sched = t0 + gap * (double)i;
+        double wait = sched - now_s();
+        if (wait > 0) usleep((useconds_t)(wait * 1e6));
+        g_send[i] = sched;
+        while (q_push(&shs[i % n_shards].q, (uint32_t)i) < 0) usleep(5);
+    }
+    while (__atomic_load_n(&g_completed, __ATOMIC_ACQUIRE) < REQUESTS) usleep(50);
+    out->elapsed_s = now_s() - t0;
+    shards_stop(shs, n_shards);
+    free(shs);
+    finish_latencies(out);
+}
+
+/* Training-style competitor: loop the dense pack + forward until told
+ * to stop, like a co-located trainer epoch. */
+static volatile int g_train_stop;
+
+static void *train_main(void *arg) {
+    (void)arg;
+    pcg32 rng = pcg_seeded(0x7121);
+    size_t mb = 32;
+    float *rows = malloc(mb * D * 4), w[D], out_[32];
+    for (size_t j = 0; j < mb * D; j++) rows[j] = rng_f32(&rng);
+    for (size_t j = 0; j < D; j++) w[j] = rng_gauss(&rng);
+    while (!g_train_stop) {
+        packed_batch pb = pack_rows(rows, mb, D, D, PRECISION);
+        forward_into(&pb, w, out_, simd_active());
+        pb_free(&pb);
+        clobber(out_);
+    }
+    free(rows);
+    return NULL;
+}
+
+/* ---------- emit (JsonReport schema + serve extras) ---------- */
+
+static char serve_json[65536];
+static size_t serve_len;
+
+static double emit_serve(const char *name, const run_out *out, double offered) {
+    double mean = 0;
+    for (size_t i = 0; i < REQUESTS; i++) mean += out->lat[i];
+    mean /= REQUESTS;
+    double p50 = pct_sorted(out->lat, REQUESTS, 50.0);
+    double p95 = pct_sorted(out->lat, REQUESTS, 95.0);
+    double p99 = pct_sorted(out->lat, REQUESTS, 99.0);
+    double p999 = pct_sorted(out->lat, REQUESTS, 99.9);
+    double pps = (double)REQUESTS / out->elapsed_s;
+    printf("%-28s %10.0f pred/s  p50 %7.1fus  p99 %7.1fus  p999 %7.1fus\n", name, pps, p50 * 1e6,
+           p99 * 1e6, p999 * 1e6);
+    serve_len += (size_t)snprintf(
+        serve_json + serve_len, sizeof serve_json - serve_len,
+        "%s{\"name\": \"%s\", \"mean_s\": %.9e, \"p50_s\": %.9e, \"p95_s\": %.9e, "
+        "\"samples\": %d, \"predictions_per_s\": %.9e, \"p99_s\": %.9e, \"p999_s\": %.9e",
+        serve_len ? ", " : "", name, mean, p50, p95, REQUESTS, pps, p99, p999);
+    if (offered > 0)
+        serve_len += (size_t)snprintf(serve_json + serve_len, sizeof serve_json - serve_len,
+                                      ", \"offered_per_s\": %.9e", offered);
+    serve_len += (size_t)snprintf(serve_json + serve_len, sizeof serve_json - serve_len, "}");
+    return pps;
+}
+
+int main(int argc, char **argv) {
+    const char *out_path = argc > 1 ? argv[1] : "BENCH_serve.json";
+    int use_simd = simd_active();
+    long cores = sysconf(_SC_NPROCESSORS_ONLN);
+    printf("# serve twin bench (d=%d, P=%d, max_batch=%d, max_wait=%dus), avx2 %s, %ld core(s)\n",
+           D, PRECISION, MAX_BATCH, MAX_WAIT_US, use_simd ? "active" : "INACTIVE", cores);
+
+    pcg32 rng = pcg_seeded(0x5eed);
+    g_rows = malloc((size_t)REQUESTS * D * 4);
+    g_send = malloc(REQUESTS * sizeof(double));
+    g_done = malloc(REQUESTS * sizeof(double));
+    for (size_t j = 0; j < (size_t)REQUESTS * D; j++) g_rows[j] = rng_f32(&rng) * 2.0f - 1.0f;
+    for (size_t j = 0; j < D; j++) g_weights[j] = rng_gauss(&rng);
+
+    run_out *out = malloc(sizeof(run_out));
+
+    double pps_s4 = 0;
+    size_t shard_counts[] = {1, 4};
+    for (int i = 0; i < 2; i++) {
+        char name[64];
+        snprintf(name, sizeof name, "serve_closed_s%zu", shard_counts[i]);
+        closed_loop(shard_counts[i], use_simd, out);
+        double pps = emit_serve(name, out, 0);
+        if (shard_counts[i] == 4) pps_s4 = pps;
+    }
+
+    double rate = pps_s4 * 0.7;
+    if (rate < 1000.0) rate = 1000.0;
+    open_loop(4, rate, use_simd, out);
+    emit_serve("serve_open_s4", out, rate);
+
+    g_train_stop = 0;
+    pthread_t trainer;
+    pthread_create(&trainer, NULL, train_main, NULL);
+    closed_loop(4, use_simd, out);
+    g_train_stop = 1;
+    pthread_join(trainer, NULL);
+    emit_serve("serve_train_concurrent_s4", out, 0);
+
+    FILE *f = fopen(out_path, "w");
+    if (!f) {
+        perror(out_path);
+        return 1;
+    }
+    fprintf(f,
+            "{\"bench\": \"serve\", \"schema\": 1, \"note\": \"baseline measured by "
+            "ci/serve_twin.c (gcc -O2 -pthread twin of serve::shard admission batching, "
+            "same pack+forward kernels as the kernel twin) on a %ld-core container — "
+            "shard counts above the core count measure queueing, not scaling; "
+            "regenerate with cargo bench --bench serve --features affinity,simd\", "
+            "\"results\": [%s]}\n",
+            cores, serve_json);
+    fclose(f);
+    printf("wrote %s\n", out_path);
+    free(g_rows);
+    free(g_send);
+    free(g_done);
+    free(out);
+    return 0;
+}

@@ -1,0 +1,239 @@
+//! Serve-tier benchmark: the in-process shard pipeline — admission
+//! batching in front of the training forward kernel — measured
+//! closed-loop (capacity), open-loop (paced arrivals, no coordinated
+//! omission), and closed-loop again while a training-style forward
+//! loop competes for the cores.
+//!
+//! Unlike the kernel benches this does not time a closure: each run
+//! drives real `serve::shard` threads through their admission queues
+//! and records one latency sample per request, so the `mean_s`/`p50_s`
+//! columns are *per-request end-to-end latency* and the extra
+//! `predictions_per_s` column is the measured throughput. Names carry
+//! the shard count as an `s<N>` axis (`serve_closed_s4`) so the
+//! regression gate compares like against like.
+//!
+//! Usage: `cargo bench --bench serve` (add `--features affinity,simd`
+//! for pinned shards and the SIMD forward). Writes `BENCH_serve.json`.
+
+use p4sgd::bench::{BenchResult, JsonReport};
+use p4sgd::checkpoint::Checkpoint;
+use p4sgd::config::ServeConfig;
+use p4sgd::data::quantize::pack_rows;
+use p4sgd::engine::bitserial::forward_into;
+use p4sgd::protocol::serve as wire;
+use p4sgd::serve::shard::{self, Request, Response};
+use p4sgd::serve::{Model, ModelCell};
+use p4sgd::util::rng::Pcg32;
+use p4sgd::util::stats::Samples;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+const D: usize = 256;
+const PRECISION: u32 = 4;
+const SEED: u64 = 0x5eed_5e12e;
+const REQUESTS: usize = 4096;
+
+fn model() -> Model {
+    let mut rng = Pcg32::seeded(SEED);
+    let weights: Vec<f32> = (0..D).map(|_| rng.f32() * 2.0 - 1.0).collect();
+    Model::from_checkpoint(&Checkpoint {
+        generation: 1,
+        epoch: 1,
+        rounds_done: 0,
+        rng: SEED,
+        model: weights,
+        loss_curve: Vec::new(),
+    })
+}
+
+/// Pre-built request frames: payload encoding is not what's under
+/// test, so it happens before the clock starts.
+fn frames(n: usize) -> Vec<Request> {
+    (0..n as u32)
+        .map(|id| {
+            let mut rng = Pcg32::new(SEED, id as u64);
+            let row: Vec<f32> = (0..D).map(|_| rng.f32() * 2.0 - 1.0).collect();
+            Request { id, src: 0, pkt: wire::request(id, &row) }
+        })
+        .collect()
+}
+
+struct Shards {
+    handles: Vec<shard::ShardHandle>,
+    resp_rx: mpsc::Receiver<Response>,
+}
+
+fn spawn_shards(n: usize, cell: &Arc<ModelCell>) -> Shards {
+    let cfg = ServeConfig { shards: n, ..ServeConfig::default() };
+    let (resp_tx, resp_rx) = mpsc::channel::<Response>();
+    let handles = (0..n)
+        .map(|s| {
+            shard::spawn(s, s, cfg.clone(), PRECISION, false, Arc::clone(cell), resp_tx.clone())
+        })
+        .collect();
+    // Shards hold the only senders: the channel closes when they stop.
+    Shards { handles, resp_rx }
+}
+
+struct RunOut {
+    lat: Samples,
+    ok: u64,
+    elapsed_s: f64,
+}
+
+/// Closed loop: keep a fixed window of requests outstanding; each
+/// completion immediately funds the next dispatch. Measures capacity.
+fn closed_loop(shards: usize, cell: &Arc<ModelCell>) -> RunOut {
+    let mut sv = spawn_shards(shards, cell);
+    let reqs = frames(REQUESTS);
+    let window = (shards * 64).min(REQUESTS);
+    let mut inflight: HashMap<u32, Instant> = HashMap::with_capacity(window);
+    let mut lat = Samples::new();
+    let mut ok = 0u64;
+    let start = Instant::now();
+    let mut reqs = reqs.into_iter();
+    for r in reqs.by_ref().take(window) {
+        inflight.insert(r.id, Instant::now());
+        sv.handles[r.id as usize % shards].dispatch(r);
+    }
+    while !inflight.is_empty() {
+        let resp = sv.resp_rx.recv_timeout(Duration::from_secs(5)).expect("shard pipeline stalled");
+        let done = Instant::now();
+        let (id, _epoch, _score) =
+            wire::decode_response(&resp.pkt).expect("bench sends only valid frames");
+        if let Some(sent) = inflight.remove(&id) {
+            lat.push((done - sent).as_secs_f64());
+            ok += 1;
+        }
+        if let Some(r) = reqs.next() {
+            inflight.insert(r.id, Instant::now());
+            sv.handles[r.id as usize % shards].dispatch(r);
+        }
+    }
+    let elapsed_s = start.elapsed().as_secs_f64();
+    for h in sv.handles {
+        h.stop();
+    }
+    RunOut { lat, ok, elapsed_s }
+}
+
+/// Open loop: arrivals follow a fixed schedule (`start + i/rate`)
+/// regardless of completions, so queueing delay is charged to the
+/// latency numbers instead of silently thinning the arrival stream
+/// (coordinated omission).
+fn open_loop(shards: usize, rate: f64, cell: &Arc<ModelCell>) -> RunOut {
+    let mut sv = spawn_shards(shards, cell);
+    let reqs = frames(REQUESTS);
+    let gap = Duration::from_secs_f64(1.0 / rate);
+    let mut inflight: HashMap<u32, Instant> = HashMap::new();
+    let mut lat = Samples::new();
+    let mut ok = 0u64;
+    let start = Instant::now();
+    let mut reqs = reqs.into_iter().enumerate().peekable();
+    loop {
+        let now = Instant::now();
+        // Dispatch everything whose scheduled arrival has passed.
+        while let Some((i, _)) = reqs.peek() {
+            let sched = start + gap.mul_f64(*i as f64);
+            if sched > now {
+                break;
+            }
+            let (_, r) = reqs.next().unwrap();
+            // Latency is measured from the *scheduled* arrival, so a
+            // late dispatch charges the scheduler, not the shard.
+            inflight.insert(r.id, sched);
+            sv.handles[r.id as usize % shards].dispatch(r);
+        }
+        for resp in sv.resp_rx.try_iter() {
+            let done = Instant::now();
+            let (id, _, _) = wire::decode_response(&resp.pkt).expect("bench sends only valid frames");
+            if let Some(sent) = inflight.remove(&id) {
+                lat.push((done - sent).as_secs_f64());
+                ok += 1;
+            }
+        }
+        if reqs.peek().is_none() && inflight.is_empty() {
+            break;
+        }
+        std::thread::sleep(Duration::from_micros(20));
+    }
+    let elapsed_s = start.elapsed().as_secs_f64();
+    for h in sv.handles {
+        h.stop();
+    }
+    RunOut { lat, ok, elapsed_s }
+}
+
+/// A training-style competitor: loops the dense pack + forward on its
+/// own data until told to stop, like a co-located trainer epoch.
+fn training_load(stop: Arc<AtomicBool>) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        let mut rng = Pcg32::seeded(SEED ^ 0x7121_19e2);
+        let mb = 32;
+        let rows: Vec<f32> = (0..mb * D).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        let weights: Vec<f32> = (0..D).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        let mut out = vec![0.0f32; mb];
+        while !stop.load(Ordering::Relaxed) {
+            let pb = pack_rows(&rows, mb, D, D, PRECISION);
+            forward_into(&pb, &weights, &mut out);
+            std::hint::black_box(&mut out);
+        }
+    })
+}
+
+fn push(json: &mut JsonReport, name: &str, out: &RunOut, offered_per_s: Option<f64>) {
+    let r = BenchResult { name: name.to_string(), summary: out.lat.summary() };
+    println!("{}", r.report());
+    let pps = out.ok as f64 / out.elapsed_s;
+    let mut extra = vec![
+        ("predictions_per_s", pps),
+        ("p99_s", out.lat.percentile(99.0)),
+        ("p999_s", out.lat.percentile(99.9)),
+    ];
+    if let Some(rate) = offered_per_s {
+        extra.push(("offered_per_s", rate));
+    }
+    json.push(&r, &extra);
+    println!(
+        "  {:>12.0} predictions/s  p99 {:.1}us  p999 {:.1}us",
+        pps,
+        out.lat.percentile(99.0) * 1e6,
+        out.lat.percentile(99.9) * 1e6,
+    );
+}
+
+fn main() {
+    let cell = Arc::new(ModelCell::new(model()));
+    let mut json = JsonReport::new("serve");
+
+    // Capacity across the shard axis.
+    let mut closed_s4 = 0.0;
+    for shards in [1usize, 4] {
+        let out = closed_loop(shards, &cell);
+        if shards == 4 {
+            closed_s4 = out.ok as f64 / out.elapsed_s;
+        }
+        push(&mut json, &format!("serve_closed_s{shards}"), &out, None);
+    }
+
+    // Open loop at 70% of measured s=4 capacity: latency under a
+    // sustainable paced load, not at the saturation cliff.
+    let rate = (closed_s4 * 0.7).max(1000.0);
+    let out = open_loop(4, rate, &cell);
+    push(&mut json, "serve_open_s4", &out, Some(rate));
+
+    // Serving while a trainer hammers the same cores.
+    let stop = Arc::new(AtomicBool::new(false));
+    let trainer = training_load(Arc::clone(&stop));
+    let out = closed_loop(4, &cell);
+    stop.store(true, Ordering::Relaxed);
+    trainer.join().unwrap();
+    push(&mut json, "serve_train_concurrent_s4", &out, None);
+
+    match json.write(std::path::Path::new(".")) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_serve.json: {e}"),
+    }
+}

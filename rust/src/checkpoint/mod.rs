@@ -70,8 +70,10 @@ pub struct SaveReceipt {
 }
 
 /// FNV-1a 64 over the serialized body (cheap, no dependency; catches
-/// truncation and bit rot, not adversaries).
-fn fnv1a(bytes: &[u8]) -> u64 {
+/// truncation and bit rot, not adversaries). Shared with the
+/// content-addressed distribution store (`serve::dist`), which names
+/// artifacts by this hash.
+pub(crate) fn fnv1a(bytes: &[u8]) -> u64 {
     let mut h: u64 = 0xcbf29ce484222325;
     for &b in bytes {
         h ^= b as u64;
@@ -214,19 +216,15 @@ fn sync_dir(dir: &Path) -> Result<()> {
     Ok(())
 }
 
-/// The highest-epoch **valid** checkpoint under `dir`, or `None` when
-/// the directory is missing or holds none. Candidates are ordered by
-/// the epoch in the file name (no parsing or checksumming of files
-/// that will lose anyway) and loaded newest-first until one validates;
-/// unreadable or corrupt files are skipped (an interrupted save must
-/// not poison recovery).
-pub fn latest(dir: &Path) -> Result<Option<Checkpoint>> {
+/// Scan `dir` for `ckpt-<epoch>.bin` names, newest epoch first. Name
+/// parsing only — no file contents are read.
+fn candidates(dir: &Path) -> Result<Vec<(usize, PathBuf)>> {
     let entries = match std::fs::read_dir(dir) {
         Ok(e) => e,
-        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
         Err(e) => return Err(e).with_context(|| format!("scanning {}", dir.display())),
     };
-    let mut candidates: Vec<(usize, PathBuf)> = Vec::new();
+    let mut out: Vec<(usize, PathBuf)> = Vec::new();
     for entry in entries {
         let entry = entry?;
         let name = entry.file_name();
@@ -235,15 +233,120 @@ pub fn latest(dir: &Path) -> Result<Option<Checkpoint>> {
             continue;
         };
         let Ok(epoch) = num.parse::<usize>() else { continue };
-        candidates.push((epoch, entry.path()));
+        out.push((epoch, entry.path()));
     }
-    candidates.sort_by(|a, b| b.0.cmp(&a.0));
-    for (_, path) in candidates {
+    out.sort_by(|a, b| b.0.cmp(&a.0));
+    Ok(out)
+}
+
+/// The highest-epoch **valid** checkpoint under `dir`, or `None` when
+/// the directory is missing or holds none. Candidates are ordered by
+/// the epoch in the file name (no parsing or checksumming of files
+/// that will lose anyway) and loaded newest-first until one validates;
+/// unreadable or corrupt files are skipped (an interrupted save must
+/// not poison recovery).
+pub fn latest(dir: &Path) -> Result<Option<Checkpoint>> {
+    for (_, path) in candidates(dir)? {
         if let Ok(ck) = Checkpoint::load(&path) {
             return Ok(Some(ck));
         }
     }
     Ok(None)
+}
+
+/// What the newest candidate *name* looked like at the last poll: the
+/// watcher's change detector. Comparing `(epoch, mtime, len)` of the
+/// highest-epoch name catches a new epoch landing, a same-epoch
+/// re-publish (the atomic rename bumps the mtime), and a torn file
+/// growing — everything short of a byte-identical in-place rewrite,
+/// which the atomic save path cannot produce.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct HighWaterMark {
+    epoch: usize,
+    mtime: Option<std::time::SystemTime>,
+    len: u64,
+}
+
+/// An incremental, cheap re-check of [`latest`]: the serve tier polls
+/// its checkpoint directory between request batches, and almost every
+/// poll finds nothing new. [`latest`] re-reads and re-checksums every
+/// candidate file on each call; `Watcher::poll` instead remembers a
+/// high-water mark — the newest candidate's `(epoch, mtime, len)` from
+/// the file *name and metadata only* — and returns immediately when it
+/// is unchanged. The steady-state poll cost is one `read_dir` walk and
+/// one `stat`: no file contents are opened, parsed, or checksummed.
+///
+/// When the mark moves, the watcher falls back to exactly the
+/// [`latest`] discipline (load newest-first, skip torn/corrupt files),
+/// so a torn newest file degrades to the newest *valid* checkpoint —
+/// and, because the torn file's metadata is then part of the mark,
+/// subsequent polls are O(1) again instead of re-parsing the torn file
+/// forever. [`Watcher::poll`] yields a checkpoint only when it differs
+/// (by epoch) from the one already delivered, so callers can hot-swap
+/// on `Some` unconditionally.
+#[derive(Debug)]
+pub struct Watcher {
+    dir: PathBuf,
+    mark: Option<HighWaterMark>,
+    delivered_epoch: Option<usize>,
+}
+
+impl Watcher {
+    /// Watch `dir` (which may not exist yet — the trainer creates it on
+    /// its first save).
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        Self { dir: dir.into(), mark: None, delivered_epoch: None }
+    }
+
+    /// The directory being watched.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// The epoch of the last checkpoint this watcher delivered.
+    pub fn delivered_epoch(&self) -> Option<usize> {
+        self.delivered_epoch
+    }
+
+    /// Re-check the directory: `Ok(Some)` delivers a newly validated
+    /// checkpoint (always a different epoch than the previous
+    /// delivery), `Ok(None)` means nothing new — the overwhelmingly
+    /// common answer, served from the high-water mark without touching
+    /// any file contents.
+    pub fn poll(&mut self) -> Result<Option<Checkpoint>> {
+        let cands = candidates(&self.dir)?;
+        let Some((newest_epoch, newest_path)) = cands.first() else {
+            self.mark = None;
+            return Ok(None);
+        };
+        let meta = std::fs::metadata(newest_path).ok();
+        let mark = HighWaterMark {
+            epoch: *newest_epoch,
+            mtime: meta.as_ref().and_then(|m| m.modified().ok()),
+            len: meta.map_or(0, |m| m.len()),
+        };
+        if self.mark == Some(mark) {
+            return Ok(None);
+        }
+        // Something moved: validate newest-first, exactly like
+        // `latest`, then record the mark so the verdict — including "the
+        // newest file is torn, serve the older one" — is cached.
+        let mut found = None;
+        for (_, path) in &cands {
+            if let Ok(ck) = Checkpoint::load(path) {
+                found = Some(ck);
+                break;
+            }
+        }
+        self.mark = Some(mark);
+        match found {
+            Some(ck) if self.delivered_epoch != Some(ck.epoch) => {
+                self.delivered_epoch = Some(ck.epoch);
+                Ok(Some(ck))
+            }
+            _ => Ok(None),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -348,6 +451,63 @@ mod tests {
             .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
             .collect();
         assert_eq!(names, vec!["ckpt-000003.bin"], "temp files must not linger: {names:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn watcher_delivers_once_then_polls_cheaply() {
+        let dir = tmpdir("watch");
+        let mut w = Watcher::new(&dir);
+        assert!(w.poll().unwrap().is_none(), "missing dir is quiet, not an error");
+        sample(2).save(&dir).unwrap();
+        let got = w.poll().unwrap().expect("new checkpoint delivered");
+        assert_eq!(got.epoch, 2);
+        assert_eq!(w.delivered_epoch(), Some(2));
+        // Steady state: repeated polls with nothing new deliver nothing.
+        for _ in 0..3 {
+            assert!(w.poll().unwrap().is_none());
+        }
+        sample(5).save(&dir).unwrap();
+        assert_eq!(w.poll().unwrap().expect("newer epoch").epoch, 5);
+        assert!(w.poll().unwrap().is_none(), "epoch 5 delivered exactly once");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn watcher_falls_back_past_a_torn_newest_file() {
+        // The Watcher must match latest()'s torn-rename discipline: a
+        // higher-epoch name holding garbage yields the newest *valid*
+        // checkpoint — and must not be re-delivered or re-parsed on
+        // every subsequent poll.
+        let dir = tmpdir("watch-torn");
+        let mut w = Watcher::new(&dir);
+        sample(2).save(&dir).unwrap();
+        assert_eq!(w.poll().unwrap().expect("epoch 2").epoch, 2);
+        let torn = &sample(4).to_bytes()[..20];
+        std::fs::write(dir.join("ckpt-000004.bin"), torn).unwrap();
+        // The mark moved (new newest name) but validation falls back to
+        // epoch 2, which was already delivered — so nothing new.
+        assert!(w.poll().unwrap().is_none(), "torn newest must not re-deliver epoch 2");
+        // The torn file is now part of the high-water mark: quiet polls
+        // stay quiet instead of re-reading it forever.
+        assert!(w.poll().unwrap().is_none());
+        assert_eq!(w.delivered_epoch(), Some(2));
+        // A real epoch 6 landing is still seen immediately.
+        sample(6).save(&dir).unwrap();
+        assert_eq!(w.poll().unwrap().expect("epoch 6").epoch, 6);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn watcher_sees_a_fresh_watcher_catch_up_to_existing_state() {
+        // A serve replica restarting mid-training must pick up the
+        // newest checkpoint on its first poll, not wait for the next
+        // save.
+        let dir = tmpdir("watch-restart");
+        sample(3).save(&dir).unwrap();
+        sample(7).save(&dir).unwrap();
+        let mut w = Watcher::new(&dir);
+        assert_eq!(w.poll().unwrap().expect("existing newest").epoch, 7);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -321,6 +321,40 @@ impl Default for FaultConfig {
     }
 }
 
+/// The inference tier (`--role serve`): shard layout, admission
+/// batching, and checkpoint refresh cadence. A serve replica loads the
+/// newest valid checkpoint, publishes it behind an atomic pointer, and
+/// answers `protocol::serve` requests on shared-nothing per-core
+/// shards; see `serve::run`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeConfig {
+    /// Serve replicas the `cluster` launcher co-spawns (0 = none).
+    /// Replica `r` binds node `net::serve_node(workers, switches, r)`.
+    pub replicas: usize,
+    /// Shared-nothing shards per replica — one pinned thread each,
+    /// requests dispatched by `req_id % shards`.
+    pub shards: usize,
+    /// Admission batch flush size: a shard packs and scores as soon as
+    /// this many requests are queued.
+    pub max_batch: usize,
+    /// Admission batch flush deadline, µs: a partial batch is scored
+    /// once its oldest request has waited this long.
+    pub max_wait_us: u64,
+    /// Checkpoint re-check period, ms (the `checkpoint::Watcher` poll
+    /// and, when `store` is set, the distribution fetch cadence).
+    pub poll_ms: u64,
+    /// Content-addressed distribution store to fetch checkpoints from
+    /// (`serve::dist`); `None` = watch `cluster.checkpoint_dir`
+    /// directly.
+    pub store: Option<String>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self { replicas: 0, shards: 2, max_batch: 32, max_wait_us: 200, poll_ms: 50, store: None }
+    }
+}
+
 /// The complete run description.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct SystemConfig {
@@ -329,6 +363,7 @@ pub struct SystemConfig {
     pub train: TrainConfig,
     pub net: NetConfig,
     pub fault: FaultConfig,
+    pub serve: ServeConfig,
     pub backend: Option<Backend>,
 }
 
@@ -378,6 +413,12 @@ impl SystemConfig {
             "chaos.burst_prob",
             "chaos.burst_ns",
             "chaos.burst_len",
+            "serve.replicas",
+            "serve.shards",
+            "serve.max_batch",
+            "serve.max_wait_us",
+            "serve.poll_ms",
+            "serve.store",
             "backend",
         ];
         for k in doc.keys() {
@@ -464,6 +505,14 @@ impl SystemConfig {
                     burst_ns: doc.int_or("chaos.burst_ns", d.net.chaos.burst_ns as i64) as u64,
                     burst_len: doc.int_or("chaos.burst_len", d.net.chaos.burst_len as i64) as u32,
                 },
+            },
+            serve: ServeConfig {
+                replicas: doc.int_or("serve.replicas", d.serve.replicas as i64) as usize,
+                shards: doc.int_or("serve.shards", d.serve.shards as i64) as usize,
+                max_batch: doc.int_or("serve.max_batch", d.serve.max_batch as i64) as usize,
+                max_wait_us: doc.int_or("serve.max_wait_us", d.serve.max_wait_us as i64) as u64,
+                poll_ms: doc.int_or("serve.poll_ms", d.serve.poll_ms as i64) as u64,
+                store: doc.get("serve.store").and_then(|v| v.as_str()).map(str::to_string),
             },
             backend: match doc.get("backend") {
                 None => None,
@@ -565,16 +614,38 @@ impl SystemConfig {
         if c.base_port < 1024 {
             bail!("cluster.base_port must be >= 1024 (unprivileged range), got {}", c.base_port);
         }
+        let sv = &self.serve;
+        if sv.replicas > 8 {
+            bail!("serve.replicas must be <= 8, got {}", sv.replicas);
+        }
+        if sv.shards == 0 || sv.shards > 32 {
+            bail!("serve.shards must be in 1..=32, got {}", sv.shards);
+        }
+        if sv.max_batch == 0 || sv.max_batch > 1024 {
+            bail!("serve.max_batch must be in 1..=1024, got {}", sv.max_batch);
+        }
+        if sv.max_wait_us > 1_000_000 {
+            bail!("serve.max_wait_us must be <= 1s, got {}", sv.max_wait_us);
+        }
+        if sv.poll_ms == 0 || sv.poll_ms > 60_000 {
+            bail!("serve.poll_ms must be in 1..=60000, got {}", sv.poll_ms);
+        }
+        if sv.replicas > 0 && c.checkpoint_dir.is_none() && sv.store.is_none() {
+            bail!("serve.replicas requires cluster.checkpoint_dir or serve.store (a replica \
+                   needs somewhere to load a model from)");
+        }
         let sw = &self.switch;
         // flat mode needs workers + switch + coordinator ports; a tree
-        // swaps the one switch for `leaves` leaves + a spine.
-        let extra = if sw.tree { sw.leaves + 2 } else { 2 };
+        // swaps the one switch for `leaves` leaves + a spine; serve
+        // replicas bind past the whole training plan (net::serve_node).
+        let extra = (if sw.tree { sw.leaves + 2 } else { 2 }) + sv.replicas;
         if c.base_port as usize + c.workers + extra > 65536 {
             bail!(
                 "cluster.base_port {} leaves no room for {} workers + switch(es) + coordinator \
-                 below port 65536",
+                 + {} serve replica(s) below port 65536",
                 c.base_port,
-                c.workers
+                c.workers,
+                sv.replicas
             );
         }
         if sw.tree {

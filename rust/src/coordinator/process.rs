@@ -833,10 +833,12 @@ pub fn write_report(path: &Path, report: &TrainReport, n_samples: usize) -> std:
 // ---------------------------------------------------------------------------
 
 /// The OS processes of one launched cluster. `switches` is the single
-/// flat switch, or the spine followed by every leaf in tree mode.
+/// flat switch, or the spine followed by every leaf in tree mode;
+/// `serves` is the co-launched serve replicas (usually empty).
 pub struct ClusterProcs {
     pub switches: Vec<Child>,
     pub workers: Vec<Child>,
+    pub serves: Vec<Child>,
     pub coordinator: Child,
 }
 
@@ -849,22 +851,33 @@ impl ClusterProcs {
         for w in &mut self.workers {
             let _ = w.kill();
         }
+        for r in &mut self.serves {
+            let _ = r.kill();
+        }
         let _ = self.coordinator.kill();
     }
 }
 
+/// Which bucket a spawned role child lands in.
+enum Bucket {
+    Switch,
+    Worker,
+    Serve,
+}
+
 /// Spawn one cluster from `bin`: the switch process(es), `workers`
-/// worker processes, and a coordinator, each as `bin train <common>
-/// --role ...`. `leaves == 0` launches the flat plan (one `--role
-/// switch`); `leaves > 0` launches a spine plus that many leaves.
-/// Every process derives the same config and dataset from `common`, so
-/// the options must be identical across roles — which this launcher
-/// guarantees by construction.
+/// worker processes, `serves` serve replicas, and a coordinator, each
+/// as `bin train <common> --role ...`. `leaves == 0` launches the flat
+/// plan (one `--role switch`); `leaves > 0` launches a spine plus that
+/// many leaves. Every process derives the same config and dataset from
+/// `common`, so the options must be identical across roles — which
+/// this launcher guarantees by construction.
 pub fn spawn_cluster(
     bin: &Path,
     common: &[String],
     workers: usize,
     leaves: usize,
+    serves: usize,
 ) -> std::io::Result<ClusterProcs> {
     let spawn_role = |role_args: &[&str]| -> std::io::Result<Child> {
         Command::new(bin)
@@ -877,15 +890,16 @@ pub fn spawn_cluster(
     let mut procs = ClusterProcs {
         switches: Vec::with_capacity(leaves + 1),
         workers: Vec::with_capacity(workers),
+        serves: Vec::with_capacity(serves),
         coordinator: spawn_role(&["--role", "coordinator"])?,
     };
-    let mut spawn_into = |procs: &mut ClusterProcs, args: &[&str], switch: bool| {
+    let mut spawn_into = |procs: &mut ClusterProcs, args: &[&str], bucket: Bucket| {
         match spawn_role(args) {
             Ok(child) => {
-                if switch {
-                    procs.switches.push(child);
-                } else {
-                    procs.workers.push(child);
+                match bucket {
+                    Bucket::Switch => procs.switches.push(child),
+                    Bucket::Worker => procs.workers.push(child),
+                    Bucket::Serve => procs.serves.push(child),
                 }
                 Ok(())
             }
@@ -896,15 +910,30 @@ pub fn spawn_cluster(
         }
     };
     if leaves == 0 {
-        spawn_into(&mut procs, &["--role", "switch"], true)?;
+        spawn_into(&mut procs, &["--role", "switch"], Bucket::Switch)?;
     } else {
-        spawn_into(&mut procs, &["--role", "spine"], true)?;
+        spawn_into(&mut procs, &["--role", "spine"], Bucket::Switch)?;
         for l in 0..leaves {
-            spawn_into(&mut procs, &["--role", "leaf", "--leaf-id", &l.to_string()], true)?;
+            spawn_into(
+                &mut procs,
+                &["--role", "leaf", "--leaf-id", &l.to_string()],
+                Bucket::Switch,
+            )?;
         }
     }
     for w in 0..workers {
-        spawn_into(&mut procs, &["--role", "worker", "--worker-id", &w.to_string()], false)?;
+        spawn_into(
+            &mut procs,
+            &["--role", "worker", "--worker-id", &w.to_string()],
+            Bucket::Worker,
+        )?;
+    }
+    for r in 0..serves {
+        spawn_into(
+            &mut procs,
+            &["--role", "serve", "--serve-replica", &r.to_string()],
+            Bucket::Serve,
+        )?;
     }
     Ok(procs)
 }

@@ -52,6 +52,7 @@ pub mod pipeline;
 pub mod protocol;
 pub mod repro;
 pub mod runtime;
+pub mod serve;
 pub mod switch;
 pub mod timing;
 pub mod util;

@@ -45,10 +45,12 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("train") => train(args),
         Some("cluster") => cluster(args),
         Some("agg-bench") => agg_bench(args),
+        Some("serve-load") => serve_load(args),
+        Some("distribute") => distribute(args),
         Some("info") => info(),
         Some(other) => bail!("unknown subcommand {other:?}"),
         None => {
-            println!("usage: p4sgd <repro|train|cluster|agg-bench|info> [options]");
+            println!("usage: p4sgd <repro|train|cluster|agg-bench|serve-load|distribute|info> [options]");
             println!("  repro <table1..table4|fig8..fig15|all>");
             println!("  train [--mode mp|dp] [--backend native|pjrt] [--workers M] [--engines N]");
             println!("        [--role thread|switch|leaf|spine|worker|coordinator] [--worker-id W]");
@@ -66,9 +68,20 @@ fn dispatch(args: &Args) -> Result<()> {
             println!("        [--chaos-burst-prob P] [--chaos-burst-ns NS] [--chaos-burst-len K]");
             println!("        [--expect-evictions N] [--expect-resyncs N] [--max-final-loss L]");
             println!("            (smoke assertions)");
+            println!("        [--role serve] [--serve-replica R]  (inference server)");
+            println!("        [--serve-shards S] [--serve-max-batch B] [--serve-max-wait-us US]");
+            println!("        [--serve-poll-ms MS] [--serve-store DIR]  (serve tier tuning)");
             println!("  cluster [same options as train, minus --role/--worker-id]");
             println!("          [--cluster-timeout-secs S]  (launch switch+workers+coordinator)");
+            println!("          [--serve-replicas N]  (co-launch N inference replicas)");
             println!("  agg-bench [--workers M] [--ops N] [--payload K]");
+            println!("  serve-load [--workers M] [--tree] [--leaves L] [--replica R] [--base-port P]");
+            println!("             [--features D] [--requests N] [--concurrency C] [--rate R/S]");
+            println!("             [--timeout-ms MS] [--retries K] [--seed S] [--report PATH]");
+            println!("             [--verify CKPT_DIR] [--precision B] [--min-ok N] [--max-p99-ms X]");
+            println!("             [--stop-server]  (closed/open-loop load against a serve replica)");
+            println!("  distribute --from CKPT_DIR --store STORE  (publish newest checkpoint,");
+            println!("             content-addressed)");
             Ok(())
         }
     }
@@ -122,6 +135,12 @@ fn train(args: &Args) -> Result<()> {
     cfg.switch.pods = args.get("pods").map(str::to_string);
     cfg.switch.jobs = args.get_or("jobs", cfg.switch.jobs);
     cfg.switch.job_slots = args.get_or("job-slots", cfg.switch.job_slots);
+    cfg.serve.replicas = args.get_or("serve-replicas", cfg.serve.replicas);
+    cfg.serve.shards = args.get_or("serve-shards", cfg.serve.shards);
+    cfg.serve.max_batch = args.get_or("serve-max-batch", cfg.serve.max_batch);
+    cfg.serve.max_wait_us = args.get_or("serve-max-wait-us", cfg.serve.max_wait_us);
+    cfg.serve.poll_ms = args.get_or("serve-poll-ms", cfg.serve.poll_ms);
+    cfg.serve.store = args.get("serve-store").map(str::to_string);
     let mode = args.get_or("mode", "mp".to_string());
     let role = args.get_or("role", "thread".to_string());
     if role != "thread" {
@@ -140,10 +159,15 @@ fn train(args: &Args) -> Result<()> {
     }
     cfg.validate()?;
 
-    // Switch roles never touch the dataset or the compute backend.
+    // Switch and serve roles never touch the dataset or the compute
+    // backend.
     match role.as_str() {
         "switch" => return process::run_switch(&cfg),
         "spine" => return process::run_spine(&cfg),
+        "serve" => {
+            let r = args.get_or("serve-replica", 0usize);
+            return p4sgd::serve::run(&cfg, r).map(|_| ());
+        }
         "leaf" => {
             let l: usize = args
                 .get("leaf-id")
@@ -191,7 +215,7 @@ fn train(args: &Args) -> Result<()> {
         ("coordinator", _) => process::run_coordinator(&cfg, &ds)?,
         ("thread", other) => bail!("unknown mode {other:?} (mp|dp)"),
         (other, _) => {
-            bail!("unknown role {other:?} (thread|switch|leaf|spine|worker|coordinator)")
+            bail!("unknown role {other:?} (thread|switch|leaf|spine|worker|coordinator|serve)")
         }
     };
     for (e, l) in report.loss_per_epoch.iter().enumerate() {
@@ -252,6 +276,7 @@ fn cluster(args: &Args) -> Result<()> {
 
     let workers = args.get_or("workers", 4usize);
     let leaves = if args.flag("tree") { args.get_or("leaves", 2usize) } else { 0 };
+    let serves = args.get_or("serve-replicas", 0usize);
     let limit = args.get_or("cluster-timeout-secs", 600u64);
     // Everything after the subcommand passes through to every role
     // verbatim, so all processes derive the identical config/dataset.
@@ -260,7 +285,7 @@ fn cluster(args: &Args) -> Result<()> {
         bail!("cluster spawns every role itself; drop --role/--worker-id");
     }
     let bin = std::env::current_exe().context("resolving our own binary path")?;
-    let mut procs = process::spawn_cluster(&bin, &common, workers, leaves)
+    let mut procs = process::spawn_cluster(&bin, &common, workers, leaves, serves)
         .context("spawning cluster processes")?;
     let verdict = process::wait_deadline(
         &mut procs.coordinator,
@@ -290,6 +315,17 @@ fn cluster(args: &Args) -> Result<()> {
                 eprintln!("cluster: switch {s} still running at teardown — killed");
             }
             _ => {}
+        }
+    }
+    // Serve replicas outlive training by design (they answer queries
+    // until told to leave); the launcher's teardown is the kill.
+    for (r, child) in procs.serves.iter_mut().enumerate() {
+        match child.try_wait() {
+            Ok(Some(rs)) if !rs.success() => eprintln!("cluster: serve {r} exited with {rs}"),
+            Ok(Some(_)) => {}
+            _ => {
+                let _ = child.kill();
+            }
         }
     }
     if !st.success() {
@@ -344,6 +380,97 @@ fn agg_bench(args: &Args) -> Result<()> {
         "in-process AllReduce, {workers} workers, {payload}x32-bit payload, {ops} ops: {}",
         hist.whiskers()
     );
+    Ok(())
+}
+
+/// Drive load against a running serve replica and judge the outcome.
+/// The server node id is derived from the same topology flags the
+/// server was started with (`--workers/--tree/--leaves/--replica`), so
+/// both sides agree on the port plan by construction.
+fn serve_load(args: &Args) -> Result<()> {
+    use p4sgd::serve::{load, Model};
+    use std::time::Duration;
+
+    let workers = args.get_or("workers", 4usize);
+    let leaves = if args.flag("tree") { args.get_or("leaves", 2usize) } else { 0 };
+    let switches = if leaves > 0 { leaves + 1 } else { 1 };
+    let replica = args.get_or("replica", 0usize);
+    let server = p4sgd::net::serve_node(workers, switches, replica);
+    // Clients bind past the full serve-replica range (<= 8 replicas).
+    let client_base = args.get_or("client-base", workers + switches + 1 + 8);
+    let cfg = load::LoadCfg {
+        base_port: args.get_or("base-port", 46000u16),
+        server,
+        client_base,
+        d: args.get_or("features", 64usize),
+        requests: args.get_or("requests", 1000usize),
+        concurrency: args.get_or("concurrency", 4usize),
+        rate: args.get("rate").map(|r| r.parse()).transpose().map_err(
+            |e: std::num::ParseFloatError| anyhow::anyhow!("--rate: {e}"),
+        )?,
+        timeout: Duration::from_millis(args.get_or("timeout-ms", 100u64)),
+        retries: args.get_or("retries", 20u32),
+        seed: args.get_or("seed", 1u64),
+    };
+    let (mut verdict, scores) = load::run(&cfg)?;
+    // Bitwise identity against the training-side forward on the newest
+    // checkpoint (the model the server must be serving).
+    if let Some(dir) = args.get("verify") {
+        let ck = p4sgd::checkpoint::latest(std::path::Path::new(dir))?
+            .context("--verify: no valid checkpoint found")?;
+        let model = Model::from_checkpoint(&ck);
+        let precision = args.get_or("precision", 4u32);
+        load::verify_bitwise(&mut verdict, &scores, &model, precision, cfg.seed)?;
+    }
+    println!(
+        "serve-load [{}]: {}/{} ok ({} rejected, {} lost) in {:.3}s — {:.0} predictions/s, \
+         p50 {:.1}us p99 {:.1}us p99.9 {:.1}us; epochs seen {:?}{}",
+        verdict.mode,
+        verdict.ok,
+        verdict.requests,
+        verdict.rejected,
+        verdict.lost,
+        verdict.elapsed_s,
+        verdict.predictions_per_s,
+        verdict.p50_s * 1e6,
+        verdict.p99_s * 1e6,
+        verdict.p999_s * 1e6,
+        verdict.epochs_seen,
+        match verdict.bitwise_checked {
+            Some(n) => format!("; {n} scores bitwise-verified"),
+            None => String::new(),
+        }
+    );
+    if let Some(path) = args.get("report") {
+        load::write_report(std::path::Path::new(path), &verdict)
+            .with_context(|| format!("writing --report {path}"))?;
+    }
+    if args.flag("stop-server") {
+        load::stop_server(&cfg)?;
+    }
+    // Smoke-lane assertions, mirroring train's --expect-* style.
+    let min_ok = args.get_or("min-ok", 0usize);
+    if verdict.ok < min_ok {
+        bail!("expected >= {min_ok} ok responses, got {}", verdict.ok);
+    }
+    if let Some(bound) = args.get("max-p99-ms") {
+        let bound: f64 = bound.parse().map_err(|e| anyhow::anyhow!("--max-p99-ms: {e}"))?;
+        if verdict.p99_s * 1e3 > bound {
+            bail!("p99 {:.3}ms exceeds bound {bound}ms", verdict.p99_s * 1e3);
+        }
+    }
+    Ok(())
+}
+
+/// Publish the newest valid checkpoint from a training checkpoint
+/// directory into a content-addressed store (see `serve::dist`).
+fn distribute(args: &Args) -> Result<()> {
+    let from = args.get("from").context("distribute requires --from CKPT_DIR")?;
+    let store = args.get("store").context("distribute requires --store STORE")?;
+    let ck = p4sgd::checkpoint::latest(std::path::Path::new(from))?
+        .with_context(|| format!("no valid checkpoint under {from}"))?;
+    let digest = p4sgd::serve::dist::publish(std::path::Path::new(store), &ck)?;
+    println!("distribute: epoch {} -> {store} as {digest}", ck.epoch);
     Ok(())
 }
 

@@ -212,6 +212,56 @@ impl FaultStats {
     }
 }
 
+/// Serve-tier counters, accumulated per shard and merged by the
+/// server's report line. Tracks admission-batching efficiency (how
+/// full flushed batches ran, what triggered the flush) and hot-swap
+/// activity. Zero allocations on the request path — plain counters.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct ServeStats {
+    /// Requests scored (one prediction each).
+    pub served: u64,
+    /// Requests rejected (wrong feature count, no model yet).
+    pub rejected: u64,
+    /// Batches flushed because they reached `max_batch`.
+    pub full_flushes: u64,
+    /// Batches flushed by the `max_wait_us` deadline while partial.
+    pub timeout_flushes: u64,
+    /// Sum of flushed batch sizes (mean batch = `served / flushes`).
+    pub batched_rows: u64,
+    /// Model hot-swaps observed (a batch boundary crossing an epoch).
+    pub swaps: u64,
+}
+
+impl ServeStats {
+    /// Fold another accumulator into this one.
+    pub fn merge(&mut self, other: &Self) {
+        self.served += other.served;
+        self.rejected += other.rejected;
+        self.full_flushes += other.full_flushes;
+        self.timeout_flushes += other.timeout_flushes;
+        self.batched_rows += other.batched_rows;
+        self.swaps += other.swaps;
+    }
+
+    /// Batches flushed, either trigger.
+    pub fn flushes(&self) -> u64 {
+        self.full_flushes + self.timeout_flushes
+    }
+
+    /// "842 served (0 rejected), 31 batches (mean 27.2 rows, 28 full /
+    /// 3 timeout), 2 swaps" — the report line.
+    pub fn summary(&self) -> String {
+        let flushes = self.flushes();
+        let mean = if flushes > 0 { self.batched_rows as f64 / flushes as f64 } else { 0.0 };
+        format!(
+            "{} served ({} rejected), {} batches (mean {:.1} rows, {} full / {} timeout), \
+             {} swap(s)",
+            self.served, self.rejected, flushes, mean, self.full_flushes, self.timeout_flushes,
+            self.swaps
+        )
+    }
+}
+
 /// Latency samples in nanoseconds with Fig. 8-style reporting.
 #[derive(Debug, Clone, Default)]
 pub struct LatencyHist {

@@ -54,6 +54,15 @@ pub fn tree_supervisor_node(workers: usize, leaves: usize) -> NodeId {
     workers + leaves + 1
 }
 
+/// Serve-replica node plan: replicas sit *past* the whole training
+/// address space — workers, every switch, and the supervisor — so the
+/// train-and-serve topology shares one `base_port` without collisions.
+/// `switches` is 1 for the flat plan and `leaves + 1` for a tree;
+/// replica `r`'s node id is `workers + switches + 1 + r`.
+pub fn serve_node(workers: usize, switches: usize, replica: usize) -> NodeId {
+    workers + switches + 1 + replica
+}
+
 /// A bidirectional packet endpoint bound to one node.
 pub trait Transport: Send {
     /// Fire-and-forget send (unreliable by design).

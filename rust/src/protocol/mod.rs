@@ -54,6 +54,7 @@ use anyhow::{bail, Result};
 use std::sync::Arc;
 
 pub mod blob;
+pub mod serve;
 
 /// Fixed-point fractional bits for activation payloads.
 pub const FIXED_SHIFT: u32 = 16;
@@ -102,6 +103,13 @@ pub fn empty_payload() -> Arc<[i32]> {
 /// ride the same frame but bypass membership entirely: `seq` is the
 /// fragment index, `bm` the blob id, and `gen` informational only —
 /// every receiver handles them before any generation check.
+///
+/// `ServeReq` / `ServeResp` are the inference-tier request/response
+/// pair of [`serve`]: a request carries a feature row (raw f32 bit
+/// patterns, not fixed-point — see the submodule docs), a response the
+/// served score. Like the blob kinds they bypass membership (the serve
+/// tier has none) and were assigned without a version bump — training
+/// peers drop them on the Data default path.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum Ctrl {
     #[default]
@@ -111,13 +119,16 @@ pub enum Ctrl {
     Evict,
     Blob,
     BlobAck,
+    ServeReq,
+    ServeResp,
 }
 
 impl Ctrl {
     /// Four-bit wire encoding (flags bits 2-5). Values 0-3 are the v1
-    /// membership kinds; 4-5 were assigned to the blob layer without a
-    /// version bump because v1 decoders treated the upper flag bits as
-    /// reserved-zero and the kinds only appear in process mode.
+    /// membership kinds; 4-5 were assigned to the blob layer and 6-7 to
+    /// the serve tier without a version bump because v1 decoders
+    /// treated the upper flag bits as reserved-zero and the kinds only
+    /// appear in process/serve mode.
     fn to_bits(self) -> u8 {
         match self {
             Ctrl::Data => 0,
@@ -126,6 +137,8 @@ impl Ctrl {
             Ctrl::Evict => 3,
             Ctrl::Blob => 4,
             Ctrl::BlobAck => 5,
+            Ctrl::ServeReq => 6,
+            Ctrl::ServeResp => 7,
         }
     }
 
@@ -136,6 +149,8 @@ impl Ctrl {
             3 => Ctrl::Evict,
             4 => Ctrl::Blob,
             5 => Ctrl::BlobAck,
+            6 => Ctrl::ServeReq,
+            7 => Ctrl::ServeResp,
             _ => Ctrl::Data,
         }
     }

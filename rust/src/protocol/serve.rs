@@ -1,0 +1,200 @@
+//! The serve-tier request/response wire pair.
+//!
+//! Inference requests and responses ride the existing v1 frame as two
+//! `Ctrl`-adjacent kinds ([`Ctrl::ServeReq`] / [`Ctrl::ServeResp`]),
+//! so the serve tier reuses the whole kernel-UDP stack — sockets, the
+//! `recvmmsg` burst drain, payload pools — without a second codec.
+//!
+//! # Field mapping
+//!
+//! | frame field | request                      | response                    |
+//! |-------------|------------------------------|-----------------------------|
+//! | `ctrl`      | `ServeReq`                   | `ServeResp`                 |
+//! | `seq`       | request id, low 16 bits      | echoed                      |
+//! | `bm`        | full 32-bit request id       | echoed                      |
+//! | `gen`       | 0 (unused)                   | model epoch that scored it  |
+//! | `payload`   | one feature row              | `[score]` (one word)        |
+//!
+//! # Why raw f32 bit patterns, not fixed-point
+//!
+//! The training plane carries activations as i32 **fixed-point**
+//! because the Tofino data plane has integer ALUs only. The serve
+//! plane has no in-network aggregation — nothing ever adds two serve
+//! payloads — so there is no reason to round-trip features or scores
+//! through `FIXED_SHIFT` and lose mantissa bits. Both directions carry
+//! **raw f32 bit patterns** in the i32 payload words instead
+//! ([`f32::to_bits`] / [`f32::from_bits`]), which is what makes the
+//! served-score-equals-training-forward contract *bitwise*: the row
+//! the shard packs and the score the client reads are the exact f32s,
+//! not fixed-point approximations.
+//!
+//! Requests and responses bypass membership entirely (the serve tier
+//! has none): `gen` on a request is ignored, and on a response it
+//! reports which model epoch produced the score — the observable that
+//! hot-swap tests key on.
+
+use super::{empty_payload, Ctrl, Packet, HEADER_BYTES};
+use std::sync::Arc;
+
+/// Most features one request row can carry: the UDP transport caps a
+/// datagram at 16 KiB (`net::udp::MAX_DGRAM`), minus the fixed header,
+/// at four bytes per word.
+pub const MAX_FEATURES: usize = (16 * 1024 - HEADER_BYTES) / 4;
+
+/// Build a request packet: one feature row, tagged `req_id`.
+pub fn request(req_id: u32, features: &[f32]) -> Packet {
+    assert!(
+        features.len() <= MAX_FEATURES,
+        "request row of {} features exceeds the {MAX_FEATURES}-feature datagram cap",
+        features.len()
+    );
+    let payload: Arc<[i32]> = features.iter().map(|&v| v.to_bits() as i32).collect();
+    Packet {
+        is_agg: false,
+        acked: false,
+        ctrl: Ctrl::ServeReq,
+        seq: req_id as u16,
+        bm: req_id,
+        gen: 0,
+        job: 0,
+        payload,
+    }
+}
+
+/// Build the response to request `req_id`: the served score and the
+/// model epoch that produced it.
+pub fn response(req_id: u32, model_epoch: u32, score: f32) -> Packet {
+    let payload: Arc<[i32]> = vec![score.to_bits() as i32].into();
+    Packet {
+        is_agg: false,
+        acked: false,
+        ctrl: Ctrl::ServeResp,
+        seq: req_id as u16,
+        bm: req_id,
+        gen: model_epoch,
+        job: 0,
+        payload,
+    }
+}
+
+/// The request id a serve frame carries (either direction).
+pub fn req_id(pkt: &Packet) -> u32 {
+    pkt.bm
+}
+
+/// Decode a request's feature row into `out` (reusing its capacity).
+/// Returns `false` (leaving `out` empty) unless `pkt` is a `ServeReq`.
+pub fn features_into(pkt: &Packet, out: &mut Vec<f32>) -> bool {
+    out.clear();
+    if pkt.ctrl != Ctrl::ServeReq {
+        return false;
+    }
+    out.extend(pkt.payload.iter().map(|&w| f32::from_bits(w as u32)));
+    true
+}
+
+/// Decode a response: `(request id, model epoch, score)`, or `None`
+/// for anything that is not a well-formed `ServeResp`.
+pub fn decode_response(pkt: &Packet) -> Option<(u32, u32, f32)> {
+    if pkt.ctrl != Ctrl::ServeResp || pkt.payload.len() != 1 {
+        return None;
+    }
+    Some((pkt.bm, pkt.gen, f32::from_bits(pkt.payload[0] as u32)))
+}
+
+/// A payload-free `ServeResp` signalling "request rejected" (wrong
+/// feature count, server draining). Carries the id so the client can
+/// fail that request instead of timing out.
+pub fn reject(req_id: u32) -> Packet {
+    Packet {
+        is_agg: false,
+        acked: false,
+        ctrl: Ctrl::ServeResp,
+        seq: req_id as u16,
+        bm: req_id,
+        gen: 0,
+        job: 0,
+        payload: empty_payload(),
+    }
+}
+
+/// Whether a response frame is a rejection (see [`reject`]).
+pub fn is_reject(pkt: &Packet) -> bool {
+    pkt.ctrl == Ctrl::ServeResp && pkt.payload.is_empty()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrips_f32_bits_exactly() {
+        // Values fixed-point would mangle: subnormals, huge magnitudes,
+        // negative zero — the raw-bits channel must keep every one.
+        let feats = [1.5f32, -0.0, f32::MIN_POSITIVE, 3.25e-7, -42.0, 1e30];
+        let pkt = request(0xDEAD_BEEF, &feats);
+        let mut buf = Vec::new();
+        pkt.encode(&mut buf);
+        let back = Packet::decode(&buf).unwrap();
+        assert_eq!(back.ctrl, Ctrl::ServeReq);
+        assert_eq!(req_id(&back), 0xDEAD_BEEF);
+        let mut row = Vec::new();
+        assert!(features_into(&back, &mut row));
+        assert_eq!(row.len(), feats.len());
+        for (a, b) in row.iter().zip(&feats) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn response_roundtrips_score_and_epoch() {
+        let pkt = response(7, 12, -0.0f32);
+        let mut buf = Vec::new();
+        pkt.encode(&mut buf);
+        let back = Packet::decode(&buf).unwrap();
+        let (id, epoch, score) = decode_response(&back).expect("a ServeResp");
+        assert_eq!((id, epoch), (7, 12));
+        assert_eq!(score.to_bits(), (-0.0f32).to_bits(), "negative zero survives");
+        assert!(!is_reject(&back));
+    }
+
+    #[test]
+    fn rejection_is_distinguishable_and_payload_free() {
+        let pkt = reject(99);
+        assert!(is_reject(&pkt));
+        assert_eq!(req_id(&pkt), 99);
+        assert_eq!(decode_response(&pkt), None, "a reject carries no score");
+        let mut buf = Vec::new();
+        pkt.encode(&mut buf);
+        let back = Packet::decode(&buf).unwrap();
+        assert!(is_reject(&back));
+        // the static empty payload: building a reject never allocates a buffer
+        assert!(std::sync::Arc::ptr_eq(&pkt.payload, &empty_payload()));
+    }
+
+    #[test]
+    fn features_into_refuses_non_requests() {
+        let mut row = vec![1.0f32];
+        assert!(!features_into(&Packet::ack(0, 0), &mut row));
+        assert!(row.is_empty(), "refusal must leave the row empty, not stale");
+        assert_eq!(decode_response(&request(1, &[1.0])), None);
+    }
+
+    #[test]
+    fn request_id_echoes_through_seq_and_bm() {
+        // seq carries the low 16 bits (useful in packet dumps); bm the
+        // full id — both directions agree.
+        let pkt = request(0x0001_0002, &[0.5]);
+        assert_eq!(pkt.seq, 0x0002);
+        assert_eq!(req_id(&pkt), 0x0001_0002);
+        let resp = response(0x0001_0002, 3, 1.0);
+        assert_eq!(resp.seq, 0x0002);
+        assert_eq!(req_id(&resp), 0x0001_0002);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds")]
+    fn oversized_request_panics() {
+        let _ = request(0, &vec![0.0f32; MAX_FEATURES + 1]);
+    }
+}

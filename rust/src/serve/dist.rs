@@ -1,0 +1,258 @@
+//! Content-addressed checkpoint distribution.
+//!
+//! A replica fleet converges on the newest model without a
+//! coordinator, the way build-distribution systems ship artifacts:
+//! immutable blobs named by their own hash, plus one tiny mutable
+//! pointer.
+//!
+//! # Store layout
+//!
+//! ```text
+//! store/
+//!   objects/ab/cd/abcd567890123456   # checkpoint bytes, named by
+//!                                    # their FNV-1a-64 hex digest,
+//!                                    # two-level fan-out on the first
+//!                                    # four digits
+//!   LATEST                           # "<digest> <epoch>\n"
+//! ```
+//!
+//! The fan-out keeps directories small when every training epoch
+//! publishes. Objects are **immutable**: a digest names exactly one
+//! byte string, so re-publishing identical content is a no-op, a
+//! partially fetched object is detected by re-hashing, and nothing
+//! ever needs invalidation. `LATEST` is the only thing that moves, and
+//! it moves by atomic rename — a reader sees the old pointer or the
+//! new one, never a torn line.
+//!
+//! # Publish ordering
+//!
+//! [`publish`] writes the object (tmp + rename + dir fsync) **before**
+//! swinging `LATEST`, so a pointer never references an object that is
+//! not yet durable. [`Fetcher::poll`] still re-hashes every fetched
+//! object and retries briefly: on a shared filesystem the object may
+//! lag the pointer, and a digest mismatch must read as "not yet",
+//! never as a served model.
+
+use crate::checkpoint::{fnv1a, Checkpoint};
+use anyhow::{bail, Context, Result};
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// The digest's hex form used in object names and `LATEST`.
+fn digest(bytes: &[u8]) -> String {
+    format!("{:016x}", fnv1a(bytes))
+}
+
+/// Object path for a digest: two-level fan-out on the first four hex
+/// digits (256 × 256 dirs), then the full digest as the file name.
+fn object_path(store: &Path, digest: &str) -> PathBuf {
+    store.join("objects").join(&digest[0..2]).join(&digest[2..4]).join(digest)
+}
+
+/// Write `bytes` to `path` atomically: temp file in the same
+/// directory, fsync, rename, fsync the directory.
+fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let dir = path.parent().context("atomic write target has no parent")?;
+    fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+    let tmp = dir.join(format!(
+        ".{}.tmp-{}",
+        path.file_name().and_then(|n| n.to_str()).unwrap_or("obj"),
+        std::process::id()
+    ));
+    let mut f = fs::File::create(&tmp).with_context(|| format!("creating {}", tmp.display()))?;
+    f.write_all(bytes)?;
+    f.sync_all()?;
+    drop(f);
+    fs::rename(&tmp, path).with_context(|| format!("publishing {}", path.display()))?;
+    if let Ok(d) = fs::File::open(dir) {
+        let _ = d.sync_all();
+    }
+    Ok(())
+}
+
+/// Publish a checkpoint into the store: object first, pointer second.
+/// Returns the digest. Idempotent — identical content republished is
+/// one `stat` plus the pointer swing.
+pub fn publish(store: &Path, ck: &Checkpoint) -> Result<String> {
+    let bytes = ck.to_bytes();
+    let d = digest(&bytes);
+    let obj = object_path(store, &d);
+    // Content-addressed: if the object exists it *is* this content
+    // (modulo a torn publish, which the fetch-side re-hash catches and
+    // a re-publish here repairs).
+    let fresh = match fs::metadata(&obj) {
+        Ok(m) if m.len() == bytes.len() as u64 => false,
+        _ => true,
+    };
+    if fresh {
+        write_atomic(&obj, &bytes)?;
+    }
+    write_atomic(&store.join("LATEST"), format!("{d} {}\n", ck.epoch).as_bytes())?;
+    Ok(d)
+}
+
+/// Parse a `LATEST` line into `(digest, epoch)`.
+fn parse_latest(text: &str) -> Option<(String, usize)> {
+    let mut it = text.split_whitespace();
+    let d = it.next()?;
+    if d.len() != 16 || !d.bytes().all(|b| b.is_ascii_hexdigit()) {
+        return None;
+    }
+    let epoch = it.next()?.parse().ok()?;
+    Some((d.to_string(), epoch))
+}
+
+/// Fetch the object `digest` names, verifying the content actually
+/// hashes to it. `Err` here means "retry", not "corrupt store": on a
+/// shared filesystem the bytes may simply not all be visible yet.
+fn fetch_object(store: &Path, d: &str) -> Result<Vec<u8>> {
+    let path = object_path(store, d);
+    let bytes = fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+    if digest(&bytes) != d {
+        bail!("object {d} failed its digest check ({} bytes) — torn or lagging", bytes.len());
+    }
+    Ok(bytes)
+}
+
+/// How many times [`Fetcher::poll`] retries a digest-mismatched or
+/// missing object before giving up until the next poll.
+const FETCH_RETRIES: u32 = 3;
+
+/// An incremental store reader for the serve loop: remembers the last
+/// digest it delivered and answers `Ok(None)` from a single small read
+/// of `LATEST` when nothing moved — the store-side twin of
+/// [`checkpoint::Watcher`](crate::checkpoint::Watcher).
+#[derive(Debug)]
+pub struct Fetcher {
+    store: PathBuf,
+    delivered: Option<String>,
+}
+
+impl Fetcher {
+    /// Read from `store` (which may not exist yet).
+    pub fn new(store: impl Into<PathBuf>) -> Self {
+        Self { store: store.into(), delivered: None }
+    }
+
+    /// The digest of the last checkpoint this fetcher delivered.
+    pub fn delivered(&self) -> Option<&str> {
+        self.delivered.as_deref()
+    }
+
+    /// Re-check the store. `Ok(Some)` is a newly fetched, digest- and
+    /// checksum-verified checkpoint; `Ok(None)` means the pointer has
+    /// not moved (or the store does not exist yet, or the new object
+    /// is still lagging the pointer — both resolve on a later poll).
+    pub fn poll(&mut self) -> Result<Option<Checkpoint>> {
+        let text = match fs::read_to_string(self.store.join("LATEST")) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(e).context("reading LATEST"),
+        };
+        let Some((d, _epoch)) = parse_latest(&text) else {
+            // Unparseable pointer: atomic renames should make this
+            // impossible, so stay quiet and let the next publish fix it.
+            return Ok(None);
+        };
+        if self.delivered.as_deref() == Some(d.as_str()) {
+            return Ok(None);
+        }
+        let mut last_err = None;
+        for attempt in 0..FETCH_RETRIES {
+            if attempt > 0 {
+                std::thread::sleep(std::time::Duration::from_millis(2 << attempt));
+            }
+            match fetch_object(&self.store, &d).and_then(|b| Checkpoint::from_bytes(&b)) {
+                Ok(ck) => {
+                    self.delivered = Some(d);
+                    return Ok(Some(ck));
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        // Exhausted: treat as "not yet" — the pointer stays undelivered
+        // so the next poll retries from scratch.
+        let _ = last_err;
+        Ok(None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(epoch: usize) -> Checkpoint {
+        Checkpoint {
+            generation: 1,
+            epoch,
+            rounds_done: epoch as u64,
+            rng: 7,
+            model: vec![0.5, -1.25, 3.0],
+            loss_curve: vec![1.0],
+        }
+    }
+
+    fn tmpstore(tag: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("p4sgd-dist-test-{}-{tag}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn publish_fetch_roundtrip_and_fanout_layout() {
+        let store = tmpstore("roundtrip");
+        let d = publish(&store, &sample(3)).unwrap();
+        assert_eq!(d.len(), 16);
+        // Two-level fan-out: objects/ab/cd/<digest>.
+        let obj = store.join("objects").join(&d[0..2]).join(&d[2..4]).join(&d);
+        assert!(obj.is_file(), "missing {}", obj.display());
+        let mut f = Fetcher::new(&store);
+        let ck = f.poll().unwrap().expect("published checkpoint fetched");
+        assert_eq!(ck.epoch, 3);
+        assert_eq!(f.delivered(), Some(d.as_str()));
+        assert!(f.poll().unwrap().is_none(), "unchanged pointer is quiet");
+        let _ = fs::remove_dir_all(&store);
+    }
+
+    #[test]
+    fn fetcher_follows_pointer_moves_and_is_idempotent() {
+        let store = tmpstore("moves");
+        let mut f = Fetcher::new(&store);
+        assert!(f.poll().unwrap().is_none(), "missing store is quiet");
+        publish(&store, &sample(1)).unwrap();
+        assert_eq!(f.poll().unwrap().unwrap().epoch, 1);
+        let d2a = publish(&store, &sample(2)).unwrap();
+        let d2b = publish(&store, &sample(2)).unwrap();
+        assert_eq!(d2a, d2b, "identical content has one digest");
+        assert_eq!(f.poll().unwrap().unwrap().epoch, 2);
+        assert!(f.poll().unwrap().is_none(), "re-publish of same content is quiet");
+        let _ = fs::remove_dir_all(&store);
+    }
+
+    #[test]
+    fn torn_object_is_not_served() {
+        let store = tmpstore("torn");
+        let d = publish(&store, &sample(4)).unwrap();
+        // Simulate a lagging/torn object behind a fresh pointer.
+        let obj = object_path(&store, &d);
+        let bytes = fs::read(&obj).unwrap();
+        fs::write(&obj, &bytes[..bytes.len() / 2]).unwrap();
+        let mut f = Fetcher::new(&store);
+        assert!(f.poll().unwrap().is_none(), "digest mismatch must read as not-yet");
+        assert_eq!(f.delivered(), None);
+        // Repair (re-publish) and the same fetcher recovers.
+        publish(&store, &sample(4)).unwrap();
+        assert_eq!(f.poll().unwrap().unwrap().epoch, 4);
+        let _ = fs::remove_dir_all(&store);
+    }
+
+    #[test]
+    fn latest_pointer_format_is_strict() {
+        assert_eq!(parse_latest("0123456789abcdef 7\n"), Some(("0123456789abcdef".into(), 7)));
+        assert_eq!(parse_latest("xyz 7"), None, "non-hex digest");
+        assert_eq!(parse_latest("0123456789abcdef"), None, "missing epoch");
+        assert_eq!(parse_latest(""), None);
+    }
+}

@@ -1,0 +1,349 @@
+//! The serve-tier load generator: closed- and open-loop request
+//! drivers over the real kernel-UDP stack, with a machine-readable
+//! verdict for CI and the bench harness.
+//!
+//! * **Closed loop** measures capacity: `concurrency` client threads
+//!   each keep exactly one request in flight (send, await, repeat), so
+//!   sustained predictions/s is the server's actual service rate at
+//!   that concurrency, and latency includes admission-batching wait.
+//! * **Open loop** measures latency under a *fixed offered rate*: one
+//!   paced sender that never slows down when the server does — the
+//!   honest way to read p99/p999, since a closed loop hides queueing
+//!   by backing off (coordinated omission).
+//!
+//! Feature rows are generated deterministically from `(seed, req_id)`,
+//! so a verifier that knows the seed and the model can recompute every
+//! expected score **bitwise** ([`expected_score`] uses the same
+//! [`ShardCore`] path the server runs) without any side channel.
+
+use super::shard::ShardCore;
+use super::Model;
+use crate::net::{udp, NodeId, Transport};
+use crate::protocol::{serve as wire, Packet};
+use crate::util::rng::Pcg32;
+use crate::util::stats::Samples;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+/// One load run's shape.
+#[derive(Debug, Clone)]
+pub struct LoadCfg {
+    /// The port plan shared with the server.
+    pub base_port: u16,
+    /// Server node id ([`super::replica_node`]).
+    pub server: NodeId,
+    /// First client node id; client `t` binds `client_base + t`. Must
+    /// not collide with the server's plan.
+    pub client_base: NodeId,
+    /// Features per request row (must match the served model's `d_in`
+    /// for scores; mismatched rows measure the rejection path).
+    pub d: usize,
+    /// Total requests to issue.
+    pub requests: usize,
+    /// Closed-loop client threads (ignored when `rate` is set).
+    pub concurrency: usize,
+    /// Open-loop offered rate, requests/s; `None` selects closed loop.
+    pub rate: Option<f64>,
+    /// Per-request retransmit timeout.
+    pub timeout: Duration,
+    /// Closed-loop retransmits before a request counts as lost.
+    pub retries: u32,
+    /// Row-generation seed.
+    pub seed: u64,
+}
+
+impl Default for LoadCfg {
+    fn default() -> Self {
+        Self {
+            base_port: 46000,
+            server: 2,
+            client_base: 3,
+            d: 64,
+            requests: 1000,
+            concurrency: 4,
+            rate: None,
+            timeout: Duration::from_millis(100),
+            retries: 20,
+            seed: 1,
+        }
+    }
+}
+
+/// The measured outcome, in the shape `--report` serializes for CI.
+#[derive(Debug, Clone, Default)]
+pub struct Verdict {
+    pub mode: &'static str,
+    pub requests: usize,
+    pub ok: usize,
+    pub rejected: usize,
+    pub lost: usize,
+    pub elapsed_s: f64,
+    pub predictions_per_s: f64,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub p999_s: f64,
+    /// Distinct model epochs observed in responses (hot-swap evidence).
+    pub epochs_seen: Vec<u32>,
+    /// Bitwise check against a local model: `None` = not requested,
+    /// `Some(n)` = n scored responses checked, all exact.
+    pub bitwise_checked: Option<usize>,
+}
+
+/// The deterministic feature row for request `id`: uniform in [-1, 1),
+/// reproducible by any party holding the seed.
+pub fn row_for(seed: u64, id: u32, d: usize) -> Vec<f32> {
+    let mut rng = Pcg32::new(seed, id as u64);
+    (0..d).map(|_| rng.f32() * 2.0 - 1.0).collect()
+}
+
+/// The score the server must produce for request `id` — the same
+/// [`ShardCore`] call the shard makes, so equality is bitwise, not
+/// approximate.
+pub fn expected_score(core: &mut ShardCore, model: &Model, seed: u64, id: u32) -> f32 {
+    let row = row_for(seed, id, model.d_in);
+    core.score_batch(model, std::slice::from_ref(&row))[0]
+}
+
+/// A scored response as the drivers collect them: `(request id, model
+/// epoch, score)`.
+pub type Scored = (u32, u32, f32);
+
+/// Ask a server to shut down gracefully (it treats `Leave` as the
+/// drain-and-exit signal).
+pub fn stop_server(cfg: &LoadCfg) -> Result<()> {
+    let mut ep = udp::bind_one(cfg.client_base, cfg.base_port).context("binding stop client")?;
+    ep.send(cfg.server, &Packet::leave(0, 0));
+    Ok(())
+}
+
+/// Run the configured load shape against a live server. Returns the
+/// verdict plus every scored response, so the caller can feed them to
+/// [`verify_bitwise`].
+pub fn run(cfg: &LoadCfg) -> Result<(Verdict, Vec<Scored>)> {
+    if cfg.rate.is_some() {
+        open_loop(cfg)
+    } else {
+        closed_loop(cfg)
+    }
+}
+
+/// Closed loop: `concurrency` threads, one request in flight each.
+/// Thread `t` owns ids `t, t+concurrency, …` and its own socket, so
+/// responses cannot cross threads (the server answers the asking
+/// node).
+fn closed_loop(cfg: &LoadCfg) -> Result<(Verdict, Vec<Scored>)> {
+    let threads = cfg.concurrency.max(1);
+    let started = Instant::now();
+    let mut handles = Vec::with_capacity(threads);
+    for t in 0..threads {
+        let cfg = cfg.clone();
+        let mut ep = udp::bind_one(cfg.client_base + t, cfg.base_port)
+            .with_context(|| format!("binding loadgen client {t}"))?;
+        handles.push(std::thread::spawn(move || {
+            let mut lat: Vec<f64> = Vec::new();
+            let mut scores: Vec<Scored> = Vec::new();
+            let (mut ok, mut rejected, mut lost) = (0usize, 0usize, 0usize);
+            let mut id = t as u32;
+            while (id as usize) < cfg.requests {
+                let row = row_for(cfg.seed, id, cfg.d);
+                let req = wire::request(id, &row);
+                let t0 = Instant::now();
+                let mut done = false;
+                'attempt: for _ in 0..=cfg.retries {
+                    ep.send(cfg.server, &req);
+                    let deadline = Instant::now() + cfg.timeout;
+                    loop {
+                        let now = Instant::now();
+                        if now >= deadline {
+                            break; // retransmit
+                        }
+                        let Some((_, pkt)) = ep.recv_timeout(deadline - now) else { continue };
+                        if wire::req_id(&pkt) != id {
+                            continue; // stale duplicate from a retransmit
+                        }
+                        if wire::is_reject(&pkt) {
+                            rejected += 1;
+                        } else if let Some((rid, epoch, score)) = wire::decode_response(&pkt) {
+                            lat.push(t0.elapsed().as_secs_f64());
+                            scores.push((rid, epoch, score));
+                            ok += 1;
+                        } else {
+                            continue;
+                        }
+                        done = true;
+                        break 'attempt;
+                    }
+                }
+                if !done {
+                    lost += 1;
+                }
+                id += threads as u32;
+            }
+            (lat, scores, ok, rejected, lost)
+        }));
+    }
+    let mut lat = Samples::new();
+    let mut scores = Vec::new();
+    let (mut ok, mut rejected, mut lost) = (0, 0, 0);
+    for h in handles {
+        let (l, s, o, r, x) = h.join().expect("loadgen thread");
+        for v in l {
+            lat.push(v);
+        }
+        scores.extend(s);
+        ok += o;
+        rejected += r;
+        lost += x;
+    }
+    let v = verdict("closed", cfg, started.elapsed(), lat, &scores, ok, rejected, lost);
+    Ok((v, scores))
+}
+
+/// Open loop: one socket, sends paced at `rate`, receives
+/// continuously. In-flight requests are tracked by id; anything not
+/// answered `timeout` after the last send counts as lost.
+fn open_loop(cfg: &LoadCfg) -> Result<(Verdict, Vec<Scored>)> {
+    let rate = cfg.rate.expect("open_loop requires a rate");
+    let gap = Duration::from_secs_f64(1.0 / rate.max(1.0));
+    let mut ep =
+        udp::bind_one(cfg.client_base, cfg.base_port).context("binding open-loop client")?;
+    let mut outstanding: HashMap<u32, Instant> = HashMap::new();
+    let mut lat = Samples::new();
+    let mut scores: Vec<(u32, u32, f32)> = Vec::new();
+    let (mut ok, mut rejected) = (0usize, 0usize);
+    let started = Instant::now();
+    let mut drain = |ep: &mut udp::UdpEndpoint,
+                     outstanding: &mut HashMap<u32, Instant>,
+                     budget: Duration| {
+        let deadline = Instant::now() + budget;
+        loop {
+            let now = Instant::now();
+            let left = deadline.checked_duration_since(now).unwrap_or(Duration::ZERO);
+            let Some((_, pkt)) = ep.recv_timeout(left) else { break };
+            let id = wire::req_id(&pkt);
+            let Some(sent) = outstanding.remove(&id) else { continue };
+            if wire::is_reject(&pkt) {
+                rejected += 1;
+            } else if let Some((rid, epoch, score)) = wire::decode_response(&pkt) {
+                lat.push(sent.elapsed().as_secs_f64());
+                scores.push((rid, epoch, score));
+                ok += 1;
+            }
+            if left.is_zero() {
+                break;
+            }
+        }
+    };
+    for id in 0..cfg.requests as u32 {
+        // Pace against the *schedule*, not the previous send, so a slow
+        // server cannot slow the offered rate (no coordinated omission).
+        let due = started + gap.mul_f64(id as f64);
+        let now = Instant::now();
+        if now < due {
+            drain(&mut ep, &mut outstanding, due - now);
+        } else {
+            drain(&mut ep, &mut outstanding, Duration::ZERO);
+        }
+        let row = row_for(cfg.seed, id, cfg.d);
+        outstanding.insert(id, Instant::now());
+        ep.send(cfg.server, &wire::request(id, &row));
+    }
+    drain(&mut ep, &mut outstanding, cfg.timeout);
+    let lost = outstanding.len();
+    let v = verdict("open", cfg, started.elapsed(), lat, &scores, ok, rejected, lost);
+    Ok((v, scores))
+}
+
+fn verdict(
+    mode: &'static str,
+    cfg: &LoadCfg,
+    elapsed: Duration,
+    lat: Samples,
+    scores: &[Scored],
+    ok: usize,
+    rejected: usize,
+    lost: usize,
+) -> Verdict {
+    let elapsed_s = elapsed.as_secs_f64().max(1e-9);
+    let mut epochs: Vec<u32> = scores.iter().map(|&(_, e, _)| e).collect();
+    epochs.sort_unstable();
+    epochs.dedup();
+    let (mean_s, p50_s, p99_s, p999_s) = if lat.is_empty() {
+        (0.0, 0.0, 0.0, 0.0)
+    } else {
+        let s = lat.summary();
+        (s.mean, s.p50, s.p99, lat.percentile(99.9))
+    };
+    Verdict {
+        mode,
+        requests: cfg.requests,
+        ok,
+        rejected,
+        lost,
+        elapsed_s,
+        predictions_per_s: ok as f64 / elapsed_s,
+        mean_s,
+        p50_s,
+        p99_s,
+        p999_s,
+        epochs_seen: epochs,
+        bitwise_checked: None,
+    }
+}
+
+/// Re-score every ok response locally and require bit equality with
+/// the training-side forward. The checked count lands in the verdict
+/// so CI can assert it is nonzero.
+pub fn verify_bitwise(
+    verdict: &mut Verdict,
+    scores: &[Scored],
+    model: &Model,
+    precision: u32,
+    seed: u64,
+) -> Result<()> {
+    let mut core = ShardCore::new(precision);
+    for &(id, _epoch, got) in scores {
+        let want = expected_score(&mut core, model, seed, id);
+        if want.to_bits() != got.to_bits() {
+            anyhow::bail!(
+                "request {id}: served {got} ({:#010x}) != training forward {want} ({:#010x})",
+                got.to_bits(),
+                want.to_bits()
+            );
+        }
+    }
+    verdict.bitwise_checked = Some(scores.len());
+    Ok(())
+}
+
+/// Serialize a verdict as the CI-facing JSON report.
+pub fn write_report(path: &Path, v: &Verdict) -> Result<()> {
+    let epochs: Vec<String> = v.epochs_seen.iter().map(|e| e.to_string()).collect();
+    let bitwise = match v.bitwise_checked {
+        Some(n) => format!("{n}"),
+        None => "null".to_string(),
+    };
+    let json = format!(
+        "{{\n  \"mode\": \"{}\",\n  \"requests\": {},\n  \"ok\": {},\n  \"rejected\": {},\n  \
+         \"lost\": {},\n  \"elapsed_s\": {:.6},\n  \"predictions_per_s\": {:.1},\n  \
+         \"mean_s\": {:.9},\n  \"p50_s\": {:.9},\n  \"p99_s\": {:.9},\n  \"p999_s\": {:.9},\n  \
+         \"epochs_seen\": [{}],\n  \"bitwise_checked\": {}\n}}\n",
+        v.mode,
+        v.requests,
+        v.ok,
+        v.rejected,
+        v.lost,
+        v.elapsed_s,
+        v.predictions_per_s,
+        v.mean_s,
+        v.p50_s,
+        v.p99_s,
+        v.p999_s,
+        epochs.join(", "),
+        bitwise
+    );
+    std::fs::write(path, json).with_context(|| format!("writing {}", path.display()))
+}

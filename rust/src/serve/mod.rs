@@ -1,0 +1,312 @@
+//! The model-serving tier: a hot-swap checkpoint inference server.
+//!
+//! Training produces round-consistent checkpoints; this module is the
+//! path from those checkpoints to predictions. A serve replica
+//! (`--role serve`, `[serve]` config) is built from four pieces:
+//!
+//! * **Model publication** — the newest valid checkpoint is loaded
+//!   (via [`checkpoint::Watcher`] on the checkpoint directory, or
+//!   fetched from a content-addressed [`dist`] store) and published as
+//!   an [`Arc<Model>`] behind a [`ModelCell`]. A newer checkpoint is
+//!   installed with one pointer swap: readers that already cloned the
+//!   `Arc` finish their batch on the old model, new batches pick up
+//!   the new one. No pause, no torn state — a reader sees the old
+//!   model or the new model, never a mixture.
+//! * **Admission batching** — requests are queued per shard and
+//!   flushed when `max_batch` rows are waiting or the oldest has
+//!   waited `max_wait_us`. Batching amortizes the pack + forward cost
+//!   exactly the way small-batch training amortizes aggregation
+//!   latency (the paper's premise, mirrored on the serve side).
+//! * **Shared-nothing shards** — each shard owns a pinned thread
+//!   ([`util::affinity`]), its own queues and scratch buffers (NUMA
+//!   first-touch on the shard's core), and shares *nothing* mutable
+//!   with other shards; requests are dispatched by `req_id % shards`.
+//!   The forward is the training kernel itself ([`pack_rows`] +
+//!   [`forward_into`]), so served scores are **bitwise identical** to
+//!   the training-side forward on the same model and rows.
+//! * **Wire protocol** — requests/responses are the v1 frames of
+//!   [`protocol::serve`], carried by the same kernel-UDP stack as
+//!   training traffic.
+//!
+//! [`checkpoint::Watcher`]: crate::checkpoint::Watcher
+//! [`util::affinity`]: crate::util::affinity
+//! [`pack_rows`]: crate::data::quantize::pack_rows
+//! [`forward_into`]: crate::engine::bitserial::forward_into
+//! [`protocol::serve`]: crate::protocol::serve
+
+pub mod dist;
+pub mod load;
+pub mod shard;
+
+use crate::checkpoint::{Checkpoint, Watcher};
+use crate::config::SystemConfig;
+use crate::data::quantize::LANE;
+use crate::metrics::ServeStats;
+use crate::net::{serve_node, udp, NodeId, Transport};
+use crate::protocol::{serve as wire, Ctrl};
+use anyhow::{Context, Result};
+use std::sync::mpsc;
+use std::sync::{Arc, RwLock};
+use std::time::{Duration, Instant};
+
+/// An immutable, ready-to-score model: checkpoint weights padded to
+/// the pack lane width once at load time, so the per-batch path does
+/// no copying or padding.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Model {
+    /// Epoch of the checkpoint this model came from (reported in every
+    /// response's `gen` field — the observable hot-swap tests key on).
+    pub epoch: u32,
+    /// Membership generation recorded at checkpoint time.
+    pub generation: u32,
+    /// Feature count requests must match exactly.
+    pub d_in: usize,
+    /// `d_in` rounded up to a [`LANE`] multiple: the packed width.
+    pub d_pad: usize,
+    /// Weights, zero-padded from `d_in` to `d_pad`.
+    pub weights: Vec<f32>,
+}
+
+impl Model {
+    /// Build a servable model from a checkpoint.
+    pub fn from_checkpoint(ck: &Checkpoint) -> Self {
+        let d_in = ck.model.len();
+        let d_pad = d_in.div_ceil(LANE) * LANE;
+        let mut weights = Vec::with_capacity(d_pad);
+        weights.extend_from_slice(&ck.model);
+        weights.resize(d_pad, 0.0);
+        Self { epoch: ck.epoch as u32, generation: ck.generation, d_in, d_pad, weights }
+    }
+}
+
+/// The hot-swap publication point: one cell, many reader threads.
+///
+/// `load` is a read-lock held only long enough to clone the `Arc` (one
+/// refcount bump — no weight bytes are copied); `swap` is a write-lock
+/// store of a new pointer. With respect to readers the swap is atomic:
+/// a `load` returns the complete old model or the complete new one,
+/// never a mixture, and in-flight batches that already hold an `Arc`
+/// keep scoring on the model they started with. Readers are never
+/// blocked for longer than the pointer store itself — there is no
+/// drain, no pause.
+#[derive(Debug, Default)]
+pub struct ModelCell {
+    inner: RwLock<Option<Arc<Model>>>,
+}
+
+impl ModelCell {
+    /// An empty cell: the server can start before the first checkpoint
+    /// exists and reject requests until one lands.
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    /// A cell pre-loaded with `model`.
+    pub fn new(model: Model) -> Self {
+        Self { inner: RwLock::new(Some(Arc::new(model))) }
+    }
+
+    /// The currently published model (`None` until the first publish).
+    pub fn load(&self) -> Option<Arc<Model>> {
+        self.inner.read().expect("model cell poisoned").clone()
+    }
+
+    /// Publish `model`, returning the epoch it replaced.
+    pub fn swap(&self, model: Arc<Model>) -> Option<u32> {
+        let mut slot = self.inner.write().expect("model cell poisoned");
+        let old = slot.as_ref().map(|m| m.epoch);
+        *slot = Some(model);
+        old
+    }
+}
+
+/// Where a replica discovers new models: a checkpoint directory
+/// watched by name/mtime high-water mark, or a content-addressed
+/// distribution store probed by its `LATEST` pointer.
+enum Source {
+    Dir(Watcher),
+    Store(dist::Fetcher),
+}
+
+impl Source {
+    fn poll(&mut self) -> Result<Option<Checkpoint>> {
+        match self {
+            Source::Dir(w) => w.poll(),
+            Source::Store(f) => f.poll(),
+        }
+    }
+}
+
+/// How many switch nodes the training plan occupies (the serve node
+/// plan starts after them; see [`serve_node`]).
+pub fn switch_count(cfg: &SystemConfig) -> usize {
+    if cfg.switch.tree {
+        cfg.switch.leaves + 1
+    } else {
+        1
+    }
+}
+
+/// The node id replica `replica` binds under `cfg`'s port plan.
+pub fn replica_node(cfg: &SystemConfig, replica: usize) -> NodeId {
+    serve_node(cfg.cluster.workers, switch_count(cfg), replica)
+}
+
+/// Run one serve replica until a `Ctrl::Leave` frame arrives (the
+/// graceful-shutdown signal — the cluster teardown and the loadgen's
+/// `--stop-server` both send it). Returns the merged serve counters.
+pub fn run(cfg: &SystemConfig, replica: usize) -> Result<ServeStats> {
+    let node = replica_node(cfg, replica);
+    let ep = udp::bind_one(node, cfg.cluster.base_port)
+        .with_context(|| format!("binding serve node {node} (stale process on the port?)"))?;
+    let mut source = match &cfg.serve.store {
+        Some(store) => Source::Store(dist::Fetcher::new(store)),
+        None => {
+            let dir = cfg
+                .cluster
+                .checkpoint_dir
+                .as_ref()
+                .context("serve role needs cluster.checkpoint_dir or serve.store")?;
+            Source::Dir(Watcher::new(dir))
+        }
+    };
+    let cell = Arc::new(ModelCell::empty());
+    if let Some(ck) = source.poll()? {
+        let m = Model::from_checkpoint(&ck);
+        eprintln!("[serve {replica}] loaded model epoch {} (d={})", m.epoch, m.d_in);
+        cell.swap(Arc::new(m));
+    } else {
+        eprintln!("[serve {replica}] no checkpoint yet; rejecting until one lands");
+    }
+    let stats = serve_loop(cfg, ep, cell, &mut source, replica)?;
+    eprintln!("[serve {replica}] {}", stats.summary());
+    Ok(stats)
+}
+
+/// The socket-owning event loop: dispatch requests to shards, flush
+/// shard responses back to the wire, and poll the model source on the
+/// configured cadence. Separated from [`run`] so tests can drive it
+/// with a pre-seeded cell.
+fn serve_loop(
+    cfg: &SystemConfig,
+    mut ep: udp::UdpEndpoint,
+    cell: Arc<ModelCell>,
+    source: &mut Source,
+    replica: usize,
+) -> Result<ServeStats> {
+    let n_shards = cfg.serve.shards;
+    let (resp_tx, resp_rx) = mpsc::channel::<shard::Response>();
+    let mut shards = Vec::with_capacity(n_shards);
+    for s in 0..n_shards {
+        let core = cfg.cluster.core_offset + replica * n_shards + s;
+        shards.push(shard::spawn(
+            s,
+            core,
+            cfg.serve.clone(),
+            cfg.train.precision,
+            cfg.cluster.numa_local,
+            Arc::clone(&cell),
+            resp_tx.clone(),
+        ));
+    }
+    drop(resp_tx); // shards hold the only senders: channel closes with them
+    let poll_every = Duration::from_millis(cfg.serve.poll_ms);
+    // A short recv budget keeps response flushing prompt without
+    // spinning: the worst case it adds to a response's latency is one
+    // budget.
+    let recv_budget = Duration::from_micros(200);
+    let mut last_poll = Instant::now();
+    loop {
+        if let Some((src, pkt)) = ep.recv_timeout(recv_budget) {
+            match pkt.ctrl {
+                Ctrl::ServeReq => {
+                    let id = wire::req_id(&pkt);
+                    let s = id as usize % n_shards;
+                    shards[s].dispatch(shard::Request { id, src, pkt });
+                }
+                Ctrl::Leave => break,
+                _ => {} // training traffic astray on the serve port: drop
+            }
+        }
+        for resp in resp_rx.try_iter() {
+            ep.send(resp.src, &resp.pkt);
+        }
+        if last_poll.elapsed() >= poll_every {
+            last_poll = Instant::now();
+            if let Some(ck) = source.poll()? {
+                let m = Arc::new(Model::from_checkpoint(&ck));
+                let old = cell.swap(Arc::clone(&m));
+                eprintln!(
+                    "[serve {replica}] hot-swap: epoch {:?} -> {} (zero pause)",
+                    old, m.epoch
+                );
+            }
+        }
+    }
+    // Graceful drain: stop admitting, let every shard flush its queue,
+    // then push the remaining responses out.
+    let mut total = ServeStats::default();
+    for sh in shards {
+        total.merge(&sh.stop());
+    }
+    for resp in resp_rx.try_iter() {
+        ep.send(resp.src, &resp.pkt);
+    }
+    Ok(total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ck(epoch: usize, weights: Vec<f32>) -> Checkpoint {
+        Checkpoint {
+            generation: 1,
+            epoch,
+            rounds_done: 0,
+            rng: 0,
+            model: weights,
+            loss_curve: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn model_pads_to_lane_width() {
+        let m = Model::from_checkpoint(&ck(3, vec![1.0; 33]));
+        assert_eq!((m.d_in, m.d_pad), (33, 64));
+        assert_eq!(m.weights.len(), 64);
+        assert!(m.weights[33..].iter().all(|&w| w == 0.0));
+        // Already-aligned widths must not grow.
+        let m = Model::from_checkpoint(&ck(3, vec![1.0; 64]));
+        assert_eq!((m.d_in, m.d_pad), (64, 64));
+    }
+
+    #[test]
+    fn cell_swap_is_old_or_new_never_torn() {
+        let cell = ModelCell::empty();
+        assert!(cell.load().is_none());
+        cell.swap(Arc::new(Model::from_checkpoint(&ck(1, vec![1.0; 8]))));
+        let held = cell.load().expect("published");
+        assert_eq!(held.epoch, 1);
+        let replaced = cell.swap(Arc::new(Model::from_checkpoint(&ck(2, vec![2.0; 8]))));
+        assert_eq!(replaced, Some(1));
+        // The Arc held across the swap still sees the *complete* old
+        // model — in-flight batches finish on what they started with.
+        assert_eq!(held.epoch, 1);
+        assert!(held.weights.iter().all(|&w| w == 1.0));
+        assert_eq!(cell.load().unwrap().epoch, 2);
+    }
+
+    #[test]
+    fn replica_nodes_sit_past_the_training_plan() {
+        let mut cfg = SystemConfig::default();
+        cfg.cluster.workers = 4;
+        // flat: workers 0..4, switch 4, coordinator 5 -> replicas 6, 7
+        assert_eq!(replica_node(&cfg, 0), 6);
+        assert_eq!(replica_node(&cfg, 1), 7);
+        cfg.switch.tree = true;
+        cfg.switch.leaves = 2;
+        // tree: leaves 4..6, spine 6, coordinator 7 -> replica 8
+        assert_eq!(replica_node(&cfg, 0), 8);
+    }
+}

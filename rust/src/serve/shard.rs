@@ -1,0 +1,263 @@
+//! Shared-nothing serve shards: one pinned thread per shard, an
+//! admission queue in front of it, and the training forward kernel
+//! behind it.
+//!
+//! # Why shared-nothing
+//!
+//! The only thing two shards ever share is the read-only
+//! [`ModelCell`] pointer. Queues, scratch rows, packed planes, and
+//! stats accumulators are all shard-private and first-touched on the
+//! shard's own core (so with `numa_local` they land in that socket's
+//! memory). There are no locks on the request path — dispatch is
+//! `req_id % shards` in the socket thread, and each shard drains its
+//! own `mpsc` queue.
+//!
+//! # Admission batching
+//!
+//! A shard blocks until a first request arrives, then collects more
+//! until either `max_batch` rows are waiting or the *first* request
+//! has waited `max_wait_us`. The flushed batch is packed once
+//! ([`pack_rows`]) and scored with one [`forward_into`] call — the
+//! same kernel training uses, which is what makes served scores
+//! bitwise identical to the training-side forward.
+//!
+//! # Hot-swap visibility
+//!
+//! The model pointer is loaded **once per flush**, so an entire batch
+//! is scored by exactly one model and score changes land on a clean
+//! batch boundary. Every response reports the epoch that scored it;
+//! the hot-swap tests group responses by flush id and assert one epoch
+//! per flush.
+
+use super::{Model, ModelCell};
+use crate::config::ServeConfig;
+use crate::data::quantize::pack_rows;
+use crate::engine::bitserial::forward_into;
+use crate::metrics::ServeStats;
+use crate::net::NodeId;
+use crate::protocol::{serve as wire, Packet};
+use crate::util::affinity;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// A request as the socket thread hands it to a shard: the undecoded
+/// frame plus its routing metadata. Decoding happens on the shard's
+/// core so the socket thread stays a pure dispatcher.
+pub struct Request {
+    /// Request id (`protocol::serve::req_id`).
+    pub id: u32,
+    /// Node to answer to.
+    pub src: NodeId,
+    /// The `ServeReq` frame.
+    pub pkt: Packet,
+}
+
+/// A scored (or rejected) response on its way back to the wire.
+pub struct Response {
+    /// Node to answer to.
+    pub src: NodeId,
+    /// The `ServeResp` frame.
+    pub pkt: Packet,
+    /// Shard-local flush counter: every response scored in the same
+    /// batch carries the same value. Tests use it to assert that score
+    /// changes land only on flush boundaries.
+    pub flush: u64,
+}
+
+/// The pure compute core of a shard: pack one batch of rows and run
+/// the training forward. Holds the scratch buffers so the steady state
+/// allocates nothing; owns no threads, locks, or queues — unit tests
+/// and the bitwise-identity test drive it directly.
+pub struct ShardCore {
+    precision: u32,
+    rows: Vec<f32>,
+    out: Vec<f32>,
+}
+
+impl ShardCore {
+    pub fn new(precision: u32) -> Self {
+        Self { precision, rows: Vec::new(), out: Vec::new() }
+    }
+
+    /// Score `batch` (rows of exactly `model.d_in` features) against
+    /// `model`, returning one score per row. The result is bitwise
+    /// identical to `forward_into(pack_rows(rows, mb, d_in, d_pad,
+    /// precision), weights)` — it *is* that call.
+    pub fn score_batch(&mut self, model: &Model, batch: &[Vec<f32>]) -> &[f32] {
+        let mb = batch.len();
+        self.rows.clear();
+        for row in batch {
+            debug_assert_eq!(row.len(), model.d_in);
+            self.rows.extend_from_slice(row);
+        }
+        let pb = pack_rows(&self.rows, mb, model.d_in, model.d_pad, self.precision);
+        self.out.clear();
+        self.out.resize(mb, 0.0);
+        forward_into(&pb, &model.weights, &mut self.out);
+        &self.out
+    }
+}
+
+/// A running shard: its admission queue and join handle.
+pub struct ShardHandle {
+    tx: SyncSender<Request>,
+    join: JoinHandle<ServeStats>,
+    /// Requests dropped because the admission queue was full
+    /// (backpressure: better an explicit drop + client retry than an
+    /// unbounded queue hiding overload).
+    pub overflow: u64,
+}
+
+impl ShardHandle {
+    /// Enqueue a request. A full queue drops the request — the client
+    /// retransmits, exactly like any other lost datagram.
+    pub fn dispatch(&mut self, req: Request) {
+        match self.tx.try_send(req) {
+            Ok(()) => {}
+            Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
+                self.overflow += 1;
+            }
+        }
+    }
+
+    /// Close the admission queue, let the shard drain what it already
+    /// accepted, and return its counters.
+    pub fn stop(self) -> ServeStats {
+        drop(self.tx);
+        self.join.join().unwrap_or_default()
+    }
+}
+
+/// Spawn a shard thread: pin it to `core`, first-touch its buffers
+/// there (NUMA-local when `numa_local`), and run the admission-batch
+/// loop until the queue closes.
+pub fn spawn(
+    shard: usize,
+    core: usize,
+    cfg: ServeConfig,
+    precision: u32,
+    numa_local: bool,
+    cell: Arc<ModelCell>,
+    resp_tx: Sender<Response>,
+) -> ShardHandle {
+    // Bounded queue: several batches of headroom per shard.
+    let depth = (cfg.max_batch * 8).max(64);
+    let (tx, rx) = std::sync::mpsc::sync_channel::<Request>(depth);
+    let join = std::thread::Builder::new()
+        .name(format!("serve-shard-{shard}"))
+        .spawn(move || {
+            affinity::pin_current(core);
+            run_loop(&cfg, precision, numa_local, &cell, &rx, &resp_tx)
+        })
+        .expect("spawning serve shard");
+    ShardHandle { tx, join, overflow: 0 }
+}
+
+/// The shard loop body (separate from [`spawn`] so the hot-swap tests
+/// can run it on their own threads and channels). Returns when the
+/// request channel closes, after draining everything already queued.
+pub fn run_loop(
+    cfg: &ServeConfig,
+    precision: u32,
+    numa_local: bool,
+    cell: &ModelCell,
+    rx: &Receiver<Request>,
+    resp_tx: &Sender<Response>,
+) -> ServeStats {
+    let mut core = ShardCore::new(precision);
+    if numa_local {
+        // First-touch the row scratch at a plausible batch size so the
+        // pages fault in on this core's NUMA node before the hot loop.
+        core.rows.resize(cfg.max_batch * 64, 0.0);
+        affinity::bind_to_current_node(&core.rows);
+        core.rows.clear();
+    }
+    let max_wait = Duration::from_micros(cfg.max_wait_us);
+    let mut stats = ServeStats::default();
+    let mut flush: u64 = 0;
+    let mut prev_epoch: Option<u32> = None;
+    let mut ids: Vec<u32> = Vec::with_capacity(cfg.max_batch);
+    let mut srcs: Vec<NodeId> = Vec::with_capacity(cfg.max_batch);
+    let mut rows: Vec<Vec<f32>> = Vec::with_capacity(cfg.max_batch);
+    let mut rejects: Vec<(u32, NodeId)> = Vec::new();
+    loop {
+        // Admission: block for the first request, then top up until the
+        // batch is full or the first row's deadline passes. The model
+        // pointer is loaded once, at batch start — every row in this
+        // flush scores on exactly that model.
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => break, // queue closed and drained: shutdown
+        };
+        let deadline = Instant::now() + max_wait;
+        let model = cell.load();
+        admit(&mut ids, &mut srcs, &mut rows, &mut rejects, first, model.as_deref());
+        let mut full = rows.len() >= cfg.max_batch;
+        while !full {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => {
+                    admit(&mut ids, &mut srcs, &mut rows, &mut rejects, r, model.as_deref());
+                    full = rows.len() >= cfg.max_batch;
+                }
+                Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        if !rows.is_empty() {
+            let m = model.as_ref().expect("rows are admitted only against a published model");
+            let scores = core.score_batch(m, &rows);
+            for ((&id, &src), &score) in ids.iter().zip(srcs.iter()).zip(scores.iter()) {
+                let pkt = wire::response(id, m.epoch, score);
+                let _ = resp_tx.send(Response { src, pkt, flush });
+            }
+            stats.served += rows.len() as u64;
+            stats.batched_rows += rows.len() as u64;
+            if full {
+                stats.full_flushes += 1;
+            } else {
+                stats.timeout_flushes += 1;
+            }
+            if prev_epoch.replace(m.epoch).is_some_and(|p| p != m.epoch) {
+                stats.swaps += 1;
+            }
+        }
+        for (id, src) in rejects.drain(..) {
+            let _ = resp_tx.send(Response { src, pkt: wire::reject(id), flush });
+            stats.rejected += 1;
+        }
+        if !rows.is_empty() {
+            flush += 1;
+        }
+        ids.clear();
+        srcs.clear();
+        rows.clear();
+    }
+    stats
+}
+
+/// Admit one request into the forming batch, or queue a rejection
+/// (malformed frame, wrong feature width, or no model published yet).
+fn admit(
+    ids: &mut Vec<u32>,
+    srcs: &mut Vec<NodeId>,
+    rows: &mut Vec<Vec<f32>>,
+    rejects: &mut Vec<(u32, NodeId)>,
+    req: Request,
+    model: Option<&Model>,
+) {
+    let mut row = Vec::new();
+    let ok = wire::features_into(&req.pkt, &mut row);
+    match model {
+        Some(m) if ok && row.len() == m.d_in => {
+            ids.push(req.id);
+            srcs.push(req.src);
+            rows.push(row);
+        }
+        _ => rejects.push((req.id, req.src)),
+    }
+}

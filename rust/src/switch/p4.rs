@@ -359,11 +359,12 @@ impl P4Switch {
                 }
                 Vec::new() // heartbeat at the current generation
             }
-            // Blob-layer frames are not the switch's business (the
-            // process-mode pump intercepts its own reconfigs before the
-            // state machine); a stray one — a hostile or misrouted
-            // datagram — is dropped, never panicked on.
-            Ctrl::Blob | Ctrl::BlobAck => Vec::new(),
+            // Blob-layer and serve-tier frames are not the switch's
+            // business (the process-mode pump intercepts its own
+            // reconfigs before the state machine; inference traffic
+            // addresses serve nodes); a stray one — a hostile or
+            // misrouted datagram — is dropped, never panicked on.
+            Ctrl::Blob | Ctrl::BlobAck | Ctrl::ServeReq | Ctrl::ServeResp => Vec::new(),
             Ctrl::Data => unreachable!("handle_ctrl called for data"),
         }
     }
@@ -386,7 +387,9 @@ impl P4Switch {
                 }
                 Vec::new()
             }
-            Ctrl::Leave | Ctrl::Blob | Ctrl::BlobAck => Vec::new(),
+            Ctrl::Leave | Ctrl::Blob | Ctrl::BlobAck | Ctrl::ServeReq | Ctrl::ServeResp => {
+                Vec::new()
+            }
             Ctrl::Data => {
                 if pkt.gen != self.gen {
                     self.stats.stale_gen += 1;

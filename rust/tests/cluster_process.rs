@@ -154,7 +154,7 @@ fn process_cluster_matches_in_process_training_bitwise() {
         ],
         &report,
     );
-    let mut procs = Cluster(spawn_cluster(bin, &common, 2, 0).expect("spawning cluster"));
+    let mut procs = Cluster(spawn_cluster(bin, &common, 2, 0, 0).expect("spawning cluster"));
     let st = coordinator_verdict(&mut procs, 120);
     assert!(st.success(), "coordinator failed: {st}");
     let deadline = Instant::now() + Duration::from_secs(20);
@@ -229,7 +229,7 @@ fn sigkilled_worker_is_evicted_and_training_recovers() {
         ],
         &report,
     );
-    let mut procs = Cluster(spawn_cluster(bin, &common, 2, 0).expect("spawning cluster"));
+    let mut procs = Cluster(spawn_cluster(bin, &common, 2, 0, 0).expect("spawning cluster"));
 
     // SIGKILL is only meaningful mid-attempt: wait until the first
     // round-consistent checkpoint hits disk (epoch 2 of 40 — the run is
@@ -300,7 +300,7 @@ fn tree_cluster_is_bitwise_identical_to_flat_thread_mode() {
         &report,
     );
     common.push("--tree".to_string());
-    let mut procs = Cluster(spawn_cluster(bin, &common, 4, 2).expect("spawning tree cluster"));
+    let mut procs = Cluster(spawn_cluster(bin, &common, 4, 2, 0).expect("spawning tree cluster"));
     assert_eq!(procs.0.switches.len(), 3, "spine + 2 leaves");
     let st = coordinator_verdict(&mut procs, 120);
     assert!(st.success(), "tree coordinator failed: {st}");
@@ -471,7 +471,7 @@ fn hostile_datagrams_never_panic_the_switch_and_training_survives() {
             std::thread::sleep(Duration::from_micros(500));
         }
     });
-    let mut procs = Cluster(spawn_cluster(bin, &common, 2, 0).expect("spawning cluster"));
+    let mut procs = Cluster(spawn_cluster(bin, &common, 2, 0, 0).expect("spawning cluster"));
     let st = coordinator_verdict(&mut procs, 120);
     stop.store(true, Ordering::Relaxed);
     sprayer.join().expect("sprayer thread");

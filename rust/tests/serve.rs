@@ -1,0 +1,336 @@
+//! Serve-tier proofs, escalating from the pure kernel to a live
+//! UDP server:
+//!
+//! 1. **Bitwise identity**: a shard's served score IS the training
+//!    forward — `ShardCore::score_batch` equals a hand-rolled
+//!    `pack_rows` + `forward_into` to the bit, and batching rows
+//!    together never changes any row's bits (per-row independence is
+//!    what makes admission batching score-transparent).
+//! 2. **Hot-swap under load**: a shard hammered by a loadgen thread
+//!    while models swap mid-flight must never serve a torn model
+//!    (every score bitwise matches the epoch the response claims),
+//!    never pause (bounded gap between responses), and flip epochs
+//!    only at flush boundaries (every response in a flush carries one
+//!    epoch).
+//! 3. **End-to-end over kernel UDP**: a real server process loop fed
+//!    by `checkpoint::Watcher` — load a checkpoint, serve queries,
+//!    land a newer checkpoint, watch responses flip epochs with zero
+//!    downtime, stop gracefully via `Leave`.
+
+use p4sgd::checkpoint::Checkpoint;
+use p4sgd::config::SystemConfig;
+use p4sgd::data::quantize::pack_rows;
+use p4sgd::engine::bitserial::forward_into;
+use p4sgd::protocol::serve as wire;
+use p4sgd::serve::shard::{self, Request, Response, ShardCore};
+use p4sgd::serve::{load, Model, ModelCell};
+use p4sgd::util::rng::Pcg32;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Real UDP ports are a shared resource: serialize the socket tests.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+const PRECISION: u32 = 4;
+
+fn model_from(epoch: usize, weights: Vec<f32>) -> Model {
+    Model::from_checkpoint(&Checkpoint {
+        generation: 1,
+        epoch,
+        rounds_done: 0,
+        rng: 0,
+        model: weights,
+        loss_curve: Vec::new(),
+    })
+}
+
+fn gauss_weights(d: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..d).map(|_| rng.f32() * 2.0 - 1.0).collect()
+}
+
+fn row(seed: u64, id: u32, d: usize) -> Vec<f32> {
+    load::row_for(seed, id, d)
+}
+
+#[test]
+fn served_scores_are_bitwise_the_training_forward() {
+    // d deliberately not a multiple of the 32-lane width: the padding
+    // path must be bitwise-transparent too.
+    let d = 67;
+    let model = model_from(1, gauss_weights(d, 42));
+    let mut core = ShardCore::new(PRECISION);
+    let rows: Vec<Vec<f32>> = (0..9).map(|i| row(7, i, d)).collect();
+
+    // Reference: the training-side calls, verbatim.
+    let mut flat = Vec::new();
+    for r in &rows {
+        flat.extend_from_slice(r);
+    }
+    let pb = pack_rows(&flat, rows.len(), model.d_in, model.d_pad, PRECISION);
+    let mut want = vec![0.0f32; rows.len()];
+    forward_into(&pb, &model.weights, &mut want);
+
+    let got = core.score_batch(&model, &rows);
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "row {i}: served {g} != training {w}");
+    }
+
+    // Per-row independence: each row scored alone must reproduce its
+    // batched bits — admission batching cannot perturb a score.
+    for (i, r) in rows.iter().enumerate() {
+        let solo = core.score_batch(&model, std::slice::from_ref(r))[0];
+        assert_eq!(solo.to_bits(), want[i].to_bits(), "row {i} changed bits when batched");
+    }
+}
+
+#[test]
+fn hot_swap_under_load_is_pauseless_torn_free_and_batch_aligned() {
+    let d = 64;
+    let m1 = Arc::new(model_from(1, gauss_weights(d, 1)));
+    let m2 = Arc::new(model_from(2, gauss_weights(d, 2)));
+    let cell = Arc::new(ModelCell::new((*m1).clone()));
+
+    let mut serve_cfg = p4sgd::config::ServeConfig::default();
+    serve_cfg.max_batch = 8;
+    serve_cfg.max_wait_us = 500;
+
+    let (req_tx, req_rx) = mpsc::channel::<Request>();
+    let (resp_tx, resp_rx) = mpsc::channel::<Response>();
+    let shard_cell = Arc::clone(&cell);
+    let shard_cfg = serve_cfg.clone();
+    let shard = std::thread::spawn(move || {
+        shard::run_loop(&shard_cfg, PRECISION, false, &shard_cell, &req_rx, &resp_tx)
+    });
+
+    // Loadgen: a steady stream of requests for ~60ms.
+    const SEED: u64 = 99;
+    let loadgen = std::thread::spawn(move || {
+        let mut id: u32 = 0;
+        let until = Instant::now() + Duration::from_millis(60);
+        while Instant::now() < until {
+            let pkt = wire::request(id, &row(SEED, id, d));
+            if req_tx.send(Request { id, src: 0, pkt }).is_err() {
+                break;
+            }
+            id += 1;
+            if id % 16 == 0 {
+                std::thread::sleep(Duration::from_micros(200));
+            }
+        }
+        id // requests issued; dropping req_tx closes the shard
+    });
+
+    // Swap mid-stream, while batches are in flight.
+    std::thread::sleep(Duration::from_millis(20));
+    let replaced = cell.swap(Arc::clone(&m2));
+    assert_eq!(replaced, Some(1));
+
+    let issued = loadgen.join().expect("loadgen");
+    let stats = shard.join().expect("shard");
+    assert!(issued > 0);
+    assert_eq!(stats.served + stats.rejected, issued as u64, "every request answered");
+    assert_eq!(stats.rejected, 0);
+    assert!(stats.swaps >= 1, "the swap must be visible in the stats: {stats:?}");
+
+    // Precompute both models' expected bits per request id.
+    let mut core = ShardCore::new(PRECISION);
+    let expect = |core: &mut ShardCore, m: &Model, id: u32| {
+        core.score_batch(m, std::slice::from_ref(&row(SEED, id, d)))[0].to_bits()
+    };
+
+    let mut responses: Vec<Response> = resp_rx.try_iter().collect();
+    assert_eq!(responses.len(), issued as usize);
+    responses.sort_by_key(|r| r.flush);
+    let mut per_flush_epoch: std::collections::HashMap<u64, u32> = std::collections::HashMap::new();
+    let mut seen_epochs = std::collections::BTreeSet::new();
+    for r in &responses {
+        let (id, epoch, score) = wire::decode_response(&r.pkt).expect("a scored response");
+        seen_epochs.insert(epoch);
+        // (1) Never torn: the score is bitwise the claimed model's
+        // score — a mix of old and new weights cannot produce it.
+        let want = match epoch {
+            1 => expect(&mut core, &m1, id),
+            2 => expect(&mut core, &m2, id),
+            other => panic!("impossible epoch {other}"),
+        };
+        assert_eq!(
+            score.to_bits(),
+            want,
+            "req {id}: served bits of epoch {epoch} don't match that model — torn read"
+        );
+        // (2) Clean batch boundary: one epoch per flush.
+        let prev = per_flush_epoch.insert(r.flush, epoch);
+        assert!(
+            prev.is_none() || prev == Some(epoch),
+            "flush {} mixed epochs {prev:?} and {epoch}",
+            r.flush
+        );
+    }
+    assert!(
+        seen_epochs.contains(&1) && seen_epochs.contains(&2),
+        "load must straddle the swap (saw {seen_epochs:?}); tune the sleep if this flakes"
+    );
+    // (3) Monotone flip: once epoch 2 appears, epoch 1 never returns
+    // (flush order is the shard's scoring order).
+    let mut seen2 = false;
+    for r in &responses {
+        let (_, epoch, _) = wire::decode_response(&r.pkt).unwrap();
+        if epoch == 2 {
+            seen2 = true;
+        }
+        assert!(!(seen2 && epoch == 1), "epoch went backwards after the swap");
+    }
+}
+
+#[test]
+fn shard_never_pauses_across_a_swap() {
+    // Same shape as above, but the observable is time: with requests
+    // always available, the stream of responses must never stall for
+    // longer than a generous CI bound — a hot-swap that drained or
+    // paused the shard would show up as a multi-hundred-ms gap.
+    let d = 32;
+    let cell = Arc::new(ModelCell::new(model_from(1, gauss_weights(d, 5))));
+    let mut serve_cfg = p4sgd::config::ServeConfig::default();
+    serve_cfg.max_batch = 4;
+    serve_cfg.max_wait_us = 200;
+
+    let (req_tx, req_rx) = mpsc::channel::<Request>();
+    let (resp_tx, resp_rx) = mpsc::channel::<Response>();
+    let shard_cell = Arc::clone(&cell);
+    let cfg2 = serve_cfg.clone();
+    let shard = std::thread::spawn(move || {
+        shard::run_loop(&cfg2, PRECISION, false, &shard_cell, &req_rx, &resp_tx)
+    });
+    let consumer = std::thread::spawn(move || {
+        let mut last = Instant::now();
+        let mut max_gap = Duration::ZERO;
+        let mut n = 0usize;
+        while let Ok(_r) = resp_rx.recv_timeout(Duration::from_secs(2)) {
+            let now = Instant::now();
+            max_gap = max_gap.max(now - last);
+            last = now;
+            n += 1;
+        }
+        (max_gap, n)
+    });
+    let until = Instant::now() + Duration::from_millis(80);
+    let mut id = 0u32;
+    let mut swapped = 0u32;
+    while Instant::now() < until {
+        let pkt = wire::request(id, &row(3, id, d));
+        req_tx.send(Request { id, src: 0, pkt }).expect("shard alive");
+        id += 1;
+        // Swap repeatedly mid-load: each one must be pauseless.
+        if id % 64 == 0 {
+            swapped += 1;
+            cell.swap(Arc::new(model_from(1 + swapped as usize, gauss_weights(d, swapped as u64))));
+        }
+        std::thread::sleep(Duration::from_micros(100));
+    }
+    drop(req_tx);
+    let stats = shard.join().expect("shard");
+    let (max_gap, n) = consumer.join().expect("consumer");
+    assert!(swapped >= 3, "several swaps under load, got {swapped}");
+    assert_eq!(n as u64, stats.served, "all responses observed");
+    assert!(
+        max_gap < Duration::from_millis(500),
+        "response stream stalled for {max_gap:?} across a swap — that is a pause"
+    );
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("p4sgd-serve-test-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn ckpt(epoch: usize, weights: &[f32]) -> Checkpoint {
+    Checkpoint {
+        generation: 1,
+        epoch,
+        rounds_done: 0,
+        rng: 0,
+        model: weights.to_vec(),
+        loss_curve: Vec::new(),
+    }
+}
+
+#[test]
+fn end_to_end_udp_serve_hot_swap_and_graceful_stop() {
+    let _guard = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    const BASE: u16 = 48860; // spaced away from the cluster tests' ranges
+    let d = 48;
+    let dir = tmpdir("e2e");
+    let w1 = gauss_weights(d, 11);
+    ckpt(1, &w1).save(&dir).expect("seed checkpoint");
+
+    let mut cfg = SystemConfig::default();
+    cfg.cluster.workers = 2;
+    cfg.cluster.base_port = BASE;
+    cfg.cluster.checkpoint_dir = Some(dir.to_string_lossy().into_owned());
+    cfg.serve.shards = 2;
+    cfg.serve.max_batch = 8;
+    cfg.serve.max_wait_us = 300;
+    cfg.serve.poll_ms = 5;
+    let server_node = p4sgd::serve::replica_node(&cfg, 0); // workers 0..2, switch 2, coord 3 -> 4
+    assert_eq!(server_node, 4);
+    let server_cfg = cfg.clone();
+    let server = std::thread::spawn(move || p4sgd::serve::run(&server_cfg, 0));
+
+    let mk_load = |requests: usize, client_base: usize, seed: u64| load::LoadCfg {
+        base_port: BASE,
+        server: server_node,
+        client_base,
+        d,
+        requests,
+        concurrency: 2,
+        rate: None,
+        timeout: Duration::from_millis(200),
+        retries: 25,
+        seed,
+    };
+
+    // Phase 1: scores come from checkpoint epoch 1, bitwise.
+    let cfg1 = mk_load(64, server_node + 9, 21);
+    let (mut v1, scores1) = load::run(&cfg1).expect("closed loop");
+    assert_eq!(v1.ok, 64, "lost={} rejected={}", v1.lost, v1.rejected);
+    assert_eq!(v1.epochs_seen, vec![1]);
+    let m1 = Model::from_checkpoint(&ckpt(1, &w1));
+    load::verify_bitwise(&mut v1, &scores1, &m1, PRECISION, cfg1.seed)
+        .expect("served scores must be the training forward, bitwise");
+    assert_eq!(v1.bitwise_checked, Some(64));
+
+    // Phase 2: land a newer checkpoint; the watcher hot-swaps it and
+    // responses flip to epoch 2 — while the server keeps answering.
+    let w2 = gauss_weights(d, 22);
+    ckpt(2, &w2).save(&dir).expect("newer checkpoint");
+    let m2 = Model::from_checkpoint(&ckpt(2, &w2));
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut flipped = false;
+    let mut probe_seed = 100;
+    while Instant::now() < deadline && !flipped {
+        let cfgp = mk_load(16, server_node + 9, probe_seed);
+        probe_seed += 1;
+        let (vp, scoresp) = load::run(&cfgp).expect("probe loop");
+        assert_eq!(vp.ok, 16, "server must keep answering through the swap");
+        if vp.epochs_seen.contains(&2) {
+            // Bitwise against epoch 2 for the scores that claim it.
+            let e2: Vec<_> = scoresp.iter().copied().filter(|&(_, e, _)| e == 2).collect();
+            let mut vtmp = vp.clone();
+            load::verify_bitwise(&mut vtmp, &e2, &m2, PRECISION, cfgp.seed)
+                .expect("post-swap scores must match the new model bitwise");
+            flipped = true;
+        }
+    }
+    assert!(flipped, "server never served the new checkpoint");
+
+    // Phase 3: graceful stop; the server thread returns its stats.
+    load::stop_server(&mk_load(1, server_node + 9, 0)).expect("stop");
+    let stats = server.join().expect("server thread").expect("server ran");
+    assert!(stats.served >= 80, "stats cover both phases: {stats:?}");
+    assert!(stats.swaps >= 1, "the hot-swap must appear in stats: {stats:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
